@@ -1,0 +1,7 @@
+"""Pytest bootstrap: make `compile.*` importable when pytest runs from the
+repository root (the build-time Python package lives under python/)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,112 @@
+//! **End-to-end driver** (DESIGN.md §5, EXPERIMENTS.md): the paper's §IV
+//! experiment — five interactive period analyses (max/mean/std of
+//! temperature) over a climate time series, run with both methods,
+//! reporting the Fig 4 (accumulated memory) and Fig 6 (accumulated time)
+//! series side by side.
+//!
+//! ```bash
+//! cargo run --release --example climate_periods            # 64 MiB default
+//! OSEBA_BYTES=480m cargo run --release --example climate_periods  # paper scale
+//! ```
+
+use oseba::analysis::five_periods;
+use oseba::config::{parse_bytes, AppConfig, BackendKind};
+use oseba::coordinator::{run_session, Coordinator, IndexKind, Method, SessionReport};
+use oseba::datagen::ClimateGen;
+use oseba::runtime::make_backend;
+use oseba::util::humansize;
+
+fn run_one(cfg: &AppConfig, method: Method) -> oseba::Result<(SessionReport, usize)> {
+    let backend = make_backend(cfg.backend, &cfg.artifacts_dir)?;
+    let coord = Coordinator::new(cfg, backend)?;
+    let batch =
+        ClimateGen { seed: cfg.seed, ..Default::default() }.generate_bytes(cfg.dataset_bytes);
+    let raw = batch.raw_bytes();
+    let ds = coord.load(batch, cfg.num_partitions)?;
+    let report = run_session(&coord, &ds, method, IndexKind::Cias, &five_periods(), 0, false)?;
+    Ok((report, raw))
+}
+
+fn main() -> oseba::Result<()> {
+    let mut cfg = AppConfig::default();
+    cfg.dataset_bytes = std::env::var("OSEBA_BYTES")
+        .ok()
+        .map(|v| parse_bytes(&v))
+        .transpose()?
+        .unwrap_or(64 << 20);
+    cfg.num_partitions = 15;
+    if !std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
+        eprintln!("(artifacts not built; using the native backend)");
+        cfg.backend = BackendKind::Native;
+    }
+
+    println!(
+        "== Oseba §IV reproduction: {} over {} partitions, backend {:?} ==",
+        humansize::bytes(cfg.dataset_bytes),
+        cfg.num_partitions,
+        cfg.backend
+    );
+
+    let (default, raw) = run_one(&cfg, Method::Default)?;
+    let (oseba, _) = run_one(&cfg, Method::Oseba)?;
+
+    // Per-phase stats must agree.
+    for (i, (a, b)) in default.stats.iter().zip(&oseba.stats).enumerate() {
+        assert_eq!(a.count, b.count, "phase {i}");
+        assert_eq!(a.max, b.max, "phase {i}");
+        println!(
+            "phase {}: keys [{}, {}]  n={}  max={:.2} min={:.2} mean={:.2} std={:.2}",
+            i + 1,
+            default.queries[i].lo,
+            default.queries[i].hi,
+            a.count,
+            a.max,
+            a.min,
+            a.mean,
+            a.std
+        );
+    }
+
+    // ---- Fig 4: accumulated memory after each phase --------------------
+    println!(
+        "\n-- Fig 4: memory after each phase (raw input = {}) --",
+        humansize::bytes(raw)
+    );
+    println!("{:<7} {:>14} {:>14} {:>9} {:>9}", "phase", "default", "oseba", "def/raw", "def/oseba");
+    let dm = default.metrics.memory_series();
+    let om = oseba.metrics.memory_series();
+    for i in 0..5 {
+        println!(
+            "{:<7} {:>14} {:>14} {:>8.2}x {:>8.2}x",
+            i + 1,
+            humansize::bytes(dm[i]),
+            humansize::bytes(om[i]),
+            dm[i] as f64 / raw as f64,
+            dm[i] as f64 / om[i] as f64
+        );
+    }
+
+    // ---- Fig 6: accumulated processing time -----------------------------
+    println!("\n-- Fig 6: accumulated time --");
+    println!("{:<7} {:>12} {:>12} {:>9}", "phase", "default", "oseba", "speedup");
+    let dt = default.metrics.accumulated_time();
+    let ot = oseba.metrics.accumulated_time();
+    for i in 0..5 {
+        println!(
+            "{:<7} {:>12} {:>12} {:>8.2}x",
+            i + 1,
+            humansize::secs(dt[i]),
+            humansize::secs(ot[i]),
+            dt[i] / ot[i]
+        );
+    }
+
+    println!("\n-- detail --");
+    println!("default:\n{}", default.metrics.table());
+    println!("oseba (index: {} bytes):\n{}", oseba.index_bytes, oseba.metrics.table());
+
+    // Machine-readable dump for EXPERIMENTS.md.
+    println!("JSON default: {}", default.metrics.to_json().to_string());
+    println!("JSON oseba:   {}", oseba.metrics.to_json().to_string());
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Interactive analysis server + scripted client session (paper §I:
+//! selective bulk analysis "usually involves interactive analysis").
+//!
+//! Starts the TCP query server on an ephemeral port, then drives it as a
+//! client: info, a few range-stat queries on both paths, and shutdown —
+//! printing the per-query latency the server reports.
+//!
+//! ```bash
+//! cargo run --release --example interactive_server
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use oseba::config::{AppConfig, BackendKind};
+use oseba::coordinator::{Coordinator, IndexKind};
+use oseba::datagen::ClimateGen;
+use oseba::runtime::make_backend;
+use oseba::server::QueryServer;
+use oseba::util::json::Json;
+
+fn main() -> oseba::Result<()> {
+    let mut cfg = AppConfig::default();
+    cfg.dataset_bytes = 16 << 20;
+    if !std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
+        eprintln!("(artifacts not built; using the native backend)");
+        cfg.backend = BackendKind::Native;
+    }
+    let backend = make_backend(cfg.backend, &cfg.artifacts_dir)?;
+    let coord = Arc::new(Coordinator::new(&cfg, backend)?);
+    let ds = coord.load(
+        ClimateGen::default().generate_bytes(cfg.dataset_bytes),
+        cfg.num_partitions,
+    )?;
+    let key_max = ds.key_max().unwrap();
+    let server = QueryServer::new(coord, ds, IndexKind::Cias)?;
+
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server_thread = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", |a| addr_tx.send(a).unwrap()).unwrap();
+    });
+    let addr = addr_rx.recv().expect("server bound");
+    println!("server on {addr}\n");
+
+    let mut stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut ask = |req: String| -> oseba::Result<Json> {
+        stream.write_all(req.as_bytes())?;
+        stream.write_all(b"\n")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        print!("→ {req}\n← {line}\n");
+        Json::parse(line.trim())
+    };
+
+    ask(r#"{"op":"info"}"#.to_string())?;
+
+    // Interactive session: three selective queries, both methods.
+    let spans = [(0.1, 0.2), (0.45, 0.5), (0.8, 0.95)];
+    for method in ["oseba", "default"] {
+        for (a, b) in spans {
+            let lo = (key_max as f64 * a) as i64;
+            let hi = (key_max as f64 * b) as i64;
+            let resp = ask(format!(
+                r#"{{"op":"stats","lo":{lo},"hi":{hi},"column":"temperature","method":"{method}"}}"#
+            ))?;
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        }
+    }
+
+    // Bad request → structured error, connection stays usable.
+    let resp = ask(r#"{"op":"stats","lo":9,"hi":1,"column":"temperature"}"#.to_string())?;
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+
+    ask(r#"{"op":"shutdown"}"#.to_string())?;
+    server_thread.join().expect("server exits cleanly");
+    println!("session complete");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Quickstart: load a dataset, build the CIAS index, and run one selective
+//! period analysis both ways — showing the memory and scan savings.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//! Uses the HLO backend when `artifacts/` exists, else falls back to the
+//! native backend.
+
+use oseba::config::{AppConfig, BackendKind};
+use oseba::coordinator::Coordinator;
+use oseba::datagen::ClimateGen;
+use oseba::index::{Cias, ContentIndex, RangeQuery};
+use oseba::runtime::make_backend;
+use oseba::util::humansize;
+
+fn main() -> oseba::Result<()> {
+    // 1. Configuration: ~32 MiB of synthetic hourly climate data over 15
+    //    partitions (the paper's partition count, scaled-down volume).
+    let mut cfg = AppConfig::default();
+    cfg.dataset_bytes = 32 << 20;
+    let backend_kind = if std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
+        BackendKind::Hlo
+    } else {
+        eprintln!("(artifacts not built; using the native backend)");
+        BackendKind::Native
+    };
+    let backend = make_backend(backend_kind, &cfg.artifacts_dir)?;
+    let coord = Coordinator::new(&cfg, backend)?;
+
+    // 2. Load.
+    let batch = ClimateGen::default().generate_bytes(cfg.dataset_bytes);
+    println!("dataset: {} rows, {}", batch.rows(), humansize::bytes(batch.raw_bytes()));
+    let ds = coord.load(batch, cfg.num_partitions)?;
+    println!(
+        "loaded into {} partitions, cached {}",
+        ds.num_partitions(),
+        humansize::bytes(coord.context().memory_used())
+    );
+
+    // 3. Index: the whole partition table compresses to four integers.
+    let index = Cias::build(ds.partitions())?;
+    println!(
+        "CIAS: \"{}\" + {} ASL entries = {}",
+        index.compressed_repr(),
+        index.asl_len(),
+        humansize::bytes(index.memory_bytes())
+    );
+
+    // 4. One selective analysis: days 100..160 of the series.
+    let q = RangeQuery::new(100 * 24 * 3600, 160 * 24 * 3600)?;
+
+    let mem0 = coord.context().memory_used();
+    let t = std::time::Instant::now();
+    let (stats_default, filtered) = coord.analyze_period_default(&ds, q, 0)?;
+    let default_secs = t.elapsed().as_secs_f64();
+    let default_mem_growth = coord.context().memory_used() - mem0;
+
+    let t = std::time::Instant::now();
+    let stats_oseba = coord.analyze_period_oseba(&ds, &index, q, 0)?;
+    let oseba_secs = t.elapsed().as_secs_f64();
+    let oseba_mem_growth = coord.context().memory_used() - mem0 - filtered.bytes();
+
+    println!("\n{:<22} {:>14} {:>14}", "", "default", "oseba");
+    println!(
+        "{:<22} {:>14} {:>14}",
+        "time",
+        humansize::secs(default_secs),
+        humansize::secs(oseba_secs)
+    );
+    println!(
+        "{:<22} {:>14} {:>14}",
+        "memory growth",
+        humansize::bytes(default_mem_growth),
+        humansize::bytes(oseba_mem_growth)
+    );
+    let c = coord.context().counters();
+    println!(
+        "{:<22} {:>14} {:>14}",
+        "partitions touched", c.partitions_scanned, c.partitions_targeted
+    );
+
+    println!(
+        "\ntemperature over days 100..160: n={} max={:.2} min={:.2} mean={:.2} std={:.2}",
+        stats_oseba.count, stats_oseba.max, stats_oseba.min, stats_oseba.mean, stats_oseba.std
+    );
+    assert_eq!(stats_default.count, stats_oseba.count);
+    assert_eq!(stats_default.max, stats_oseba.max);
+    println!("(both methods agree exactly)");
+
+    // 5. Clean up the baseline's residue — the step Spark users forget,
+    //    and the reason Fig 4's default curve climbs.
+    coord.context().unpersist(&filtered);
+    Ok(())
+}

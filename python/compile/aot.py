@@ -1,0 +1,95 @@
+"""AOT lowering: L2 graphs → HLO text artifacts + manifest.
+
+Run once at build time (``make artifacts``); the rust runtime then loads
+``artifacts/<name>.hlo.txt`` via ``HloModuleProto::from_text_file`` and
+compiles each on the PJRT CPU client.
+
+Interchange is HLO **text**, not a serialized ``HloModuleProto``: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Every entry is lowered with ``return_tuple=True`` so the rust side unwraps a
+single tuple literal regardless of arity.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_desc(spec) -> dict:
+    return {"shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def _result_desc(fn, example_args) -> list:
+    out = jax.eval_shape(fn, *example_args)
+    leaves = jax.tree_util.tree_leaves(out)
+    return [_spec_desc(s) for s in leaves]
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile package sources — drives `make artifacts` no-op."""
+    pkg = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(pkg)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def build(outdir: str) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {
+        "block_rows": model.BLOCK_ROWS,
+        "hist_bins": model.HIST_BINS,
+        "ma_windows": list(model.MA_WINDOWS),
+        "fingerprint": source_fingerprint(),
+        "entries": {},
+    }
+    for name, (fn, example_args) in model.entries().items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "params": [_spec_desc(s) for s in example_args],
+            "results": _result_desc(fn, example_args),
+        }
+        print(f"  lowered {name:<24} -> {path} ({len(text)} chars)")
+    mpath = os.path.join(outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"  wrote {mpath} ({len(manifest['entries'])} entries)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

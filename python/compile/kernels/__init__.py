@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels for Oseba's selective bulk analyses.
+
+Every kernel operates on a fixed-shape *block* of ``BLOCK_ROWS`` f32 values
+(one column of one partition, zero-padded at the tail) plus ``(start, end)``
+i32 scalars delimiting the selected half-open row range ``[start, end)``.
+This is the AOT contract with the rust runtime: one static-shaped PJRT
+executable serves every partition and every partial-partition selection.
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls (see DESIGN.md §6).
+"""
+
+BLOCK_ROWS = 4096
+HIST_BINS = 64
+MA_WINDOWS = (4, 16, 64)
+
+from .segment_stats import segment_stats  # noqa: E402,F401
+from .moving_average import moving_average  # noqa: E402,F401
+from .distance import distance  # noqa: E402,F401
+from .histogram import histogram64  # noqa: E402,F401

@@ -1,0 +1,51 @@
+"""Pairwise period-distance Pallas kernel.
+
+Paper §II: "Distance Comparison is used to study how two or more time series
+differ at specific periods of time" (e.g. Florida temperatures in 1940 vs
+2014, day by day). The rust coordinator aligns the two periods' blocks and
+calls this kernel per aligned block pair; L1/L2/L∞ partials merge
+associatively across block pairs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 4096
+
+
+def _distance_kernel(a_ref, b_ref, start_ref, end_ref,
+                     l1_ref, l2sq_ref, linf_ref, count_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    idx = jax.lax.broadcasted_iota(jnp.int32, a.shape, 0)
+    mask = (idx >= start_ref[0]) & (idx < end_ref[0])
+    maskf = mask.astype(jnp.float32)
+    d = (a - b) * maskf
+    ad = jnp.abs(d)
+    l1_ref[0] = jnp.sum(ad)
+    l2sq_ref[0] = jnp.sum(d * d)
+    linf_ref[0] = jnp.max(ad)
+    count_ref[0] = jnp.sum(maskf)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def distance(a, b, start, end, *, block_rows=None):
+    """Masked distance partials between aligned blocks ``a`` and ``b``.
+
+    Returns ``(l1, l2sq, linf, count)`` f32 scalars over rows
+    ``[start, end)``. ``l2sq`` is the *squared* L2 partial so partials stay
+    associative; the coordinator takes the final sqrt.
+    """
+    assert block_rows is None or a.shape[0] == block_rows
+    start = jnp.asarray(start, jnp.int32).reshape((1,))
+    end = jnp.asarray(end, jnp.int32).reshape((1,))
+    out = pl.pallas_call(
+        _distance_kernel,
+        out_shape=tuple(jax.ShapeDtypeStruct((1,), jnp.float32)
+                        for _ in range(4)),
+        interpret=True,
+    )(a, b, start, end)
+    return tuple(o[0] for o in out)

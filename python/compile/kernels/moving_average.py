@@ -1,0 +1,56 @@
+"""Windowed-mean (moving average) Pallas kernel.
+
+Paper §II: "Moving Average is often implemented in the analysis of a time
+series to smooth out short-term fluctuations". A ``w``-point trailing MA at
+row ``i`` averages ``x[i-w+1 : i+1]``.
+
+The window must be static for AOT lowering, so ``aot.py`` emits one
+executable per window in ``MA_WINDOWS``; the rust side picks the nearest
+window variant (exact-match only in the public API).
+
+Implementation: the kernel computes a masked prefix-sum formulation —
+``cumsum`` shifted by ``w`` — entirely inside one VMEM tile, then masks
+positions outside ``[start+w-1, end)`` (rows whose window would cross the
+selection's left edge are invalid and set to 0).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 4096
+
+
+def _ma_kernel(x_ref, start_ref, end_ref, o_ref, *, window):
+    x = x_ref[...]
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    sel = (idx >= start_ref[0]) & (idx < end_ref[0])
+    xm = x * sel.astype(jnp.float32)
+    c = jnp.cumsum(xm)
+    shifted = jnp.concatenate([jnp.zeros((window,), jnp.float32),
+                               c[:-window]])
+    win_sum = c - shifted
+    # Row i is a valid MA point iff its whole window lies inside [start, end).
+    valid = (idx >= start_ref[0] + window - 1) & (idx < end_ref[0])
+    o_ref[...] = jnp.where(valid, win_sum / jnp.float32(window),
+                           jnp.zeros_like(x))
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_rows"))
+def moving_average(x, start, end, *, window, block_rows=None):
+    """Trailing ``window``-point moving average of ``x[start:end]``.
+
+    Returns f32[n] (n = x rows): position ``i`` holds the MA ending at row
+    ``i`` when the full window fits inside the selection, else 0.
+    """
+    assert block_rows is None or x.shape[0] == block_rows
+    start = jnp.asarray(start, jnp.int32).reshape((1,))
+    end = jnp.asarray(end, jnp.int32).reshape((1,))
+    kern = functools.partial(_ma_kernel, window=window)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((x.shape[0],), jnp.float32),
+        interpret=True,
+    )(x, start, end)

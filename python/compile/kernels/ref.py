@@ -1,0 +1,78 @@
+"""Pure-jnp correctness oracles for every L1 kernel.
+
+These are the ground truth the pallas kernels (and, transitively, the HLO
+artifacts the rust runtime executes) are validated against in
+``python/tests/``. They intentionally use the most direct jnp formulation —
+no pallas, no cumsum tricks — so a bug in a kernel's optimization cannot
+also hide in its oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-3.4e38)
+POS_INF = jnp.float32(3.4e38)
+HIST_BINS = 64
+
+
+def _mask(x, start, end):
+    idx = jnp.arange(x.shape[0], dtype=jnp.int32)
+    return (idx >= start) & (idx < end)
+
+
+def segment_stats_ref(x, start, end):
+    """(max, min, sum, sumsq, count) over x[start:end], identity-padded."""
+    m = _mask(x, start, end)
+    mf = m.astype(jnp.float32)
+    return (
+        jnp.max(jnp.where(m, x, NEG_INF)),
+        jnp.min(jnp.where(m, x, POS_INF)),
+        jnp.sum(x * mf),
+        jnp.sum(x * x * mf),
+        jnp.sum(mf),
+    )
+
+
+def moving_average_ref(x, start, end, window):
+    """Trailing MA; row i valid iff [i-window+1, i] ⊆ [start, end)."""
+    n = x.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    sel = (idx >= start) & (idx < end)
+    xm = x * sel.astype(jnp.float32)
+
+    def at(i):
+        # mean of xm[i-window+1 : i+1] via explicit dot with a window mask
+        w = (idx > i - window) & (idx <= i)
+        return jnp.sum(xm * w.astype(jnp.float32)) / jnp.float32(window)
+
+    vals = jax.vmap(at)(idx)
+    valid = (idx >= start + window - 1) & (idx < end)
+    return jnp.where(valid, vals, 0.0)
+
+
+def distance_ref(a, b, start, end):
+    """(l1, l2sq, linf, count) over rows [start, end)."""
+    m = _mask(a, start, end)
+    mf = m.astype(jnp.float32)
+    d = (a - b) * mf
+    ad = jnp.abs(d)
+    return jnp.sum(ad), jnp.sum(d * d), jnp.max(ad), jnp.sum(mf)
+
+
+def histogram64_ref(x, start, end, lo, hi):
+    """64 equal-width bins over [lo, hi); out-of-range clamps to edge bins."""
+    m = _mask(x, start, end)
+    width = (hi - lo) / HIST_BINS
+    bin_id = jnp.clip(((x - lo) / width).astype(jnp.int32), 0, HIST_BINS - 1)
+    onehot = bin_id[:, None] == jnp.arange(HIST_BINS, dtype=jnp.int32)[None, :]
+    return jnp.sum(onehot.astype(jnp.float32) * m.astype(jnp.float32)[:, None],
+                   axis=0)
+
+
+# --- final-statistics helpers (mirror the rust-side merge math) -----------
+
+def finalize_stats(mx, mn, s, ss, n):
+    """(max, min, mean, stddev_pop) from raw moments."""
+    mean = s / n
+    var = jnp.maximum(ss / n - mean * mean, 0.0)
+    return mx, mn, mean, jnp.sqrt(var)

@@ -1,0 +1,132 @@
+"""Fused masked-moments kernel: max/min/sum/sumsq/count in one pass.
+
+The Oseba analysis programs (paper §IV) compute max, mean and standard
+deviation over a selected key range. Mean and stddev derive from the raw
+moments (sum, sum of squares, count), which — unlike mean/std themselves —
+merge associatively across partitions, so the rust coordinator can combine
+per-partition partials in any order (DESIGN.md §3).
+
+TPU shaping (DESIGN.md §6): one VMEM tile holds the whole 4096-row block
+(16 KiB), the selection mask is a ``broadcasted_iota`` compare (VPU-friendly,
+no gather/scatter), and all five reductions happen in a single pass so HBM
+traffic is exactly one read per element.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK_ROWS = 4096
+
+# Identity elements chosen so a fully-masked block merges as a no-op.
+# Plain python floats: module-level jnp arrays would be captured as pallas
+# kernel constants, which pallas_call rejects.
+NEG_INF = -3.4e38
+POS_INF = 3.4e38
+
+
+def _segment_stats_kernel(x_ref, start_ref, end_ref, max_ref, min_ref,
+                          sum_ref, sumsq_ref, count_ref):
+    x = x_ref[...]
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    mask = (idx >= start_ref[0]) & (idx < end_ref[0])
+    maskf = mask.astype(jnp.float32)
+    xm = x * maskf
+    max_ref[0] = jnp.max(jnp.where(mask, x, NEG_INF))
+    min_ref[0] = jnp.min(jnp.where(mask, x, POS_INF))
+    sum_ref[0] = jnp.sum(xm)
+    sumsq_ref[0] = jnp.sum(xm * x)
+    count_ref[0] = jnp.sum(maskf)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def segment_stats(x, start, end, *, block_rows=None):
+    """Masked moments of ``x[start:end]``.
+
+    Args:
+      x: f32[n] — one padded column block (n is static under jit; the
+        ``block_rows`` kwarg, if given, just asserts the expectation).
+      start, end: i32 scalars, half-open row range (clamped by caller).
+
+    Returns:
+      ``(max, min, sum, sumsq, count)`` f32 scalars. For an empty range,
+      max/min are the identity sentinels and sum/sumsq/count are 0 — the
+      merge in rust treats count==0 partials as absorbing.
+    """
+    assert block_rows is None or x.shape[0] == block_rows
+    start = jnp.asarray(start, jnp.int32).reshape((1,))
+    end = jnp.asarray(end, jnp.int32).reshape((1,))
+    out = pl.pallas_call(
+        _segment_stats_kernel,
+        out_shape=tuple(jax.ShapeDtypeStruct((1,), jnp.float32)
+                        for _ in range(5)),
+        interpret=True,
+    )(x, start, end)
+    return tuple(o[0] for o in out)
+
+
+def segment_stats_ref(x, start, end):
+    """Oracle wrapper (pure jnp, no pallas) — see kernels/ref.py."""
+    return ref.segment_stats_ref(x, start, end)
+
+
+# --- grid-batched variant (perf: amortize PJRT dispatch) --------------------
+
+STATS_BATCH = 16
+# All batch sizes lowered by aot.py; the rust service packs tasks greedily
+# into the largest size with <50% padding waste (EXPERIMENTS.md §Perf it.3).
+STATS_BATCHES = (16, 128)
+
+
+def _segment_stats_batched_kernel(x_ref, start_ref, end_ref, max_ref, min_ref,
+                                  sum_ref, sumsq_ref, count_ref):
+    # One 2-D VMEM tile holds the whole (B, N) batch; every moment is a
+    # row-wise (axis=1) reduction, so the lowered HLO is straight fused
+    # elementwise + reduce — no per-block loop. (A grid=(B,) formulation
+    # lowers interpret-mode pallas to an HLO while-loop whose per-step
+    # dynamic-slice overhead dominated at this block size; see
+    # EXPERIMENTS.md §Perf iteration 2.)
+    x = x_ref[...]
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    mask = (idx >= start_ref[...][:, None]) & (idx < end_ref[...][:, None])
+    maskf = mask.astype(jnp.float32)
+    xm = x * maskf
+    max_ref[...] = jnp.max(jnp.where(mask, x, NEG_INF), axis=1)
+    min_ref[...] = jnp.min(jnp.where(mask, x, POS_INF), axis=1)
+    sum_ref[...] = jnp.sum(xm, axis=1)
+    sumsq_ref[...] = jnp.sum(xm * x, axis=1)
+    count_ref[...] = jnp.sum(maskf, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def segment_stats_grid(xs, starts, ends):
+    """Masked moments of ``B`` blocks in one dispatch.
+
+    Args:
+      xs: f32[B, block_rows] — stacked blocks.
+      starts, ends: i32[B] — per-block half-open row ranges. A padded task
+        uses ``start == end`` and yields the identity partial.
+
+    Returns:
+      ``(max, min, sum, sumsq, count)``, each f32[B].
+
+    The rust kernel service packs up to ``STATS_BATCH`` block tasks into
+    one execution of this kernel, amortizing PJRT dispatch ~B×
+    (EXPERIMENTS.md §Perf). VMEM: the (16, 4096) f32 tile is 256 KiB —
+    comfortably within a TPU core's ~16 MiB VMEM, leaving the same
+    double-buffering headroom as the single-block kernel (DESIGN.md §6).
+    """
+    b, n = xs.shape
+    assert starts.shape == (b,) and ends.shape == (b,)
+    from jax.experimental import pallas as pl  # local: keep module import light
+
+    out = pl.pallas_call(
+        _segment_stats_batched_kernel,
+        out_shape=tuple(jax.ShapeDtypeStruct((b,), jnp.float32) for _ in range(5)),
+        interpret=True,
+    )(xs, starts, ends)
+    return out

@@ -1,0 +1,105 @@
+"""Layer-2 JAX analysis graphs.
+
+Each public function here is an AOT entry point: ``aot.py`` lowers it once
+per static configuration to HLO text that the rust runtime loads and
+executes on its request path. The functions wrap the L1 pallas kernels and
+add whatever graph-level composition the analysis needs (e.g. the fused
+stats-of-moving-average pipeline used by the L2-fusion ablation).
+
+Shapes are the AOT contract (DESIGN.md §3): blocks are f32[BLOCK_ROWS],
+range scalars are i32, and every entry returns a flat tuple of arrays so the
+rust side can unpack with ``to_tuple``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (BLOCK_ROWS, HIST_BINS, MA_WINDOWS, distance,
+                      histogram64, moving_average, segment_stats)
+from .kernels.segment_stats import segment_stats_grid, STATS_BATCH, STATS_BATCHES
+
+__all__ = [
+    "BLOCK_ROWS", "HIST_BINS", "MA_WINDOWS", "STATS_BATCH",
+    "block_stats", "block_stats_grid", "block_moving_average",
+    "block_distance", "block_histogram", "block_ma_stats",
+]
+
+
+def block_stats(x, start, end):
+    """Masked moments of one block — the Fig 4/6 per-partition task."""
+    return segment_stats(x, start, end)
+
+
+def block_stats_grid(xs, starts, ends):
+    """Moments of STATS_BATCH blocks in one dispatch (perf variant)."""
+    return segment_stats_grid(xs, starts, ends)
+
+
+def block_moving_average(x, start, end, *, window):
+    """Trailing ``window``-point MA over the selected rows of one block."""
+    return (moving_average(x, start, end, window=window),)
+
+
+def block_distance(a, b, start, end):
+    """Distance partials between two aligned blocks."""
+    return distance(a, b, start, end)
+
+
+def block_histogram(x, start, end, lo, hi):
+    """64-bin histogram of the selected rows of one block."""
+    return (histogram64(x, start, end, lo, hi),)
+
+
+def block_ma_stats(x, start, end, *, window):
+    """Fused pipeline: moments of the MA series (trend statistics).
+
+    Used by the L2-fusion ablation: computing MA and stats as one lowered
+    graph keeps the intermediate series in the executable (no extra
+    host↔device round trip or host-side buffer), exactly the paper's
+    "don't materialize the intermediate" argument applied at L2.
+    """
+    ma = moving_average(x, start, end, window=window)
+    # Valid MA points live in [start+window-1, end).
+    s = jnp.asarray(start, jnp.int32) + (window - 1)
+    return segment_stats(ma, s, end)
+
+
+# --- AOT entry registry -----------------------------------------------------
+
+_F32B = jax.ShapeDtypeStruct((BLOCK_ROWS,), jnp.float32)
+_I32 = jax.ShapeDtypeStruct((), jnp.int32)
+_F32 = jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def entries():
+    """name → (fn, example_args) for every artifact aot.py must emit.
+
+    The manifest the rust runtime reads is generated from this registry, so
+    adding an entry here is the single step to expose a new analysis.
+    """
+    reg = {
+        "segment_stats": (block_stats, (_F32B, _I32, _I32)),
+        "distance": (block_distance, (_F32B, _F32B, _I32, _I32)),
+        "histogram64": (block_histogram, (_F32B, _I32, _I32, _F32, _F32)),
+    }
+    for b in STATS_BATCHES:
+        reg[f"segment_stats_b{b}"] = (
+            block_stats_grid,
+            (
+                jax.ShapeDtypeStruct((b, BLOCK_ROWS), jnp.float32),
+                jax.ShapeDtypeStruct((b,), jnp.int32),
+                jax.ShapeDtypeStruct((b,), jnp.int32),
+            ),
+        )
+    for w in MA_WINDOWS:
+        reg[f"moving_average_w{w}"] = (
+            functools.partial(block_moving_average, window=w),
+            (_F32B, _I32, _I32),
+        )
+        reg[f"ma_stats_w{w}"] = (
+            functools.partial(block_ma_stats, window=w),
+            (_F32B, _I32, _I32),
+        )
+    return reg

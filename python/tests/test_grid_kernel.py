@@ -1,0 +1,55 @@
+"""Grid-batched segment_stats vs per-block oracle (the §Perf kernel)."""
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.segment_stats import STATS_BATCH, segment_stats_grid
+
+N = 128
+B = 4
+
+floats = st.floats(min_value=-1e4, max_value=1e4, allow_nan=False, width=32)
+
+
+@st.composite
+def batch_case(draw):
+    xs = np.asarray(
+        draw(st.lists(st.lists(floats, min_size=N, max_size=N), min_size=B, max_size=B)),
+        np.float32,
+    )
+    starts = np.asarray(draw(st.lists(st.integers(0, N), min_size=B, max_size=B)), np.int32)
+    ends = np.asarray(draw(st.lists(st.integers(0, N), min_size=B, max_size=B)), np.int32)
+    return xs, starts, ends
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.large_base_example])
+@given(batch_case())
+def test_grid_matches_per_block_oracle(case):
+    xs, starts, ends = case
+    out = segment_stats_grid(xs, starts, ends)
+    for b in range(B):
+        want = ref.segment_stats_ref(xs[b], int(starts[b]), int(ends[b]))
+        for g, w, name in zip([o[b] for o in out], want,
+                              ["max", "min", "sum", "sumsq", "count"]):
+            np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-3, err_msg=f"b={b} {name}")
+
+
+def test_padded_rows_are_identity():
+    xs = np.ones((B, N), np.float32)
+    starts = np.array([0, 5, 0, 0], np.int32)
+    ends = np.array([N, 5, 0, 1], np.int32)  # rows 1 and 2 empty
+    mx, mn, s, ss, n = segment_stats_grid(xs, starts, ends)
+    assert n[1] == 0 and n[2] == 0 and n[3] == 1
+    assert mx[1] < -1e38 and mn[1] > 1e38
+    assert s[0] == N
+
+
+def test_full_batch_shape():
+    xs = np.zeros((STATS_BATCH, N), np.float32)
+    starts = np.zeros(STATS_BATCH, np.int32)
+    ends = np.full(STATS_BATCH, N, np.int32)
+    out = segment_stats_grid(xs, starts, ends)
+    assert all(o.shape == (STATS_BATCH,) for o in out)
+    np.testing.assert_array_equal(np.asarray(out[4]), np.full(STATS_BATCH, N, np.float32))

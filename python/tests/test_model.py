@@ -1,0 +1,57 @@
+"""L2 graph shape/semantics checks + AOT entry registry sanity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+N = 128
+
+
+def test_entries_registry_complete():
+    reg = model.entries()
+    assert "segment_stats" in reg
+    assert "distance" in reg
+    assert "histogram64" in reg
+    for w in model.MA_WINDOWS:
+        assert f"moving_average_w{w}" in reg
+        assert f"ma_stats_w{w}" in reg
+
+
+def test_entries_are_lowerable():
+    """Every registry entry must trace: eval_shape is the cheap proxy for
+    the full lowering that aot.py performs."""
+    for name, (fn, args) in model.entries().items():
+        out = jax.eval_shape(fn, *args)
+        leaves = jax.tree_util.tree_leaves(out)
+        assert leaves, name
+        for leaf in leaves:
+            assert leaf.dtype == jnp.float32, name
+
+
+def test_ma_stats_fused_pipeline_matches_composition():
+    rng = np.random.default_rng(3)
+    x = rng.normal(10, 2, N).astype(np.float32)
+    w = 4
+    fused = model.block_ma_stats(x, 8, 120, window=w)
+    ma = ref.moving_average_ref(x, 8, 120, w)
+    want = ref.segment_stats_ref(ma, 8 + w - 1, 120)
+    for g, ww in zip(fused, want):
+        np.testing.assert_allclose(g, ww, rtol=1e-5, atol=1e-3)
+
+
+def test_block_stats_roundtrip_means():
+    x = np.linspace(-1, 1, N).astype(np.float32)
+    mx, mn, s, ss, n = model.block_stats(x, 0, N)
+    fx = ref.finalize_stats(mx, mn, s, ss, n)
+    np.testing.assert_allclose(fx[2], x.mean(), atol=1e-6)
+    np.testing.assert_allclose(fx[3], x.std(), atol=1e-5)
+
+
+def test_block_histogram_shape():
+    x = np.zeros(N, np.float32)
+    (h,) = model.block_histogram(x, 0, N, -1.0, 1.0)
+    assert h.shape == (model.HIST_BINS,)
+    assert float(h.sum()) == N

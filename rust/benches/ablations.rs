@@ -1,0 +1,130 @@
+//! Ablations over the design choices DESIGN.md §5 calls out:
+//!
+//! * A1 — residency policy: default-cached vs default-unpersist vs Oseba
+//!   (isolates "don't materialize" from "don't cache what you materialize").
+//! * A2 — backend: HLO (AOT kernels via PJRT) vs native rust on the same
+//!   session (the cost/benefit of the accelerator path at this block size).
+//! * A3 — kernel batching: one service submission per worker-batch vs one
+//!   per block.
+//! * A4 — index: table vs CIAS end-to-end (lookup cost is tiny vs compute;
+//!   the win is footprint — reported alongside).
+//!
+//! Run: `cargo bench --bench ablations`.
+
+mod common;
+
+use oseba::analysis::five_periods;
+use oseba::bench::{bench, table, BenchConfig};
+use oseba::config::BackendKind;
+use oseba::coordinator::{run_session, IndexKind, Method};
+use oseba::util::humansize;
+
+const BYTES: usize = 32 << 20;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let periods = five_periods();
+    let backend = common::backend_kind();
+
+    // --- A1: residency policy -------------------------------------------
+    oseba::bench::section("A1: residency policy (32 MiB, native backend)");
+    // Generate once; each iteration loads a fresh context so cached
+    // filter-RDDs do not leak between iterations. Both arms pay the same
+    // load cost; the delta is the policy.
+    let batch = oseba::datagen::ClimateGen::default().generate_bytes(BYTES);
+    let mut rows = Vec::new();
+    let mut mems = Vec::new();
+    for (label, method, unpersist) in [
+        ("default, cache filtered (Spark behaviour)", Method::Default, false),
+        ("default, unpersist filtered", Method::Default, true),
+        ("oseba (no materialization)", Method::Oseba, false),
+    ] {
+        let periods = periods.clone();
+        let batch = batch.clone();
+        let mut mem_after = 0usize;
+        let r = bench(&cfg, label, || {
+            let coord = common::make_coord(oseba::config::BackendKind::Native);
+            let ds = coord.load(batch.clone(), 15).unwrap();
+            let rep =
+                run_session(&coord, &ds, method, IndexKind::Cias, &periods, 0, unpersist)
+                    .unwrap();
+            mem_after = *rep.metrics.memory_series().last().unwrap();
+        });
+        rows.push(r);
+        mems.push((label, mem_after));
+    }
+    println!("{}", table(&rows));
+    for (label, m) in &mems {
+        println!("  {label:<44} final memory {}", humansize::bytes(*m));
+    }
+    assert!(mems[0].1 > mems[2].1, "cached default must hold more memory than oseba");
+    assert!(mems[1].1 == mems[2].1, "unpersist restores the raw footprint");
+
+    // --- A2: backend ------------------------------------------------------
+    oseba::bench::section("A2: backend HLO vs native (oseba method, 32 MiB)");
+    let mut rows = Vec::new();
+    let kinds: Vec<(&str, BackendKind)> = if backend == BackendKind::Hlo {
+        vec![("hlo (AOT pallas→PJRT)", BackendKind::Hlo), ("native rust", BackendKind::Native)]
+    } else {
+        vec![("native rust", BackendKind::Native)]
+    };
+    for (label, kind) in kinds {
+        // Setup outside the timed region: session compute only.
+        let (coord, ds, _) = common::setup(BYTES, 15, kind);
+        let periods = periods.clone();
+        rows.push(bench(&cfg, label, move || {
+            let rep = run_session(&coord, &ds, Method::Oseba, IndexKind::Cias, &periods, 0, false)
+                .unwrap();
+            std::hint::black_box(rep.stats.len());
+        }));
+    }
+    println!("{}", table(&rows));
+
+    // --- A3: kernel batching ----------------------------------------------
+    oseba::bench::section("A3: kernel-service batching (oseba, hlo backend)");
+    if backend == BackendKind::Hlo {
+        let mut rows = Vec::new();
+        for (label, batched) in [("batched submissions", true), ("one request per block", false)] {
+            let (mut coord, _, _) = {
+                let (c, d, r) = common::setup(BYTES, 15, BackendKind::Hlo);
+                (c, d, r)
+            };
+            coord.batch_kernel_calls = batched;
+            let ds = coord.load(
+                oseba::datagen::ClimateGen { seed: 7, ..Default::default() }
+                    .generate_bytes(BYTES),
+                15,
+            )
+            .unwrap();
+            let periods = periods.clone();
+            rows.push(bench(&cfg, label, move || {
+                let rep =
+                    run_session(&coord, &ds, Method::Oseba, IndexKind::Cias, &periods, 0, false)
+                        .unwrap();
+                std::hint::black_box(rep.stats.len());
+            }));
+        }
+        println!("{}", table(&rows));
+    } else {
+        println!("(skipped: requires artifacts)");
+    }
+
+    // --- A4: index kind end-to-end ----------------------------------------
+    oseba::bench::section("A4: table vs CIAS end-to-end (oseba method)");
+    let mut rows = Vec::new();
+    let mut footprints = Vec::new();
+    for (label, kind) in [("table index", IndexKind::Table), ("cias index", IndexKind::Cias)] {
+        let (coord, ds, _) = common::setup_native(BYTES, 15);
+        let periods = periods.clone();
+        let ix = coord.build_index(&ds, kind).unwrap();
+        footprints.push((label, ix.memory_bytes()));
+        rows.push(bench(&cfg, label, move || {
+            let rep = run_session(&coord, &ds, Method::Oseba, kind, &periods, 0, false).unwrap();
+            std::hint::black_box(rep.stats.len());
+        }));
+    }
+    println!("{}", table(&rows));
+    for (label, b) in &footprints {
+        println!("  {label:<20} metadata footprint: {b} bytes");
+    }
+}

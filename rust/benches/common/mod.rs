@@ -1,0 +1,68 @@
+//! Shared setup for the bench targets.
+
+use std::sync::Arc;
+
+use oseba::config::{AppConfig, BackendKind, ContextConfig};
+use oseba::coordinator::Coordinator;
+use oseba::datagen::ClimateGen;
+use oseba::engine::Dataset;
+use oseba::runtime::make_backend;
+
+/// Artifacts presence → backend selection shared by all benches.
+#[allow(dead_code)]
+pub fn backend_kind() -> BackendKind {
+    if std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+    {
+        BackendKind::Hlo
+    } else {
+        eprintln!("(artifacts not built; benches use the native backend)");
+        BackendKind::Native
+    }
+}
+
+pub fn app_cfg(backend: BackendKind) -> AppConfig {
+    AppConfig {
+        ctx: ContextConfig { num_workers: 4, memory_budget: None },
+        cluster_workers: 4,
+        backend,
+        artifacts_dir: format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")),
+        ..Default::default()
+    }
+}
+
+/// Fresh coordinator + loaded climate dataset of `bytes` raw size.
+pub fn setup(bytes: usize, partitions: usize, backend: BackendKind) -> (Coordinator, Dataset, usize) {
+    let cfg = app_cfg(backend);
+    let be = make_backend(cfg.backend, &cfg.artifacts_dir).expect("backend");
+    let coord = Coordinator::new(&cfg, be).expect("coordinator");
+    let batch = ClimateGen::default().generate_bytes(bytes);
+    let raw = batch.raw_bytes();
+    let ds = coord.load(batch, partitions).expect("load");
+    (coord, ds, raw)
+}
+
+/// Native-backend setup (for benches isolating L3 from kernel costs).
+#[allow(dead_code)]
+pub fn setup_native(bytes: usize, partitions: usize) -> (Coordinator, Dataset, usize) {
+    setup(bytes, partitions, BackendKind::Native)
+}
+
+#[allow(dead_code)]
+pub fn mib(b: usize) -> f64 {
+    b as f64 / (1 << 20) as f64
+}
+
+#[allow(dead_code)]
+pub fn make_coord(backend: BackendKind) -> Coordinator {
+    let cfg = app_cfg(backend);
+    let be = make_backend(cfg.backend, &cfg.artifacts_dir).expect("backend");
+    Coordinator::new(&cfg, be).expect("coordinator")
+}
+
+#[allow(dead_code)]
+pub fn arc_backend(backend: BackendKind) -> Arc<dyn oseba::runtime::AnalysisBackend> {
+    let cfg = app_cfg(backend);
+    make_backend(cfg.backend, &cfg.artifacts_dir).expect("backend")
+}

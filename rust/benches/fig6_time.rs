@@ -1,0 +1,82 @@
+//! **Fig 6 reproduction**: accumulated processing time over the five
+//! phases, default vs Oseba.
+//!
+//! Paper result (480 MB): default >120 s total vs Oseba ≈70 s (~1.7×),
+//! with the gap widening after phase 1 (phase 1 is close because Oseba's
+//! index build happens there). Absolute numbers here are milliseconds —
+//! the substrate is an in-process engine, not a JVM cluster — but the
+//! *shape* must match: default's slope stays constant (every phase pays a
+//! full scan) while Oseba's flattens, and the cumulative gap widens
+//! monotonically.
+//!
+//! Run: `cargo bench --bench fig6_time` (OSEBA_BYTES / OSEBA_BENCH_ITERS).
+
+mod common;
+
+use oseba::analysis::five_periods;
+use oseba::bench::BenchConfig;
+use oseba::config::parse_bytes;
+use oseba::coordinator::{run_session, IndexKind, Method};
+use oseba::util::humansize;
+
+fn main() {
+    let bytes = std::env::var("OSEBA_BYTES")
+        .ok()
+        .map(|v| parse_bytes(&v).expect("OSEBA_BYTES"))
+        .unwrap_or(64 << 20);
+    let cfg = BenchConfig::from_env();
+    let backend = common::backend_kind();
+    let periods = five_periods();
+
+    oseba::bench::section(&format!(
+        "Fig 6: accumulated time ({} raw, 15 partitions, backend {:?}, {} iters)",
+        humansize::bytes(bytes),
+        backend,
+        cfg.iters
+    ));
+
+    // Average the per-phase time over `iters` fresh sessions per method.
+    let mut acc: [[f64; 5]; 2] = [[0.0; 5]; 2];
+    for (mi, method) in [Method::Default, Method::Oseba].into_iter().enumerate() {
+        for _ in 0..cfg.iters.max(1) {
+            let (coord, ds, _) = common::setup(bytes, 15, backend);
+            let report = run_session(&coord, &ds, method, IndexKind::Cias, &periods, 0, false)
+                .expect("session");
+            for (i, t) in report.metrics.accumulated_time().iter().enumerate() {
+                acc[mi][i] += t;
+            }
+        }
+        for t in &mut acc[mi] {
+            *t /= cfg.iters.max(1) as f64;
+        }
+    }
+
+    println!(
+        "{:<7} {:>12} {:>12} {:>9} {:>12}",
+        "phase", "default", "oseba", "speedup", "paper"
+    );
+    // Paper accumulated-time curve eyeballed from Fig 6 (seconds).
+    let paper = [(25.0, 22.0), (50.0, 35.0), (75.0, 47.0), (100.0, 58.0), (124.0, 70.0)];
+    for i in 0..5 {
+        println!(
+            "{:<7} {:>12} {:>12} {:>8.2}x {:>7.0}s/{:<4.0}s",
+            i + 1,
+            humansize::secs(acc[0][i]),
+            humansize::secs(acc[1][i]),
+            acc[0][i] / acc[1][i],
+            paper[i].0,
+            paper[i].1
+        );
+    }
+
+    // Shape assertions.
+    let gap: Vec<f64> = (0..5).map(|i| acc[0][i] - acc[1][i]).collect();
+    assert!(gap.windows(2).all(|w| w[1] > w[0]), "cumulative gap must widen: {gap:?}");
+    assert!(acc[0][4] > acc[1][4], "default slower overall");
+    println!(
+        "\nshape check: gap widens ✓ ({} → {}), total speedup {:.2}x (paper ≈1.7x)",
+        humansize::secs(gap[0]),
+        humansize::secs(gap[4]),
+        acc[0][4] / acc[1][4]
+    );
+}

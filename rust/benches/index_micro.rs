@@ -1,0 +1,119 @@
+//! **§III-A vs §III-B micro-benchmark**: table vs CIAS build time, lookup
+//! latency and metadata footprint as the partition count m grows
+//! 15 → 1M.
+//!
+//! Expected shape (the paper's complexity argument): table space grows
+//! linearly in m and lookup ~log m; CIAS space and lookup stay flat (all
+//! regular partitions collapse into the compressed index).
+//!
+//! Run: `cargo bench --bench index_micro`.
+
+mod common;
+
+use oseba::bench::{bench, table, BenchConfig};
+use oseba::index::{Cias, ContentIndex, PartitionMeta, RangeQuery, TableIndex};
+use oseba::util::humansize;
+use oseba::util::rng::Xoshiro256;
+
+/// Synthetic regular metadata for m partitions (no data needed: the index
+/// operates on metadata only — that is the point).
+fn metas(m: usize, rows_per: usize, step: i64) -> Vec<PartitionMeta> {
+    (0..m)
+        .map(|i| {
+            let key_min = (i * rows_per) as i64 * step;
+            PartitionMeta {
+                id: i,
+                key_min,
+                key_max: key_min + (rows_per as i64 - 1) * step,
+                rows: rows_per,
+                step: Some(step),
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let rows_per = 4096;
+    let step = 3600i64;
+    let sizes = [15usize, 100, 1_000, 10_000, 100_000, 1_000_000];
+
+    oseba::bench::section("index build + footprint vs partition count");
+    println!(
+        "{:<10} {:>12} {:>12} {:>12} {:>12} {:>8}",
+        "m", "table bytes", "cias bytes", "table build", "cias build", "asl"
+    );
+    for &m in &sizes {
+        let ms = metas(m, rows_per, step);
+        let t_build = {
+            let ms = ms.clone();
+            bench(&cfg, "t", move || {
+                let _ = TableIndex::from_meta(ms.clone()).unwrap();
+            })
+        };
+        let c_build = {
+            let ms = ms.clone();
+            bench(&cfg, "c", move || {
+                let _ = Cias::from_meta(ms.clone()).unwrap();
+            })
+        };
+        let t = TableIndex::from_meta(ms.clone()).unwrap();
+        let c = Cias::from_meta(ms).unwrap();
+        println!(
+            "{:<10} {:>12} {:>12} {:>12} {:>12} {:>8}",
+            m,
+            humansize::bytes(t.memory_bytes()),
+            humansize::bytes(c.memory_bytes()),
+            humansize::secs(t_build.summary.p50),
+            humansize::secs(c_build.summary.p50),
+            c.asl_len()
+        );
+        assert!(c.memory_bytes() <= 128, "cias stays O(1) on regular data");
+    }
+
+    oseba::bench::section("point-range lookup latency (1000 random queries/iter)");
+    let mut results = Vec::new();
+    for &m in &sizes {
+        let ms = metas(m, rows_per, step);
+        let span = (m * rows_per) as i64 * step;
+        let t = TableIndex::from_meta(ms.clone()).unwrap();
+        let c = Cias::from_meta(ms).unwrap();
+        // Narrow queries: lookup cost, not output size, dominates.
+        let queries: Vec<RangeQuery> = {
+            let mut rng = Xoshiro256::seeded(m as u64);
+            (0..1000)
+                .map(|_| {
+                    let lo = rng.below(span as u64) as i64;
+                    RangeQuery { lo, hi: lo + step * 64 }
+                })
+                .collect()
+        };
+        let qs = queries.clone();
+        results.push(bench(&cfg, &format!("table  m={m}"), move || {
+            let mut acc = 0usize;
+            for q in &qs {
+                acc += t.lookup(*q).len();
+            }
+            std::hint::black_box(acc);
+        }));
+        let qs = queries.clone();
+        results.push(bench(&cfg, &format!("cias   m={m}"), move || {
+            let mut acc = 0usize;
+            for q in &qs {
+                acc += c.lookup(*q).len();
+            }
+            std::hint::black_box(acc);
+        }));
+    }
+    println!("{}", table(&results));
+
+    // Shape: cias lookup time must not grow with m (compare first vs last).
+    let cias_first = results[1].summary.p50;
+    let cias_last = results[results.len() - 1].summary.p50;
+    println!(
+        "cias p50 at m=15: {} | at m=1M: {} (flat-ness ratio {:.2})",
+        humansize::secs(cias_first),
+        humansize::secs(cias_last),
+        cias_last / cias_first
+    );
+}

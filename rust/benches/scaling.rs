@@ -1,0 +1,80 @@
+//! Raw-data-size scaling (paper §IV closing remark: "a larger size of raw
+//! data can result in a bigger time consumption during selecting bulk
+//! data") — the per-phase time of each method as the dataset grows, with
+//! fixed-width selections.
+//!
+//! Expected shape: the default method's per-phase cost grows ~linearly
+//! with raw size (full scan every phase); Oseba's grows only with the
+//! *selection* size, so the default/oseba gap widens with scale.
+//!
+//! Run: `cargo bench --bench scaling` (OSEBA_SCALING_MAX to extend).
+
+mod common;
+
+use oseba::analysis::random_periods;
+use oseba::bench::BenchConfig;
+use oseba::config::parse_bytes;
+use oseba::coordinator::{run_session, IndexKind, Method};
+use oseba::util::humansize;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let backend = common::backend_kind();
+    let max = std::env::var("OSEBA_SCALING_MAX")
+        .ok()
+        .map(|v| parse_bytes(&v).expect("OSEBA_SCALING_MAX"))
+        .unwrap_or(256 << 20);
+
+    let mut sizes = vec![8usize << 20];
+    while *sizes.last().unwrap() < max {
+        sizes.push(sizes.last().unwrap() * 2);
+    }
+    // Fixed-width selections: 5 periods × 2% of the span each, so the
+    // selected volume grows with the data but the *fraction* is constant.
+    let periods = random_periods(5, 0.02, 42);
+
+    oseba::bench::section(&format!(
+        "scaling: per-session time vs raw size (backend {:?}, {} iters)",
+        backend, cfg.iters
+    ));
+    println!(
+        "{:<12} {:>12} {:>12} {:>9} {:>14}",
+        "raw size", "default", "oseba", "speedup", "gap"
+    );
+
+    let mut speedups = Vec::new();
+    for &bytes in &sizes {
+        let mut totals = [0.0f64; 2];
+        for (mi, method) in [Method::Default, Method::Oseba].into_iter().enumerate() {
+            for _ in 0..cfg.iters.max(1) {
+                let (coord, ds, _) = common::setup(bytes, 15, backend);
+                let rep =
+                    run_session(&coord, &ds, method, IndexKind::Cias, &periods, 0, false)
+                        .unwrap();
+                totals[mi] += rep.metrics.accumulated_time().last().unwrap();
+            }
+            totals[mi] /= cfg.iters.max(1) as f64;
+        }
+        let speedup = totals[0] / totals[1];
+        speedups.push(speedup);
+        println!(
+            "{:<12} {:>12} {:>12} {:>8.2}x {:>14}",
+            humansize::bytes(bytes),
+            humansize::secs(totals[0]),
+            humansize::secs(totals[1]),
+            speedup,
+            humansize::secs(totals[0] - totals[1])
+        );
+    }
+
+    // Shape: the advantage at the largest size exceeds the smallest.
+    assert!(
+        speedups.last().unwrap() > speedups.first().unwrap(),
+        "gap must widen with raw size: {speedups:?}"
+    );
+    println!(
+        "\nshape check: speedup grows with raw size ✓ ({:.2}x → {:.2}x)",
+        speedups.first().unwrap(),
+        speedups.last().unwrap()
+    );
+}

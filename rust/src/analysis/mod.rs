@@ -1,0 +1,15 @@
+//! Selective bulk analyses (paper §II, Fig 1): period statistics, moving
+//! average, distance comparison, events analysis (histograms) and model
+//! train/test splitting — all expressed over partition slices so both the
+//! default (filtered-dataset) and Oseba (indexed-view) access paths feed
+//! the same compute.
+
+pub mod ops;
+pub mod split;
+pub mod trend;
+pub mod workload;
+
+pub use ops::{Analyzer, DistanceResult, PeriodStats};
+pub use trend::StationarityReport;
+pub use split::{train_test_split, SplitSpec};
+pub use workload::{five_periods, random_periods, PeriodSpec};

@@ -1,0 +1,459 @@
+//! The analysis operators. Each decomposes its input slices into
+//! AOT-shaped kernel blocks, dispatches to the configured
+//! [`AnalysisBackend`], and merges the associative partials in rust
+//! (DESIGN.md §3).
+
+use std::sync::Arc;
+
+use crate::engine::{Dataset, SliceView};
+use crate::error::{OsebaError, Result};
+use crate::runtime::backend::AnalysisBackend;
+use crate::storage::BLOCK_ROWS;
+use crate::util::stats::{DistancePartial, Moments};
+
+/// Finalized period statistics — the paper's per-phase analysis output
+/// ("computing the max, mean and standard deviation", §IV-A).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PeriodStats {
+    pub count: u64,
+    pub max: f32,
+    pub min: f32,
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl PeriodStats {
+    /// Finalize merged moments; `None` for an empty selection.
+    pub fn from_moments(m: Moments) -> Option<PeriodStats> {
+        if m.is_empty() {
+            return None;
+        }
+        Some(PeriodStats {
+            count: m.count as u64,
+            max: m.max,
+            min: m.min,
+            mean: m.mean(),
+            std: m.std(),
+        })
+    }
+}
+
+/// Finalized distance-comparison output.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DistanceResult {
+    pub count: u64,
+    pub l1: f64,
+    pub l2: f64,
+    pub linf: f32,
+    /// Mean absolute difference.
+    pub mad: f64,
+}
+
+/// The analysis engine: a backend plus the block-decomposition logic.
+#[derive(Clone)]
+pub struct Analyzer {
+    backend: Arc<dyn AnalysisBackend>,
+}
+
+impl Analyzer {
+    pub fn new(backend: Arc<dyn AnalysisBackend>) -> Analyzer {
+        Analyzer { backend }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Execution-engine counters, if the backend keeps them.
+    pub fn backend_stats(&self) -> Option<crate::runtime::service::ServiceStats> {
+        self.backend.service_stats()
+    }
+
+    /// Views covering every valid row of a dataset (the baseline path runs
+    /// analyses over the *filtered* dataset in full).
+    pub fn full_views<'a>(ds: &'a Dataset) -> Vec<SliceView<'a>> {
+        ds.partitions()
+            .iter()
+            .filter(|p| p.rows > 0)
+            .map(|p| SliceView { part: p, row_start: 0, row_end: p.rows })
+            .collect()
+    }
+
+    /// Period statistics over the selected views of `column`.
+    pub fn period_stats(&self, views: &[SliceView<'_>], column: usize) -> Result<PeriodStats> {
+        let mut merged = Moments::EMPTY;
+        for v in views {
+            merged = merged.merge(slice_moments(
+                self.backend.as_ref(),
+                v.part,
+                v.row_start,
+                v.row_end,
+                column,
+                true,
+            )?);
+        }
+        PeriodStats::from_moments(merged)
+            .ok_or_else(|| OsebaError::InvalidRange("empty selection".into()))
+    }
+
+    /// Trailing moving average over the *concatenated* selection. Returns
+    /// one value per valid MA point (`n - window + 1` values for `n`
+    /// selected rows).
+    ///
+    /// Selections spanning multiple blocks are stitched with `window - 1`
+    /// overlap so windows crossing block boundaries are exact.
+    pub fn moving_average(
+        &self,
+        views: &[SliceView<'_>],
+        column: usize,
+        window: usize,
+    ) -> Result<Vec<f32>> {
+        if window == 0 {
+            return Err(OsebaError::InvalidRange("window must be > 0".into()));
+        }
+        let series = gather(views, column);
+        let n = series.len();
+        if n < window {
+            return Ok(Vec::new());
+        }
+        let chunk_rows = self.backend.block_rows().unwrap_or(BLOCK_ROWS);
+        if window > chunk_rows {
+            return Err(OsebaError::InvalidRange(format!(
+                "window {window} exceeds block size {chunk_rows}"
+            )));
+        }
+        let mut out = Vec::with_capacity(n - window + 1);
+        let stride = chunk_rows - (window - 1);
+        let mut pos = 0usize;
+        let mut chunk = vec![0f32; chunk_rows];
+        while pos + window <= n {
+            let take = (n - pos).min(chunk_rows);
+            chunk[..take].copy_from_slice(&series[pos..pos + take]);
+            chunk[take..].fill(0.0);
+            let ma = self.backend.moving_average(&chunk, 0, take, window)?;
+            // Valid MA points of this chunk: rows [window-1, take).
+            out.extend_from_slice(&ma[window - 1..take]);
+            pos += stride;
+        }
+        out.truncate(n - window + 1);
+        Ok(out)
+    }
+
+    /// Moments of the moving-average series (fused trend statistics via
+    /// the `ma_stats` artifact when the whole selection fits one block).
+    pub fn ma_stats(
+        &self,
+        views: &[SliceView<'_>],
+        column: usize,
+        window: usize,
+    ) -> Result<PeriodStats> {
+        let series = gather(views, column);
+        let chunk_rows = self.backend.block_rows().unwrap_or(BLOCK_ROWS);
+        if series.len() <= chunk_rows {
+            // Fused single-kernel path.
+            let mut chunk = vec![0f32; chunk_rows];
+            chunk[..series.len()].copy_from_slice(&series);
+            let m = self.backend.ma_stats(&chunk, 0, series.len(), window)?;
+            return PeriodStats::from_moments(m)
+                .ok_or_else(|| OsebaError::InvalidRange("selection smaller than window".into()));
+        }
+        // General path: stitched MA then stats over it.
+        let ma = self.moving_average(views, column, window)?;
+        if ma.is_empty() {
+            return Err(OsebaError::InvalidRange("selection smaller than window".into()));
+        }
+        let mut merged = Moments::EMPTY;
+        for c in ma.chunks(chunk_rows) {
+            let mut chunk = vec![0f32; chunk_rows];
+            chunk[..c.len()].copy_from_slice(c);
+            merged = merged.merge(self.backend.segment_stats(&chunk, 0, c.len())?);
+        }
+        PeriodStats::from_moments(merged)
+            .ok_or_else(|| OsebaError::InvalidRange("empty selection".into()))
+    }
+
+    /// Distance comparison between two equally-long selections (paper §II:
+    /// "the temperatures in Florida throughout 1940 and 2014").
+    pub fn distance(
+        &self,
+        a: &[SliceView<'_>],
+        b: &[SliceView<'_>],
+        column: usize,
+    ) -> Result<DistanceResult> {
+        let sa = gather(a, column);
+        let sb = gather(b, column);
+        if sa.len() != sb.len() {
+            return Err(OsebaError::InvalidRange(format!(
+                "distance requires equal selections ({} vs {} rows)",
+                sa.len(),
+                sb.len()
+            )));
+        }
+        if sa.is_empty() {
+            return Err(OsebaError::InvalidRange("empty selection".into()));
+        }
+        let chunk_rows = self.backend.block_rows().unwrap_or(BLOCK_ROWS);
+        let mut merged = DistancePartial::EMPTY;
+        let mut ca = vec![0f32; chunk_rows];
+        let mut cb = vec![0f32; chunk_rows];
+        for (pa, pb) in sa.chunks(chunk_rows).zip(sb.chunks(chunk_rows)) {
+            ca[..pa.len()].copy_from_slice(pa);
+            ca[pa.len()..].fill(0.0);
+            cb[..pb.len()].copy_from_slice(pb);
+            cb[pb.len()..].fill(0.0);
+            merged = merged.merge(self.backend.distance(&ca, &cb, 0, pa.len())?);
+        }
+        Ok(DistanceResult {
+            count: merged.count as u64,
+            l1: merged.l1,
+            l2: merged.l2(),
+            linf: merged.linf,
+            mad: merged.l1 / merged.count,
+        })
+    }
+
+    /// 64-bin histogram of the selection over `[lo, hi)` (events analysis).
+    pub fn histogram(
+        &self,
+        views: &[SliceView<'_>],
+        column: usize,
+        lo: f32,
+        hi: f32,
+    ) -> Result<Vec<f32>> {
+        if !(hi > lo) {
+            return Err(OsebaError::InvalidRange(format!("bad histogram bounds [{lo}, {hi})")));
+        }
+        let mut merged: Option<Vec<f32>> = None;
+        for v in views {
+            for (block, s, e) in block_ranges(v, column) {
+                let h = self.backend.histogram64(block, s, e, lo, hi)?;
+                merged = Some(match merged {
+                    None => h,
+                    Some(mut acc) => {
+                        for (a, x) in acc.iter_mut().zip(&h) {
+                            *a += x;
+                        }
+                        acc
+                    }
+                });
+            }
+        }
+        merged.ok_or_else(|| OsebaError::InvalidRange("empty selection".into()))
+    }
+}
+
+/// Masked moments of rows `[row_start, row_end)` of one partition column —
+/// the per-worker task body the coordinator dispatches. With `batch` set,
+/// all kernel blocks go to the backend as one submission (one service
+/// queue message); otherwise one request per block (the ablation's
+/// unbatched arm).
+pub fn slice_moments(
+    backend: &dyn AnalysisBackend,
+    part: &crate::storage::Partition,
+    row_start: usize,
+    row_end: usize,
+    column: usize,
+    batch: bool,
+) -> Result<Moments> {
+    let first = row_start / BLOCK_ROWS;
+    let last = row_end.saturating_sub(1) / BLOCK_ROWS;
+    let mut tasks: Vec<(&[f32], usize, usize)> = Vec::new();
+    for b in first..=last.min(part.num_blocks().saturating_sub(1)) {
+        let base = b * BLOCK_ROWS;
+        let s = row_start.saturating_sub(base);
+        let e = (row_end - base).min(BLOCK_ROWS);
+        if s < e {
+            tasks.push((part.block(column, b), s, e));
+        }
+    }
+    if batch {
+        let partials = backend.segment_stats_batch(&tasks)?;
+        Ok(partials.into_iter().fold(Moments::EMPTY, Moments::merge))
+    } else {
+        let mut merged = Moments::EMPTY;
+        for (block, s, e) in tasks {
+            merged = merged.merge(backend.segment_stats(block, s, e)?);
+        }
+        Ok(merged)
+    }
+}
+
+/// Decompose one view into `(padded block, start, end)` kernel tasks. The
+/// blocks come straight from the partition's padded column storage — no
+/// copying on the stats/histogram path.
+fn block_ranges<'a>(
+    v: &SliceView<'a>,
+    column: usize,
+) -> impl Iterator<Item = (&'a [f32], usize, usize)> {
+    let part = v.part;
+    let (rs, re) = (v.row_start, v.row_end);
+    let first = rs / BLOCK_ROWS;
+    let last = (re.saturating_sub(1)) / BLOCK_ROWS;
+    (first..=last).filter_map(move |b| {
+        let base = b * BLOCK_ROWS;
+        let s = rs.saturating_sub(base);
+        let e = (re - base).min(BLOCK_ROWS);
+        (s < e).then(|| (part.block(column, b), s, e))
+    })
+}
+
+/// Concatenate the selected rows of `column` across views (the series-prep
+/// step for order-dependent analyses like MA and distance).
+fn gather(views: &[SliceView<'_>], column: usize) -> Vec<f32> {
+    let total: usize = views.iter().map(|v| v.rows()).sum();
+    let mut out = Vec::with_capacity(total);
+    for v in views {
+        out.extend_from_slice(v.column(column));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ContextConfig;
+    use crate::datagen::ClimateGen;
+    use crate::engine::OsebaContext;
+    use crate::index::{Cias, ContentIndex, RangeQuery};
+    use crate::runtime::NativeBackend;
+
+    fn setup(rows: usize, parts: usize) -> (OsebaContext, Dataset, Analyzer) {
+        let ctx = OsebaContext::new(ContextConfig { num_workers: 2, memory_budget: None });
+        let ds = ctx.load(ClimateGen::default().generate(rows), parts).unwrap();
+        (ctx, ds, Analyzer::new(Arc::new(NativeBackend)))
+    }
+
+    fn naive_stats(xs: &[f32]) -> (f32, f32, f64, f64) {
+        let n = xs.len() as f64;
+        let mx = xs.iter().cloned().fold(f32::MIN, f32::max);
+        let mn = xs.iter().cloned().fold(f32::MAX, f32::min);
+        let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var = xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+        (mx, mn, mean, var.sqrt())
+    }
+
+    #[test]
+    fn period_stats_match_naive_over_indexed_views() {
+        let (ctx, ds, an) = setup(20_000, 7);
+        let index = Cias::build(ds.partitions()).unwrap();
+        let q = RangeQuery { lo: 2_000 * 3600, hi: 11_000 * 3600 };
+        let views = ctx.select_slices(&ds, &index.lookup(q), q);
+        let got = an.period_stats(&views, 0).unwrap();
+
+        // Ground truth from the raw generator output.
+        let batch = ClimateGen::default().generate(20_000);
+        let sel: Vec<f32> = batch.column("temperature").unwrap()[2_000..=11_000].to_vec();
+        let (mx, mn, mean, std) = naive_stats(&sel);
+        assert_eq!(got.count, sel.len() as u64);
+        assert_eq!(got.max, mx);
+        assert_eq!(got.min, mn);
+        assert!((got.mean - mean).abs() < 1e-3, "{} vs {mean}", got.mean);
+        assert!((got.std - std).abs() < 1e-2);
+    }
+
+    #[test]
+    fn stats_same_on_full_views_vs_slices_covering_all() {
+        let (ctx, ds, an) = setup(9_000, 4);
+        let full = an.period_stats(&Analyzer::full_views(&ds), 1).unwrap();
+        let index = Cias::build(ds.partitions()).unwrap();
+        let q = RangeQuery { lo: i64::MIN + 1, hi: i64::MAX };
+        let views = ctx.select_slices(&ds, &index.lookup(q), q);
+        let via_index = an.period_stats(&views, 1).unwrap();
+        assert_eq!(full.count, via_index.count);
+        assert_eq!(full.max, via_index.max);
+        assert!((full.mean - via_index.mean).abs() < 1e-6);
+    }
+
+    #[test]
+    fn moving_average_stitches_across_blocks() {
+        let (_ctx, ds, an) = setup(10_000, 2); // 5000-row partitions → 2 blocks each
+        let views = Analyzer::full_views(&ds);
+        let w = 16;
+        let got = an.moving_average(&views, 0, w).unwrap();
+        assert_eq!(got.len(), 10_000 - w + 1);
+
+        // Naive oracle over the gathered series.
+        let series = gather(&views, 0);
+        for &i in &[0usize, 100, 4080, 4081, 4095, 4096, 5000, 9984] {
+            let want: f32 = series[i..i + w].iter().sum::<f32>() / w as f32;
+            assert!(
+                (got[i] - want).abs() < 1e-2,
+                "i={i} got={} want={want}",
+                got[i]
+            );
+        }
+    }
+
+    #[test]
+    fn moving_average_window_edge_cases() {
+        let (_ctx, ds, an) = setup(100, 1);
+        let views = Analyzer::full_views(&ds);
+        assert!(an.moving_average(&views, 0, 0).is_err());
+        assert_eq!(an.moving_average(&views, 0, 101).unwrap(), Vec::<f32>::new());
+        let exact = an.moving_average(&views, 0, 100).unwrap();
+        assert_eq!(exact.len(), 1);
+    }
+
+    #[test]
+    fn distance_self_is_zero_and_shifted_is_not() {
+        let (ctx, ds, an) = setup(8_000, 3);
+        let index = Cias::build(ds.partitions()).unwrap();
+        let q1 = RangeQuery { lo: 0, hi: 999 * 3600 };
+        let q2 = RangeQuery { lo: 4000 * 3600, hi: 4999 * 3600 };
+        let v1 = ctx.select_slices(&ds, &index.lookup(q1), q1);
+        let v2 = ctx.select_slices(&ds, &index.lookup(q2), q2);
+
+        let self_d = an.distance(&v1, &v1, 0).unwrap();
+        assert_eq!(self_d.l1, 0.0);
+        assert_eq!(self_d.l2, 0.0);
+        assert_eq!(self_d.count, 1000);
+
+        let cross = an.distance(&v1, &v2, 0).unwrap();
+        assert!(cross.l1 > 0.0);
+        assert!(cross.mad > 0.0);
+        assert!(cross.linf >= (cross.mad as f32));
+    }
+
+    #[test]
+    fn distance_requires_equal_lengths() {
+        let (_ctx, ds, an) = setup(1000, 2);
+        let views = Analyzer::full_views(&ds);
+        let short = vec![views[0]];
+        assert!(an.distance(&views, &short, 0).is_err());
+    }
+
+    #[test]
+    fn histogram_total_mass() {
+        let (_ctx, ds, an) = setup(5_000, 3);
+        let views = Analyzer::full_views(&ds);
+        let h = an.histogram(&views, 1, 0.0, 100.0).unwrap(); // humidity ∈ [5,100]
+        assert_eq!(h.len(), 64);
+        assert_eq!(h.iter().sum::<f32>() as usize, 5_000);
+        assert!(an.histogram(&views, 1, 5.0, 5.0).is_err());
+    }
+
+    #[test]
+    fn ma_stats_fused_matches_general() {
+        let (_ctx, ds, an) = setup(3_000, 1); // fits one block? 3000 < 4096 ✓
+        let views = Analyzer::full_views(&ds);
+        let fused = an.ma_stats(&views, 0, 16).unwrap();
+        // General path oracle: explicit MA + naive stats.
+        let ma = an.moving_average(&views, 0, 16).unwrap();
+        let (mx, mn, mean, std) = naive_stats(&ma);
+        assert_eq!(fused.count, ma.len() as u64);
+        assert!((fused.max - mx).abs() < 1e-4);
+        assert!((fused.min - mn).abs() < 1e-4);
+        assert!((fused.mean - mean).abs() < 1e-3);
+        assert!((fused.std - std).abs() < 1e-3);
+    }
+
+    #[test]
+    fn block_ranges_decomposition() {
+        let (_ctx, ds, _an) = setup(10_000, 1); // one partition, 3 blocks padded
+        let v = SliceView { part: &ds.partitions()[0], row_start: 4000, row_end: 8200 };
+        let ranges: Vec<(usize, usize)> =
+            block_ranges(&v, 0).map(|(_, s, e)| (s, e)).collect();
+        // Block 0: rows 4000..4096; block 1: rows 0..4096 of block; block 2: 0..8200-8192.
+        assert_eq!(ranges, vec![(4000, 4096), (0, 4096), (0, 8)]);
+    }
+}

@@ -1,0 +1,133 @@
+//! Model-training data splits (paper §II: "data are usually grouped into
+//! three parts: Training, Tests and Validation ... randomly select 10
+//! years weather data to training a model").
+//!
+//! A split is expressed as *period assignments*: the key span is divided
+//! into equal period-sized units (e.g. years) and each unit is randomly
+//! assigned to train/test/validation. The output is three lists of
+//! [`RangeQuery`]s — which Oseba then serves without any scan.
+
+use crate::error::{OsebaError, Result};
+use crate::index::RangeQuery;
+use crate::util::rng::Xoshiro256;
+
+/// Split specification.
+#[derive(Clone, Copy, Debug)]
+pub struct SplitSpec {
+    /// Unit length in key units (e.g. one year of seconds).
+    pub unit_keys: i64,
+    /// Fraction of units assigned to training.
+    pub train_frac: f64,
+    /// Fraction assigned to test (validation gets the rest).
+    pub test_frac: f64,
+    pub seed: u64,
+}
+
+/// The three query lists.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Split {
+    pub train: Vec<RangeQuery>,
+    pub test: Vec<RangeQuery>,
+    pub validation: Vec<RangeQuery>,
+}
+
+/// Assign whole units across `[key_min, key_max]` to train/test/validation.
+pub fn train_test_split(key_min: i64, key_max: i64, spec: SplitSpec) -> Result<Split> {
+    if spec.unit_keys <= 0 {
+        return Err(OsebaError::InvalidRange("unit_keys must be > 0".into()));
+    }
+    if !(0.0..=1.0).contains(&spec.train_frac)
+        || !(0.0..=1.0).contains(&spec.test_frac)
+        || spec.train_frac + spec.test_frac > 1.0
+    {
+        return Err(OsebaError::InvalidRange("bad split fractions".into()));
+    }
+    let span = key_max
+        .checked_sub(key_min)
+        .filter(|s| *s >= 0)
+        .ok_or_else(|| OsebaError::InvalidRange("key_max < key_min".into()))?;
+    let units = (span / spec.unit_keys + 1).max(1) as usize;
+
+    let mut order: Vec<usize> = (0..units).collect();
+    let mut rng = Xoshiro256::seeded(spec.seed);
+    rng.shuffle(&mut order);
+
+    let n_train = (units as f64 * spec.train_frac).round() as usize;
+    let n_test = (units as f64 * spec.test_frac).round() as usize;
+
+    let mut split = Split::default();
+    for (rank, &u) in order.iter().enumerate() {
+        let lo = key_min + u as i64 * spec.unit_keys;
+        let hi = (lo + spec.unit_keys - 1).min(key_max);
+        let q = RangeQuery::new(lo, hi)?;
+        if rank < n_train {
+            split.train.push(q);
+        } else if rank < n_train + n_test {
+            split.test.push(q);
+        } else {
+            split.validation.push(q);
+        }
+    }
+    // Deterministic presentation order.
+    for v in [&mut split.train, &mut split.test, &mut split.validation] {
+        v.sort_by_key(|q| q.lo);
+    }
+    Ok(split)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const YEAR: i64 = 365 * 24 * 3600;
+
+    fn spec(seed: u64) -> SplitSpec {
+        SplitSpec { unit_keys: YEAR, train_frac: 0.6, test_frac: 0.2, seed }
+    }
+
+    #[test]
+    fn partitions_all_units_disjointly() {
+        let s = train_test_split(0, 20 * YEAR - 1, spec(3)).unwrap();
+        let total = s.train.len() + s.test.len() + s.validation.len();
+        assert_eq!(total, 20);
+        assert_eq!(s.train.len(), 12);
+        assert_eq!(s.test.len(), 4);
+        assert_eq!(s.validation.len(), 4);
+        // Disjoint coverage of the whole span.
+        let mut all: Vec<RangeQuery> =
+            s.train.iter().chain(&s.test).chain(&s.validation).cloned().collect();
+        all.sort_by_key(|q| q.lo);
+        assert_eq!(all[0].lo, 0);
+        for w in all.windows(2) {
+            assert_eq!(w[0].hi + 1, w[1].lo);
+        }
+        assert_eq!(all.last().unwrap().hi, 20 * YEAR - 1);
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_differs_across_seeds() {
+        let a = train_test_split(0, 10 * YEAR, spec(1)).unwrap();
+        let b = train_test_split(0, 10 * YEAR, spec(1)).unwrap();
+        assert_eq!(a, b);
+        let c = train_test_split(0, 10 * YEAR, spec(2)).unwrap();
+        assert_ne!(a.train, c.train);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(train_test_split(0, YEAR, SplitSpec { unit_keys: 0, ..spec(1) }).is_err());
+        assert!(train_test_split(
+            0,
+            YEAR,
+            SplitSpec { train_frac: 0.9, test_frac: 0.3, ..spec(1) }
+        )
+        .is_err());
+        assert!(train_test_split(10, 0, spec(1)).is_err());
+    }
+
+    #[test]
+    fn single_unit_goes_somewhere() {
+        let s = train_test_split(0, 100, SplitSpec { unit_keys: 1000, ..spec(1) }).unwrap();
+        assert_eq!(s.train.len() + s.test.len() + s.validation.len(), 1);
+    }
+}

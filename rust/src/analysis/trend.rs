@@ -1,0 +1,226 @@
+//! Trend analyses from the paper's introduction (§I): *Centered Moving
+//! Average* and *Stationarity Computation* ("statistical methods like
+//! Centered Moving Average or Stationarity Computation could be applied to
+//! investigate how the data changes within a period of time").
+//!
+//! Both compose the existing L1 kernels: the centered MA is a shifted
+//! trailing MA; stationarity segments the selection and compares
+//! per-segment moments (all `segment_stats` dispatches, merged in rust).
+
+use crate::analysis::ops::Analyzer;
+use crate::analysis::PeriodStats;
+use crate::engine::SliceView;
+use crate::error::{OsebaError, Result};
+
+/// Per-segment statistics plus drift scores for a stationarity check.
+#[derive(Clone, Debug)]
+pub struct StationarityReport {
+    /// Segment statistics, in order.
+    pub segments: Vec<PeriodStats>,
+    /// Whole-selection statistics.
+    pub overall: PeriodStats,
+    /// Max |segment mean − overall mean| / overall std (0 for flat series).
+    pub mean_drift: f64,
+    /// Max segment std / min segment std (1 for homoscedastic series).
+    pub variance_ratio: f64,
+}
+
+impl StationarityReport {
+    /// A simple stationarity verdict with conventional thresholds: means
+    /// within one overall σ and variance ratio under 4.
+    pub fn is_stationary(&self) -> bool {
+        self.mean_drift < 1.0 && self.variance_ratio < 4.0
+    }
+}
+
+impl Analyzer {
+    /// Centered moving average over the concatenated selection: the value
+    /// at position `i` averages `window` points centred on `i` (`window`
+    /// must be odd so the centre is well-defined). Returns `n - window + 1`
+    /// values, aligned so index 0 corresponds to selected row
+    /// `(window-1)/2`.
+    pub fn centered_moving_average(
+        &self,
+        views: &[SliceView<'_>],
+        column: usize,
+        window: usize,
+    ) -> Result<Vec<f32>> {
+        if window % 2 == 0 {
+            return Err(OsebaError::InvalidRange(format!(
+                "centered MA needs an odd window, got {window}"
+            )));
+        }
+        // centered(i) == trailing(i + (w-1)/2): identical value set, so the
+        // trailing-MA kernel serves both (only the alignment differs).
+        self.moving_average(views, column, window)
+    }
+
+    /// Stationarity computation: split the selection into `segments`
+    /// near-equal spans, compute per-segment moments (kernel dispatches),
+    /// and report mean drift and variance ratio across segments.
+    pub fn stationarity(
+        &self,
+        views: &[SliceView<'_>],
+        column: usize,
+        segments: usize,
+    ) -> Result<StationarityReport> {
+        if segments < 2 {
+            return Err(OsebaError::InvalidRange("need at least 2 segments".into()));
+        }
+        let total: usize = views.iter().map(|v| v.rows()).sum();
+        if total < segments {
+            return Err(OsebaError::InvalidRange(format!(
+                "selection of {total} rows cannot form {segments} segments"
+            )));
+        }
+        let overall = self.period_stats(views, column)?;
+
+        // Walk the views, cutting them into `segments` global row spans.
+        let per = total.div_ceil(segments);
+        let mut seg_stats = Vec::with_capacity(segments);
+        let mut current: Vec<SliceView<'_>> = Vec::new();
+        let mut filled = 0usize;
+        for v in views {
+            let mut offset = 0usize;
+            while offset < v.rows() {
+                let take = (per - filled).min(v.rows() - offset);
+                current.push(SliceView {
+                    part: v.part,
+                    row_start: v.row_start + offset,
+                    row_end: v.row_start + offset + take,
+                });
+                offset += take;
+                filled += take;
+                if filled == per {
+                    seg_stats.push(self.period_stats(&current, column)?);
+                    current.clear();
+                    filled = 0;
+                }
+            }
+        }
+        if filled > 0 {
+            seg_stats.push(self.period_stats(&current, column)?);
+        }
+
+        let mean_drift = seg_stats
+            .iter()
+            .map(|s| (s.mean - overall.mean).abs())
+            .fold(0.0f64, f64::max)
+            / overall.std.max(f64::EPSILON);
+        let stds: Vec<f64> = seg_stats.iter().map(|s| s.std.max(f64::EPSILON)).collect();
+        let variance_ratio = stds.iter().cloned().fold(0.0f64, f64::max)
+            / stds.iter().cloned().fold(f64::INFINITY, f64::min);
+
+        Ok(StationarityReport { segments: seg_stats, overall, mean_drift, variance_ratio })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ContextConfig;
+    use crate::datagen::ClimateGen;
+    use crate::engine::OsebaContext;
+    use crate::runtime::NativeBackend;
+    use crate::storage::{BatchBuilder, Schema};
+    use std::sync::Arc;
+
+    fn analyzer() -> Analyzer {
+        Analyzer::new(Arc::new(NativeBackend))
+    }
+
+    fn ds_from(xs: &[f32]) -> (OsebaContext, crate::engine::Dataset) {
+        let ctx = OsebaContext::new(ContextConfig { num_workers: 2, memory_budget: None });
+        let mut b = BatchBuilder::new(Schema::stock());
+        for (i, &x) in xs.iter().enumerate() {
+            b.push(i as i64, &[x, 0.0]);
+        }
+        let ds = ctx.load(b.finish().unwrap(), 3).unwrap();
+        (ctx, ds)
+    }
+
+    #[test]
+    fn centered_ma_requires_odd_window() {
+        let (_ctx, ds) = ds_from(&[1.0; 100]);
+        let an = analyzer();
+        let views = Analyzer::full_views(&ds);
+        assert!(an.centered_moving_average(&views, 0, 4).is_err());
+        let got = an.centered_moving_average(&views, 0, 5).unwrap();
+        assert_eq!(got.len(), 96);
+        assert!(got.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn centered_ma_of_ramp_is_center_value() {
+        let xs: Vec<f32> = (0..200).map(|i| i as f32).collect();
+        let (_ctx, ds) = ds_from(&xs);
+        let an = analyzer();
+        let views = Analyzer::full_views(&ds);
+        let w = 7;
+        let got = an.centered_moving_average(&views, 0, w).unwrap();
+        // Centered MA of a linear ramp equals the centre sample: index 0
+        // corresponds to selected row (w-1)/2 = 3 → value 3.0.
+        for (k, &v) in got.iter().enumerate().take(20) {
+            let want = (k + (w - 1) / 2) as f32;
+            assert!((v - want).abs() < 1e-3, "k={k} got={v} want={want}");
+        }
+    }
+
+    #[test]
+    fn stationary_series_passes() {
+        let gen = ClimateGen { seasonal_amp: 0.0, diurnal_amp: 0.0, ..Default::default() };
+        let ctx = OsebaContext::new(ContextConfig { num_workers: 2, memory_budget: None });
+        let ds = ctx.load(gen.generate(20_000), 5).unwrap();
+        let an = analyzer();
+        let views = Analyzer::full_views(&ds);
+        let rep = an.stationarity(&views, 0, 8).unwrap();
+        assert_eq!(rep.segments.len(), 8);
+        assert!(rep.is_stationary(), "drift={} ratio={}", rep.mean_drift, rep.variance_ratio);
+    }
+
+    #[test]
+    fn trending_series_fails_stationarity() {
+        // Strong linear trend: mean drifts far beyond one σ per segment.
+        let xs: Vec<f32> = (0..10_000).map(|i| i as f32 * 0.1).collect();
+        let (_ctx, ds) = ds_from(&xs);
+        let an = analyzer();
+        let views = Analyzer::full_views(&ds);
+        let rep = an.stationarity(&views, 0, 5).unwrap();
+        assert!(rep.mean_drift > 1.0);
+        assert!(!rep.is_stationary());
+    }
+
+    #[test]
+    fn heteroscedastic_series_fails_variance_check() {
+        // First half ~N(0, 0.01), second half ~N(0, 10).
+        let mut rng = crate::util::rng::Xoshiro256::seeded(3);
+        let xs: Vec<f32> = (0..10_000)
+            .map(|i| {
+                let s = if i < 5_000 { 0.01 } else { 10.0 };
+                rng.normal_with(0.0, s) as f32
+            })
+            .collect();
+        let (_ctx, ds) = ds_from(&xs);
+        let rep = analyzer().stationarity(&Analyzer::full_views(&ds), 0, 4).unwrap();
+        assert!(rep.variance_ratio > 4.0);
+        assert!(!rep.is_stationary());
+    }
+
+    #[test]
+    fn segment_counts_cover_selection() {
+        let (_ctx, ds) = ds_from(&vec![1.0; 1003]);
+        let rep = analyzer().stationarity(&Analyzer::full_views(&ds), 0, 4).unwrap();
+        let total: u64 = rep.segments.iter().map(|s| s.count).sum();
+        assert_eq!(total, 1003);
+        assert_eq!(rep.overall.count, 1003);
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        let (_ctx, ds) = ds_from(&[1.0; 10]);
+        let an = analyzer();
+        let views = Analyzer::full_views(&ds);
+        assert!(an.stationarity(&views, 0, 1).is_err());
+        assert!(an.stationarity(&views, 0, 11).is_err());
+    }
+}

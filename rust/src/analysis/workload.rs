@@ -1,0 +1,109 @@
+//! Workload definitions: the paper's five-period interactive analysis
+//! (Fig 5) and randomized period workloads for the scaling/ablation
+//! benches.
+
+use crate::error::{OsebaError, Result};
+use crate::index::RangeQuery;
+use crate::util::rng::Xoshiro256;
+
+/// One selective period, as a fraction of the dataset's key span.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PeriodSpec {
+    /// Start, as a fraction of the key span in `[0, 1)`.
+    pub start_frac: f64,
+    /// End fraction in `(start_frac, 1]`.
+    pub end_frac: f64,
+}
+
+impl PeriodSpec {
+    /// Resolve against a concrete key span.
+    pub fn resolve(&self, key_min: i64, key_max: i64) -> Result<RangeQuery> {
+        if key_max < key_min {
+            return Err(OsebaError::InvalidRange("empty dataset".into()));
+        }
+        let span = (key_max - key_min) as f64;
+        let lo = key_min + (span * self.start_frac).round() as i64;
+        let hi = key_min + (span * self.end_frac).round() as i64;
+        RangeQuery::new(lo, hi)
+    }
+}
+
+/// The Fig 5 workload: five disjoint periods of varying width spread over
+/// the series (eyeballed from the paper's figure; the widths grow toward
+/// the middle and shrink again, covering ~45% of the data in total).
+pub fn five_periods() -> Vec<PeriodSpec> {
+    vec![
+        PeriodSpec { start_frac: 0.05, end_frac: 0.13 },
+        PeriodSpec { start_frac: 0.20, end_frac: 0.30 },
+        PeriodSpec { start_frac: 0.38, end_frac: 0.50 },
+        PeriodSpec { start_frac: 0.60, end_frac: 0.70 },
+        PeriodSpec { start_frac: 0.82, end_frac: 0.90 },
+    ]
+}
+
+/// Randomized disjoint periods for sweeps: `n` periods, each covering
+/// `width_frac` of the span, uniformly placed without overlap.
+pub fn random_periods(n: usize, width_frac: f64, seed: u64) -> Vec<PeriodSpec> {
+    assert!(n as f64 * width_frac <= 1.0, "periods would overlap");
+    let mut rng = Xoshiro256::seeded(seed);
+    // Distribute the leftover space as random gaps between periods.
+    let slack = 1.0 - n as f64 * width_frac;
+    let mut cuts: Vec<f64> = (0..=n).map(|_| rng.next_f64()).collect();
+    let total: f64 = cuts.iter().sum();
+    for c in &mut cuts {
+        *c = *c / total * slack;
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut pos = 0.0;
+    for &gap in cuts.iter().take(n) {
+        pos += gap;
+        out.push(PeriodSpec { start_frac: pos, end_frac: pos + width_frac });
+        pos += width_frac;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_periods_disjoint_and_ordered() {
+        let ps = five_periods();
+        assert_eq!(ps.len(), 5);
+        for w in ps.windows(2) {
+            assert!(w[0].end_frac < w[1].start_frac);
+        }
+        let cover: f64 = ps.iter().map(|p| p.end_frac - p.start_frac).sum();
+        assert!((0.3..0.6).contains(&cover), "cover={cover}");
+    }
+
+    #[test]
+    fn resolve_maps_fractions_to_keys() {
+        let p = PeriodSpec { start_frac: 0.25, end_frac: 0.75 };
+        let q = p.resolve(0, 1000).unwrap();
+        assert_eq!(q, RangeQuery { lo: 250, hi: 750 });
+        let q = p.resolve(1000, 1000).unwrap(); // single-key span
+        assert_eq!(q, RangeQuery { lo: 1000, hi: 1000 });
+    }
+
+    #[test]
+    fn random_periods_disjoint() {
+        for seed in [1u64, 7, 42] {
+            let ps = random_periods(8, 0.05, seed);
+            assert_eq!(ps.len(), 8);
+            for p in &ps {
+                assert!((p.end_frac - p.start_frac - 0.05).abs() < 1e-9);
+                assert!(p.start_frac >= 0.0 && p.end_frac <= 1.0 + 1e-9);
+            }
+            for w in ps.windows(2) {
+                assert!(w[0].end_frac <= w[1].start_frac + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn random_periods_deterministic() {
+        assert_eq!(random_periods(3, 0.1, 5), random_periods(3, 0.1, 5));
+    }
+}

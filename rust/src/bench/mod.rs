@@ -1,0 +1,112 @@
+//! Benchmark harness (criterion is not in the vendored set): warmup +
+//! timed iterations with robust summary statistics and aligned table
+//! output. Used by every target in `rust/benches/`.
+
+use std::time::Instant;
+
+use crate::util::humansize;
+use crate::util::stats::Summary;
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 2, iters: 10 }
+    }
+}
+
+impl BenchConfig {
+    /// Honour `OSEBA_BENCH_ITERS` / `OSEBA_BENCH_WARMUP` env overrides
+    /// (handy for quick smoke runs of `cargo bench`).
+    pub fn from_env() -> BenchConfig {
+        let mut c = BenchConfig::default();
+        if let Ok(v) = std::env::var("OSEBA_BENCH_ITERS") {
+            if let Ok(n) = v.parse() {
+                c.iters = n;
+            }
+        }
+        if let Ok(v) = std::env::var("OSEBA_BENCH_WARMUP") {
+            if let Ok(n) = v.parse() {
+                c.warmup_iters = n;
+            }
+        }
+        c
+    }
+}
+
+/// One benchmark's timing result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+/// Time `f` under the config; `f` is called once per iteration.
+pub fn bench<F: FnMut()>(cfg: &BenchConfig, name: &str, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), summary: Summary::of(&samples).unwrap() }
+}
+
+/// Render results as an aligned table.
+pub fn table(results: &[BenchResult]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10} {:>6}\n",
+        "benchmark", "mean", "p50", "p95", "max", "n"
+    ));
+    for r in results {
+        out.push_str(&format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10} {:>6}\n",
+            r.name,
+            humansize::secs(r.summary.mean),
+            humansize::secs(r.summary.p50),
+            humansize::secs(r.summary.p95),
+            humansize::secs(r.summary.max),
+            r.summary.n,
+        ));
+    }
+    out
+}
+
+/// Print a labelled section header (bench binaries' stdout structure).
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0;
+        let cfg = BenchConfig { warmup_iters: 2, iters: 5 };
+        let r = bench(&cfg, "noop", || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(r.summary.n, 5);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let cfg = BenchConfig { warmup_iters: 0, iters: 3 };
+        let rs = vec![bench(&cfg, "a", || {}), bench(&cfg, "b", || {})];
+        let t = table(&rs);
+        assert!(t.contains("a"));
+        assert!(t.contains("b"));
+        assert_eq!(t.lines().count(), 3);
+    }
+}

@@ -1,0 +1,225 @@
+//! Minimal subcommand/flag argument parser (clap is not in the vendored
+//! set). Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+use crate::error::{OsebaError, Result};
+
+/// A declared flag.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Boolean flags take no value.
+    pub boolean: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A declared subcommand.
+#[derive(Clone, Debug)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+/// Parsed invocation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Parsed {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true"))
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| OsebaError::Config(format!("invalid value for --{name}: '{v}'"))),
+        }
+    }
+}
+
+/// The CLI definition.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Cli {
+        Cli { program, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, name: &'static str, help: &'static str, flags: Vec<FlagSpec>) -> Cli {
+        self.commands.push(CommandSpec { name, help, flags });
+        self
+    }
+
+    /// Parse argv (without the program name).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed> {
+        let cmd_name = args
+            .first()
+            .ok_or_else(|| OsebaError::Config(format!("missing command\n\n{}", self.usage())))?;
+        if cmd_name == "help" || cmd_name == "--help" || cmd_name == "-h" {
+            return Err(OsebaError::Config(self.usage()));
+        }
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| {
+                OsebaError::Config(format!("unknown command '{cmd_name}'\n\n{}", self.usage()))
+            })?;
+
+        let mut flags = BTreeMap::new();
+        for f in &spec.flags {
+            if let Some(d) = f.default {
+                flags.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut positionals = Vec::new();
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(raw) = a.strip_prefix("--") {
+                let (name, inline) = match raw.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (raw, None),
+                };
+                let f = spec.flags.iter().find(|f| f.name == name).ok_or_else(|| {
+                    OsebaError::Config(format!(
+                        "unknown flag --{name} for '{cmd_name}'\n\n{}",
+                        self.command_usage(spec)
+                    ))
+                })?;
+                let value = if f.boolean {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else {
+                    match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| {
+                                    OsebaError::Config(format!("--{name} needs a value"))
+                                })?
+                        }
+                    }
+                };
+                flags.insert(name.to_string(), value);
+            } else {
+                positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Parsed { command: cmd_name.clone(), flags, positionals })
+    }
+
+    /// Full usage text.
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {} <command> [flags]\n\nCOMMANDS:\n",
+            self.program, self.about, self.program);
+        for c in &self.commands {
+            out.push_str(&format!("  {:<14} {}\n", c.name, c.help));
+        }
+        out.push_str(&format!("\nRun '{} <command> --help' semantics via 'help'.\n", self.program));
+        out
+    }
+
+    fn command_usage(&self, spec: &CommandSpec) -> String {
+        let mut out = format!("{} {} — {}\n\nFLAGS:\n", self.program, spec.name, spec.help);
+        for f in &spec.flags {
+            let d = f.default.map(|d| format!(" (default: {d})")).unwrap_or_default();
+            out.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, d));
+        }
+        out
+    }
+}
+
+/// Convenience flag constructors.
+pub fn flag(name: &'static str, help: &'static str, default: Option<&'static str>) -> FlagSpec {
+    FlagSpec { name, help, boolean: false, default }
+}
+
+pub fn bool_flag(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, help, boolean: true, default: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("oseba", "test").command(
+            "run",
+            "run things",
+            vec![
+                flag("size", "dataset size", Some("100")),
+                flag("backend", "backend", None),
+                bool_flag("verbose", "log more"),
+            ],
+        )
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_defaults() {
+        let p = cli().parse(&argv(&["run", "--backend", "native", "--verbose"])).unwrap();
+        assert_eq!(p.command, "run");
+        assert_eq!(p.get("size"), Some("100")); // default
+        assert_eq!(p.get("backend"), Some("native"));
+        assert!(p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form_and_positionals() {
+        let p = cli().parse(&argv(&["run", "--size=42", "input.dat"])).unwrap();
+        assert_eq!(p.get("size"), Some("42"));
+        assert_eq!(p.positionals, vec!["input.dat"]);
+        assert_eq!(p.get_parse::<usize>("size").unwrap(), Some(42));
+    }
+
+    #[test]
+    fn rejects_unknown_command_and_flag() {
+        assert!(cli().parse(&argv(&["nope"])).is_err());
+        assert!(cli().parse(&argv(&["run", "--bogus", "1"])).is_err());
+        assert!(cli().parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(cli().parse(&argv(&["run", "--backend"])).is_err());
+    }
+
+    #[test]
+    fn invalid_typed_value_is_error() {
+        let p = cli().parse(&argv(&["run", "--size", "abc"])).unwrap();
+        assert!(p.get_parse::<usize>("size").is_err());
+    }
+
+    #[test]
+    fn usage_lists_commands() {
+        let u = cli().usage();
+        assert!(u.contains("run"));
+        assert!(u.contains("oseba"));
+    }
+}

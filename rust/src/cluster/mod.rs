@@ -1,0 +1,218 @@
+//! Simulated cluster: worker registry, partition placement, a network cost
+//! model, and failure injection.
+//!
+//! The paper ran on Marmot (128 nodes, GbE, Spark 1.0.2); here workers are
+//! logical nodes whose tasks execute on the engine's thread pool
+//! (DESIGN.md §2's substitution). What is preserved: per-worker task
+//! routing (a partition's task runs "where the partition lives"),
+//! per-dispatch network latency, and the failure/reassignment behaviour a
+//! driver must implement.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::error::{OsebaError, Result};
+use crate::index::PartitionSlice;
+
+/// Network cost model applied per dispatched message.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetworkModel {
+    /// One-way message latency in microseconds (0 disables sleeping).
+    pub latency_us: u64,
+}
+
+impl NetworkModel {
+    /// Pay the cost of one control message.
+    pub fn message(&self) {
+        if self.latency_us > 0 {
+            std::thread::sleep(Duration::from_micros(self.latency_us));
+        }
+    }
+}
+
+/// Cluster state: placement + liveness.
+#[derive(Debug)]
+pub struct Cluster {
+    num_workers: usize,
+    /// partition id → worker id.
+    placement: Mutex<Vec<usize>>,
+    alive: Vec<AtomicBool>,
+    pub net: NetworkModel,
+}
+
+impl Cluster {
+    /// Round-robin placement of `num_partitions` over `num_workers`.
+    pub fn new(num_workers: usize, num_partitions: usize, net: NetworkModel) -> Result<Cluster> {
+        if num_workers == 0 {
+            return Err(OsebaError::Cluster("need at least one worker".into()));
+        }
+        Ok(Cluster {
+            num_workers,
+            placement: Mutex::new((0..num_partitions).map(|p| p % num_workers).collect()),
+            alive: (0..num_workers).map(|_| AtomicBool::new(true)).collect(),
+            net,
+        })
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.num_workers
+    }
+
+    pub fn num_alive(&self) -> usize {
+        self.alive.iter().filter(|a| a.load(Ordering::SeqCst)).count()
+    }
+
+    pub fn is_alive(&self, w: usize) -> bool {
+        self.alive.get(w).is_some_and(|a| a.load(Ordering::SeqCst))
+    }
+
+    /// Worker owning a partition.
+    pub fn owner(&self, partition: usize) -> Result<usize> {
+        self.placement
+            .lock()
+            .unwrap()
+            .get(partition)
+            .copied()
+            .ok_or_else(|| OsebaError::Cluster(format!("unknown partition {partition}")))
+    }
+
+    /// Kill a worker: its partitions are reassigned round-robin over the
+    /// survivors. Fails if it is the last one standing.
+    pub fn kill_worker(&self, w: usize) -> Result<usize> {
+        if w >= self.num_workers || !self.is_alive(w) {
+            return Err(OsebaError::Cluster(format!("worker {w} not alive")));
+        }
+        if self.num_alive() <= 1 {
+            return Err(OsebaError::Cluster("cannot kill the last worker".into()));
+        }
+        self.alive[w].store(false, Ordering::SeqCst);
+        let survivors: Vec<usize> =
+            (0..self.num_workers).filter(|&i| self.is_alive(i)).collect();
+        let mut placement = self.placement.lock().unwrap();
+        let mut moved = 0usize;
+        for slot in placement.iter_mut().filter(|s| **s == w) {
+            *slot = survivors[moved % survivors.len()];
+            moved += 1;
+        }
+        Ok(moved)
+    }
+
+    /// Extend the placement map to cover at least `n` partitions (derived
+    /// datasets create fresh partition ids). New partitions go round-robin
+    /// over *live* workers.
+    pub fn ensure_partitions(&self, n: usize) {
+        let mut placement = self.placement.lock().unwrap();
+        if placement.len() >= n {
+            return;
+        }
+        let live: Vec<usize> = (0..self.num_workers).filter(|&i| self.is_alive(i)).collect();
+        let mut i = placement.len();
+        while placement.len() < n {
+            placement.push(live[i % live.len()]);
+            i += 1;
+        }
+    }
+
+    /// Revive a worker (it owns nothing until new placements/loads).
+    pub fn revive_worker(&self, w: usize) -> Result<()> {
+        if w >= self.num_workers {
+            return Err(OsebaError::Cluster(format!("unknown worker {w}")));
+        }
+        self.alive[w].store(true, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Route slices to their owning workers: returns `(worker, slices)`
+    /// groups, workers in ascending order, slice order preserved.
+    pub fn route(&self, slices: &[PartitionSlice]) -> Result<Vec<(usize, Vec<PartitionSlice>)>> {
+        let placement = self.placement.lock().unwrap();
+        let mut groups: Vec<Vec<PartitionSlice>> = vec![Vec::new(); self.num_workers];
+        for s in slices {
+            let w = *placement
+                .get(s.partition)
+                .ok_or_else(|| OsebaError::Cluster(format!("unknown partition {}", s.partition)))?;
+            groups[w].push(*s);
+        }
+        Ok(groups
+            .into_iter()
+            .enumerate()
+            .filter(|(_, g)| !g.is_empty())
+            .collect())
+    }
+
+    /// Placement snapshot (tests / inspection).
+    pub fn placement(&self) -> Vec<usize> {
+        self.placement.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slices(parts: &[usize]) -> Vec<PartitionSlice> {
+        parts
+            .iter()
+            .map(|&p| PartitionSlice { partition: p, row_start: 0, row_end: 1 })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_placement() {
+        let c = Cluster::new(3, 7, NetworkModel::default()).unwrap();
+        assert_eq!(c.placement(), vec![0, 1, 2, 0, 1, 2, 0]);
+        assert_eq!(c.owner(4).unwrap(), 1);
+        assert!(c.owner(99).is_err());
+    }
+
+    #[test]
+    fn route_groups_by_owner() {
+        let c = Cluster::new(2, 6, NetworkModel::default()).unwrap();
+        let groups = c.route(&slices(&[0, 1, 2, 3, 5])).unwrap();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].0, 0);
+        assert_eq!(groups[0].1.iter().map(|s| s.partition).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(groups[1].1.iter().map(|s| s.partition).collect::<Vec<_>>(), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn route_preserves_every_slice_exactly_once() {
+        let c = Cluster::new(4, 20, NetworkModel::default()).unwrap();
+        let input = slices(&(0..20).collect::<Vec<_>>());
+        let groups = c.route(&input).unwrap();
+        let mut got: Vec<usize> =
+            groups.iter().flat_map(|(_, g)| g.iter().map(|s| s.partition)).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn kill_reassigns_partitions() {
+        let c = Cluster::new(3, 9, NetworkModel::default()).unwrap();
+        let moved = c.kill_worker(1).unwrap();
+        assert_eq!(moved, 3);
+        assert_eq!(c.num_alive(), 2);
+        assert!(c.placement().iter().all(|&w| w != 1));
+        // Routing after failure touches only live workers.
+        let groups = c.route(&slices(&[1, 4, 7])).unwrap();
+        assert!(groups.iter().all(|(w, _)| *w != 1));
+        let total: usize = groups.iter().map(|(_, g)| g.len()).sum();
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn cannot_kill_last_worker_or_dead_worker() {
+        let c = Cluster::new(2, 4, NetworkModel::default()).unwrap();
+        c.kill_worker(0).unwrap();
+        assert!(c.kill_worker(0).is_err());
+        assert!(c.kill_worker(1).is_err());
+        c.revive_worker(0).unwrap();
+        assert_eq!(c.num_alive(), 2);
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        assert!(Cluster::new(0, 4, NetworkModel::default()).is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! Typed configuration for the engine, coordinator and benchmark driver,
+//! plus a small key=value / TOML-subset file parser (no `serde` in the
+//! vendored set) and CLI overrides.
+
+mod parse;
+
+pub use parse::{parse_config_text, ConfigMap};
+
+use crate::error::{OsebaError, Result};
+
+/// Engine-level configuration.
+#[derive(Clone, Debug)]
+pub struct ContextConfig {
+    /// Worker threads for parallel partition scans.
+    pub num_workers: usize,
+    /// Optional storage-memory budget in bytes.
+    pub memory_budget: Option<usize>,
+}
+
+impl Default for ContextConfig {
+    fn default() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        ContextConfig { num_workers: n.min(16), memory_budget: None }
+    }
+}
+
+/// Which analysis backend executes per-block kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT-compiled HLO via the PJRT CPU client (the three-layer path).
+    Hlo,
+    /// Pure-rust reference implementation (no artifacts needed).
+    Native,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = OsebaError;
+
+    fn from_str(s: &str) -> Result<BackendKind> {
+        match s {
+            "hlo" => Ok(BackendKind::Hlo),
+            "native" => Ok(BackendKind::Native),
+            other => Err(OsebaError::Config(format!("unknown backend '{other}'"))),
+        }
+    }
+}
+
+/// Full experiment/driver configuration (CLI + config file).
+#[derive(Clone, Debug)]
+pub struct AppConfig {
+    pub ctx: ContextConfig,
+    /// Raw dataset size in bytes (the paper's ~480 MB default, scaled).
+    pub dataset_bytes: usize,
+    /// Number of partitions to load into (paper: 15).
+    pub num_partitions: usize,
+    /// RNG seed for the generators and workloads.
+    pub seed: u64,
+    /// Analysis backend.
+    pub backend: BackendKind,
+    /// Directory holding `manifest.json` + `*.hlo.txt`.
+    pub artifacts_dir: String,
+    /// Simulated per-task network latency in microseconds (0 = off).
+    pub net_latency_us: u64,
+    /// Number of simulated cluster workers.
+    pub cluster_workers: usize,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            ctx: ContextConfig::default(),
+            dataset_bytes: 480 << 20,
+            num_partitions: 15,
+            seed: 0x05EBA,
+            backend: BackendKind::Hlo,
+            artifacts_dir: "artifacts".into(),
+            net_latency_us: 0,
+            cluster_workers: 4,
+        }
+    }
+}
+
+impl AppConfig {
+    /// Apply `key=value` overrides (from a config file or `--set` flags).
+    pub fn apply(&mut self, map: &ConfigMap) -> Result<()> {
+        for (k, v) in map.iter() {
+            match k.as_str() {
+                "dataset_bytes" => self.dataset_bytes = parse_bytes(v)?,
+                "num_partitions" => self.num_partitions = parse_num(k, v)?,
+                "seed" => self.seed = parse_num(k, v)? as u64,
+                "backend" => self.backend = v.parse()?,
+                "artifacts_dir" => self.artifacts_dir = v.clone(),
+                "net_latency_us" => self.net_latency_us = parse_num(k, v)? as u64,
+                "cluster_workers" => self.cluster_workers = parse_num(k, v)?,
+                "num_workers" => self.ctx.num_workers = parse_num(k, v)?,
+                "memory_budget" => self.ctx.memory_budget = Some(parse_bytes(v)?),
+                other => {
+                    return Err(OsebaError::Config(format!("unknown config key '{other}'")))
+                }
+            }
+        }
+        self.validate()
+    }
+
+    /// Cross-field validation.
+    pub fn validate(&self) -> Result<()> {
+        if self.num_partitions == 0 {
+            return Err(OsebaError::Config("num_partitions must be > 0".into()));
+        }
+        if self.dataset_bytes == 0 {
+            return Err(OsebaError::Config("dataset_bytes must be > 0".into()));
+        }
+        if self.cluster_workers == 0 {
+            return Err(OsebaError::Config("cluster_workers must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+fn parse_num(key: &str, v: &str) -> Result<usize> {
+    v.parse::<usize>()
+        .map_err(|_| OsebaError::Config(format!("invalid number for '{key}': '{v}'")))
+}
+
+/// Parse a byte size with optional `k`/`m`/`g` suffix (binary units).
+pub fn parse_bytes(v: &str) -> Result<usize> {
+    let v = v.trim();
+    let (num, mult) = match v.chars().last() {
+        Some('k') | Some('K') => (&v[..v.len() - 1], 1usize << 10),
+        Some('m') | Some('M') => (&v[..v.len() - 1], 1usize << 20),
+        Some('g') | Some('G') => (&v[..v.len() - 1], 1usize << 30),
+        _ => (v, 1usize),
+    };
+    let n: f64 = num
+        .parse()
+        .map_err(|_| OsebaError::Config(format!("invalid byte size '{v}'")))?;
+    if n < 0.0 {
+        return Err(OsebaError::Config(format!("negative byte size '{v}'")));
+    }
+    Ok((n * mult as f64) as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_bytes_suffixes() {
+        assert_eq!(parse_bytes("1024").unwrap(), 1024);
+        assert_eq!(parse_bytes("4k").unwrap(), 4096);
+        assert_eq!(parse_bytes("480M").unwrap(), 480 << 20);
+        assert_eq!(parse_bytes("1.5g").unwrap(), 3 << 29);
+        assert!(parse_bytes("abc").is_err());
+        assert!(parse_bytes("-1k").is_err());
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut c = AppConfig::default();
+        let map = parse_config_text("num_partitions = 30\nbackend = native\nseed = 7").unwrap();
+        c.apply(&map).unwrap();
+        assert_eq!(c.num_partitions, 30);
+        assert_eq!(c.backend, BackendKind::Native);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = AppConfig::default();
+        let map = parse_config_text("nope = 1").unwrap();
+        assert!(c.apply(&map).is_err());
+    }
+
+    #[test]
+    fn validation_catches_zeroes() {
+        let mut c = AppConfig::default();
+        let map = parse_config_text("num_partitions = 0").unwrap();
+        assert!(c.apply(&map).is_err());
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!("hlo".parse::<BackendKind>().unwrap(), BackendKind::Hlo);
+        assert_eq!("native".parse::<BackendKind>().unwrap(), BackendKind::Native);
+        assert!("gpu".parse::<BackendKind>().is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! `key = value` config-file parser (TOML subset: comments, blank lines,
+//! bare or quoted string values, one `[section]` level flattened to
+//! `section.key`).
+
+use crate::error::{OsebaError, Result};
+
+/// Ordered key→value pairs from a config file.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ConfigMap {
+    entries: Vec<(String, String)>,
+}
+
+impl ConfigMap {
+    pub fn iter(&self) -> impl Iterator<Item = &(String, String)> {
+        self.entries.iter()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    pub fn insert(&mut self, key: impl Into<String>, value: impl Into<String>) {
+        self.entries.push((key.into(), value.into()));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Parse config text. Later duplicate keys override earlier ones (via
+/// `get`); `apply` consumers see them in order.
+pub fn parse_config_text(text: &str) -> Result<ConfigMap> {
+    let mut map = ConfigMap::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| {
+                OsebaError::Config(format!("line {}: unterminated section", lineno + 1))
+            })?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(|| {
+            OsebaError::Config(format!("line {}: expected key = value", lineno + 1))
+        })?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        if key.is_empty() || key.ends_with('.') {
+            return Err(OsebaError::Config(format!("line {}: empty key", lineno + 1)));
+        }
+        map.insert(key, unquote(v.trim()));
+    }
+    Ok(map)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quotes.
+    let mut in_quote = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_quote = !in_quote,
+            '#' if !in_quote => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> String {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basics() {
+        let m = parse_config_text("a = 1\nb = \"two words\" # comment\n\n# full comment\nc=3")
+            .unwrap();
+        assert_eq!(m.get("a"), Some("1"));
+        assert_eq!(m.get("b"), Some("two words"));
+        assert_eq!(m.get("c"), Some("3"));
+        assert_eq!(m.len(), 3);
+    }
+
+    #[test]
+    fn sections_flatten() {
+        let m = parse_config_text("[cluster]\nworkers = 8\n[bench]\niters = 3").unwrap();
+        assert_eq!(m.get("cluster.workers"), Some("8"));
+        assert_eq!(m.get("bench.iters"), Some("3"));
+    }
+
+    #[test]
+    fn later_duplicates_win() {
+        let m = parse_config_text("a = 1\na = 2").unwrap();
+        assert_eq!(m.get("a"), Some("2"));
+    }
+
+    #[test]
+    fn hash_inside_quotes_kept() {
+        let m = parse_config_text("path = \"/tmp/#x\"").unwrap();
+        assert_eq!(m.get("path"), Some("/tmp/#x"));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let e = parse_config_text("ok = 1\nbroken").unwrap_err();
+        assert!(e.to_string().contains("line 2"));
+        let e = parse_config_text("[open").unwrap_err();
+        assert!(e.to_string().contains("line 1"));
+    }
+}

@@ -1,0 +1,296 @@
+//! The leader: query planning, task routing/batching over the simulated
+//! cluster, partial merging, and the interactive-session driver that
+//! produces the paper's Fig 4 / Fig 6 measurements.
+
+pub mod planner;
+pub mod session;
+
+pub use planner::{IndexKind, Method};
+pub use session::{run_session, SessionReport};
+
+use std::sync::Arc;
+
+use crate::analysis::ops::slice_moments;
+use crate::analysis::{Analyzer, PeriodStats};
+use crate::cluster::{Cluster, NetworkModel};
+use crate::config::AppConfig;
+use crate::engine::{Dataset, OsebaContext};
+use crate::error::{OsebaError, Result};
+use crate::index::{Cias, ContentIndex, RangeQuery, TableIndex};
+use crate::runtime::backend::AnalysisBackend;
+use crate::storage::RecordBatch;
+use crate::util::stats::Moments;
+
+/// The driver/leader of the system.
+pub struct Coordinator {
+    ctx: OsebaContext,
+    analyzer: Analyzer,
+    backend: Arc<dyn AnalysisBackend>,
+    cluster: Cluster,
+    /// Batch all of a worker's kernel blocks into one backend submission.
+    pub batch_kernel_calls: bool,
+}
+
+impl Coordinator {
+    /// Build from config + an already-constructed backend.
+    pub fn new(cfg: &AppConfig, backend: Arc<dyn AnalysisBackend>) -> Result<Coordinator> {
+        let ctx = OsebaContext::new(cfg.ctx.clone());
+        let cluster = Cluster::new(
+            cfg.cluster_workers,
+            0,
+            NetworkModel { latency_us: cfg.net_latency_us },
+        )?;
+        Ok(Coordinator {
+            ctx,
+            analyzer: Analyzer::new(Arc::clone(&backend)),
+            backend,
+            cluster,
+            batch_kernel_calls: true,
+        })
+    }
+
+    pub fn context(&self) -> &OsebaContext {
+        &self.ctx
+    }
+
+    pub fn analyzer(&self) -> &Analyzer {
+        &self.analyzer
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// Load a batch as a cached dataset and register its partitions with
+    /// the cluster placement.
+    pub fn load(&self, batch: RecordBatch, num_partitions: usize) -> Result<Dataset> {
+        let ds = self.ctx.load(batch, num_partitions)?;
+        self.cluster.ensure_partitions(ds.num_partitions());
+        Ok(ds)
+    }
+
+    /// Build the configured index over a dataset.
+    pub fn build_index(&self, ds: &Dataset, kind: IndexKind) -> Result<Box<dyn ContentIndex>> {
+        Ok(match kind {
+            IndexKind::Table => Box::new(TableIndex::build(ds.partitions())?),
+            IndexKind::Cias => Box::new(Cias::build(ds.partitions())?),
+        })
+    }
+
+    /// **Baseline phase** (paper §IV-A "first method"): filter-scan all
+    /// partitions, materialize + cache the selection, then analyze the
+    /// filtered dataset. Returns the stats *and* the filtered dataset
+    /// handle — which stays resident, exactly like Spark's default.
+    pub fn analyze_period_default(
+        &self,
+        ds: &Dataset,
+        q: RangeQuery,
+        column: usize,
+    ) -> Result<(PeriodStats, Dataset)> {
+        let filtered = self.ctx.filter_range(ds, q)?;
+        self.cluster.ensure_partitions(filtered.num_partitions());
+        if filtered.total_rows() == 0 {
+            return Err(OsebaError::InvalidRange(format!(
+                "no rows in [{}, {}]",
+                q.lo, q.hi
+            )));
+        }
+        // Analyze every row of the filtered dataset, routed per worker.
+        let slices: Vec<_> = filtered
+            .partitions()
+            .iter()
+            .filter(|p| p.rows > 0)
+            .map(|p| crate::index::PartitionSlice { partition: p.id, row_start: 0, row_end: p.rows })
+            .collect();
+        let owned: Vec<_> = slices
+            .iter()
+            .map(|s| (Arc::clone(&filtered.partitions()[s.partition]), *s))
+            .collect();
+        let stats = self.run_stats_tasks(owned, column)?;
+        Ok((stats, filtered))
+    }
+
+    /// **Oseba phase** (paper §IV-A "second method"): index lookup targets
+    /// the partitions + row ranges; per-worker tasks compute moments over
+    /// zero-copy views of the *original* partitions; the leader merges.
+    pub fn analyze_period_oseba(
+        &self,
+        ds: &Dataset,
+        index: &dyn ContentIndex,
+        q: RangeQuery,
+        column: usize,
+    ) -> Result<PeriodStats> {
+        let slices = index.lookup(q);
+        if slices.is_empty() {
+            return Err(OsebaError::InvalidRange(format!(
+                "no partitions intersect [{}, {}]",
+                q.lo, q.hi
+            )));
+        }
+        let owned = self.ctx.resolve_slices(ds, &slices, q);
+        self.run_stats_tasks(owned, column)
+    }
+
+    /// Route owned slice tasks to workers, execute, merge, finalize.
+    fn run_stats_tasks(
+        &self,
+        owned: Vec<(Arc<crate::storage::Partition>, crate::index::PartitionSlice)>,
+        column: usize,
+    ) -> Result<PeriodStats> {
+        let by_slice: std::collections::HashMap<usize, Arc<crate::storage::Partition>> =
+            owned.iter().map(|(p, s)| (s.partition, Arc::clone(p))).collect();
+        let groups = self
+            .cluster
+            .route(&owned.iter().map(|(_, s)| *s).collect::<Vec<_>>())?;
+
+        let batch = self.batch_kernel_calls;
+        let net = self.cluster.net;
+        let tasks: Vec<_> = groups
+            .into_iter()
+            .map(|(_w, slices)| {
+                let backend = Arc::clone(&self.backend);
+                let parts: Vec<_> = slices
+                    .iter()
+                    .map(|s| (Arc::clone(&by_slice[&s.partition]), *s))
+                    .collect();
+                move || -> Result<Moments> {
+                    net.message(); // task dispatch to this worker
+                    let mut m = Moments::EMPTY;
+                    for (part, s) in &parts {
+                        m = m.merge(slice_moments(
+                            backend.as_ref(),
+                            part,
+                            s.row_start,
+                            s.row_end,
+                            column,
+                            batch,
+                        )?);
+                    }
+                    net.message(); // result return
+                    Ok(m)
+                }
+            })
+            .collect();
+
+        let partials = self.ctx.pool().scope_execute(tasks);
+        let mut merged = Moments::EMPTY;
+        for p in partials {
+            merged = merged.merge(p?);
+        }
+        PeriodStats::from_moments(merged)
+            .ok_or_else(|| OsebaError::InvalidRange("empty selection".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AppConfig, ContextConfig};
+    use crate::datagen::ClimateGen;
+    use crate::runtime::NativeBackend;
+
+    fn coord(workers: usize) -> Coordinator {
+        let cfg = AppConfig {
+            ctx: ContextConfig { num_workers: 4, memory_budget: None },
+            cluster_workers: workers,
+            ..Default::default()
+        };
+        Coordinator::new(&cfg, Arc::new(NativeBackend)).unwrap()
+    }
+
+    fn q_hours(lo: i64, hi: i64) -> RangeQuery {
+        RangeQuery { lo: lo * 3600, hi: hi * 3600 }
+    }
+
+    #[test]
+    fn default_and_oseba_agree_exactly() {
+        let c = coord(3);
+        let ds = c.load(ClimateGen::default().generate(30_000), 15).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        for (lo, hi) in [(0, 100), (5_000, 12_000), (29_000, 29_999), (100, 25_000)] {
+            let q = q_hours(lo, hi);
+            let (d, filtered) = c.analyze_period_default(&ds, q, 0).unwrap();
+            let o = c.analyze_period_oseba(&ds, index.as_ref(), q, 0).unwrap();
+            assert_eq!(d.count, o.count, "q={q:?}");
+            assert_eq!(d.max, o.max);
+            assert_eq!(d.min, o.min);
+            assert!((d.mean - o.mean).abs() < 1e-6);
+            assert!((d.std - o.std).abs() < 1e-6);
+            c.context().unpersist(&filtered);
+        }
+    }
+
+    #[test]
+    fn oseba_touches_fewer_partitions() {
+        let c = coord(2);
+        let ds = c.load(ClimateGen::default().generate(30_000), 15).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        let before = c.context().counters();
+        let q = q_hours(0, 1_000); // first partition only
+        c.analyze_period_oseba(&ds, index.as_ref(), q, 0).unwrap();
+        let after = c.context().counters();
+        assert_eq!(after.partitions_scanned, before.partitions_scanned);
+        assert_eq!(after.partitions_targeted - before.partitions_targeted, 1);
+    }
+
+    #[test]
+    fn default_grows_memory_oseba_does_not() {
+        let c = coord(2);
+        let ds = c.load(ClimateGen::default().generate(20_000), 10).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        let base = c.context().memory_used();
+        let q = q_hours(2_000, 9_000);
+        c.analyze_period_oseba(&ds, index.as_ref(), q, 0).unwrap();
+        assert_eq!(c.context().memory_used(), base);
+        let (_, _filtered) = c.analyze_period_default(&ds, q, 0).unwrap();
+        assert!(c.context().memory_used() > base);
+    }
+
+    #[test]
+    fn survives_worker_failure() {
+        let c = coord(4);
+        let ds = c.load(ClimateGen::default().generate(20_000), 12).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        let q = q_hours(1_000, 15_000);
+        let before = c.analyze_period_oseba(&ds, index.as_ref(), q, 0).unwrap();
+        c.cluster().kill_worker(2).unwrap();
+        let after = c.analyze_period_oseba(&ds, index.as_ref(), q, 0).unwrap();
+        assert_eq!(before.count, after.count);
+        assert_eq!(before.max, after.max);
+        assert!((before.mean - after.mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_and_cias_agree_via_coordinator() {
+        let c = coord(3);
+        let ds = c.load(ClimateGen::default().generate(25_000), 9).unwrap();
+        let t = c.build_index(&ds, IndexKind::Table).unwrap();
+        let s = c.build_index(&ds, IndexKind::Cias).unwrap();
+        let q = q_hours(3_000, 17_000);
+        let a = c.analyze_period_oseba(&ds, t.as_ref(), q, 2).unwrap();
+        let b = c.analyze_period_oseba(&ds, s.as_ref(), q, 2).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn miss_query_errors() {
+        let c = coord(2);
+        let ds = c.load(ClimateGen::default().generate(1_000), 4).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        let q = RangeQuery { lo: i64::MAX - 5, hi: i64::MAX };
+        assert!(c.analyze_period_oseba(&ds, index.as_ref(), q, 0).is_err());
+        assert!(c.analyze_period_default(&ds, q, 0).is_err());
+    }
+
+    #[test]
+    fn unbatched_matches_batched() {
+        let mut c = coord(2);
+        let ds = c.load(ClimateGen::default().generate(15_000), 6).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        let q = q_hours(500, 11_000);
+        let a = c.analyze_period_oseba(&ds, index.as_ref(), q, 0).unwrap();
+        c.batch_kernel_calls = false;
+        let b = c.analyze_period_oseba(&ds, index.as_ref(), q, 0).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,70 @@
+//! Planner vocabulary: which access method and which index a session uses.
+
+use crate::error::{OsebaError, Result};
+
+/// Index implementation selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexKind {
+    /// §III-A table (O(m) space, O(log m) lookup).
+    Table,
+    /// §III-B compressed index + associated search list.
+    Cias,
+}
+
+impl std::str::FromStr for IndexKind {
+    type Err = OsebaError;
+
+    fn from_str(s: &str) -> Result<IndexKind> {
+        match s {
+            "table" => Ok(IndexKind::Table),
+            "cias" => Ok(IndexKind::Cias),
+            other => Err(OsebaError::Config(format!("unknown index kind '{other}'"))),
+        }
+    }
+}
+
+/// Access-path selector for a session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Spark-style scan-filter-materialize (the paper's baseline).
+    Default,
+    /// Index-targeted zero-copy access (the paper's contribution).
+    Oseba,
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Default => "default",
+            Method::Oseba => "oseba",
+        }
+    }
+}
+
+impl std::str::FromStr for Method {
+    type Err = OsebaError;
+
+    fn from_str(s: &str) -> Result<Method> {
+        match s {
+            "default" => Ok(Method::Default),
+            "oseba" => Ok(Method::Oseba),
+            other => Err(OsebaError::Config(format!("unknown method '{other}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parsing() {
+        assert_eq!("cias".parse::<IndexKind>().unwrap(), IndexKind::Cias);
+        assert_eq!("table".parse::<IndexKind>().unwrap(), IndexKind::Table);
+        assert!("btree".parse::<IndexKind>().is_err());
+        assert_eq!("oseba".parse::<Method>().unwrap(), Method::Oseba);
+        assert_eq!("default".parse::<Method>().unwrap(), Method::Default);
+        assert!("spark".parse::<Method>().is_err());
+        assert_eq!(Method::Oseba.label(), "oseba");
+    }
+}

@@ -1,0 +1,90 @@
+//! Call-detail-record generator for the events-analysis example
+//! (paper §II: "fraud can be detected by comparing the distributions of
+//! typical phone calls and of calls made from a stolen phone").
+//!
+//! Each row is one call aggregated onto a regular per-second key grid:
+//! `duration` (seconds), `dest_prefix` (coarse destination bucket, 0-99),
+//! `hour_of_day` (0-23 as f32). A configurable *fraud window* switches the
+//! behavioural distribution: long international calls at odd hours — the
+//! distribution shift the histogram kernel must expose.
+
+use crate::storage::{BatchBuilder, RecordBatch, Schema};
+use crate::util::rng::Xoshiro256;
+
+/// Configurable CDR generator.
+#[derive(Clone, Debug)]
+pub struct CdrGen {
+    pub seed: u64,
+    pub start_key: i64,
+    /// Key step (seconds) — one aggregated call record per step.
+    pub step_secs: i64,
+    /// Optional fraud window `[lo, hi)` in *row index* space.
+    pub fraud_rows: Option<(usize, usize)>,
+}
+
+impl Default for CdrGen {
+    fn default() -> Self {
+        CdrGen { seed: 0xCD12, start_key: 0, step_secs: 30, fraud_rows: None }
+    }
+}
+
+impl CdrGen {
+    /// Generate `rows` call records.
+    pub fn generate(&self, rows: usize) -> RecordBatch {
+        let mut rng = Xoshiro256::seeded(self.seed);
+        let mut b = BatchBuilder::with_capacity(Schema::cdr(), rows);
+        for i in 0..rows {
+            let key = self.start_key + i as i64 * self.step_secs;
+            let fraud = self.fraud_rows.is_some_and(|(lo, hi)| i >= lo && i < hi);
+            let hour = ((key / 3600) % 24) as f64;
+            let (duration, prefix) = if fraud {
+                // Stolen phone: long calls, international prefixes.
+                (rng.exponential(1.0 / 600.0).min(7200.0), rng.uniform(80.0, 100.0))
+            } else {
+                // Typical usage: short calls, domestic prefixes, day-skewed.
+                let daytime = (6.0..22.0).contains(&hour);
+                let mean = if daytime { 180.0 } else { 60.0 };
+                (rng.exponential(1.0 / mean).min(3600.0), rng.uniform(0.0, 40.0))
+            };
+            b.push(key, &[duration as f32, prefix as f32, hour as f32]);
+        }
+        b.finish().expect("sorted keys by construction")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let g = CdrGen::default();
+        assert_eq!(g.generate(64).columns[0], g.generate(64).columns[0]);
+    }
+
+    #[test]
+    fn fraud_window_shifts_distribution() {
+        let g = CdrGen { fraud_rows: Some((1000, 2000)), ..Default::default() };
+        let rb = g.generate(3000);
+        let dur = rb.column("duration").unwrap();
+        let mean = |s: &[f32]| s.iter().map(|&x| x as f64).sum::<f64>() / s.len() as f64;
+        let normal = mean(&dur[..1000]);
+        let fraud = mean(&dur[1000..2000]);
+        assert!(fraud > 2.0 * normal, "fraud={fraud} normal={normal}");
+        let pre = rb.column("dest_prefix").unwrap();
+        assert!(pre[1000..2000].iter().all(|&p| p >= 80.0));
+        assert!(pre[..1000].iter().all(|&p| p < 40.0));
+    }
+
+    #[test]
+    fn durations_nonnegative_and_capped() {
+        let rb = CdrGen::default().generate(5000);
+        assert!(rb.column("duration").unwrap().iter().all(|&d| (0.0..=3600.0).contains(&d)));
+    }
+
+    #[test]
+    fn hour_of_day_in_range() {
+        let rb = CdrGen::default().generate(5000);
+        assert!(rb.column("hour_of_day").unwrap().iter().all(|&h| (0.0..24.0).contains(&h)));
+    }
+}

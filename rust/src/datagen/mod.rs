@@ -1,0 +1,17 @@
+//! Synthetic dataset generators.
+//!
+//! The paper evaluates on a ~480 MB climate-like time series ("similar data
+//! format to the climate data, e.g, time, temperature, humidity, wind speed
+//! and direction", §IV-A) that we do not have; these generators are the
+//! documented substitution (DESIGN.md §2). Each produces a sorted
+//! [`RecordBatch`] with a *uniform key step* — the regularity CIAS
+//! compresses — plus knobs to inject irregularities for the index's
+//! associated-search-list path.
+
+pub mod cdr;
+pub mod climate;
+pub mod stock;
+
+pub use cdr::CdrGen;
+pub use climate::ClimateGen;
+pub use stock::StockGen;

@@ -1,0 +1,86 @@
+//! Stock-tick generator for the moving-average / distance examples
+//! (paper §II: "a 10-day MA would average out the closing prices of a
+//! stock…", "stock price prediction").
+//!
+//! Prices follow a geometric random walk with mild mean-reversion and
+//! regime-switching volatility; volume is spiky log-normal. Keys are a
+//! regular per-minute grid.
+
+use crate::storage::{BatchBuilder, RecordBatch, Schema};
+use crate::util::rng::Xoshiro256;
+
+/// Configurable stock-tick generator.
+#[derive(Clone, Debug)]
+pub struct StockGen {
+    pub seed: u64,
+    pub start_key: i64,
+    /// Key step (seconds). 60 = per-minute bars.
+    pub step_secs: i64,
+    /// Initial price.
+    pub s0: f64,
+    /// Per-step drift.
+    pub drift: f64,
+    /// Base per-step volatility.
+    pub vol: f64,
+}
+
+impl Default for StockGen {
+    fn default() -> Self {
+        StockGen { seed: 0x570C4, start_key: 0, step_secs: 60, s0: 100.0, drift: 1e-6, vol: 4e-4 }
+    }
+}
+
+impl StockGen {
+    /// Generate `rows` bars.
+    pub fn generate(&self, rows: usize) -> RecordBatch {
+        let mut rng = Xoshiro256::seeded(self.seed);
+        let mut b = BatchBuilder::with_capacity(Schema::stock(), rows);
+        let mut logp = self.s0.ln();
+        let mut vol_regime = 1.0f64;
+        for i in 0..rows {
+            let key = self.start_key + i as i64 * self.step_secs;
+            // Occasional volatility regime switch.
+            if rng.next_f64() < 0.001 {
+                vol_regime = if vol_regime > 1.5 { 1.0 } else { 3.0 };
+            }
+            logp += self.drift + self.vol * vol_regime * rng.normal();
+            // Soft mean reversion keeps long runs bounded.
+            logp += 1e-5 * (self.s0.ln() - logp);
+            let vol_shares = (rng.normal_with(0.0, 1.0).exp() * 1e4).min(1e7);
+            b.push(key, &[logp.exp() as f32, vol_shares as f32]);
+        }
+        b.finish().expect("sorted keys by construction")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let g = StockGen::default();
+        assert_eq!(g.generate(100).columns[0], g.generate(100).columns[0]);
+    }
+
+    #[test]
+    fn prices_positive_and_bounded() {
+        let rb = StockGen::default().generate(50_000);
+        let prices = rb.column("price").unwrap();
+        assert!(prices.iter().all(|&p| p > 0.0));
+        // Mean reversion keeps prices within an order of magnitude of s0.
+        assert!(prices.iter().all(|&p| (10.0..1000.0).contains(&p)));
+    }
+
+    #[test]
+    fn regular_minute_grid() {
+        let rb = StockGen::default().generate(1000);
+        assert!(rb.keys.windows(2).all(|w| w[1] - w[0] == 60));
+    }
+
+    #[test]
+    fn volume_positive() {
+        let rb = StockGen::default().generate(5000);
+        assert!(rb.column("volume").unwrap().iter().all(|&v| v > 0.0));
+    }
+}

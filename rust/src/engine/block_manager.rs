@@ -1,0 +1,137 @@
+//! The block manager: registry of cached (memory-resident) datasets.
+//!
+//! Mirrors Spark's BlockManager at the granularity this reproduction
+//! needs: datasets cache their partitions here, bytes are charged to the
+//! [`MemoryTracker`], and `unpersist` releases them. The Fig 4 "default
+//! method" curve is exactly this registry filling up with filter-RDDs.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::engine::memory::MemoryTracker;
+use crate::error::{OsebaError, Result};
+use crate::storage::Partition;
+
+/// Identifier of a cached dataset.
+pub type DatasetId = u64;
+
+#[derive(Debug)]
+struct CacheEntry {
+    parts: Vec<Arc<Partition>>,
+    bytes: usize,
+}
+
+/// Thread-safe cached-dataset registry with byte accounting.
+#[derive(Debug)]
+pub struct BlockManager {
+    tracker: Arc<MemoryTracker>,
+    cache: Mutex<HashMap<DatasetId, CacheEntry>>,
+}
+
+impl BlockManager {
+    pub fn new(tracker: Arc<MemoryTracker>) -> BlockManager {
+        BlockManager { tracker, cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// Cache a dataset's partitions, charging their bytes.
+    pub fn cache(&self, id: DatasetId, parts: Vec<Arc<Partition>>) -> Result<()> {
+        let bytes: usize = parts.iter().map(|p| p.bytes()).sum();
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(&id) {
+            return Err(OsebaError::Schema(format!("dataset {id} already cached")));
+        }
+        self.tracker.allocate(bytes)?;
+        cache.insert(id, CacheEntry { parts, bytes });
+        Ok(())
+    }
+
+    /// Fetch a cached dataset's partitions.
+    pub fn get(&self, id: DatasetId) -> Option<Vec<Arc<Partition>>> {
+        self.cache.lock().unwrap().get(&id).map(|e| e.parts.clone())
+    }
+
+    /// Evict a dataset, crediting its bytes. Returns whether it was cached.
+    pub fn unpersist(&self, id: DatasetId) -> bool {
+        let entry = self.cache.lock().unwrap().remove(&id);
+        match entry {
+            Some(e) => {
+                self.tracker.release(e.bytes);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Total bytes currently cached.
+    pub fn used_bytes(&self) -> usize {
+        self.tracker.used()
+    }
+
+    /// High-water mark of cached bytes.
+    pub fn peak_bytes(&self) -> usize {
+        self.tracker.peak()
+    }
+
+    /// Number of cached datasets.
+    pub fn num_cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// The shared tracker (for coordinator metrics).
+    pub fn tracker(&self) -> Arc<MemoryTracker> {
+        Arc::clone(&self.tracker)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{BatchBuilder, Schema};
+
+    fn one_part(rows: usize) -> Vec<Arc<Partition>> {
+        let mut b = BatchBuilder::new(Schema::stock());
+        for i in 0..rows {
+            b.push(i as i64, &[0.0, 0.0]);
+        }
+        crate::storage::partition_batch(&b.finish().unwrap(), 1).unwrap()
+    }
+
+    #[test]
+    fn cache_charges_and_unpersist_credits() {
+        let bm = BlockManager::new(MemoryTracker::unbounded());
+        let parts = one_part(100);
+        let bytes: usize = parts.iter().map(|p| p.bytes()).sum();
+        bm.cache(1, parts).unwrap();
+        assert_eq!(bm.used_bytes(), bytes);
+        assert_eq!(bm.num_cached(), 1);
+        assert!(bm.unpersist(1));
+        assert_eq!(bm.used_bytes(), 0);
+        assert!(!bm.unpersist(1));
+    }
+
+    #[test]
+    fn duplicate_cache_rejected() {
+        let bm = BlockManager::new(MemoryTracker::unbounded());
+        bm.cache(7, one_part(10)).unwrap();
+        assert!(bm.cache(7, one_part(10)).is_err());
+    }
+
+    #[test]
+    fn get_returns_same_partitions() {
+        let bm = BlockManager::new(MemoryTracker::unbounded());
+        let parts = one_part(10);
+        bm.cache(3, parts.clone()).unwrap();
+        let got = bm.get(3).unwrap();
+        assert_eq!(got.len(), parts.len());
+        assert!(Arc::ptr_eq(&got[0], &parts[0]));
+        assert!(bm.get(99).is_none());
+    }
+
+    #[test]
+    fn budget_propagates_to_cache() {
+        let bm = BlockManager::new(MemoryTracker::with_budget(10));
+        assert!(bm.cache(1, one_part(100)).is_err());
+        assert_eq!(bm.num_cached(), 0);
+        assert_eq!(bm.used_bytes(), 0);
+    }
+}

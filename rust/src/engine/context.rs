@@ -1,0 +1,461 @@
+//! `OsebaContext` — the driver-side engine context (SparkContext analogue).
+//!
+//! Owns the block manager, the scan thread pool, dataset ids and lineage.
+//! Provides the two competing access paths the paper compares:
+//!
+//! * [`OsebaContext::filter_range`] — the **default/baseline** path: scan
+//!   *every* partition, materialize the selected rows as a new cached
+//!   dataset (compute + memory cost grows per query, Fig 4/6 "without
+//!   Oseba");
+//! * [`OsebaContext::select_slices`] — the **Oseba** path: given index
+//!   lookup results, return zero-copy views into the original partitions
+//!   (no scan of non-target partitions, no materialization).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::ContextConfig;
+use crate::engine::block_manager::{BlockManager, DatasetId};
+use crate::engine::dataset::{Dataset, Lineage, SliceView};
+use crate::engine::memory::MemoryTracker;
+use crate::error::{OsebaError, Result};
+use crate::index::types::{PartitionSlice, RangeQuery};
+use crate::storage::{partition_batch_uniform, Partition, RecordBatch};
+use crate::util::threadpool::ThreadPool;
+
+/// Per-context scan/materialization counters — the computation-cost signal
+/// Fig 6 aggregates.
+#[derive(Debug, Default)]
+pub struct EngineCounters {
+    /// Partitions whose keys were scanned by filter operations.
+    pub partitions_scanned: AtomicUsize,
+    /// Rows examined by filter scans.
+    pub rows_scanned: AtomicUsize,
+    /// Bytes materialized into new (filtered) datasets.
+    pub bytes_materialized: AtomicUsize,
+    /// Partitions touched via the indexed (Oseba) path.
+    pub partitions_targeted: AtomicUsize,
+}
+
+impl EngineCounters {
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            partitions_scanned: self.partitions_scanned.load(Ordering::Relaxed),
+            rows_scanned: self.rows_scanned.load(Ordering::Relaxed),
+            bytes_materialized: self.bytes_materialized.load(Ordering::Relaxed),
+            partitions_targeted: self.partitions_targeted.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`EngineCounters`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub partitions_scanned: usize,
+    pub rows_scanned: usize,
+    pub bytes_materialized: usize,
+    pub partitions_targeted: usize,
+}
+
+/// The engine context.
+pub struct OsebaContext {
+    block_manager: Arc<BlockManager>,
+    pool: ThreadPool,
+    next_id: AtomicU64,
+    lineage: Mutex<Vec<(DatasetId, String, Lineage)>>,
+    counters: EngineCounters,
+}
+
+impl OsebaContext {
+    pub fn new(cfg: ContextConfig) -> OsebaContext {
+        let tracker = match cfg.memory_budget {
+            Some(b) => MemoryTracker::with_budget(b),
+            None => MemoryTracker::unbounded(),
+        };
+        OsebaContext {
+            block_manager: Arc::new(BlockManager::new(tracker)),
+            pool: ThreadPool::new(cfg.num_workers),
+            next_id: AtomicU64::new(1),
+            lineage: Mutex::new(Vec::new()),
+            counters: EngineCounters::default(),
+        }
+    }
+
+    fn fresh_id(&self) -> DatasetId {
+        self.next_id.fetch_add(1, Ordering::SeqCst)
+    }
+
+    fn register(&self, id: DatasetId, name: &str, lineage: &Lineage) {
+        self.lineage.lock().unwrap().push((id, name.to_string(), lineage.clone()));
+    }
+
+    /// Load a batch into memory as a uniformly-partitioned, cached dataset
+    /// (the paper's "load/reside the data into memory" step).
+    pub fn load(&self, batch: RecordBatch, num_partitions: usize) -> Result<Dataset> {
+        if num_partitions == 0 {
+            return Err(OsebaError::Schema("num_partitions must be > 0".into()));
+        }
+        let rows_per = batch.rows().div_ceil(num_partitions);
+        let parts = partition_batch_uniform(&batch, rows_per)?;
+        self.adopt(batch.schema.clone(), parts, Lineage::Source { name: "load".into() })
+    }
+
+    /// Register externally-built partitions as a cached dataset.
+    pub fn adopt(
+        &self,
+        schema: crate::storage::Schema,
+        parts: Vec<Arc<Partition>>,
+        lineage: Lineage,
+    ) -> Result<Dataset> {
+        let id = self.fresh_id();
+        self.block_manager.cache(id, parts.clone())?;
+        let name = match &lineage {
+            Lineage::Source { name } => name.clone(),
+            Lineage::Derived { op, .. } => op.clone(),
+        };
+        self.register(id, &name, &lineage);
+        Ok(Dataset { id, schema, parts, lineage })
+    }
+
+    /// **Baseline path.** Scan all partitions of `ds` and materialize the
+    /// rows with key in `q` as a new cached dataset. Cost: every partition
+    /// is scanned (compute), and the selection is copied + cached (memory)
+    /// — exactly Spark's `filter` + default residency.
+    pub fn filter_range(&self, ds: &Dataset, q: RangeQuery) -> Result<Dataset> {
+        let tasks: Vec<_> = ds
+            .parts
+            .iter()
+            .map(|p| {
+                let p = Arc::clone(p);
+                move || filter_partition(&p, q)
+            })
+            .collect();
+        let filtered = self.pool.scope_execute(tasks);
+
+        let mut scanned_rows = 0usize;
+        let mut new_parts: Vec<Arc<Partition>> = Vec::new();
+        for (keys, cols, rows_examined) in filtered {
+            scanned_rows += rows_examined;
+            if !keys.is_empty() {
+                let id = new_parts.len();
+                new_parts.push(Arc::new(Partition::from_rows(id, keys, cols)));
+            }
+        }
+        self.counters.partitions_scanned.fetch_add(ds.parts.len(), Ordering::Relaxed);
+        self.counters.rows_scanned.fetch_add(scanned_rows, Ordering::Relaxed);
+
+        if new_parts.is_empty() {
+            // Preserve Spark semantics: an empty filter result is still a
+            // dataset (with a single empty partition for schema fidelity).
+            new_parts.push(Arc::new(Partition::from_rows(
+                0,
+                Vec::new(),
+                vec![Vec::new(); ds.schema.width()],
+            )));
+        }
+        let bytes: usize = new_parts.iter().map(|p| p.bytes()).sum();
+        self.counters.bytes_materialized.fetch_add(bytes, Ordering::Relaxed);
+
+        self.adopt(
+            ds.schema.clone(),
+            new_parts,
+            Lineage::Derived { parent: ds.id, op: format!("filter[{}..={}]", q.lo, q.hi) },
+        )
+    }
+
+    /// Generic predicate filter over `(key, row_values)` — the fully
+    /// general Spark baseline (always scans everything; used by tests and
+    /// the events example for non-range predicates).
+    pub fn filter<F>(&self, ds: &Dataset, op_name: &str, pred: F) -> Result<Dataset>
+    where
+        F: Fn(i64, &[f32]) -> bool + Send + Sync + 'static,
+    {
+        let pred = Arc::new(pred);
+        let width = ds.schema.width();
+        let tasks: Vec<_> = ds
+            .parts
+            .iter()
+            .map(|p| {
+                let p = Arc::clone(p);
+                let pred = Arc::clone(&pred);
+                move || {
+                    let mut keys = Vec::new();
+                    let mut cols = vec![Vec::new(); width];
+                    let mut row = vec![0f32; width];
+                    for r in 0..p.rows {
+                        for (c, slot) in row.iter_mut().enumerate() {
+                            *slot = p.columns[c][r];
+                        }
+                        if pred(p.keys[r], &row) {
+                            keys.push(p.keys[r]);
+                            for (c, col) in cols.iter_mut().enumerate() {
+                                col.push(row[c]);
+                            }
+                        }
+                    }
+                    (keys, cols, p.rows)
+                }
+            })
+            .collect();
+        let filtered = self.pool.scope_execute(tasks);
+
+        let mut new_parts: Vec<Arc<Partition>> = Vec::new();
+        let mut scanned = 0usize;
+        for (keys, cols, rows) in filtered {
+            scanned += rows;
+            if !keys.is_empty() {
+                let id = new_parts.len();
+                new_parts.push(Arc::new(Partition::from_rows(id, keys, cols)));
+            }
+        }
+        self.counters.partitions_scanned.fetch_add(ds.parts.len(), Ordering::Relaxed);
+        self.counters.rows_scanned.fetch_add(scanned, Ordering::Relaxed);
+        if new_parts.is_empty() {
+            new_parts.push(Arc::new(Partition::from_rows(
+                0,
+                Vec::new(),
+                vec![Vec::new(); width],
+            )));
+        }
+        let bytes: usize = new_parts.iter().map(|p| p.bytes()).sum();
+        self.counters.bytes_materialized.fetch_add(bytes, Ordering::Relaxed);
+        self.adopt(
+            ds.schema.clone(),
+            new_parts,
+            Lineage::Derived { parent: ds.id, op: op_name.to_string() },
+        )
+    }
+
+    /// **Oseba path.** Resolve index-provided slices into zero-copy views.
+    /// Slices whose partition has an unknown internal step are refined here
+    /// with a binary search over that partition's keys only.
+    pub fn select_slices<'a>(
+        &self,
+        ds: &'a Dataset,
+        slices: &[PartitionSlice],
+        q: RangeQuery,
+    ) -> Vec<SliceView<'a>> {
+        self.resolve_slices(ds, slices, q)
+            .into_iter()
+            .map(|(_, s)| ds.slice_view(&s))
+            .collect()
+    }
+
+    /// Owned variant of [`Self::select_slices`] for dispatch to worker
+    /// threads: returns `(partition handle, refined slice)` pairs.
+    pub fn resolve_slices(
+        &self,
+        ds: &Dataset,
+        slices: &[PartitionSlice],
+        q: RangeQuery,
+    ) -> Vec<(Arc<Partition>, PartitionSlice)> {
+        self.counters.partitions_targeted.fetch_add(slices.len(), Ordering::Relaxed);
+        slices
+            .iter()
+            .filter_map(|s| {
+                let part = &ds.parts[s.partition];
+                // Refine conservative whole-partition slices (irregular
+                // partitions) against the actual keys.
+                let (row_start, row_end) =
+                    if s.row_start == 0 && s.row_end == part.rows && part.rows > 0 {
+                        (part.lower_bound(q.lo), part.upper_bound(q.hi))
+                    } else {
+                        (s.row_start, s.row_end)
+                    };
+                (row_start < row_end).then(|| {
+                    (
+                        Arc::clone(part),
+                        PartitionSlice { partition: s.partition, row_start, row_end },
+                    )
+                })
+            })
+            .collect()
+    }
+
+    /// Drop a dataset from the cache, releasing its memory.
+    pub fn unpersist(&self, ds: &Dataset) -> bool {
+        self.block_manager.unpersist(ds.id)
+    }
+
+    /// Cached bytes right now — the Fig 4 y-axis.
+    pub fn memory_used(&self) -> usize {
+        self.block_manager.used_bytes()
+    }
+
+    /// Cached-bytes high-water mark.
+    pub fn memory_peak(&self) -> usize {
+        self.block_manager.peak_bytes()
+    }
+
+    /// Scan/materialization counters.
+    pub fn counters(&self) -> CounterSnapshot {
+        self.counters.snapshot()
+    }
+
+    /// Lineage log: `(id, name, lineage)` in creation order (Fig 2).
+    pub fn lineage_log(&self) -> Vec<(DatasetId, String, Lineage)> {
+        self.lineage.lock().unwrap().clone()
+    }
+
+    /// The shared scan pool (used by the coordinator for analysis tasks).
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
+    /// The block manager (cluster/coordinator integration).
+    pub fn block_manager(&self) -> &Arc<BlockManager> {
+        &self.block_manager
+    }
+}
+
+/// Scan one partition for keys in `q`; returns (keys, columns, rows
+/// examined). This is the real per-partition cost of the baseline: every
+/// valid row's key is inspected.
+fn filter_partition(p: &Partition, q: RangeQuery) -> (Vec<i64>, Vec<Vec<f32>>, usize) {
+    let mut keys = Vec::new();
+    let mut cols: Vec<Vec<f32>> = vec![Vec::new(); p.columns.len()];
+    for r in 0..p.rows {
+        let k = p.keys[r];
+        if k >= q.lo && k <= q.hi {
+            keys.push(k);
+            for (c, col) in cols.iter_mut().enumerate() {
+                col.push(p.columns[c][r]);
+            }
+        }
+    }
+    (keys, cols, p.rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::ClimateGen;
+    use crate::index::{Cias, ContentIndex};
+    use crate::storage::Schema;
+
+    fn ctx() -> OsebaContext {
+        OsebaContext::new(ContextConfig { num_workers: 4, memory_budget: None })
+    }
+
+    fn load_climate(ctx: &OsebaContext, rows: usize, nparts: usize) -> Dataset {
+        let batch = ClimateGen::default().generate(rows);
+        ctx.load(batch, nparts).unwrap()
+    }
+
+    #[test]
+    fn load_caches_and_accounts() {
+        let c = ctx();
+        let ds = load_climate(&c, 10_000, 5);
+        assert_eq!(ds.num_partitions(), 5);
+        assert_eq!(ds.total_rows(), 10_000);
+        assert_eq!(c.memory_used(), ds.bytes());
+    }
+
+    #[test]
+    fn filter_range_selects_exactly_and_grows_memory() {
+        let c = ctx();
+        let ds = load_climate(&c, 10_000, 5);
+        let before = c.memory_used();
+        // Keys are hourly (step 3600): select rows 100..=199.
+        let q = RangeQuery { lo: 100 * 3600, hi: 199 * 3600 };
+        let f = c.filter_range(&ds, q).unwrap();
+        assert_eq!(f.total_rows(), 100);
+        assert!(c.memory_used() > before, "filtered RDD must be resident");
+        let snap = c.counters();
+        assert_eq!(snap.partitions_scanned, 5);
+        assert_eq!(snap.rows_scanned, 10_000);
+        assert!(snap.bytes_materialized > 0);
+        // Values preserved.
+        assert_eq!(f.key_min(), Some(100 * 3600));
+        assert_eq!(f.key_max(), Some(199 * 3600));
+    }
+
+    #[test]
+    fn filter_range_empty_result_is_valid_dataset() {
+        let c = ctx();
+        let ds = load_climate(&c, 1000, 4);
+        let f = c.filter_range(&ds, RangeQuery { lo: i64::MAX - 10, hi: i64::MAX }).unwrap();
+        assert_eq!(f.total_rows(), 0);
+        assert_eq!(f.num_partitions(), 1);
+        assert_eq!(f.schema(), &Schema::climate());
+    }
+
+    #[test]
+    fn oseba_path_matches_baseline_rows_without_memory_growth() {
+        let c = ctx();
+        let ds = load_climate(&c, 50_000, 15);
+        let index = Cias::build(ds.partitions()).unwrap();
+        let q = RangeQuery { lo: 7_000 * 3600, hi: 21_000 * 3600 };
+
+        let baseline = c.filter_range(&ds, q).unwrap();
+        let baseline_rows = baseline.total_rows();
+        c.unpersist(&baseline);
+
+        let before = c.memory_used();
+        let views = c.select_slices(&ds, &index.lookup(q), q);
+        let oseba_rows: usize = views.iter().map(|v| v.rows()).sum();
+        assert_eq!(oseba_rows, baseline_rows);
+        assert_eq!(c.memory_used(), before, "no materialization on the Oseba path");
+    }
+
+    #[test]
+    fn select_slices_refines_irregular_partitions() {
+        let c = ctx();
+        let ds = load_climate(&c, 1000, 4);
+        // Conservative full-partition slice (as an index returns for
+        // step-less partitions) must be narrowed to the actual keys.
+        let q = RangeQuery { lo: 10 * 3600, hi: 20 * 3600 };
+        let slices = vec![PartitionSlice { partition: 0, row_start: 0, row_end: ds.partitions()[0].rows }];
+        let views = c.select_slices(&ds, &slices, q);
+        assert_eq!(views.len(), 1);
+        assert_eq!(views[0].rows(), 11);
+        assert_eq!(views[0].keys().first(), Some(&(10 * 3600)));
+    }
+
+    #[test]
+    fn unpersist_frees_memory() {
+        let c = ctx();
+        let ds = load_climate(&c, 5000, 3);
+        let used = c.memory_used();
+        assert!(used > 0);
+        assert!(c.unpersist(&ds));
+        assert_eq!(c.memory_used(), 0);
+        assert!(!c.unpersist(&ds));
+        assert_eq!(c.memory_peak(), used);
+    }
+
+    #[test]
+    fn generic_filter_matches_range_filter() {
+        let c = ctx();
+        let ds = load_climate(&c, 2000, 4);
+        let q = RangeQuery { lo: 500 * 3600, hi: 800 * 3600 };
+        let a = c.filter_range(&ds, q).unwrap();
+        let b = c
+            .filter(&ds, "pred", move |k, _| (500 * 3600..=800 * 3600).contains(&k))
+            .unwrap();
+        assert_eq!(a.total_rows(), b.total_rows());
+        assert_eq!(a.key_min(), b.key_min());
+        assert_eq!(a.key_max(), b.key_max());
+    }
+
+    #[test]
+    fn lineage_records_dataflow() {
+        let c = ctx();
+        let ds = load_climate(&c, 1000, 2);
+        let f = c.filter_range(&ds, RangeQuery { lo: 0, hi: 3600 * 10 }).unwrap();
+        let log = c.lineage_log();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0].0, ds.id());
+        assert!(matches!(&log[1].2, Lineage::Derived { parent, .. } if *parent == ds.id()));
+        assert!(log[1].1.starts_with("filter["));
+        assert!(matches!(f.lineage(), Lineage::Derived { .. }));
+    }
+
+    #[test]
+    fn memory_budget_rejects_oversized_load() {
+        let c = OsebaContext::new(ContextConfig { num_workers: 2, memory_budget: Some(1024) });
+        let batch = ClimateGen::default().generate(10_000);
+        assert!(c.load(batch, 4).is_err());
+        assert_eq!(c.memory_used(), 0);
+    }
+}

@@ -1,0 +1,159 @@
+//! `Dataset` — the RDD analogue: an immutable, partitioned, memory-resident
+//! collection with lineage.
+//!
+//! Transformations are *eager* and, matching the paper's observation about
+//! Spark's defaults ("after each phase, more RDDs are created and they are
+//! resident in memory by default", §IV-A), every transformation result is
+//! registered with the block manager until explicitly unpersisted. This is
+//! precisely the cost model the Fig 4 baseline measures.
+
+use std::sync::Arc;
+
+use crate::engine::block_manager::DatasetId;
+use crate::index::types::PartitionSlice;
+use crate::storage::{Partition, Schema};
+
+/// How a dataset came to exist — the lineage record (paper Fig 2's
+/// dataflow; inspectable via `OsebaContext::lineage`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Lineage {
+    /// Loaded from a generator / external source.
+    Source { name: String },
+    /// Produced by a transformation of `parent`.
+    Derived { parent: DatasetId, op: String },
+}
+
+/// An immutable partitioned dataset handle.
+///
+/// Cloning is cheap (`Arc`'d partitions). Dropping the handle does *not*
+/// free the cached blocks — like Spark, residency is controlled by
+/// `unpersist`, not scope.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub(crate) id: DatasetId,
+    pub(crate) schema: Schema,
+    pub(crate) parts: Vec<Arc<Partition>>,
+    pub(crate) lineage: Lineage,
+}
+
+impl Dataset {
+    /// Unique id within its context.
+    pub fn id(&self) -> DatasetId {
+        self.id
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn partitions(&self) -> &[Arc<Partition>] {
+        &self.parts
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Total valid rows across partitions.
+    pub fn total_rows(&self) -> usize {
+        self.parts.iter().map(|p| p.rows).sum()
+    }
+
+    /// Cached byte footprint (keys + padded columns).
+    pub fn bytes(&self) -> usize {
+        self.parts.iter().map(|p| p.bytes()).sum()
+    }
+
+    pub fn lineage(&self) -> &Lineage {
+        &self.lineage
+    }
+
+    /// Smallest key in the dataset.
+    pub fn key_min(&self) -> Option<i64> {
+        self.parts.iter().filter_map(|p| p.key_min()).min()
+    }
+
+    /// Largest key in the dataset.
+    pub fn key_max(&self) -> Option<i64> {
+        self.parts.iter().filter_map(|p| p.key_max()).max()
+    }
+
+    /// Resolve a [`PartitionSlice`] into the backing partition plus the
+    /// slice bounds — the zero-copy access path Oseba uses instead of
+    /// materializing a filtered dataset.
+    pub fn slice_view(&self, s: &PartitionSlice) -> SliceView<'_> {
+        let part = &self.parts[s.partition];
+        debug_assert!(s.row_end <= part.rows);
+        SliceView { part, row_start: s.row_start, row_end: s.row_end }
+    }
+}
+
+/// A borrowed view of a row range of one partition.
+#[derive(Clone, Copy, Debug)]
+pub struct SliceView<'a> {
+    pub part: &'a Arc<Partition>,
+    pub row_start: usize,
+    pub row_end: usize,
+}
+
+impl<'a> SliceView<'a> {
+    pub fn rows(&self) -> usize {
+        self.row_end - self.row_start
+    }
+
+    /// The valid keys of this view.
+    pub fn keys(&self) -> &'a [i64] {
+        &self.part.keys[self.row_start..self.row_end]
+    }
+
+    /// A value-column slice of this view.
+    pub fn column(&self, col: usize) -> &'a [f32] {
+        &self.part.columns[col][self.row_start..self.row_end]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{partition_batch_uniform, BatchBuilder};
+
+    fn ds() -> Dataset {
+        let mut b = BatchBuilder::new(Schema::stock());
+        for i in 0..100 {
+            b.push(i as i64 * 2, &[i as f32, 1.0]);
+        }
+        let parts = partition_batch_uniform(&b.finish().unwrap(), 30).unwrap();
+        Dataset {
+            id: 1,
+            schema: Schema::stock(),
+            parts,
+            lineage: Lineage::Source { name: "test".into() },
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let d = ds();
+        assert_eq!(d.num_partitions(), 4);
+        assert_eq!(d.total_rows(), 100);
+        assert_eq!(d.key_min(), Some(0));
+        assert_eq!(d.key_max(), Some(198));
+    }
+
+    #[test]
+    fn slice_view_reads_expected_rows() {
+        let d = ds();
+        let s = PartitionSlice { partition: 1, row_start: 5, row_end: 10 };
+        let v = d.slice_view(&s);
+        assert_eq!(v.rows(), 5);
+        // Partition 1 holds rows 30..60 → global rows 35..40.
+        assert_eq!(v.keys(), &[70, 72, 74, 76, 78]);
+        assert_eq!(v.column(0), &[35.0, 36.0, 37.0, 38.0, 39.0]);
+    }
+
+    #[test]
+    fn lineage_is_recorded() {
+        let d = ds();
+        assert_eq!(d.lineage(), &Lineage::Source { name: "test".into() });
+    }
+}

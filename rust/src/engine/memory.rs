@@ -1,0 +1,118 @@
+//! Storage-memory accounting — the instrument behind Fig 4.
+//!
+//! Every cached partition's bytes are charged to a [`MemoryTracker`];
+//! releasing (unpersist) credits it back. An optional budget turns
+//! over-allocation into [`OsebaError::OutOfMemory`], modelling a Spark
+//! executor's bounded storage memory.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::error::{OsebaError, Result};
+
+/// Thread-safe byte accountant.
+#[derive(Debug, Default)]
+pub struct MemoryTracker {
+    used: AtomicUsize,
+    peak: AtomicUsize,
+    budget: Option<usize>,
+}
+
+impl MemoryTracker {
+    /// Unbounded tracker.
+    pub fn unbounded() -> Arc<MemoryTracker> {
+        Arc::new(MemoryTracker::default())
+    }
+
+    /// Tracker that rejects allocations beyond `budget` bytes.
+    pub fn with_budget(budget: usize) -> Arc<MemoryTracker> {
+        Arc::new(MemoryTracker { budget: Some(budget), ..Default::default() })
+    }
+
+    /// Charge `bytes`; fails (without charging) if the budget would be
+    /// exceeded.
+    pub fn allocate(&self, bytes: usize) -> Result<()> {
+        let mut cur = self.used.load(Ordering::SeqCst);
+        loop {
+            let next = cur + bytes;
+            if let Some(b) = self.budget {
+                if next > b {
+                    return Err(OsebaError::OutOfMemory { requested: bytes, budget: b });
+                }
+            }
+            match self.used.compare_exchange(cur, next, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => {
+                    self.peak.fetch_max(next, Ordering::SeqCst);
+                    return Ok(());
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Credit `bytes` back.
+    pub fn release(&self, bytes: usize) {
+        let prev = self.used.fetch_sub(bytes, Ordering::SeqCst);
+        debug_assert!(prev >= bytes, "release underflow: {prev} - {bytes}");
+    }
+
+    /// Currently charged bytes.
+    pub fn used(&self) -> usize {
+        self.used.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::SeqCst)
+    }
+
+    /// Configured budget, if any.
+    pub fn budget(&self) -> Option<usize> {
+        self.budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_use_and_peak() {
+        let t = MemoryTracker::unbounded();
+        t.allocate(100).unwrap();
+        t.allocate(50).unwrap();
+        assert_eq!(t.used(), 150);
+        t.release(100);
+        assert_eq!(t.used(), 50);
+        assert_eq!(t.peak(), 150);
+    }
+
+    #[test]
+    fn budget_enforced() {
+        let t = MemoryTracker::with_budget(100);
+        t.allocate(80).unwrap();
+        let err = t.allocate(30).unwrap_err();
+        assert!(matches!(err, OsebaError::OutOfMemory { requested: 30, budget: 100 }));
+        // Failed allocation did not charge.
+        assert_eq!(t.used(), 80);
+        t.release(80);
+        t.allocate(100).unwrap();
+    }
+
+    #[test]
+    fn concurrent_allocation_consistent() {
+        let t = MemoryTracker::unbounded();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        t.allocate(3).unwrap();
+                        t.release(3);
+                    }
+                });
+            }
+        });
+        assert_eq!(t.used(), 0);
+        assert!(t.peak() >= 3);
+    }
+}

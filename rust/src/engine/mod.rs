@@ -1,0 +1,13 @@
+//! The Spark-like in-memory processing substrate: datasets (RDDs) with
+//! lineage, a block manager with storage-memory accounting, and the two
+//! competing selective-access paths (scan-filter vs indexed slices).
+
+pub mod block_manager;
+pub mod context;
+pub mod dataset;
+pub mod memory;
+
+pub use block_manager::{BlockManager, DatasetId};
+pub use context::{CounterSnapshot, OsebaContext};
+pub use dataset::{Dataset, Lineage, SliceView};
+pub use memory::MemoryTracker;

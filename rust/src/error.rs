@@ -1,0 +1,85 @@
+//! Crate-wide error type.
+//!
+//! Every public fallible API in the crate returns [`Result`]. Variants are
+//! grouped by subsystem so callers can match on the failure domain (e.g. a
+//! server can map `Query*` errors to client-visible messages while treating
+//! `Runtime`/`Io` as internal).
+
+use thiserror::Error;
+
+/// Errors produced by the Oseba engine, indexes, runtime and coordinator.
+#[derive(Error, Debug)]
+pub enum OsebaError {
+    /// Dataset construction / schema violations.
+    #[error("schema error: {0}")]
+    Schema(String),
+
+    /// A query referenced a column that does not exist.
+    #[error("unknown column: {0}")]
+    UnknownColumn(String),
+
+    /// A range query that cannot be satisfied (e.g. inverted bounds).
+    #[error("invalid range: {0}")]
+    InvalidRange(String),
+
+    /// Index construction failed (unsorted keys, empty dataset, ...).
+    #[error("index error: {0}")]
+    Index(String),
+
+    /// The PJRT runtime failed to load/compile/execute an artifact.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// An artifact or its manifest is missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Cluster/scheduler failures (worker death without reassignment, ...).
+    #[error("cluster error: {0}")]
+    Cluster(String),
+
+    /// Configuration parse/validation failures.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// JSON parse errors (manifest, server protocol).
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// Memory budget exhausted and eviction could not reclaim enough.
+    #[error("out of storage memory: requested {requested} bytes, budget {budget}")]
+    OutOfMemory { requested: usize, budget: usize },
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, OsebaError>;
+
+impl From<xla::Error> for OsebaError {
+    fn from(e: xla::Error) -> Self {
+        OsebaError::Runtime(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_domain() {
+        let e = OsebaError::UnknownColumn("wind".into());
+        assert!(e.to_string().contains("unknown column"));
+        let e = OsebaError::OutOfMemory { requested: 10, budget: 5 };
+        assert!(e.to_string().contains("requested 10"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: OsebaError = io.into();
+        assert!(matches!(e, OsebaError::Io(_)));
+    }
+}

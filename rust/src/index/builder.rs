@@ -1,0 +1,164 @@
+//! Metadata extraction: build [`PartitionMeta`] records from loaded
+//! partitions (the "record the metadata of each data block" step, §III-A)
+//! and the shared per-partition range-intersection arithmetic.
+
+use std::sync::Arc;
+
+use crate::index::types::{PartitionMeta, PartitionSlice, RangeQuery};
+use crate::storage::Partition;
+
+/// Extract per-partition metadata in partition order. Detects the
+/// within-partition key step when the grid is uniform (the common case for
+/// temporal data, paper §III-B fact (2)).
+pub fn extract_meta(parts: &[Arc<Partition>]) -> Vec<PartitionMeta> {
+    parts
+        .iter()
+        .map(|p| {
+            let key_min = p.key_min().unwrap_or(0);
+            let key_max = p.key_max().unwrap_or(0);
+            let step = detect_step(&p.keys);
+            PartitionMeta { id: p.id, key_min, key_max, rows: p.rows, step }
+        })
+        .collect()
+}
+
+/// Uniform step of a sorted key vector, or `None` when irregular. A
+/// single-row partition reports `None` (no step is observable).
+pub fn detect_step(keys: &[i64]) -> Option<i64> {
+    if keys.len() < 2 {
+        return None;
+    }
+    let s = keys[1] - keys[0];
+    if s <= 0 {
+        return None;
+    }
+    keys.windows(2).all(|w| w[1] - w[0] == s).then_some(s)
+}
+
+/// Ceiling division for a possibly-negative numerator, positive divisor.
+pub fn ceil_div(a: i64, b: i64) -> i64 {
+    debug_assert!(b > 0);
+    a.div_euclid(b) + i64::from(a.rem_euclid(b) != 0)
+}
+
+/// Intersect an inclusive key query with one partition's metadata,
+/// producing the valid-row slice. When the partition's internal step is
+/// unknown (`meta.step == None`), the index cannot compute row offsets and
+/// conservatively returns the whole partition — the engine refines it with
+/// a binary search over that partition's keys (both index implementations
+/// share this behaviour, keeping the table-vs-CIAS comparison fair).
+pub fn slice_for_meta(meta: &PartitionMeta, q: RangeQuery) -> Option<PartitionSlice> {
+    if meta.rows == 0 || q.hi < meta.key_min || q.lo > meta.key_max {
+        return None;
+    }
+    match meta.step {
+        Some(s) => {
+            let row_start = if q.lo <= meta.key_min {
+                0
+            } else {
+                ceil_div(q.lo - meta.key_min, s).max(0) as usize
+            };
+            let row_end = if q.hi >= meta.key_max {
+                meta.rows
+            } else {
+                ((q.hi - meta.key_min).div_euclid(s) + 1).max(0) as usize
+            };
+            let row_end = row_end.min(meta.rows);
+            (row_start < row_end).then_some(PartitionSlice {
+                partition: meta.id,
+                row_start,
+                row_end,
+            })
+        }
+        None => Some(PartitionSlice { partition: meta.id, row_start: 0, row_end: meta.rows }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{BatchBuilder, Schema};
+
+    fn parts(rows: usize, per: usize) -> Vec<Arc<Partition>> {
+        let mut b = BatchBuilder::new(Schema::stock());
+        for i in 0..rows {
+            b.push(100 + i as i64 * 5, &[i as f32, 0.0]);
+        }
+        let batch = b.finish().unwrap();
+        crate::storage::partition_batch_uniform(&batch, per).unwrap()
+    }
+
+    #[test]
+    fn extract_detects_step_and_bounds() {
+        let metas = extract_meta(&parts(100, 40));
+        assert_eq!(metas.len(), 3);
+        assert_eq!(metas[0], PartitionMeta { id: 0, key_min: 100, key_max: 100 + 39 * 5, rows: 40, step: Some(5) });
+        assert_eq!(metas[2].rows, 20);
+        assert_eq!(metas[2].step, Some(5));
+    }
+
+    #[test]
+    fn detect_step_irregular() {
+        assert_eq!(detect_step(&[1, 2, 4]), None);
+        assert_eq!(detect_step(&[1]), None);
+        assert_eq!(detect_step(&[]), None);
+        assert_eq!(detect_step(&[3, 3]), None); // zero step is "irregular"
+        assert_eq!(detect_step(&[0, 7, 14]), Some(7));
+    }
+
+    #[test]
+    fn ceil_div_negatives() {
+        assert_eq!(ceil_div(7, 2), 4);
+        assert_eq!(ceil_div(6, 2), 3);
+        assert_eq!(ceil_div(-7, 2), -3);
+        assert_eq!(ceil_div(0, 5), 0);
+    }
+
+    #[test]
+    fn slice_exact_interior() {
+        let m = PartitionMeta { id: 3, key_min: 100, key_max: 195, rows: 20, step: Some(5) };
+        // Keys 100,105,...,195. Query [110, 120] → rows 2..5.
+        let s = slice_for_meta(&m, RangeQuery { lo: 110, hi: 120 }).unwrap();
+        assert_eq!(s, PartitionSlice { partition: 3, row_start: 2, row_end: 5 });
+    }
+
+    #[test]
+    fn slice_unaligned_bounds() {
+        let m = PartitionMeta { id: 0, key_min: 100, key_max: 195, rows: 20, step: Some(5) };
+        // [111, 119] → first key ≥111 is 115 (row 3); last key ≤119 is 115.
+        let s = slice_for_meta(&m, RangeQuery { lo: 111, hi: 119 }).unwrap();
+        assert_eq!((s.row_start, s.row_end), (3, 4));
+        // [111, 113] → no key inside.
+        assert!(slice_for_meta(&m, RangeQuery { lo: 111, hi: 113 }).is_none());
+    }
+
+    #[test]
+    fn slice_covers_whole_partition() {
+        let m = PartitionMeta { id: 1, key_min: 100, key_max: 195, rows: 20, step: Some(5) };
+        let s = slice_for_meta(&m, RangeQuery { lo: 0, hi: 10_000 }).unwrap();
+        assert_eq!((s.row_start, s.row_end), (0, 20));
+    }
+
+    #[test]
+    fn slice_disjoint_is_none() {
+        let m = PartitionMeta { id: 1, key_min: 100, key_max: 195, rows: 20, step: Some(5) };
+        assert!(slice_for_meta(&m, RangeQuery { lo: 0, hi: 99 }).is_none());
+        assert!(slice_for_meta(&m, RangeQuery { lo: 196, hi: 300 }).is_none());
+    }
+
+    #[test]
+    fn slice_irregular_returns_full_partition() {
+        let m = PartitionMeta { id: 2, key_min: 10, key_max: 50, rows: 7, step: None };
+        let s = slice_for_meta(&m, RangeQuery { lo: 20, hi: 30 }).unwrap();
+        assert_eq!((s.row_start, s.row_end), (0, 7));
+    }
+
+    #[test]
+    fn slice_boundary_keys_inclusive() {
+        let m = PartitionMeta { id: 0, key_min: 100, key_max: 195, rows: 20, step: Some(5) };
+        let s = slice_for_meta(&m, RangeQuery { lo: 195, hi: 195 }).unwrap();
+        assert_eq!((s.row_start, s.row_end), (19, 20));
+        let s = slice_for_meta(&m, RangeQuery { lo: 100, hi: 100 }).unwrap();
+        assert_eq!((s.row_start, s.row_end), (0, 1));
+    }
+}

@@ -1,0 +1,415 @@
+//! CIAS — Compressed Index with Associated Search List (paper §III-B).
+//!
+//! The table of Fig 3 is redundant when (1) partitions hold the same number
+//! of rows and (2) keys advance by a fixed step (temporal data): the whole
+//! `(partition → key range)` mapping collapses to four integers,
+//!
+//! ```text
+//! Compressed Index: base_key, rows_per_partition ^ regular_partitions, step
+//! ```
+//!
+//! and lookups become *computation* instead of search: for key `k`, the
+//! global row is `(k - base_key) / step`, its partition is `row /
+//! rows_per_partition` and its in-partition offset is `row %
+//! rows_per_partition` — O(1) time, O(1) space, independent of the number
+//! of partitions (the paper's goal: "the overhead on metadata organization
+//! and lookup does not increase with the size of real data").
+//!
+//! Real datasets are rarely perfectly regular: the final partial partition,
+//! ingestion gaps, or re-partitioned regions break the pattern. Those
+//! partitions live in the **Associated Search List** — a short, sorted
+//! table searched like §III-A but whose length is the number of
+//! *irregularities*, not the number of partitions.
+
+use std::sync::Arc;
+
+use crate::error::{OsebaError, Result};
+use crate::index::builder::{ceil_div, extract_meta, slice_for_meta};
+use crate::index::types::{ContentIndex, PartitionMeta, PartitionSlice, RangeQuery};
+use crate::storage::Partition;
+
+/// The compressed index plus its associated search list.
+#[derive(Clone, Debug)]
+pub struct Cias {
+    /// Key of global row 0 of the regular region.
+    base_key: i64,
+    /// Key step between consecutive rows.
+    step: i64,
+    /// Rows per regular partition.
+    rows_per_part: usize,
+    /// Number of leading partitions covered by the compressed index.
+    regular_parts: usize,
+    /// Metadata for the irregular remainder, ordered by key range.
+    asl: Vec<PartitionMeta>,
+}
+
+impl Cias {
+    /// Build from loaded partitions: detect the maximal regular prefix and
+    /// push the remainder onto the ASL.
+    pub fn build(parts: &[Arc<Partition>]) -> Result<Cias> {
+        Self::from_meta(extract_meta(parts))
+    }
+
+    /// Build from extracted metadata.
+    pub fn from_meta(metas: Vec<PartitionMeta>) -> Result<Cias> {
+        if metas.is_empty() {
+            return Err(OsebaError::Index("empty partition set".into()));
+        }
+        for w in metas.windows(2) {
+            if w[0].key_max > w[1].key_min {
+                return Err(OsebaError::Index(format!(
+                    "partitions {} and {} overlap",
+                    w[0].id, w[1].id
+                )));
+            }
+        }
+
+        // The candidate pattern comes from partition 0.
+        let (base_key, step, rows_per_part) = match (metas[0].step, metas[0].rows) {
+            (Some(s), r) if r > 0 => (metas[0].key_min, s, r),
+            _ => {
+                // No observable pattern — everything goes to the ASL and
+                // CIAS degenerates (gracefully) into the table.
+                return Ok(Cias { base_key: 0, step: 1, rows_per_part: 1, regular_parts: 0, asl: metas });
+            }
+        };
+
+        let mut regular_parts = 0usize;
+        for (i, m) in metas.iter().enumerate() {
+            let expect_min = base_key + (i * rows_per_part) as i64 * step;
+            let regular = m.id == i
+                && m.rows == rows_per_part
+                && m.step == Some(step)
+                && m.key_min == expect_min
+                && m.key_max == expect_min + (rows_per_part as i64 - 1) * step;
+            if regular {
+                regular_parts = i + 1;
+            } else {
+                break;
+            }
+        }
+        let asl = metas[regular_parts..].to_vec();
+        Ok(Cias { base_key, step, rows_per_part, regular_parts, asl })
+    }
+
+    /// Number of partitions captured by the compressed (O(1)) region.
+    pub fn regular_parts(&self) -> usize {
+        self.regular_parts
+    }
+
+    /// Length of the associated search list.
+    pub fn asl_len(&self) -> usize {
+        self.asl.len()
+    }
+
+    /// The paper's compact textual rendering, e.g. `"0, 4096^15, 3600"`.
+    pub fn compressed_repr(&self) -> String {
+        format!("{}, {}^{}, {}", self.base_key, self.rows_per_part, self.regular_parts, self.step)
+    }
+
+    /// Incrementally absorb the next partition's metadata (streaming
+    /// ingestion). O(1): if the partition continues the regular pattern
+    /// *and* the ASL is empty, the compressed region simply grows;
+    /// otherwise it joins the ASL. Partitions must arrive in key order
+    /// with ids continuing the existing sequence.
+    pub fn append_meta(&mut self, m: PartitionMeta) -> Result<()> {
+        let expected_id = self.num_partitions();
+        if m.id != expected_id {
+            return Err(OsebaError::Index(format!(
+                "append out of order: got partition {}, expected {}",
+                m.id, expected_id
+            )));
+        }
+        let prev_max = if let Some(last) = self.asl.last() {
+            Some(last.key_max)
+        } else if self.regular_parts > 0 {
+            Some(
+                self.base_key
+                    + ((self.regular_parts * self.rows_per_part) as i64 - 1) * self.step,
+            )
+        } else {
+            None
+        };
+        if let Some(pm) = prev_max {
+            if m.key_min < pm {
+                return Err(OsebaError::Index(format!(
+                    "append overlaps: key_min {} < previous key_max {pm}",
+                    m.key_min
+                )));
+            }
+        }
+
+        // First partition establishes the pattern.
+        if self.regular_parts == 0 && self.asl.is_empty() {
+            if let (Some(s), r) = (m.step, m.rows) {
+                if r > 0 {
+                    self.base_key = m.key_min;
+                    self.step = s;
+                    self.rows_per_part = r;
+                    self.regular_parts = 1;
+                    return Ok(());
+                }
+            }
+            self.asl.push(m);
+            return Ok(());
+        }
+
+        let expect_min =
+            self.base_key + (self.regular_parts * self.rows_per_part) as i64 * self.step;
+        let continues_pattern = self.asl.is_empty()
+            && m.rows == self.rows_per_part
+            && m.step == Some(self.step)
+            && m.key_min == expect_min
+            && m.key_max == expect_min + (self.rows_per_part as i64 - 1) * self.step;
+        if continues_pattern {
+            self.regular_parts += 1;
+        } else {
+            self.asl.push(m);
+        }
+        Ok(())
+    }
+
+    /// O(1) point lookup within the regular region: `(partition, row)` for
+    /// the first key `>= k`, or `None` if that key falls past the region.
+    pub fn locate(&self, k: i64) -> Option<(usize, usize)> {
+        let n_rows = (self.regular_parts * self.rows_per_part) as i64;
+        if n_rows == 0 {
+            return None;
+        }
+        let g = ceil_div(k - self.base_key, self.step).max(0);
+        if g >= n_rows {
+            return None;
+        }
+        let g = g as usize;
+        Some((g / self.rows_per_part, g % self.rows_per_part))
+    }
+}
+
+impl ContentIndex for Cias {
+    fn name(&self) -> &'static str {
+        "cias"
+    }
+
+    fn lookup(&self, q: RangeQuery) -> Vec<PartitionSlice> {
+        let mut out = Vec::new();
+
+        // --- compressed region: pure arithmetic -------------------------
+        let n_rows = (self.regular_parts * self.rows_per_part) as i64;
+        if n_rows > 0 {
+            let g_start = ceil_div(q.lo - self.base_key, self.step).max(0);
+            let g_end = ((q.hi - self.base_key).div_euclid(self.step) + 1).clamp(0, n_rows);
+            if g_start < g_end {
+                let (gs, ge) = (g_start as usize, g_end as usize);
+                let p_first = gs / self.rows_per_part;
+                let p_last = (ge - 1) / self.rows_per_part;
+                for p in p_first..=p_last {
+                    let part_base = p * self.rows_per_part;
+                    out.push(PartitionSlice {
+                        partition: p,
+                        row_start: gs.saturating_sub(part_base),
+                        row_end: (ge - part_base).min(self.rows_per_part),
+                    });
+                }
+            }
+        }
+
+        // --- associated search list: small binary search ----------------
+        let start = self.asl.partition_point(|m| m.key_max < q.lo);
+        for m in &self.asl[start..] {
+            if m.key_min > q.hi {
+                break;
+            }
+            if let Some(s) = slice_for_meta(m, q) {
+                out.push(s);
+            }
+        }
+        out
+    }
+
+    fn memory_bytes(&self) -> usize {
+        // Four scalars + the ASL entries. Deliberately excludes the Vec
+        // header so the O(1)-vs-O(m) comparison reads directly.
+        4 * 8 + self.asl.len() * std::mem::size_of::<PartitionMeta>()
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.regular_parts + self.asl.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::table::TableIndex;
+    use crate::storage::{partition_batch_uniform, BatchBuilder, Schema};
+    use crate::util::rng::Xoshiro256;
+
+    fn uniform_parts(rows: usize, per: usize, step: i64) -> Vec<Arc<Partition>> {
+        let mut b = BatchBuilder::new(Schema::stock());
+        for i in 0..rows {
+            b.push(500 + i as i64 * step, &[i as f32, 0.0]);
+        }
+        partition_batch_uniform(&b.finish().unwrap(), per).unwrap()
+    }
+
+    #[test]
+    fn fully_regular_dataset_compresses_everything_but_tail() {
+        // 100 rows, 25/partition → 4 regular partitions, empty ASL.
+        let cias = Cias::build(&uniform_parts(100, 25, 10)).unwrap();
+        assert_eq!(cias.regular_parts(), 4);
+        assert_eq!(cias.asl_len(), 0);
+        assert_eq!(cias.compressed_repr(), "500, 25^4, 10");
+    }
+
+    #[test]
+    fn partial_tail_lands_in_asl() {
+        // 90 rows, 25/partition → 3 regular + 1 partial (15 rows) in ASL.
+        let cias = Cias::build(&uniform_parts(90, 25, 10)).unwrap();
+        assert_eq!(cias.regular_parts(), 3);
+        assert_eq!(cias.asl_len(), 1);
+    }
+
+    #[test]
+    fn memory_constant_in_partition_count() {
+        let small = Cias::build(&uniform_parts(100, 25, 10)).unwrap();
+        let large = Cias::build(&uniform_parts(100_000, 25, 10)).unwrap();
+        assert_eq!(small.memory_bytes(), large.memory_bytes());
+        // ... unlike the table:
+        let ts = TableIndex::build(&uniform_parts(100, 25, 10)).unwrap();
+        let tl = TableIndex::build(&uniform_parts(100_000, 25, 10)).unwrap();
+        assert!(tl.memory_bytes() > 100 * ts.memory_bytes());
+    }
+
+    #[test]
+    fn lookup_matches_table_on_regular_data() {
+        let parts = uniform_parts(1000, 64, 7);
+        let cias = Cias::build(&parts).unwrap();
+        let table = TableIndex::build(&parts).unwrap();
+        let mut rng = Xoshiro256::seeded(99);
+        for _ in 0..500 {
+            let a = rng.range_u64(0, 9000) as i64 + 400;
+            let b = rng.range_u64(0, 9000) as i64 + 400;
+            let q = RangeQuery { lo: a.min(b), hi: a.max(b) };
+            assert_eq!(cias.lookup(q), table.lookup(q), "q={q:?}");
+        }
+    }
+
+    #[test]
+    fn locate_point_arithmetic() {
+        let cias = Cias::build(&uniform_parts(100, 25, 10)).unwrap();
+        // keys 500, 510, ... partition 25 rows each.
+        assert_eq!(cias.locate(500), Some((0, 0)));
+        assert_eq!(cias.locate(505), Some((0, 1))); // first key ≥ 505 is 510
+        assert_eq!(cias.locate(750), Some((1, 0)));
+        assert_eq!(cias.locate(1490), Some((3, 24)));
+        assert_eq!(cias.locate(1491), None); // past the regular region
+        assert_eq!(cias.locate(-100), Some((0, 0)));
+    }
+
+    #[test]
+    fn irregular_gap_splits_regular_prefix() {
+        // Two regular partitions, then a key gap, then more partitions.
+        let mut metas = extract_like(&uniform_parts(50, 25, 10));
+        // Shift the tail by a gap of 1000.
+        metas.push(PartitionMeta { id: 2, key_min: 5000, key_max: 5240, rows: 25, step: Some(10) });
+        let cias = Cias::from_meta(metas).unwrap();
+        assert_eq!(cias.regular_parts(), 2);
+        assert_eq!(cias.asl_len(), 1);
+        // Query hitting the ASL region still resolves.
+        let got = cias.lookup(RangeQuery { lo: 5100, hi: 5130 });
+        assert_eq!(got, vec![PartitionSlice { partition: 2, row_start: 10, row_end: 14 }]);
+    }
+
+    fn extract_like(parts: &[Arc<Partition>]) -> Vec<PartitionMeta> {
+        crate::index::builder::extract_meta(parts)
+    }
+
+    #[test]
+    fn no_pattern_degenerates_to_table() {
+        let metas = vec![
+            PartitionMeta { id: 0, key_min: 0, key_max: 90, rows: 5, step: None },
+            PartitionMeta { id: 1, key_min: 100, key_max: 220, rows: 9, step: None },
+        ];
+        let cias = Cias::from_meta(metas.clone()).unwrap();
+        assert_eq!(cias.regular_parts(), 0);
+        assert_eq!(cias.asl_len(), 2);
+        let table = TableIndex::from_meta(metas).unwrap();
+        let q = RangeQuery { lo: 50, hi: 150 };
+        assert_eq!(cias.lookup(q), table.lookup(q));
+    }
+
+    #[test]
+    fn straddling_query_hits_regular_and_asl() {
+        let cias = Cias::build(&uniform_parts(90, 25, 10)).unwrap();
+        // Regular covers rows 0..75 (keys 500..1240), ASL rows 75..90
+        // (keys 1250..1390). Query [1200, 1300] straddles.
+        let got = cias.lookup(RangeQuery { lo: 1200, hi: 1300 });
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], PartitionSlice { partition: 2, row_start: 20, row_end: 25 });
+        assert_eq!(got[1], PartitionSlice { partition: 3, row_start: 0, row_end: 6 });
+    }
+
+    #[test]
+    fn empty_metas_rejected() {
+        assert!(Cias::from_meta(vec![]).is_err());
+    }
+
+    #[test]
+    fn incremental_append_equals_batch_build() {
+        for (rows, per) in [(100, 25), (90, 25), (1000, 64)] {
+            let parts = uniform_parts(rows, per, 10);
+            let metas = extract_like(&parts);
+            let batch = Cias::from_meta(metas.clone()).unwrap();
+            let mut inc = Cias {
+                base_key: 0,
+                step: 1,
+                rows_per_part: 1,
+                regular_parts: 0,
+                asl: Vec::new(),
+            };
+            for m in metas {
+                inc.append_meta(m).unwrap();
+            }
+            assert_eq!(inc.regular_parts(), batch.regular_parts(), "rows={rows}");
+            assert_eq!(inc.asl_len(), batch.asl_len());
+            let q = RangeQuery { lo: 700, hi: 5_000 };
+            assert_eq!(inc.lookup(q), batch.lookup(q));
+        }
+    }
+
+    #[test]
+    fn append_rejects_out_of_order_and_overlap() {
+        let parts = uniform_parts(50, 25, 10);
+        let metas = extract_like(&parts);
+        let mut c = Cias::from_meta(metas.clone()).unwrap();
+        // Wrong id.
+        let bad = PartitionMeta { id: 5, key_min: 10_000, key_max: 10_100, rows: 11, step: Some(10) };
+        assert!(c.append_meta(bad).is_err());
+        // Overlapping keys.
+        let overlap = PartitionMeta { id: 2, key_min: 0, key_max: 100, rows: 11, step: Some(10) };
+        assert!(c.append_meta(overlap).is_err());
+        // Valid gap append → ASL.
+        let gapped = PartitionMeta { id: 2, key_min: 99_000, key_max: 99_240, rows: 25, step: Some(10) };
+        c.append_meta(gapped).unwrap();
+        assert_eq!(c.regular_parts(), 2);
+        assert_eq!(c.asl_len(), 1);
+        // A further regular-looking partition must still go to the ASL
+        // (the compressed region cannot skip over ASL entries).
+        let next = PartitionMeta { id: 3, key_min: 99_250, key_max: 99_490, rows: 25, step: Some(10) };
+        c.append_meta(next).unwrap();
+        assert_eq!(c.asl_len(), 2);
+    }
+
+    #[test]
+    fn single_row_partitions_fall_back() {
+        // Single-row partitions expose no step → all-ASL degeneration.
+        let metas = vec![
+            PartitionMeta { id: 0, key_min: 5, key_max: 5, rows: 1, step: None },
+            PartitionMeta { id: 1, key_min: 8, key_max: 8, rows: 1, step: None },
+        ];
+        let cias = Cias::from_meta(metas).unwrap();
+        assert_eq!(cias.regular_parts(), 0);
+        let got = cias.lookup(RangeQuery { lo: 6, hi: 9 });
+        assert_eq!(got, vec![PartitionSlice { partition: 1, row_start: 0, row_end: 1 }]);
+    }
+}

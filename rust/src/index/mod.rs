@@ -1,0 +1,18 @@
+//! Content-aware data organization — the paper's contribution (§III).
+//!
+//! Two [`ContentIndex`] implementations:
+//! * [`TableIndex`] — the intuitive O(m)-space, O(log m)-lookup table of
+//!   §III-A / Fig 3;
+//! * [`Cias`] — the Compressed Index with Associated Search List of §III-B:
+//!   O(1) space and computation for the regular region, with a short
+//!   search list absorbing irregularities.
+
+pub mod builder;
+pub mod cias;
+pub mod table;
+pub mod types;
+
+pub use builder::extract_meta;
+pub use cias::Cias;
+pub use table::TableIndex;
+pub use types::{ContentIndex, PartitionMeta, PartitionSlice, RangeQuery};

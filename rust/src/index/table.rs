@@ -1,0 +1,146 @@
+//! Table-based content-aware organization (paper §III-A, Fig 3).
+//!
+//! A sorted table of `(partition id → key range)` entries; lookups binary
+//! search the table. Space is O(m) in the number of partitions and lookup
+//! is O(log m) — the costs §III-B motivates CIAS against.
+
+use std::sync::Arc;
+
+use crate::error::{OsebaError, Result};
+use crate::index::builder::{extract_meta, slice_for_meta};
+use crate::index::types::{ContentIndex, PartitionMeta, PartitionSlice, RangeQuery};
+use crate::storage::Partition;
+
+/// The intuitive table index of Fig 3.
+#[derive(Clone, Debug)]
+pub struct TableIndex {
+    entries: Vec<PartitionMeta>,
+}
+
+impl TableIndex {
+    /// Build from loaded partitions. Requires partitions to be
+    /// range-ordered and non-overlapping (the engine's load layout).
+    pub fn build(parts: &[Arc<Partition>]) -> Result<TableIndex> {
+        Self::from_meta(extract_meta(parts))
+    }
+
+    /// Build from already-extracted metadata (shared with CIAS tests).
+    pub fn from_meta(entries: Vec<PartitionMeta>) -> Result<TableIndex> {
+        if entries.is_empty() {
+            return Err(OsebaError::Index("empty partition set".into()));
+        }
+        for w in entries.windows(2) {
+            if w[0].key_max > w[1].key_min {
+                return Err(OsebaError::Index(format!(
+                    "partitions {} and {} overlap ({} > {})",
+                    w[0].id, w[1].id, w[0].key_max, w[1].key_min
+                )));
+            }
+        }
+        Ok(TableIndex { entries })
+    }
+
+    /// The table rows (inspection / bench reporting).
+    pub fn entries(&self) -> &[PartitionMeta] {
+        &self.entries
+    }
+}
+
+impl ContentIndex for TableIndex {
+    fn name(&self) -> &'static str {
+        "table"
+    }
+
+    fn lookup(&self, q: RangeQuery) -> Vec<PartitionSlice> {
+        // Binary search: first partition whose key_max >= lo ...
+        let start = self.entries.partition_point(|m| m.key_max < q.lo);
+        let mut out = Vec::new();
+        // ... then walk right while partitions intersect (output-sensitive).
+        for m in &self.entries[start..] {
+            if m.key_min > q.hi {
+                break;
+            }
+            if let Some(s) = slice_for_meta(m, q) {
+                out.push(s);
+            }
+        }
+        out
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.entries.len() * std::mem::size_of::<PartitionMeta>()
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{partition_batch_uniform, BatchBuilder, Schema};
+
+    fn index(rows: usize, per: usize) -> TableIndex {
+        let mut b = BatchBuilder::new(Schema::stock());
+        for i in 0..rows {
+            b.push(i as i64 * 10, &[i as f32, 0.0]);
+        }
+        let parts = partition_batch_uniform(&b.finish().unwrap(), per).unwrap();
+        TableIndex::build(&parts).unwrap()
+    }
+
+    #[test]
+    fn lookup_single_partition() {
+        let ix = index(100, 25); // keys 0..990 step 10, 4 partitions
+        let got = ix.lookup(RangeQuery { lo: 0, hi: 240 });
+        assert_eq!(got, vec![PartitionSlice { partition: 0, row_start: 0, row_end: 25 }]);
+    }
+
+    #[test]
+    fn lookup_spanning_partitions() {
+        let ix = index(100, 25);
+        let got = ix.lookup(RangeQuery { lo: 200, hi: 600 });
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0], PartitionSlice { partition: 0, row_start: 20, row_end: 25 });
+        assert_eq!(got[1], PartitionSlice { partition: 1, row_start: 0, row_end: 25 });
+        // Partition 2 holds keys 500..740; [200,600] covers 500..600 → rows 0..11.
+        assert_eq!(got[2], PartitionSlice { partition: 2, row_start: 0, row_end: 11 });
+    }
+
+    #[test]
+    fn lookup_miss_is_empty() {
+        let ix = index(100, 25);
+        assert!(ix.lookup(RangeQuery { lo: 99_999, hi: 100_000 }).is_empty());
+        assert!(ix.lookup(RangeQuery { lo: -100, hi: -1 }).is_empty());
+    }
+
+    #[test]
+    fn lookup_full_span() {
+        let ix = index(100, 25);
+        let got = ix.lookup(RangeQuery { lo: i64::MIN + 1, hi: i64::MAX });
+        assert_eq!(got.len(), 4);
+        assert!(got.iter().all(|s| s.rows() == 25));
+    }
+
+    #[test]
+    fn memory_grows_linearly_with_partitions() {
+        let small = index(100, 25).memory_bytes();
+        let large = index(1000, 25).memory_bytes();
+        assert_eq!(large, 10 * small);
+    }
+
+    #[test]
+    fn rejects_overlapping_partitions() {
+        let metas = vec![
+            PartitionMeta { id: 0, key_min: 0, key_max: 100, rows: 10, step: Some(10) },
+            PartitionMeta { id: 1, key_min: 50, key_max: 150, rows: 10, step: Some(10) },
+        ];
+        assert!(TableIndex::from_meta(metas).is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(TableIndex::from_meta(vec![]).is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! Core index vocabulary: range queries, partition slices and the
+//! [`ContentIndex`] trait both index implementations satisfy.
+
+use crate::error::{OsebaError, Result};
+
+/// An inclusive key-range selection `[lo, hi]` — the paper's "data ranging
+/// from index i to j" (§III-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RangeQuery {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl RangeQuery {
+    /// Validate `lo <= hi`.
+    pub fn new(lo: i64, hi: i64) -> Result<RangeQuery> {
+        if lo > hi {
+            return Err(OsebaError::InvalidRange(format!("lo {lo} > hi {hi}")));
+        }
+        Ok(RangeQuery { lo, hi })
+    }
+}
+
+/// A targeted region of one partition: valid-row indices `[row_start,
+/// row_end)` of partition `partition`. The unit of work the coordinator
+/// dispatches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PartitionSlice {
+    pub partition: usize,
+    pub row_start: usize,
+    pub row_end: usize,
+}
+
+impl PartitionSlice {
+    pub fn rows(&self) -> usize {
+        self.row_end - self.row_start
+    }
+}
+
+/// Content-aware metadata over a partitioned dataset: maps key ranges to
+/// the partitions (and row ranges) that hold them, without touching data.
+pub trait ContentIndex: Send + Sync {
+    /// Human-readable implementation name (bench labels).
+    fn name(&self) -> &'static str;
+
+    /// All slices intersecting `q`, ordered by partition id; empty when the
+    /// query misses the dataset entirely.
+    fn lookup(&self, q: RangeQuery) -> Vec<PartitionSlice>;
+
+    /// Resident metadata footprint in bytes — the §III space-complexity
+    /// comparison (table: O(m); CIAS: O(1) + ASL).
+    fn memory_bytes(&self) -> usize;
+
+    /// Number of partitions the index covers.
+    fn num_partitions(&self) -> usize;
+}
+
+/// Shared per-partition metadata record extracted at load time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PartitionMeta {
+    pub id: usize,
+    pub key_min: i64,
+    pub key_max: i64,
+    pub rows: usize,
+    /// Key step within the partition; `None` if irregular or single-row.
+    pub step: Option<i64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_query_validates() {
+        assert!(RangeQuery::new(5, 5).is_ok());
+        assert!(RangeQuery::new(5, 4).is_err());
+        assert_eq!(RangeQuery::new(1, 9).unwrap(), RangeQuery { lo: 1, hi: 9 });
+    }
+
+    #[test]
+    fn slice_rows() {
+        let s = PartitionSlice { partition: 0, row_start: 10, row_end: 25 };
+        assert_eq!(s.rows(), 15);
+    }
+}

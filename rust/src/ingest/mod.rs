@@ -1,0 +1,323 @@
+//! Streaming ingestion: a bounded pipeline from a chunked source into
+//! uniformly-sized partitions with **incremental CIAS maintenance**.
+//!
+//! The paper indexes a dataset loaded once; real temporal data arrives
+//! continuously. Because CIAS absorbs a pattern-continuing partition in
+//! O(1) ([`crate::index::Cias::append_meta`]), the index stays current at
+//! ingestion speed — no rebuild, no table growth — and selective analyses
+//! can run against a consistent snapshot at any time.
+//!
+//! Backpressure: the source feeds a bounded channel; when the builder
+//! (or a memory budget) falls behind, the producer blocks — the standard
+//! streaming-orchestrator contract.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+
+use crate::engine::MemoryTracker;
+use crate::error::{OsebaError, Result};
+use crate::index::builder::detect_step;
+use crate::index::{Cias, PartitionMeta};
+use crate::storage::{Partition, RecordBatch, Schema};
+
+/// A chunk of rows flowing through the pipeline (columnar, sorted keys).
+#[derive(Clone, Debug)]
+pub struct Chunk {
+    pub keys: Vec<i64>,
+    /// One vector per schema column.
+    pub columns: Vec<Vec<f32>>,
+}
+
+impl Chunk {
+    pub fn from_batch(b: &RecordBatch) -> Chunk {
+        Chunk { keys: b.keys.clone(), columns: b.columns.clone() }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.keys.len()
+    }
+}
+
+/// Shared, queryable ingestion state: the partitions so far plus the
+/// incrementally-maintained index.
+#[derive(Default)]
+struct State {
+    parts: Vec<Arc<Partition>>,
+    index: Option<Cias>,
+    rows: usize,
+}
+
+/// The consumer half: builds partitions from chunks and maintains CIAS.
+pub struct Ingestor {
+    schema: Schema,
+    rows_per_partition: usize,
+    state: Mutex<State>,
+    tracker: Arc<MemoryTracker>,
+    ingested_rows: AtomicUsize,
+    // Partial-partition buffer.
+    pending: Mutex<Chunk>,
+}
+
+impl Ingestor {
+    /// `rows_per_partition` fixes the uniform layout CIAS compresses.
+    pub fn new(
+        schema: Schema,
+        rows_per_partition: usize,
+        tracker: Arc<MemoryTracker>,
+    ) -> Result<Ingestor> {
+        if rows_per_partition == 0 {
+            return Err(OsebaError::Schema("rows_per_partition must be > 0".into()));
+        }
+        let width = schema.width();
+        Ok(Ingestor {
+            schema,
+            rows_per_partition,
+            state: Mutex::new(State::default()),
+            tracker,
+            ingested_rows: AtomicUsize::new(0),
+            pending: Mutex::new(Chunk { keys: Vec::new(), columns: vec![Vec::new(); width] }),
+        })
+    }
+
+    /// Feed one chunk. Completed partitions are sealed, charged to the
+    /// memory tracker, and appended to the index. Keys must continue
+    /// non-decreasing across chunks.
+    pub fn push(&self, chunk: Chunk) -> Result<()> {
+        if chunk.columns.len() != self.schema.width() {
+            return Err(OsebaError::Schema(format!(
+                "chunk has {} columns, schema {}",
+                chunk.columns.len(),
+                self.schema.width()
+            )));
+        }
+        if chunk.keys.windows(2).any(|w| w[0] > w[1]) {
+            return Err(OsebaError::Schema("chunk keys not sorted".into()));
+        }
+        let mut pending = self.pending.lock().unwrap();
+        if let (Some(&last), Some(&first)) = (pending.keys.last(), chunk.keys.first()) {
+            if first < last {
+                return Err(OsebaError::Schema(format!(
+                    "chunk regresses: {first} < {last}"
+                )));
+            }
+        }
+        self.ingested_rows.fetch_add(chunk.rows(), Ordering::Relaxed);
+        pending.keys.extend_from_slice(&chunk.keys);
+        for (p, c) in pending.columns.iter_mut().zip(&chunk.columns) {
+            p.extend_from_slice(c);
+        }
+        while pending.keys.len() >= self.rows_per_partition {
+            let keys: Vec<i64> = pending.keys.drain(..self.rows_per_partition).collect();
+            let cols: Vec<Vec<f32>> = pending
+                .columns
+                .iter_mut()
+                .map(|c| c.drain(..self.rows_per_partition).collect())
+                .collect();
+            self.seal(keys, cols)?;
+        }
+        Ok(())
+    }
+
+    /// Flush the partial tail as a final (shorter) partition.
+    pub fn finish(&self) -> Result<()> {
+        let mut pending = self.pending.lock().unwrap();
+        if pending.keys.is_empty() {
+            return Ok(());
+        }
+        let keys = std::mem::take(&mut pending.keys);
+        let width = pending.columns.len();
+        let cols = std::mem::replace(&mut pending.columns, vec![Vec::new(); width]);
+        drop(pending);
+        self.seal(keys, cols)
+    }
+
+    fn seal(&self, keys: Vec<i64>, cols: Vec<Vec<f32>>) -> Result<()> {
+        let mut state = self.state.lock().unwrap();
+        let id = state.parts.len();
+        let part = Arc::new(Partition::from_rows(id, keys, cols));
+        self.tracker.allocate(part.bytes())?;
+        let meta = PartitionMeta {
+            id,
+            key_min: part.key_min().unwrap_or(0),
+            key_max: part.key_max().unwrap_or(0),
+            rows: part.rows,
+            step: detect_step(&part.keys),
+        };
+        match &mut state.index {
+            Some(ix) => ix.append_meta(meta)?,
+            None => state.index = Some(Cias::from_meta(vec![meta])?),
+        }
+        state.rows += part.rows;
+        state.parts.push(part);
+        Ok(())
+    }
+
+    /// A consistent snapshot: sealed partitions + a clone of the index.
+    /// (The pending tail is not yet visible — standard watermark
+    /// semantics.)
+    pub fn snapshot(&self) -> (Vec<Arc<Partition>>, Option<Cias>) {
+        let state = self.state.lock().unwrap();
+        (state.parts.clone(), state.index.clone())
+    }
+
+    /// Sealed partition count / row count / total ingested rows.
+    pub fn progress(&self) -> (usize, usize, usize) {
+        let state = self.state.lock().unwrap();
+        (state.parts.len(), state.rows, self.ingested_rows.load(Ordering::Relaxed))
+    }
+}
+
+/// Run a bounded producer→ingestor pipeline: `source` pulls chunks on a
+/// producer thread into a channel of depth `queue_depth`; the calling
+/// thread drains into `ingestor`. Returns total rows ingested.
+pub fn run_pipeline<I>(
+    ingestor: &Ingestor,
+    source: I,
+    queue_depth: usize,
+) -> Result<usize>
+where
+    I: Iterator<Item = Chunk> + Send + 'static,
+{
+    let (tx, rx): (SyncSender<Chunk>, Receiver<Chunk>) =
+        std::sync::mpsc::sync_channel(queue_depth.max(1));
+    let producer = std::thread::spawn(move || {
+        for chunk in source {
+            if tx.send(chunk).is_err() {
+                break; // consumer gone
+            }
+        }
+    });
+    let mut rows = 0usize;
+    for chunk in rx {
+        rows += chunk.rows();
+        ingestor.push(chunk)?;
+    }
+    producer.join().map_err(|_| OsebaError::Cluster("producer panicked".into()))?;
+    ingestor.finish()?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::ClimateGen;
+    use crate::index::{ContentIndex, RangeQuery};
+
+    fn chunks_of(batch: &RecordBatch, chunk_rows: usize) -> Vec<Chunk> {
+        let mut out = Vec::new();
+        let mut lo = 0;
+        while lo < batch.rows() {
+            let hi = (lo + chunk_rows).min(batch.rows());
+            out.push(Chunk {
+                keys: batch.keys[lo..hi].to_vec(),
+                columns: batch.columns.iter().map(|c| c[lo..hi].to_vec()).collect(),
+            });
+            lo = hi;
+        }
+        out
+    }
+
+    #[test]
+    fn streamed_index_matches_batch_built() {
+        let batch = ClimateGen::default().generate(10_000);
+        let ing = Ingestor::new(Schema::climate(), 1024, MemoryTracker::unbounded()).unwrap();
+        for c in chunks_of(&batch, 333) {
+            ing.push(c).unwrap();
+        }
+        ing.finish().unwrap();
+        let (parts, index) = ing.snapshot();
+        let index = index.unwrap();
+        assert_eq!(parts.len(), 10);
+        assert_eq!(index.regular_parts(), 9);
+        assert_eq!(index.asl_len(), 1); // 784-row tail
+
+        // Compare against the batch-loaded reference.
+        let ref_parts = crate::storage::partition_batch_uniform(&batch, 1024).unwrap();
+        let ref_index = Cias::build(&ref_parts).unwrap();
+        for q in [
+            RangeQuery { lo: 0, hi: 3600 * 999 },
+            RangeQuery { lo: 3600 * 2000, hi: 3600 * 8000 },
+            RangeQuery { lo: 3600 * 9990, hi: i64::MAX },
+        ] {
+            assert_eq!(index.lookup(q), ref_index.lookup(q), "{q:?}");
+        }
+        // Data identical too.
+        for (a, b) in parts.iter().zip(&ref_parts) {
+            assert_eq!(a.keys, b.keys);
+            assert_eq!(a.columns[0], b.columns[0]);
+        }
+    }
+
+    #[test]
+    fn snapshot_queryable_mid_stream() {
+        let batch = ClimateGen::default().generate(5_000);
+        let ing = Ingestor::new(Schema::climate(), 1000, MemoryTracker::unbounded()).unwrap();
+        let chunks = chunks_of(&batch, 1500);
+        ing.push(chunks[0].clone()).unwrap();
+        let (parts, index) = ing.snapshot();
+        assert_eq!(parts.len(), 1); // 1500 rows → one sealed partition
+        let hits = index.unwrap().lookup(RangeQuery { lo: 0, hi: 3600 * 100 });
+        assert_eq!(hits.len(), 1);
+        ing.push(chunks[1].clone()).unwrap();
+        let (parts, _) = ing.snapshot();
+        assert_eq!(parts.len(), 3);
+    }
+
+    #[test]
+    fn pipeline_with_backpressure_ingests_everything() {
+        let batch = ClimateGen::default().generate(20_000);
+        let ing = Ingestor::new(Schema::climate(), 4096, MemoryTracker::unbounded()).unwrap();
+        let chunks = chunks_of(&batch, 700);
+        let n = chunks.len();
+        let rows = run_pipeline(&ing, chunks.into_iter(), 2).unwrap();
+        assert_eq!(rows, 20_000);
+        let (sealed, total, ingested) = ing.progress();
+        assert_eq!(total, 20_000);
+        assert_eq!(ingested, 20_000);
+        assert_eq!(sealed, 5);
+        assert!(n > 2, "queue depth forced backpressure");
+    }
+
+    #[test]
+    fn memory_budget_applies_backpressure_failure() {
+        let batch = ClimateGen::default().generate(10_000);
+        // Budget fits ~2 partitions.
+        let ing = Ingestor::new(
+            Schema::climate(),
+            1000,
+            MemoryTracker::with_budget(2 * 1000 * 24 + 64 * 1024),
+        )
+        .unwrap();
+        let mut failed = false;
+        for c in chunks_of(&batch, 1000) {
+            if ing.push(c).is_err() {
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed, "budget must stop ingestion");
+    }
+
+    #[test]
+    fn rejects_disordered_input() {
+        let ing = Ingestor::new(Schema::stock(), 100, MemoryTracker::unbounded()).unwrap();
+        let good = Chunk { keys: vec![1, 2, 3], columns: vec![vec![0.0; 3], vec![0.0; 3]] };
+        ing.push(good).unwrap();
+        let regress = Chunk { keys: vec![0], columns: vec![vec![0.0], vec![0.0]] };
+        assert!(ing.push(regress).is_err());
+        let unsorted = Chunk { keys: vec![9, 4], columns: vec![vec![0.0; 2], vec![0.0; 2]] };
+        assert!(ing.push(unsorted).is_err());
+        let ragged = Chunk { keys: vec![9], columns: vec![vec![0.0]] };
+        assert!(ing.push(ragged).is_err());
+    }
+
+    #[test]
+    fn finish_on_empty_is_noop() {
+        let ing = Ingestor::new(Schema::stock(), 100, MemoryTracker::unbounded()).unwrap();
+        ing.finish().unwrap();
+        let (parts, index) = ing.snapshot();
+        assert!(parts.is_empty());
+        assert!(index.is_none());
+    }
+}

@@ -1,0 +1,50 @@
+//! # Oseba
+//!
+//! A reproduction of *"Oseba: Optimization for Selective Bulk Analysis in
+//! Big Data Processing"* (Wang & Wang, CS.DC 2017) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — a Spark-like in-memory partitioned data
+//!   engine ([`engine`]), the paper's content-aware indexes ([`index`]:
+//!   table-based and CIAS), a leader/worker coordinator ([`coordinator`])
+//!   over a simulated cluster ([`cluster`]), and the PJRT runtime
+//!   ([`runtime`]) that executes AOT-compiled analysis kernels.
+//! * **Layer 2 (python/compile/model.py)** — JAX analysis graphs, lowered
+//!   once to `artifacts/*.hlo.txt`.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the masked
+//!   per-block statistics the analyses hot-loop on.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! reproduced figures.
+
+pub mod analysis;
+pub mod bench;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod datagen;
+pub mod engine;
+pub mod error;
+pub mod index;
+pub mod ingest;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod storage;
+pub mod testing;
+pub mod util;
+
+pub use error::{OsebaError, Result};
+
+/// Convenience re-exports for the common workflow.
+pub mod prelude {
+    pub use crate::analysis::{Analyzer, PeriodStats};
+    pub use crate::config::ContextConfig;
+    pub use crate::coordinator::{Coordinator, IndexKind, Method};
+    pub use crate::engine::{Dataset, OsebaContext};
+    pub use crate::error::{OsebaError, Result};
+    pub use crate::index::{Cias, ContentIndex, RangeQuery, TableIndex};
+    pub use crate::runtime::AnalysisBackend;
+    pub use crate::storage::Schema;
+}

@@ -1,0 +1,207 @@
+//! `oseba` — the leader binary.
+//!
+//! Subcommands:
+//! * `run`    — the paper's five-period interactive workload (Fig 4 + 6)
+//!              with either method, printing the per-phase table.
+//! * `serve`  — load a dataset and serve interactive range-stat queries
+//!              over TCP (line-delimited JSON).
+//! * `index`  — build both indexes over a dataset and report their
+//!              footprint and lookup behaviour.
+//! * `info`   — print resolved config and artifact manifest summary.
+
+use std::sync::Arc;
+
+use oseba::analysis::five_periods;
+use oseba::cli::{bool_flag, flag, Cli};
+use oseba::config::{parse_bytes, AppConfig, BackendKind};
+use oseba::coordinator::{run_session, Coordinator, IndexKind, Method};
+use oseba::datagen::ClimateGen;
+use oseba::error::Result;
+use oseba::index::ContentIndex;
+use oseba::runtime::make_backend;
+use oseba::server::QueryServer;
+use oseba::util::humansize;
+
+fn cli() -> Cli {
+    let common = || {
+        vec![
+            flag("size", "raw dataset bytes (k/m/g suffixes)", Some("64m")),
+            flag("partitions", "number of partitions", Some("15")),
+            flag("backend", "analysis backend: hlo | native", Some("hlo")),
+            flag("artifacts", "artifacts directory", Some("artifacts")),
+            flag("workers", "simulated cluster workers", Some("4")),
+            flag("seed", "generator seed", Some("23274")),
+            flag("net-latency-us", "simulated per-message latency (µs)", Some("0")),
+        ]
+    };
+    Cli::new("oseba", "selective bulk analysis with content-aware indexing")
+        .command("run", "run the five-period workload (Fig 4 + Fig 6)", {
+            let mut f = common();
+            f.push(flag("method", "default | oseba | both", Some("both")));
+            f.push(flag("index", "table | cias", Some("cias")));
+            f.push(flag("column", "column to analyze", Some("temperature")));
+            f.push(flag("repeat", "session repetitions (profiling)", Some("1")));
+            f.push(bool_flag("json", "emit metrics as JSON"));
+            f
+        })
+        .command("serve", "serve interactive queries over TCP", {
+            let mut f = common();
+            f.push(flag("addr", "bind address", Some("127.0.0.1:7341")));
+            f.push(flag("index", "table | cias", Some("cias")));
+            f
+        })
+        .command("index", "build and inspect both indexes", common())
+        .command("info", "print config and manifest summary", common())
+}
+
+fn app_config(p: &oseba::cli::Parsed) -> Result<AppConfig> {
+    let mut cfg = AppConfig::default();
+    cfg.dataset_bytes = parse_bytes(p.get("size").unwrap())?;
+    cfg.num_partitions = p.get_parse("partitions")?.unwrap();
+    cfg.backend = p.get("backend").unwrap().parse()?;
+    cfg.artifacts_dir = p.get("artifacts").unwrap().to_string();
+    cfg.cluster_workers = p.get_parse("workers")?.unwrap();
+    cfg.seed = p.get_parse::<u64>("seed")?.unwrap();
+    cfg.net_latency_us = p.get_parse::<u64>("net-latency-us")?.unwrap();
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn load(coord: &Coordinator, cfg: &AppConfig) -> Result<oseba::engine::Dataset> {
+    let gen = ClimateGen { seed: cfg.seed, ..Default::default() };
+    let batch = gen.generate_bytes(cfg.dataset_bytes);
+    eprintln!(
+        "loaded {} rows ({}) into {} partitions",
+        batch.rows(),
+        humansize::bytes(batch.raw_bytes()),
+        cfg.num_partitions
+    );
+    coord.load(batch, cfg.num_partitions)
+}
+
+fn cmd_run(p: &oseba::cli::Parsed) -> Result<()> {
+    let cfg = app_config(p)?;
+    let index_kind: IndexKind = p.get("index").unwrap().parse()?;
+    let methods: Vec<Method> = match p.get("method").unwrap() {
+        "both" => vec![Method::Default, Method::Oseba],
+        m => vec![m.parse()?],
+    };
+    let column_name = p.get("column").unwrap();
+
+    let repeat: usize = p.get_parse("repeat")?.unwrap();
+    for method in methods {
+        // Fresh coordinator per method: the paper measures each run from a
+        // clean cluster state.
+        let backend = make_backend(cfg.backend, &cfg.artifacts_dir)?;
+        let coord = Coordinator::new(&cfg, backend)?;
+        let ds = load(&coord, &cfg)?;
+        let column = ds.schema().column_index(column_name)?;
+        let mut report =
+            run_session(&coord, &ds, method, index_kind, &five_periods(), column, false)?;
+        for _ in 1..repeat {
+            report =
+                run_session(&coord, &ds, method, index_kind, &five_periods(), column, false)?;
+        }
+        if let Some(s) = coord.analyzer().backend_stats() {
+            println!(
+                "kernel service: {} requests, {} executions, busy {:.3}s",
+                s.requests, s.executions, s.busy_secs
+            );
+        }
+        println!("\n== method: {} (backend: {}) ==", method.label(), coord.analyzer().backend_name());
+        println!("{}", report.metrics.table());
+        if method == Method::Oseba {
+            println!("index: {} bytes ({index_kind:?})", report.index_bytes);
+        }
+        for (i, st) in report.stats.iter().enumerate() {
+            println!(
+                "phase {}: n={} max={:.3} min={:.3} mean={:.3} std={:.3}",
+                i + 1,
+                st.count,
+                st.max,
+                st.min,
+                st.mean,
+                st.std
+            );
+        }
+        if p.get_bool("json") {
+            println!("{}", report.metrics.to_json().to_string());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(p: &oseba::cli::Parsed) -> Result<()> {
+    let cfg = app_config(p)?;
+    let index_kind: IndexKind = p.get("index").unwrap().parse()?;
+    let backend = make_backend(cfg.backend, &cfg.artifacts_dir)?;
+    let coord = Arc::new(Coordinator::new(&cfg, backend)?);
+    let ds = load(&coord, &cfg)?;
+    let server = QueryServer::new(coord, ds, index_kind)?;
+    let addr = p.get("addr").unwrap();
+    eprintln!("serving on {addr} (op: info | stats | shutdown)");
+    server.serve(addr, |a| eprintln!("bound {a}"))
+}
+
+fn cmd_index(p: &oseba::cli::Parsed) -> Result<()> {
+    let cfg = app_config(p)?;
+    let backend = make_backend(BackendKind::Native, &cfg.artifacts_dir)?;
+    let coord = Coordinator::new(&cfg, backend)?;
+    let ds = load(&coord, &cfg)?;
+    let table = oseba::index::TableIndex::build(ds.partitions())?;
+    let cias = oseba::index::Cias::build(ds.partitions())?;
+    println!("partitions:        {}", ds.num_partitions());
+    println!("table index:       {} ({} entries)", humansize::bytes(table.memory_bytes()), table.entries().len());
+    println!(
+        "cias index:        {} (compressed: \"{}\", asl: {})",
+        humansize::bytes(cias.memory_bytes()),
+        cias.compressed_repr(),
+        cias.asl_len()
+    );
+    let ratio = table.memory_bytes() as f64 / cias.memory_bytes().max(1) as f64;
+    println!("space ratio:       {ratio:.1}x");
+    Ok(())
+}
+
+fn cmd_info(p: &oseba::cli::Parsed) -> Result<()> {
+    let cfg = app_config(p)?;
+    println!("dataset_bytes:   {}", humansize::bytes(cfg.dataset_bytes));
+    println!("num_partitions:  {}", cfg.num_partitions);
+    println!("backend:         {:?}", cfg.backend);
+    println!("cluster_workers: {}", cfg.cluster_workers);
+    println!("artifacts_dir:   {}", cfg.artifacts_dir);
+    match oseba::runtime::Manifest::load(&cfg.artifacts_dir) {
+        Ok(m) => {
+            println!("manifest:        {} entries, block_rows={}, windows={:?}",
+                m.entries.len(), m.block_rows, m.ma_windows);
+            for name in m.entries.keys() {
+                println!("  - {name}");
+            }
+        }
+        Err(e) => println!("manifest:        unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = cli();
+    let parsed = match cli.parse(&args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match parsed.command.as_str() {
+        "run" => cmd_run(&parsed),
+        "serve" => cmd_serve(&parsed),
+        "index" => cmd_index(&parsed),
+        "info" => cmd_info(&parsed),
+        _ => unreachable!("cli validated"),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

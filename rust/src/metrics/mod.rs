@@ -1,0 +1,196 @@
+//! Phase-level experiment metrics: the instrument that emits the Fig 4
+//! (accumulated memory) and Fig 6 (accumulated time) series.
+
+use std::time::Instant;
+
+use crate::engine::CounterSnapshot;
+use crate::util::humansize;
+use crate::util::json::Json;
+
+/// One analysis phase's measurements.
+#[derive(Clone, Debug)]
+pub struct PhaseRecord {
+    /// Phase number (1-based, matching the paper's five periods).
+    pub phase: usize,
+    /// "default" or "oseba".
+    pub method: String,
+    /// Wall-clock seconds for this phase.
+    pub secs: f64,
+    /// Total cached bytes *after* the phase (Fig 4 y-axis).
+    pub memory_bytes: usize,
+    /// Partitions scanned during the phase (baseline cost signal).
+    pub partitions_scanned: usize,
+    /// Partitions targeted via the index during the phase.
+    pub partitions_targeted: usize,
+    /// Rows examined by scans.
+    pub rows_scanned: usize,
+    /// Bytes materialized into filtered datasets.
+    pub bytes_materialized: usize,
+}
+
+/// Collects phase records for one method run and renders the series.
+#[derive(Clone, Debug, Default)]
+pub struct SessionMetrics {
+    pub records: Vec<PhaseRecord>,
+}
+
+impl SessionMetrics {
+    pub fn new() -> SessionMetrics {
+        SessionMetrics::default()
+    }
+
+    /// Record a phase from raw observations.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &mut self,
+        phase: usize,
+        method: &str,
+        secs: f64,
+        memory_bytes: usize,
+        before: CounterSnapshot,
+        after: CounterSnapshot,
+    ) {
+        self.records.push(PhaseRecord {
+            phase,
+            method: method.to_string(),
+            secs,
+            memory_bytes,
+            partitions_scanned: after.partitions_scanned - before.partitions_scanned,
+            partitions_targeted: after.partitions_targeted - before.partitions_targeted,
+            rows_scanned: after.rows_scanned - before.rows_scanned,
+            bytes_materialized: after.bytes_materialized - before.bytes_materialized,
+        });
+    }
+
+    /// Accumulated seconds after each phase (Fig 6 series).
+    pub fn accumulated_time(&self) -> Vec<f64> {
+        let mut acc = 0.0;
+        self.records
+            .iter()
+            .map(|r| {
+                acc += r.secs;
+                acc
+            })
+            .collect()
+    }
+
+    /// Memory after each phase (Fig 4 series).
+    pub fn memory_series(&self) -> Vec<usize> {
+        self.records.iter().map(|r| r.memory_bytes).collect()
+    }
+
+    /// Render as an aligned text table.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<6} {:<8} {:>10} {:>12} {:>8} {:>8} {:>12} {:>12}\n",
+            "phase", "method", "time", "acc_time", "scans", "targets", "memory", "materialized"
+        ));
+        let mut acc = 0.0;
+        for r in &self.records {
+            acc += r.secs;
+            out.push_str(&format!(
+                "{:<6} {:<8} {:>10} {:>12} {:>8} {:>8} {:>12} {:>12}\n",
+                r.phase,
+                r.method,
+                humansize::secs(r.secs),
+                humansize::secs(acc),
+                r.partitions_scanned,
+                r.partitions_targeted,
+                humansize::bytes(r.memory_bytes),
+                humansize::bytes(r.bytes_materialized),
+            ));
+        }
+        out
+    }
+
+    /// JSON dump (consumed by EXPERIMENTS.md tooling / plotting).
+    pub fn to_json(&self) -> Json {
+        Json::arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("phase", Json::num(r.phase as f64)),
+                        ("method", Json::str(r.method.clone())),
+                        ("secs", Json::num(r.secs)),
+                        ("memory_bytes", Json::num(r.memory_bytes as f64)),
+                        ("partitions_scanned", Json::num(r.partitions_scanned as f64)),
+                        ("partitions_targeted", Json::num(r.partitions_targeted as f64)),
+                        ("rows_scanned", Json::num(r.rows_scanned as f64)),
+                        ("bytes_materialized", Json::num(r.bytes_materialized as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Simple scoped timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(scanned: usize) -> CounterSnapshot {
+        CounterSnapshot {
+            partitions_scanned: scanned,
+            rows_scanned: scanned * 100,
+            bytes_materialized: scanned * 1000,
+            partitions_targeted: 0,
+        }
+    }
+
+    #[test]
+    fn records_deltas() {
+        let mut m = SessionMetrics::new();
+        m.record(1, "default", 0.5, 1 << 20, snap(0), snap(15));
+        m.record(2, "default", 0.7, 2 << 20, snap(15), snap(30));
+        assert_eq!(m.records[0].partitions_scanned, 15);
+        assert_eq!(m.records[1].partitions_scanned, 15);
+        assert_eq!(m.records[1].rows_scanned, 1500);
+    }
+
+    #[test]
+    fn accumulated_time_monotone() {
+        let mut m = SessionMetrics::new();
+        for i in 1..=5 {
+            m.record(i, "oseba", 0.1 * i as f64, i << 20, snap(0), snap(0));
+        }
+        let acc = m.accumulated_time();
+        assert_eq!(acc.len(), 5);
+        assert!(acc.windows(2).all(|w| w[1] > w[0]));
+        assert!((acc[4] - 1.5).abs() < 1e-9);
+        assert_eq!(m.memory_series(), vec![1 << 20, 2 << 20, 3 << 20, 4 << 20, 5 << 20]);
+    }
+
+    #[test]
+    fn json_and_table_render() {
+        let mut m = SessionMetrics::new();
+        m.record(1, "oseba", 0.25, 42, snap(0), snap(1));
+        let j = m.to_json().to_string();
+        assert!(j.contains("\"phase\":1"));
+        assert!(j.contains("\"method\":\"oseba\""));
+        let t = m.table();
+        assert!(t.contains("oseba"));
+        assert!(t.contains("phase"));
+    }
+
+    #[test]
+    fn timer_runs() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.secs() >= 0.004);
+    }
+}

@@ -1,0 +1,224 @@
+//! Artifact manifest: the contract `python/compile/aot.py` writes and the
+//! rust runtime honours (entry names, HLO file paths, parameter/result
+//! shapes, global constants like `block_rows`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{OsebaError, Result};
+use crate::util::json::Json;
+
+/// Shape + dtype of one parameter or result.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpecDesc {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl SpecDesc {
+    fn from_json(j: &Json) -> Result<SpecDesc> {
+        let shape = j
+            .require("shape")?
+            .as_arr()
+            .ok_or_else(|| OsebaError::Artifact("shape not an array".into()))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| OsebaError::Artifact("bad dim".into())))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .require("dtype")?
+            .as_str()
+            .ok_or_else(|| OsebaError::Artifact("dtype not a string".into()))?
+            .to_string();
+        Ok(SpecDesc { shape, dtype })
+    }
+}
+
+/// One AOT entry point.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EntryDesc {
+    pub name: String,
+    /// HLO text file, absolute.
+    pub path: PathBuf,
+    pub params: Vec<SpecDesc>,
+    pub results: Vec<SpecDesc>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub block_rows: usize,
+    pub hist_bins: usize,
+    pub ma_windows: Vec<usize>,
+    pub fingerprint: String,
+    pub entries: BTreeMap<String, EntryDesc>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            OsebaError::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` anchors relative HLO file names.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let block_rows = j
+            .require("block_rows")?
+            .as_usize()
+            .ok_or_else(|| OsebaError::Artifact("block_rows not an int".into()))?;
+        let hist_bins = j
+            .require("hist_bins")?
+            .as_usize()
+            .ok_or_else(|| OsebaError::Artifact("hist_bins not an int".into()))?;
+        let ma_windows = j
+            .require("ma_windows")?
+            .as_arr()
+            .ok_or_else(|| OsebaError::Artifact("ma_windows not an array".into()))?
+            .iter()
+            .map(|w| w.as_usize().ok_or_else(|| OsebaError::Artifact("bad window".into())))
+            .collect::<Result<Vec<_>>>()?;
+        let fingerprint = j
+            .require("fingerprint")?
+            .as_str()
+            .unwrap_or_default()
+            .to_string();
+        let mut entries = BTreeMap::new();
+        let raw = j
+            .require("entries")?
+            .as_obj()
+            .ok_or_else(|| OsebaError::Artifact("entries not an object".into()))?;
+        for (name, e) in raw {
+            let file = e
+                .require("file")?
+                .as_str()
+                .ok_or_else(|| OsebaError::Artifact("file not a string".into()))?;
+            let params = e
+                .require("params")?
+                .as_arr()
+                .ok_or_else(|| OsebaError::Artifact("params not an array".into()))?
+                .iter()
+                .map(SpecDesc::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let results = e
+                .require("results")?
+                .as_arr()
+                .ok_or_else(|| OsebaError::Artifact("results not an array".into()))?
+                .iter()
+                .map(SpecDesc::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                EntryDesc { name: name.clone(), path: dir.join(file), params, results },
+            );
+        }
+        if entries.is_empty() {
+            return Err(OsebaError::Artifact("manifest has no entries".into()));
+        }
+        Ok(Manifest { block_rows, hist_bins, ma_windows, fingerprint, entries })
+    }
+
+    /// Entry lookup with a helpful error.
+    pub fn entry(&self, name: &str) -> Result<&EntryDesc> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| OsebaError::Artifact(format!("no artifact entry '{name}'")))
+    }
+
+    /// The moving-average entry name for `window`, validated against the
+    /// lowered window set.
+    pub fn ma_entry(&self, window: usize) -> Result<String> {
+        if self.ma_windows.contains(&window) {
+            Ok(format!("moving_average_w{window}"))
+        } else {
+            Err(OsebaError::Artifact(format!(
+                "window {window} not AOT-compiled (available: {:?})",
+                self.ma_windows
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "block_rows": 4096,
+      "hist_bins": 64,
+      "ma_windows": [4, 16, 64],
+      "fingerprint": "abc123",
+      "entries": {
+        "segment_stats": {
+          "file": "segment_stats.hlo.txt",
+          "params": [
+            {"shape": [4096], "dtype": "float32"},
+            {"shape": [], "dtype": "int32"},
+            {"shape": [], "dtype": "int32"}
+          ],
+          "results": [
+            {"shape": [], "dtype": "float32"},
+            {"shape": [], "dtype": "float32"},
+            {"shape": [], "dtype": "float32"},
+            {"shape": [], "dtype": "float32"},
+            {"shape": [], "dtype": "float32"}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert_eq!(m.block_rows, 4096);
+        assert_eq!(m.ma_windows, vec![4, 16, 64]);
+        let e = m.entry("segment_stats").unwrap();
+        assert_eq!(e.path, Path::new("/x/segment_stats.hlo.txt"));
+        assert_eq!(e.params.len(), 3);
+        assert_eq!(e.params[0].shape, vec![4096]);
+        assert_eq!(e.results.len(), 5);
+    }
+
+    #[test]
+    fn missing_entry_is_error() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn ma_entry_validates_window() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert_eq!(m.ma_entry(16).unwrap(), "moving_average_w16");
+        assert!(m.ma_entry(5).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_entries() {
+        let text = r#"{"block_rows":1,"hist_bins":1,"ma_windows":[],"fingerprint":"","entries":{}}"#;
+        assert!(Manifest::parse(text, Path::new("/x")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        // Exercised against the actual artifacts when present (CI builds
+        // them via `make artifacts` before `cargo test`).
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.block_rows, 4096);
+            assert!(m.entries.contains_key("segment_stats"));
+            assert!(m.entries.contains_key("distance"));
+            assert!(m.entries.contains_key("histogram64"));
+            for w in &m.ma_windows {
+                assert!(m.entries.contains_key(&format!("moving_average_w{w}")));
+            }
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! [`AnalysisBackend`] — the per-block kernel interface both execution
+//! engines implement:
+//!
+//! * [`crate::runtime::native::NativeBackend`] — pure rust, mirrors
+//!   `python/compile/kernels/ref.py` exactly; needs no artifacts.
+//! * [`crate::runtime::service::KernelHandle`] — dispatches to the
+//!   AOT-compiled HLO executables on the PJRT service thread (the paper's
+//!   three-layer path).
+//!
+//! All operations are *masked block* operations: `block` is one column
+//! block, `[start, end)` delimits the selected rows, and outputs follow the
+//! kernel contracts in `python/compile/kernels/` (identity sentinels for
+//! empty ranges, zeros outside the valid MA region, ...).
+
+use crate::error::Result;
+use crate::util::stats::{DistancePartial, Moments};
+
+/// Block-level analysis kernels.
+pub trait AnalysisBackend: Send + Sync {
+    /// Implementation name ("native" / "hlo") for metrics and bench labels.
+    fn name(&self) -> &'static str;
+
+    /// Required block length, or `None` if any length is accepted.
+    fn block_rows(&self) -> Option<usize>;
+
+    /// Masked moments of `block[start..end]`.
+    fn segment_stats(&self, block: &[f32], start: usize, end: usize) -> Result<Moments>;
+
+    /// Trailing moving average; output has `block.len()` entries, zero
+    /// outside `[start+window-1, end)`.
+    fn moving_average(
+        &self,
+        block: &[f32],
+        start: usize,
+        end: usize,
+        window: usize,
+    ) -> Result<Vec<f32>>;
+
+    /// Fused moments-of-moving-average (trend statistics).
+    fn ma_stats(&self, block: &[f32], start: usize, end: usize, window: usize)
+        -> Result<Moments>;
+
+    /// Distance partials between aligned blocks over `[start, end)`.
+    fn distance(&self, a: &[f32], b: &[f32], start: usize, end: usize)
+        -> Result<DistancePartial>;
+
+    /// 64-bin histogram of `block[start..end]` over `[lo, hi)`.
+    fn histogram64(
+        &self,
+        block: &[f32],
+        start: usize,
+        end: usize,
+        lo: f32,
+        hi: f32,
+    ) -> Result<Vec<f32>>;
+
+    /// Batched moments over many blocks (amortizes dispatch overhead; the
+    /// default loops, the HLO service overrides with one queue submission).
+    fn segment_stats_batch(&self, blocks: &[(&[f32], usize, usize)]) -> Result<Vec<Moments>> {
+        blocks.iter().map(|(b, s, e)| self.segment_stats(b, *s, *e)).collect()
+    }
+
+    /// Execution-engine counters, when the backend keeps them (the HLO
+    /// kernel service does; the native backend has none).
+    fn service_stats(&self) -> Option<crate::runtime::service::ServiceStats> {
+        None
+    }
+}
+
+/// Shared argument validation for implementations with fixed block length.
+pub fn check_block_len(expected: usize, got: usize, what: &str) -> Result<()> {
+    if expected != got {
+        return Err(crate::error::OsebaError::Runtime(format!(
+            "{what}: block length {got} != AOT block_rows {expected}"
+        )));
+    }
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! The AOT runtime: artifact manifests, the PJRT execution engine, the
+//! kernel service thread, and the backend abstraction the analyses target.
+//!
+//! Python never runs here — `artifacts/*.hlo.txt` were lowered once at
+//! build time by `python/compile/aot.py` (see DESIGN.md §3).
+
+pub mod artifacts;
+pub mod backend;
+pub mod native;
+pub mod pjrt;
+pub mod service;
+
+pub use artifacts::Manifest;
+pub use backend::AnalysisBackend;
+pub use native::NativeBackend;
+pub use pjrt::PjRtRuntime;
+pub use service::{spawn as spawn_kernel_service, KernelHandle, ServiceStats};
+
+use std::sync::Arc;
+
+use crate::config::BackendKind;
+use crate::error::Result;
+
+/// Construct the configured backend: `Hlo` spawns the kernel service over
+/// `artifacts_dir` (precompiling all entries); `Native` needs nothing.
+pub fn make_backend(kind: BackendKind, artifacts_dir: &str) -> Result<Arc<dyn AnalysisBackend>> {
+    match kind {
+        BackendKind::Native => Ok(Arc::new(NativeBackend)),
+        BackendKind::Hlo => Ok(Arc::new(spawn_kernel_service(artifacts_dir, true)?)),
+    }
+}

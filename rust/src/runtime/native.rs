@@ -1,0 +1,243 @@
+//! Pure-rust reference backend.
+//!
+//! Semantics mirror `python/compile/kernels/ref.py` bit-for-bit where
+//! possible (f32 accumulation for sums to match the kernels' f32 math —
+//! important so the HLO-vs-native integration tests can use tight
+//! tolerances). Accepts any block length.
+
+use crate::error::Result;
+use crate::runtime::backend::AnalysisBackend;
+use crate::util::stats::{DistancePartial, Moments};
+
+/// The no-artifacts execution engine (baseline + test oracle).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+const NEG_INF: f32 = -3.4e38;
+const POS_INF: f32 = 3.4e38;
+const HIST_BINS: usize = 64;
+
+fn clamp_range(len: usize, start: usize, end: usize) -> (usize, usize) {
+    let end = end.min(len);
+    (start.min(end), end)
+}
+
+impl AnalysisBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn block_rows(&self) -> Option<usize> {
+        None
+    }
+
+    fn segment_stats(&self, block: &[f32], start: usize, end: usize) -> Result<Moments> {
+        let (start, end) = clamp_range(block.len(), start, end);
+        // f32 partial sums (like the kernel), widened at the partial level.
+        let mut mx = NEG_INF;
+        let mut mn = POS_INF;
+        let mut sum = 0f32;
+        let mut sumsq = 0f32;
+        for &x in &block[start..end] {
+            mx = mx.max(x);
+            mn = mn.min(x);
+            sum += x;
+            sumsq += x * x;
+        }
+        Ok(Moments::from_kernel(mx, mn, sum, sumsq, (end - start) as f32))
+    }
+
+    fn moving_average(
+        &self,
+        block: &[f32],
+        start: usize,
+        end: usize,
+        window: usize,
+    ) -> Result<Vec<f32>> {
+        let (start, end) = clamp_range(block.len(), start, end);
+        let mut out = vec![0f32; block.len()];
+        if window == 0 || end - start < window {
+            return Ok(out);
+        }
+        // Rolling sum over the selection (cumsum-style, matching kernel).
+        let mut acc = 0f32;
+        for i in start..end {
+            acc += block[i];
+            if i >= start + window {
+                acc -= block[i - window];
+            }
+            if i >= start + window - 1 {
+                out[i] = acc / window as f32;
+            }
+        }
+        Ok(out)
+    }
+
+    fn ma_stats(
+        &self,
+        block: &[f32],
+        start: usize,
+        end: usize,
+        window: usize,
+    ) -> Result<Moments> {
+        let ma = self.moving_average(block, start, end, window)?;
+        let (start, end) = clamp_range(block.len(), start, end);
+        let s = (start + window.saturating_sub(1)).min(end);
+        self.segment_stats(&ma, s, end)
+    }
+
+    fn distance(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        start: usize,
+        end: usize,
+    ) -> Result<DistancePartial> {
+        debug_assert_eq!(a.len(), b.len());
+        let (start, end) = clamp_range(a.len().min(b.len()), start, end);
+        let mut l1 = 0f32;
+        let mut l2sq = 0f32;
+        let mut linf = 0f32;
+        for i in start..end {
+            let d = a[i] - b[i];
+            let ad = d.abs();
+            l1 += ad;
+            l2sq += d * d;
+            linf = linf.max(ad);
+        }
+        Ok(DistancePartial::from_kernel(l1, l2sq, linf, (end - start) as f32))
+    }
+
+    fn histogram64(
+        &self,
+        block: &[f32],
+        start: usize,
+        end: usize,
+        lo: f32,
+        hi: f32,
+    ) -> Result<Vec<f32>> {
+        let (start, end) = clamp_range(block.len(), start, end);
+        let width = (hi - lo) / HIST_BINS as f32;
+        let mut bins = vec![0f32; HIST_BINS];
+        for &x in &block[start..end] {
+            // Same clamp semantics as the kernel: out-of-range values land
+            // in the edge bins.
+            let raw = ((x - lo) / width) as i64;
+            let b = raw.clamp(0, HIST_BINS as i64 - 1) as usize;
+            bins[b] += 1.0;
+        }
+        Ok(bins)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn backend() -> NativeBackend {
+        NativeBackend
+    }
+
+    #[test]
+    fn stats_basic() {
+        let b = backend();
+        let m = b.segment_stats(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0], 0, 8).unwrap();
+        assert_eq!(m.mean(), 5.0);
+        assert!((m.std() - 2.0).abs() < 1e-6);
+        assert_eq!(m.max, 9.0);
+        assert_eq!(m.min, 2.0);
+    }
+
+    #[test]
+    fn stats_empty_range_sentinels() {
+        let m = backend().segment_stats(&[1.0; 8], 3, 3).unwrap();
+        assert!(m.is_empty());
+        assert!(m.max < -1e38 && m.min > 1e38);
+    }
+
+    #[test]
+    fn stats_range_clamped() {
+        let m = backend().segment_stats(&[1.0; 8], 4, 100).unwrap();
+        assert_eq!(m.count, 4.0);
+    }
+
+    #[test]
+    fn ma_matches_naive() {
+        let mut rng = Xoshiro256::seeded(5);
+        let xs: Vec<f32> = (0..256).map(|_| rng.next_f32() * 10.0).collect();
+        let (s, e, w) = (13, 201, 16);
+        let got = backend().moving_average(&xs, s, e, w).unwrap();
+        for i in 0..xs.len() {
+            let want = if i >= s + w - 1 && i < e {
+                xs[i + 1 - w..=i].iter().sum::<f32>() / w as f32
+            } else {
+                0.0
+            };
+            assert!((got[i] - want).abs() < 1e-3, "i={i} got={} want={want}", got[i]);
+        }
+    }
+
+    #[test]
+    fn ma_window_bigger_than_selection() {
+        let got = backend().moving_average(&[1.0; 10], 2, 5, 8).unwrap();
+        assert!(got.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn ma_zero_window_all_zero() {
+        let got = backend().moving_average(&[1.0; 4], 0, 4, 0).unwrap();
+        assert_eq!(got, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn ma_stats_matches_composition() {
+        let xs: Vec<f32> = (0..128).map(|i| (i as f32).cos()).collect();
+        let b = backend();
+        let fused = b.ma_stats(&xs, 8, 120, 4).unwrap();
+        let ma = b.moving_average(&xs, 8, 120, 4).unwrap();
+        let composed = b.segment_stats(&ma, 11, 120).unwrap();
+        assert_eq!(fused, composed);
+    }
+
+    #[test]
+    fn distance_basic() {
+        let a = [0f32; 64];
+        let b = [1f32; 64];
+        let d = backend().distance(&a, &b, 16, 48, ).unwrap();
+        assert_eq!(d.l1, 32.0);
+        assert_eq!(d.l2sq, 32.0);
+        assert_eq!(d.linf, 1.0);
+        assert_eq!(d.count, 32.0);
+    }
+
+    #[test]
+    fn distance_identical_zero() {
+        let a: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let d = backend().distance(&a, &a, 0, 100).unwrap();
+        assert_eq!((d.l1, d.l2sq, d.linf as f64), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn histogram_mass_and_edges() {
+        let mut xs = vec![0.5f32; 90];
+        xs.extend([*&-5.0f32, 5.0]);
+        let h = backend().histogram64(&xs, 0, 92, 0.0, 1.0).unwrap();
+        assert_eq!(h.iter().sum::<f32>(), 92.0);
+        assert_eq!(h[32], 90.0); // 0.5 → bin 32
+        assert_eq!(h[0], 1.0); // clamped low
+        assert_eq!(h[63], 1.0); // clamped high
+    }
+
+    #[test]
+    fn batch_matches_singles() {
+        let b = backend();
+        let x: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..64).map(|i| (64 - i) as f32).collect();
+        let batch = b
+            .segment_stats_batch(&[(&x, 0, 64), (&y, 10, 20)])
+            .unwrap();
+        assert_eq!(batch[0], b.segment_stats(&x, 0, 64).unwrap());
+        assert_eq!(batch[1], b.segment_stats(&y, 10, 20).unwrap());
+    }
+}

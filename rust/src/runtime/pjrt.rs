@@ -1,0 +1,117 @@
+//! Thread-local PJRT runtime: loads HLO-text artifacts, compiles them once
+//! on the CPU client, and executes them with `Literal` inputs.
+//!
+//! `PjRtClient` wraps an `Rc` internally, so this type is deliberately
+//! **not** `Send`/`Sync`; cross-thread access goes through the
+//! [`crate::runtime::service::KernelService`] thread that owns one of
+//! these (the single-device execution queue).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{OsebaError, Result};
+use crate::runtime::artifacts::Manifest;
+
+/// One compiled executable per manifest entry, compiled lazily (or eagerly
+/// via [`PjRtRuntime::precompile_all`]).
+pub struct PjRtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative number of kernel executions (perf accounting).
+    pub executions: u64,
+}
+
+impl PjRtRuntime {
+    /// Create a CPU-client runtime over the artifacts in `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<PjRtRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjRtRuntime { client, manifest, executables: HashMap::new(), executions: 0 })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile every manifest entry now (deterministic first-query latency).
+    pub fn precompile_all(&mut self) -> Result<()> {
+        let names: Vec<String> = self.manifest.entries.keys().cloned().collect();
+        for n in names {
+            self.ensure_compiled(&n)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.entry(name)?.clone();
+        let path_str = entry.path.to_str().ok_or_else(|| {
+            OsebaError::Artifact(format!("non-utf8 artifact path {:?}", entry.path))
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(path_str).map_err(|e| {
+            OsebaError::Artifact(format!("parsing {} failed: {e}", entry.path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute entry `name` with `args`, returning the flattened result
+    /// tuple (aot.py lowers everything with `return_tuple=True`).
+    pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let entry = self.manifest.entry(name)?;
+        if args.len() != entry.params.len() {
+            return Err(OsebaError::Runtime(format!(
+                "{name}: expected {} args, got {}",
+                entry.params.len(),
+                args.len()
+            )));
+        }
+        let exe = self.executables.get(name).expect("just compiled");
+        let mut out = exe.execute::<xla::Literal>(args)?;
+        self.executions += 1;
+        // Single device, single output: an N-tuple literal.
+        let buf = out
+            .pop()
+            .and_then(|mut d| d.pop())
+            .ok_or_else(|| OsebaError::Runtime(format!("{name}: empty result")))?;
+        let lit = buf.to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// f32 scalars from a result tuple (the common kernel-output case).
+    pub fn to_f32_scalars(results: &[xla::Literal]) -> Result<Vec<f32>> {
+        results.iter().map(|l| Ok(l.to_vec::<f32>()?[0])).collect()
+    }
+}
+
+/// Literal construction helpers shared by the service and tests.
+pub mod lit {
+    use super::*;
+
+    /// f32 vector literal of exactly `len` elements (zero-padded/truncated
+    /// guard: callers must already supply the right length).
+    pub fn f32_vec(xs: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(xs)
+    }
+
+    /// i32 scalar literal.
+    pub fn i32_scalar(v: i32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    /// f32 scalar literal.
+    pub fn f32_scalar(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    /// Extract an f32 vector result.
+    pub fn to_f32_vec(l: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(l.to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,443 @@
+//! The kernel service: a dedicated thread owning the (thread-bound) PJRT
+//! runtime, fed by an mpsc request queue.
+//!
+//! Architecture note (DESIGN.md §3): the PJRT CPU client is a single
+//! "device" whose handles are `!Send`; pinning it to one service thread
+//! with a submission queue mirrors how serving systems front a device
+//! engine with router threads. [`KernelHandle`] is cheap to clone,
+//! `Send + Sync`, and implements [`AnalysisBackend`], so coordinator
+//! workers dispatch kernels without knowing where they run. Batched
+//! requests ride the queue as one message (one wake-up, N executions) —
+//! the batching lever the ablation bench measures.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::error::{OsebaError, Result};
+use crate::runtime::backend::{check_block_len, AnalysisBackend};
+use crate::runtime::pjrt::{lit, PjRtRuntime};
+use crate::util::stats::{DistancePartial, Moments};
+
+enum Request {
+    Stats { block: Vec<f32>, start: i32, end: i32, reply: mpsc::Sender<Result<Moments>> },
+    StatsBatch {
+        blocks: Vec<(Vec<f32>, i32, i32)>,
+        reply: mpsc::Sender<Result<Vec<Moments>>>,
+    },
+    Ma {
+        block: Vec<f32>,
+        start: i32,
+        end: i32,
+        window: usize,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    MaStats {
+        block: Vec<f32>,
+        start: i32,
+        end: i32,
+        window: usize,
+        reply: mpsc::Sender<Result<Moments>>,
+    },
+    Distance {
+        a: Vec<f32>,
+        b: Vec<f32>,
+        start: i32,
+        end: i32,
+        reply: mpsc::Sender<Result<DistancePartial>>,
+    },
+    Hist {
+        block: Vec<f32>,
+        start: i32,
+        end: i32,
+        lo: f32,
+        hi: f32,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    ServiceStats { reply: mpsc::Sender<ServiceStats> },
+}
+
+/// Cumulative service-side counters (perf accounting, EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceStats {
+    /// Kernel executions performed.
+    pub executions: u64,
+    /// Requests (batch = 1 request).
+    pub requests: u64,
+    /// Total seconds spent inside PJRT execution.
+    pub busy_secs: f64,
+}
+
+/// Cloneable, thread-safe handle to the kernel service.
+#[derive(Clone)]
+pub struct KernelHandle {
+    tx: Arc<Mutex<mpsc::Sender<Request>>>,
+    block_rows: usize,
+    ma_windows: Vec<usize>,
+}
+
+/// Spawn the service thread over the artifacts in `dir`. Fails fast if the
+/// manifest is missing or the PJRT client cannot start. When `precompile`
+/// is set, all entries are compiled before this returns.
+pub fn spawn(dir: impl Into<std::path::PathBuf>, precompile: bool) -> Result<KernelHandle> {
+    let dir = dir.into();
+    let (tx, rx) = mpsc::channel::<Request>();
+    let (init_tx, init_rx) = mpsc::channel::<Result<(usize, Vec<usize>)>>();
+    std::thread::Builder::new()
+        .name("oseba-kernel-service".into())
+        .spawn(move || {
+            let mut rt = match PjRtRuntime::new(&dir) {
+                Ok(mut rt) => {
+                    if precompile {
+                        if let Err(e) = rt.precompile_all() {
+                            let _ = init_tx.send(Err(e));
+                            return;
+                        }
+                    }
+                    let m = rt.manifest();
+                    let _ = init_tx.send(Ok((m.block_rows, m.ma_windows.clone())));
+                    rt
+                }
+                Err(e) => {
+                    let _ = init_tx.send(Err(e));
+                    return;
+                }
+            };
+            serve(&mut rt, rx);
+        })
+        .map_err(|e| OsebaError::Runtime(format!("spawn kernel service: {e}")))?;
+    let (block_rows, ma_windows) = init_rx
+        .recv()
+        .map_err(|_| OsebaError::Runtime("kernel service died during init".into()))??;
+    Ok(KernelHandle { tx: Arc::new(Mutex::new(tx)), block_rows, ma_windows })
+}
+
+fn serve(rt: &mut PjRtRuntime, rx: mpsc::Receiver<Request>) {
+    let mut stats = ServiceStats::default();
+    while let Ok(req) = rx.recv() {
+        stats.requests += 1;
+        let t0 = Instant::now();
+        match req {
+            Request::Stats { block, start, end, reply } => {
+                let _ = reply.send(run_stats(rt, "segment_stats", &block, start, end));
+                stats.executions += 1;
+            }
+            Request::StatsBatch { blocks, reply } => {
+                let (out, execs) = run_stats_batch(rt, &blocks);
+                let _ = reply.send(out);
+                stats.executions += execs;
+            }
+            Request::Ma { block, start, end, window, reply } => {
+                let _ = reply.send(run_ma(rt, &block, start, end, window));
+                stats.executions += 1;
+            }
+            Request::MaStats { block, start, end, window, reply } => {
+                let _ = reply
+                    .send(run_stats(rt, &format!("ma_stats_w{window}"), &block, start, end));
+                stats.executions += 1;
+            }
+            Request::Distance { a, b, start, end, reply } => {
+                let _ = reply.send(run_distance(rt, &a, &b, start, end));
+                stats.executions += 1;
+            }
+            Request::Hist { block, start, end, lo, hi, reply } => {
+                let _ = reply.send(run_hist(rt, &block, start, end, lo, hi));
+                stats.executions += 1;
+            }
+            Request::ServiceStats { reply } => {
+                let _ = reply.send(stats);
+            }
+        }
+        stats.busy_secs += t0.elapsed().as_secs_f64();
+    }
+}
+
+/// Batched moments: pack tasks into the grid artifacts (`segment_stats_bN`)
+/// when they exist, cutting PJRT dispatch overhead ~N× (EXPERIMENTS.md
+/// §Perf); falls back to per-block executions otherwise. Multiple batch
+/// sizes are packed greedily — the largest size whose padding waste stays
+/// under 50% — so a 23-block task list runs as one b128? no: one b16 + …
+/// concretely `128` only engages from 64 pending blocks upward. Returns
+/// the results plus the number of executions performed.
+fn run_stats_batch(
+    rt: &mut PjRtRuntime,
+    blocks: &[(Vec<f32>, i32, i32)],
+) -> (Result<Vec<Moments>>, u64) {
+    // Available grid sizes, largest first.
+    let mut sizes: Vec<(String, usize)> = rt
+        .manifest()
+        .entries
+        .keys()
+        .filter_map(|k| {
+            k.strip_prefix("segment_stats_b")
+                .and_then(|n| n.parse::<usize>().ok())
+                .map(|b| (k.clone(), b))
+        })
+        .collect();
+    sizes.sort_by(|a, b| b.1.cmp(&a.1));
+
+    let mut out = Vec::with_capacity(blocks.len());
+    let mut execs = 0u64;
+    let mut rest = blocks;
+    while !rest.is_empty() {
+        // Largest size with <50% padding waste; singles below half the
+        // smallest grid.
+        let pick = sizes.iter().find(|(_, b)| rest.len() * 2 >= *b).cloned();
+        let Some((entry, bsz)) = pick else {
+            for (b, s, e) in rest {
+                match run_stats(rt, "segment_stats", b, *s, *e) {
+                    Ok(m) => out.push(m),
+                    Err(e) => return (Err(e), execs),
+                }
+                execs += 1;
+            }
+            break;
+        };
+        let chunk = &rest[..rest.len().min(bsz)];
+        rest = &rest[chunk.len()..];
+        match run_stats_grid(rt, &entry, bsz, chunk) {
+            Ok(ms) => out.extend(ms),
+            Err(e) => return (Err(e), execs + 1),
+        }
+        execs += 1;
+    }
+    (Ok(out), execs)
+}
+
+/// One grid execution over up to `bsz` tasks (zero-padded; padded rows use
+/// `start == end == 0`, the identity partial).
+fn run_stats_grid(
+    rt: &mut PjRtRuntime,
+    entry: &str,
+    bsz: usize,
+    chunk: &[(Vec<f32>, i32, i32)],
+) -> Result<Vec<Moments>> {
+    let rows = rt.manifest().block_rows;
+    let mut xs = vec![0f32; bsz * rows];
+    let mut starts = vec![0i32; bsz];
+    let mut ends = vec![0i32; bsz];
+    for (i, (b, s, e)) in chunk.iter().enumerate() {
+        xs[i * rows..i * rows + b.len()].copy_from_slice(b);
+        starts[i] = *s;
+        ends[i] = *e;
+    }
+    let x_lit = lit::f32_vec(&xs).reshape(&[bsz as i64, rows as i64])?;
+    let res = rt.execute(
+        entry,
+        &[x_lit, xla::Literal::vec1(&starts), xla::Literal::vec1(&ends)],
+    )?;
+    let cols: Vec<Vec<f32>> = res.iter().map(lit::to_f32_vec).collect::<Result<_>>()?;
+    Ok((0..chunk.len())
+        .map(|i| Moments::from_kernel(cols[0][i], cols[1][i], cols[2][i], cols[3][i], cols[4][i]))
+        .collect())
+}
+
+fn run_stats(rt: &mut PjRtRuntime, entry: &str, block: &[f32], s: i32, e: i32) -> Result<Moments> {
+    let out = rt.execute(
+        entry,
+        &[lit::f32_vec(block), lit::i32_scalar(s), lit::i32_scalar(e)],
+    )?;
+    let v = PjRtRuntime::to_f32_scalars(&out)?;
+    if v.len() != 5 {
+        return Err(OsebaError::Runtime(format!("{entry}: expected 5 outputs, got {}", v.len())));
+    }
+    Ok(Moments::from_kernel(v[0], v[1], v[2], v[3], v[4]))
+}
+
+fn run_ma(rt: &mut PjRtRuntime, block: &[f32], s: i32, e: i32, window: usize) -> Result<Vec<f32>> {
+    let entry = rt.manifest().ma_entry(window)?;
+    let out = rt.execute(
+        &entry,
+        &[lit::f32_vec(block), lit::i32_scalar(s), lit::i32_scalar(e)],
+    )?;
+    lit::to_f32_vec(&out[0])
+}
+
+fn run_distance(
+    rt: &mut PjRtRuntime,
+    a: &[f32],
+    b: &[f32],
+    s: i32,
+    e: i32,
+) -> Result<DistancePartial> {
+    let out = rt.execute(
+        "distance",
+        &[lit::f32_vec(a), lit::f32_vec(b), lit::i32_scalar(s), lit::i32_scalar(e)],
+    )?;
+    let v = PjRtRuntime::to_f32_scalars(&out)?;
+    Ok(DistancePartial::from_kernel(v[0], v[1], v[2], v[3]))
+}
+
+fn run_hist(
+    rt: &mut PjRtRuntime,
+    block: &[f32],
+    s: i32,
+    e: i32,
+    lo: f32,
+    hi: f32,
+) -> Result<Vec<f32>> {
+    let out = rt.execute(
+        "histogram64",
+        &[
+            lit::f32_vec(block),
+            lit::i32_scalar(s),
+            lit::i32_scalar(e),
+            lit::f32_scalar(lo),
+            lit::f32_scalar(hi),
+        ],
+    )?;
+    lit::to_f32_vec(&out[0])
+}
+
+impl KernelHandle {
+    fn send(&self, req: Request) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| OsebaError::Runtime("kernel service is gone".into()))
+    }
+
+    fn recv<T>(&self, rx: mpsc::Receiver<Result<T>>) -> Result<T> {
+        rx.recv()
+            .map_err(|_| OsebaError::Runtime("kernel service dropped reply".into()))?
+    }
+
+    /// Service-side counters.
+    pub fn service_stats(&self) -> Result<ServiceStats> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Request::ServiceStats { reply: tx })?;
+        rx.recv().map_err(|_| OsebaError::Runtime("kernel service dropped reply".into()))
+    }
+
+    /// Moving-average windows available in the artifacts.
+    pub fn ma_windows(&self) -> &[usize] {
+        &self.ma_windows
+    }
+}
+
+impl AnalysisBackend for KernelHandle {
+    fn name(&self) -> &'static str {
+        "hlo"
+    }
+
+    fn service_stats(&self) -> Option<ServiceStats> {
+        KernelHandle::service_stats(self).ok()
+    }
+
+    fn block_rows(&self) -> Option<usize> {
+        Some(self.block_rows)
+    }
+
+    fn segment_stats(&self, block: &[f32], start: usize, end: usize) -> Result<Moments> {
+        check_block_len(self.block_rows, block.len(), "segment_stats")?;
+        let (tx, rx) = mpsc::channel();
+        self.send(Request::Stats {
+            block: block.to_vec(),
+            start: start as i32,
+            end: end as i32,
+            reply: tx,
+        })?;
+        self.recv(rx)
+    }
+
+    fn segment_stats_batch(&self, blocks: &[(&[f32], usize, usize)]) -> Result<Vec<Moments>> {
+        for (b, _, _) in blocks {
+            check_block_len(self.block_rows, b.len(), "segment_stats_batch")?;
+        }
+        let (tx, rx) = mpsc::channel();
+        self.send(Request::StatsBatch {
+            blocks: blocks
+                .iter()
+                .map(|(b, s, e)| (b.to_vec(), *s as i32, *e as i32))
+                .collect(),
+            reply: tx,
+        })?;
+        self.recv(rx)
+    }
+
+    fn moving_average(
+        &self,
+        block: &[f32],
+        start: usize,
+        end: usize,
+        window: usize,
+    ) -> Result<Vec<f32>> {
+        check_block_len(self.block_rows, block.len(), "moving_average")?;
+        let (tx, rx) = mpsc::channel();
+        self.send(Request::Ma {
+            block: block.to_vec(),
+            start: start as i32,
+            end: end as i32,
+            window,
+            reply: tx,
+        })?;
+        self.recv(rx)
+    }
+
+    fn ma_stats(
+        &self,
+        block: &[f32],
+        start: usize,
+        end: usize,
+        window: usize,
+    ) -> Result<Moments> {
+        check_block_len(self.block_rows, block.len(), "ma_stats")?;
+        if !self.ma_windows.contains(&window) {
+            return Err(OsebaError::Artifact(format!(
+                "window {window} not AOT-compiled (available: {:?})",
+                self.ma_windows
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        self.send(Request::MaStats {
+            block: block.to_vec(),
+            start: start as i32,
+            end: end as i32,
+            window,
+            reply: tx,
+        })?;
+        self.recv(rx)
+    }
+
+    fn distance(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        start: usize,
+        end: usize,
+    ) -> Result<DistancePartial> {
+        check_block_len(self.block_rows, a.len(), "distance.a")?;
+        check_block_len(self.block_rows, b.len(), "distance.b")?;
+        let (tx, rx) = mpsc::channel();
+        self.send(Request::Distance {
+            a: a.to_vec(),
+            b: b.to_vec(),
+            start: start as i32,
+            end: end as i32,
+            reply: tx,
+        })?;
+        self.recv(rx)
+    }
+
+    fn histogram64(
+        &self,
+        block: &[f32],
+        start: usize,
+        end: usize,
+        lo: f32,
+        hi: f32,
+    ) -> Result<Vec<f32>> {
+        check_block_len(self.block_rows, block.len(), "histogram64")?;
+        let (tx, rx) = mpsc::channel();
+        self.send(Request::Hist {
+            block: block.to_vec(),
+            start: start as i32,
+            end: end as i32,
+            lo,
+            hi,
+            reply: tx,
+        })?;
+        self.recv(rx)
+    }
+}

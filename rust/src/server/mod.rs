@@ -1,0 +1,296 @@
+//! Interactive query server: a line-delimited JSON protocol over TCP
+//! (std::net + the crate's thread pool), fronting a loaded dataset with
+//! both access paths. This is the "interactive analysis" deployment shape
+//! the paper motivates (§I: selective bulk analysis "usually involves
+//! interactive analysis").
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! → {"op":"stats","lo":3600,"hi":7200,"column":"temperature","method":"oseba"}
+//! ← {"ok":true,"count":2,"max":21.4,"min":20.9,"mean":21.1,"std":0.2,"secs":0.0001}
+//! → {"op":"info"}
+//! ← {"ok":true,"rows":100000,"partitions":15,"memory_bytes":...}
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::{Coordinator, IndexKind, Method};
+use crate::engine::Dataset;
+use crate::error::{OsebaError, Result};
+use crate::index::{ContentIndex, RangeQuery};
+use crate::metrics::Timer;
+use crate::util::json::Json;
+
+/// Server state shared across connections.
+pub struct QueryServer {
+    coord: Arc<Coordinator>,
+    ds: Arc<Dataset>,
+    index: Arc<dyn ContentIndex>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl QueryServer {
+    /// Build over an already-loaded dataset.
+    pub fn new(coord: Arc<Coordinator>, ds: Dataset, index_kind: IndexKind) -> Result<QueryServer> {
+        let index: Arc<dyn ContentIndex> = match index_kind {
+            IndexKind::Cias => Arc::new(crate::index::Cias::build(ds.partitions())?),
+            IndexKind::Table => Arc::new(crate::index::TableIndex::build(ds.partitions())?),
+        };
+        Ok(QueryServer {
+            coord,
+            ds: Arc::new(ds),
+            index,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// Bind and serve until a `{"op":"shutdown"}` request arrives. Returns
+    /// the bound address via `on_bound` (for tests binding port 0).
+    pub fn serve(&self, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        on_bound(listener.local_addr()?);
+        listener.set_nonblocking(true)?;
+        while !self.shutdown.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    // One thread per connection, connections are few and
+                    // long-lived (interactive sessions).
+                    let coord = Arc::clone(&self.coord);
+                    let ds = Arc::clone(&self.ds);
+                    let index = Arc::clone(&self.index);
+                    let shutdown = Arc::clone(&self.shutdown);
+                    std::thread::spawn(move || {
+                        let _ = handle_conn(stream, &coord, &ds, index.as_ref(), &shutdown);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+
+    /// Request shutdown (used by tests and signal handling).
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    coord: &Coordinator,
+    ds: &Dataset,
+    index: &dyn ContentIndex,
+    shutdown: &AtomicBool,
+) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match handle_request(&line, coord, ds, index, shutdown) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(e.to_string())),
+            ]),
+        };
+        writer.write_all(response.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Process one request line (exposed for unit tests — no socket needed).
+pub fn handle_request(
+    line: &str,
+    coord: &Coordinator,
+    ds: &Dataset,
+    index: &dyn ContentIndex,
+    shutdown: &AtomicBool,
+) -> Result<Json> {
+    let req = Json::parse(line)?;
+    let op = req
+        .require("op")?
+        .as_str()
+        .ok_or_else(|| OsebaError::Json("op must be a string".into()))?;
+    match op {
+        "info" => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("rows", Json::num(ds.total_rows() as f64)),
+            ("partitions", Json::num(ds.num_partitions() as f64)),
+            ("memory_bytes", Json::num(coord.context().memory_used() as f64)),
+            ("index", Json::str(index.name())),
+            ("index_bytes", Json::num(index.memory_bytes() as f64)),
+            ("key_min", Json::num(ds.key_min().unwrap_or(0) as f64)),
+            ("key_max", Json::num(ds.key_max().unwrap_or(0) as f64)),
+        ])),
+        "stats" => {
+            let lo = req.require("lo")?.as_i64().ok_or_else(bad_num)?;
+            let hi = req.require("hi")?.as_i64().ok_or_else(bad_num)?;
+            let col_name = req
+                .require("column")?
+                .as_str()
+                .ok_or_else(|| OsebaError::Json("column must be a string".into()))?;
+            let column = ds.schema().column_index(col_name)?;
+            let method: Method = req
+                .get("method")
+                .and_then(|m| m.as_str())
+                .unwrap_or("oseba")
+                .parse()?;
+            let q = RangeQuery::new(lo, hi)?;
+            let timer = Timer::start();
+            let stats = match method {
+                Method::Oseba => coord.analyze_period_oseba(ds, index, q, column)?,
+                Method::Default => {
+                    let (st, filtered) = coord.analyze_period_default(ds, q, column)?;
+                    // The server keeps memory bounded: server-side filtered
+                    // datasets are transient.
+                    coord.context().unpersist(&filtered);
+                    st
+                }
+            };
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("count", Json::num(stats.count as f64)),
+                ("max", Json::num(stats.max as f64)),
+                ("min", Json::num(stats.min as f64)),
+                ("mean", Json::num(stats.mean)),
+                ("std", Json::num(stats.std)),
+                ("method", Json::str(method.label())),
+                ("secs", Json::num(timer.secs())),
+            ]))
+        }
+        "shutdown" => {
+            shutdown.store(true, Ordering::SeqCst);
+            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("bye", Json::Bool(true))]))
+        }
+        other => Err(OsebaError::Json(format!("unknown op '{other}'"))),
+    }
+}
+
+fn bad_num() -> OsebaError {
+    OsebaError::Json("lo/hi must be integers".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AppConfig;
+    use crate::coordinator::Coordinator;
+    use crate::datagen::ClimateGen;
+    use crate::index::Cias;
+    use crate::runtime::NativeBackend;
+
+    fn setup() -> (Coordinator, Dataset, Cias) {
+        let cfg = AppConfig { cluster_workers: 2, ..Default::default() };
+        let coord = Coordinator::new(&cfg, Arc::new(NativeBackend)).unwrap();
+        let ds = coord.load(ClimateGen::default().generate(10_000), 5).unwrap();
+        let index = Cias::build(ds.partitions()).unwrap();
+        (coord, ds, index)
+    }
+
+    #[test]
+    fn info_request() {
+        let (coord, ds, index) = setup();
+        let flag = AtomicBool::new(false);
+        let r = handle_request(r#"{"op":"info"}"#, &coord, &ds, &index, &flag).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("rows").unwrap().as_usize(), Some(10_000));
+        assert_eq!(r.get("index").unwrap().as_str(), Some("cias"));
+    }
+
+    #[test]
+    fn stats_request_both_methods_agree() {
+        let (coord, ds, index) = setup();
+        let flag = AtomicBool::new(false);
+        let mk = |method: &str| {
+            format!(
+                r#"{{"op":"stats","lo":0,"hi":{},"column":"temperature","method":"{method}"}}"#,
+                3600 * 999
+            )
+        };
+        let a = handle_request(&mk("oseba"), &coord, &ds, &index, &flag).unwrap();
+        let b = handle_request(&mk("default"), &coord, &ds, &index, &flag).unwrap();
+        assert_eq!(a.get("count"), b.get("count"));
+        assert_eq!(a.get("max"), b.get("max"));
+        // Default path must not leak server memory.
+        let before = coord.context().memory_used();
+        handle_request(&mk("default"), &coord, &ds, &index, &flag).unwrap();
+        assert_eq!(coord.context().memory_used(), before);
+    }
+
+    #[test]
+    fn malformed_requests_are_errors() {
+        let (coord, ds, index) = setup();
+        let flag = AtomicBool::new(false);
+        assert!(handle_request("{", &coord, &ds, &index, &flag).is_err());
+        assert!(handle_request(r#"{"op":"nope"}"#, &coord, &ds, &index, &flag).is_err());
+        assert!(handle_request(
+            r#"{"op":"stats","lo":5,"hi":1,"column":"temperature"}"#,
+            &coord,
+            &ds,
+            &index,
+            &flag
+        )
+        .is_err());
+        assert!(handle_request(
+            r#"{"op":"stats","lo":0,"hi":10,"column":"bogus"}"#,
+            &coord,
+            &ds,
+            &index,
+            &flag
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn shutdown_sets_flag() {
+        let (coord, ds, index) = setup();
+        let flag = AtomicBool::new(false);
+        let r = handle_request(r#"{"op":"shutdown"}"#, &coord, &ds, &index, &flag).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert!(flag.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let (coord, ds, _index) = setup();
+        let server = QueryServer::new(Arc::new(coord), ds, IndexKind::Cias).unwrap();
+        let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+        let shutdown = server.shutdown_handle();
+        let handle = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", |a| addr_tx.send(a).unwrap()).unwrap();
+        });
+        let addr = addr_rx.recv().unwrap();
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(b"{\"op\":\"stats\",\"lo\":0,\"hi\":360000,\"column\":\"humidity\"}\n")
+            .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("count").unwrap().as_usize(), Some(101));
+
+        stream.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+        let mut line2 = String::new();
+        reader.read_line(&mut line2).unwrap();
+        assert!(line2.contains("bye"));
+        assert!(shutdown.load(Ordering::SeqCst));
+        handle.join().unwrap();
+    }
+}

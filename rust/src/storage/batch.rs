@@ -1,0 +1,156 @@
+//! `RecordBatch`: the raw, unpartitioned columnar loading unit produced by
+//! the data generators and consumed by `Dataset::from_batch`.
+
+use crate::error::{OsebaError, Result};
+use crate::storage::schema::Schema;
+
+/// A columnar batch of rows sorted by key.
+#[derive(Clone, Debug)]
+pub struct RecordBatch {
+    pub schema: Schema,
+    /// Ordering keys, non-decreasing. `len == rows`.
+    pub keys: Vec<i64>,
+    /// One f32 vector per schema column, each `len == rows`.
+    pub columns: Vec<Vec<f32>>,
+}
+
+impl RecordBatch {
+    /// Validate invariants: column arity/lengths match, keys sorted.
+    pub fn new(schema: Schema, keys: Vec<i64>, columns: Vec<Vec<f32>>) -> Result<RecordBatch> {
+        if columns.len() != schema.width() {
+            return Err(OsebaError::Schema(format!(
+                "expected {} columns, got {}",
+                schema.width(),
+                columns.len()
+            )));
+        }
+        for (i, c) in columns.iter().enumerate() {
+            if c.len() != keys.len() {
+                return Err(OsebaError::Schema(format!(
+                    "column {i} has {} rows, keys have {}",
+                    c.len(),
+                    keys.len()
+                )));
+            }
+        }
+        if keys.windows(2).any(|w| w[0] > w[1]) {
+            return Err(OsebaError::Schema("keys not sorted".into()));
+        }
+        Ok(RecordBatch { schema, keys, columns })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Raw (unpadded) byte footprint — the "raw input data" of Fig 4.
+    pub fn raw_bytes(&self) -> usize {
+        self.rows() * self.schema.row_bytes()
+    }
+
+    /// Column view by name.
+    pub fn column(&self, name: &str) -> Result<&[f32]> {
+        Ok(&self.columns[self.schema.column_index(name)?])
+    }
+}
+
+/// Incremental row-wise builder used by the data generators.
+pub struct BatchBuilder {
+    schema: Schema,
+    keys: Vec<i64>,
+    columns: Vec<Vec<f32>>,
+}
+
+impl BatchBuilder {
+    pub fn new(schema: Schema) -> BatchBuilder {
+        let width = schema.width();
+        BatchBuilder { schema, keys: Vec::new(), columns: vec![Vec::new(); width] }
+    }
+
+    pub fn with_capacity(schema: Schema, rows: usize) -> BatchBuilder {
+        let width = schema.width();
+        BatchBuilder {
+            schema,
+            keys: Vec::with_capacity(rows),
+            columns: vec![Vec::with_capacity(rows); width],
+        }
+    }
+
+    /// Append one row; `values` must match the schema width.
+    pub fn push(&mut self, key: i64, values: &[f32]) {
+        debug_assert_eq!(values.len(), self.columns.len());
+        self.keys.push(key);
+        for (col, &v) in self.columns.iter_mut().zip(values) {
+            col.push(v);
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Most recently pushed key (the CSV loader's sortedness check).
+    pub fn last_key(&self) -> Option<&i64> {
+        self.keys.last()
+    }
+
+    /// Finish, validating the batch invariants.
+    pub fn finish(self) -> Result<RecordBatch> {
+        RecordBatch::new(self.schema, self.keys, self.columns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch3() -> RecordBatch {
+        let mut b = BatchBuilder::new(Schema::stock());
+        b.push(10, &[1.0, 100.0]);
+        b.push(20, &[2.0, 200.0]);
+        b.push(30, &[3.0, 300.0]);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn builder_roundtrip() {
+        let rb = batch3();
+        assert_eq!(rb.rows(), 3);
+        assert_eq!(rb.column("price").unwrap(), &[1.0, 2.0, 3.0]);
+        assert_eq!(rb.column("volume").unwrap(), &[100.0, 200.0, 300.0]);
+        assert_eq!(rb.keys, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn raw_bytes() {
+        assert_eq!(batch3().raw_bytes(), 3 * 16);
+    }
+
+    #[test]
+    fn rejects_unsorted_keys() {
+        let s = Schema::stock();
+        let r = RecordBatch::new(s, vec![2, 1], vec![vec![0.0; 2], vec![0.0; 2]]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_ragged_columns() {
+        let s = Schema::stock();
+        let r = RecordBatch::new(s.clone(), vec![1, 2], vec![vec![0.0; 2], vec![0.0; 3]]);
+        assert!(r.is_err());
+        let r = RecordBatch::new(s, vec![1, 2], vec![vec![0.0; 2]]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn allows_duplicate_keys() {
+        let s = Schema::stock();
+        let r = RecordBatch::new(s, vec![5, 5], vec![vec![0.0; 2], vec![0.0; 2]]);
+        assert!(r.is_ok());
+    }
+
+    #[test]
+    fn unknown_column_errors() {
+        assert!(batch3().column("nope").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Columnar in-memory storage: schemas, record batches and partitions.
+
+pub mod batch;
+pub mod csv;
+pub mod partition;
+pub mod schema;
+
+pub use batch::{BatchBuilder, RecordBatch};
+pub use partition::{partition_batch, partition_batch_uniform, Partition, BLOCK_ROWS};
+pub use schema::Schema;

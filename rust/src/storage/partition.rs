@@ -1,0 +1,237 @@
+//! `Partition`: the in-memory distributed block (the paper's "rdd" block).
+//!
+//! Value columns are zero-padded to a multiple of [`BLOCK_ROWS`] so every
+//! kernel dispatch operates on a full, static-shaped block (the AOT
+//! contract, DESIGN.md §3). Keys are kept unpadded; `rows` is the valid
+//! count.
+
+use std::sync::Arc;
+
+use crate::error::{OsebaError, Result};
+use crate::storage::batch::RecordBatch;
+
+/// Rows per kernel block — must match `python/compile/kernels/BLOCK_ROWS`.
+pub const BLOCK_ROWS: usize = 4096;
+
+/// One in-memory data partition of a dataset.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// Partition index within its dataset.
+    pub id: usize,
+    /// Ordering keys of the valid rows (`len == rows`).
+    pub keys: Vec<i64>,
+    /// Padded value columns (`len == padded_rows` each).
+    pub columns: Vec<Vec<f32>>,
+    /// Valid row count.
+    pub rows: usize,
+    /// `rows` rounded up to a multiple of `BLOCK_ROWS`.
+    pub padded_rows: usize,
+}
+
+impl Partition {
+    /// Build a partition from row range `[lo, hi)` of a batch.
+    pub fn from_batch_range(id: usize, batch: &RecordBatch, lo: usize, hi: usize) -> Partition {
+        let rows = hi - lo;
+        let padded_rows = rows.div_ceil(BLOCK_ROWS).max(1) * BLOCK_ROWS;
+        let keys = batch.keys[lo..hi].to_vec();
+        let columns = batch
+            .columns
+            .iter()
+            .map(|c| {
+                let mut v = Vec::with_capacity(padded_rows);
+                v.extend_from_slice(&c[lo..hi]);
+                v.resize(padded_rows, 0.0);
+                v
+            })
+            .collect();
+        Partition { id, keys, columns, rows, padded_rows }
+    }
+
+    /// Build directly from owned columns (used by the filter baseline when
+    /// materializing a filtered partition).
+    pub fn from_rows(id: usize, keys: Vec<i64>, mut columns: Vec<Vec<f32>>) -> Partition {
+        let rows = keys.len();
+        let padded_rows = rows.div_ceil(BLOCK_ROWS).max(1) * BLOCK_ROWS;
+        for c in &mut columns {
+            debug_assert_eq!(c.len(), rows);
+            c.resize(padded_rows, 0.0);
+        }
+        Partition { id, keys, columns, rows, padded_rows }
+    }
+
+    /// Smallest key (None when empty).
+    pub fn key_min(&self) -> Option<i64> {
+        self.keys.first().copied()
+    }
+
+    /// Largest key (None when empty).
+    pub fn key_max(&self) -> Option<i64> {
+        self.keys.last().copied()
+    }
+
+    /// Number of `BLOCK_ROWS`-sized kernel blocks.
+    pub fn num_blocks(&self) -> usize {
+        self.padded_rows / BLOCK_ROWS
+    }
+
+    /// Byte footprint as accounted by the block manager: unpadded keys plus
+    /// padded value columns.
+    pub fn bytes(&self) -> usize {
+        self.keys.len() * 8 + self.columns.iter().map(|c| c.len() * 4).sum::<usize>()
+    }
+
+    /// The `b`-th kernel block of a column (always exactly `BLOCK_ROWS` long).
+    pub fn block(&self, column: usize, b: usize) -> &[f32] {
+        &self.columns[column][b * BLOCK_ROWS..(b + 1) * BLOCK_ROWS]
+    }
+
+    /// Locate the first valid row with `key >= k` (binary search; used by
+    /// the engine to slice targeted partitions).
+    pub fn lower_bound(&self, k: i64) -> usize {
+        self.keys.partition_point(|&x| x < k)
+    }
+
+    /// Locate the first valid row with `key > k`.
+    pub fn upper_bound(&self, k: i64) -> usize {
+        self.keys.partition_point(|&x| x <= k)
+    }
+}
+
+/// Split a batch into `num_partitions` near-equal contiguous partitions —
+/// the "load/reside the data into memory" step (paper §IV-A: 480 MB into
+/// 15 partitions).
+pub fn partition_batch(batch: &RecordBatch, num_partitions: usize) -> Result<Vec<Arc<Partition>>> {
+    if num_partitions == 0 {
+        return Err(OsebaError::Schema("num_partitions must be > 0".into()));
+    }
+    let rows = batch.rows();
+    if rows == 0 {
+        return Err(OsebaError::Schema("cannot partition an empty batch".into()));
+    }
+    let per = rows.div_ceil(num_partitions);
+    let mut parts = Vec::new();
+    let mut lo = 0usize;
+    let mut id = 0usize;
+    while lo < rows {
+        let hi = (lo + per).min(rows);
+        parts.push(Arc::new(Partition::from_batch_range(id, batch, lo, hi)));
+        id += 1;
+        lo = hi;
+    }
+    Ok(parts)
+}
+
+/// Split a batch so every partition holds exactly `rows_per_partition` rows
+/// (except a shorter tail). This is the regular layout CIAS compresses —
+/// the paper's assumption (1): "distributed blocks in Spark usually have
+/// the same size".
+pub fn partition_batch_uniform(
+    batch: &RecordBatch,
+    rows_per_partition: usize,
+) -> Result<Vec<Arc<Partition>>> {
+    if rows_per_partition == 0 {
+        return Err(OsebaError::Schema("rows_per_partition must be > 0".into()));
+    }
+    let rows = batch.rows();
+    if rows == 0 {
+        return Err(OsebaError::Schema("cannot partition an empty batch".into()));
+    }
+    let n = rows.div_ceil(rows_per_partition);
+    let mut parts = Vec::with_capacity(n);
+    for id in 0..n {
+        let lo = id * rows_per_partition;
+        let hi = ((id + 1) * rows_per_partition).min(rows);
+        parts.push(Arc::new(Partition::from_batch_range(id, batch, lo, hi)));
+    }
+    Ok(parts)
+}
+
+/// Unused-capacity check shared by tests: all partitions cover the batch,
+/// in order, without overlap.
+pub fn partitions_cover(parts: &[Arc<Partition>], total_rows: usize) -> bool {
+    parts.iter().map(|p| p.rows).sum::<usize>() == total_rows
+        && parts.iter().enumerate().all(|(i, p)| p.id == i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::batch::BatchBuilder;
+    use crate::storage::schema::Schema;
+
+    fn batch(rows: usize) -> RecordBatch {
+        let mut b = BatchBuilder::new(Schema::stock());
+        for i in 0..rows {
+            b.push(1000 + i as i64 * 10, &[i as f32, (i * 2) as f32]);
+        }
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn partition_padding_and_blocks() {
+        let rb = batch(5000);
+        let p = Partition::from_batch_range(0, &rb, 0, 5000);
+        assert_eq!(p.rows, 5000);
+        assert_eq!(p.padded_rows, 2 * BLOCK_ROWS);
+        assert_eq!(p.num_blocks(), 2);
+        assert_eq!(p.block(0, 0).len(), BLOCK_ROWS);
+        // Padding is zero.
+        assert!(p.columns[0][5000..].iter().all(|&x| x == 0.0));
+        // Valid data preserved.
+        assert_eq!(p.columns[0][4999], 4999.0);
+    }
+
+    #[test]
+    fn tiny_partition_still_one_block() {
+        let rb = batch(3);
+        let p = Partition::from_batch_range(0, &rb, 0, 3);
+        assert_eq!(p.padded_rows, BLOCK_ROWS);
+        assert_eq!(p.num_blocks(), 1);
+    }
+
+    #[test]
+    fn partition_batch_covers_all_rows() {
+        let rb = batch(10_000);
+        let parts = partition_batch(&rb, 7).unwrap();
+        assert!(partitions_cover(&parts, 10_000));
+        assert_eq!(parts.len(), 7);
+    }
+
+    #[test]
+    fn partition_batch_uniform_layout() {
+        let rb = batch(10_000);
+        let parts = partition_batch_uniform(&rb, 4096).unwrap();
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].rows, 4096);
+        assert_eq!(parts[1].rows, 4096);
+        assert_eq!(parts[2].rows, 10_000 - 2 * 4096);
+        assert!(partitions_cover(&parts, 10_000));
+    }
+
+    #[test]
+    fn key_bounds_and_search() {
+        let rb = batch(100);
+        let p = Partition::from_batch_range(0, &rb, 10, 60);
+        assert_eq!(p.key_min(), Some(1100));
+        assert_eq!(p.key_max(), Some(1590));
+        assert_eq!(p.lower_bound(1100), 0);
+        assert_eq!(p.lower_bound(1101), 1);
+        assert_eq!(p.upper_bound(1590), 50);
+        assert_eq!(p.lower_bound(9999), 50);
+        assert_eq!(p.lower_bound(0), 0);
+    }
+
+    #[test]
+    fn bytes_accounts_padding() {
+        let rb = batch(100);
+        let p = Partition::from_batch_range(0, &rb, 0, 100);
+        assert_eq!(p.bytes(), 100 * 8 + 2 * BLOCK_ROWS * 4);
+    }
+
+    #[test]
+    fn zero_partitions_rejected() {
+        let rb = batch(10);
+        assert!(partition_batch(&rb, 0).is_err());
+        assert!(partition_batch_uniform(&rb, 0).is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! Dataset schema: an ordered key column (i64, e.g. a timestamp) plus named
+//! f32 value columns. This mirrors the paper's experimental data layout
+//! ("time, temperature, humidity, wind speed and direction", §IV-A).
+
+use crate::error::{OsebaError, Result};
+
+/// Schema of a columnar time-series dataset.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schema {
+    /// Name of the ordering key column (monotonically non-decreasing i64).
+    pub key: String,
+    /// Names of the f32 value columns, in storage order.
+    pub columns: Vec<String>,
+}
+
+impl Schema {
+    /// Build a schema; column names must be unique and non-empty.
+    pub fn new(key: impl Into<String>, columns: &[&str]) -> Result<Schema> {
+        let key = key.into();
+        if key.is_empty() {
+            return Err(OsebaError::Schema("empty key column name".into()));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for &c in columns {
+            if c.is_empty() {
+                return Err(OsebaError::Schema("empty column name".into()));
+            }
+            if c == key || !seen.insert(c) {
+                return Err(OsebaError::Schema(format!("duplicate column '{c}'")));
+            }
+        }
+        Ok(Schema { key, columns: columns.iter().map(|s| s.to_string()).collect() })
+    }
+
+    /// The paper's climate schema (§IV-A).
+    pub fn climate() -> Schema {
+        Schema::new("time", &["temperature", "humidity", "wind_speed", "wind_dir"])
+            .expect("static schema")
+    }
+
+    /// A stock-tick schema for the moving-average example.
+    pub fn stock() -> Schema {
+        Schema::new("time", &["price", "volume"]).expect("static schema")
+    }
+
+    /// A call-detail-record schema for the events-analysis example.
+    pub fn cdr() -> Schema {
+        Schema::new("time", &["duration", "dest_prefix", "hour_of_day"])
+            .expect("static schema")
+    }
+
+    /// Index of a value column by name.
+    pub fn column_index(&self, name: &str) -> Result<usize> {
+        self.columns
+            .iter()
+            .position(|c| c == name)
+            .ok_or_else(|| OsebaError::UnknownColumn(name.to_string()))
+    }
+
+    /// Number of value columns.
+    pub fn width(&self) -> usize {
+        self.columns.len()
+    }
+
+    /// Bytes per row (key + values) — the raw-data sizing used by Fig 4.
+    pub fn row_bytes(&self) -> usize {
+        8 + 4 * self.columns.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_indexes() {
+        let s = Schema::climate();
+        assert_eq!(s.width(), 4);
+        assert_eq!(s.column_index("temperature").unwrap(), 0);
+        assert_eq!(s.column_index("wind_dir").unwrap(), 3);
+        assert!(s.column_index("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates_and_empties() {
+        assert!(Schema::new("t", &["a", "a"]).is_err());
+        assert!(Schema::new("t", &["t"]).is_err());
+        assert!(Schema::new("", &["a"]).is_err());
+        assert!(Schema::new("t", &[""]).is_err());
+    }
+
+    #[test]
+    fn row_bytes_counts_key_and_values() {
+        assert_eq!(Schema::climate().row_bytes(), 8 + 16);
+        assert_eq!(Schema::stock().row_bytes(), 8 + 8);
+    }
+}

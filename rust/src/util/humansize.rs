@@ -1,0 +1,53 @@
+//! Byte-count and duration pretty-printing for logs, bench tables and the
+//! Fig 4 memory report.
+
+/// Format a byte count with a binary-prefix unit, e.g. `1536 → "1.50 KiB"`.
+pub fn bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format seconds adaptively: `0.0000012 → "1.20 µs"`, `75.0 → "75.0 s"`.
+pub fn secs(t: f64) -> String {
+    if t < 1e-6 {
+        format!("{:.0} ns", t * 1e9)
+    } else if t < 1e-3 {
+        format!("{:.2} µs", t * 1e6)
+    } else if t < 1.0 {
+        format!("{:.2} ms", t * 1e3)
+    } else {
+        format!("{t:.2} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(0), "0 B");
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(1536), "1.50 KiB");
+        assert_eq!(bytes(32 * 1024 * 1024), "32.00 MiB");
+        assert_eq!(bytes(3 * 1024 * 1024 * 1024), "3.00 GiB");
+    }
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(secs(2.5), "2.50 s");
+        assert_eq!(secs(0.0025), "2.50 ms");
+        assert_eq!(secs(2.5e-6), "2.50 µs");
+        assert_eq!(secs(5e-9), "5 ns");
+    }
+}

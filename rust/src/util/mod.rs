@@ -1,0 +1,8 @@
+//! Cross-cutting utilities built from scratch (the vendored dependency set
+//! has no `serde`, `rand` or `criterion` — see DESIGN.md §4).
+
+pub mod humansize;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

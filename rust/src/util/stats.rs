@@ -1,0 +1,223 @@
+//! Small numeric helpers shared by the bench harness and metrics:
+//! robust summary statistics over timing samples, and the associative
+//! moments algebra used to merge per-partition kernel partials.
+
+/// Summary of a sample of f64 measurements (timings in seconds, bytes, ...).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns `None` for an empty sample.
+    pub fn of(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut v: Vec<f64> = samples.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Some(Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: v[0],
+            p50: percentile(&v, 0.50),
+            p95: percentile(&v, 0.95),
+            p99: percentile(&v, 0.99),
+            max: v[n - 1],
+        })
+    }
+}
+
+/// Nearest-rank percentile of an already-sorted slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len());
+    sorted[idx - 1]
+}
+
+/// Associative raw-moment partial: the merge algebra for `segment_stats`
+/// kernel outputs (DESIGN.md §3). `count == 0` is the identity element.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Moments {
+    pub max: f32,
+    pub min: f32,
+    pub sum: f64,
+    pub sumsq: f64,
+    pub count: f64,
+}
+
+impl Moments {
+    /// The identity (empty-range) partial, matching the kernel sentinels.
+    pub const EMPTY: Moments = Moments {
+        max: -3.4e38,
+        min: 3.4e38,
+        sum: 0.0,
+        sumsq: 0.0,
+        count: 0.0,
+    };
+
+    /// Build from the five f32 scalars a `segment_stats` execution returns.
+    pub fn from_kernel(max: f32, min: f32, sum: f32, sumsq: f32, count: f32) -> Moments {
+        Moments { max, min, sum: sum as f64, sumsq: sumsq as f64, count: count as f64 }
+    }
+
+    /// Single-pass scan of a raw slice (the Native backend / test oracle).
+    pub fn scan(xs: &[f32]) -> Moments {
+        let mut m = Moments::EMPTY;
+        for &x in xs {
+            m.absorb(x);
+        }
+        m
+    }
+
+    /// Fold one value in.
+    pub fn absorb(&mut self, x: f32) {
+        self.max = self.max.max(x);
+        self.min = self.min.min(x);
+        self.sum += x as f64;
+        self.sumsq += (x as f64) * (x as f64);
+        self.count += 1.0;
+    }
+
+    /// Associative merge of two partials.
+    pub fn merge(self, other: Moments) -> Moments {
+        Moments {
+            max: self.max.max(other.max),
+            min: self.min.min(other.min),
+            sum: self.sum + other.sum,
+            sumsq: self.sumsq + other.sumsq,
+            count: self.count + other.count,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0.0
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sum / self.count
+    }
+
+    /// Population standard deviation (matches the paper's "standard
+    /// deviation" statistic and `ref.py::finalize_stats`).
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        (self.sumsq / self.count - m * m).max(0.0).sqrt()
+    }
+}
+
+/// Distance partial algebra for the `distance` kernel (l2 kept squared so
+/// merging stays associative; take `.l2()` at the very end).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DistancePartial {
+    pub l1: f64,
+    pub l2sq: f64,
+    pub linf: f32,
+    pub count: f64,
+}
+
+impl DistancePartial {
+    pub const EMPTY: DistancePartial =
+        DistancePartial { l1: 0.0, l2sq: 0.0, linf: 0.0, count: 0.0 };
+
+    pub fn from_kernel(l1: f32, l2sq: f32, linf: f32, count: f32) -> Self {
+        DistancePartial { l1: l1 as f64, l2sq: l2sq as f64, linf, count: count as f64 }
+    }
+
+    pub fn merge(self, o: DistancePartial) -> DistancePartial {
+        DistancePartial {
+            l1: self.l1 + o.l1,
+            l2sq: self.l2sq + o.l2sq,
+            linf: self.linf.max(o.linf),
+            count: self.count + o.count,
+        }
+    }
+
+    pub fn l2(&self) -> f64 {
+        self.l2sq.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = Summary::of(&[2.0; 10]).unwrap();
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.min, s.max);
+    }
+
+    #[test]
+    fn summary_percentiles_ordered() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs).unwrap();
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p95, 95.0);
+        assert_eq!(s.p99, 99.0);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn summary_empty_is_none() {
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn moments_merge_equals_whole_scan() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32).sin() * 10.0).collect();
+        let whole = Moments::scan(&xs);
+        for split in [1, 37, 500, 999] {
+            let merged = Moments::scan(&xs[..split]).merge(Moments::scan(&xs[split..]));
+            assert!((whole.sum - merged.sum).abs() < 1e-6);
+            assert_eq!(whole.max, merged.max);
+            assert_eq!(whole.min, merged.min);
+            assert_eq!(whole.count, merged.count);
+        }
+    }
+
+    #[test]
+    fn moments_empty_is_identity() {
+        let m = Moments::scan(&[1.0, 2.0, 3.0]);
+        assert_eq!(m.merge(Moments::EMPTY), m);
+        assert_eq!(Moments::EMPTY.merge(m), m);
+        assert!(Moments::EMPTY.is_empty());
+    }
+
+    #[test]
+    fn moments_mean_std_match_numpy_convention() {
+        // x = [2, 4, 4, 4, 5, 5, 7, 9] — textbook example: mean 5, pop-std 2.
+        let m = Moments::scan(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert_eq!(m.mean(), 5.0);
+        assert!((m.std() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn distance_merge_associative() {
+        let a = DistancePartial { l1: 1.0, l2sq: 2.0, linf: 0.5, count: 3.0 };
+        let b = DistancePartial { l1: 2.0, l2sq: 1.0, linf: 0.9, count: 4.0 };
+        let c = DistancePartial { l1: 0.5, l2sq: 0.25, linf: 1.5, count: 1.0 };
+        assert_eq!(a.merge(b).merge(c), a.merge(b.merge(c)));
+        assert_eq!(a.merge(DistancePartial::EMPTY), a);
+    }
+
+    #[test]
+    fn distance_l2_is_sqrt() {
+        let d = DistancePartial { l1: 0.0, l2sq: 9.0, linf: 0.0, count: 1.0 };
+        assert_eq!(d.l2(), 3.0);
+    }
+}

@@ -1,0 +1,203 @@
+//! Fixed-size thread pool with a shared injector queue (no `tokio`/`rayon`
+//! in the vendored set).
+//!
+//! Used by the simulated cluster's workers and the interactive server. Jobs
+//! are boxed closures; `scope_execute` provides the common "run N tasks,
+//! wait for all" pattern with panic propagation, which is what the
+//! coordinator's stage execution needs.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    in_flight: AtomicUsize,
+    idle: Condvar,
+    idle_lock: Mutex<()>,
+}
+
+/// A fixed-size pool of worker threads.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` worker threads (`size >= 1` enforced).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            idle: Condvar::new(),
+            idle_lock: Mutex::new(()),
+        });
+        let handles = (0..size)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("oseba-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker thread")
+            })
+            .collect();
+        ThreadPool { shared, handles, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Enqueue a job; it runs on some worker thread.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.shared.queue.lock().unwrap().push_back(Box::new(job));
+        self.shared.available.notify_one();
+    }
+
+    /// Block until every queued job has completed.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.idle_lock.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.idle.wait(guard).unwrap();
+        }
+    }
+
+    /// Run all `tasks` on the pool and collect results in input order.
+    /// Panics in tasks are propagated (first panic wins).
+    pub fn scope_execute<T, F>(&self, tasks: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = tasks.len();
+        let results: Arc<Mutex<Vec<Option<std::thread::Result<T>>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        for (i, task) in tasks.into_iter().enumerate() {
+            let results = Arc::clone(&results);
+            self.execute(move || {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+        self.wait_idle();
+        let slots = Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("scope_execute: dangling result refs"))
+            .into_inner()
+            .unwrap();
+        slots
+            .into_iter()
+            .map(|slot| match slot.expect("task completed") {
+                Ok(v) => v,
+                Err(p) => std::panic::resume_unwind(p),
+            })
+            .collect()
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = sh.available.wait(q).unwrap();
+            }
+        };
+        job();
+        if sh.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _guard = sh.idle_lock.lock().unwrap();
+            sh.idle.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_execute_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let tasks: Vec<_> = (0..50).map(|i| move || i * 2).collect();
+        let out = pool.scope_execute(tasks);
+        assert_eq!(out, (0..50).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_execute_actually_parallel() {
+        // With 4 threads and 4 sleeping tasks, wall time ≈ one task.
+        let pool = ThreadPool::new(4);
+        let t0 = std::time::Instant::now();
+        let tasks: Vec<_> = (0..4)
+            .map(|_| move || std::thread::sleep(std::time::Duration::from_millis(50)))
+            .collect();
+        pool.scope_execute(tasks);
+        assert!(t0.elapsed() < std::time::Duration::from_millis(160));
+    }
+
+    #[test]
+    #[should_panic(expected = "task boom")]
+    fn scope_execute_propagates_panic() {
+        let pool = ThreadPool::new(2);
+        let tasks: Vec<Box<dyn FnOnce() -> i32 + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("task boom")),
+        ];
+        pool.scope_execute(tasks);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn size_clamped_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let out = pool.scope_execute(vec![|| 7]);
+        assert_eq!(out, vec![7]);
+    }
+}

@@ -1,0 +1,268 @@
+//! End-to-end integration: the paper's full §IV experiment at reduced
+//! scale, on both backends, asserting the Fig 4 / Fig 6 *shapes* — plus
+//! the cross-analysis flows (distance, split, histogram) through the
+//! coordinator and engine together.
+
+use oseba::analysis::{five_periods, train_test_split, Analyzer, SplitSpec};
+use oseba::config::{AppConfig, BackendKind, ContextConfig};
+use oseba::coordinator::{run_session, Coordinator, IndexKind, Method};
+use oseba::datagen::{CdrGen, ClimateGen};
+use oseba::index::{Cias, ContentIndex, RangeQuery};
+use oseba::runtime::make_backend;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+fn app_cfg() -> AppConfig {
+    AppConfig {
+        ctx: ContextConfig { num_workers: 4, memory_budget: None },
+        cluster_workers: 4,
+        artifacts_dir: format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")),
+        ..Default::default()
+    }
+}
+
+fn run_both_methods(backend_kind: BackendKind) {
+    let cfg = app_cfg();
+    let rows = 80_000;
+
+    let mut reports = Vec::new();
+    for method in [Method::Default, Method::Oseba] {
+        let backend = make_backend(backend_kind, &cfg.artifacts_dir).unwrap();
+        let coord = Coordinator::new(&cfg, backend).unwrap();
+        let ds = coord.load(ClimateGen::default().generate(rows), 15).unwrap();
+        let report =
+            run_session(&coord, &ds, method, IndexKind::Cias, &five_periods(), 0, false)
+                .unwrap();
+        reports.push((report, coord.context().memory_used()));
+    }
+    let (default, default_mem) = &reports[0];
+    let (oseba, oseba_mem) = &reports[1];
+
+    // Identical analysis answers.
+    for (a, b) in default.stats.iter().zip(&oseba.stats) {
+        assert_eq!(a.count, b.count);
+        assert_eq!(a.max, b.max);
+        assert_eq!(a.min, b.min);
+        assert!((a.mean - b.mean).abs() < 1e-4);
+        assert!((a.std - b.std).abs() < 1e-3);
+    }
+
+    // Fig 4 shape: default memory grows monotonically; oseba stays flat at
+    // the raw-data footprint; final ratio ≥ ~1.4x (paper: ~3x at phase 5
+    // with their period widths).
+    let dm = default.metrics.memory_series();
+    let om = oseba.metrics.memory_series();
+    assert!(dm.windows(2).all(|w| w[1] > w[0]), "default grows {dm:?}");
+    assert!(om.windows(2).all(|w| w[0] == w[1]), "oseba flat {om:?}");
+    let ratio = dm[4] as f64 / om[4] as f64;
+    assert!(ratio > 1.3, "phase-5 memory ratio {ratio}");
+    assert!(default_mem > oseba_mem);
+
+    // Fig 6 signal: default pays a full scan every phase.
+    let total: usize = default.metrics.records.iter().map(|r| r.partitions_scanned).sum();
+    assert_eq!(total, 5 * 15);
+    let targeted: usize = oseba.metrics.records.iter().map(|r| r.partitions_targeted).sum();
+    assert!(targeted < 5 * 15, "oseba targets a subset: {targeted}");
+}
+
+#[test]
+fn five_phase_experiment_native_backend() {
+    run_both_methods(BackendKind::Native);
+}
+
+#[test]
+fn five_phase_experiment_hlo_backend() {
+    if !artifacts_available() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    run_both_methods(BackendKind::Hlo);
+}
+
+#[test]
+fn hlo_and_native_backends_agree_end_to_end() {
+    if !artifacts_available() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let cfg = app_cfg();
+    let mut all = Vec::new();
+    for kind in [BackendKind::Native, BackendKind::Hlo] {
+        let backend = make_backend(kind, &cfg.artifacts_dir).unwrap();
+        let coord = Coordinator::new(&cfg, backend).unwrap();
+        let ds = coord.load(ClimateGen::default().generate(40_000), 11).unwrap();
+        let report =
+            run_session(&coord, &ds, Method::Oseba, IndexKind::Cias, &five_periods(), 0, false)
+                .unwrap();
+        all.push(report.stats);
+    }
+    for (n, h) in all[0].iter().zip(&all[1]) {
+        assert_eq!(n.count, h.count);
+        assert_eq!(n.max, h.max);
+        assert_eq!(n.min, h.min);
+        assert!((n.mean - h.mean).abs() < 1e-3, "{} vs {}", n.mean, h.mean);
+        assert!((n.std - h.std).abs() < 1e-2);
+    }
+}
+
+#[test]
+fn distance_comparison_two_periods_via_index() {
+    // Paper §II: compare the same season across two different "years".
+    let cfg = app_cfg();
+    let backend = make_backend(BackendKind::Native, &cfg.artifacts_dir).unwrap();
+    let coord = Coordinator::new(&cfg, backend).unwrap();
+    let gen = ClimateGen::default();
+    let year = gen.rows_for_years(1.0);
+    let ds = coord.load(gen.generate(2 * year + 100), 8).unwrap();
+    let index = Cias::build(ds.partitions()).unwrap();
+
+    let window = 30 * 24; // 30 days
+    let q1 = RangeQuery { lo: 0, hi: (window as i64 - 1) * 3600 };
+    let q2 = RangeQuery {
+        lo: year as i64 * 3600,
+        hi: (year as i64 + window as i64 - 1) * 3600,
+    };
+    let v1 = coord.context().select_slices(&ds, &index.lookup(q1), q1);
+    let v2 = coord.context().select_slices(&ds, &index.lookup(q2), q2);
+    let an = coord.analyzer();
+    let d = an.distance(&v1, &v2, 0).unwrap();
+    assert_eq!(d.count as usize, window);
+    // Same phase of the seasonal cycle → differences are noise-scale, well
+    // below the seasonal amplitude.
+    assert!(d.mad < 8.0, "mad={}", d.mad);
+    assert!(d.l2 > 0.0);
+
+    // Against the opposite season the distance must be clearly larger.
+    let q3 = RangeQuery {
+        lo: (year / 2) as i64 * 3600,
+        hi: ((year / 2) as i64 + window as i64 - 1) * 3600,
+    };
+    let v3 = coord.context().select_slices(&ds, &index.lookup(q3), q3);
+    let d_opp = an.distance(&v1, &v3, 0).unwrap();
+    assert!(
+        d_opp.mad > d.mad,
+        "opposite-season mad {} should exceed same-season {}",
+        d_opp.mad,
+        d.mad
+    );
+}
+
+#[test]
+fn train_test_split_served_by_index_without_scans() {
+    let cfg = app_cfg();
+    let backend = make_backend(BackendKind::Native, &cfg.artifacts_dir).unwrap();
+    let coord = Coordinator::new(&cfg, backend).unwrap();
+    let ds = coord.load(ClimateGen::default().generate(50_000), 10).unwrap();
+    let index = Cias::build(ds.partitions()).unwrap();
+
+    let split = train_test_split(
+        ds.key_min().unwrap(),
+        ds.key_max().unwrap(),
+        SplitSpec { unit_keys: 5_000 * 3600, train_frac: 0.6, test_frac: 0.2, seed: 9 },
+    )
+    .unwrap();
+    assert!(!split.train.is_empty() && !split.test.is_empty());
+
+    let before = coord.context().counters();
+    let mut total_rows = 0u64;
+    for q in split.train.iter().chain(&split.test).chain(&split.validation) {
+        let views = coord.context().select_slices(&ds, &index.lookup(*q), *q);
+        total_rows += views.iter().map(|v| v.rows() as u64).sum::<u64>();
+    }
+    let after = coord.context().counters();
+    assert_eq!(total_rows, 50_000, "split covers every row exactly once");
+    assert_eq!(after.partitions_scanned, before.partitions_scanned, "no scans");
+}
+
+#[test]
+fn events_analysis_histogram_separates_fraud() {
+    let cfg = app_cfg();
+    let backend = make_backend(BackendKind::Native, &cfg.artifacts_dir).unwrap();
+    let coord = Coordinator::new(&cfg, backend).unwrap();
+    let gen = CdrGen { fraud_rows: Some((20_000, 24_000)), ..Default::default() };
+    let ds = coord.load(gen.generate(40_000), 8).unwrap();
+    let index = Cias::build(ds.partitions()).unwrap();
+    let an = coord.analyzer();
+    let dur_col = ds.schema().column_index("duration").unwrap();
+
+    let step = 30i64;
+    let normal_q = RangeQuery { lo: 0, hi: 19_999 * step };
+    let fraud_q = RangeQuery { lo: 20_000 * step, hi: 23_999 * step };
+    let nv = coord.context().select_slices(&ds, &index.lookup(normal_q), normal_q);
+    let fv = coord.context().select_slices(&ds, &index.lookup(fraud_q), fraud_q);
+    let hn = an.histogram(&nv, dur_col, 0.0, 3600.0).unwrap();
+    let hf = an.histogram(&fv, dur_col, 0.0, 3600.0).unwrap();
+
+    // Normalize and compare mass in the long-call tail (> ~900 s).
+    let tail = |h: &[f32]| {
+        let total: f32 = h.iter().sum();
+        h[16..].iter().sum::<f32>() / total
+    };
+    assert!(tail(&hf) > 4.0 * tail(&hn), "fraud tail {} vs normal {}", tail(&hf), tail(&hn));
+}
+
+#[test]
+fn memory_budget_evicts_or_errors_cleanly() {
+    // With a tight budget the default method must hit OutOfMemory while
+    // Oseba completes — the paper's memory argument as a failure mode.
+    let gen = ClimateGen::default();
+    let batch = gen.generate(40_000);
+    let raw = batch.raw_bytes();
+
+    let cfg = AppConfig {
+        ctx: ContextConfig { num_workers: 2, memory_budget: Some(raw * 2) },
+        cluster_workers: 2,
+        ..app_cfg()
+    };
+    let backend = make_backend(BackendKind::Native, &cfg.artifacts_dir).unwrap();
+    let coord = Coordinator::new(&cfg, backend).unwrap();
+    let ds = coord.load(batch, 10).unwrap();
+    let index = Cias::build(ds.partitions()).unwrap();
+
+    let periods = five_periods();
+    let key_min = ds.key_min().unwrap();
+    let key_max = ds.key_max().unwrap();
+
+    // Oseba: all five phases succeed within budget.
+    for spec in &periods {
+        let q = spec.resolve(key_min, key_max).unwrap();
+        coord.analyze_period_oseba(&ds, &index, q, 0).unwrap();
+    }
+
+    // Default: accumulating filtered datasets eventually exceeds budget.
+    let mut failed = false;
+    for _ in 0..3 {
+        for spec in &periods {
+            let q = spec.resolve(key_min, key_max).unwrap();
+            match coord.analyze_period_default(&ds, q, 0) {
+                Ok(_) => {}
+                Err(oseba::OsebaError::OutOfMemory { .. }) => {
+                    failed = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected error {e}"),
+            }
+        }
+        if failed {
+            break;
+        }
+    }
+    assert!(failed, "default method should exhaust a 2x-raw budget");
+}
+
+#[test]
+fn analyzer_full_views_equals_indexed_full_span() {
+    let cfg = app_cfg();
+    let backend = make_backend(BackendKind::Native, &cfg.artifacts_dir).unwrap();
+    let coord = Coordinator::new(&cfg, backend).unwrap();
+    let ds = coord.load(ClimateGen::default().generate(12_345), 7).unwrap();
+    let index = Cias::build(ds.partitions()).unwrap();
+    let q = RangeQuery { lo: ds.key_min().unwrap(), hi: ds.key_max().unwrap() };
+    let via_index = coord.analyze_period_oseba(&ds, &index, q, 3).unwrap();
+    let full = coord.analyzer().period_stats(&Analyzer::full_views(&ds), 3).unwrap();
+    assert_eq!(via_index, full);
+}

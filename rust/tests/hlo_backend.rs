@@ -1,0 +1,213 @@
+//! Integration: the AOT/PJRT path end-to-end.
+//!
+//! Loads the real `artifacts/` produced by `make artifacts`, spawns the
+//! kernel service, and checks every kernel against the native backend on
+//! randomized blocks — the rust-side mirror of `python/tests/test_kernels.py`
+//! (which checks pallas vs the jnp oracle; here we check the *compiled HLO*
+//! vs the rust oracle, closing the loop).
+
+use std::sync::Arc;
+
+use oseba::runtime::{spawn_kernel_service, AnalysisBackend, NativeBackend};
+use oseba::storage::BLOCK_ROWS;
+use oseba::util::rng::Xoshiro256;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn hlo() -> oseba::runtime::KernelHandle {
+    spawn_kernel_service(artifacts_dir(), false).expect("kernel service")
+}
+
+fn rand_block(rng: &mut Xoshiro256) -> Vec<f32> {
+    (0..BLOCK_ROWS).map(|_| (rng.next_f32() * 2.0 - 1.0) * 100.0).collect()
+}
+
+#[test]
+fn segment_stats_hlo_matches_native() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let h = hlo();
+    let n = NativeBackend;
+    let mut rng = Xoshiro256::seeded(101);
+    for case in 0..12 {
+        let block = rand_block(&mut rng);
+        let (s, e) = match case {
+            0 => (0, BLOCK_ROWS),
+            1 => (17, 17), // empty
+            2 => (BLOCK_ROWS - 1, BLOCK_ROWS),
+            _ => {
+                let a = rng.below(BLOCK_ROWS as u64) as usize;
+                let b = rng.below(BLOCK_ROWS as u64) as usize;
+                (a.min(b), a.max(b))
+            }
+        };
+        let got = h.segment_stats(&block, s, e).unwrap();
+        let want = n.segment_stats(&block, s, e).unwrap();
+        assert_eq!(got.count, want.count, "case {case}");
+        assert_eq!(got.max, want.max, "case {case}");
+        assert_eq!(got.min, want.min, "case {case}");
+        assert!((got.sum - want.sum).abs() < 0.5, "case {case}: {} vs {}", got.sum, want.sum);
+        assert!(
+            (got.sumsq - want.sumsq).abs() / want.sumsq.max(1.0) < 1e-3,
+            "case {case}"
+        );
+    }
+}
+
+#[test]
+fn moving_average_hlo_matches_native() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let h = hlo();
+    let n = NativeBackend;
+    let mut rng = Xoshiro256::seeded(202);
+    for &w in &[4usize, 16, 64] {
+        let block = rand_block(&mut rng);
+        let (s, e) = (100, 3000);
+        let got = h.moving_average(&block, s, e, w).unwrap();
+        let want = n.moving_average(&block, s, e, w).unwrap();
+        assert_eq!(got.len(), want.len());
+        for i in 0..got.len() {
+            assert!(
+                (got[i] - want[i]).abs() < 1e-2,
+                "w={w} i={i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn ma_stats_hlo_matches_native() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let h = hlo();
+    let n = NativeBackend;
+    let mut rng = Xoshiro256::seeded(303);
+    let block = rand_block(&mut rng);
+    for &w in &[4usize, 16] {
+        let got = h.ma_stats(&block, 50, 4000, w).unwrap();
+        let want = n.ma_stats(&block, 50, 4000, w).unwrap();
+        assert_eq!(got.count, want.count, "w={w}");
+        assert!((got.max - want.max).abs() < 1e-3, "w={w}");
+        assert!((got.mean() - want.mean()).abs() < 1e-3, "w={w}");
+        assert!((got.std() - want.std()).abs() < 1e-2, "w={w}");
+    }
+    // Non-AOT window is a clean error, not a wrong answer.
+    assert!(h.ma_stats(&block, 0, 100, 5).is_err());
+}
+
+#[test]
+fn distance_hlo_matches_native() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let h = hlo();
+    let n = NativeBackend;
+    let mut rng = Xoshiro256::seeded(404);
+    let a = rand_block(&mut rng);
+    let b = rand_block(&mut rng);
+    for (s, e) in [(0, BLOCK_ROWS), (1000, 1000), (123, 3877)] {
+        let got = h.distance(&a, &b, s, e).unwrap();
+        let want = n.distance(&a, &b, s, e).unwrap();
+        assert_eq!(got.count, want.count);
+        assert_eq!(got.linf, want.linf);
+        assert!((got.l1 - want.l1).abs() < 0.5);
+        assert!((got.l2sq - want.l2sq).abs() / want.l2sq.max(1.0) < 1e-3);
+    }
+}
+
+#[test]
+fn histogram_hlo_matches_native_exactly() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let h = hlo();
+    let n = NativeBackend;
+    let mut rng = Xoshiro256::seeded(505);
+    let block = rand_block(&mut rng);
+    for (s, e, lo, hi) in [(0, BLOCK_ROWS, -100.0f32, 100.0f32), (500, 2500, -10.0, 10.0)] {
+        let got = h.histogram64(&block, s, e, lo, hi).unwrap();
+        let want = n.histogram64(&block, s, e, lo, hi).unwrap();
+        assert_eq!(got, want, "[{lo},{hi}) rows {s}..{e}");
+        assert_eq!(got.iter().sum::<f32>() as usize, e - s);
+    }
+}
+
+#[test]
+fn batch_api_matches_singles_and_counts_service_stats() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let h = hlo();
+    let mut rng = Xoshiro256::seeded(606);
+    let blocks: Vec<Vec<f32>> = (0..4).map(|_| rand_block(&mut rng)).collect();
+    let reqs: Vec<(&[f32], usize, usize)> =
+        blocks.iter().map(|b| (b.as_slice(), 10, 4000)).collect();
+    let batch = h.segment_stats_batch(&reqs).unwrap();
+    for (i, b) in blocks.iter().enumerate() {
+        let single = h.segment_stats(b, 10, 4000).unwrap();
+        assert_eq!(batch[i], single, "block {i}");
+    }
+    let stats = h.service_stats().unwrap();
+    // The batch of 4 rides the packing policy (one grid execution, or 4
+    // singles when padding waste would exceed the policy threshold); the 4
+    // explicit singles are one execution each.
+    assert!(
+        (5..=8).contains(&stats.executions),
+        "between 1 grid + 4 singles and 8 singles expected: {}",
+        stats.executions
+    );
+    assert!(stats.requests >= 5);
+    assert!(stats.busy_secs > 0.0);
+}
+
+#[test]
+fn wrong_block_length_rejected() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let h = hlo();
+    assert!(h.segment_stats(&[0.0; 128], 0, 128).is_err());
+}
+
+#[test]
+fn handle_is_shareable_across_threads() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let h = Arc::new(hlo());
+    let mut rng = Xoshiro256::seeded(707);
+    let block = Arc::new(rand_block(&mut rng));
+    let expected = h.segment_stats(&block, 0, BLOCK_ROWS).unwrap();
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let h = Arc::clone(&h);
+            let block = Arc::clone(&block);
+            s.spawn(move || {
+                for _ in 0..5 {
+                    let got = h.segment_stats(&block, 0, BLOCK_ROWS).unwrap();
+                    assert_eq!(got, expected);
+                }
+            });
+        }
+    });
+}

@@ -1,0 +1,237 @@
+//! Property-based tests on the system invariants (DESIGN.md §7), via the
+//! crate's own `testing` harness:
+//!
+//! 1. Index equivalence: for random datasets and queries, CIAS lookup ==
+//!    table lookup == linear-scan ground truth.
+//! 2. Moments algebra: merge of any split == whole-scan.
+//! 3. Engine: Oseba's selected rows == the baseline filter's rows.
+//! 4. Routing: every slice is assigned to exactly one live worker.
+//! 5. CIAS compression: memory is O(ASL), never O(partitions), on regular
+//!    data.
+
+use std::sync::Arc;
+
+use oseba::cluster::{Cluster, NetworkModel};
+use oseba::config::ContextConfig;
+use oseba::datagen::ClimateGen;
+use oseba::engine::OsebaContext;
+use oseba::index::{extract_meta, Cias, ContentIndex, PartitionSlice, RangeQuery, TableIndex};
+use oseba::storage::{partition_batch_uniform, BatchBuilder, Partition, Schema};
+use oseba::testing::{gen, Runner};
+use oseba::util::rng::Xoshiro256;
+use oseba::util::stats::Moments;
+
+/// A random dataset layout: uniform-grid keys, random partition sizing,
+/// optionally an irregular (gapped) tail region.
+#[derive(Debug)]
+struct Layout {
+    parts: Vec<Arc<Partition>>,
+    key_min: i64,
+    key_max: i64,
+}
+
+fn random_layout(rng: &mut Xoshiro256) -> Layout {
+    let rows = gen::usize_in(rng, 50, 3000);
+    let per = gen::usize_in(rng, 10, rows.max(11));
+    let step = 1 + rng.below(100) as i64;
+    let base = rng.below(10_000) as i64 - 5_000;
+    let gap = if rng.below(2) == 0 { 0 } else { step * (1 + rng.below(50) as i64) };
+
+    let mut b = BatchBuilder::new(Schema::stock());
+    let mut key = base;
+    let gap_at = rows / 2;
+    for i in 0..rows {
+        if gap > 0 && i == gap_at {
+            key += gap; // irregularity in the middle → exercises the ASL
+        }
+        b.push(key, &[i as f32, 1.0]);
+        key += step;
+    }
+    let batch = b.finish().unwrap();
+    let key_min = batch.keys[0];
+    let key_max = *batch.keys.last().unwrap();
+    let parts = partition_batch_uniform(&batch, per).unwrap();
+    Layout { parts, key_min, key_max }
+}
+
+/// Ground truth by scanning every partition's keys.
+fn scan_lookup(parts: &[Arc<Partition>], q: RangeQuery) -> Vec<PartitionSlice> {
+    parts
+        .iter()
+        .filter_map(|p| {
+            let rs = p.lower_bound(q.lo);
+            let re = p.upper_bound(q.hi);
+            (rs < re).then_some(PartitionSlice { partition: p.id, row_start: rs, row_end: re })
+        })
+        .collect()
+}
+
+/// Indexes may return conservative whole-partition slices for step-less
+/// partitions; normalize through the same refinement the engine applies.
+fn refine(parts: &[Arc<Partition>], slices: &[PartitionSlice], q: RangeQuery) -> Vec<PartitionSlice> {
+    slices
+        .iter()
+        .filter_map(|s| {
+            let p = &parts[s.partition];
+            let (rs, re) = if s.row_start == 0 && s.row_end == p.rows && p.rows > 0 {
+                (p.lower_bound(q.lo), p.upper_bound(q.hi))
+            } else {
+                (s.row_start, s.row_end)
+            };
+            (rs < re).then_some(PartitionSlice { partition: s.partition, row_start: rs, row_end: re })
+        })
+        .collect()
+}
+
+#[test]
+fn prop_cias_equals_table_equals_scan() {
+    Runner::default().run(
+        "cias == table == scan",
+        |rng| {
+            let layout = random_layout(rng);
+            let span = layout.key_max - layout.key_min;
+            let (lo, hi) =
+                gen::range_pair(rng, layout.key_min - span / 4, layout.key_max + span / 4);
+            (layout, RangeQuery { lo, hi })
+        },
+        |(layout, q)| {
+            let truth = scan_lookup(&layout.parts, *q);
+            let table = TableIndex::build(&layout.parts).unwrap();
+            let cias = Cias::build(&layout.parts).unwrap();
+            let t = refine(&layout.parts, &table.lookup(*q), *q);
+            let c = refine(&layout.parts, &cias.lookup(*q), *q);
+            t == truth && c == truth
+        },
+    );
+}
+
+#[test]
+fn prop_moments_merge_any_split() {
+    Runner::default().run(
+        "moments merge == whole scan",
+        |rng| {
+            let n = gen::usize_in(rng, 1, 2000);
+            let xs = gen::f32_vec(rng, n, 1e3);
+            let cut = gen::usize_in(rng, 0, n + 1);
+            (xs, cut)
+        },
+        |(xs, cut)| {
+            let whole = Moments::scan(xs);
+            let merged = Moments::scan(&xs[..*cut]).merge(Moments::scan(&xs[*cut..]));
+            whole.max == merged.max
+                && whole.min == merged.min
+                && whole.count == merged.count
+                && (whole.sum - merged.sum).abs() <= 1e-6 * whole.sum.abs().max(1.0)
+        },
+    );
+}
+
+#[test]
+fn prop_oseba_selects_same_rows_as_filter() {
+    let ctx = OsebaContext::new(ContextConfig { num_workers: 2, memory_budget: None });
+    Runner::new(24, 0xFEED).run(
+        "indexed selection == filter selection",
+        |rng| {
+            let rows = gen::usize_in(rng, 100, 5000);
+            let nparts = gen::usize_in(rng, 1, 16);
+            let (lo_h, hi_h) = gen::range_pair(rng, -10, rows as i64 + 10);
+            (rows, nparts, lo_h, hi_h)
+        },
+        |&(rows, nparts, lo_h, hi_h)| {
+            let gen_cfg = ClimateGen { seed: rows as u64, ..Default::default() };
+            let ds = ctx.load(gen_cfg.generate(rows), nparts).unwrap();
+            let q = RangeQuery { lo: lo_h * 3600, hi: hi_h * 3600 };
+            let index = Cias::build(ds.partitions()).unwrap();
+            let views = ctx.select_slices(&ds, &index.lookup(q), q);
+            let indexed_keys: Vec<i64> =
+                views.iter().flat_map(|v| v.keys().iter().copied()).collect();
+            let filtered = ctx.filter_range(&ds, q).unwrap();
+            let filter_keys: Vec<i64> = filtered
+                .partitions()
+                .iter()
+                .flat_map(|p| p.keys.iter().copied())
+                .collect();
+            ctx.unpersist(&filtered);
+            ctx.unpersist(&ds);
+            indexed_keys == filter_keys
+        },
+    );
+}
+
+#[test]
+fn prop_routing_partitions_every_slice_once() {
+    Runner::default().run(
+        "routing covers each slice exactly once on live workers",
+        |rng| {
+            let workers = gen::usize_in(rng, 1, 12);
+            let nparts = gen::usize_in(rng, 1, 64);
+            let nslices = gen::usize_in(rng, 0, 64);
+            let slices: Vec<PartitionSlice> = (0..nslices)
+                .map(|_| PartitionSlice {
+                    partition: gen::usize_in(rng, 0, nparts),
+                    row_start: 0,
+                    row_end: 1,
+                })
+                .collect();
+            let kill = if workers > 1 { Some(gen::usize_in(rng, 0, workers)) } else { None };
+            (workers, nparts, slices, kill)
+        },
+        |(workers, nparts, slices, kill)| {
+            let c = Cluster::new(*workers, *nparts, NetworkModel::default()).unwrap();
+            if let Some(k) = kill {
+                c.kill_worker(*k).unwrap();
+            }
+            let groups = c.route(slices).unwrap();
+            let routed: usize = groups.iter().map(|(_, g)| g.len()).sum();
+            let all_live = groups.iter().all(|(w, _)| c.is_alive(*w));
+            routed == slices.len() && all_live
+        },
+    );
+}
+
+#[test]
+fn prop_cias_memory_constant_for_regular_layouts() {
+    Runner::new(32, 0xC1A5).run(
+        "cias space independent of partition count on regular data",
+        |rng| {
+            let per = gen::usize_in(rng, 8, 256);
+            let nparts_small = gen::usize_in(rng, 2, 8);
+            let nparts_large = nparts_small * gen::usize_in(rng, 10, 50);
+            let step = 1 + rng.below(1000) as i64;
+            (per, nparts_small, nparts_large, step)
+        },
+        |&(per, nparts_small, nparts_large, step)| {
+            let make = |nparts: usize| {
+                let mut b = BatchBuilder::new(Schema::stock());
+                for i in 0..per * nparts {
+                    b.push(i as i64 * step, &[0.0, 0.0]);
+                }
+                let parts = partition_batch_uniform(&b.finish().unwrap(), per).unwrap();
+                Cias::build(&parts).unwrap()
+            };
+            let small = make(nparts_small);
+            let large = make(nparts_large);
+            small.memory_bytes() == large.memory_bytes()
+                && large.asl_len() == 0
+                && large.regular_parts() == nparts_large
+        },
+    );
+}
+
+#[test]
+fn prop_extract_meta_consistent_with_partitions() {
+    Runner::default().run(
+        "extract_meta mirrors partition bounds",
+        |rng| random_layout(rng),
+        |layout| {
+            let metas = extract_meta(&layout.parts);
+            metas.len() == layout.parts.len()
+                && metas.iter().zip(&layout.parts).all(|(m, p)| {
+                    m.id == p.id
+                        && m.rows == p.rows
+                        && Some(m.key_min) == p.key_min()
+                        && Some(m.key_max) == p.key_max()
+                })
+        },
+    );
+}
