@@ -6,6 +6,7 @@ import os
 
 import pytest
 
+pytest.importorskip("jax")
 from compile import aot, model
 
 

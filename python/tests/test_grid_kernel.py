@@ -1,6 +1,10 @@
 """Grid-batched segment_stats vs per-block oracle (the §Perf kernel)."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from compile.kernels import ref

@@ -7,6 +7,9 @@ asserts the pallas kernel matches kernels/ref.py.
 
 import numpy as np
 import pytest
+
+pytest.importorskip("jax")
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import (BLOCK_ROWS, HIST_BINS, distance, histogram64,

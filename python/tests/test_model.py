@@ -1,7 +1,9 @@
 """L2 graph shape/semantics checks + AOT entry registry sanity."""
 
 import numpy as np
-import jax
+import pytest
+
+jax = pytest.importorskip("jax")
 import jax.numpy as jnp
 
 from compile import model

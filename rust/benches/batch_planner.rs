@@ -1,0 +1,90 @@
+//! **Batch planner benchmark**: N overlapping selective queries executed
+//! naively (one cluster pass per query) vs through `analyze_batch` (one
+//! pass per merged range, concurrent worker tasks, per-query demux).
+//!
+//! Expected shape: as overlap grows, the naive path re-targets the same
+//! partitions once per query while the planned path touches each once per
+//! batch — both the partitions-targeted counter and the wall clock should
+//! separate.
+//!
+//! Run: `cargo bench --bench batch_planner`
+//! (OSEBA_BYTES / OSEBA_BENCH_ITERS to rescale).
+
+mod common;
+
+use oseba::bench::{bench, table, BenchConfig};
+use oseba::config::parse_bytes;
+use oseba::coordinator::{plan_batch, IndexKind};
+use oseba::index::RangeQuery;
+use oseba::util::rng::Xoshiro256;
+
+fn main() {
+    let bytes = std::env::var("OSEBA_BYTES")
+        .ok()
+        .map(|v| parse_bytes(&v).expect("OSEBA_BYTES"))
+        .unwrap_or(32 << 20);
+    let cfg = BenchConfig::from_env();
+    let backend = common::backend_kind();
+
+    oseba::bench::section(&format!(
+        "batch planner: naive per-query vs planned batch ({} raw, 15 partitions)",
+        oseba::util::humansize::bytes(bytes)
+    ));
+
+    for &n_queries in &[4usize, 16, 64] {
+        let (coord, ds, _) = common::setup(bytes, 15, backend);
+        let index = coord.build_index(&ds, IndexKind::Cias).expect("index");
+        let key_min = ds.key_min().unwrap();
+        let key_max = ds.key_max().unwrap();
+        let span = (key_max - key_min) as f64;
+
+        // 20%-wide queries placed uniformly: heavy overlap at high N.
+        let queries: Vec<RangeQuery> = {
+            let mut rng = Xoshiro256::seeded(n_queries as u64);
+            (0..n_queries)
+                .map(|_| {
+                    let lo = key_min + (rng.next_f64() * span * 0.8) as i64;
+                    RangeQuery { lo, hi: lo + (span * 0.2) as i64 }
+                })
+                .collect()
+        };
+        let plan = plan_batch(&queries);
+
+        let before = coord.context().counters();
+        let naive = {
+            let (coord, ds, index, queries) = (&coord, &ds, &index, &queries);
+            bench(&cfg, &format!("naive   n={n_queries}"), move || {
+                for q in queries {
+                    coord
+                        .analyze_period_oseba(ds, index.as_ref(), *q, 0)
+                        .expect("query");
+                }
+            })
+        };
+        let mid = coord.context().counters();
+        let planned = {
+            let (coord, ds, index, queries) = (&coord, &ds, &index, &queries);
+            bench(&cfg, &format!("planned n={n_queries}"), move || {
+                coord
+                    .analyze_batch(ds, index.as_ref(), queries, 0)
+                    .expect("batch");
+            })
+        };
+        let after = coord.context().counters();
+
+        let iters = (cfg.iters + cfg.warmup_iters).max(1);
+        let naive_touched = (mid.partitions_targeted - before.partitions_targeted) / iters;
+        let batch_touched = (after.partitions_targeted - mid.partitions_targeted) / iters;
+
+        println!("{}", table(&[naive, planned]));
+        println!(
+            "  {n_queries} queries -> {} merged ranges | partitions targeted per run: \
+             naive {naive_touched}, planned {batch_touched}",
+            plan.len()
+        );
+        assert!(
+            batch_touched <= naive_touched,
+            "planning must never touch more partitions"
+        );
+    }
+}

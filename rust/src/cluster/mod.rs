@@ -126,13 +126,21 @@ impl Cluster {
     /// Route slices to their owning workers: returns `(worker, slices)`
     /// groups, workers in ascending order, slice order preserved.
     pub fn route(&self, slices: &[PartitionSlice]) -> Result<Vec<(usize, Vec<PartitionSlice>)>> {
+        self.route_tagged(slices.iter().map(|s| (s.partition, *s)).collect())
+    }
+
+    /// Route arbitrary per-partition work items to their owning workers:
+    /// each item pairs a partition id with a payload (the batch planner
+    /// tags sub-slices with segment ids this way). Returns `(worker,
+    /// payloads)` groups, workers ascending, item order preserved.
+    pub fn route_tagged<T>(&self, items: Vec<(usize, T)>) -> Result<Vec<(usize, Vec<T>)>> {
         let placement = self.placement.lock().unwrap();
-        let mut groups: Vec<Vec<PartitionSlice>> = vec![Vec::new(); self.num_workers];
-        for s in slices {
+        let mut groups: Vec<Vec<T>> = (0..self.num_workers).map(|_| Vec::new()).collect();
+        for (p, t) in items {
             let w = *placement
-                .get(s.partition)
-                .ok_or_else(|| OsebaError::Cluster(format!("unknown partition {}", s.partition)))?;
-            groups[w].push(*s);
+                .get(p)
+                .ok_or_else(|| OsebaError::Cluster(format!("unknown partition {p}")))?;
+            groups[w].push(t);
         }
         Ok(groups
             .into_iter()
@@ -185,6 +193,17 @@ mod tests {
             groups.iter().flat_map(|(_, g)| g.iter().map(|s| s.partition)).collect();
         got.sort_unstable();
         assert_eq!(got, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn route_tagged_groups_payloads_by_owner() {
+        let c = Cluster::new(2, 4, NetworkModel::default()).unwrap();
+        let items = vec![(0usize, "a"), (1, "b"), (2, "c"), (0, "d")];
+        let groups = c.route_tagged(items).unwrap();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0], (0, vec!["a", "c", "d"]));
+        assert_eq!(groups[1], (1, vec!["b"]));
+        assert!(c.route_tagged(vec![(99usize, ())]).is_err());
     }
 
     #[test]

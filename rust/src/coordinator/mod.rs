@@ -5,8 +5,8 @@
 pub mod planner;
 pub mod session;
 
-pub use planner::{IndexKind, Method};
-pub use session::{run_session, SessionReport};
+pub use planner::{plan_batch, IndexKind, Method, PlannedQuery};
+pub use session::{run_batch_session, run_session, BatchSessionReport, SessionReport};
 
 use std::sync::Arc;
 
@@ -17,8 +17,9 @@ use crate::config::AppConfig;
 use crate::engine::{Dataset, OsebaContext};
 use crate::error::{OsebaError, Result};
 use crate::index::{Cias, ContentIndex, RangeQuery, TableIndex};
+use crate::metrics::{BatchReport, Timer};
 use crate::runtime::backend::AnalysisBackend;
-use crate::storage::RecordBatch;
+use crate::storage::{Partition, RecordBatch};
 use crate::util::stats::Moments;
 
 /// The driver/leader of the system.
@@ -129,6 +130,148 @@ impl Coordinator {
         }
         let owned = self.ctx.resolve_slices(ds, &slices, q);
         self.run_stats_tasks(owned, column)
+    }
+
+    /// **Batch phase** (many concurrent sessions, one engine): plan N
+    /// possibly-overlapping queries into disjoint merged ranges
+    /// ([`plan_batch`]), route each merged range through the cluster
+    /// *once*, execute every per-worker task concurrently on the engine
+    /// thread pool, and demultiplex exact per-query [`PeriodStats`] from
+    /// the shared elementary-segment partials.
+    ///
+    /// Overlap between input queries costs nothing extra: each partition
+    /// intersecting a merged range is resolved (and counted in
+    /// [`crate::engine::CounterSnapshot::partitions_targeted`]) exactly
+    /// once per merged range, however many queries cover it — so a batch
+    /// of N mutually-overlapping queries targets each partition once,
+    /// instead of N times.
+    ///
+    /// Takes `&self` and is safe to call from many threads at once — the
+    /// coordinator is `Send + Sync`.
+    pub fn analyze_batch(
+        &self,
+        ds: &Dataset,
+        index: &dyn ContentIndex,
+        queries: &[RangeQuery],
+        column: usize,
+    ) -> Result<Vec<PeriodStats>> {
+        self.analyze_batch_with_report(ds, index, queries, column).map(|(stats, _)| stats)
+    }
+
+    /// [`Self::analyze_batch`] plus the planner/execution counters.
+    pub fn analyze_batch_with_report(
+        &self,
+        ds: &Dataset,
+        index: &dyn ContentIndex,
+        queries: &[RangeQuery],
+        column: usize,
+    ) -> Result<(Vec<PeriodStats>, BatchReport)> {
+        let timer = Timer::start();
+        for (i, q) in queries.iter().enumerate() {
+            if q.lo > q.hi {
+                return Err(OsebaError::InvalidRange(format!(
+                    "query {i}: lo {} > hi {}",
+                    q.lo, q.hi
+                )));
+            }
+        }
+        let plan = plan_batch(queries);
+
+        // Global elementary-segment table across all merged ranges: the
+        // shared partials per-query stats are demultiplexed from.
+        let mut segments: Vec<RangeQuery> = Vec::new();
+        let mut seg_sources: Vec<Vec<usize>> = Vec::new();
+        // One work list per (merged range, owning worker), executed as one
+        // pool task each — independent merged queries run concurrently.
+        type SubSlice = (Arc<Partition>, usize, usize, usize);
+        let mut worker_lists: Vec<Vec<SubSlice>> = Vec::new();
+        let mut partitions_touched = 0usize;
+
+        for pq in &plan {
+            let slices = index.lookup(pq.range);
+            // One resolve per merged range: N queries overlapping this
+            // range cost one `partitions_targeted` count per partition,
+            // not N.
+            partitions_touched += slices.len();
+            let owned = self.ctx.resolve_slices(ds, &slices, pq.range);
+            let seg_base = segments.len();
+            for (seg, srcs) in pq.segments(queries) {
+                segments.push(seg);
+                seg_sources.push(srcs);
+            }
+            let mut items: Vec<(usize, SubSlice)> = Vec::new();
+            for (part, slice) in &owned {
+                for (si, seg) in segments[seg_base..].iter().enumerate() {
+                    let rs = part.lower_bound(seg.lo).max(slice.row_start);
+                    let re = part.upper_bound(seg.hi).min(slice.row_end);
+                    if rs < re {
+                        items.push((slice.partition, (Arc::clone(part), seg_base + si, rs, re)));
+                    }
+                }
+            }
+            for (_worker, list) in self.cluster.route_tagged(items)? {
+                worker_lists.push(list);
+            }
+        }
+
+        let batch = self.batch_kernel_calls;
+        let net = self.cluster.net;
+        let tasks: Vec<_> = worker_lists
+            .into_iter()
+            .map(|list| {
+                let backend = Arc::clone(&self.backend);
+                move || -> Result<Vec<(usize, Moments)>> {
+                    net.message(); // task dispatch to this worker
+                    let mut out = Vec::with_capacity(list.len());
+                    for (part, seg, rs, re) in &list {
+                        let m =
+                            slice_moments(backend.as_ref(), part, *rs, *re, column, batch)?;
+                        out.push((*seg, m));
+                    }
+                    net.message(); // result return
+                    Ok(out)
+                }
+            })
+            .collect();
+        let n_tasks = tasks.len();
+        let partials = self.ctx.pool().scope_execute(tasks);
+
+        let mut seg_moments = vec![Moments::EMPTY; segments.len()];
+        for partial in partials {
+            for (seg, m) in partial? {
+                seg_moments[seg] = seg_moments[seg].merge(m);
+            }
+        }
+        // Demux: a query's moments are the merge of the elementary
+        // segments it covers (each segment knows its covering sources).
+        let mut per_query = vec![Moments::EMPTY; queries.len()];
+        for (seg, srcs) in seg_sources.iter().enumerate() {
+            for &qi in srcs {
+                per_query[qi] = per_query[qi].merge(seg_moments[seg]);
+            }
+        }
+        let stats = per_query
+            .into_iter()
+            .enumerate()
+            .map(|(i, m)| {
+                PeriodStats::from_moments(m).ok_or_else(|| {
+                    OsebaError::InvalidRange(format!(
+                        "query {i} selects no rows in [{}, {}]",
+                        queries[i].lo, queries[i].hi
+                    ))
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let report = BatchReport {
+            queries: queries.len(),
+            merged_ranges: plan.len(),
+            segments: segments.len(),
+            partitions_touched,
+            tasks: n_tasks,
+            secs: timer.secs(),
+        };
+        Ok((stats, report))
     }
 
     /// Route owned slice tasks to workers, execute, merge, finalize.
@@ -292,5 +435,127 @@ mod tests {
         c.batch_kernel_calls = false;
         let b = c.analyze_period_oseba(&ds, index.as_ref(), q, 0).unwrap();
         assert_eq!(a, b);
+    }
+
+    fn assert_stats_close(a: &PeriodStats, b: &PeriodStats, ctx: &str) {
+        // Exact on count/extremes; mean/std tolerate the f32 kernel
+        // partials regrouping when blocks are split at segment boundaries
+        // (same tolerance the default-vs-oseba equivalence tests use).
+        assert_eq!(a.count, b.count, "{ctx}");
+        assert_eq!(a.max, b.max, "{ctx}");
+        assert_eq!(a.min, b.min, "{ctx}");
+        assert!((a.mean - b.mean).abs() < 1e-6, "{ctx}: {} vs {}", a.mean, b.mean);
+        assert!((a.std - b.std).abs() < 1e-6, "{ctx}: {} vs {}", a.std, b.std);
+    }
+
+    #[test]
+    fn coordinator_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Coordinator>();
+    }
+
+    #[test]
+    fn analyze_batch_matches_individual_queries() {
+        let c = coord(3);
+        let ds = c.load(ClimateGen::default().generate(30_000), 15).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        // Overlapping, adjacent, contained and disjoint queries together.
+        let qs = vec![
+            q_hours(0, 4_000),
+            q_hours(2_000, 9_000),
+            q_hours(3_000, 3_500),
+            q_hours(9_001, 12_000),
+            q_hours(20_000, 22_000),
+        ];
+        let batch = c.analyze_batch(&ds, index.as_ref(), &qs, 0).unwrap();
+        assert_eq!(batch.len(), qs.len());
+        for (i, q) in qs.iter().enumerate() {
+            let single = c.analyze_period_oseba(&ds, index.as_ref(), *q, 0).unwrap();
+            assert_stats_close(&batch[i], &single, &format!("query {i}"));
+        }
+    }
+
+    #[test]
+    fn overlapping_batch_targets_each_partition_once() {
+        let c = coord(3);
+        let ds = c.load(ClimateGen::default().generate(30_000), 15).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        // Six mutually-overlapping queries whose union is hours [0, 7500].
+        let qs: Vec<RangeQuery> =
+            (0..6).map(|i| q_hours(i * 500, 5_000 + i * 500)).collect();
+        let union = q_hours(0, 7_500);
+        let expect = index.lookup(union).len();
+        assert!(expect > 1, "several partitions intersect");
+
+        let before = c.context().counters();
+        let (stats, report) =
+            c.analyze_batch_with_report(&ds, index.as_ref(), &qs, 0).unwrap();
+        let after = c.context().counters();
+
+        // Each intersecting partition is targeted exactly once for the
+        // whole batch — not once per query.
+        assert_eq!(after.partitions_targeted - before.partitions_targeted, expect);
+        assert_eq!(after.partitions_scanned, before.partitions_scanned, "no scans");
+        assert_eq!(report.merged_ranges, 1);
+        assert_eq!(report.queries, 6);
+        assert_eq!(report.partitions_touched, expect);
+        assert_eq!(stats.len(), 6);
+    }
+
+    #[test]
+    fn analyze_batch_empty_and_miss_cases() {
+        let c = coord(2);
+        let ds = c.load(ClimateGen::default().generate(5_000), 4).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        // Empty batch: trivially fine.
+        let (stats, report) =
+            c.analyze_batch_with_report(&ds, index.as_ref(), &[], 0).unwrap();
+        assert!(stats.is_empty());
+        assert_eq!(report.merged_ranges, 0);
+        // Inverted range: rejected up front.
+        let bad = RangeQuery { lo: 10, hi: 5 };
+        assert!(c.analyze_batch(&ds, index.as_ref(), &[bad], 0).is_err());
+        // A query that misses the dataset errors, naming the query.
+        let miss = RangeQuery { lo: i64::MAX - 5, hi: i64::MAX };
+        let err = c
+            .analyze_batch(&ds, index.as_ref(), &[q_hours(0, 100), miss], 0)
+            .unwrap_err();
+        assert!(err.to_string().contains("query 1"), "got: {err}");
+    }
+
+    #[test]
+    fn analyze_batch_concurrent_callers_agree() {
+        let c = coord(4);
+        let ds = c.load(ClimateGen::default().generate(20_000), 10).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        let qs = vec![q_hours(0, 5_000), q_hours(3_000, 9_000), q_hours(15_000, 18_000)];
+        let expected = c.analyze_batch(&ds, index.as_ref(), &qs, 0).unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let (c, ds, index, qs, expected) = (&c, &ds, &*index, &qs, &expected);
+                s.spawn(move || {
+                    for _ in 0..3 {
+                        let got = c.analyze_batch(ds, index, qs, 0).unwrap();
+                        for (g, e) in got.iter().zip(expected) {
+                            assert_stats_close(g, e, "concurrent");
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn analyze_batch_survives_worker_failure() {
+        let c = coord(4);
+        let ds = c.load(ClimateGen::default().generate(20_000), 12).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        let qs = vec![q_hours(0, 8_000), q_hours(6_000, 15_000)];
+        let before = c.analyze_batch(&ds, index.as_ref(), &qs, 0).unwrap();
+        c.cluster().kill_worker(1).unwrap();
+        let after = c.analyze_batch(&ds, index.as_ref(), &qs, 0).unwrap();
+        for (a, b) in before.iter().zip(&after) {
+            assert_stats_close(a, b, "failover");
+        }
     }
 }

@@ -1,6 +1,18 @@
-//! Planner vocabulary: which access method and which index a session uses.
+//! Query planning: the access-method / index vocabulary a session uses,
+//! plus the multi-query batch planner.
+//!
+//! [`plan_batch`] turns N possibly-overlapping selective queries (many
+//! interactive users hitting the same dataset) into a minimal set of
+//! disjoint merged ranges, so the cluster is routed **once** per merged
+//! range — overlapping queries target each intersecting partition once
+//! per merged range instead of once per query. [`PlannedQuery::segments`]
+//! then cuts a merged
+//! range into maximal sub-ranges on which the covering query set is
+//! constant, which is what lets the coordinator demultiplex exact
+//! per-query statistics from shared partials.
 
 use crate::error::{OsebaError, Result};
+use crate::index::RangeQuery;
 
 /// Index implementation selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -53,9 +65,88 @@ impl std::str::FromStr for Method {
     }
 }
 
+/// One merged range of a batch plan: a disjoint inclusive key range plus
+/// the indices (into the input batch) of the queries it covers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlannedQuery {
+    /// The merged range routed to the cluster.
+    pub range: RangeQuery,
+    /// Indices of the input queries whose union this range is, ascending.
+    pub sources: Vec<usize>,
+}
+
+impl PlannedQuery {
+    /// Cut this merged range into maximal *elementary segments*: disjoint
+    /// sub-ranges on which the set of covering source queries is constant.
+    /// Returns `(segment, covering source indices)` in key order; the
+    /// segments partition `self.range` exactly (the merged range is the
+    /// union of its sources, so no sub-range is uncovered).
+    pub fn segments(&self, queries: &[RangeQuery]) -> Vec<(RangeQuery, Vec<usize>)> {
+        // Cut positions in i128 so `hi + 1` cannot overflow at i64::MAX.
+        let mut cuts: Vec<i128> = Vec::with_capacity(2 * self.sources.len());
+        for &i in &self.sources {
+            cuts.push(queries[i].lo as i128);
+            cuts.push(queries[i].hi as i128 + 1);
+        }
+        cuts.sort_unstable();
+        cuts.dedup();
+        let mut out = Vec::new();
+        for w in cuts.windows(2) {
+            let seg = RangeQuery { lo: w[0] as i64, hi: (w[1] - 1) as i64 };
+            let covering: Vec<usize> = self
+                .sources
+                .iter()
+                .copied()
+                .filter(|&i| queries[i].lo <= seg.lo && seg.hi <= queries[i].hi)
+                .collect();
+            if !covering.is_empty() {
+                out.push((seg, covering));
+            }
+        }
+        out
+    }
+}
+
+/// Plan a batch of selective queries: sort by range, drop inverted
+/// (`lo > hi`) inputs, dedupe identical/contained ranges, and merge
+/// overlapping or adjacent ones (inclusive integer ranges: `[a, b]` and
+/// `[b + 1, c]` merge into `[a, c]`).
+///
+/// Invariants of the output:
+/// * planned ranges are sorted, pairwise disjoint and non-adjacent;
+/// * their union equals the union of the (valid) input ranges;
+/// * every valid input index appears in exactly one `sources` list.
+pub fn plan_batch(queries: &[RangeQuery]) -> Vec<PlannedQuery> {
+    let mut order: Vec<usize> =
+        (0..queries.len()).filter(|&i| queries[i].lo <= queries[i].hi).collect();
+    order.sort_by_key(|&i| (queries[i].lo, queries[i].hi));
+    let mut out: Vec<PlannedQuery> = Vec::new();
+    for i in order {
+        let q = queries[i];
+        match out.last_mut() {
+            // i128 so `hi + 1` cannot overflow when a range ends at i64::MAX.
+            Some(last) if (q.lo as i128) <= (last.range.hi as i128) + 1 => {
+                if q.hi > last.range.hi {
+                    last.range.hi = q.hi;
+                }
+                last.sources.push(i);
+            }
+            _ => out.push(PlannedQuery { range: q, sources: vec![i] }),
+        }
+    }
+    for pq in &mut out {
+        pq.sources.sort_unstable();
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn q(lo: i64, hi: i64) -> RangeQuery {
+        RangeQuery { lo, hi }
+    }
 
     #[test]
     fn parsing() {
@@ -66,5 +157,106 @@ mod tests {
         assert_eq!("default".parse::<Method>().unwrap(), Method::Default);
         assert!("spark".parse::<Method>().is_err());
         assert_eq!(Method::Oseba.label(), "oseba");
+    }
+
+    #[test]
+    fn plan_empty_and_single() {
+        assert!(plan_batch(&[]).is_empty());
+        let plan = plan_batch(&[q(5, 9)]);
+        assert_eq!(plan, vec![PlannedQuery { range: q(5, 9), sources: vec![0] }]);
+    }
+
+    #[test]
+    fn plan_merges_overlapping_and_adjacent() {
+        // [0,10] ∪ [5,20] overlap; [21,30] is adjacent to [0,20]; [50,60]
+        // stands alone.
+        let plan = plan_batch(&[q(50, 60), q(0, 10), q(21, 30), q(5, 20)]);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0].range, q(0, 30));
+        assert_eq!(plan[0].sources, vec![1, 2, 3]);
+        assert_eq!(plan[1].range, q(50, 60));
+        assert_eq!(plan[1].sources, vec![0]);
+    }
+
+    #[test]
+    fn plan_keeps_gapped_ranges_apart() {
+        // [0,10] and [12,20] leave key 11 unselected: no merge.
+        let plan = plan_batch(&[q(12, 20), q(0, 10)]);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0].range, q(0, 10));
+        assert_eq!(plan[1].range, q(12, 20));
+    }
+
+    #[test]
+    fn plan_dedupes_identical_and_contained() {
+        let plan = plan_batch(&[q(0, 100), q(0, 100), q(30, 40)]);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].range, q(0, 100));
+        assert_eq!(plan[0].sources, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn plan_skips_inverted_ranges() {
+        let plan = plan_batch(&[q(9, 1), q(2, 4)]);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].sources, vec![1]);
+    }
+
+    #[test]
+    fn plan_handles_extreme_bounds() {
+        let plan = plan_batch(&[q(i64::MAX - 10, i64::MAX), q(i64::MAX - 3, i64::MAX)]);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].range, q(i64::MAX - 10, i64::MAX));
+    }
+
+    #[test]
+    fn plan_sources_partition_the_inputs() {
+        let qs = [q(0, 5), q(100, 200), q(3, 40), q(150, 160), q(300, 300)];
+        let plan = plan_batch(&qs);
+        let mut seen: Vec<usize> = plan.iter().flat_map(|p| p.sources.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+        // Disjoint and non-adjacent.
+        for w in plan.windows(2) {
+            assert!(w[0].range.hi + 1 < w[1].range.lo, "{plan:?}");
+        }
+    }
+
+    #[test]
+    fn segments_split_on_constant_covering_sets() {
+        // [0,10] and [5,20] merge into [0,20] with three elementary
+        // segments: [0,4] covered by {0}, [5,10] by {0,1}, [11,20] by {1}.
+        let qs = [q(0, 10), q(5, 20)];
+        let plan = plan_batch(&qs);
+        assert_eq!(plan.len(), 1);
+        let segs = plan[0].segments(&qs);
+        assert_eq!(
+            segs,
+            vec![
+                (q(0, 4), vec![0]),
+                (q(5, 10), vec![0, 1]),
+                (q(11, 20), vec![1]),
+            ]
+        );
+    }
+
+    #[test]
+    fn segments_partition_the_merged_range() {
+        let qs = [q(0, 100), q(20, 30), q(25, 60), q(90, 120)];
+        let plan = plan_batch(&qs);
+        assert_eq!(plan.len(), 1);
+        let segs = plan[0].segments(&qs);
+        // Contiguous cover of [0, 120].
+        assert_eq!(segs.first().unwrap().0.lo, 0);
+        assert_eq!(segs.last().unwrap().0.hi, 120);
+        for w in segs.windows(2) {
+            assert_eq!(w[0].0.hi + 1, w[1].0.lo);
+        }
+        // Each source query is exactly the union of the segments it covers.
+        for (i, src) in qs.iter().enumerate() {
+            let mine: Vec<_> = segs.iter().filter(|(_, c)| c.contains(&i)).collect();
+            assert_eq!(mine.first().unwrap().0.lo, src.lo, "query {i}");
+            assert_eq!(mine.last().unwrap().0.hi, src.hi, "query {i}");
+        }
     }
 }

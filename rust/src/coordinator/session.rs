@@ -1,12 +1,14 @@
-//! The interactive-session driver: runs a multi-phase selective-analysis
-//! workload with one method and records the Fig 4 / Fig 6 series.
+//! Session drivers: the interactive multi-phase workload that produces the
+//! paper's Fig 4 / Fig 6 series, and the planned multi-query batch session
+//! (many users' selective queries served through one cluster pass each).
 
 use crate::analysis::{PeriodSpec, PeriodStats};
 use crate::coordinator::planner::{IndexKind, Method};
 use crate::coordinator::Coordinator;
-use crate::engine::Dataset;
+use crate::engine::{CounterSnapshot, Dataset};
 use crate::error::Result;
-use crate::metrics::{SessionMetrics, Timer};
+use crate::index::RangeQuery;
+use crate::metrics::{BatchReport, SessionMetrics, Timer};
 
 /// Everything a session run produces.
 #[derive(Clone, Debug)]
@@ -88,6 +90,46 @@ pub fn run_session(
     Ok(SessionReport { method, metrics, stats, queries, index_bytes })
 }
 
+/// Everything a planned multi-query batch session produces.
+#[derive(Clone, Debug)]
+pub struct BatchSessionReport {
+    /// Per-input-query statistics, in input order.
+    pub stats: Vec<PeriodStats>,
+    /// Planner/execution counters for the batch.
+    pub report: BatchReport,
+    /// Index metadata footprint.
+    pub index_bytes: usize,
+    /// Engine-counter deltas attributable to this batch.
+    pub counters_before: CounterSnapshot,
+    pub counters_after: CounterSnapshot,
+}
+
+/// Run one planned batch session: build the index, plan + execute the
+/// whole query batch through [`Coordinator::analyze_batch_with_report`],
+/// and capture the engine counters around it. This is the multi-user
+/// serving shape: N sessions' queries arrive together and share one
+/// cluster pass per merged range.
+pub fn run_batch_session(
+    coord: &Coordinator,
+    ds: &Dataset,
+    index_kind: IndexKind,
+    queries: &[RangeQuery],
+    column: usize,
+) -> Result<BatchSessionReport> {
+    let index = coord.build_index(ds, index_kind)?;
+    let counters_before = coord.context().counters();
+    let (stats, report) =
+        coord.analyze_batch_with_report(ds, index.as_ref(), queries, column)?;
+    let counters_after = coord.context().counters();
+    Ok(BatchSessionReport {
+        stats,
+        report,
+        index_bytes: index.memory_bytes(),
+        counters_before,
+        counters_after,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,6 +193,33 @@ mod tests {
         assert!(oseba.index_bytes > 0);
         assert_eq!(default.index_bytes, 0);
         assert_eq!(oseba.queries, default.queries);
+    }
+
+    #[test]
+    fn batch_session_reports_counters_and_stats() {
+        let c = coord();
+        let ds = c.load(ClimateGen::default().generate(30_000), 10).unwrap();
+        let h = 3600i64;
+        let queries = vec![
+            crate::index::RangeQuery { lo: 0, hi: 6_000 * h },
+            crate::index::RangeQuery { lo: 4_000 * h, hi: 9_000 * h },
+            crate::index::RangeQuery { lo: 20_000 * h, hi: 24_000 * h },
+        ];
+        let rep = run_batch_session(&c, &ds, IndexKind::Cias, &queries, 0).unwrap();
+        assert_eq!(rep.stats.len(), 3);
+        assert_eq!(rep.report.queries, 3);
+        assert_eq!(rep.report.merged_ranges, 2, "first two overlap");
+        assert!(rep.index_bytes > 0);
+        // The batch is pure index-path work: no scans, some targeting.
+        assert_eq!(
+            rep.counters_after.partitions_scanned,
+            rep.counters_before.partitions_scanned
+        );
+        assert!(rep.counters_after.partitions_targeted > rep.counters_before.partitions_targeted);
+        assert_eq!(
+            rep.counters_after.partitions_targeted - rep.counters_before.partitions_targeted,
+            rep.report.partitions_touched
+        );
     }
 
     #[test]

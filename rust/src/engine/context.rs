@@ -95,6 +95,12 @@ impl OsebaContext {
         if num_partitions == 0 {
             return Err(OsebaError::Schema("num_partitions must be > 0".into()));
         }
+        if batch.rows() == 0 {
+            // Without this check an empty batch computes `rows_per == 0`
+            // and surfaces as a misleading "rows_per_partition must be > 0"
+            // from partition_batch_uniform.
+            return Err(OsebaError::Schema("cannot load empty batch".into()));
+        }
         let rows_per = batch.rows().div_ceil(num_partitions);
         let parts = partition_batch_uniform(&batch, rows_per)?;
         self.adopt(batch.schema.clone(), parts, Lineage::Source { name: "load".into() })
@@ -449,6 +455,20 @@ mod tests {
         assert!(matches!(&log[1].2, Lineage::Derived { parent, .. } if *parent == ds.id()));
         assert!(log[1].1.starts_with("filter["));
         assert!(matches!(f.lineage(), Lineage::Derived { .. }));
+    }
+
+    #[test]
+    fn empty_batch_load_is_a_clear_schema_error() {
+        // Regression: used to fall into partition_batch_uniform's
+        // "rows_per_partition must be > 0" failure path.
+        let c = ctx();
+        let empty = crate::storage::BatchBuilder::new(Schema::climate()).finish().unwrap();
+        let err = c.load(empty, 4).unwrap_err();
+        assert!(
+            err.to_string().contains("cannot load empty batch"),
+            "got: {err}"
+        );
+        assert_eq!(c.memory_used(), 0);
     }
 
     #[test]

@@ -4,60 +4,89 @@
 //! grouped by subsystem so callers can match on the failure domain (e.g. a
 //! server can map `Query*` errors to client-visible messages while treating
 //! `Runtime`/`Io` as internal).
+//!
+//! `Display`/`Error` are implemented by hand: the vendored dependency set
+//! has no `thiserror` (see DESIGN.md §4).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the Oseba engine, indexes, runtime and coordinator.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum OsebaError {
     /// Dataset construction / schema violations.
-    #[error("schema error: {0}")]
     Schema(String),
 
     /// A query referenced a column that does not exist.
-    #[error("unknown column: {0}")]
     UnknownColumn(String),
 
     /// A range query that cannot be satisfied (e.g. inverted bounds).
-    #[error("invalid range: {0}")]
     InvalidRange(String),
 
     /// Index construction failed (unsorted keys, empty dataset, ...).
-    #[error("index error: {0}")]
     Index(String),
 
     /// The PJRT runtime failed to load/compile/execute an artifact.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// An artifact or its manifest is missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Cluster/scheduler failures (worker death without reassignment, ...).
-    #[error("cluster error: {0}")]
     Cluster(String),
 
     /// Configuration parse/validation failures.
-    #[error("config error: {0}")]
     Config(String),
 
     /// JSON parse errors (manifest, server protocol).
-    #[error("json error: {0}")]
     Json(String),
 
     /// Memory budget exhausted and eviction could not reclaim enough.
-    #[error("out of storage memory: requested {requested} bytes, budget {budget}")]
     OutOfMemory { requested: usize, budget: usize },
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for OsebaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OsebaError::Schema(m) => write!(f, "schema error: {m}"),
+            OsebaError::UnknownColumn(m) => write!(f, "unknown column: {m}"),
+            OsebaError::InvalidRange(m) => write!(f, "invalid range: {m}"),
+            OsebaError::Index(m) => write!(f, "index error: {m}"),
+            OsebaError::Runtime(m) => write!(f, "runtime error: {m}"),
+            OsebaError::Artifact(m) => write!(f, "artifact error: {m}"),
+            OsebaError::Cluster(m) => write!(f, "cluster error: {m}"),
+            OsebaError::Config(m) => write!(f, "config error: {m}"),
+            OsebaError::Json(m) => write!(f, "json error: {m}"),
+            OsebaError::OutOfMemory { requested, budget } => write!(
+                f,
+                "out of storage memory: requested {requested} bytes, budget {budget}"
+            ),
+            OsebaError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for OsebaError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            OsebaError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for OsebaError {
+    fn from(e: std::io::Error) -> Self {
+        OsebaError::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, OsebaError>;
 
+#[cfg(feature = "xla")]
 impl From<xla::Error> for OsebaError {
     fn from(e: xla::Error) -> Self {
         OsebaError::Runtime(e.to_string())
@@ -81,5 +110,13 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: OsebaError = io.into();
         assert!(matches!(e, OsebaError::Io(_)));
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: OsebaError = io.into();
+        let src = std::error::Error::source(&e).expect("io source");
+        assert!(src.to_string().contains("gone"));
     }
 }

@@ -55,11 +55,14 @@ impl Cias {
         if metas.is_empty() {
             return Err(OsebaError::Index("empty partition set".into()));
         }
+        // Ranges are *inclusive*, so a shared boundary key (key_max ==
+        // next key_min) is an overlap too: a point query on that key would
+        // double-count rows from both partitions.
         for w in metas.windows(2) {
-            if w[0].key_max > w[1].key_min {
+            if w[0].key_max >= w[1].key_min {
                 return Err(OsebaError::Index(format!(
-                    "partitions {} and {} overlap",
-                    w[0].id, w[1].id
+                    "partitions {} and {} overlap ({} >= {})",
+                    w[0].id, w[1].id, w[0].key_max, w[1].key_min
                 )));
             }
         }
@@ -130,10 +133,12 @@ impl Cias {
         } else {
             None
         };
+        // Inclusive ranges: equality with the previous key_max is an
+        // overlap (shared boundary key), mirroring `from_meta`.
         if let Some(pm) = prev_max {
-            if m.key_min < pm {
+            if m.key_min <= pm {
                 return Err(OsebaError::Index(format!(
-                    "append overlaps: key_min {} < previous key_max {pm}",
+                    "append overlaps: key_min {} <= previous key_max {pm}",
                     m.key_min
                 )));
             }
@@ -398,6 +403,31 @@ mod tests {
         let next = PartitionMeta { id: 3, key_min: 99_250, key_max: 99_490, rows: 25, step: Some(10) };
         c.append_meta(next).unwrap();
         assert_eq!(c.asl_len(), 2);
+    }
+
+    #[test]
+    fn shared_boundary_key_rejected() {
+        // Regression: inclusive partition ranges sharing a boundary key
+        // used to be accepted, double-counting that key on point queries.
+        let metas = vec![
+            PartitionMeta { id: 0, key_min: 0, key_max: 100, rows: 11, step: Some(10) },
+            PartitionMeta { id: 1, key_min: 100, key_max: 200, rows: 11, step: Some(10) },
+        ];
+        assert!(Cias::from_meta(metas).is_err());
+    }
+
+    #[test]
+    fn append_shared_boundary_key_rejected() {
+        let parts = uniform_parts(50, 25, 10); // keys 500, 510, ..., 990
+        let mut c = Cias::from_meta(extract_like(&parts)).unwrap();
+        // Previous key_max is 990: an equal key_min is an overlap now.
+        let touching =
+            PartitionMeta { id: 2, key_min: 990, key_max: 1090, rows: 11, step: Some(10) };
+        assert!(c.append_meta(touching).is_err());
+        // The next grid key (1000) is fine.
+        let next =
+            PartitionMeta { id: 2, key_min: 1000, key_max: 1100, rows: 11, step: Some(10) };
+        c.append_meta(next).unwrap();
     }
 
     #[test]

@@ -29,10 +29,12 @@ impl TableIndex {
         if entries.is_empty() {
             return Err(OsebaError::Index("empty partition set".into()));
         }
+        // Inclusive ranges: a shared boundary key is an overlap (a point
+        // query on it would double-count) — mirrors `Cias::from_meta`.
         for w in entries.windows(2) {
-            if w[0].key_max > w[1].key_min {
+            if w[0].key_max >= w[1].key_min {
                 return Err(OsebaError::Index(format!(
-                    "partitions {} and {} overlap ({} > {})",
+                    "partitions {} and {} overlap ({} >= {})",
                     w[0].id, w[1].id, w[0].key_max, w[1].key_min
                 )));
             }
@@ -142,5 +144,16 @@ mod tests {
     #[test]
     fn rejects_empty() {
         assert!(TableIndex::from_meta(vec![]).is_err());
+    }
+
+    #[test]
+    fn rejects_shared_boundary_key() {
+        // Regression: a shared boundary key between inclusive ranges is an
+        // overlap (a point query on it would double-count rows).
+        let metas = vec![
+            PartitionMeta { id: 0, key_min: 0, key_max: 100, rows: 10, step: Some(10) },
+            PartitionMeta { id: 1, key_min: 100, key_max: 190, rows: 10, step: Some(10) },
+        ];
+        assert!(TableIndex::from_meta(metas).is_err());
     }
 }

@@ -7,15 +7,18 @@
 //! * **Layer 3 (this crate)** — a Spark-like in-memory partitioned data
 //!   engine ([`engine`]), the paper's content-aware indexes ([`index`]:
 //!   table-based and CIAS), a leader/worker coordinator ([`coordinator`])
-//!   over a simulated cluster ([`cluster`]), and the PJRT runtime
-//!   ([`runtime`]) that executes AOT-compiled analysis kernels.
+//!   with a concurrent multi-query batch planner, all over a simulated
+//!   cluster ([`cluster`]), and the PJRT runtime ([`runtime`]) that
+//!   executes AOT-compiled analysis kernels (behind the `xla` feature;
+//!   the default build uses the pure-rust native backend).
 //! * **Layer 2 (python/compile/model.py)** — JAX analysis graphs, lowered
 //!   once to `artifacts/*.hlo.txt`.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the masked
 //!   per-block statistics the analyses hot-loop on.
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
-//! reproduced figures.
+//! See the repository-root `DESIGN.md` for the system inventory and
+//! `README.md` for the build/test/bench quickstart; the `rust/benches/`
+//! targets reproduce the paper's Fig 4 / Fig 6 measurements.
 
 pub mod analysis;
 pub mod bench;
@@ -41,7 +44,7 @@ pub use error::{OsebaError, Result};
 pub mod prelude {
     pub use crate::analysis::{Analyzer, PeriodStats};
     pub use crate::config::ContextConfig;
-    pub use crate::coordinator::{Coordinator, IndexKind, Method};
+    pub use crate::coordinator::{plan_batch, Coordinator, IndexKind, Method, PlannedQuery};
     pub use crate::engine::{Dataset, OsebaContext};
     pub use crate::error::{OsebaError, Result};
     pub use crate::index::{Cias, ContentIndex, RangeQuery, TableIndex};

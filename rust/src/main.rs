@@ -3,6 +3,9 @@
 //! Subcommands:
 //! * `run`    — the paper's five-period interactive workload (Fig 4 + 6)
 //!              with either method, printing the per-phase table.
+//! * `batch`  — plan + execute N (possibly overlapping) selective queries
+//!              as one concurrent batch, printing the merged plan, the
+//!              per-query stats, and the partitions-touched savings.
 //! * `serve`  — load a dataset and serve interactive range-stat queries
 //!              over TCP (line-delimited JSON).
 //! * `index`  — build both indexes over a dataset and report their
@@ -14,13 +17,14 @@ use std::sync::Arc;
 use oseba::analysis::five_periods;
 use oseba::cli::{bool_flag, flag, Cli};
 use oseba::config::{parse_bytes, AppConfig, BackendKind};
-use oseba::coordinator::{run_session, Coordinator, IndexKind, Method};
+use oseba::coordinator::{plan_batch, run_session, Coordinator, IndexKind, Method};
 use oseba::datagen::ClimateGen;
-use oseba::error::Result;
-use oseba::index::ContentIndex;
+use oseba::error::{OsebaError, Result};
+use oseba::index::{ContentIndex, RangeQuery};
 use oseba::runtime::make_backend;
 use oseba::server::QueryServer;
 use oseba::util::humansize;
+use oseba::util::rng::Xoshiro256;
 
 fn cli() -> Cli {
     let common = || {
@@ -42,6 +46,24 @@ fn cli() -> Cli {
             f.push(flag("column", "column to analyze", Some("temperature")));
             f.push(flag("repeat", "session repetitions (profiling)", Some("1")));
             f.push(bool_flag("json", "emit metrics as JSON"));
+            f
+        })
+        .command("batch", "plan + run N selective queries as one batch", {
+            let mut f = common();
+            f.push(flag("index", "table | cias", Some("cias")));
+            f.push(flag("column", "column to analyze", Some("temperature")));
+            f.push(flag("queries", "number of generated queries", Some("16")));
+            f.push(flag(
+                "width-pct",
+                "generated query width, % of the key span",
+                Some("8"),
+            ));
+            f.push(flag(
+                "ranges",
+                "explicit queries 'lo:hi,lo:hi,...' (overrides --queries)",
+                None,
+            ));
+            f.push(bool_flag("json", "emit the batch report as JSON"));
             f
         })
         .command("serve", "serve interactive queries over TCP", {
@@ -131,6 +153,107 @@ fn cmd_run(p: &oseba::cli::Parsed) -> Result<()> {
     Ok(())
 }
 
+/// Parse `lo:hi,lo:hi,...` into validated range queries.
+fn parse_ranges(spec: &str) -> Result<Vec<RangeQuery>> {
+    spec.split(',')
+        .map(|s| {
+            let (lo, hi) = s
+                .split_once(':')
+                .ok_or_else(|| OsebaError::Config(format!("bad range '{s}' (want lo:hi)")))?;
+            let lo: i64 = lo
+                .trim()
+                .parse()
+                .map_err(|_| OsebaError::Config(format!("bad lo in '{s}'")))?;
+            let hi: i64 = hi
+                .trim()
+                .parse()
+                .map_err(|_| OsebaError::Config(format!("bad hi in '{s}'")))?;
+            RangeQuery::new(lo, hi)
+        })
+        .collect()
+}
+
+/// Generate `n` random queries of `width_frac` of the key span each;
+/// placements are uniform, so wide batches overlap heavily — the workload
+/// the planner exists for.
+fn random_queries(
+    n: usize,
+    width_frac: f64,
+    seed: u64,
+    key_min: i64,
+    key_max: i64,
+) -> Vec<RangeQuery> {
+    let span = (key_max - key_min) as f64;
+    let width = (span * width_frac).max(1.0);
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n)
+        .map(|_| {
+            let lo = key_min + (rng.next_f64() * (span - width)) as i64;
+            let hi = lo + width as i64;
+            RangeQuery { lo, hi: hi.min(key_max) }
+        })
+        .collect()
+}
+
+fn cmd_batch(p: &oseba::cli::Parsed) -> Result<()> {
+    let cfg = app_config(p)?;
+    let index_kind: IndexKind = p.get("index").unwrap().parse()?;
+    let backend = make_backend(cfg.backend, &cfg.artifacts_dir)?;
+    let coord = Coordinator::new(&cfg, backend)?;
+    let ds = load(&coord, &cfg)?;
+    let column = ds.schema().column_index(p.get("column").unwrap())?;
+
+    let queries = match p.get("ranges") {
+        Some(spec) if !spec.is_empty() => parse_ranges(spec)?,
+        _ => {
+            let n: usize = p.get_parse("queries")?.unwrap();
+            let width: f64 = p.get_parse::<f64>("width-pct")?.unwrap() / 100.0;
+            random_queries(
+                n,
+                width,
+                cfg.seed,
+                ds.key_min().expect("non-empty dataset"),
+                ds.key_max().expect("non-empty dataset"),
+            )
+        }
+    };
+
+    // One index build serves the naive-cost comparison and the batch run.
+    let index = coord.build_index(&ds, index_kind)?;
+    let naive_touched: usize = queries.iter().map(|q| index.lookup(*q).len()).sum();
+
+    let plan = plan_batch(&queries);
+    println!("plan: {} queries -> {} merged ranges", queries.len(), plan.len());
+    for pq in &plan {
+        println!(
+            "  [{}, {}] <- queries {:?}",
+            pq.range.lo, pq.range.hi, pq.sources
+        );
+    }
+
+    let before = coord.context().counters();
+    let (stats, report) =
+        coord.analyze_batch_with_report(&ds, index.as_ref(), &queries, column)?;
+    let after = coord.context().counters();
+    println!();
+    for (i, (q, st)) in queries.iter().zip(&stats).enumerate() {
+        println!(
+            "query {i:>3} [{}, {}]: n={} max={:.3} min={:.3} mean={:.3} std={:.3}",
+            q.lo, q.hi, st.count, st.max, st.min, st.mean, st.std
+        );
+    }
+    println!("\n{}", report.line());
+    let delta = after.partitions_targeted - before.partitions_targeted;
+    println!(
+        "partitions targeted: {delta} (naive per-query execution: {naive_touched})"
+    );
+    println!("index: {} bytes ({index_kind:?})", index.memory_bytes());
+    if p.get_bool("json") {
+        println!("{}", report.to_json().to_string());
+    }
+    Ok(())
+}
+
 fn cmd_serve(p: &oseba::cli::Parsed) -> Result<()> {
     let cfg = app_config(p)?;
     let index_kind: IndexKind = p.get("index").unwrap().parse()?;
@@ -195,6 +318,7 @@ fn main() {
     };
     let result = match parsed.command.as_str() {
         "run" => cmd_run(&parsed),
+        "batch" => cmd_batch(&parsed),
         "serve" => cmd_serve(&parsed),
         "index" => cmd_index(&parsed),
         "info" => cmd_info(&parsed),

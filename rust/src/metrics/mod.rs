@@ -126,6 +126,54 @@ impl SessionMetrics {
     }
 }
 
+/// Per-batch planner/execution counters — the instrument for the
+/// concurrent multi-query path (`Coordinator::analyze_batch`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BatchReport {
+    /// Queries in the input batch.
+    pub queries: usize,
+    /// Disjoint merged ranges after planning.
+    pub merged_ranges: usize,
+    /// Elementary demux segments across all merged ranges.
+    pub segments: usize,
+    /// Partition slices resolved: one per intersecting partition per
+    /// merged range (overlapping queries share a single touch; a
+    /// partition hit by several disjoint merged ranges counts once each).
+    pub partitions_touched: usize,
+    /// Worker task dispatches submitted to the pool.
+    pub tasks: usize,
+    /// Wall-clock seconds for planning + execution + demux.
+    pub secs: f64,
+}
+
+impl BatchReport {
+    /// One-line human rendering for CLI/bench output.
+    pub fn line(&self) -> String {
+        format!(
+            "batch: {} queries -> {} merged ranges, {} segments, \
+             {} partition slices, {} tasks in {}",
+            self.queries,
+            self.merged_ranges,
+            self.segments,
+            self.partitions_touched,
+            self.tasks,
+            humansize::secs(self.secs),
+        )
+    }
+
+    /// JSON dump, matching the session-metrics conventions.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queries", Json::num(self.queries as f64)),
+            ("merged_ranges", Json::num(self.merged_ranges as f64)),
+            ("segments", Json::num(self.segments as f64)),
+            ("partitions_touched", Json::num(self.partitions_touched as f64)),
+            ("tasks", Json::num(self.tasks as f64)),
+            ("secs", Json::num(self.secs)),
+        ])
+    }
+}
+
 /// Simple scoped timer.
 pub struct Timer(Instant);
 
@@ -185,6 +233,24 @@ mod tests {
         let t = m.table();
         assert!(t.contains("oseba"));
         assert!(t.contains("phase"));
+    }
+
+    #[test]
+    fn batch_report_renders() {
+        let r = BatchReport {
+            queries: 8,
+            merged_ranges: 3,
+            segments: 11,
+            partitions_touched: 9,
+            tasks: 6,
+            secs: 0.125,
+        };
+        let line = r.line();
+        assert!(line.contains("8 queries"));
+        assert!(line.contains("3 merged ranges"));
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"merged_ranges\":3"));
+        assert!(j.contains("\"partitions_touched\":9"));
     }
 
     #[test]

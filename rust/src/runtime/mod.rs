@@ -7,12 +7,14 @@
 pub mod artifacts;
 pub mod backend;
 pub mod native;
+#[cfg(feature = "xla")]
 pub mod pjrt;
 pub mod service;
 
 pub use artifacts::Manifest;
 pub use backend::AnalysisBackend;
 pub use native::NativeBackend;
+#[cfg(feature = "xla")]
 pub use pjrt::PjRtRuntime;
 pub use service::{spawn as spawn_kernel_service, KernelHandle, ServiceStats};
 

@@ -12,13 +12,16 @@
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+#[cfg(feature = "xla")]
 use std::time::Instant;
 
 use crate::error::{OsebaError, Result};
 use crate::runtime::backend::{check_block_len, AnalysisBackend};
+#[cfg(feature = "xla")]
 use crate::runtime::pjrt::{lit, PjRtRuntime};
 use crate::util::stats::{DistancePartial, Moments};
 
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 enum Request {
     Stats { block: Vec<f32>, start: i32, end: i32, reply: mpsc::Sender<Result<Moments>> },
     StatsBatch {
@@ -79,6 +82,24 @@ pub struct KernelHandle {
 /// Spawn the service thread over the artifacts in `dir`. Fails fast if the
 /// manifest is missing or the PJRT client cannot start. When `precompile`
 /// is set, all entries are compiled before this returns.
+///
+/// Without the `xla` cargo feature (the default — the vendored build has no
+/// PJRT bindings) this returns a clear [`OsebaError::Runtime`]; use the
+/// native backend instead.
+#[cfg(not(feature = "xla"))]
+pub fn spawn(dir: impl Into<std::path::PathBuf>, _precompile: bool) -> Result<KernelHandle> {
+    let dir = dir.into();
+    Err(OsebaError::Runtime(format!(
+        "the 'hlo' backend needs the vendored `xla` crate (artifacts dir {}); \
+         build with `--features xla` or use `--backend native`",
+        dir.display()
+    )))
+}
+
+/// Spawn the service thread over the artifacts in `dir`. Fails fast if the
+/// manifest is missing or the PJRT client cannot start. When `precompile`
+/// is set, all entries are compiled before this returns.
+#[cfg(feature = "xla")]
 pub fn spawn(dir: impl Into<std::path::PathBuf>, precompile: bool) -> Result<KernelHandle> {
     let dir = dir.into();
     let (tx, rx) = mpsc::channel::<Request>();
@@ -112,6 +133,7 @@ pub fn spawn(dir: impl Into<std::path::PathBuf>, precompile: bool) -> Result<Ker
     Ok(KernelHandle { tx: Arc::new(Mutex::new(tx)), block_rows, ma_windows })
 }
 
+#[cfg(feature = "xla")]
 fn serve(rt: &mut PjRtRuntime, rx: mpsc::Receiver<Request>) {
     let mut stats = ServiceStats::default();
     while let Ok(req) = rx.recv() {
@@ -159,6 +181,7 @@ fn serve(rt: &mut PjRtRuntime, rx: mpsc::Receiver<Request>) {
 /// under 50% — so a 23-block task list runs as one b128? no: one b16 + …
 /// concretely `128` only engages from 64 pending blocks upward. Returns
 /// the results plus the number of executions performed.
+#[cfg(feature = "xla")]
 fn run_stats_batch(
     rt: &mut PjRtRuntime,
     blocks: &[(Vec<f32>, i32, i32)],
@@ -206,6 +229,7 @@ fn run_stats_batch(
 
 /// One grid execution over up to `bsz` tasks (zero-padded; padded rows use
 /// `start == end == 0`, the identity partial).
+#[cfg(feature = "xla")]
 fn run_stats_grid(
     rt: &mut PjRtRuntime,
     entry: &str,
@@ -232,6 +256,7 @@ fn run_stats_grid(
         .collect())
 }
 
+#[cfg(feature = "xla")]
 fn run_stats(rt: &mut PjRtRuntime, entry: &str, block: &[f32], s: i32, e: i32) -> Result<Moments> {
     let out = rt.execute(
         entry,
@@ -244,6 +269,7 @@ fn run_stats(rt: &mut PjRtRuntime, entry: &str, block: &[f32], s: i32, e: i32) -
     Ok(Moments::from_kernel(v[0], v[1], v[2], v[3], v[4]))
 }
 
+#[cfg(feature = "xla")]
 fn run_ma(rt: &mut PjRtRuntime, block: &[f32], s: i32, e: i32, window: usize) -> Result<Vec<f32>> {
     let entry = rt.manifest().ma_entry(window)?;
     let out = rt.execute(
@@ -253,6 +279,7 @@ fn run_ma(rt: &mut PjRtRuntime, block: &[f32], s: i32, e: i32, window: usize) ->
     lit::to_f32_vec(&out[0])
 }
 
+#[cfg(feature = "xla")]
 fn run_distance(
     rt: &mut PjRtRuntime,
     a: &[f32],
@@ -268,6 +295,7 @@ fn run_distance(
     Ok(DistancePartial::from_kernel(v[0], v[1], v[2], v[3]))
 }
 
+#[cfg(feature = "xla")]
 fn run_hist(
     rt: &mut PjRtRuntime,
     block: &[f32],

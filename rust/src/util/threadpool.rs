@@ -75,26 +75,40 @@ impl ThreadPool {
 
     /// Run all `tasks` on the pool and collect results in input order.
     /// Panics in tasks are propagated (first panic wins).
+    ///
+    /// Waits on *this call's* completion count, not pool-wide idleness, so
+    /// concurrent `scope_execute` callers sharing one pool do not block on
+    /// each other's work (the batch coordinator relies on this).
     pub fn scope_execute<T, F>(&self, tasks: Vec<F>) -> Vec<T>
     where
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
     {
         let n = tasks.len();
-        let results: Arc<Mutex<Vec<Option<std::thread::Result<T>>>>> =
-            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        // (result slots, tasks remaining) guarded together; the condvar
+        // signals when remaining hits zero.
+        let state: Arc<(Mutex<(Vec<Option<std::thread::Result<T>>>, usize)>, Condvar)> =
+            Arc::new((Mutex::new(((0..n).map(|_| None).collect(), n)), Condvar::new()));
         for (i, task) in tasks.into_iter().enumerate() {
-            let results = Arc::clone(&results);
+            let state = Arc::clone(&state);
             self.execute(move || {
                 let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
-                results.lock().unwrap()[i] = Some(r);
+                let (lock, done) = &*state;
+                let mut guard = lock.lock().unwrap();
+                guard.0[i] = Some(r);
+                guard.1 -= 1;
+                if guard.1 == 0 {
+                    done.notify_all();
+                }
             });
         }
-        self.wait_idle();
-        let slots = Arc::try_unwrap(results)
-            .unwrap_or_else(|_| panic!("scope_execute: dangling result refs"))
-            .into_inner()
-            .unwrap();
+        let (lock, done) = &*state;
+        let mut guard = lock.lock().unwrap();
+        while guard.1 != 0 {
+            guard = done.wait(guard).unwrap();
+        }
+        let slots = std::mem::take(&mut guard.0);
+        drop(guard);
         slots
             .into_iter()
             .map(|slot| match slot.expect("task completed") {
@@ -102,6 +116,20 @@ impl ThreadPool {
                 Err(p) => std::panic::resume_unwind(p),
             })
             .collect()
+    }
+}
+
+/// Decrements `in_flight` on drop, so a panicking job can never leak its
+/// slot: without this, a panic unwinding through `worker_loop` would skip
+/// the decrement and every later `wait_idle()` would hang forever.
+struct InFlightGuard<'a>(&'a Shared);
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        if self.0.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _guard = self.0.idle_lock.lock().unwrap();
+            self.0.idle.notify_all();
+        }
     }
 }
 
@@ -119,11 +147,13 @@ fn worker_loop(sh: Arc<Shared>) {
                 q = sh.available.wait(q).unwrap();
             }
         };
-        job();
-        if sh.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
-            let _guard = sh.idle_lock.lock().unwrap();
-            sh.idle.notify_all();
-        }
+        // Contain panics so the worker thread survives a panicking job
+        // (`scope_execute` already catches and re-raises on the caller
+        // side; raw `execute` jobs that panic are contained here). The
+        // guard decrements `in_flight` whether the job returns or unwinds.
+        let guard = InFlightGuard(sh.as_ref());
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        drop(guard);
     }
 }
 
@@ -199,5 +229,77 @@ mod tests {
         assert_eq!(pool.size(), 1);
         let out = pool.scope_execute(vec![|| 7]);
         assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn panicking_job_does_not_leak_in_flight() {
+        // Regression: a panic used to kill the worker before the
+        // `in_flight` decrement, so the next `wait_idle()` hung forever.
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("contained panic"));
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..20 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle(); // must return, not hang
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    fn worker_survives_panic_and_pool_stays_usable() {
+        // With 1 worker, a dead worker thread would strand every later job.
+        let pool = ThreadPool::new(1);
+        pool.execute(|| panic!("boom once"));
+        pool.wait_idle();
+        let tasks: Vec<fn() -> i32> = vec![|| 1, || 2, || 3];
+        assert_eq!(pool.scope_execute(tasks), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn concurrent_scopes_complete_independently() {
+        // Each scope waits on its own completion count, not pool-wide
+        // idleness, so scopes sharing one pool all finish with correct,
+        // separately-ordered results.
+        let pool = ThreadPool::new(4);
+        std::thread::scope(|s| {
+            for t in 0..3i32 {
+                let pool = &pool;
+                s.spawn(move || {
+                    for _ in 0..5 {
+                        let tasks: Vec<_> = (0..8).map(|i| move || i * 10 + t).collect();
+                        let out = pool.scope_execute(tasks);
+                        assert_eq!(out, (0..8).map(|i| i * 10 + t).collect::<Vec<_>>());
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn scope_execute_after_sibling_panic_completes() {
+        // A panicking task must not prevent its siblings from finishing
+        // nor deadlock the barrier; the panic is re-raised afterwards.
+        let pool = ThreadPool::new(3);
+        let done = Arc::new(AtomicU64::new(0));
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..6)
+            .map(|i| {
+                let done = Arc::clone(&done);
+                Box::new(move || {
+                    if i == 2 {
+                        panic!("sibling panic");
+                    }
+                    done.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope_execute(tasks);
+        }));
+        assert!(caught.is_err(), "panic propagates to the caller");
+        assert_eq!(done.load(Ordering::SeqCst), 5, "siblings all ran");
+        pool.wait_idle(); // pool healthy afterwards
     }
 }

@@ -1,0 +1,192 @@
+//! Property tests for the batch query planner and the concurrent
+//! multi-query execution path:
+//!
+//! 1. Coverage: the merged plan covers *exactly* the union of the input
+//!    ranges (oracle: a brute-force coverage bitmap over a bounded key
+//!    domain).
+//! 2. Plan invariants: sorted, disjoint, non-adjacent ranges; the sources
+//!    lists partition the input indices.
+//! 3. Execution: batch stats equal per-query single-path stats for random
+//!    overlapping workloads.
+//! 4. Cost: N overlapping queries touch each intersecting partition
+//!    exactly once per batch (engine counters), never once per query.
+
+use oseba::config::{AppConfig, ContextConfig};
+use oseba::coordinator::{plan_batch, Coordinator, IndexKind};
+use oseba::datagen::ClimateGen;
+use oseba::index::{ContentIndex, RangeQuery};
+use oseba::runtime::NativeBackend;
+use oseba::testing::{gen, Runner};
+use oseba::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+const DOMAIN: i64 = 2_000;
+
+fn random_query_set(rng: &mut Xoshiro256) -> Vec<RangeQuery> {
+    let n = gen::usize_in(rng, 0, 12);
+    (0..n)
+        .map(|_| {
+            let (lo, hi) = gen::range_pair(rng, 0, DOMAIN - 1);
+            RangeQuery { lo, hi }
+        })
+        .collect()
+}
+
+/// Brute-force coverage oracle over the bounded domain.
+fn coverage(queries: &[RangeQuery]) -> Vec<bool> {
+    let mut cov = vec![false; DOMAIN as usize];
+    for q in queries {
+        for k in q.lo..=q.hi.min(DOMAIN - 1) {
+            cov[k as usize] = true;
+        }
+    }
+    cov
+}
+
+#[test]
+fn prop_plan_covers_exactly_the_union() {
+    Runner::default().run(
+        "plan coverage == union of inputs",
+        random_query_set,
+        |queries| {
+            let plan = plan_batch(queries);
+            let want = coverage(queries);
+            let got = coverage(&plan.iter().map(|p| p.range).collect::<Vec<_>>());
+            want == got
+        },
+    );
+}
+
+#[test]
+fn prop_plan_invariants_hold() {
+    Runner::default().run(
+        "plan sorted/disjoint/non-adjacent; sources partition inputs",
+        random_query_set,
+        |queries| {
+            let plan = plan_batch(queries);
+            let disjoint = plan
+                .windows(2)
+                .all(|w| (w[0].range.hi as i128) + 1 < w[1].range.lo as i128);
+            let mut seen: Vec<usize> = plan.iter().flat_map(|p| p.sources.clone()).collect();
+            seen.sort_unstable();
+            let complete = seen == (0..queries.len()).collect::<Vec<_>>();
+            // Every source lies inside its merged range.
+            let contained = plan.iter().all(|p| {
+                p.sources
+                    .iter()
+                    .all(|&i| p.range.lo <= queries[i].lo && queries[i].hi <= p.range.hi)
+            });
+            disjoint && complete && contained
+        },
+    );
+}
+
+#[test]
+fn prop_segments_partition_each_merged_range() {
+    Runner::default().run(
+        "elementary segments tile each merged range",
+        random_query_set,
+        |queries| {
+            plan_batch(queries).iter().all(|pq| {
+                let segs = pq.segments(queries);
+                if segs.is_empty() {
+                    return false;
+                }
+                let tiles = segs.first().unwrap().0.lo == pq.range.lo
+                    && segs.last().unwrap().0.hi == pq.range.hi
+                    && segs.windows(2).all(|w| w[0].0.hi + 1 == w[1].0.lo);
+                // Each covering set is non-empty and sources-only.
+                let covers = segs
+                    .iter()
+                    .all(|(_, c)| !c.is_empty() && c.iter().all(|i| pq.sources.contains(i)));
+                tiles && covers
+            })
+        },
+    );
+}
+
+fn coordinator() -> Coordinator {
+    let cfg = AppConfig {
+        ctx: ContextConfig { num_workers: 4, memory_budget: None },
+        cluster_workers: 3,
+        ..Default::default()
+    };
+    Coordinator::new(&cfg, Arc::new(NativeBackend)).unwrap()
+}
+
+#[test]
+fn prop_batch_stats_equal_single_query_stats() {
+    let coord = coordinator();
+    let rows = 20_000usize;
+    let ds = coord.load(ClimateGen::default().generate(rows), 10).unwrap();
+    let index = coord.build_index(&ds, IndexKind::Cias).unwrap();
+    Runner::new(16, 0xBA7C4).run(
+        "batch demux == per-query single path",
+        |rng| {
+            let n = gen::usize_in(rng, 1, 8);
+            (0..n)
+                .map(|_| {
+                    let (lo_h, hi_h) = gen::range_pair(rng, 0, rows as i64 - 1);
+                    RangeQuery { lo: lo_h * 3600, hi: hi_h * 3600 }
+                })
+                .collect::<Vec<_>>()
+        },
+        |queries| {
+            let batch = coord.analyze_batch(&ds, index.as_ref(), queries, 0).unwrap();
+            queries.iter().zip(&batch).all(|(q, got)| {
+                let want = coord.analyze_period_oseba(&ds, index.as_ref(), *q, 0).unwrap();
+                got.count == want.count
+                    && got.max == want.max
+                    && got.min == want.min
+                    && (got.mean - want.mean).abs() < 1e-6
+                    && (got.std - want.std).abs() < 1e-6
+            })
+        },
+    );
+}
+
+#[test]
+fn overlapping_queries_touch_each_partition_once_per_batch() {
+    let coord = coordinator();
+    let ds = coord.load(ClimateGen::default().generate(30_000), 15).unwrap();
+    let index = coord.build_index(&ds, IndexKind::Cias).unwrap();
+    let h = 3600i64;
+
+    // Eight heavily-overlapping queries over hours [0, 9500]: every one of
+    // them intersects the leading partitions.
+    let queries: Vec<RangeQuery> = (0..8)
+        .map(|i| RangeQuery { lo: i as i64 * 500 * h, hi: (6_000 + i as i64 * 500) * h })
+        .collect();
+    let union = RangeQuery { lo: 0, hi: 9_500 * h };
+    let union_parts = index.lookup(union).len();
+    assert!(union_parts >= 5, "the union spans several partitions");
+
+    let before = coord.context().counters();
+    let (stats, report) = coord
+        .analyze_batch_with_report(&ds, index.as_ref(), &queries, 0)
+        .unwrap();
+    let after = coord.context().counters();
+
+    // The acceptance check: each intersecting partition is targeted once
+    // for the whole batch, not once per query.
+    assert_eq!(
+        after.partitions_targeted - before.partitions_targeted,
+        union_parts,
+        "one touch per partition per batch"
+    );
+    let naive: usize = queries.iter().map(|q| index.lookup(*q).len()).sum();
+    assert!(
+        naive > 3 * union_parts,
+        "naive execution would touch far more ({naive} vs {union_parts})"
+    );
+    assert_eq!(after.partitions_scanned, before.partitions_scanned, "no scans");
+    assert_eq!(report.merged_ranges, 1);
+    assert_eq!(stats.len(), queries.len());
+
+    // And the merged execution still answers every query correctly.
+    for (i, q) in queries.iter().enumerate() {
+        let want = coord.analyze_period_oseba(&ds, index.as_ref(), *q, 0).unwrap();
+        assert_eq!(stats[i].count, want.count, "query {i}");
+        assert_eq!(stats[i].max, want.max, "query {i}");
+    }
+}
