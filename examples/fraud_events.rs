@@ -64,12 +64,13 @@ fn main() -> oseba::Result<()> {
     let baseline_q = range(0, 5 * day_rows);
     let suspect_q = range(fraud.0, fraud.1);
 
-    let vb = coord.context().select_slices(&ds, &index.lookup(baseline_q), baseline_q);
-    let vs = coord.context().select_slices(&ds, &index.lookup(suspect_q), suspect_q);
+    let vb_pins = coord.context().select_slices(&ds, &index.lookup(baseline_q), baseline_q)?;
+    let vs_pins = coord.context().select_slices(&ds, &index.lookup(suspect_q), suspect_q)?;
+    let (vb, vs) = (vb_pins.views(), vs_pins.views());
 
     println!("baseline: {} calls | suspect window: {} calls",
-        vb.iter().map(|v| v.rows()).sum::<usize>(),
-        vs.iter().map(|v| v.rows()).sum::<usize>());
+        vb_pins.rows(),
+        vs_pins.rows());
 
     let hb_dur = an.histogram(&vb, dur, 0.0, 3600.0)?;
     let hs_dur = an.histogram(&vs, dur, 0.0, 3600.0)?;
@@ -95,7 +96,8 @@ fn main() -> oseba::Result<()> {
 
     // Control: a clean day must NOT be flagged.
     let control_q = range(2 * day_rows, 3 * day_rows);
-    let vc = coord.context().select_slices(&ds, &index.lookup(control_q), control_q);
+    let vc_pins = coord.context().select_slices(&ds, &index.lookup(control_q), control_q)?;
+    let vc = vc_pins.views();
     let hc = an.histogram(&vc, dur, 0.0, 3600.0)?;
     let d_ctl = tv_distance(&hb_dur, &hc);
     println!("control day TV distance: {d_ctl:.3} (flagged: {})", d_ctl > 0.2);

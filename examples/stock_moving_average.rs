@@ -43,9 +43,13 @@ fn main() -> oseba::Result<()> {
     // --- moving averages over one selected month -------------------------
     let month_mins = 30 * 24 * 60;
     let q = RangeQuery::new(3 * month_mins * 60, (4 * month_mins - 1) * 60)?;
-    let views = coord.context().select_slices(&ds, &index.lookup(q), q);
-    let n: usize = views.iter().map(|v| v.rows()).sum();
-    println!("\nselected month: {} bars across {} partition slices", n, views.len());
+    let pins = coord.context().select_slices(&ds, &index.lookup(q), q)?;
+    let views = pins.views();
+    println!(
+        "\nselected month: {} bars across {} partition slices",
+        pins.rows(),
+        views.len()
+    );
 
     for &w in &[4usize, 16, 64] {
         let t = std::time::Instant::now();
@@ -67,7 +71,8 @@ fn main() -> oseba::Result<()> {
 
     // --- distance comparison between two months --------------------------
     let q2 = RangeQuery::new(15 * month_mins * 60, (16 * month_mins - 1) * 60)?;
-    let views2 = coord.context().select_slices(&ds, &index.lookup(q2), q2);
+    let pins2 = coord.context().select_slices(&ds, &index.lookup(q2), q2)?;
+    let views2 = pins2.views();
     let d = an.distance(&views, &views2, price)?;
     println!(
         "\nmonth 3 vs month 15: n={} L1={:.1} L2={:.2} L∞={:.3} MAD={:.4}",

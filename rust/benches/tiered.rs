@@ -1,0 +1,165 @@
+//! **Tiered-store bench**: a selective workload over a dataset ~4× the
+//! memory budget. The point of the tier: the index decides which segments
+//! are faulted in, so a selective analysis reads a small fraction of the
+//! dataset from disk, while the scan-everything baseline pays a full
+//! reload — and a `save`/`open` round trip restores the super index from
+//! the manifest snapshot without rescanning any data.
+//!
+//! Run: `cargo bench --bench tiered`
+//! (OSEBA_TIERED_BUDGET rescales; dataset is 4× the budget.)
+
+mod common;
+
+use std::sync::Arc;
+
+use oseba::bench::{bench, section, table, BenchConfig};
+use oseba::config::{parse_bytes, BackendKind, ContextConfig};
+use oseba::coordinator::{Coordinator, IndexKind};
+use oseba::datagen::ClimateGen;
+use oseba::index::RangeQuery;
+use oseba::runtime::make_backend;
+use oseba::util::humansize;
+
+const PARTITIONS: usize = 32;
+
+fn coordinator(budget: Option<usize>) -> Coordinator {
+    let mut cfg = common::app_cfg(BackendKind::Native);
+    cfg.ctx = ContextConfig { num_workers: 4, memory_budget: budget };
+    let be = make_backend(cfg.backend, &cfg.artifacts_dir).expect("backend");
+    Coordinator::new(&cfg, be).expect("coordinator")
+}
+
+fn main() {
+    let budget = std::env::var("OSEBA_TIERED_BUDGET")
+        .ok()
+        .map(|v| parse_bytes(&v).expect("OSEBA_TIERED_BUDGET"))
+        .unwrap_or(8 << 20);
+    let raw = 4 * budget;
+    let dir = std::env::temp_dir().join(format!("oseba-tiered-bench-{}", std::process::id()));
+
+    section(&format!(
+        "Tiered store: {} dataset under a {} budget ({} partitions)",
+        humansize::bytes(raw),
+        humansize::bytes(budget),
+        PARTITIONS
+    ));
+
+    let coord = coordinator(Some(budget));
+    let batch = ClimateGen::default().generate_bytes(raw);
+    let ds = coord.load_tiered(batch, PARTITIONS, &dir).expect("tiered load");
+    let store = Arc::clone(ds.store().expect("tiered"));
+    let index = coord.build_index(&ds, IndexKind::Cias).expect("index");
+    let total = store.total_bytes();
+    assert!(
+        store.resident_bytes() <= budget,
+        "residency within budget after load"
+    );
+    println!(
+        "loaded: {} total, {} resident, {} spills during ingest",
+        humansize::bytes(total),
+        humansize::bytes(store.resident_bytes()),
+        store.counters().evictions
+    );
+
+    // Six disjoint narrow queries spread across the key span (each
+    // ~1/256 of the span, well inside one partition) — the selective
+    // interactive workload.
+    let (kmin, kmax) = (ds.key_min().unwrap(), ds.key_max().unwrap());
+    let span = kmax - kmin;
+    let width = (span / 256).max(1);
+    let queries: Vec<RangeQuery> = (0..6)
+        .map(|i| {
+            let lo = kmin + span * (2 * i) as i64 / 16;
+            RangeQuery { lo, hi: (lo + width).min(kmax) }
+        })
+        .collect();
+
+    let cfg = BenchConfig { warmup_iters: 1, iters: 5 };
+    let mut results = Vec::new();
+
+    let before_sel = store.counters();
+    results.push(bench(&cfg, "selective batch (indexed fault-in)", || {
+        coord
+            .analyze_batch(&ds, index.as_ref(), &queries, 0)
+            .expect("selective batch");
+    }));
+    let sel = store.counters().since(&before_sel);
+    let sel_iters = cfg.warmup_iters + cfg.iters;
+    let sel_read_per_iter = sel.segment_bytes_read / sel_iters;
+
+    let before_full = store.counters();
+    results.push(bench(&cfg, "full reload (scan-everything baseline)", || {
+        // The baseline touches every partition: fault the whole dataset.
+        let handles = coord.context().partition_handles(&ds).expect("full reload");
+        assert_eq!(handles.len(), PARTITIONS);
+    }));
+    let full = store.counters().since(&before_full);
+    let full_read_per_iter = full.segment_bytes_read / sel_iters;
+
+    println!("{}", table(&results));
+    println!(
+        "bytes read per run: selective {} vs full reload {} (dataset {})",
+        humansize::bytes(sel_read_per_iter),
+        humansize::bytes(full_read_per_iter),
+        humansize::bytes(total)
+    );
+    println!(
+        "selective fraction: {:.1}% of dataset, {} faults / {} evictions per run",
+        100.0 * sel_read_per_iter as f64 / total as f64,
+        sel.faults / sel_iters,
+        sel.evictions / sel_iters
+    );
+
+    // The reproduction contract: selectivity must show up as I/O savings.
+    assert!(
+        sel_read_per_iter < total / 3,
+        "selective reads ({sel_read_per_iter}) must be ≪ dataset ({total})"
+    );
+    assert!(
+        sel_read_per_iter < full_read_per_iter / 2,
+        "selective ({sel_read_per_iter}) must beat full reload ({full_read_per_iter})"
+    );
+
+    // --- save / open round trip -----------------------------------------
+    section("save / open round trip");
+    let want = coord
+        .analyze_batch(&ds, index.as_ref(), &queries, 0)
+        .expect("reference stats");
+    let t = std::time::Instant::now();
+    store.save().expect("save");
+    let save_secs = t.elapsed().as_secs_f64();
+
+    let coord2 = coordinator(Some(budget));
+    let t = std::time::Instant::now();
+    let (ds2, index2) = coord2.open_store(&dir).expect("open");
+    let open_secs = t.elapsed().as_secs_f64();
+    let store2 = Arc::clone(ds2.store().expect("tiered"));
+    assert_eq!(
+        store2.counters().segment_bytes_read,
+        0,
+        "open must not read segment data"
+    );
+    assert_eq!(ds2.total_rows(), ds.total_rows());
+
+    let got = coord2
+        .analyze_batch(&ds2, index2.as_ref(), &queries, 0)
+        .expect("post-open batch");
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.count, w.count);
+        assert_eq!(g.max, w.max);
+        assert!((g.mean - w.mean).abs() < 1e-9);
+    }
+    println!(
+        "save {} | open {} (index restored from snapshot, 0 bytes of data read)",
+        humansize::secs(save_secs),
+        humansize::secs(open_secs)
+    );
+    println!(
+        "post-open selective batch read {} of {}",
+        humansize::bytes(store2.counters().segment_bytes_read),
+        humansize::bytes(total)
+    );
+    println!("\nshape check: selective ≪ full ✓, save/open round trip exact ✓");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

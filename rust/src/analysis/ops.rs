@@ -337,8 +337,8 @@ mod tests {
         let (ctx, ds, an) = setup(20_000, 7);
         let index = Cias::build(ds.partitions()).unwrap();
         let q = RangeQuery { lo: 2_000 * 3600, hi: 11_000 * 3600 };
-        let views = ctx.select_slices(&ds, &index.lookup(q), q);
-        let got = an.period_stats(&views, 0).unwrap();
+        let pins = ctx.select_slices(&ds, &index.lookup(q), q).unwrap();
+        let got = an.period_stats(&pins.views(), 0).unwrap();
 
         // Ground truth from the raw generator output.
         let batch = ClimateGen::default().generate(20_000);
@@ -357,8 +357,8 @@ mod tests {
         let full = an.period_stats(&Analyzer::full_views(&ds), 1).unwrap();
         let index = Cias::build(ds.partitions()).unwrap();
         let q = RangeQuery { lo: i64::MIN + 1, hi: i64::MAX };
-        let views = ctx.select_slices(&ds, &index.lookup(q), q);
-        let via_index = an.period_stats(&views, 1).unwrap();
+        let pins = ctx.select_slices(&ds, &index.lookup(q), q).unwrap();
+        let via_index = an.period_stats(&pins.views(), 1).unwrap();
         assert_eq!(full.count, via_index.count);
         assert_eq!(full.max, via_index.max);
         assert!((full.mean - via_index.mean).abs() < 1e-6);
@@ -400,8 +400,9 @@ mod tests {
         let index = Cias::build(ds.partitions()).unwrap();
         let q1 = RangeQuery { lo: 0, hi: 999 * 3600 };
         let q2 = RangeQuery { lo: 4000 * 3600, hi: 4999 * 3600 };
-        let v1 = ctx.select_slices(&ds, &index.lookup(q1), q1);
-        let v2 = ctx.select_slices(&ds, &index.lookup(q2), q2);
+        let p1 = ctx.select_slices(&ds, &index.lookup(q1), q1).unwrap();
+        let p2 = ctx.select_slices(&ds, &index.lookup(q2), q2).unwrap();
+        let (v1, v2) = (p1.views(), p2.views());
 
         let self_d = an.distance(&v1, &v1, 0).unwrap();
         assert_eq!(self_d.l1, 0.0);

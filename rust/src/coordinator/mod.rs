@@ -70,8 +70,42 @@ impl Coordinator {
         Ok(ds)
     }
 
-    /// Build the configured index over a dataset.
+    /// Load a batch as a **tiered** dataset rooted at `dir`: partitions
+    /// spill to `.oseg` segments under memory pressure instead of failing
+    /// the load, so datasets larger than the budget are admissible.
+    pub fn load_tiered(
+        &self,
+        batch: RecordBatch,
+        num_partitions: usize,
+        dir: impl AsRef<std::path::Path>,
+    ) -> Result<Dataset> {
+        let ds = self.ctx.load_tiered(batch, num_partitions, dir)?;
+        self.cluster.ensure_partitions(ds.num_partitions());
+        Ok(ds)
+    }
+
+    /// Open a saved store directory as a tiered dataset, restoring the
+    /// super index from its manifest snapshot (no segment data is read).
+    pub fn open_store(
+        &self,
+        dir: impl AsRef<std::path::Path>,
+    ) -> Result<(Dataset, Box<dyn ContentIndex>)> {
+        let (ds, index) = self.ctx.open_tiered(dir)?;
+        self.cluster.ensure_partitions(ds.num_partitions());
+        Ok((ds, Box::new(index)))
+    }
+
+    /// Build the configured index over a dataset. For a tiered dataset the
+    /// index is built from the store's metadata — no partition is faulted
+    /// in.
     pub fn build_index(&self, ds: &Dataset, kind: IndexKind) -> Result<Box<dyn ContentIndex>> {
+        if let Some(store) = ds.store() {
+            let metas = store.metas();
+            return Ok(match kind {
+                IndexKind::Table => Box::new(TableIndex::from_meta(metas)?),
+                IndexKind::Cias => Box::new(Cias::from_meta(metas)?),
+            });
+        }
         Ok(match kind {
             IndexKind::Table => Box::new(TableIndex::build(ds.partitions())?),
             IndexKind::Cias => Box::new(Cias::build(ds.partitions())?),
@@ -128,7 +162,7 @@ impl Coordinator {
                 q.lo, q.hi
             )));
         }
-        let owned = self.ctx.resolve_slices(ds, &slices, q);
+        let owned = self.ctx.resolve_slices(ds, &slices, q)?;
         self.run_stats_tasks(owned, column)
     }
 
@@ -167,6 +201,8 @@ impl Coordinator {
         column: usize,
     ) -> Result<(Vec<PeriodStats>, BatchReport)> {
         let timer = Timer::start();
+        let store_before =
+            ds.store().map(|s| s.counters()).unwrap_or_default();
         for (i, q) in queries.iter().enumerate() {
             if q.lo > q.hi {
                 return Err(OsebaError::InvalidRange(format!(
@@ -193,7 +229,7 @@ impl Coordinator {
             // range cost one `partitions_targeted` count per partition,
             // not N.
             partitions_touched += slices.len();
-            let owned = self.ctx.resolve_slices(ds, &slices, pq.range);
+            let owned = self.ctx.resolve_slices(ds, &slices, pq.range)?;
             let seg_base = segments.len();
             for (seg, srcs) in pq.segments(queries) {
                 segments.push(seg);
@@ -263,12 +299,19 @@ impl Coordinator {
             })
             .collect::<Result<Vec<_>>>()?;
 
+        let store_delta = ds
+            .store()
+            .map(|s| s.counters().since(&store_before))
+            .unwrap_or_default();
         let report = BatchReport {
             queries: queries.len(),
             merged_ranges: plan.len(),
             segments: segments.len(),
             partitions_touched,
             tasks: n_tasks,
+            faults: store_delta.faults,
+            evictions: store_delta.evictions,
+            segment_bytes_read: store_delta.segment_bytes_read,
             secs: timer.secs(),
         };
         Ok((stats, report))
@@ -543,6 +586,45 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn tiered_analysis_matches_resident_and_counts_faults() {
+        let dir = crate::testing::temp_dir("coord-tiered");
+        // Resident reference run.
+        let c = coord(3);
+        let ds = c.load(ClimateGen::default().generate(30_000), 15).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        let qs = vec![q_hours(0, 3_000), q_hours(2_000, 5_000)];
+        let want = c.analyze_batch(&ds, index.as_ref(), &qs, 0).unwrap();
+
+        // Same workload, tiered, with a budget of ~3 of 15 partitions.
+        let batch = ClimateGen::default().generate(30_000);
+        let one = crate::storage::partition_batch_uniform(&batch, 2_000).unwrap()[0].bytes();
+        let cfg = AppConfig {
+            ctx: ContextConfig { num_workers: 4, memory_budget: Some(3 * one + one / 2) },
+            cluster_workers: 3,
+            ..Default::default()
+        };
+        let ct = Coordinator::new(&cfg, Arc::new(NativeBackend)).unwrap();
+        let tds = ct.load_tiered(batch, 15, &dir).unwrap();
+        assert!(tds.is_tiered());
+        let tindex = ct.build_index(&tds, IndexKind::Cias).unwrap();
+        let (got, report) =
+            ct.analyze_batch_with_report(&tds, tindex.as_ref(), &qs, 0).unwrap();
+        for (g, e) in got.iter().zip(&want) {
+            assert_stats_close(g, e, "tiered batch");
+        }
+        assert!(report.faults > 0, "cold partitions must fault in");
+        assert!(report.segment_bytes_read > 0);
+
+        // Single-query Oseba path works tiered too.
+        let single = ct
+            .analyze_period_oseba(&tds, tindex.as_ref(), q_hours(0, 3_000), 0)
+            .unwrap();
+        assert_stats_close(&single, &want[0], "tiered single");
+        ct.context().unpersist(&tds);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -1,9 +1,17 @@
-//! The block manager: registry of cached (memory-resident) datasets.
+//! The block manager: registry of cached (memory-resident) datasets and
+//! tiered (spillable) dataset stores.
 //!
 //! Mirrors Spark's BlockManager at the granularity this reproduction
 //! needs: datasets cache their partitions here, bytes are charged to the
 //! [`MemoryTracker`], and `unpersist` releases them. The Fig 4 "default
 //! method" curve is exactly this registry filling up with filter-RDDs.
+//!
+//! Tiered datasets register their [`TieredStore`] instead of partitions.
+//! They share the tracker, so when a resident cache allocation would
+//! exceed the budget the manager first asks the registered stores to
+//! spill cold-able partitions to disk ([`TieredStore::shrink`]) — memory
+//! pressure evicts to segments instead of erroring, and only truly
+//! unreclaimable pressure still surfaces `OutOfMemory`.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -11,6 +19,7 @@ use std::sync::{Arc, Mutex};
 use crate::engine::memory::MemoryTracker;
 use crate::error::{OsebaError, Result};
 use crate::storage::Partition;
+use crate::store::TieredStore;
 
 /// Identifier of a cached dataset.
 pub type DatasetId = u64;
@@ -26,55 +35,115 @@ struct CacheEntry {
 pub struct BlockManager {
     tracker: Arc<MemoryTracker>,
     cache: Mutex<HashMap<DatasetId, CacheEntry>>,
+    /// Tiered datasets by id — the spill targets under memory pressure.
+    stores: Mutex<HashMap<DatasetId, Arc<TieredStore>>>,
 }
 
 impl BlockManager {
     pub fn new(tracker: Arc<MemoryTracker>) -> BlockManager {
-        BlockManager { tracker, cache: Mutex::new(HashMap::new()) }
+        BlockManager {
+            tracker,
+            cache: Mutex::new(HashMap::new()),
+            stores: Mutex::new(HashMap::new()),
+        }
     }
 
-    /// Cache a dataset's partitions, charging their bytes.
+    /// Cache a dataset's partitions, charging their bytes. Under budget
+    /// pressure, registered tiered stores are asked to spill before the
+    /// allocation is declared impossible.
     pub fn cache(&self, id: DatasetId, parts: Vec<Arc<Partition>>) -> Result<()> {
         let bytes: usize = parts.iter().map(|p| p.bytes()).sum();
         let mut cache = self.cache.lock().unwrap();
-        if cache.contains_key(&id) {
+        if cache.contains_key(&id) || self.stores.lock().unwrap().contains_key(&id) {
             return Err(OsebaError::Schema(format!("dataset {id} already cached")));
         }
-        self.tracker.allocate(bytes)?;
+        match self.tracker.allocate(bytes) {
+            Ok(()) => {}
+            Err(e @ OsebaError::OutOfMemory { .. }) => {
+                let shortfall =
+                    bytes.saturating_sub(self.tracker.headroom().unwrap_or(0));
+                self.reclaim(shortfall)?;
+                // Retry once; still-unreclaimable pressure keeps the
+                // original error semantics.
+                if self.tracker.allocate(bytes).is_err() {
+                    return Err(e);
+                }
+            }
+            Err(e) => return Err(e),
+        }
         cache.insert(id, CacheEntry { parts, bytes });
         Ok(())
     }
 
-    /// Fetch a cached dataset's partitions.
+    /// Register a tiered dataset's store (no bytes charged here — the
+    /// store charges the shared tracker as partitions go Hot).
+    pub fn register_store(&self, id: DatasetId, store: Arc<TieredStore>) -> Result<()> {
+        // Lock order everywhere is cache → stores (see `cache`/`reclaim`).
+        let cache = self.cache.lock().unwrap();
+        let mut stores = self.stores.lock().unwrap();
+        if stores.contains_key(&id) || cache.contains_key(&id) {
+            return Err(OsebaError::Schema(format!("dataset {id} already cached")));
+        }
+        stores.insert(id, store);
+        Ok(())
+    }
+
+    /// Ask registered stores to spill until `needed` bytes are freed (or
+    /// nothing spillable remains).
+    fn reclaim(&self, needed: usize) -> Result<usize> {
+        let stores: Vec<Arc<TieredStore>> =
+            self.stores.lock().unwrap().values().cloned().collect();
+        let mut freed = 0usize;
+        for store in stores {
+            if freed >= needed {
+                break;
+            }
+            freed += store.shrink(needed - freed)?;
+        }
+        Ok(freed)
+    }
+
+    /// Fetch a cached dataset's partitions (resident datasets only).
     pub fn get(&self, id: DatasetId) -> Option<Vec<Arc<Partition>>> {
         self.cache.lock().unwrap().get(&id).map(|e| e.parts.clone())
     }
 
+    /// The tiered store backing dataset `id`, if registered.
+    pub fn get_store(&self, id: DatasetId) -> Option<Arc<TieredStore>> {
+        self.stores.lock().unwrap().get(&id).cloned()
+    }
+
     /// Evict a dataset, crediting its bytes. Returns whether it was cached.
+    /// For a tiered dataset this drops the Hot partitions (segments on
+    /// disk are untouched).
     pub fn unpersist(&self, id: DatasetId) -> bool {
         let entry = self.cache.lock().unwrap().remove(&id);
-        match entry {
-            Some(e) => {
-                self.tracker.release(e.bytes);
+        if let Some(e) = entry {
+            self.tracker.release(e.bytes);
+            return true;
+        }
+        match self.stores.lock().unwrap().remove(&id) {
+            Some(store) => {
+                store.release_resident();
                 true
             }
             None => false,
         }
     }
 
-    /// Total bytes currently cached.
+    /// Total bytes currently charged (resident caches + Hot store bytes).
     pub fn used_bytes(&self) -> usize {
         self.tracker.used()
     }
 
-    /// High-water mark of cached bytes.
+    /// High-water mark of charged bytes.
     pub fn peak_bytes(&self) -> usize {
         self.tracker.peak()
     }
 
-    /// Number of cached datasets.
+    /// Number of registered datasets (resident + tiered).
     pub fn num_cached(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.lock().unwrap().len() + self.stores.lock().unwrap().len()
     }
 
     /// The shared tracker (for coordinator metrics).
@@ -87,6 +156,7 @@ impl BlockManager {
 mod tests {
     use super::*;
     use crate::storage::{BatchBuilder, Schema};
+    use crate::testing::temp_dir;
 
     fn one_part(rows: usize) -> Vec<Arc<Partition>> {
         let mut b = BatchBuilder::new(Schema::stock());
@@ -133,5 +203,50 @@ mod tests {
         assert!(bm.cache(1, one_part(100)).is_err());
         assert_eq!(bm.num_cached(), 0);
         assert_eq!(bm.used_bytes(), 0);
+    }
+
+    #[test]
+    fn pressure_spills_registered_store_before_failing() {
+        let dir = temp_dir("bm-pressure");
+        let parts = one_part(100);
+        let bytes: usize = parts.iter().map(|p| p.bytes()).sum();
+        // Budget fits the store's partition OR the cache entry, not both.
+        let tracker = MemoryTracker::with_budget(bytes + bytes / 2);
+        let bm = BlockManager::new(Arc::clone(&tracker));
+        let store = Arc::new(
+            TieredStore::create(&dir, Schema::stock(), Arc::clone(&tracker)).unwrap(),
+        );
+        store.insert(Arc::clone(&parts[0])).unwrap();
+        bm.register_store(9, Arc::clone(&store)).unwrap();
+        assert_eq!(bm.used_bytes(), bytes);
+        assert_eq!(bm.num_cached(), 1);
+
+        // Without the store this would be OutOfMemory; with it, the store
+        // spills its partition to disk and the cache fits.
+        bm.cache(1, one_part(100)).unwrap();
+        assert_eq!(store.counters().evictions, 1);
+        assert_eq!(
+            store.residency(0),
+            Some(crate::store::Residency::Cold)
+        );
+        assert_eq!(bm.used_bytes(), bytes);
+
+        // Unpersisting the tiered dataset releases nothing extra (already
+        // cold) but removes the registration.
+        assert!(bm.unpersist(9));
+        assert!(!bm.unpersist(9));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn duplicate_store_registration_rejected() {
+        let dir = temp_dir("bm-dup");
+        let tracker = MemoryTracker::unbounded();
+        let bm = BlockManager::new(Arc::clone(&tracker));
+        let store =
+            Arc::new(TieredStore::create(&dir, Schema::stock(), tracker).unwrap());
+        bm.register_store(2, Arc::clone(&store)).unwrap();
+        assert!(bm.register_store(2, store).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

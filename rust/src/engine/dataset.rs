@@ -12,6 +12,7 @@ use std::sync::Arc;
 use crate::engine::block_manager::DatasetId;
 use crate::index::types::PartitionSlice;
 use crate::storage::{Partition, Schema};
+use crate::store::TieredStore;
 
 /// How a dataset came to exist — the lineage record (paper Fig 2's
 /// dataflow; inspectable via `OsebaContext::lineage`).
@@ -34,6 +35,10 @@ pub struct Dataset {
     pub(crate) schema: Schema,
     pub(crate) parts: Vec<Arc<Partition>>,
     pub(crate) lineage: Lineage,
+    /// Tiered residency backing, when the dataset lives in a
+    /// [`TieredStore`] instead of being fully memory-resident. `parts` is
+    /// empty then; access goes through the store (fault-in on demand).
+    pub(crate) store: Option<Arc<TieredStore>>,
 }
 
 impl Dataset {
@@ -46,22 +51,47 @@ impl Dataset {
         &self.schema
     }
 
+    /// The memory-resident partitions. Empty for a tiered dataset — use
+    /// [`crate::engine::OsebaContext::resolve_slices`] /
+    /// [`crate::engine::OsebaContext::partition_handles`], which fault
+    /// partitions in as needed.
     pub fn partitions(&self) -> &[Arc<Partition>] {
         &self.parts
     }
 
+    /// The tiered backing store, if any.
+    pub fn store(&self) -> Option<&Arc<TieredStore>> {
+        self.store.as_ref()
+    }
+
+    /// Whether this dataset is backed by a tiered store.
+    pub fn is_tiered(&self) -> bool {
+        self.store.is_some()
+    }
+
     pub fn num_partitions(&self) -> usize {
-        self.parts.len()
+        match &self.store {
+            Some(st) => st.num_partitions(),
+            None => self.parts.len(),
+        }
     }
 
     /// Total valid rows across partitions.
     pub fn total_rows(&self) -> usize {
-        self.parts.iter().map(|p| p.rows).sum()
+        match &self.store {
+            Some(st) => st.total_rows(),
+            None => self.parts.iter().map(|p| p.rows).sum(),
+        }
     }
 
-    /// Cached byte footprint (keys + padded columns).
+    /// Byte footprint (keys + padded columns) of the full dataset —
+    /// resident bytes for an in-memory dataset, total (Hot + Cold) for a
+    /// tiered one.
     pub fn bytes(&self) -> usize {
-        self.parts.iter().map(|p| p.bytes()).sum()
+        match &self.store {
+            Some(st) => st.total_bytes(),
+            None => self.parts.iter().map(|p| p.bytes()).sum(),
+        }
     }
 
     pub fn lineage(&self) -> &Lineage {
@@ -70,18 +100,26 @@ impl Dataset {
 
     /// Smallest key in the dataset.
     pub fn key_min(&self) -> Option<i64> {
-        self.parts.iter().filter_map(|p| p.key_min()).min()
+        match &self.store {
+            Some(st) => st.key_min(),
+            None => self.parts.iter().filter_map(|p| p.key_min()).min(),
+        }
     }
 
     /// Largest key in the dataset.
     pub fn key_max(&self) -> Option<i64> {
-        self.parts.iter().filter_map(|p| p.key_max()).max()
+        match &self.store {
+            Some(st) => st.key_max(),
+            None => self.parts.iter().filter_map(|p| p.key_max()).max(),
+        }
     }
 
     /// Resolve a [`PartitionSlice`] into the backing partition plus the
     /// slice bounds — the zero-copy access path Oseba uses instead of
-    /// materializing a filtered dataset.
+    /// materializing a filtered dataset. Resident datasets only; tiered
+    /// access goes through the context's resolve/select APIs.
     pub fn slice_view(&self, s: &PartitionSlice) -> SliceView<'_> {
+        debug_assert!(self.store.is_none(), "slice_view needs a resident dataset");
         let part = &self.parts[s.partition];
         debug_assert!(s.row_end <= part.rows);
         SliceView { part, row_start: s.row_start, row_end: s.row_end }
@@ -112,6 +150,53 @@ impl<'a> SliceView<'a> {
     }
 }
 
+/// An *owned* targeted region of one partition: the `Arc` pins the
+/// partition in memory for as long as the handle lives, so the selection
+/// stays valid even if the tiered store evicts that partition afterwards.
+#[derive(Clone, Debug)]
+pub struct PinnedSlice {
+    pub part: Arc<Partition>,
+    pub row_start: usize,
+    pub row_end: usize,
+}
+
+impl PinnedSlice {
+    pub fn rows(&self) -> usize {
+        self.row_end - self.row_start
+    }
+
+    /// Borrow this pin as a [`SliceView`] (the analysis operators' input).
+    pub fn view(&self) -> SliceView<'_> {
+        SliceView { part: &self.part, row_start: self.row_start, row_end: self.row_end }
+    }
+}
+
+/// The result of a selective lookup: pinned slices over the targeted
+/// partitions — resident ones borrowed for free, cold ones faulted in by
+/// the store. Dereferences to `[PinnedSlice]`.
+#[derive(Clone, Debug, Default)]
+pub struct PinnedSlices(pub Vec<PinnedSlice>);
+
+impl PinnedSlices {
+    /// Total selected rows across all slices.
+    pub fn rows(&self) -> usize {
+        self.0.iter().map(|p| p.rows()).sum()
+    }
+
+    /// Borrowed views over every pin, in order — pass to the analyzers.
+    pub fn views(&self) -> Vec<SliceView<'_>> {
+        self.0.iter().map(|p| p.view()).collect()
+    }
+}
+
+impl std::ops::Deref for PinnedSlices {
+    type Target = [PinnedSlice];
+
+    fn deref(&self) -> &[PinnedSlice] {
+        &self.0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +213,7 @@ mod tests {
             schema: Schema::stock(),
             parts,
             lineage: Lineage::Source { name: "test".into() },
+            store: None,
         }
     }
 

@@ -70,6 +70,12 @@ impl MemoryTracker {
     pub fn budget(&self) -> Option<usize> {
         self.budget
     }
+
+    /// Bytes still allocatable before the budget is hit (`None` when
+    /// unbounded). Advisory only — [`Self::allocate`] is the authority.
+    pub fn headroom(&self) -> Option<usize> {
+        self.budget.map(|b| b.saturating_sub(self.used()))
+    }
 }
 
 #[cfg(test)]

@@ -9,5 +9,5 @@ pub mod memory;
 
 pub use block_manager::{BlockManager, DatasetId};
 pub use context::{CounterSnapshot, OsebaContext};
-pub use dataset::{Dataset, Lineage, SliceView};
+pub use dataset::{Dataset, Lineage, PinnedSlice, PinnedSlices, SliceView};
 pub use memory::MemoryTracker;

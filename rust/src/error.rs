@@ -9,6 +9,7 @@
 //! has no `thiserror` (see DESIGN.md §4).
 
 use std::fmt;
+use std::path::{Path, PathBuf};
 
 /// Errors produced by the Oseba engine, indexes, runtime and coordinator.
 #[derive(Debug)]
@@ -40,11 +41,24 @@ pub enum OsebaError {
     /// JSON parse errors (manifest, server protocol).
     Json(String),
 
+    /// On-disk store corruption: bad magic/version, CRC mismatch, or a
+    /// manifest that disagrees with its segments. The message names the
+    /// offending file.
+    Store(String),
+
     /// Memory budget exhausted and eviction could not reclaim enough.
     OutOfMemory { requested: usize, budget: usize },
 
-    /// Underlying I/O failure.
-    Io(std::io::Error),
+    /// Underlying I/O failure. `path` names the offending file when known
+    /// (empty for pathless sources such as sockets).
+    Io { path: PathBuf, source: std::io::Error },
+}
+
+impl OsebaError {
+    /// An I/O error naming the file it occurred on.
+    pub fn io(path: impl AsRef<Path>, source: std::io::Error) -> OsebaError {
+        OsebaError::Io { path: path.as_ref().to_path_buf(), source }
+    }
 }
 
 impl fmt::Display for OsebaError {
@@ -59,11 +73,18 @@ impl fmt::Display for OsebaError {
             OsebaError::Cluster(m) => write!(f, "cluster error: {m}"),
             OsebaError::Config(m) => write!(f, "config error: {m}"),
             OsebaError::Json(m) => write!(f, "json error: {m}"),
+            OsebaError::Store(m) => write!(f, "store error: {m}"),
             OsebaError::OutOfMemory { requested, budget } => write!(
                 f,
                 "out of storage memory: requested {requested} bytes, budget {budget}"
             ),
-            OsebaError::Io(e) => write!(f, "io error: {e}"),
+            OsebaError::Io { path, source } => {
+                if path.as_os_str().is_empty() {
+                    write!(f, "io error: {source}")
+                } else {
+                    write!(f, "io error on '{}': {source}", path.display())
+                }
+            }
         }
     }
 }
@@ -71,7 +92,7 @@ impl fmt::Display for OsebaError {
 impl std::error::Error for OsebaError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
-            OsebaError::Io(e) => Some(e),
+            OsebaError::Io { source, .. } => Some(source),
             _ => None,
         }
     }
@@ -79,7 +100,7 @@ impl std::error::Error for OsebaError {
 
 impl From<std::io::Error> for OsebaError {
     fn from(e: std::io::Error) -> Self {
-        OsebaError::Io(e)
+        OsebaError::Io { path: PathBuf::new(), source: e }
     }
 }
 
@@ -109,7 +130,7 @@ mod tests {
     fn io_error_converts() {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: OsebaError = io.into();
-        assert!(matches!(e, OsebaError::Io(_)));
+        assert!(matches!(e, OsebaError::Io { .. }));
     }
 
     #[test]
@@ -118,5 +139,18 @@ mod tests {
         let e: OsebaError = io.into();
         let src = std::error::Error::source(&e).expect("io source");
         assert!(src.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn io_error_names_the_path() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e = OsebaError::io("/data/climate.csv", io);
+        let msg = e.to_string();
+        assert!(msg.contains("/data/climate.csv"), "got: {msg}");
+        assert!(msg.contains("gone"));
+        // Pathless conversions stay terse.
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "sock");
+        let e: OsebaError = io.into();
+        assert!(!e.to_string().contains("''"), "got: {e}");
     }
 }

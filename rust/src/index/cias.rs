@@ -174,6 +174,79 @@ impl Cias {
         Ok(())
     }
 
+    /// Decomposed form for persistence: `(base_key, step, rows_per_part,
+    /// regular_parts, asl)` — exactly the paper's compressed tuple plus the
+    /// associated search list. The store manifest snapshots this so `open`
+    /// restores lookup in O(index) without touching data.
+    pub fn components(&self) -> (i64, i64, usize, usize, &[PartitionMeta]) {
+        (self.base_key, self.step, self.rows_per_part, self.regular_parts, &self.asl)
+    }
+
+    /// Rebuild from persisted components, re-validating the invariants
+    /// [`Cias::from_meta`] establishes (a corrupted or hand-edited manifest
+    /// must not produce an index that double-counts rows).
+    pub fn from_components(
+        base_key: i64,
+        step: i64,
+        rows_per_part: usize,
+        regular_parts: usize,
+        asl: Vec<PartitionMeta>,
+    ) -> Result<Cias> {
+        if regular_parts > 0 && (step <= 0 || rows_per_part == 0) {
+            return Err(OsebaError::Index(format!(
+                "invalid compressed region: step {step}, rows_per_part {rows_per_part}"
+            )));
+        }
+        // Checked arithmetic throughout: components may come from an
+        // untrusted manifest, and an overflow here must be a clean error,
+        // not a panic or a wrapped garbage bound.
+        let regular_max = if regular_parts > 0 {
+            let total = regular_parts
+                .checked_mul(rows_per_part)
+                .filter(|&t| t <= i64::MAX as usize)
+                .ok_or_else(|| {
+                    OsebaError::Index(format!(
+                        "compressed region too large: {regular_parts} x {rows_per_part} rows"
+                    ))
+                })?;
+            let max = step
+                .checked_mul(total as i64 - 1)
+                .and_then(|x| base_key.checked_add(x))
+                .ok_or_else(|| {
+                    OsebaError::Index("compressed region key range overflows i64".into())
+                })?;
+            Some(max)
+        } else {
+            None
+        };
+        let mut prev_max = regular_max;
+        for (i, m) in asl.iter().enumerate() {
+            if m.id != regular_parts + i {
+                return Err(OsebaError::Index(format!(
+                    "asl entry {i} has id {}, expected {}",
+                    m.id,
+                    regular_parts + i
+                )));
+            }
+            if m.key_min > m.key_max {
+                return Err(OsebaError::Index(format!(
+                    "asl entry {i} has inverted range ({} > {})",
+                    m.key_min, m.key_max
+                )));
+            }
+            if let Some(pm) = prev_max {
+                if m.key_min <= pm {
+                    return Err(OsebaError::Index(format!(
+                        "asl entry {i} overlaps ({} <= {pm})",
+                        m.key_min
+                    )));
+                }
+            }
+            prev_max = Some(m.key_max);
+        }
+        Ok(Cias { base_key, step, rows_per_part, regular_parts, asl })
+    }
+
     /// O(1) point lookup within the regular region: `(partition, row)` for
     /// the first key `>= k`, or `None` if that key falls past the region.
     pub fn locate(&self, k: i64) -> Option<(usize, usize)> {
@@ -428,6 +501,30 @@ mod tests {
         let next =
             PartitionMeta { id: 2, key_min: 1000, key_max: 1100, rows: 11, step: Some(10) };
         c.append_meta(next).unwrap();
+    }
+
+    #[test]
+    fn components_roundtrip_and_validate() {
+        for (rows, per) in [(100, 25), (90, 25), (1000, 64)] {
+            let cias = Cias::build(&uniform_parts(rows, per, 10)).unwrap();
+            let (bk, st, rpp, rp, asl) = cias.components();
+            let back = Cias::from_components(bk, st, rpp, rp, asl.to_vec()).unwrap();
+            assert_eq!(back.regular_parts(), cias.regular_parts());
+            assert_eq!(back.asl_len(), cias.asl_len());
+            for q in [RangeQuery { lo: 400, hi: 900 }, RangeQuery { lo: 0, hi: 20_000 }] {
+                assert_eq!(back.lookup(q), cias.lookup(q), "rows={rows} q={q:?}");
+            }
+        }
+        // A tampered snapshot must be rejected, not trusted.
+        let cias = Cias::build(&uniform_parts(90, 25, 10)).unwrap();
+        let (bk, st, rpp, rp, asl) = cias.components();
+        assert!(Cias::from_components(bk, 0, rpp, rp, asl.to_vec()).is_err());
+        let mut bad = asl.to_vec();
+        bad[0].key_min = bk; // overlaps the compressed region
+        assert!(Cias::from_components(bk, st, rpp, rp, bad).is_err());
+        let mut bad_id = asl.to_vec();
+        bad_id[0].id += 1;
+        assert!(Cias::from_components(bk, st, rpp, rp, bad_id).is_err());
     }
 
     #[test]

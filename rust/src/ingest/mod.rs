@@ -20,6 +20,7 @@ use crate::error::{OsebaError, Result};
 use crate::index::builder::detect_step;
 use crate::index::{Cias, PartitionMeta};
 use crate::storage::{Partition, RecordBatch, Schema};
+use crate::store::TieredStore;
 
 /// A chunk of rows flowing through the pipeline (columnar, sorted keys).
 #[derive(Clone, Debug)]
@@ -46,6 +47,9 @@ struct State {
     parts: Vec<Arc<Partition>>,
     index: Option<Cias>,
     rows: usize,
+    /// Partitions sealed so far (equals `parts.len()` unless spilling to a
+    /// tiered store, where the store owns the partitions).
+    sealed: usize,
 }
 
 /// The consumer half: builds partitions from chunks and maintains CIAS.
@@ -54,6 +58,9 @@ pub struct Ingestor {
     rows_per_partition: usize,
     state: Mutex<State>,
     tracker: Arc<MemoryTracker>,
+    /// When set, sealed partitions go to the tiered store (which spills
+    /// under pressure) instead of being pinned in memory.
+    spill: Option<Arc<TieredStore>>,
     ingested_rows: AtomicUsize,
     // Partial-partition buffer.
     pending: Mutex<Chunk>,
@@ -75,9 +82,36 @@ impl Ingestor {
             rows_per_partition,
             state: Mutex::new(State::default()),
             tracker,
+            spill: None,
             ingested_rows: AtomicUsize::new(0),
             pending: Mutex::new(Chunk { keys: Vec::new(), columns: vec![Vec::new(); width] }),
         })
+    }
+
+    /// An ingestor that seals partitions into `store`: under memory
+    /// pressure the store spills cold partitions to segments, so ingestion
+    /// of datasets beyond the budget proceeds instead of erroring.
+    pub fn spilling(
+        schema: Schema,
+        rows_per_partition: usize,
+        store: Arc<TieredStore>,
+    ) -> Result<Ingestor> {
+        if *store.schema() != schema {
+            return Err(OsebaError::Schema(format!(
+                "store schema {:?} != ingest schema {:?}",
+                store.schema(),
+                schema
+            )));
+        }
+        let tracker = Arc::clone(store.tracker());
+        let mut ing = Ingestor::new(schema, rows_per_partition, tracker)?;
+        ing.spill = Some(store);
+        Ok(ing)
+    }
+
+    /// The tiered store sealed partitions go to, if spilling.
+    pub fn spill_store(&self) -> Option<&Arc<TieredStore>> {
+        self.spill.as_ref()
     }
 
     /// Feed one chunk. Completed partitions are sealed, charged to the
@@ -134,28 +168,39 @@ impl Ingestor {
 
     fn seal(&self, keys: Vec<i64>, cols: Vec<Vec<f32>>) -> Result<()> {
         let mut state = self.state.lock().unwrap();
-        let id = state.parts.len();
+        let id = state.sealed;
         let part = Arc::new(Partition::from_rows(id, keys, cols));
-        self.tracker.allocate(part.bytes())?;
-        let meta = PartitionMeta {
-            id,
-            key_min: part.key_min().unwrap_or(0),
-            key_max: part.key_max().unwrap_or(0),
-            rows: part.rows,
-            step: detect_step(&part.keys),
+        // The store extracts metadata (including the O(rows) step scan)
+        // as part of insert; reuse it rather than rescanning the keys.
+        let meta = match &self.spill {
+            Some(store) => store.insert(Arc::clone(&part))?,
+            None => {
+                self.tracker.allocate(part.bytes())?;
+                PartitionMeta {
+                    id,
+                    key_min: part.key_min().unwrap_or(0),
+                    key_max: part.key_max().unwrap_or(0),
+                    rows: part.rows,
+                    step: detect_step(&part.keys),
+                }
+            }
         };
         match &mut state.index {
             Some(ix) => ix.append_meta(meta)?,
             None => state.index = Some(Cias::from_meta(vec![meta])?),
         }
         state.rows += part.rows;
-        state.parts.push(part);
+        state.sealed += 1;
+        if self.spill.is_none() {
+            state.parts.push(part);
+        }
         Ok(())
     }
 
     /// A consistent snapshot: sealed partitions + a clone of the index.
     /// (The pending tail is not yet visible — standard watermark
-    /// semantics.)
+    /// semantics.) When spilling, the partitions live in the store
+    /// ([`Self::spill_store`]) and the vec is empty.
     pub fn snapshot(&self) -> (Vec<Arc<Partition>>, Option<Cias>) {
         let state = self.state.lock().unwrap();
         (state.parts.clone(), state.index.clone())
@@ -164,7 +209,7 @@ impl Ingestor {
     /// Sealed partition count / row count / total ingested rows.
     pub fn progress(&self) -> (usize, usize, usize) {
         let state = self.state.lock().unwrap();
-        (state.parts.len(), state.rows, self.ingested_rows.load(Ordering::Relaxed))
+        (state.sealed, state.rows, self.ingested_rows.load(Ordering::Relaxed))
     }
 }
 
@@ -297,6 +342,52 @@ mod tests {
             }
         }
         assert!(failed, "budget must stop ingestion");
+    }
+
+    #[test]
+    fn spilling_ingest_survives_budget_and_matches_reference() {
+        let dir = crate::testing::temp_dir("ingest-spill");
+        let batch = ClimateGen::default().generate(10_000);
+        // The budget that stops the plain ingestor (see
+        // `memory_budget_applies_backpressure_failure`) ...
+        let tracker = MemoryTracker::with_budget(2 * 1000 * 24 + 64 * 1024);
+        let store = Arc::new(
+            TieredStore::create(&dir, Schema::climate(), tracker).unwrap(),
+        );
+        let ing = Ingestor::spilling(Schema::climate(), 1000, Arc::clone(&store)).unwrap();
+        // ... does not stop the spilling one.
+        for c in chunks_of(&batch, 1000) {
+            ing.push(c).unwrap();
+        }
+        ing.finish().unwrap();
+        let (sealed, rows, _) = ing.progress();
+        assert_eq!(sealed, 10);
+        assert_eq!(rows, 10_000);
+        assert_eq!(store.num_partitions(), 10);
+        assert!(store.counters().evictions > 0, "budget forced spills");
+
+        // The incrementally-built index matches the batch reference, and
+        // faulted-in data is identical to the source.
+        let (_, index) = ing.snapshot();
+        let index = index.unwrap();
+        let ref_parts = crate::storage::partition_batch_uniform(&batch, 1000).unwrap();
+        let ref_index = Cias::build(&ref_parts).unwrap();
+        let q = RangeQuery { lo: 3600 * 1500, hi: 3600 * 4200 };
+        assert_eq!(index.lookup(q), ref_index.lookup(q));
+        let p3 = store.fetch(3).unwrap();
+        assert_eq!(p3.keys, ref_parts[3].keys);
+        assert_eq!(p3.columns, ref_parts[3].columns);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn spilling_rejects_schema_mismatch() {
+        let dir = crate::testing::temp_dir("ingest-schema");
+        let store = Arc::new(
+            TieredStore::create(&dir, Schema::stock(), MemoryTracker::unbounded()).unwrap(),
+        );
+        assert!(Ingestor::spilling(Schema::climate(), 100, store).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

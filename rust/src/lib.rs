@@ -7,7 +7,9 @@
 //! * **Layer 3 (this crate)** — a Spark-like in-memory partitioned data
 //!   engine ([`engine`]), the paper's content-aware indexes ([`index`]:
 //!   table-based and CIAS), a leader/worker coordinator ([`coordinator`])
-//!   with a concurrent multi-query batch planner, all over a simulated
+//!   with a concurrent multi-query batch planner, tiered persistent
+//!   storage ([`store`]: spill-to-disk `.oseg` segments with Hot/Cold
+//!   residency and super-index manifest snapshots), all over a simulated
 //!   cluster ([`cluster`]), and the PJRT runtime ([`runtime`]) that
 //!   executes AOT-compiled analysis kernels (behind the `xla` feature;
 //!   the default build uses the pure-rust native backend).
@@ -35,6 +37,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod server;
 pub mod storage;
+pub mod store;
 pub mod testing;
 pub mod util;
 
@@ -50,4 +53,5 @@ pub mod prelude {
     pub use crate::index::{Cias, ContentIndex, RangeQuery, TableIndex};
     pub use crate::runtime::AnalysisBackend;
     pub use crate::storage::Schema;
+    pub use crate::store::{Residency, StoreCounters, TieredStore};
 }

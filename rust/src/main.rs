@@ -10,7 +10,16 @@
 //!              over TCP (line-delimited JSON).
 //! * `index`  — build both indexes over a dataset and report their
 //!              footprint and lookup behaviour.
+//! * `save`   — generate a dataset and persist it as an `.oseg` segment
+//!              store with a super-index manifest snapshot.
+//! * `open`   — open a saved store (index restored without reading data)
+//!              and optionally run one selective query against it.
 //! * `info`   — print resolved config and artifact manifest summary.
+//!
+//! `batch` and `serve` accept `--memory-budget`: the dataset then lives in
+//! a tiered store (`--spill-dir`, or a per-process temp directory) and
+//! partitions beyond the budget spill to segments, faulting back in only
+//! when the index targets them.
 
 use std::sync::Arc;
 
@@ -19,10 +28,13 @@ use oseba::cli::{bool_flag, flag, Cli};
 use oseba::config::{parse_bytes, AppConfig, BackendKind};
 use oseba::coordinator::{plan_batch, run_session, Coordinator, IndexKind, Method};
 use oseba::datagen::ClimateGen;
+use oseba::engine::MemoryTracker;
 use oseba::error::{OsebaError, Result};
 use oseba::index::{ContentIndex, RangeQuery};
 use oseba::runtime::make_backend;
 use oseba::server::QueryServer;
+use oseba::storage::partition_batch_uniform;
+use oseba::store::TieredStore;
 use oseba::util::humansize;
 use oseba::util::rng::Xoshiro256;
 
@@ -63,6 +75,16 @@ fn cli() -> Cli {
                 "explicit queries 'lo:hi,lo:hi,...' (overrides --queries)",
                 None,
             ));
+            f.push(flag(
+                "memory-budget",
+                "storage budget (k/m/g); excess partitions spill to disk",
+                None,
+            ));
+            f.push(flag(
+                "spill-dir",
+                "tiered-store segment directory (default: per-process tmp)",
+                None,
+            ));
             f.push(bool_flag("json", "emit the batch report as JSON"));
             f
         })
@@ -70,9 +92,36 @@ fn cli() -> Cli {
             let mut f = common();
             f.push(flag("addr", "bind address", Some("127.0.0.1:7341")));
             f.push(flag("index", "table | cias", Some("cias")));
+            f.push(flag(
+                "memory-budget",
+                "storage budget (k/m/g); excess partitions spill to disk",
+                None,
+            ));
+            f.push(flag(
+                "spill-dir",
+                "tiered-store segment directory (default: per-process tmp)",
+                None,
+            ));
             f
         })
         .command("index", "build and inspect both indexes", common())
+        .command("save", "generate a dataset and persist it as a segment store", {
+            let mut f = common();
+            f.push(flag("dir", "store directory to write", Some("oseba-store")));
+            f
+        })
+        .command("open", "open a saved store and optionally query it", {
+            vec![
+                flag("dir", "store directory to open", Some("oseba-store")),
+                flag("backend", "analysis backend: hlo | native", Some("native")),
+                flag("artifacts", "artifacts directory", Some("artifacts")),
+                flag("workers", "simulated cluster workers", Some("4")),
+                flag("memory-budget", "storage budget (k/m/g)", None),
+                flag("column", "column to analyze (default: first column)", None),
+                flag("lo", "query lower key (inclusive)", None),
+                flag("hi", "query upper key (inclusive)", None),
+            ]
+        })
         .command("info", "print config and manifest summary", common())
 }
 
@@ -89,16 +138,85 @@ fn app_config(p: &oseba::cli::Parsed) -> Result<AppConfig> {
     Ok(cfg)
 }
 
-fn load(coord: &Coordinator, cfg: &AppConfig) -> Result<oseba::engine::Dataset> {
+/// Generate the configured dataset, reporting its shape.
+fn generate(cfg: &AppConfig, tiered_to: Option<&std::path::Path>) -> oseba::storage::RecordBatch {
     let gen = ClimateGen { seed: cfg.seed, ..Default::default() };
     let batch = gen.generate_bytes(cfg.dataset_bytes);
+    let where_ = match tiered_to {
+        Some(dir) => format!("tiered partitions (spill: {})", dir.display()),
+        None => "partitions".to_string(),
+    };
     eprintln!(
-        "loaded {} rows ({}) into {} partitions",
+        "loaded {} rows ({}) into {} {where_}",
         batch.rows(),
         humansize::bytes(batch.raw_bytes()),
         cfg.num_partitions
     );
-    coord.load(batch, cfg.num_partitions)
+    batch
+}
+
+fn load(coord: &Coordinator, cfg: &AppConfig) -> Result<oseba::engine::Dataset> {
+    coord.load(generate(cfg, None), cfg.num_partitions)
+}
+
+/// Removes an auto-created temp spill directory when dropped — covers
+/// every exit path, error or success, of the command using it.
+struct SpillCleanup(Option<std::path::PathBuf>);
+
+impl Drop for SpillCleanup {
+    fn drop(&mut self) {
+        if let Some(dir) = self.0.take() {
+            let _ = std::fs::remove_dir_all(dir);
+        }
+    }
+}
+
+/// Apply `--memory-budget` (if present) to the context config.
+fn apply_budget(cfg: &mut AppConfig, p: &oseba::cli::Parsed) -> Result<()> {
+    if let Some(b) = p.get("memory-budget") {
+        cfg.ctx.memory_budget = Some(parse_bytes(b)?);
+    }
+    Ok(())
+}
+
+/// Load resident, or tiered when `--spill-dir`/`--memory-budget` asks for
+/// it — under a budget the dataset must be able to exceed RAM, so it goes
+/// through a [`TieredStore`] (spill segments in `--spill-dir` or a
+/// per-process temp directory). The second return value is a directory to
+/// delete when the command finishes: `Some` only for the auto temp
+/// default, never for a user-chosen `--spill-dir`.
+fn load_maybe_tiered(
+    coord: &Coordinator,
+    cfg: &AppConfig,
+    p: &oseba::cli::Parsed,
+) -> Result<(oseba::engine::Dataset, Option<std::path::PathBuf>)> {
+    let (dir, cleanup) = match p.get("spill-dir") {
+        Some(d) if !d.is_empty() => (Some(std::path::PathBuf::from(d)), None),
+        _ => match cfg.ctx.memory_budget {
+            Some(_) => {
+                let d = std::env::temp_dir()
+                    .join(format!("oseba-spill-{}", std::process::id()));
+                (Some(d.clone()), Some(d))
+            }
+            None => (None, None),
+        },
+    };
+    match dir {
+        None => Ok((load(coord, cfg)?, None)),
+        Some(dir) => {
+            let batch = generate(cfg, Some(&dir));
+            let ds = coord.load_tiered(batch, cfg.num_partitions, &dir)?;
+            if let Some(store) = ds.store() {
+                eprintln!(
+                    "tiered load: {} resident of {} total, {} spilled to disk",
+                    humansize::bytes(store.resident_bytes()),
+                    humansize::bytes(store.total_bytes()),
+                    store.counters().evictions
+                );
+            }
+            Ok((ds, cleanup))
+        }
+    }
 }
 
 fn cmd_run(p: &oseba::cli::Parsed) -> Result<()> {
@@ -196,11 +314,13 @@ fn random_queries(
 }
 
 fn cmd_batch(p: &oseba::cli::Parsed) -> Result<()> {
-    let cfg = app_config(p)?;
+    let mut cfg = app_config(p)?;
+    apply_budget(&mut cfg, p)?;
     let index_kind: IndexKind = p.get("index").unwrap().parse()?;
     let backend = make_backend(cfg.backend, &cfg.artifacts_dir)?;
     let coord = Coordinator::new(&cfg, backend)?;
-    let ds = load(&coord, &cfg)?;
+    let (ds, cleanup) = load_maybe_tiered(&coord, &cfg, p)?;
+    let _cleanup = SpillCleanup(cleanup);
     let column = ds.schema().column_index(p.get("column").unwrap())?;
 
     let queries = match p.get("ranges") {
@@ -247,6 +367,15 @@ fn cmd_batch(p: &oseba::cli::Parsed) -> Result<()> {
     println!(
         "partitions targeted: {delta} (naive per-query execution: {naive_touched})"
     );
+    if let Some(store) = ds.store() {
+        println!(
+            "tiered: read {} of {} total ({} faults, {} evictions)",
+            humansize::bytes(report.segment_bytes_read),
+            humansize::bytes(store.total_bytes()),
+            report.faults,
+            report.evictions,
+        );
+    }
     println!("index: {} bytes ({index_kind:?})", index.memory_bytes());
     if p.get_bool("json") {
         println!("{}", report.to_json().to_string());
@@ -255,11 +384,13 @@ fn cmd_batch(p: &oseba::cli::Parsed) -> Result<()> {
 }
 
 fn cmd_serve(p: &oseba::cli::Parsed) -> Result<()> {
-    let cfg = app_config(p)?;
+    let mut cfg = app_config(p)?;
+    apply_budget(&mut cfg, p)?;
     let index_kind: IndexKind = p.get("index").unwrap().parse()?;
     let backend = make_backend(cfg.backend, &cfg.artifacts_dir)?;
     let coord = Arc::new(Coordinator::new(&cfg, backend)?);
-    let ds = load(&coord, &cfg)?;
+    let (ds, cleanup) = load_maybe_tiered(&coord, &cfg, p)?;
+    let _cleanup = SpillCleanup(cleanup);
     let server = QueryServer::new(coord, ds, index_kind)?;
     let addr = p.get("addr").unwrap();
     eprintln!("serving on {addr} (op: info | stats | shutdown)");
@@ -283,6 +414,91 @@ fn cmd_index(p: &oseba::cli::Parsed) -> Result<()> {
     );
     let ratio = table.memory_bytes() as f64 / cias.memory_bytes().max(1) as f64;
     println!("space ratio:       {ratio:.1}x");
+    Ok(())
+}
+
+fn cmd_save(p: &oseba::cli::Parsed) -> Result<()> {
+    let cfg = app_config(p)?;
+    let dir = p.get("dir").unwrap();
+    let gen = ClimateGen { seed: cfg.seed, ..Default::default() };
+    let batch = gen.generate_bytes(cfg.dataset_bytes);
+    let rows = batch.rows();
+    let raw = batch.raw_bytes();
+    let store = TieredStore::create(dir, batch.schema.clone(), MemoryTracker::unbounded())?;
+    let rows_per = rows.div_ceil(cfg.num_partitions);
+    for part in partition_batch_uniform(&batch, rows_per)? {
+        store.insert(part)?;
+    }
+    store.save()?;
+    let index = store.build_cias()?;
+    println!(
+        "saved {} rows ({} raw) as {} segments to '{dir}'",
+        rows,
+        humansize::bytes(raw),
+        store.num_partitions()
+    );
+    println!(
+        "index snapshot: \"{}\" (+{} asl entries) — restored on open without a data scan",
+        index.compressed_repr(),
+        index.asl_len()
+    );
+    Ok(())
+}
+
+fn cmd_open(p: &oseba::cli::Parsed) -> Result<()> {
+    let mut cfg = AppConfig::default();
+    cfg.backend = p.get("backend").unwrap().parse()?;
+    cfg.artifacts_dir = p.get("artifacts").unwrap().to_string();
+    cfg.cluster_workers = p.get_parse("workers")?.unwrap();
+    apply_budget(&mut cfg, p)?;
+    let backend = make_backend(cfg.backend, &cfg.artifacts_dir)?;
+    let coord = Coordinator::new(&cfg, backend)?;
+
+    let dir = p.get("dir").unwrap();
+    let timer = std::time::Instant::now();
+    let (ds, index) = coord.open_store(dir)?;
+    let open_secs = timer.elapsed().as_secs_f64();
+    let store = ds.store().expect("open_store returns a tiered dataset");
+    println!(
+        "opened '{dir}' in {}: {} rows in {} partitions ({} on disk), index {} bytes",
+        humansize::secs(open_secs),
+        ds.total_rows(),
+        ds.num_partitions(),
+        humansize::bytes(store.total_bytes()),
+        index.memory_bytes()
+    );
+    println!(
+        "segment bytes read so far: {} (index restored from the manifest snapshot)",
+        store.counters().segment_bytes_read
+    );
+
+    let (lo, hi) = (p.get_parse::<i64>("lo")?, p.get_parse::<i64>("hi")?);
+    if let (Some(lo), Some(hi)) = (lo, hi) {
+        let column = match p.get("column") {
+            Some(c) => ds.schema().column_index(c)?,
+            None => 0,
+        };
+        let q = RangeQuery::new(lo, hi)?;
+        let timer = std::time::Instant::now();
+        let st = coord.analyze_period_oseba(&ds, index.as_ref(), q, column)?;
+        let secs = timer.elapsed().as_secs_f64();
+        println!(
+            "stats[{lo}, {hi}]: n={} max={:.3} min={:.3} mean={:.3} std={:.3} in {}",
+            st.count,
+            st.max,
+            st.min,
+            st.mean,
+            st.std,
+            humansize::secs(secs)
+        );
+        let c = store.counters();
+        println!(
+            "selective fault-in: {} of {} read ({} faults)",
+            humansize::bytes(c.segment_bytes_read),
+            humansize::bytes(store.total_bytes()),
+            c.faults
+        );
+    }
     Ok(())
 }
 
@@ -321,6 +537,8 @@ fn main() {
         "batch" => cmd_batch(&parsed),
         "serve" => cmd_serve(&parsed),
         "index" => cmd_index(&parsed),
+        "save" => cmd_save(&parsed),
+        "open" => cmd_open(&parsed),
         "info" => cmd_info(&parsed),
         _ => unreachable!("cli validated"),
     };

@@ -142,6 +142,13 @@ pub struct BatchReport {
     pub partitions_touched: usize,
     /// Worker task dispatches submitted to the pool.
     pub tasks: usize,
+    /// Cold partitions faulted in from the tiered store (0 when the
+    /// dataset is fully resident).
+    pub faults: usize,
+    /// Hot partitions evicted (spilled) during the batch.
+    pub evictions: usize,
+    /// Segment bytes read from disk by the batch's faults.
+    pub segment_bytes_read: usize,
     /// Wall-clock seconds for planning + execution + demux.
     pub secs: f64,
 }
@@ -149,7 +156,7 @@ pub struct BatchReport {
 impl BatchReport {
     /// One-line human rendering for CLI/bench output.
     pub fn line(&self) -> String {
-        format!(
+        let mut line = format!(
             "batch: {} queries -> {} merged ranges, {} segments, \
              {} partition slices, {} tasks in {}",
             self.queries,
@@ -158,7 +165,16 @@ impl BatchReport {
             self.partitions_touched,
             self.tasks,
             humansize::secs(self.secs),
-        )
+        );
+        if self.faults > 0 || self.evictions > 0 {
+            line.push_str(&format!(
+                " | tiered: {} faults, {} evictions, {} read",
+                self.faults,
+                self.evictions,
+                humansize::bytes(self.segment_bytes_read),
+            ));
+        }
+        line
     }
 
     /// JSON dump, matching the session-metrics conventions.
@@ -169,6 +185,9 @@ impl BatchReport {
             ("segments", Json::num(self.segments as f64)),
             ("partitions_touched", Json::num(self.partitions_touched as f64)),
             ("tasks", Json::num(self.tasks as f64)),
+            ("faults", Json::num(self.faults as f64)),
+            ("evictions", Json::num(self.evictions as f64)),
+            ("segment_bytes_read", Json::num(self.segment_bytes_read as f64)),
             ("secs", Json::num(self.secs)),
         ])
     }
@@ -243,14 +262,21 @@ mod tests {
             segments: 11,
             partitions_touched: 9,
             tasks: 6,
+            faults: 0,
+            evictions: 0,
+            segment_bytes_read: 0,
             secs: 0.125,
         };
         let line = r.line();
         assert!(line.contains("8 queries"));
         assert!(line.contains("3 merged ranges"));
+        assert!(!line.contains("tiered"), "resident batches stay terse");
         let j = r.to_json().to_string();
         assert!(j.contains("\"merged_ranges\":3"));
         assert!(j.contains("\"partitions_touched\":9"));
+        let tiered = BatchReport { faults: 2, segment_bytes_read: 1 << 20, ..r };
+        assert!(tiered.line().contains("2 faults"), "{}", tiered.line());
+        assert!(tiered.to_json().to_string().contains("\"faults\":2"));
     }
 
     #[test]

@@ -34,11 +34,21 @@ pub struct QueryServer {
 }
 
 impl QueryServer {
-    /// Build over an already-loaded dataset.
+    /// Build over an already-loaded dataset (resident or tiered; a tiered
+    /// dataset's index is built from store metadata without faulting
+    /// anything in).
     pub fn new(coord: Arc<Coordinator>, ds: Dataset, index_kind: IndexKind) -> Result<QueryServer> {
-        let index: Arc<dyn ContentIndex> = match index_kind {
-            IndexKind::Cias => Arc::new(crate::index::Cias::build(ds.partitions())?),
-            IndexKind::Table => Arc::new(crate::index::TableIndex::build(ds.partitions())?),
+        let index: Arc<dyn ContentIndex> = match (ds.store(), index_kind) {
+            (Some(store), IndexKind::Cias) => {
+                Arc::new(crate::index::Cias::from_meta(store.metas())?)
+            }
+            (Some(store), IndexKind::Table) => {
+                Arc::new(crate::index::TableIndex::from_meta(store.metas())?)
+            }
+            (None, IndexKind::Cias) => Arc::new(crate::index::Cias::build(ds.partitions())?),
+            (None, IndexKind::Table) => {
+                Arc::new(crate::index::TableIndex::build(ds.partitions())?)
+            }
         };
         Ok(QueryServer {
             coord,
@@ -126,16 +136,31 @@ pub fn handle_request(
         .as_str()
         .ok_or_else(|| OsebaError::Json("op must be a string".into()))?;
     match op {
-        "info" => Ok(Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("rows", Json::num(ds.total_rows() as f64)),
-            ("partitions", Json::num(ds.num_partitions() as f64)),
-            ("memory_bytes", Json::num(coord.context().memory_used() as f64)),
-            ("index", Json::str(index.name())),
-            ("index_bytes", Json::num(index.memory_bytes() as f64)),
-            ("key_min", Json::num(ds.key_min().unwrap_or(0) as f64)),
-            ("key_max", Json::num(ds.key_max().unwrap_or(0) as f64)),
-        ])),
+        "info" => {
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("rows", Json::num(ds.total_rows() as f64)),
+                ("partitions", Json::num(ds.num_partitions() as f64)),
+                ("memory_bytes", Json::num(coord.context().memory_used() as f64)),
+                ("index", Json::str(index.name())),
+                ("index_bytes", Json::num(index.memory_bytes() as f64)),
+                ("key_min", Json::num(ds.key_min().unwrap_or(0) as f64)),
+                ("key_max", Json::num(ds.key_max().unwrap_or(0) as f64)),
+                ("tiered", Json::Bool(ds.is_tiered())),
+            ];
+            if let Some(store) = ds.store() {
+                let c = store.counters();
+                fields.push(("resident_bytes", Json::num(store.resident_bytes() as f64)));
+                fields.push(("total_bytes", Json::num(store.total_bytes() as f64)));
+                fields.push(("faults", Json::num(c.faults as f64)));
+                fields.push(("evictions", Json::num(c.evictions as f64)));
+                fields.push((
+                    "segment_bytes_read",
+                    Json::num(c.segment_bytes_read as f64),
+                ));
+            }
+            Ok(Json::obj(fields))
+        }
         "stats" => {
             let lo = req.require("lo")?.as_i64().ok_or_else(bad_num)?;
             let hi = req.require("hi")?.as_i64().ok_or_else(bad_num)?;
@@ -229,6 +254,32 @@ mod tests {
         let before = coord.context().memory_used();
         handle_request(&mk("default"), &coord, &ds, &index, &flag).unwrap();
         assert_eq!(coord.context().memory_used(), before);
+    }
+
+    #[test]
+    fn tiered_dataset_serves_and_reports_faults() {
+        let dir = crate::testing::temp_dir("srv-tiered");
+        let cfg = AppConfig { cluster_workers: 2, ..Default::default() };
+        let coord = Coordinator::new(&cfg, Arc::new(NativeBackend)).unwrap();
+        let ds = coord
+            .load_tiered(ClimateGen::default().generate(10_000), 5, &dir)
+            .unwrap();
+        let index = crate::index::Cias::from_meta(ds.store().unwrap().metas()).unwrap();
+        let flag = AtomicBool::new(false);
+
+        let r = handle_request(r#"{"op":"info"}"#, &coord, &ds, &index, &flag).unwrap();
+        assert_eq!(r.get("tiered"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("faults").unwrap().as_usize(), Some(0));
+
+        let req = format!(
+            r#"{{"op":"stats","lo":0,"hi":{},"column":"temperature"}}"#,
+            3600 * 999
+        );
+        let r = handle_request(&req, &coord, &ds, &index, &flag).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("count").unwrap().as_usize(), Some(1000));
+        coord.context().unpersist(&ds);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

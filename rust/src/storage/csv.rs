@@ -71,9 +71,17 @@ fn bad_row(lineno: usize, msg: &str) -> OsebaError {
     OsebaError::Schema(format!("csv row {}: {msg}", lineno + 2))
 }
 
-/// Load a batch from a CSV file.
+/// Load a batch from a CSV file. I/O failures name the file.
 pub fn load_csv(path: impl AsRef<Path>) -> Result<RecordBatch> {
-    read_csv(std::fs::File::open(path)?)
+    let path = path.as_ref();
+    let file = std::fs::File::open(path).map_err(|e| OsebaError::io(path, e))?;
+    read_csv(file).map_err(|e| match e {
+        // Re-attach the path to read errors surfaced as bare io.
+        OsebaError::Io { path: p, source } if p.as_os_str().is_empty() => {
+            OsebaError::io(path, source)
+        }
+        other => other,
+    })
 }
 
 /// Write a batch as CSV (header + rows).
@@ -95,9 +103,16 @@ pub fn write_csv<W: Write>(batch: &RecordBatch, writer: W) -> Result<()> {
     Ok(())
 }
 
-/// Save a batch to a CSV file.
+/// Save a batch to a CSV file. I/O failures name the file.
 pub fn save_csv(batch: &RecordBatch, path: impl AsRef<Path>) -> Result<()> {
-    write_csv(batch, std::fs::File::create(path)?)
+    let path = path.as_ref();
+    let file = std::fs::File::create(path).map_err(|e| OsebaError::io(path, e))?;
+    write_csv(batch, file).map_err(|e| match e {
+        OsebaError::Io { path: p, source } if p.as_os_str().is_empty() => {
+            OsebaError::io(path, source)
+        }
+        other => other,
+    })
 }
 
 #[cfg(test)]
@@ -134,8 +149,7 @@ time,temperature,humidity
     #[test]
     fn roundtrips_generated_data_through_files() {
         let gen = crate::datagen::ClimateGen::default().generate(500);
-        let dir = std::env::temp_dir().join(format!("oseba-csv-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = crate::testing::temp_dir("csv");
         let path = dir.join("climate.csv");
         save_csv(&gen, &path).unwrap();
         let back = load_csv(&path).unwrap();
@@ -168,5 +182,18 @@ time,temperature,humidity
     fn blank_lines_skipped() {
         let b = read_csv("time,a\n1,2\n\n2,3\n".as_bytes()).unwrap();
         assert_eq!(b.rows(), 2);
+    }
+
+    #[test]
+    fn file_errors_name_the_path() {
+        let dir = crate::testing::temp_dir("csv-missing");
+        let path = dir.join("nope.csv");
+        let err = load_csv(&path).unwrap_err();
+        assert!(err.to_string().contains("nope.csv"), "got: {err}");
+        let b = read_csv(SAMPLE.as_bytes()).unwrap();
+        let bad = dir.join("no-such-dir").join("out.csv");
+        let err = save_csv(&b, &bad).unwrap_err();
+        assert!(err.to_string().contains("out.csv"), "got: {err}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

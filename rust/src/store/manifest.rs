@@ -1,0 +1,379 @@
+//! The store manifest: a JSON document (written with the in-tree
+//! [`crate::util::json`]) that describes a segment directory — schema,
+//! per-segment metadata, and a snapshot of the super index (the CIAS
+//! compressed tuple + associated search list) so [`super::TieredStore::open`]
+//! restores lookup in O(index size) without reading any segment data.
+//!
+//! The segment list doubles as the §III-A table index: each entry is
+//! exactly one [`PartitionMeta`], so a table-index caller can rebuild from
+//! the same manifest.
+//!
+//! Keys are persisted as JSON numbers; magnitudes beyond 2^53 would lose
+//! precision and are rejected at save time.
+
+use std::path::Path;
+
+use crate::error::{OsebaError, Result};
+use crate::index::{Cias, PartitionMeta};
+use crate::storage::Schema;
+use crate::util::json::Json;
+
+/// Manifest file name inside a store directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+/// `format` field value identifying a store manifest.
+pub const FORMAT: &str = "oseba-store";
+/// Current manifest version.
+pub const VERSION: usize = 1;
+
+/// One segment's manifest entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SegmentEntry {
+    /// Segment file name, relative to the store directory.
+    pub file: String,
+    /// The partition metadata (also a table-index row).
+    pub meta: PartitionMeta,
+}
+
+/// The parsed/serializable manifest.
+#[derive(Clone, Debug)]
+pub struct StoreManifest {
+    pub schema: Schema,
+    pub segments: Vec<SegmentEntry>,
+    /// Super-index snapshot over the segments.
+    pub index: Cias,
+}
+
+fn meta_to_json(m: &PartitionMeta) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(m.id as f64)),
+        ("key_min", Json::num(m.key_min as f64)),
+        ("key_max", Json::num(m.key_max as f64)),
+        ("rows", Json::num(m.rows as f64)),
+        ("step", m.step.map(|s| Json::num(s as f64)).unwrap_or(Json::Null)),
+    ])
+}
+
+use crate::store::segment::MAX_ROWS;
+
+fn meta_from_json(v: &Json) -> Result<PartitionMeta> {
+    let as_i64 = |name: &str| -> Result<i64> {
+        v.require(name)?
+            .as_i64()
+            .ok_or_else(|| OsebaError::Json(format!("segment field '{name}' must be an integer")))
+    };
+    let as_usize = |name: &str| -> Result<usize> {
+        v.require(name)?.as_usize().ok_or_else(|| {
+            OsebaError::Json(format!(
+                "segment field '{name}' must be a non-negative integer"
+            ))
+        })
+    };
+    let step = match v.require("step")? {
+        Json::Null => None,
+        j => Some(j.as_i64().ok_or_else(|| {
+            OsebaError::Json("segment field 'step' must be an integer or null".into())
+        })?),
+    };
+    let rows = as_usize("rows")?;
+    if rows == 0 || rows > MAX_ROWS {
+        return Err(OsebaError::Store(format!(
+            "segment row count {rows} out of range (1..={MAX_ROWS})"
+        )));
+    }
+    Ok(PartitionMeta {
+        id: as_usize("id")?,
+        key_min: as_i64("key_min")?,
+        key_max: as_i64("key_max")?,
+        rows,
+        step,
+    })
+}
+
+fn key_fits(k: i64) -> bool {
+    k.unsigned_abs() <= (1u64 << 53)
+}
+
+impl StoreManifest {
+    /// Serialize. Fails if any key magnitude exceeds JSON-safe 2^53.
+    pub fn to_json(&self) -> Result<Json> {
+        for e in &self.segments {
+            if !key_fits(e.meta.key_min) || !key_fits(e.meta.key_max) {
+                return Err(OsebaError::Store(format!(
+                    "segment {} keys exceed the manifest's 2^53 range",
+                    e.meta.id
+                )));
+            }
+        }
+        let (base_key, step, rows_per_part, regular_parts, asl) = self.index.components();
+        Ok(Json::obj(vec![
+            ("format", Json::str(FORMAT)),
+            ("version", Json::num(VERSION as f64)),
+            (
+                "schema",
+                Json::obj(vec![
+                    ("key", Json::str(self.schema.key.clone())),
+                    (
+                        "columns",
+                        Json::arr(self.schema.columns.iter().map(|c| Json::str(c.clone())).collect()),
+                    ),
+                ]),
+            ),
+            (
+                "segments",
+                Json::arr(
+                    self.segments
+                        .iter()
+                        .map(|e| {
+                            let mut obj = match meta_to_json(&e.meta) {
+                                Json::Obj(m) => m,
+                                _ => unreachable!(),
+                            };
+                            obj.insert("file".into(), Json::str(e.file.clone()));
+                            Json::Obj(obj)
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "index",
+                Json::obj(vec![
+                    ("kind", Json::str("cias")),
+                    ("base_key", Json::num(base_key as f64)),
+                    ("step", Json::num(step as f64)),
+                    ("rows_per_part", Json::num(rows_per_part as f64)),
+                    ("regular_parts", Json::num(regular_parts as f64)),
+                    ("asl", Json::arr(asl.iter().map(meta_to_json).collect())),
+                ]),
+            ),
+        ]))
+    }
+
+    /// Parse and validate a manifest document.
+    pub fn from_json(v: &Json) -> Result<StoreManifest> {
+        match v.require("format")?.as_str() {
+            Some(FORMAT) => {}
+            other => {
+                return Err(OsebaError::Store(format!(
+                    "not a store manifest (format {other:?}, want '{FORMAT}')"
+                )))
+            }
+        }
+        match v.require("version")?.as_usize() {
+            Some(VERSION) => {}
+            other => {
+                return Err(OsebaError::Store(format!(
+                    "unsupported manifest version {other:?} (want {VERSION})"
+                )))
+            }
+        }
+
+        let sv = v.require("schema")?;
+        let key = sv
+            .require("key")?
+            .as_str()
+            .ok_or_else(|| OsebaError::Json("schema key must be a string".into()))?;
+        let cols = sv
+            .require("columns")?
+            .as_arr()
+            .ok_or_else(|| OsebaError::Json("schema columns must be an array".into()))?;
+        let col_names: Vec<&str> = cols
+            .iter()
+            .map(|c| {
+                c.as_str()
+                    .ok_or_else(|| OsebaError::Json("schema column must be a string".into()))
+            })
+            .collect::<Result<_>>()?;
+        let schema = Schema::new(key, &col_names)?;
+
+        let segs = v
+            .require("segments")?
+            .as_arr()
+            .ok_or_else(|| OsebaError::Json("segments must be an array".into()))?;
+        let mut segments = Vec::with_capacity(segs.len());
+        for (i, s) in segs.iter().enumerate() {
+            let meta = meta_from_json(s)?;
+            if meta.id != i {
+                return Err(OsebaError::Store(format!(
+                    "segment list out of order: entry {i} has id {}",
+                    meta.id
+                )));
+            }
+            let file = s
+                .require("file")?
+                .as_str()
+                .ok_or_else(|| OsebaError::Json("segment file must be a string".into()))?
+                .to_string();
+            // Segment files must be bare names inside the store directory
+            // — a manifest must not be able to point reads elsewhere.
+            if file.is_empty()
+                || file.contains('/')
+                || file.contains('\\')
+                || file.starts_with("..")
+            {
+                return Err(OsebaError::Store(format!(
+                    "segment file '{file}' is not a bare file name"
+                )));
+            }
+            segments.push(SegmentEntry { file, meta });
+        }
+        if segments.is_empty() {
+            return Err(OsebaError::Store("manifest lists no segments".into()));
+        }
+
+        let iv = v.require("index")?;
+        match iv.require("kind")?.as_str() {
+            Some("cias") => {}
+            other => {
+                return Err(OsebaError::Store(format!("unknown index kind {other:?}")))
+            }
+        }
+        let as_i64 = |name: &str| -> Result<i64> {
+            iv.require(name)?
+                .as_i64()
+                .ok_or_else(|| OsebaError::Json(format!("index field '{name}' must be an integer")))
+        };
+        let as_usize = |name: &str| -> Result<usize> {
+            iv.require(name)?.as_usize().ok_or_else(|| {
+                OsebaError::Json(format!(
+                    "index field '{name}' must be a non-negative integer"
+                ))
+            })
+        };
+        let asl = iv
+            .require("asl")?
+            .as_arr()
+            .ok_or_else(|| OsebaError::Json("index asl must be an array".into()))?
+            .iter()
+            .map(meta_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let index = Cias::from_components(
+            as_i64("base_key")?,
+            as_i64("step")?,
+            as_usize("rows_per_part")?,
+            as_usize("regular_parts")?,
+            asl,
+        )?;
+        if index.num_partitions() != segments.len() {
+            return Err(OsebaError::Store(format!(
+                "index covers {} partitions but manifest lists {} segments",
+                index.num_partitions(),
+                segments.len()
+            )));
+        }
+        // The segment list is the ground truth (it is what `save` derived
+        // the snapshot from); a snapshot that disagrees with it would
+        // silently mis-target queries, so reject divergence outright.
+        let rebuilt = Cias::from_meta(segments.iter().map(|e| e.meta).collect())?;
+        if rebuilt.components() != index.components() {
+            return Err(OsebaError::Store(
+                "index snapshot disagrees with the segment list".into(),
+            ));
+        }
+
+        Ok(StoreManifest { schema, segments, index })
+    }
+
+    /// Build a manifest for `segments`, deriving the index snapshot.
+    pub fn for_segments(schema: Schema, segments: Vec<SegmentEntry>) -> Result<StoreManifest> {
+        let index = Cias::from_meta(segments.iter().map(|e| e.meta).collect())?;
+        Ok(StoreManifest { schema, segments, index })
+    }
+
+    /// Write to `<dir>/manifest.json` atomically (temp file + rename), so
+    /// a crash mid-save never clobbers a previously valid manifest.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let path = dir.as_ref().join(MANIFEST_FILE);
+        let tmp = dir.as_ref().join(format!("{MANIFEST_FILE}.tmp"));
+        std::fs::write(&tmp, self.to_json()?.to_string())
+            .map_err(|e| OsebaError::io(&tmp, e))?;
+        std::fs::rename(&tmp, &path).map_err(|e| OsebaError::io(&path, e))
+    }
+
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<StoreManifest> {
+        let path = dir.as_ref().join(MANIFEST_FILE);
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| OsebaError::io(&path, e))?;
+        let v = Json::parse(&text)
+            .map_err(|e| OsebaError::Store(format!("manifest '{}': {e}", path.display())))?;
+        StoreManifest::from_json(&v)
+            .map_err(|e| OsebaError::Store(format!("manifest '{}': {e}", path.display())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::{ContentIndex, RangeQuery};
+    use crate::testing::temp_dir;
+
+    fn sample(nparts: usize) -> StoreManifest {
+        let rows = 100usize;
+        let metas: Vec<PartitionMeta> = (0..nparts)
+            .map(|i| PartitionMeta {
+                id: i,
+                key_min: (i * rows) as i64 * 10,
+                key_max: ((i + 1) * rows - 1) as i64 * 10,
+                rows,
+                step: Some(10),
+            })
+            .collect();
+        let index = Cias::from_meta(metas.clone()).unwrap();
+        StoreManifest {
+            schema: Schema::stock(),
+            segments: metas
+                .iter()
+                .map(|m| SegmentEntry { file: format!("part-{:05}.oseg", m.id), meta: *m })
+                .collect(),
+            index,
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_file() {
+        let dir = temp_dir("manifest");
+        let m = sample(6);
+        m.save(&dir).unwrap();
+        let back = StoreManifest::load(&dir).unwrap();
+        assert_eq!(back.schema, m.schema);
+        assert_eq!(back.segments, m.segments);
+        let q = RangeQuery { lo: 150, hi: 3500 };
+        assert_eq!(back.index.lookup(q), m.index.lookup(q));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_names_path() {
+        let dir = temp_dir("manifest-miss");
+        let err = StoreManifest::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("manifest.json"), "got: {err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_tampered_documents() {
+        let m = sample(3);
+        let good = m.to_json().unwrap().to_string();
+        // Wrong format marker.
+        let bad = good.replace("oseba-store", "bogus");
+        assert!(StoreManifest::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // Index/segments disagreement (count).
+        let bad = good.replace("\"regular_parts\":3", "\"regular_parts\":2");
+        assert!(StoreManifest::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // A self-consistent snapshot that diverges from the segment list
+        // must also be rejected (it would silently mis-target queries).
+        let bad = good.replace("\"base_key\":0", "\"base_key\":10");
+        let err = StoreManifest::from_json(&Json::parse(&bad).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("disagrees"), "got: {err}");
+        // Hostile numerics are clean errors, never panics.
+        let bad = good.replace("\"rows\":100", "\"rows\":-1");
+        assert!(StoreManifest::from_json(&Json::parse(&bad).unwrap()).is_err());
+        let bad = good.replace("\"regular_parts\":3", "\"regular_parts\":-1");
+        assert!(StoreManifest::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // A segment file must be a bare name — no path escapes.
+        let bad = good.replace("part-00001.oseg", "../part-00001.oseg");
+        assert!(StoreManifest::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // Not JSON at all.
+        assert!(Json::parse("not json").is_err());
+    }
+}

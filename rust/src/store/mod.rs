@@ -1,0 +1,20 @@
+//! Tiered persistent storage (DESIGN.md §8): the layer that takes the
+//! super index past RAM.
+//!
+//! * [`segment`] — the dependency-free `.oseg` binary columnar segment
+//!   format (one partition per file, CRC-32 per section);
+//! * [`manifest`] — the JSON manifest snapshotting schema, segment
+//!   metadata and the super index, so `open` restores lookup in O(index)
+//!   without reading data;
+//! * [`tiered`] — [`TieredStore`]: Hot/Cold partition residency over a
+//!   segment directory, spilling under memory pressure and faulting in
+//!   only the partitions the index targets.
+
+pub mod crc32;
+pub mod manifest;
+pub mod segment;
+pub mod tiered;
+
+pub use manifest::{SegmentEntry, StoreManifest, MANIFEST_FILE};
+pub use segment::{read_segment, write_segment};
+pub use tiered::{Residency, StoreCounters, TieredStore};

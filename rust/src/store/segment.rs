@@ -1,0 +1,302 @@
+//! `.oseg` — the on-disk segment holding one partition, in a
+//! dependency-free binary columnar layout (DESIGN.md §8):
+//!
+//! ```text
+//! [magic "OSEG"][version u32][id u64][rows u64][padded_rows u64][width u32]
+//! [header crc32]
+//! [keys: rows × i64]                [keys crc32]
+//! [column 0: padded_rows × f32]     [column crc32]
+//! ...
+//! [column width-1: ...]             [column crc32]
+//! ```
+//!
+//! All integers and floats are little-endian. Keys are stored unpadded;
+//! value columns are stored padded to the kernel block size so a faulted-in
+//! partition is bit-identical to the one that was spilled (the AOT
+//! static-shape contract, DESIGN.md §3). Every section carries its own
+//! hand-rolled CRC-32 ([`crate::store::crc32`]): a flipped byte anywhere is
+//! rejected at read time with an error naming the file.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::{OsebaError, Result};
+use crate::storage::{Partition, BLOCK_ROWS};
+use crate::store::crc32::{crc32, Crc32};
+
+/// File magic: the first four bytes of every segment.
+pub const MAGIC: [u8; 4] = *b"OSEG";
+/// Current format version.
+pub const VERSION: u32 = 1;
+
+/// Upper bound on row counts accepted from disk — generous (2^40), but
+/// small enough that byte-size arithmetic on untrusted headers can never
+/// overflow. Shared with the manifest's limit.
+pub const MAX_ROWS: usize = 1 << 40;
+/// Upper bound on value-column counts accepted from disk.
+pub const MAX_WIDTH: usize = 1 << 12;
+
+const HEADER_LEN: usize = 4 + 4 + 8 + 8 + 8 + 4;
+
+/// Serialized size in bytes of a partition's segment (header + sections +
+/// per-section CRCs). Used for manifest bookkeeping without re-reading.
+pub fn segment_len(rows: usize, padded_rows: usize, width: usize) -> usize {
+    HEADER_LEN + 4 + (rows * 8 + 4) + width * (padded_rows * 4 + 4)
+}
+
+fn corrupt(path: &Path, detail: impl std::fmt::Display) -> OsebaError {
+    OsebaError::Store(format!("segment '{}': {detail}", path.display()))
+}
+
+/// Serialize one partition into the `.oseg` byte layout.
+pub fn encode_segment(part: &Partition) -> Vec<u8> {
+    let width = part.columns.len();
+    let mut out = Vec::with_capacity(segment_len(part.rows, part.padded_rows, width));
+
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(part.id as u64).to_le_bytes());
+    out.extend_from_slice(&(part.rows as u64).to_le_bytes());
+    out.extend_from_slice(&(part.padded_rows as u64).to_le_bytes());
+    out.extend_from_slice(&(width as u32).to_le_bytes());
+    let hcrc = crc32(&out);
+    out.extend_from_slice(&hcrc.to_le_bytes());
+
+    let mut crc = Crc32::new();
+    for k in &part.keys {
+        let b = k.to_le_bytes();
+        crc.update(&b);
+        out.extend_from_slice(&b);
+    }
+    out.extend_from_slice(&crc.finish().to_le_bytes());
+
+    for col in &part.columns {
+        let mut crc = Crc32::new();
+        for v in col {
+            let b = v.to_le_bytes();
+            crc.update(&b);
+            out.extend_from_slice(&b);
+        }
+        out.extend_from_slice(&crc.finish().to_le_bytes());
+    }
+    out
+}
+
+/// Write a partition to `path`, returning the bytes written.
+pub fn write_segment(path: impl AsRef<Path>, part: &Partition) -> Result<usize> {
+    let path = path.as_ref();
+    let bytes = encode_segment(part);
+    let mut f =
+        std::fs::File::create(path).map_err(|e| OsebaError::io(path, e))?;
+    f.write_all(&bytes).map_err(|e| OsebaError::io(path, e))?;
+    f.flush().map_err(|e| OsebaError::io(path, e))?;
+    Ok(bytes.len())
+}
+
+struct Reader<'a> {
+    path: &'a Path,
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(corrupt(
+                self.path,
+                format!("truncated while reading {what} (need {n} bytes at offset {})", self.pos),
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+}
+
+/// Decode one partition from the `.oseg` byte layout. `path` is only used
+/// to name the file in errors.
+pub fn decode_segment(path: &Path, buf: &[u8]) -> Result<Partition> {
+    let mut r = Reader { path, buf, pos: 0 };
+
+    let magic = r.take(4, "magic")?;
+    if magic != MAGIC {
+        return Err(corrupt(path, "bad magic (not an .oseg segment)"));
+    }
+    let version = r.u32("version")?;
+    if version != VERSION {
+        return Err(corrupt(path, format!("unsupported version {version} (want {VERSION})")));
+    }
+    let id = r.u64("partition id")? as usize;
+    let rows = r.u64("rows")? as usize;
+    let padded_rows = r.u64("padded_rows")? as usize;
+    let width = r.u32("width")? as usize;
+    let stored_hcrc = r.u32("header crc")?;
+    let computed_hcrc = crc32(&buf[..HEADER_LEN]);
+    if stored_hcrc != computed_hcrc {
+        return Err(corrupt(
+            path,
+            format!("header crc mismatch (stored {stored_hcrc:08x}, computed {computed_hcrc:08x})"),
+        ));
+    }
+    // Bound the (CRC-valid but still untrusted) header fields before any
+    // size arithmetic: a crafted header must be a clean error, not an
+    // overflow panic or a wrapped length check.
+    if rows > MAX_ROWS || width > MAX_WIDTH {
+        return Err(corrupt(
+            path,
+            format!("header out of range (rows {rows}, width {width})"),
+        ));
+    }
+    let expect_padded = rows.div_ceil(BLOCK_ROWS).max(1) * BLOCK_ROWS;
+    if padded_rows != expect_padded || rows > padded_rows {
+        return Err(corrupt(
+            path,
+            format!("inconsistent row counts (rows {rows}, padded {padded_rows})"),
+        ));
+    }
+    if buf.len() != segment_len(rows, padded_rows, width) {
+        return Err(corrupt(
+            path,
+            format!(
+                "length mismatch (file {} bytes, layout needs {})",
+                buf.len(),
+                segment_len(rows, padded_rows, width)
+            ),
+        ));
+    }
+
+    let keys_bytes = r.take(rows * 8, "keys")?;
+    let stored_kcrc = r.u32("keys crc")?;
+    let computed_kcrc = crc32(keys_bytes);
+    if stored_kcrc != computed_kcrc {
+        return Err(corrupt(
+            path,
+            format!("keys crc mismatch (stored {stored_kcrc:08x}, computed {computed_kcrc:08x})"),
+        ));
+    }
+    let mut keys = Vec::with_capacity(rows);
+    for c in keys_bytes.chunks_exact(8) {
+        keys.push(i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]));
+    }
+    if keys.windows(2).any(|w| w[0] > w[1]) {
+        return Err(corrupt(path, "keys not sorted"));
+    }
+
+    let mut columns = Vec::with_capacity(width);
+    for ci in 0..width {
+        let col_bytes = r.take(padded_rows * 4, "column data")?;
+        let stored = r.u32("column crc")?;
+        let computed = crc32(col_bytes);
+        if stored != computed {
+            return Err(corrupt(
+                path,
+                format!("column {ci} crc mismatch (stored {stored:08x}, computed {computed:08x})"),
+            ));
+        }
+        let mut col = Vec::with_capacity(padded_rows);
+        for c in col_bytes.chunks_exact(4) {
+            col.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        columns.push(col);
+    }
+
+    Ok(Partition { id, keys, columns, rows, padded_rows })
+}
+
+/// Read a partition back from `path`, verifying every section CRC.
+pub fn read_segment(path: impl AsRef<Path>) -> Result<Partition> {
+    let path = path.as_ref();
+    let buf = std::fs::read(path).map_err(|e| OsebaError::io(path, e))?;
+    decode_segment(path, &buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{partition_batch_uniform, BatchBuilder, Schema};
+    use crate::testing::temp_dir;
+    use std::sync::Arc;
+
+    fn parts(rows: usize, per: usize) -> Vec<Arc<Partition>> {
+        let mut b = BatchBuilder::new(Schema::climate());
+        for i in 0..rows {
+            b.push(
+                i as i64 * 3600,
+                &[i as f32 * 0.5, 80.0 - i as f32 * 0.01, 3.0, 180.0],
+            );
+        }
+        partition_batch_uniform(&b.finish().unwrap(), per).unwrap()
+    }
+
+    #[test]
+    fn roundtrips_bit_for_bit() {
+        let dir = temp_dir("seg-rt");
+        for (i, p) in parts(10_000, 4096).iter().enumerate() {
+            let path = dir.join(format!("p{i}.oseg"));
+            let written = write_segment(&path, p).unwrap();
+            assert_eq!(written, segment_len(p.rows, p.padded_rows, p.columns.len()));
+            let back = read_segment(&path).unwrap();
+            assert_eq!(back.id, p.id);
+            assert_eq!(back.rows, p.rows);
+            assert_eq!(back.padded_rows, p.padded_rows);
+            assert_eq!(back.keys, p.keys);
+            for (a, b) in back.columns.iter().zip(&p.columns) {
+                assert_eq!(
+                    a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                );
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn every_flipped_byte_region_is_caught() {
+        let dir = temp_dir("seg-flip");
+        let p = &parts(100, 100)[0];
+        let path = dir.join("p.oseg");
+        write_segment(&path, p).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        // One offset in each section: header, keys, a value column.
+        for &off in &[5usize, HEADER_LEN + 4 + 11, clean.len() - 9] {
+            let mut bad = clean.clone();
+            bad[off] ^= 0x40;
+            std::fs::write(&path, &bad).unwrap();
+            let err = read_segment(&path).unwrap_err();
+            let msg = err.to_string();
+            assert!(
+                msg.contains("p.oseg"),
+                "error must name the file, got: {msg}"
+            );
+            assert!(matches!(err, OsebaError::Store(_)), "got: {err:?}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncation_and_bad_magic() {
+        let dir = temp_dir("seg-trunc");
+        let p = &parts(50, 50)[0];
+        let path = dir.join("p.oseg");
+        write_segment(&path, p).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &clean[..clean.len() / 2]).unwrap();
+        assert!(read_segment(&path).is_err());
+        std::fs::write(&path, b"NOPE").unwrap();
+        assert!(read_segment(&path).is_err());
+        let missing = dir.join("missing.oseg");
+        let err = read_segment(&missing).unwrap_err();
+        assert!(err.to_string().contains("missing.oseg"), "got: {err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,697 @@
+//! `TieredStore` — Hot/Cold residency for a dataset's partitions.
+//!
+//! The store owns every partition of one dataset. A **Hot** partition is
+//! memory-resident (its bytes charged to the shared [`MemoryTracker`]); a
+//! **Cold** partition lives only as an `.oseg` segment in the store
+//! directory. Under memory pressure the least-recently-used hot partition
+//! is *spilled* (written once, then dropped) instead of the allocation
+//! erroring; a lookup that targets a cold partition *faults it in*
+//! (CRC-verified read, possibly evicting other partitions to make room).
+//!
+//! Because the super index ([`Cias`]) is pure metadata, index lookups never
+//! touch residency: only the partitions a query actually targets are
+//! faulted, which is the paper's selectivity argument extended past RAM —
+//! bytes read from disk scale with the selection, not the dataset.
+//!
+//! One coarse mutex guards the slot table; segment I/O happens under it.
+//! Fault/evict traffic is metadata-rate (per partition, not per row), so
+//! the simple lock is the right trade for this engine.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::engine::memory::MemoryTracker;
+use crate::error::{OsebaError, Result};
+use crate::index::builder::detect_step;
+use crate::index::{Cias, PartitionMeta};
+use crate::storage::{Partition, Schema, BLOCK_ROWS};
+use crate::store::manifest::{SegmentEntry, StoreManifest};
+use crate::store::segment::{read_segment, segment_len, write_segment};
+
+/// Where a partition currently lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Residency {
+    /// Memory-resident (bytes charged to the tracker).
+    Hot,
+    /// On disk only (an `.oseg` segment).
+    Cold,
+}
+
+/// Monotonic fault/evict/I/O counters (see [`TieredStore::counters`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreCounters {
+    /// Cold partitions faulted into memory.
+    pub faults: usize,
+    /// Hot partitions evicted (spilled or dropped) to reclaim memory.
+    pub evictions: usize,
+    /// Segment bytes read from disk by faults.
+    pub segment_bytes_read: usize,
+    /// Segment bytes written by spills and saves.
+    pub segment_bytes_written: usize,
+}
+
+impl StoreCounters {
+    /// Counter deltas since an earlier snapshot.
+    pub fn since(&self, earlier: &StoreCounters) -> StoreCounters {
+        StoreCounters {
+            faults: self.faults - earlier.faults,
+            evictions: self.evictions - earlier.evictions,
+            segment_bytes_read: self.segment_bytes_read - earlier.segment_bytes_read,
+            segment_bytes_written: self.segment_bytes_written - earlier.segment_bytes_written,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Slot {
+    meta: PartitionMeta,
+    /// In-memory footprint (keys + padded columns) when hot.
+    bytes: usize,
+    /// Segment file name relative to the store directory.
+    file: String,
+    /// Whether a current segment for this partition exists on disk.
+    on_disk: bool,
+    resident: Option<Arc<Partition>>,
+    last_touch: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    slots: Vec<Slot>,
+    clock: u64,
+}
+
+/// The tiered partition store. See the module docs.
+#[derive(Debug)]
+pub struct TieredStore {
+    dir: PathBuf,
+    schema: Schema,
+    tracker: Arc<MemoryTracker>,
+    inner: Mutex<Inner>,
+    faults: AtomicUsize,
+    evictions: AtomicUsize,
+    bytes_read: AtomicUsize,
+    bytes_written: AtomicUsize,
+}
+
+fn segment_file(id: usize) -> String {
+    format!("part-{id:05}.oseg")
+}
+
+/// In-memory footprint of a partition with `rows` valid rows. Saturating:
+/// manifest-supplied values must never panic, only fail allocation.
+fn partition_bytes(rows: usize, width: usize) -> usize {
+    let padded = rows.div_ceil(BLOCK_ROWS).max(1).saturating_mul(BLOCK_ROWS);
+    rows.saturating_mul(8)
+        .saturating_add(width.saturating_mul(padded).saturating_mul(4))
+}
+
+impl TieredStore {
+    /// Create an empty store over `dir` (created if missing). Partition
+    /// bytes are charged to `tracker` — share the engine's tracker so the
+    /// store competes with (and relieves) the block manager's budget.
+    ///
+    /// Any manifest left by a previous store in the same directory is
+    /// removed: this store's spills will overwrite the segments, and a
+    /// stale manifest must not let a later `open` serve the new data
+    /// under the old dataset's identity.
+    pub fn create(
+        dir: impl AsRef<Path>,
+        schema: Schema,
+        tracker: Arc<MemoryTracker>,
+    ) -> Result<TieredStore> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).map_err(|e| OsebaError::io(&dir, e))?;
+        let stale = dir.join(crate::store::manifest::MANIFEST_FILE);
+        if stale.exists() {
+            std::fs::remove_file(&stale).map_err(|e| OsebaError::io(&stale, e))?;
+        }
+        Ok(TieredStore {
+            dir,
+            schema,
+            tracker,
+            inner: Mutex::new(Inner::default()),
+            faults: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+            bytes_read: AtomicUsize::new(0),
+            bytes_written: AtomicUsize::new(0),
+        })
+    }
+
+    /// Open a saved store: parse + validate the manifest and restore the
+    /// super index from its snapshot. **O(index size)** — no segment is
+    /// read; every partition starts Cold and is faulted in on demand.
+    pub fn open(
+        dir: impl AsRef<Path>,
+        tracker: Arc<MemoryTracker>,
+    ) -> Result<(TieredStore, Cias)> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = StoreManifest::load(&dir)?;
+        let width = manifest.schema.width();
+        let slots = manifest
+            .segments
+            .iter()
+            .map(|e| Slot {
+                meta: e.meta,
+                bytes: partition_bytes(e.meta.rows, width),
+                file: e.file.clone(),
+                on_disk: true,
+                resident: None,
+                last_touch: 0,
+            })
+            .collect();
+        let store = TieredStore {
+            dir,
+            schema: manifest.schema,
+            tracker,
+            inner: Mutex::new(Inner { slots, clock: 0 }),
+            faults: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+            bytes_read: AtomicUsize::new(0),
+            bytes_written: AtomicUsize::new(0),
+        };
+        Ok((store, manifest.index))
+    }
+
+    /// Append the next partition. Ids must be contiguous and key ranges
+    /// ordered/non-overlapping (the index invariant). The partition stays
+    /// Hot when the tracker has room — evicting colder partitions if
+    /// needed — and is spilled straight to its segment when even a full
+    /// eviction cannot fit it (partition larger than the whole budget).
+    /// Returns the metadata extracted for the partition, so callers
+    /// maintaining their own index (the spilling ingestor) need not
+    /// rescan the keys.
+    pub fn insert(&self, part: Arc<Partition>) -> Result<PartitionMeta> {
+        if part.columns.len() != self.schema.width() {
+            return Err(OsebaError::Schema(format!(
+                "partition has {} columns, store schema {}",
+                part.columns.len(),
+                self.schema.width()
+            )));
+        }
+        let (Some(key_min), Some(key_max)) = (part.key_min(), part.key_max()) else {
+            return Err(OsebaError::Schema("cannot store an empty partition".into()));
+        };
+
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.slots.len();
+        if part.id != id {
+            return Err(OsebaError::Store(format!(
+                "insert out of order: partition id {} (expected {id})",
+                part.id
+            )));
+        }
+        if let Some(last) = inner.slots.last() {
+            if key_min <= last.meta.key_max {
+                return Err(OsebaError::Index(format!(
+                    "partition {id} overlaps: key_min {key_min} <= previous key_max {}",
+                    last.meta.key_max
+                )));
+            }
+        }
+        let meta = PartitionMeta {
+            id,
+            key_min,
+            key_max,
+            rows: part.rows,
+            step: detect_step(&part.keys),
+        };
+        let bytes = part.bytes();
+        let file = segment_file(id);
+
+        let mut slot = Slot {
+            meta,
+            bytes,
+            file,
+            on_disk: false,
+            resident: None,
+            last_touch: 0,
+        };
+        match self.allocate_evicting(&mut inner, bytes, usize::MAX) {
+            Ok(()) => {
+                inner.clock += 1;
+                slot.last_touch = inner.clock;
+                slot.resident = Some(part);
+            }
+            Err(OsebaError::OutOfMemory { .. }) => {
+                // Nothing left to evict: the partition itself exceeds the
+                // remaining budget. Spill it directly — ingestion proceeds
+                // instead of erroring.
+                let path = self.dir.join(&slot.file);
+                let written = write_segment(&path, &part)?;
+                self.bytes_written.fetch_add(written, Ordering::Relaxed);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                slot.on_disk = true;
+            }
+            Err(e) => return Err(e),
+        }
+        inner.slots.push(slot);
+        Ok(meta)
+    }
+
+    /// Fetch partition `id`, faulting it in from its segment if Cold.
+    /// The returned handle pins the data for the caller regardless of
+    /// later evictions (evicting only drops the store's reference).
+    pub fn fetch(&self, id: usize) -> Result<Arc<Partition>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let now = inner.clock;
+        let nslots = inner.slots.len();
+        {
+            let slot = inner.slots.get_mut(id).ok_or_else(|| {
+                OsebaError::Store(format!("unknown partition {id} (store has {nslots})"))
+            })?;
+            if let Some(p) = &slot.resident {
+                slot.last_touch = now;
+                return Ok(Arc::clone(p));
+            }
+        }
+
+        // Cold: read + verify the segment, then make room and pin it.
+        let path = self.dir.join(&inner.slots[id].file);
+        let part = read_segment(&path)?;
+        let expect = inner.slots[id].meta;
+        if part.id != id
+            || part.rows != expect.rows
+            || part.columns.len() != self.schema.width()
+        {
+            return Err(OsebaError::Store(format!(
+                "segment '{}' disagrees with manifest (id {} rows {} width {}, \
+                 expected id {id} rows {} width {})",
+                path.display(),
+                part.id,
+                part.rows,
+                part.columns.len(),
+                expect.rows,
+                self.schema.width()
+            )));
+        }
+        let bytes = part.bytes();
+        self.allocate_evicting(&mut inner, bytes, id)?;
+        let arc = Arc::new(part);
+        let slot = &mut inner.slots[id];
+        slot.resident = Some(Arc::clone(&arc));
+        slot.bytes = bytes;
+        slot.last_touch = now;
+        self.faults.fetch_add(1, Ordering::Relaxed);
+        self.bytes_read.fetch_add(
+            segment_len(arc.rows, arc.padded_rows, arc.columns.len()),
+            Ordering::Relaxed,
+        );
+        Ok(arc)
+    }
+
+    /// Charge `bytes` to the tracker, spilling LRU hot partitions (never
+    /// slot `exclude`) until it fits. Fails with the tracker's
+    /// `OutOfMemory` once nothing evictable remains.
+    fn allocate_evicting(&self, inner: &mut Inner, bytes: usize, exclude: usize) -> Result<()> {
+        // A request larger than the whole budget can never fit: fail now
+        // instead of pointlessly spilling the entire hot set first.
+        if let Some(budget) = self.tracker.budget() {
+            if bytes > budget {
+                return Err(OsebaError::OutOfMemory { requested: bytes, budget });
+            }
+        }
+        loop {
+            match self.tracker.allocate(bytes) {
+                Ok(()) => return Ok(()),
+                Err(oom @ OsebaError::OutOfMemory { .. }) => {
+                    if self.spill_lru(inner, exclude)?.is_none() {
+                        return Err(oom);
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Spill the least-recently-used hot partition (skipping `exclude`).
+    /// Returns the bytes freed, or `None` when nothing hot is left.
+    fn spill_lru(&self, inner: &mut Inner, exclude: usize) -> Result<Option<usize>> {
+        let victim = inner
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| *i != exclude && s.resident.is_some())
+            .min_by_key(|(_, s)| s.last_touch)
+            .map(|(i, _)| i);
+        match victim {
+            Some(vi) => {
+                let bytes = inner.slots[vi].bytes;
+                self.spill_slot(inner, vi)?;
+                Ok(Some(bytes))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Write slot `vi`'s segment if none exists yet (immutable data: a
+    /// segment, once written, stays current forever).
+    fn ensure_on_disk(&self, inner: &mut Inner, vi: usize) -> Result<()> {
+        if inner.slots[vi].on_disk {
+            return Ok(());
+        }
+        let path = self.dir.join(&inner.slots[vi].file);
+        let part =
+            Arc::clone(inner.slots[vi].resident.as_ref().expect("hot slot has data"));
+        let written = write_segment(&path, &part)?;
+        self.bytes_written.fetch_add(written, Ordering::Relaxed);
+        inner.slots[vi].on_disk = true;
+        Ok(())
+    }
+
+    /// Write slot `vi`'s segment if it has none, then drop the resident
+    /// copy and credit the tracker.
+    fn spill_slot(&self, inner: &mut Inner, vi: usize) -> Result<()> {
+        self.ensure_on_disk(inner, vi)?;
+        let slot = &mut inner.slots[vi];
+        slot.resident = None;
+        self.tracker.release(slot.bytes);
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Spill LRU hot partitions until at least `needed` bytes are freed
+    /// (or nothing hot remains). Returns the bytes actually freed — the
+    /// block manager's memory-pressure hook.
+    pub fn shrink(&self, needed: usize) -> Result<usize> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut freed = 0usize;
+        while freed < needed {
+            match self.spill_lru(&mut inner, usize::MAX)? {
+                Some(bytes) => freed += bytes,
+                None => break,
+            }
+        }
+        Ok(freed)
+    }
+
+    /// Persist the store: write segments for any hot-only partitions and
+    /// write the manifest (schema + segment metadata + super-index
+    /// snapshot). Hot partitions stay hot — `save` is a checkpoint, not an
+    /// eviction.
+    pub fn save(&self) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.slots.is_empty() {
+            return Err(OsebaError::Store(format!(
+                "store '{}' has no partitions to save",
+                self.dir.display()
+            )));
+        }
+        for vi in 0..inner.slots.len() {
+            self.ensure_on_disk(&mut inner, vi)?;
+        }
+        let segments = inner
+            .slots
+            .iter()
+            .map(|s| SegmentEntry { file: s.file.clone(), meta: s.meta })
+            .collect();
+        StoreManifest::for_segments(self.schema.clone(), segments)?.save(&self.dir)
+    }
+
+    /// Drop every resident partition and credit the tracker — the
+    /// unpersist path. Segments already on disk are untouched; hot-only
+    /// data is discarded (unpersist means discard).
+    pub fn release_resident(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        for slot in &mut inner.slots {
+            if slot.resident.take().is_some() {
+                self.tracker.release(slot.bytes);
+            }
+        }
+    }
+
+    /// Build the super index over the current partition set — pure
+    /// metadata, no residency change.
+    pub fn build_cias(&self) -> Result<Cias> {
+        Cias::from_meta(self.metas())
+    }
+
+    /// Per-partition metadata (also the §III-A table-index rows).
+    pub fn metas(&self) -> Vec<PartitionMeta> {
+        self.inner.lock().unwrap().slots.iter().map(|s| s.meta).collect()
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.inner.lock().unwrap().slots.len()
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.inner.lock().unwrap().slots.iter().map(|s| s.meta.rows).sum()
+    }
+
+    /// In-memory footprint of the full dataset if everything were Hot.
+    pub fn total_bytes(&self) -> usize {
+        self.inner.lock().unwrap().slots.iter().map(|s| s.bytes).sum()
+    }
+
+    /// Bytes currently Hot (charged to the tracker by this store).
+    pub fn resident_bytes(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .slots
+            .iter()
+            .filter(|s| s.resident.is_some())
+            .map(|s| s.bytes)
+            .sum()
+    }
+
+    pub fn key_min(&self) -> Option<i64> {
+        self.inner.lock().unwrap().slots.first().map(|s| s.meta.key_min)
+    }
+
+    pub fn key_max(&self) -> Option<i64> {
+        self.inner.lock().unwrap().slots.last().map(|s| s.meta.key_max)
+    }
+
+    pub fn residency(&self, id: usize) -> Option<Residency> {
+        self.inner.lock().unwrap().slots.get(id).map(|s| {
+            if s.resident.is_some() {
+                Residency::Hot
+            } else {
+                Residency::Cold
+            }
+        })
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn tracker(&self) -> &Arc<MemoryTracker> {
+        &self.tracker
+    }
+
+    pub fn counters(&self) -> StoreCounters {
+        StoreCounters {
+            faults: self.faults.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            segment_bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            segment_bytes_written: self.bytes_written.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{partition_batch_uniform, BatchBuilder};
+    use crate::testing::temp_dir;
+
+    fn parts(rows: usize, per: usize) -> Vec<Arc<Partition>> {
+        let mut b = BatchBuilder::new(Schema::stock());
+        for i in 0..rows {
+            b.push(i as i64 * 10, &[i as f32, (i * 2) as f32]);
+        }
+        partition_batch_uniform(&b.finish().unwrap(), per).unwrap()
+    }
+
+    fn fill(store: &TieredStore, ps: &[Arc<Partition>]) {
+        for p in ps {
+            store.insert(Arc::clone(p)).unwrap();
+        }
+    }
+
+    #[test]
+    fn unbounded_store_stays_hot() {
+        let dir = temp_dir("ts-hot");
+        let store =
+            TieredStore::create(&dir, Schema::stock(), MemoryTracker::unbounded()).unwrap();
+        let ps = parts(10_000, 4096);
+        fill(&store, &ps);
+        assert_eq!(store.num_partitions(), 3);
+        assert_eq!(store.total_rows(), 10_000);
+        for i in 0..3 {
+            assert_eq!(store.residency(i), Some(Residency::Hot));
+        }
+        assert_eq!(store.counters(), StoreCounters::default());
+        assert_eq!(store.resident_bytes(), store.total_bytes());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn pressure_spills_lru_instead_of_erroring() {
+        let dir = temp_dir("ts-spill");
+        let ps = parts(20_000, 4096); // 5 partitions
+        let one = ps[0].bytes();
+        // Room for ~2 partitions.
+        let tracker = MemoryTracker::with_budget(2 * one + one / 2);
+        let store = TieredStore::create(&dir, Schema::stock(), tracker).unwrap();
+        fill(&store, &ps);
+        assert_eq!(store.num_partitions(), 5);
+        assert!(store.resident_bytes() <= 2 * one + one / 2);
+        let c = store.counters();
+        assert!(c.evictions >= 3, "evictions: {}", c.evictions);
+        assert!(c.segment_bytes_written > 0);
+        // Oldest partitions went cold first.
+        assert_eq!(store.residency(0), Some(Residency::Cold));
+        assert_eq!(store.residency(4), Some(Residency::Hot));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fault_in_restores_identical_data_and_counts() {
+        let dir = temp_dir("ts-fault");
+        let ps = parts(20_000, 4096);
+        let one = ps[0].bytes();
+        let tracker = MemoryTracker::with_budget(2 * one + one / 2);
+        let store = TieredStore::create(&dir, Schema::stock(), tracker).unwrap();
+        fill(&store, &ps);
+        assert_eq!(store.residency(0), Some(Residency::Cold));
+
+        let before = store.counters();
+        let p0 = store.fetch(0).unwrap();
+        assert_eq!(p0.keys, ps[0].keys);
+        assert_eq!(p0.columns, ps[0].columns);
+        let d = store.counters().since(&before);
+        assert_eq!(d.faults, 1);
+        assert!(d.segment_bytes_read > 0);
+        // Faulting 0 in must have evicted someone to make room.
+        assert!(d.evictions >= 1);
+        assert_eq!(store.residency(0), Some(Residency::Hot));
+
+        // A hot fetch is free.
+        let before = store.counters();
+        let again = store.fetch(0).unwrap();
+        assert!(Arc::ptr_eq(&p0, &again));
+        assert_eq!(store.counters().since(&before), StoreCounters::default());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn partition_larger_than_budget_spills_directly() {
+        let dir = temp_dir("ts-big");
+        let ps = parts(5_000, 4096);
+        let tracker = MemoryTracker::with_budget(16);
+        let store = TieredStore::create(&dir, Schema::stock(), tracker).unwrap();
+        fill(&store, &ps); // must not error
+        assert_eq!(store.residency(0), Some(Residency::Cold));
+        assert_eq!(store.resident_bytes(), 0);
+        // ... and fetch of an over-budget partition fails with OutOfMemory.
+        assert!(matches!(
+            store.fetch(0),
+            Err(OsebaError::OutOfMemory { .. })
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn save_open_restores_index_without_reading_segments() {
+        let dir = temp_dir("ts-saveopen");
+        let ps = parts(10_000, 4096);
+        let store =
+            TieredStore::create(&dir, Schema::stock(), MemoryTracker::unbounded()).unwrap();
+        fill(&store, &ps);
+        store.save().unwrap();
+        let original = store.build_cias().unwrap();
+        drop(store);
+
+        let (back, index) =
+            TieredStore::open(&dir, MemoryTracker::unbounded()).unwrap();
+        assert_eq!(back.num_partitions(), 3);
+        assert_eq!(back.total_rows(), 10_000);
+        assert_eq!(back.counters(), StoreCounters::default(), "open reads no data");
+        for i in 0..3 {
+            assert_eq!(back.residency(i), Some(Residency::Cold));
+        }
+        use crate::index::{ContentIndex, RangeQuery};
+        let q = RangeQuery { lo: 500, hi: 60_000 };
+        assert_eq!(index.lookup(q), original.lookup(q));
+
+        // Fetch after open round-trips the data.
+        let p1 = back.fetch(1).unwrap();
+        assert_eq!(p1.keys, ps[1].keys);
+        assert_eq!(back.counters().faults, 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn create_removes_stale_manifest() {
+        let dir = temp_dir("ts-stale");
+        let store =
+            TieredStore::create(&dir, Schema::stock(), MemoryTracker::unbounded()).unwrap();
+        fill(&store, &parts(8_192, 4096));
+        store.save().unwrap();
+        drop(store);
+        // Re-creating a store over the directory invalidates the old
+        // manifest: an open before the new store saves is a clean error,
+        // not stale metadata over overwritten segments.
+        let _fresh =
+            TieredStore::create(&dir, Schema::stock(), MemoryTracker::unbounded()).unwrap();
+        assert!(TieredStore::open(&dir, MemoryTracker::unbounded()).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn insert_rejects_disorder_and_overlap() {
+        let dir = temp_dir("ts-order");
+        let store =
+            TieredStore::create(&dir, Schema::stock(), MemoryTracker::unbounded()).unwrap();
+        let ps = parts(8_192, 4096);
+        store.insert(Arc::clone(&ps[0])).unwrap();
+        // Wrong id.
+        assert!(store.insert(Arc::clone(&ps[0])).is_err());
+        // Overlapping keys (re-id'd copy of partition 0).
+        let dup = Arc::new(Partition {
+            id: 1,
+            ..(*ps[0]).clone()
+        });
+        assert!(store.insert(dup).is_err());
+        // Wrong width.
+        let skinny = Arc::new(Partition {
+            id: 1,
+            keys: vec![i64::MAX - 1],
+            columns: vec![vec![0.0; BLOCK_ROWS]],
+            rows: 1,
+            padded_rows: BLOCK_ROWS,
+        });
+        assert!(store.insert(skinny).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shrink_frees_requested_bytes() {
+        let dir = temp_dir("ts-shrink");
+        let ps = parts(20_000, 4096);
+        let store =
+            TieredStore::create(&dir, Schema::stock(), MemoryTracker::unbounded()).unwrap();
+        fill(&store, &ps);
+        let one = ps[0].bytes();
+        let freed = store.shrink(one + 1).unwrap();
+        assert!(freed >= one + 1, "freed {freed}");
+        assert_eq!(store.residency(0), Some(Residency::Cold));
+        assert_eq!(store.residency(1), Some(Residency::Cold));
+        assert_eq!(store.residency(4), Some(Residency::Hot));
+        // Shrinking more than exists frees what's left, then stops.
+        let rest = store.resident_bytes();
+        assert_eq!(store.shrink(usize::MAX).unwrap(), rest);
+        assert_eq!(store.resident_bytes(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -7,6 +7,24 @@
 
 use crate::util::rng::Xoshiro256;
 
+/// A unique scratch directory for one test: `<tmp>/oseba-<label>-<pid>-<n>`.
+///
+/// Process id alone is not enough — `cargo test` runs tests of one binary
+/// in threads of a single process, so fixed or pid-only names collide
+/// under parallel execution. A process-wide counter makes every call
+/// unique. The directory is created; callers remove it when done.
+pub fn temp_dir(label: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!(
+        "oseba-{label}-{}-{n}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).expect("create test temp dir");
+    dir
+}
+
 /// Property-run configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct Runner {

@@ -126,8 +126,9 @@ fn distance_comparison_two_periods_via_index() {
         lo: year as i64 * 3600,
         hi: (year as i64 + window as i64 - 1) * 3600,
     };
-    let v1 = coord.context().select_slices(&ds, &index.lookup(q1), q1);
-    let v2 = coord.context().select_slices(&ds, &index.lookup(q2), q2);
+    let p1 = coord.context().select_slices(&ds, &index.lookup(q1), q1).unwrap();
+    let p2 = coord.context().select_slices(&ds, &index.lookup(q2), q2).unwrap();
+    let (v1, v2) = (p1.views(), p2.views());
     let an = coord.analyzer();
     let d = an.distance(&v1, &v2, 0).unwrap();
     assert_eq!(d.count as usize, window);
@@ -141,7 +142,8 @@ fn distance_comparison_two_periods_via_index() {
         lo: (year / 2) as i64 * 3600,
         hi: ((year / 2) as i64 + window as i64 - 1) * 3600,
     };
-    let v3 = coord.context().select_slices(&ds, &index.lookup(q3), q3);
+    let p3 = coord.context().select_slices(&ds, &index.lookup(q3), q3).unwrap();
+    let v3 = p3.views();
     let d_opp = an.distance(&v1, &v3, 0).unwrap();
     assert!(
         d_opp.mad > d.mad,
@@ -170,8 +172,8 @@ fn train_test_split_served_by_index_without_scans() {
     let before = coord.context().counters();
     let mut total_rows = 0u64;
     for q in split.train.iter().chain(&split.test).chain(&split.validation) {
-        let views = coord.context().select_slices(&ds, &index.lookup(*q), *q);
-        total_rows += views.iter().map(|v| v.rows() as u64).sum::<u64>();
+        let views = coord.context().select_slices(&ds, &index.lookup(*q), *q).unwrap();
+        total_rows += views.rows() as u64;
     }
     let after = coord.context().counters();
     assert_eq!(total_rows, 50_000, "split covers every row exactly once");
@@ -192,8 +194,9 @@ fn events_analysis_histogram_separates_fraud() {
     let step = 30i64;
     let normal_q = RangeQuery { lo: 0, hi: 19_999 * step };
     let fraud_q = RangeQuery { lo: 20_000 * step, hi: 23_999 * step };
-    let nv = coord.context().select_slices(&ds, &index.lookup(normal_q), normal_q);
-    let fv = coord.context().select_slices(&ds, &index.lookup(fraud_q), fraud_q);
+    let np = coord.context().select_slices(&ds, &index.lookup(normal_q), normal_q).unwrap();
+    let fp = coord.context().select_slices(&ds, &index.lookup(fraud_q), fraud_q).unwrap();
+    let (nv, fv) = (np.views(), fp.views());
     let hn = an.histogram(&nv, dur_col, 0.0, 3600.0).unwrap();
     let hf = an.histogram(&fv, dur_col, 0.0, 3600.0).unwrap();
 

@@ -142,9 +142,12 @@ fn prop_oseba_selects_same_rows_as_filter() {
             let ds = ctx.load(gen_cfg.generate(rows), nparts).unwrap();
             let q = RangeQuery { lo: lo_h * 3600, hi: hi_h * 3600 };
             let index = Cias::build(ds.partitions()).unwrap();
-            let views = ctx.select_slices(&ds, &index.lookup(q), q);
-            let indexed_keys: Vec<i64> =
-                views.iter().flat_map(|v| v.keys().iter().copied()).collect();
+            let views = ctx.select_slices(&ds, &index.lookup(q), q).unwrap();
+            let indexed_keys: Vec<i64> = views
+                .views()
+                .iter()
+                .flat_map(|v| v.keys().iter().copied())
+                .collect();
             let filtered = ctx.filter_range(&ds, q).unwrap();
             let filter_keys: Vec<i64> = filtered
                 .partitions()

@@ -1,0 +1,193 @@
+//! Persistence coverage for the tiered store: a seeded property test that
+//! `save → open → analyze` reproduces the in-memory `PeriodStats`
+//! bit-for-bit, plus corruption tests proving the per-section CRC check
+//! rejects tampered segments with an error naming the file.
+
+use std::sync::Arc;
+
+use oseba::analysis::PeriodStats;
+use oseba::config::{AppConfig, ContextConfig};
+use oseba::coordinator::{Coordinator, IndexKind};
+use oseba::datagen::ClimateGen;
+use oseba::error::OsebaError;
+use oseba::index::{ContentIndex, RangeQuery};
+use oseba::runtime::NativeBackend;
+use oseba::storage::partition_batch_uniform;
+use oseba::store::{StoreManifest, TieredStore};
+use oseba::testing::{gen, temp_dir, Runner};
+
+fn coordinator(memory_budget: Option<usize>) -> Coordinator {
+    let cfg = AppConfig {
+        ctx: ContextConfig { num_workers: 4, memory_budget },
+        cluster_workers: 3,
+        ..Default::default()
+    };
+    Coordinator::new(&cfg, Arc::new(NativeBackend)).unwrap()
+}
+
+fn assert_bit_equal(a: &PeriodStats, b: &PeriodStats, ctx: &str) {
+    assert_eq!(a.count, b.count, "{ctx}: count");
+    assert_eq!(a.max.to_bits(), b.max.to_bits(), "{ctx}: max");
+    assert_eq!(a.min.to_bits(), b.min.to_bits(), "{ctx}: min");
+    assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "{ctx}: mean {} vs {}", a.mean, b.mean);
+    assert_eq!(a.std.to_bits(), b.std.to_bits(), "{ctx}: std {} vs {}", a.std, b.std);
+}
+
+/// Save a generated dataset as a segment store under `dir`.
+fn save_store(dir: &std::path::Path, rows: usize, nparts: usize, seed: u64) {
+    let batch = ClimateGen { seed, ..Default::default() }.generate(rows);
+    let store = TieredStore::create(
+        dir,
+        batch.schema.clone(),
+        oseba::engine::MemoryTracker::unbounded(),
+    )
+    .unwrap();
+    let rows_per = rows.div_ceil(nparts);
+    for part in partition_batch_uniform(&batch, rows_per).unwrap() {
+        store.insert(part).unwrap();
+    }
+    store.save().unwrap();
+}
+
+#[test]
+fn prop_save_open_analyze_is_bit_identical_to_resident() {
+    Runner::new(10, 0x5E6).run(
+        "save → open → analyze == in-memory analyze",
+        |rng| {
+            let rows = gen::usize_in(rng, 500, 6_000);
+            let nparts = gen::usize_in(rng, 1, 12);
+            let (lo_h, hi_h) = gen::range_pair(rng, 0, rows as i64 - 1);
+            // Budget between one partition and the full dataset, so some
+            // cases run fully cold and some fully hot.
+            let budget_parts = gen::usize_in(rng, 1, nparts + 1);
+            (rows, nparts, lo_h, hi_h, budget_parts)
+        },
+        |&(rows, nparts, lo_h, hi_h, budget_parts)| {
+            let q = RangeQuery { lo: lo_h * 3600, hi: hi_h * 3600 };
+            let seed = rows as u64 ^ 0xC11A;
+
+            // In-memory reference.
+            let c = coordinator(None);
+            let ds = c
+                .load(ClimateGen { seed, ..Default::default() }.generate(rows), nparts)
+                .unwrap();
+            let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+            let want = c.analyze_period_oseba(&ds, index.as_ref(), q, 0).unwrap();
+
+            // Persisted round trip under a budget sized in real partition
+            // units (measured, not hand-derived from layout constants).
+            let dir = temp_dir("prop-roundtrip");
+            save_store(&dir, rows, nparts, seed);
+            let one = ds.partitions()[0].bytes();
+            let ct = coordinator(Some(budget_parts * one + one / 2));
+            let (tds, tindex) = ct.open_store(&dir).unwrap();
+            let got = ct.analyze_period_oseba(&tds, tindex.as_ref(), q, 0).unwrap();
+            assert_bit_equal(&got, &want, "tiered vs resident");
+            // The selective query faulted in only targeted partitions.
+            let store = tds.store().unwrap();
+            let targeted = tindex.lookup(q).len();
+            assert!(
+                store.counters().faults <= targeted,
+                "faults {} > targeted {targeted}",
+                store.counters().faults
+            );
+            std::fs::remove_dir_all(&dir).unwrap();
+            true
+        },
+    );
+}
+
+#[test]
+fn corrupted_segment_is_rejected_with_named_file() {
+    let dir = temp_dir("corrupt");
+    save_store(&dir, 4_000, 4, 7);
+
+    // Flip one byte in the middle of one segment's column data.
+    let manifest = StoreManifest::load(&dir).unwrap();
+    let victim = dir.join(&manifest.segments[2].file);
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let off = bytes.len() * 3 / 5;
+    bytes[off] ^= 0x01;
+    std::fs::write(&victim, &bytes).unwrap();
+
+    let c = coordinator(None);
+    let (ds, index) = c.open_store(&dir).unwrap();
+    // Partition 2 holds rows 2000..3000 → keys 2000h..2999h.
+    let bad_q = RangeQuery { lo: 2_100 * 3600, hi: 2_200 * 3600 };
+    let err = c.analyze_period_oseba(&ds, index.as_ref(), bad_q, 0).unwrap_err();
+    let msg = err.to_string();
+    assert!(matches!(err, OsebaError::Store(_)), "got: {err:?}");
+    assert!(
+        msg.contains(&manifest.segments[2].file),
+        "error must name the segment file, got: {msg}"
+    );
+    assert!(msg.contains("crc") || msg.contains("mismatch"), "got: {msg}");
+
+    // Untouched partitions still serve queries.
+    let good_q = RangeQuery { lo: 0, hi: 500 * 3600 };
+    let st = c.analyze_period_oseba(&ds, index.as_ref(), good_q, 0).unwrap();
+    assert_eq!(st.count, 501);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn tampered_manifest_is_rejected() {
+    let dir = temp_dir("bad-manifest");
+    save_store(&dir, 2_000, 2, 3);
+    let path = dir.join(oseba::store::MANIFEST_FILE);
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, text.replace("oseba-store", "bogus")).unwrap();
+    let c = coordinator(None);
+    let err = c.open_store(&dir).unwrap_err();
+    assert!(err.to_string().contains("manifest"), "got: {err}");
+
+    std::fs::write(&path, "{ not json").unwrap();
+    assert!(c.open_store(&dir).is_err());
+
+    std::fs::remove_file(&path).unwrap();
+    let err = c.open_store(&dir).unwrap_err();
+    assert!(err.to_string().contains("manifest.json"), "got: {err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn batch_over_opened_store_matches_resident_batch() {
+    let dir = temp_dir("batch-roundtrip");
+    let rows = 30_000;
+    save_store(&dir, rows, 15, 0x05EBA);
+
+    let c = coordinator(None);
+    let ds = c
+        .load(
+            ClimateGen { seed: 0x05EBA, ..Default::default() }.generate(rows),
+            15,
+        )
+        .unwrap();
+    let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+    let h = 3600i64;
+    let qs = vec![
+        RangeQuery { lo: 0, hi: 4_000 * h },
+        RangeQuery { lo: 2_000 * h, hi: 9_000 * h },
+        RangeQuery { lo: 20_000 * h, hi: 22_000 * h },
+    ];
+    let want = c.analyze_batch(&ds, index.as_ref(), &qs, 1).unwrap();
+
+    // Budget ~2 partitions: the batch must fault selectively, not reload.
+    let one = ds.partitions()[0].bytes();
+    let ct = coordinator(Some(2 * one + one / 2));
+    let (tds, tindex) = ct.open_store(&dir).unwrap();
+    let (got, report) =
+        ct.analyze_batch_with_report(&tds, tindex.as_ref(), &qs, 1).unwrap();
+    for (g, e) in got.iter().zip(&want) {
+        assert_bit_equal(g, e, "batch");
+    }
+    assert!(report.faults > 0);
+    let store = tds.store().unwrap();
+    assert!(
+        store.counters().segment_bytes_read < store.total_bytes(),
+        "selective batch must not read the whole dataset ({} of {})",
+        store.counters().segment_bytes_read,
+        store.total_bytes()
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
