@@ -15,10 +15,15 @@ use crate::util::stats::{DistancePartial, Moments};
 /// ("computing the max, mean and standard deviation", §IV-A).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PeriodStats {
+    /// Selected rows.
     pub count: u64,
+    /// Largest selected value.
     pub max: f32,
+    /// Smallest selected value.
     pub min: f32,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
 }
 
@@ -41,9 +46,13 @@ impl PeriodStats {
 /// Finalized distance-comparison output.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DistanceResult {
+    /// Compared pairs.
     pub count: u64,
+    /// Manhattan (sum of absolute differences) distance.
     pub l1: f64,
+    /// Euclidean distance.
     pub l2: f64,
+    /// Chebyshev (max absolute difference) distance.
     pub linf: f32,
     /// Mean absolute difference.
     pub mad: f64,
@@ -56,10 +65,12 @@ pub struct Analyzer {
 }
 
 impl Analyzer {
+    /// An analyzer dispatching to `backend`.
     pub fn new(backend: Arc<dyn AnalysisBackend>) -> Analyzer {
         Analyzer { backend }
     }
 
+    /// The backend's implementation name ("native" / "hlo").
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }

@@ -20,14 +20,18 @@ pub struct SplitSpec {
     pub train_frac: f64,
     /// Fraction assigned to test (validation gets the rest).
     pub test_frac: f64,
+    /// RNG seed for the unit shuffle.
     pub seed: u64,
 }
 
 /// The three query lists.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Split {
+    /// Training-period queries, sorted by key.
     pub train: Vec<RangeQuery>,
+    /// Test-period queries, sorted by key.
     pub test: Vec<RangeQuery>,
+    /// Validation-period queries, sorted by key.
     pub validation: Vec<RangeQuery>,
 }
 

@@ -10,7 +10,9 @@ use crate::util::stats::Summary;
 /// Harness configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchConfig {
+    /// Untimed warmup iterations before measuring.
     pub warmup_iters: usize,
+    /// Timed iterations contributing samples.
     pub iters: usize,
 }
 
@@ -42,7 +44,9 @@ impl BenchConfig {
 /// One benchmark's timing result.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark label (table row name).
     pub name: String,
+    /// Timing summary over the measured iterations.
     pub summary: Summary,
 }
 

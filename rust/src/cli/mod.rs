@@ -9,38 +9,50 @@ use crate::error::{OsebaError, Result};
 /// A declared flag.
 #[derive(Clone, Debug)]
 pub struct FlagSpec {
+    /// Flag name (without the leading `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
     /// Boolean flags take no value.
     pub boolean: bool,
+    /// Default value applied when the flag is absent.
     pub default: Option<&'static str>,
 }
 
 /// A declared subcommand.
 #[derive(Clone, Debug)]
 pub struct CommandSpec {
+    /// Subcommand name.
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Flags the subcommand accepts.
     pub flags: Vec<FlagSpec>,
 }
 
 /// Parsed invocation.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Parsed {
+    /// The matched subcommand.
     pub command: String,
+    /// Flag values (defaults merged in).
     pub flags: BTreeMap<String, String>,
+    /// Non-flag arguments, in order.
     pub positionals: Vec<String>,
 }
 
 impl Parsed {
+    /// Raw flag value, if present (or defaulted).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// Whether a boolean flag was passed.
     pub fn get_bool(&self, name: &str) -> bool {
         matches!(self.get(name), Some("true"))
     }
 
+    /// Parse a flag value into `T`; `None` when the flag is absent.
     pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
         match self.get(name) {
             None => Ok(None),
@@ -55,16 +67,21 @@ impl Parsed {
 /// The CLI definition.
 #[derive(Clone, Debug, Default)]
 pub struct Cli {
+    /// Program name shown in usage text.
     pub program: &'static str,
+    /// One-line program description.
     pub about: &'static str,
+    /// Declared subcommands.
     pub commands: Vec<CommandSpec>,
 }
 
 impl Cli {
+    /// Start a CLI definition.
     pub fn new(program: &'static str, about: &'static str) -> Cli {
         Cli { program, about, commands: Vec::new() }
     }
 
+    /// Declare a subcommand (builder style).
     pub fn command(mut self, name: &'static str, help: &'static str, flags: Vec<FlagSpec>) -> Cli {
         self.commands.push(CommandSpec { name, help, flags });
         self
@@ -157,6 +174,7 @@ pub fn flag(name: &'static str, help: &'static str, default: Option<&'static str
     FlagSpec { name, help, boolean: false, default }
 }
 
+/// A boolean (valueless) flag spec.
 pub fn bool_flag(name: &'static str, help: &'static str) -> FlagSpec {
     FlagSpec { name, help, boolean: true, default: None }
 }

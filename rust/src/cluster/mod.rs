@@ -38,6 +38,7 @@ pub struct Cluster {
     /// partition id → worker id.
     placement: Mutex<Vec<usize>>,
     alive: Vec<AtomicBool>,
+    /// The per-message network cost model tasks pay on dispatch/return.
     pub net: NetworkModel,
 }
 
@@ -55,14 +56,17 @@ impl Cluster {
         })
     }
 
+    /// Total registered workers (alive or not).
     pub fn num_workers(&self) -> usize {
         self.num_workers
     }
 
+    /// Workers currently alive.
     pub fn num_alive(&self) -> usize {
         self.alive.iter().filter(|a| a.load(Ordering::SeqCst)).count()
     }
 
+    /// Whether worker `w` is alive.
     pub fn is_alive(&self, w: usize) -> bool {
         self.alive.get(w).is_some_and(|a| a.load(Ordering::SeqCst))
     }

@@ -48,6 +48,7 @@ impl std::str::FromStr for BackendKind {
 /// Full experiment/driver configuration (CLI + config file).
 #[derive(Clone, Debug)]
 pub struct AppConfig {
+    /// Engine-level (workers / memory budget) configuration.
     pub ctx: ContextConfig,
     /// Raw dataset size in bytes (the paper's ~480 MB default, scaled).
     pub dataset_bytes: usize,

@@ -11,22 +11,27 @@ pub struct ConfigMap {
 }
 
 impl ConfigMap {
+    /// Iterate entries in file order.
     pub fn iter(&self) -> impl Iterator<Item = &(String, String)> {
         self.entries.iter()
     }
 
+    /// Last value for `key` (later duplicates win).
     pub fn get(&self, key: &str) -> Option<&str> {
         self.entries.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
     }
 
+    /// Append an entry (CLI `--set` overrides).
     pub fn insert(&mut self, key: impl Into<String>, value: impl Into<String>) {
         self.entries.push((key.into(), value.into()));
     }
 
+    /// Number of entries (duplicates counted).
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether the map holds no entries.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

@@ -14,12 +14,12 @@ use crate::analysis::ops::slice_moments;
 use crate::analysis::{Analyzer, PeriodStats};
 use crate::cluster::{Cluster, NetworkModel};
 use crate::config::AppConfig;
-use crate::engine::{Dataset, OsebaContext};
+use crate::engine::{Dataset, EpochSnapshot, LiveConfig, LiveDataset, OsebaContext};
 use crate::error::{OsebaError, Result};
 use crate::index::{Cias, ContentIndex, RangeQuery, TableIndex};
 use crate::metrics::{BatchReport, Timer};
 use crate::runtime::backend::AnalysisBackend;
-use crate::storage::{Partition, RecordBatch};
+use crate::storage::{Partition, RecordBatch, Schema};
 use crate::util::stats::Moments;
 
 /// The driver/leader of the system.
@@ -50,14 +50,17 @@ impl Coordinator {
         })
     }
 
+    /// The engine context this coordinator drives.
     pub fn context(&self) -> &OsebaContext {
         &self.ctx
     }
 
+    /// The analysis engine (backend + block decomposition).
     pub fn analyzer(&self) -> &Analyzer {
         &self.analyzer
     }
 
+    /// The simulated cluster (placement, liveness, network model).
     pub fn cluster(&self) -> &Cluster {
         &self.cluster
     }
@@ -93,6 +96,69 @@ impl Coordinator {
         let (ds, index) = self.ctx.open_tiered(dir)?;
         self.cluster.ensure_partitions(ds.num_partitions());
         Ok((ds, Box::new(index)))
+    }
+
+    /// Create a **live** (append-while-serving) dataset on this
+    /// coordinator's engine. Writers stream chunks in (directly or via
+    /// [`crate::ingest::LiveIngestor`]); queries go through the
+    /// snapshot-pinned [`Self::analyze_live`] / [`Self::analyze_live_batch`].
+    pub fn create_live(&self, schema: Schema, cfg: LiveConfig) -> Result<Arc<LiveDataset>> {
+        self.ctx.create_live(schema, cfg)
+    }
+
+    /// [`Self::create_live`] with sealed-partition spill to a
+    /// [`crate::store::TieredStore`] rooted at `dir`.
+    pub fn create_live_spilling(
+        &self,
+        schema: Schema,
+        cfg: LiveConfig,
+        dir: impl AsRef<std::path::Path>,
+    ) -> Result<Arc<LiveDataset>> {
+        self.ctx.create_live_spilling(schema, cfg, dir)
+    }
+
+    /// Pin the live dataset's current epoch and register its partitions
+    /// with the cluster placement — every live analysis goes through here
+    /// so a plan can never see a half-published partition.
+    pub fn snapshot_live(&self, live: &LiveDataset) -> EpochSnapshot {
+        let snap = live.snapshot();
+        self.cluster.ensure_partitions(snap.num_partitions());
+        snap
+    }
+
+    /// **Live Oseba phase**: snapshot-pinned single-query analysis.
+    /// Returns the stats plus the epoch they were computed at.
+    pub fn analyze_live(
+        &self,
+        live: &LiveDataset,
+        q: RangeQuery,
+        column: usize,
+    ) -> Result<(PeriodStats, u64)> {
+        let snap = self.snapshot_live(live);
+        let index = snap.index().ok_or_else(|| {
+            OsebaError::InvalidRange("live dataset has no sealed partitions yet".into())
+        })?;
+        let stats = self.analyze_period_oseba(snap.dataset(), index, q, column)?;
+        Ok((stats, snap.epoch()))
+    }
+
+    /// **Live batch phase**: one epoch snapshot serves the whole planned
+    /// batch, so every merged range, segment and demuxed result refers to
+    /// the same immutable partition set even while appends continue.
+    /// Returns per-query stats, the batch report, and the pinned epoch.
+    pub fn analyze_live_batch(
+        &self,
+        live: &LiveDataset,
+        queries: &[RangeQuery],
+        column: usize,
+    ) -> Result<(Vec<PeriodStats>, BatchReport, u64)> {
+        let snap = self.snapshot_live(live);
+        let index = snap.index().ok_or_else(|| {
+            OsebaError::InvalidRange("live dataset has no sealed partitions yet".into())
+        })?;
+        let (stats, report) =
+            self.analyze_batch_with_report(snap.dataset(), index, queries, column)?;
+        Ok((stats, report, snap.epoch()))
     }
 
     /// Build the configured index over a dataset. For a tiered dataset the
@@ -625,6 +691,54 @@ mod tests {
         assert_stats_close(&single, &want[0], "tiered single");
         ct.context().unpersist(&tds);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn live_analysis_matches_batch_loaded() {
+        let c = coord(3);
+        let ds = c.load(ClimateGen::default().generate(20_000), 10).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+
+        // Same data streamed into a live dataset with the same layout.
+        let live = c
+            .create_live(
+                Schema::climate(),
+                LiveConfig { rows_per_partition: 2_000, max_asl: 8 },
+            )
+            .unwrap();
+        for chunk in crate::ingest::chunk_batch(&ClimateGen::default().generate(20_000), 777)
+        {
+            live.append(chunk).unwrap();
+        }
+        live.flush().unwrap();
+
+        let q = q_hours(1_000, 15_000);
+        let want = c.analyze_period_oseba(&ds, index.as_ref(), q, 0).unwrap();
+        let (got, epoch) = c.analyze_live(&live, q, 0).unwrap();
+        assert!(epoch > 0);
+        assert_stats_close(&got, &want, "live vs loaded");
+
+        let qs = vec![q_hours(0, 4_000), q_hours(3_000, 9_000)];
+        let want: Vec<PeriodStats> = qs
+            .iter()
+            .map(|q| c.analyze_period_oseba(&ds, index.as_ref(), *q, 0).unwrap())
+            .collect();
+        let (got, report, batch_epoch) = c.analyze_live_batch(&live, &qs, 0).unwrap();
+        assert_eq!(report.queries, 2);
+        assert_eq!(batch_epoch, epoch, "no appends between the two calls");
+        for (g, w) in got.iter().zip(&want) {
+            assert_stats_close(g, w, "live batch");
+        }
+        live.close();
+    }
+
+    #[test]
+    fn live_analysis_on_empty_dataset_errors() {
+        let c = coord(2);
+        let live = c.create_live(Schema::climate(), LiveConfig::default()).unwrap();
+        assert!(c.analyze_live(&live, q_hours(0, 10), 0).is_err());
+        assert!(c.analyze_live_batch(&live, &[q_hours(0, 10)], 0).is_err());
+        live.close();
     }
 
     #[test]

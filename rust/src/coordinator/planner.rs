@@ -45,6 +45,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Short label used in metrics tables and the JSON protocol.
     pub fn label(&self) -> &'static str {
         match self {
             Method::Default => "default",

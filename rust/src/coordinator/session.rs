@@ -13,8 +13,11 @@ use crate::metrics::{BatchReport, SessionMetrics, Timer};
 /// Everything a session run produces.
 #[derive(Clone, Debug)]
 pub struct SessionReport {
+    /// Which access path the session used.
     pub method: Method,
+    /// Per-phase measurements (the Fig 4 / Fig 6 series).
     pub metrics: SessionMetrics,
+    /// Per-phase analysis results, in phase order.
     pub stats: Vec<PeriodStats>,
     /// Queries actually executed (resolved from the period specs).
     pub queries: Vec<crate::index::RangeQuery>,
@@ -99,8 +102,9 @@ pub struct BatchSessionReport {
     pub report: BatchReport,
     /// Index metadata footprint.
     pub index_bytes: usize,
-    /// Engine-counter deltas attributable to this batch.
+    /// Engine counters sampled just before the batch.
     pub counters_before: CounterSnapshot,
+    /// Engine counters sampled just after the batch.
     pub counters_after: CounterSnapshot,
 }
 

@@ -14,7 +14,9 @@ use crate::util::rng::Xoshiro256;
 /// Configurable CDR generator.
 #[derive(Clone, Debug)]
 pub struct CdrGen {
+    /// RNG seed (deterministic output per seed).
     pub seed: u64,
+    /// First key (seconds).
     pub start_key: i64,
     /// Key step (seconds) — one aggregated call record per step.
     pub step_secs: i64,

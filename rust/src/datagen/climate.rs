@@ -18,6 +18,7 @@ use crate::util::rng::Xoshiro256;
 /// Configurable climate generator.
 #[derive(Clone, Debug)]
 pub struct ClimateGen {
+    /// RNG seed (deterministic output per seed).
     pub seed: u64,
     /// First key (seconds).
     pub start_key: i64,

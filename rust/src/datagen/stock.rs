@@ -12,7 +12,9 @@ use crate::util::rng::Xoshiro256;
 /// Configurable stock-tick generator.
 #[derive(Clone, Debug)]
 pub struct StockGen {
+    /// RNG seed (deterministic output per seed).
     pub seed: u64,
+    /// First key (seconds).
     pub start_key: i64,
     /// Key step (seconds). 60 = per-minute bars.
     pub step_secs: i64,

@@ -37,14 +37,42 @@ pub struct BlockManager {
     cache: Mutex<HashMap<DatasetId, CacheEntry>>,
     /// Tiered datasets by id — the spill targets under memory pressure.
     stores: Mutex<HashMap<DatasetId, Arc<TieredStore>>>,
+    /// Bytes charged for live datasets' *unsealed* chunk buffers, by
+    /// dataset — rows that have arrived but are not yet sealed into a
+    /// partition (and so are invisible to every epoch snapshot).
+    unsealed: Mutex<HashMap<DatasetId, usize>>,
 }
 
 impl BlockManager {
+    /// Build over a (possibly budgeted) memory tracker.
     pub fn new(tracker: Arc<MemoryTracker>) -> BlockManager {
         BlockManager {
             tracker,
             cache: Mutex::new(HashMap::new()),
             stores: Mutex::new(HashMap::new()),
+            unsealed: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Charge `bytes` to the tracker; under budget pressure registered
+    /// tiered stores are asked to spill before the allocation is declared
+    /// impossible. The shared admission path for caches, live seals and
+    /// unsealed chunk buffers.
+    pub(crate) fn allocate_reclaiming(&self, bytes: usize) -> Result<()> {
+        match self.tracker.allocate(bytes) {
+            Ok(()) => Ok(()),
+            Err(e @ OsebaError::OutOfMemory { .. }) => {
+                let shortfall =
+                    bytes.saturating_sub(self.tracker.headroom().unwrap_or(0));
+                self.reclaim(shortfall)?;
+                // Retry once; still-unreclaimable pressure keeps the
+                // original error semantics.
+                if self.tracker.allocate(bytes).is_err() {
+                    return Err(e);
+                }
+                Ok(())
+            }
+            Err(e) => Err(e),
         }
     }
 
@@ -57,22 +85,36 @@ impl BlockManager {
         if cache.contains_key(&id) || self.stores.lock().unwrap().contains_key(&id) {
             return Err(OsebaError::Schema(format!("dataset {id} already cached")));
         }
-        match self.tracker.allocate(bytes) {
-            Ok(()) => {}
-            Err(e @ OsebaError::OutOfMemory { .. }) => {
-                let shortfall =
-                    bytes.saturating_sub(self.tracker.headroom().unwrap_or(0));
-                self.reclaim(shortfall)?;
-                // Retry once; still-unreclaimable pressure keeps the
-                // original error semantics.
-                if self.tracker.allocate(bytes).is_err() {
-                    return Err(e);
-                }
-            }
-            Err(e) => return Err(e),
-        }
+        self.allocate_reclaiming(bytes)?;
         cache.insert(id, CacheEntry { parts, bytes });
         Ok(())
+    }
+
+    /// Charge `bytes` of unsealed live-chunk buffer to dataset `id`. Like
+    /// [`Self::cache`], budget pressure spills registered stores first.
+    pub fn charge_unsealed(&self, id: DatasetId, bytes: usize) -> Result<()> {
+        self.allocate_reclaiming(bytes)?;
+        *self.unsealed.lock().unwrap().entry(id).or_insert(0) += bytes;
+        Ok(())
+    }
+
+    /// Credit back up to `bytes` of dataset `id`'s unsealed charge (rows
+    /// were sealed into a partition, or the live dataset closed).
+    pub fn release_unsealed(&self, id: DatasetId, bytes: usize) {
+        let mut unsealed = self.unsealed.lock().unwrap();
+        if let Some(slot) = unsealed.get_mut(&id) {
+            let take = bytes.min(*slot);
+            *slot -= take;
+            if *slot == 0 {
+                unsealed.remove(&id);
+            }
+            self.tracker.release(take);
+        }
+    }
+
+    /// Total bytes currently charged for unsealed live-chunk buffers.
+    pub fn unsealed_bytes(&self) -> usize {
+        self.unsealed.lock().unwrap().values().sum()
     }
 
     /// Register a tiered dataset's store (no bytes charged here — the
@@ -117,6 +159,10 @@ impl BlockManager {
     /// For a tiered dataset this drops the Hot partitions (segments on
     /// disk are untouched).
     pub fn unpersist(&self, id: DatasetId) -> bool {
+        // Any unsealed live-buffer charge dies with the registration.
+        if let Some(bytes) = self.unsealed.lock().unwrap().remove(&id) {
+            self.tracker.release(bytes);
+        }
         let entry = self.cache.lock().unwrap().remove(&id);
         if let Some(e) = entry {
             self.tracker.release(e.bytes);
@@ -236,6 +282,29 @@ mod tests {
         assert!(bm.unpersist(9));
         assert!(!bm.unpersist(9));
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unsealed_accounting_charges_and_credits() {
+        let bm = BlockManager::new(MemoryTracker::with_budget(1000));
+        bm.charge_unsealed(5, 300).unwrap();
+        bm.charge_unsealed(5, 200).unwrap();
+        bm.charge_unsealed(6, 100).unwrap();
+        assert_eq!(bm.unsealed_bytes(), 600);
+        assert_eq!(bm.used_bytes(), 600);
+        // Budget applies to unsealed buffers too.
+        assert!(bm.charge_unsealed(5, 500).is_err());
+        bm.release_unsealed(5, 450);
+        assert_eq!(bm.unsealed_bytes(), 150);
+        assert_eq!(bm.used_bytes(), 150);
+        // Over-release clamps to what was charged.
+        bm.release_unsealed(5, 10_000);
+        bm.release_unsealed(6, 100);
+        assert_eq!(bm.unsealed_bytes(), 0);
+        assert_eq!(bm.used_bytes(), 0);
+        // Releasing an unknown id is a no-op.
+        bm.release_unsealed(99, 10);
+        assert_eq!(bm.used_bytes(), 0);
     }
 
     #[test]

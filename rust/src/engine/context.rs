@@ -18,6 +18,7 @@ use std::sync::{Arc, Mutex};
 use crate::config::ContextConfig;
 use crate::engine::block_manager::{BlockManager, DatasetId};
 use crate::engine::dataset::{Dataset, Lineage, PinnedSlice, PinnedSlices};
+use crate::engine::live::LiveDataset;
 use crate::engine::memory::MemoryTracker;
 use crate::error::{OsebaError, Result};
 use crate::index::types::{PartitionSlice, RangeQuery};
@@ -41,6 +42,7 @@ pub struct EngineCounters {
 }
 
 impl EngineCounters {
+    /// Point-in-time copy of the counters.
     pub fn snapshot(&self) -> CounterSnapshot {
         CounterSnapshot {
             partitions_scanned: self.partitions_scanned.load(Ordering::Relaxed),
@@ -54,9 +56,13 @@ impl EngineCounters {
 /// Point-in-time copy of [`EngineCounters`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CounterSnapshot {
+    /// Partitions whose keys were scanned by filter operations.
     pub partitions_scanned: usize,
+    /// Rows examined by filter scans.
     pub rows_scanned: usize,
+    /// Bytes materialized into new (filtered) datasets.
     pub bytes_materialized: usize,
+    /// Partitions touched via the indexed (Oseba) path.
     pub partitions_targeted: usize,
 }
 
@@ -70,6 +76,7 @@ pub struct OsebaContext {
 }
 
 impl OsebaContext {
+    /// Build a context from engine-level configuration.
     pub fn new(cfg: ContextConfig) -> OsebaContext {
         let tracker = match cfg.memory_budget {
             Some(b) => MemoryTracker::with_budget(b),
@@ -123,7 +130,7 @@ impl OsebaContext {
             Lineage::Derived { op, .. } => op.clone(),
         };
         self.register(id, &name, &lineage);
-        Ok(Dataset { id, schema, parts, lineage, store: None })
+        Ok(Dataset { id, schema, parts, lineage, store: None, visible: None })
     }
 
     /// Load a batch as a **tiered** dataset: partitions live in a
@@ -178,7 +185,14 @@ impl OsebaContext {
             Lineage::Derived { op, .. } => op.clone(),
         };
         self.register(id, &name, &lineage);
-        Ok(Dataset { id, schema, parts: Vec::new(), lineage, store: Some(store) })
+        Ok(Dataset {
+            id,
+            schema,
+            parts: Vec::new(),
+            lineage,
+            store: Some(store),
+            visible: None,
+        })
     }
 
     /// Open a saved store directory as a tiered dataset, restoring the
@@ -197,6 +211,58 @@ impl OsebaContext {
         Ok((ds, index))
     }
 
+    /// Create a **live** (append-while-serving) dataset: writers stream
+    /// chunks in via [`LiveDataset::append`] while readers pin epochs via
+    /// [`LiveDataset::snapshot`]. Sealed partitions stay memory-resident;
+    /// unsealed chunk bytes are charged to the block manager.
+    pub fn create_live(
+        &self,
+        schema: crate::storage::Schema,
+        cfg: crate::engine::live::LiveConfig,
+    ) -> Result<Arc<LiveDataset>> {
+        let id = self.fresh_id();
+        let lineage = Lineage::Source { name: "live".into() };
+        self.register(id, "live", &lineage);
+        Ok(Arc::new(LiveDataset::new(
+            id,
+            schema,
+            cfg,
+            Arc::clone(&self.block_manager),
+            None,
+        )?))
+    }
+
+    /// [`Self::create_live`], but sealed partitions go to a
+    /// [`TieredStore`] rooted at `dir`: under memory pressure cold sealed
+    /// partitions spill to `.oseg` segments instead of the append failing,
+    /// so a live feed larger than the budget keeps ingesting. The store is
+    /// registered with the block manager, so unrelated cache pressure can
+    /// reclaim from it too. Spilling live datasets reject out-of-order
+    /// appends (segment ids pin partition order).
+    pub fn create_live_spilling(
+        &self,
+        schema: crate::storage::Schema,
+        cfg: crate::engine::live::LiveConfig,
+        dir: impl AsRef<Path>,
+    ) -> Result<Arc<LiveDataset>> {
+        let store = Arc::new(TieredStore::create(
+            dir,
+            schema.clone(),
+            self.block_manager.tracker(),
+        )?);
+        let id = self.fresh_id();
+        self.block_manager.register_store(id, Arc::clone(&store))?;
+        let lineage = Lineage::Source { name: "live".into() };
+        self.register(id, "live", &lineage);
+        Ok(Arc::new(LiveDataset::new(
+            id,
+            schema,
+            cfg,
+            Arc::clone(&self.block_manager),
+            Some(store),
+        )?))
+    }
+
     /// Handles to every partition of `ds`, faulting in the full dataset
     /// when tiered — the deliberate *full reload* the scan-everything
     /// baseline pays (the tiered bench's comparison arm).
@@ -211,7 +277,10 @@ impl OsebaContext {
     /// selective path avoids.
     pub fn partition_handles(&self, ds: &Dataset) -> Result<Vec<Arc<Partition>>> {
         match ds.store() {
-            Some(store) => (0..store.num_partitions()).map(|i| store.fetch(i)).collect(),
+            // `ds.num_partitions()` (not the store's count) so a live
+            // snapshot's scan stays pinned to its epoch even while the
+            // shared store grows.
+            Some(store) => (0..ds.num_partitions()).map(|i| store.fetch(i)).collect(),
             None => Ok(ds.parts.clone()),
         }
     }

@@ -39,6 +39,12 @@ pub struct Dataset {
     /// [`TieredStore`] instead of being fully memory-resident. `parts` is
     /// empty then; access goes through the store (fault-in on demand).
     pub(crate) store: Option<Arc<TieredStore>>,
+    /// Visible-partition cap for store-backed **live snapshots**: the
+    /// backing store may keep growing after this snapshot was taken, but
+    /// every accessor (and the scan baseline) must see only the first
+    /// `visible` partitions — the epoch the snapshot pinned. `None` means
+    /// the whole store is visible (ordinary tiered datasets).
+    pub(crate) visible: Option<usize>,
 }
 
 impl Dataset {
@@ -47,6 +53,7 @@ impl Dataset {
         self.id
     }
 
+    /// The dataset's column schema.
     pub fn schema(&self) -> &Schema {
         &self.schema
     }
@@ -69,47 +76,81 @@ impl Dataset {
         self.store.is_some()
     }
 
+    /// Metadata of the partitions this handle may see: the store's
+    /// metadata truncated to the snapshot's visible prefix. Store-backed
+    /// datasets only.
+    fn visible_metas(&self, st: &TieredStore) -> Vec<crate::index::PartitionMeta> {
+        let mut metas = st.metas();
+        if let Some(n) = self.visible {
+            metas.truncate(n);
+        }
+        metas
+    }
+
+    /// Number of partitions visible to this handle.
     pub fn num_partitions(&self) -> usize {
         match &self.store {
-            Some(st) => st.num_partitions(),
+            Some(st) => {
+                let n = st.num_partitions();
+                self.visible.map_or(n, |v| v.min(n))
+            }
             None => self.parts.len(),
         }
     }
 
-    /// Total valid rows across partitions.
+    /// Total valid rows across visible partitions.
     pub fn total_rows(&self) -> usize {
         match &self.store {
-            Some(st) => st.total_rows(),
+            Some(st) => match self.visible {
+                Some(_) => self.visible_metas(st).iter().map(|m| m.rows).sum(),
+                None => st.total_rows(),
+            },
             None => self.parts.iter().map(|p| p.rows).sum(),
         }
     }
 
-    /// Byte footprint (keys + padded columns) of the full dataset —
+    /// Byte footprint (keys + padded columns) of the visible dataset —
     /// resident bytes for an in-memory dataset, total (Hot + Cold) for a
     /// tiered one.
     pub fn bytes(&self) -> usize {
         match &self.store {
-            Some(st) => st.total_bytes(),
+            Some(st) => match self.visible {
+                Some(_) => {
+                    let width = self.schema.width();
+                    self.visible_metas(st)
+                        .iter()
+                        .map(|m| crate::store::tiered::partition_bytes(m.rows, width))
+                        .sum()
+                }
+                None => st.total_bytes(),
+            },
             None => self.parts.iter().map(|p| p.bytes()).sum(),
         }
     }
 
+    /// How this dataset came to exist.
     pub fn lineage(&self) -> &Lineage {
         &self.lineage
     }
 
-    /// Smallest key in the dataset.
+    /// Smallest key in the visible dataset.
     pub fn key_min(&self) -> Option<i64> {
         match &self.store {
-            Some(st) => st.key_min(),
+            Some(st) => match self.visible {
+                Some(_) => self.visible_metas(st).first().map(|m| m.key_min),
+                None => st.key_min(),
+            },
             None => self.parts.iter().filter_map(|p| p.key_min()).min(),
         }
     }
 
-    /// Largest key in the dataset.
+    /// Largest key in the visible dataset.
     pub fn key_max(&self) -> Option<i64> {
         match &self.store {
-            Some(st) => st.key_max(),
+            Some(st) => match self.visible {
+                Some(_) => self.visible_metas(st).last().map(|m| m.key_max),
+                None => st.key_max(),
+            },
             None => self.parts.iter().filter_map(|p| p.key_max()).max(),
         }
     }
@@ -129,12 +170,16 @@ impl Dataset {
 /// A borrowed view of a row range of one partition.
 #[derive(Clone, Copy, Debug)]
 pub struct SliceView<'a> {
+    /// The partition the view reads.
     pub part: &'a Arc<Partition>,
+    /// First valid row of the view (inclusive).
     pub row_start: usize,
+    /// One past the last valid row of the view.
     pub row_end: usize,
 }
 
 impl<'a> SliceView<'a> {
+    /// Number of rows the view covers.
     pub fn rows(&self) -> usize {
         self.row_end - self.row_start
     }
@@ -155,12 +200,16 @@ impl<'a> SliceView<'a> {
 /// stays valid even if the tiered store evicts that partition afterwards.
 #[derive(Clone, Debug)]
 pub struct PinnedSlice {
+    /// The pinned partition (kept alive by this handle).
     pub part: Arc<Partition>,
+    /// First valid row of the selection (inclusive).
     pub row_start: usize,
+    /// One past the last valid row of the selection.
     pub row_end: usize,
 }
 
 impl PinnedSlice {
+    /// Number of rows the pin covers.
     pub fn rows(&self) -> usize {
         self.row_end - self.row_start
     }
@@ -214,6 +263,7 @@ mod tests {
             parts,
             lineage: Lineage::Source { name: "test".into() },
             store: None,
+            visible: None,
         }
     }
 

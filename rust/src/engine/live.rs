@@ -1,0 +1,834 @@
+//! Live (append-while-serving) datasets — the epoch machinery that turns
+//! the engine's core invariant from *"datasets are immutable after load"*
+//! into *"readers see immutable epochs of a mutable dataset"*.
+//!
+//! The paper motivates Oseba with continuously arriving temporal data
+//! (weather feeds, transaction streams); CIAS's associated search list
+//! exists precisely to absorb the irregular, late-arriving partitions such
+//! feeds produce (§III-B). A [`LiveDataset`] accepts appended record
+//! chunks while concurrently serving selective queries:
+//!
+//! * **Writers** extend the *next* epoch: chunks accumulate in an unsealed
+//!   buffer (charged to the block manager, invisible to queries) until
+//!   `rows_per_partition` rows seal into a partition, which is published
+//!   atomically under epoch `N + 1`.
+//! * **Readers** pin an epoch: [`LiveDataset::snapshot`] returns a cheap
+//!   immutable [`EpochSnapshot`] (`Arc`-shared partitions + the index as
+//!   of that epoch). A query planned against epoch `N` can never see a
+//!   half-published partition, torn rows, or a retroactively renumbered
+//!   index — later epochs are separate objects.
+//!
+//! Index maintenance is incremental: an in-order sealed partition is
+//! absorbed in O(1) by [`Cias::append_meta`] (growing the compressed
+//! region or the ASL); an out-of-order (late) chunk seals immediately and
+//! lands in the ASL at its sorted position via [`Cias::absorb_meta`]. Only
+//! when the ASL exceeds [`LiveConfig::max_asl`] *and* a re-sort would
+//! actually shrink it does the writer fall back to a rebuild that
+//! renumbers partitions in key order — readers keep serving the previous
+//! epoch throughout. See DESIGN.md §9 for the state diagram.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::engine::block_manager::{BlockManager, DatasetId};
+use crate::engine::dataset::{Dataset, Lineage};
+use crate::error::{OsebaError, Result};
+use crate::index::builder::detect_step;
+use crate::index::{Cias, PartitionMeta};
+use crate::ingest::Chunk;
+use crate::storage::{Partition, Schema};
+use crate::store::TieredStore;
+
+/// Tuning knobs for a live dataset.
+#[derive(Clone, Copy, Debug)]
+pub struct LiveConfig {
+    /// Rows per sealed partition — the uniform layout CIAS compresses.
+    pub rows_per_partition: usize,
+    /// Rebuild threshold: when the ASL grows beyond this many entries and
+    /// a key-order re-sort would shrink it, the writer rebuilds the index
+    /// (renumbering partitions). Resident datasets only; a spilling live
+    /// dataset never rebuilds (segment ids pin partition order).
+    pub max_asl: usize,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        LiveConfig { rows_per_partition: 4096, max_asl: 8 }
+    }
+}
+
+/// Point-in-time ingest/index-maintenance counters for a live dataset.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LiveCounters {
+    /// Epoch of the currently published state.
+    pub epoch: u64,
+    /// Chunks accepted by [`LiveDataset::append`].
+    pub appended_chunks: usize,
+    /// Chunks that arrived out of key order (sealed straight to the ASL).
+    pub out_of_order_chunks: usize,
+    /// Partitions sealed and published so far.
+    pub sealed_partitions: usize,
+    /// Rows visible at the current epoch.
+    pub sealed_rows: usize,
+    /// Buffered rows not yet sealed (invisible to every snapshot).
+    pub unsealed_rows: usize,
+    /// O(1) in-order index maintenance operations ([`Cias::append_meta`]).
+    pub index_appends: usize,
+    /// Out-of-order partitions absorbed by the ASL ([`Cias::absorb_meta`]).
+    pub asl_absorbed: usize,
+    /// Current associated-search-list length.
+    pub asl_len: usize,
+    /// Full index rebuilds (ASL exceeded `max_asl` and a re-sort helped).
+    pub rebuilds: usize,
+}
+
+/// One immutable published state. Snapshots share it via `Arc`.
+#[derive(Debug)]
+struct Published {
+    epoch: u64,
+    /// Sealed partitions (empty when spilling — the store owns them).
+    parts: Vec<Arc<Partition>>,
+    index: Option<Arc<Cias>>,
+    rows: usize,
+    partitions: usize,
+}
+
+/// Writer-side mutable state, guarded by one mutex.
+struct WriteState {
+    pending_keys: Vec<i64>,
+    pending_cols: Vec<Vec<f32>>,
+    /// Bytes charged to the block manager for the unsealed buffer.
+    pending_charged: usize,
+    /// Bytes charged to the tracker for resident sealed partitions.
+    sealed_charged: usize,
+    /// Last key of the in-order stream; chunks starting below it are
+    /// out-of-order.
+    watermark: Option<i64>,
+    closed: bool,
+}
+
+/// An immutable view of a [`LiveDataset`] at one epoch.
+///
+/// Holding a snapshot pins its partitions in memory (resident mode) or its
+/// visible store prefix (spilling mode) regardless of later appends,
+/// rebuilds, or `close` — the standard reader contract.
+#[derive(Clone, Debug)]
+pub struct EpochSnapshot {
+    epoch: u64,
+    rows: usize,
+    index: Option<Arc<Cias>>,
+    dataset: Dataset,
+}
+
+impl EpochSnapshot {
+    /// The epoch this snapshot pinned.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Rows visible at the pinned epoch.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Partitions visible at the pinned epoch.
+    pub fn num_partitions(&self) -> usize {
+        self.dataset.num_partitions()
+    }
+
+    /// The dataset view to analyze — safe for both the indexed path and
+    /// the scan baseline (a spilling snapshot caps the store at its
+    /// visible prefix).
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+
+    /// The super index as of the pinned epoch (`None` while no partition
+    /// has been sealed).
+    pub fn index(&self) -> Option<&Cias> {
+        self.index.as_deref()
+    }
+}
+
+/// A writable dataset serving snapshot-consistent selective queries while
+/// ingesting. See the module docs for the epoch contract.
+pub struct LiveDataset {
+    id: DatasetId,
+    schema: Schema,
+    cfg: LiveConfig,
+    block_manager: Arc<BlockManager>,
+    /// When set, sealed partitions go to the tiered store (spilling under
+    /// memory pressure) instead of being pinned in memory.
+    spill: Option<Arc<TieredStore>>,
+    write: Mutex<WriteState>,
+    current: Mutex<Arc<Published>>,
+    appended_chunks: AtomicUsize,
+    ooo_chunks: AtomicUsize,
+    index_appends: AtomicUsize,
+    asl_absorbed: AtomicUsize,
+    rebuilds: AtomicUsize,
+}
+
+impl LiveDataset {
+    /// Build a live dataset. Use
+    /// [`crate::engine::OsebaContext::create_live`] (or the spilling
+    /// variant) rather than calling this directly — the context hands out
+    /// the dataset id and registers spill stores for memory-pressure
+    /// reclaim.
+    pub(crate) fn new(
+        id: DatasetId,
+        schema: Schema,
+        cfg: LiveConfig,
+        block_manager: Arc<BlockManager>,
+        spill: Option<Arc<TieredStore>>,
+    ) -> Result<LiveDataset> {
+        if cfg.rows_per_partition == 0 {
+            return Err(OsebaError::Schema("rows_per_partition must be > 0".into()));
+        }
+        if let Some(store) = &spill {
+            if *store.schema() != schema {
+                return Err(OsebaError::Schema(format!(
+                    "store schema {:?} != live schema {:?}",
+                    store.schema(),
+                    schema
+                )));
+            }
+        }
+        let width = schema.width();
+        Ok(LiveDataset {
+            id,
+            schema,
+            cfg,
+            block_manager,
+            spill,
+            write: Mutex::new(WriteState {
+                pending_keys: Vec::new(),
+                pending_cols: vec![Vec::new(); width],
+                pending_charged: 0,
+                sealed_charged: 0,
+                watermark: None,
+                closed: false,
+            }),
+            current: Mutex::new(Arc::new(Published {
+                epoch: 0,
+                parts: Vec::new(),
+                index: None,
+                rows: 0,
+                partitions: 0,
+            })),
+            appended_chunks: AtomicUsize::new(0),
+            ooo_chunks: AtomicUsize::new(0),
+            index_appends: AtomicUsize::new(0),
+            asl_absorbed: AtomicUsize::new(0),
+            rebuilds: AtomicUsize::new(0),
+        })
+    }
+
+    /// The dataset id the context assigned.
+    pub fn id(&self) -> DatasetId {
+        self.id
+    }
+
+    /// The schema every appended chunk must match.
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    /// The tiered store sealed partitions spill to, if any.
+    pub fn spill_store(&self) -> Option<&Arc<TieredStore>> {
+        self.spill.as_ref()
+    }
+
+    /// Epoch of the currently published state.
+    pub fn epoch(&self) -> u64 {
+        self.published().epoch
+    }
+
+    /// Append one chunk of **strictly increasing** keys.
+    ///
+    /// A chunk whose first key continues the in-order stream (above the
+    /// watermark) extends the unsealed buffer, sealing
+    /// `rows_per_partition`-sized partitions as they complete (each an
+    /// O(1) [`Cias::append_meta`]). A chunk whose keys fall *below* the
+    /// watermark is out-of-order: it seals immediately as its own
+    /// (irregular) partition, absorbed by the ASL, provided its key range
+    /// overlaps nothing already visible or buffered. Returns the epoch
+    /// after the append (unchanged when no partition sealed — unsealed
+    /// rows are invisible by design).
+    ///
+    /// Live streams reject duplicate keys outright (within a chunk, at the
+    /// watermark, or inside an absorbed range): partitions carry
+    /// *inclusive* key ranges, so a duplicate landing on a seal boundary
+    /// could never be published — better a clear error at append time
+    /// than rows the index can never admit.
+    pub fn append(&self, chunk: Chunk) -> Result<u64> {
+        if chunk.columns.len() != self.schema.width() {
+            return Err(OsebaError::Schema(format!(
+                "chunk has {} columns, schema {}",
+                chunk.columns.len(),
+                self.schema.width()
+            )));
+        }
+        for c in &chunk.columns {
+            if c.len() != chunk.keys.len() {
+                return Err(OsebaError::Schema(format!(
+                    "ragged chunk: column of {} values for {} keys",
+                    c.len(),
+                    chunk.keys.len()
+                )));
+            }
+        }
+        if chunk.keys.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(OsebaError::Schema(
+                "live chunk keys must be strictly increasing".into(),
+            ));
+        }
+        let mut w = self.write.lock().unwrap();
+        if w.closed {
+            return Err(OsebaError::Ingest("append to a closed live dataset".into()));
+        }
+        if chunk.rows() == 0 {
+            return Ok(self.published().epoch);
+        }
+        let first = *chunk.keys.first().unwrap();
+        // Strictly above the watermark continues the stream; a first key
+        // *equal* to the watermark is a duplicate and goes down the
+        // out-of-order path, whose overlap checks reject it cleanly.
+        let in_order = w.watermark.map_or(true, |wm| first > wm);
+        if in_order {
+            let add = chunk.raw_bytes();
+            self.block_manager.charge_unsealed(self.id, add)?;
+            // The chunk is accepted from here on: a later seal failure
+            // (e.g. transient memory pressure) keeps the rows buffered
+            // for retry, so it still counts as appended.
+            self.appended_chunks.fetch_add(1, Ordering::Relaxed);
+            w.pending_charged += add;
+            w.watermark = Some(*chunk.keys.last().unwrap());
+            w.pending_keys.extend_from_slice(&chunk.keys);
+            for (p, c) in w.pending_cols.iter_mut().zip(&chunk.columns) {
+                p.extend_from_slice(c);
+            }
+            self.seal_full(&mut w)?;
+        } else {
+            if self.spill.is_some() {
+                return Err(OsebaError::Ingest(
+                    "out-of-order append on a spilling live dataset \
+                     (segment ids pin partition order; use a resident live dataset)"
+                        .into(),
+                ));
+            }
+            let last = *chunk.keys.last().unwrap();
+            if let Some(&pending_first) = w.pending_keys.first() {
+                if last >= pending_first {
+                    return Err(OsebaError::Ingest(format!(
+                        "out-of-order chunk [{first}, {last}] overlaps the \
+                         unsealed tail starting at {pending_first}"
+                    )));
+                }
+            }
+            self.seal_ooo(&mut w, chunk)?;
+            // Counted only once sealed and published — a rejected overlap
+            // is not an accepted chunk.
+            self.appended_chunks.fetch_add(1, Ordering::Relaxed);
+            self.ooo_chunks.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(self.published().epoch)
+    }
+
+    /// Seal the unsealed tail as a final (shorter, hence ASL) partition,
+    /// making the buffered rows visible. The dataset stays appendable.
+    pub fn flush(&self) -> Result<u64> {
+        let mut w = self.write.lock().unwrap();
+        if w.closed {
+            return Err(OsebaError::Ingest("flush of a closed live dataset".into()));
+        }
+        if !w.pending_keys.is_empty() {
+            let keys = w.pending_keys.clone();
+            let cols = w.pending_cols.clone();
+            self.seal_one(&mut w, keys, cols, SealKind::InOrder)?;
+            w.pending_keys.clear();
+            for c in &mut w.pending_cols {
+                c.clear();
+            }
+            let release = w.pending_charged;
+            self.block_manager.release_unsealed(self.id, release);
+            w.pending_charged = 0;
+        }
+        Ok(self.published().epoch)
+    }
+
+    /// Pin the current epoch: an immutable snapshot of the sealed
+    /// partitions and the index. O(partitions) `Arc` clones — no data is
+    /// copied, no lock is held after return.
+    pub fn snapshot(&self) -> EpochSnapshot {
+        let cur = self.published();
+        let dataset = Dataset {
+            id: self.id,
+            schema: self.schema.clone(),
+            parts: cur.parts.clone(),
+            lineage: Lineage::Source { name: format!("live@epoch{}", cur.epoch) },
+            store: self.spill.clone(),
+            visible: self.spill.as_ref().map(|_| cur.partitions),
+        };
+        EpochSnapshot {
+            epoch: cur.epoch,
+            rows: cur.rows,
+            index: cur.index.clone(),
+            dataset,
+        }
+    }
+
+    /// Point-in-time ingest/index counters.
+    pub fn counters(&self) -> LiveCounters {
+        let w = self.write.lock().unwrap();
+        let cur = self.published();
+        LiveCounters {
+            epoch: cur.epoch,
+            appended_chunks: self.appended_chunks.load(Ordering::Relaxed),
+            out_of_order_chunks: self.ooo_chunks.load(Ordering::Relaxed),
+            sealed_partitions: cur.partitions,
+            sealed_rows: cur.rows,
+            unsealed_rows: w.pending_keys.len(),
+            index_appends: self.index_appends.load(Ordering::Relaxed),
+            asl_absorbed: self.asl_absorbed.load(Ordering::Relaxed),
+            asl_len: cur.index.as_ref().map_or(0, |i| i.asl_len()),
+            rebuilds: self.rebuilds.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting appends and release this dataset's storage charges
+    /// (sealed residents and the unsealed buffer). Existing snapshots keep
+    /// their pinned data alive — like `unpersist`, closing releases
+    /// *accounting*, not borrowed working sets. Idempotent.
+    pub fn close(&self) {
+        let mut w = self.write.lock().unwrap();
+        if w.closed {
+            return;
+        }
+        w.closed = true;
+        let pending = w.pending_charged;
+        self.block_manager.release_unsealed(self.id, pending);
+        w.pending_charged = 0;
+        w.pending_keys.clear();
+        for c in &mut w.pending_cols {
+            c.clear();
+        }
+        if self.spill.is_some() {
+            // Registered with the block manager at creation; dropping the
+            // registration releases the store's Hot residency.
+            self.block_manager.unpersist(self.id);
+        } else {
+            self.block_manager.tracker().release(w.sealed_charged);
+            w.sealed_charged = 0;
+        }
+    }
+
+    fn published(&self) -> Arc<Published> {
+        Arc::clone(&*self.current.lock().unwrap())
+    }
+
+    fn publish(&self, p: Published) {
+        *self.current.lock().unwrap() = Arc::new(p);
+    }
+
+    /// Seal every complete `rows_per_partition` span of the buffer.
+    fn seal_full(&self, w: &mut WriteState) -> Result<()> {
+        let n = self.cfg.rows_per_partition;
+        while w.pending_keys.len() >= n {
+            let keys: Vec<i64> = w.pending_keys[..n].to_vec();
+            let cols: Vec<Vec<f32>> = w.pending_cols.iter().map(|c| c[..n].to_vec()).collect();
+            self.seal_one(w, keys, cols, SealKind::InOrder)?;
+            // Only drain (and credit the unsealed charge) after the seal
+            // succeeded — a failed seal must not lose rows.
+            w.pending_keys.drain(..n);
+            for c in &mut w.pending_cols {
+                c.drain(..n);
+            }
+            let sealed_raw = (n * (8 + 4 * self.schema.width())).min(w.pending_charged);
+            self.block_manager.release_unsealed(self.id, sealed_raw);
+            w.pending_charged -= sealed_raw;
+        }
+        Ok(())
+    }
+
+    /// Seal an out-of-order chunk as one irregular partition.
+    fn seal_ooo(&self, w: &mut WriteState, chunk: Chunk) -> Result<()> {
+        self.seal_one(w, chunk.keys, chunk.columns, SealKind::OutOfOrder)
+    }
+
+    /// Build, index, charge and publish one partition under a new epoch.
+    fn seal_one(
+        &self,
+        w: &mut WriteState,
+        keys: Vec<i64>,
+        cols: Vec<Vec<f32>>,
+        kind: SealKind,
+    ) -> Result<()> {
+        let cur = self.published();
+        let id = cur.partitions;
+        let part = Arc::new(Partition::from_rows(id, keys, cols));
+        let meta = PartitionMeta {
+            id,
+            key_min: part.key_min().unwrap_or(0),
+            key_max: part.key_max().unwrap_or(0),
+            rows: part.rows,
+            step: detect_step(&part.keys),
+        };
+        // Extend a *clone* of the published index; the published one stays
+        // untouched until the new epoch swaps in, so a failure here (or a
+        // reader mid-query) never sees partial maintenance.
+        let mut index = match &cur.index {
+            Some(ix) => {
+                let mut clone = (**ix).clone();
+                match kind {
+                    SealKind::InOrder => clone.append_meta(meta)?,
+                    SealKind::OutOfOrder => clone.absorb_meta(meta)?,
+                }
+                clone
+            }
+            None => Cias::from_meta(vec![meta])?,
+        };
+        let mut parts = cur.parts.clone();
+        match &self.spill {
+            Some(store) => {
+                store.insert(Arc::clone(&part))?;
+            }
+            None => {
+                self.block_manager.allocate_reclaiming(part.bytes())?;
+                w.sealed_charged += part.bytes();
+                parts.push(Arc::clone(&part));
+            }
+        }
+        // Past the last fallible step: the maintenance op will publish.
+        match kind {
+            SealKind::InOrder => self.index_appends.fetch_add(1, Ordering::Relaxed),
+            SealKind::OutOfOrder => self.asl_absorbed.fetch_add(1, Ordering::Relaxed),
+        };
+        if self.spill.is_none() && index.asl_len() > self.cfg.max_asl {
+            self.maybe_rebuild(&mut parts, &mut index);
+        }
+        self.publish(Published {
+            epoch: cur.epoch + 1,
+            rows: cur.rows + part.rows,
+            partitions: cur.partitions + 1,
+            parts,
+            index: Some(Arc::new(index)),
+        });
+        Ok(())
+    }
+
+    /// Re-sort partitions by key, renumber, and rebuild the index — but
+    /// only when the rebuilt index actually shrinks the ASL (growth from
+    /// genuinely irregular partition *sizes* cannot be compressed away,
+    /// and retrying on every seal would thrash). The trial runs on
+    /// metadata alone; partition data is cloned only for ids that change.
+    /// Readers keep serving the previous epoch untouched. Byte accounting
+    /// is unchanged: renumbered clones are the same size as the originals
+    /// they replace.
+    fn maybe_rebuild(&self, parts: &mut Vec<Arc<Partition>>, index: &mut Cias) {
+        let mut order: Vec<usize> = (0..parts.len()).collect();
+        order.sort_by_key(|&i| parts[i].key_min().unwrap_or(i64::MIN));
+        let metas: Vec<PartitionMeta> = order
+            .iter()
+            .enumerate()
+            .map(|(new_id, &i)| PartitionMeta {
+                id: new_id,
+                key_min: parts[i].key_min().unwrap_or(0),
+                key_max: parts[i].key_max().unwrap_or(0),
+                rows: parts[i].rows,
+                step: detect_step(&parts[i].keys),
+            })
+            .collect();
+        let Ok(rebuilt) = Cias::from_meta(metas) else { return };
+        if rebuilt.asl_len() >= index.asl_len() {
+            return;
+        }
+        let renumbered: Vec<Arc<Partition>> = order
+            .iter()
+            .enumerate()
+            .map(|(new_id, &i)| {
+                let p = &parts[i];
+                if p.id == new_id {
+                    Arc::clone(p)
+                } else {
+                    Arc::new(Partition { id: new_id, ..(**p).clone() })
+                }
+            })
+            .collect();
+        *parts = renumbered;
+        *index = rebuilt;
+        self.rebuilds.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// How a partition entered the index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SealKind {
+    InOrder,
+    OutOfOrder,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::MemoryTracker;
+    use crate::index::{ContentIndex, RangeQuery};
+    use crate::testing::temp_dir;
+
+    fn live(rows_per: usize, max_asl: usize) -> LiveDataset {
+        LiveDataset::new(
+            1,
+            Schema::stock(),
+            LiveConfig { rows_per_partition: rows_per, max_asl },
+            Arc::new(BlockManager::new(MemoryTracker::unbounded())),
+            None,
+        )
+        .unwrap()
+    }
+
+    /// `rows` consecutive rows starting at key `start` (step 1).
+    fn chunk(start: i64, rows: usize) -> Chunk {
+        let keys: Vec<i64> = (0..rows as i64).map(|i| start + i).collect();
+        let price: Vec<f32> = keys.iter().map(|&k| k as f32).collect();
+        let volume = vec![1.0; rows];
+        Chunk { keys, columns: vec![price, volume] }
+    }
+
+    #[test]
+    fn epochs_advance_only_on_seal() {
+        let live = live(100, 8);
+        assert_eq!(live.epoch(), 0);
+        // 60 rows buffered: nothing visible.
+        let e = live.append(chunk(0, 60)).unwrap();
+        assert_eq!(e, 0);
+        let snap = live.snapshot();
+        assert_eq!(snap.rows(), 0);
+        assert!(snap.index().is_none());
+        // 60 more → one partition seals (100), 20 stay buffered.
+        let e = live.append(chunk(60, 60)).unwrap();
+        assert_eq!(e, 1);
+        let snap = live.snapshot();
+        assert_eq!(snap.rows(), 100);
+        assert_eq!(snap.num_partitions(), 1);
+        let c = live.counters();
+        assert_eq!(c.unsealed_rows, 20);
+        assert_eq!(c.sealed_partitions, 1);
+        assert_eq!(c.index_appends, 1);
+        // Flush publishes the tail as a (shorter) ASL partition.
+        let e = live.flush().unwrap();
+        assert_eq!(e, 2);
+        let snap = live.snapshot();
+        assert_eq!(snap.rows(), 120);
+        assert_eq!(snap.index().unwrap().asl_len(), 1);
+        live.close();
+    }
+
+    #[test]
+    fn snapshots_are_immutable_under_later_appends() {
+        let live = live(50, 8);
+        live.append(chunk(0, 150)).unwrap(); // 3 partitions
+        let old = live.snapshot();
+        assert_eq!(old.epoch(), 3);
+        assert_eq!(old.rows(), 150);
+        let q = RangeQuery { lo: 0, hi: 10_000 };
+        let old_slices = old.index().unwrap().lookup(q);
+
+        live.append(chunk(150, 100)).unwrap(); // 2 more partitions
+        let new = live.snapshot();
+        assert_eq!(new.epoch(), 5);
+        assert_eq!(new.rows(), 250);
+        // The pinned snapshot still sees exactly its epoch's state.
+        assert_eq!(old.rows(), 150);
+        assert_eq!(old.num_partitions(), 3);
+        assert_eq!(old.index().unwrap().lookup(q), old_slices);
+        assert_eq!(old.dataset().total_rows(), 150);
+        assert!(new.index().unwrap().lookup(q).len() > old_slices.len());
+        live.close();
+    }
+
+    #[test]
+    fn out_of_order_chunk_is_absorbed_and_queryable() {
+        let live = live(100, 8);
+        live.append(chunk(0, 100)).unwrap(); // keys 0..99
+        live.append(chunk(300, 100)).unwrap(); // keys 300..399 (gap)
+        // Late chunk fills part of the gap.
+        let e = live.append(chunk(150, 30)).unwrap(); // keys 150..179
+        assert_eq!(e, 3);
+        let c = live.counters();
+        assert_eq!(c.out_of_order_chunks, 1);
+        assert_eq!(c.asl_absorbed, 1);
+        assert_eq!(c.sealed_rows, 230);
+
+        let snap = live.snapshot();
+        let hits = snap.index().unwrap().lookup(RangeQuery { lo: 160, hi: 170 });
+        assert_eq!(hits.len(), 1);
+        let s = hits[0];
+        let part = &snap.dataset().partitions()[s.partition];
+        assert_eq!(&part.keys[s.row_start..s.row_end], &(160..=170).collect::<Vec<i64>>()[..]);
+        live.close();
+    }
+
+    #[test]
+    fn out_of_order_rejects_overlap_with_sealed_and_pending() {
+        let live = live(100, 8);
+        live.append(chunk(0, 100)).unwrap(); // sealed keys 0..99
+        live.append(chunk(200, 50)).unwrap(); // pending keys 200..249
+        let before = live.counters();
+        // Overlaps the sealed partition.
+        assert!(live.append(chunk(50, 10)).is_err());
+        // Overlaps the unsealed tail.
+        let err = live.append(chunk(150, 100)).unwrap_err(); // 150..249
+        assert!(err.to_string().contains("unsealed tail"), "got: {err}");
+        // State unchanged by the failures.
+        let after = live.counters();
+        assert_eq!(after.epoch, before.epoch);
+        assert_eq!(after.sealed_rows, before.sealed_rows);
+        assert_eq!(after.unsealed_rows, before.unsealed_rows);
+        live.close();
+    }
+
+    #[test]
+    fn asl_over_bound_triggers_rebuild_when_it_helps() {
+        // One-partition chunks arriving 0, 2, 3, 4, then 1 late: the ASL
+        // grows past max_asl=2 but only compresses once the hole is
+        // filled — exactly one rebuild, and the rebuilt index is fully
+        // regular again.
+        let live = live(100, 2);
+        live.append(chunk(0, 100)).unwrap();
+        live.append(chunk(200, 100)).unwrap(); // gap → ASL
+        live.append(chunk(300, 100)).unwrap(); // ASL
+        live.append(chunk(400, 100)).unwrap(); // ASL (len 3 > 2, rebuild refused: hole)
+        assert_eq!(live.counters().rebuilds, 0);
+        live.append(chunk(100, 100)).unwrap(); // fills the hole → rebuild helps
+        let c = live.counters();
+        assert_eq!(c.rebuilds, 1);
+        assert_eq!(c.asl_len, 0, "fully regular after rebuild");
+        assert_eq!(c.sealed_partitions, 5);
+
+        // Renumbered partitions are consistent: parts[i].id == i and data
+        // is in key order.
+        let snap = live.snapshot();
+        let parts = snap.dataset().partitions();
+        for (i, p) in parts.iter().enumerate() {
+            assert_eq!(p.id, i);
+            assert_eq!(p.key_min(), Some(i as i64 * 100));
+        }
+        // And lookups match a freshly built reference.
+        let reference = Cias::build(parts).unwrap();
+        for q in [RangeQuery { lo: 50, hi: 450 }, RangeQuery { lo: 120, hi: 130 }] {
+            assert_eq!(snap.index().unwrap().lookup(q), reference.lookup(q), "{q:?}");
+        }
+        live.close();
+    }
+
+    #[test]
+    fn unsealed_buffer_charged_and_released() {
+        let bm = Arc::new(BlockManager::new(MemoryTracker::unbounded()));
+        let live = LiveDataset::new(
+            7,
+            Schema::stock(),
+            LiveConfig { rows_per_partition: 100, max_asl: 8 },
+            Arc::clone(&bm),
+            None,
+        )
+        .unwrap();
+        live.append(chunk(0, 40)).unwrap();
+        // 40 unsealed rows × (8 + 2×4) bytes.
+        assert_eq!(bm.unsealed_bytes(), 40 * 16);
+        live.append(chunk(40, 60)).unwrap(); // seals 100, 0 pending
+        assert_eq!(bm.unsealed_bytes(), 0);
+        assert!(bm.used_bytes() > 0, "sealed partition stays charged");
+        live.close();
+        assert_eq!(bm.used_bytes(), 0, "close releases everything");
+        // Closed dataset rejects further use.
+        assert!(live.append(chunk(100, 10)).is_err());
+        assert!(live.flush().is_err());
+        live.close(); // idempotent
+    }
+
+    #[test]
+    fn spilling_live_seals_into_store_and_pins_snapshots() {
+        let dir = temp_dir("live-spill");
+        let tracker = MemoryTracker::unbounded();
+        let bm = Arc::new(BlockManager::new(Arc::clone(&tracker)));
+        let store =
+            Arc::new(TieredStore::create(&dir, Schema::stock(), tracker).unwrap());
+        bm.register_store(3, Arc::clone(&store)).unwrap();
+        let live = LiveDataset::new(
+            3,
+            Schema::stock(),
+            LiveConfig { rows_per_partition: 100, max_asl: 8 },
+            bm,
+            Some(Arc::clone(&store)),
+        )
+        .unwrap();
+
+        live.append(chunk(0, 200)).unwrap(); // 2 partitions into the store
+        let old = live.snapshot();
+        assert_eq!(old.num_partitions(), 2);
+        assert_eq!(old.rows(), 200);
+        assert!(old.dataset().is_tiered());
+
+        live.append(chunk(200, 100)).unwrap(); // a third, after the snapshot
+        assert_eq!(store.num_partitions(), 3);
+        // The pinned snapshot still reports its epoch's prefix even though
+        // the shared store grew.
+        assert_eq!(old.num_partitions(), 2);
+        assert_eq!(old.dataset().total_rows(), 200);
+        assert_eq!(old.dataset().key_max(), Some(199));
+        let hits = old.index().unwrap().lookup(RangeQuery { lo: 0, hi: 10_000 });
+        assert_eq!(hits.len(), 2, "index pinned at the snapshot epoch");
+        // Data is fetchable through the store.
+        let p = store.fetch(hits[1].partition).unwrap();
+        assert_eq!(p.key_min(), Some(100));
+
+        // Out-of-order appends are rejected in spilling mode.
+        live.append(chunk(1_000, 10)).unwrap();
+        let err = live.append(chunk(500, 10)).unwrap_err();
+        assert!(err.to_string().contains("out-of-order"), "got: {err}");
+        live.close();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn duplicate_boundary_key_is_rejected_not_wedged() {
+        // Regression: a chunk starting exactly at the watermark used to be
+        // classified in-order, then wedge the dataset forever when the
+        // seal hit the index's inclusive-range overlap check. It must be
+        // a clear, stateless rejection instead.
+        let live = live(2, 8);
+        live.append(chunk(1, 2)).unwrap(); // seals [1, 2], watermark 2
+        let before = live.counters();
+        let dup = chunk(2, 2); // starts at the watermark
+        let err = live.append(dup).unwrap_err();
+        assert!(matches!(err, OsebaError::Index(_) | OsebaError::Ingest(_)), "got: {err}");
+        // Nothing buffered, nothing charged, nothing counted: the stream
+        // continues cleanly past the rejection.
+        let after = live.counters();
+        assert_eq!(after, before);
+        live.append(chunk(3, 2)).unwrap(); // seals [3, 4]
+        assert_eq!(live.counters().sealed_rows, 4);
+        // Duplicates inside one chunk are rejected up front too.
+        let inside = Chunk { keys: vec![10, 10], columns: vec![vec![0.0; 2], vec![0.0; 2]] };
+        assert!(live.append(inside).is_err());
+        live.close();
+    }
+
+    #[test]
+    fn rejects_malformed_chunks() {
+        let live = live(100, 8);
+        // Wrong width.
+        let bad = Chunk { keys: vec![1], columns: vec![vec![0.0]] };
+        assert!(live.append(bad).is_err());
+        // Ragged.
+        let bad = Chunk { keys: vec![1, 2], columns: vec![vec![0.0; 2], vec![0.0]] };
+        assert!(live.append(bad).is_err());
+        // Unsorted.
+        let bad = Chunk { keys: vec![5, 3], columns: vec![vec![0.0; 2], vec![0.0; 2]] };
+        assert!(live.append(bad).is_err());
+        // Empty chunk is a no-op, not an error.
+        let empty = Chunk { keys: vec![], columns: vec![vec![], vec![]] };
+        assert_eq!(live.append(empty).unwrap(), 0);
+        live.close();
+    }
+}

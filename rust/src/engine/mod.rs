@@ -1,13 +1,16 @@
 //! The Spark-like in-memory processing substrate: datasets (RDDs) with
-//! lineage, a block manager with storage-memory accounting, and the two
-//! competing selective-access paths (scan-filter vs indexed slices).
+//! lineage, a block manager with storage-memory accounting, the two
+//! competing selective-access paths (scan-filter vs indexed slices), and
+//! live (append-while-serving) datasets with epoch-pinned snapshots.
 
 pub mod block_manager;
 pub mod context;
 pub mod dataset;
+pub mod live;
 pub mod memory;
 
 pub use block_manager::{BlockManager, DatasetId};
 pub use context::{CounterSnapshot, OsebaContext};
 pub use dataset::{Dataset, Lineage, PinnedSlice, PinnedSlices, SliceView};
+pub use live::{EpochSnapshot, LiveConfig, LiveCounters, LiveDataset};
 pub use memory::MemoryTracker;

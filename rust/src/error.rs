@@ -46,8 +46,18 @@ pub enum OsebaError {
     /// offending file.
     Store(String),
 
+    /// Ingestion-pipeline misuse or ordering violations: pushing into a
+    /// finished [`crate::ingest::Ingestor`], appending to a closed live
+    /// dataset, or an out-of-order chunk that overlaps existing data.
+    Ingest(String),
+
     /// Memory budget exhausted and eviction could not reclaim enough.
-    OutOfMemory { requested: usize, budget: usize },
+    OutOfMemory {
+        /// Bytes the failing allocation asked for.
+        requested: usize,
+        /// The configured storage budget in bytes.
+        budget: usize,
+    },
 
     /// Underlying I/O failure. `path` names the offending file when known
     /// (empty for pathless sources such as sockets).
@@ -74,6 +84,7 @@ impl fmt::Display for OsebaError {
             OsebaError::Config(m) => write!(f, "config error: {m}"),
             OsebaError::Json(m) => write!(f, "json error: {m}"),
             OsebaError::Store(m) => write!(f, "store error: {m}"),
+            OsebaError::Ingest(m) => write!(f, "ingest error: {m}"),
             OsebaError::OutOfMemory { requested, budget } => write!(
                 f,
                 "out of storage memory: requested {requested} bytes, budget {budget}"
@@ -124,6 +135,8 @@ mod tests {
         assert!(e.to_string().contains("unknown column"));
         let e = OsebaError::OutOfMemory { requested: 10, budget: 5 };
         assert!(e.to_string().contains("requested 10"));
+        let e = OsebaError::Ingest("push after finish".into());
+        assert!(e.to_string().contains("ingest error"));
     }
 
     #[test]

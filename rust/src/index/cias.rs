@@ -123,15 +123,14 @@ impl Cias {
                 m.id, expected_id
             )));
         }
-        let prev_max = if let Some(last) = self.asl.last() {
-            Some(last.key_max)
-        } else if self.regular_parts > 0 {
-            Some(
-                self.base_key
-                    + ((self.regular_parts * self.rows_per_part) as i64 - 1) * self.step,
-            )
-        } else {
-            None
+        // Overall maximum key covered so far. With only in-order appends
+        // the last ASL entry dominates; after an out-of-order
+        // [`Self::absorb_meta`] the ASL may hold entries *below* the
+        // compressed region, so both maxima must be considered.
+        let asl_max = self.asl.iter().map(|e| e.key_max).max();
+        let prev_max = match (self.regular_max(), asl_max) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
         };
         // Inclusive ranges: equality with the previous key_max is an
         // overlap (shared boundary key), mirroring `from_meta`.
@@ -171,6 +170,71 @@ impl Cias {
         } else {
             self.asl.push(m);
         }
+        Ok(())
+    }
+
+    /// Largest key of the compressed region, `None` when it is empty.
+    fn regular_max(&self) -> Option<i64> {
+        (self.regular_parts > 0).then(|| {
+            self.base_key
+                + ((self.regular_parts * self.rows_per_part) as i64 - 1) * self.step
+        })
+    }
+
+    /// Absorb an **out-of-order** (late-arriving) partition into the ASL.
+    ///
+    /// The partition's id must still continue the creation sequence (ids
+    /// number partitions in arrival order), but its key range may fall
+    /// anywhere that does not overlap the compressed region or an existing
+    /// ASL entry — the gap-fill case of the paper's "irregular partitions"
+    /// (§III-B). O(ASL) insertion keeps the list sorted by key so lookups
+    /// stay a short binary search.
+    ///
+    /// Note: an index that has absorbed out-of-order partitions no longer
+    /// satisfies the sequential-id invariant [`Cias::from_components`]
+    /// validates, so it cannot be snapshotted to a store manifest without
+    /// a rebuild that renumbers partitions in key order (the live
+    /// dataset's rebuild does exactly that).
+    pub fn absorb_meta(&mut self, m: PartitionMeta) -> Result<()> {
+        let expected_id = self.num_partitions();
+        if m.id != expected_id {
+            return Err(OsebaError::Index(format!(
+                "absorb out of sequence: got partition {}, expected {}",
+                m.id, expected_id
+            )));
+        }
+        if m.key_min > m.key_max {
+            return Err(OsebaError::Index(format!(
+                "absorbed partition has inverted range ({} > {})",
+                m.key_min, m.key_max
+            )));
+        }
+        if let Some(reg_max) = self.regular_max() {
+            if m.key_min <= reg_max && m.key_max >= self.base_key {
+                return Err(OsebaError::Index(format!(
+                    "absorbed partition [{}, {}] overlaps the compressed region [{}, {reg_max}]",
+                    m.key_min, m.key_max, self.base_key
+                )));
+            }
+        }
+        let pos = self.asl.partition_point(|e| e.key_min < m.key_min);
+        if pos > 0 && self.asl[pos - 1].key_max >= m.key_min {
+            return Err(OsebaError::Index(format!(
+                "absorbed partition [{}, {}] overlaps partition {}",
+                m.key_min,
+                m.key_max,
+                self.asl[pos - 1].id
+            )));
+        }
+        if pos < self.asl.len() && self.asl[pos].key_min <= m.key_max {
+            return Err(OsebaError::Index(format!(
+                "absorbed partition [{}, {}] overlaps partition {}",
+                m.key_min,
+                m.key_max,
+                self.asl[pos].id
+            )));
+        }
+        self.asl.insert(pos, m);
         Ok(())
     }
 
@@ -525,6 +589,81 @@ mod tests {
         let mut bad_id = asl.to_vec();
         bad_id[0].id += 1;
         assert!(Cias::from_components(bk, st, rpp, rp, bad_id).is_err());
+    }
+
+    #[test]
+    fn absorb_out_of_order_fills_gaps_and_stays_sorted() {
+        // Regular region: keys 500..990 (2 partitions of 25 rows, step 10).
+        let parts = uniform_parts(50, 25, 10);
+        let mut c = Cias::from_meta(extract_like(&parts)).unwrap();
+        // In-order append with a gap → ASL.
+        let gapped =
+            PartitionMeta { id: 2, key_min: 5_000, key_max: 5_240, rows: 25, step: Some(10) };
+        c.append_meta(gapped).unwrap();
+        // Late partition landing in the gap between 990 and 5000.
+        let late =
+            PartitionMeta { id: 3, key_min: 2_000, key_max: 2_100, rows: 11, step: Some(10) };
+        c.absorb_meta(late).unwrap();
+        assert_eq!(c.asl_len(), 2);
+        // Even later partition *before* the compressed region.
+        let early = PartitionMeta { id: 4, key_min: 0, key_max: 400, rows: 41, step: Some(10) };
+        c.absorb_meta(early).unwrap();
+        assert_eq!(c.asl_len(), 3);
+        // Lookups across all regions resolve the right partitions.
+        let got = c.lookup(RangeQuery { lo: 0, hi: 10_000 });
+        let ids: Vec<usize> = got.iter().map(|s| s.partition).collect();
+        // Compressed region first (0, 1), then ASL in key order (4, 3, 2).
+        assert_eq!(ids, vec![0, 1, 4, 3, 2]);
+        let hit = c.lookup(RangeQuery { lo: 2_050, hi: 2_060 });
+        assert_eq!(hit, vec![PartitionSlice { partition: 3, row_start: 5, row_end: 7 }]);
+    }
+
+    #[test]
+    fn absorb_rejects_overlap_and_bad_sequence() {
+        let parts = uniform_parts(50, 25, 10); // keys 500..990
+        let mut c = Cias::from_meta(extract_like(&parts)).unwrap();
+        // Wrong id.
+        let bad_id =
+            PartitionMeta { id: 7, key_min: 2_000, key_max: 2_100, rows: 11, step: Some(10) };
+        assert!(c.absorb_meta(bad_id).is_err());
+        // Overlaps the compressed region.
+        let overlap_reg =
+            PartitionMeta { id: 2, key_min: 600, key_max: 700, rows: 11, step: Some(10) };
+        assert!(c.absorb_meta(overlap_reg).is_err());
+        // Valid absorb, then overlaps with the absorbed entry (both sides).
+        let ok = PartitionMeta { id: 2, key_min: 2_000, key_max: 2_100, rows: 11, step: Some(10) };
+        c.absorb_meta(ok).unwrap();
+        let left =
+            PartitionMeta { id: 3, key_min: 1_500, key_max: 2_000, rows: 2, step: None };
+        assert!(c.absorb_meta(left).is_err());
+        let right =
+            PartitionMeta { id: 3, key_min: 2_100, key_max: 2_300, rows: 2, step: None };
+        assert!(c.absorb_meta(right).is_err());
+        // Inverted range.
+        let inverted = PartitionMeta { id: 3, key_min: 9, key_max: 5, rows: 1, step: None };
+        assert!(c.absorb_meta(inverted).is_err());
+    }
+
+    #[test]
+    fn append_after_early_absorb_checks_true_maximum() {
+        // Regression shape: an absorbed entry *below* the regular region
+        // must not shadow the regular region's maximum in append_meta's
+        // overlap check.
+        let parts = uniform_parts(50, 25, 10); // regular keys 500..990
+        let mut c = Cias::from_meta(extract_like(&parts)).unwrap();
+        let early = PartitionMeta { id: 2, key_min: 0, key_max: 400, rows: 41, step: Some(10) };
+        c.absorb_meta(early).unwrap();
+        // An "append" inside the regular region must be rejected even
+        // though the ASL's last key_max (400) is below its key_min.
+        let overlapping =
+            PartitionMeta { id: 3, key_min: 700, key_max: 800, rows: 11, step: Some(10) };
+        assert!(c.append_meta(overlapping).is_err());
+        // A genuinely new maximum is accepted (ASL, since asl non-empty).
+        let next =
+            PartitionMeta { id: 3, key_min: 1_000, key_max: 1_100, rows: 11, step: Some(10) };
+        c.append_meta(next).unwrap();
+        assert_eq!(c.asl_len(), 2);
+        assert_eq!(c.regular_parts(), 2);
     }
 
     #[test]

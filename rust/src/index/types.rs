@@ -7,7 +7,9 @@ use crate::error::{OsebaError, Result};
 /// from index i to j" (§III-A).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct RangeQuery {
+    /// Lower key bound, inclusive.
     pub lo: i64,
+    /// Upper key bound, inclusive.
     pub hi: i64,
 }
 
@@ -26,12 +28,16 @@ impl RangeQuery {
 /// dispatches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PartitionSlice {
+    /// Target partition id.
     pub partition: usize,
+    /// First valid row (inclusive).
     pub row_start: usize,
+    /// One past the last valid row.
     pub row_end: usize,
 }
 
 impl PartitionSlice {
+    /// Number of rows the slice covers.
     pub fn rows(&self) -> usize {
         self.row_end - self.row_start
     }
@@ -58,9 +64,13 @@ pub trait ContentIndex: Send + Sync {
 /// Shared per-partition metadata record extracted at load time.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PartitionMeta {
+    /// Partition id within its dataset.
     pub id: usize,
+    /// Smallest key the partition holds.
     pub key_min: i64,
+    /// Largest key the partition holds.
     pub key_max: i64,
+    /// Valid row count.
     pub rows: usize,
     /// Key step within the partition; `None` if irregular or single-row.
     pub step: Option<i64>,

@@ -1,0 +1,229 @@
+//! `LiveIngestor` — the long-lived writer half of a live dataset.
+//!
+//! Where [`crate::ingest::run_pipeline`] drives a *finish-once* load (the
+//! source ends, the tail seals, the dataset is done), a live ingestor
+//! stays up for the lifetime of a feed: chunks are sent into a bounded
+//! channel (backpressure when the sealer falls behind) and a consumer
+//! thread appends them to the shared [`LiveDataset`], which publishes
+//! epochs that concurrent queries snapshot. Spill-to-disk of sealed cold
+//! partitions comes for free when the live dataset was created with
+//! [`crate::engine::OsebaContext::create_live_spilling`].
+
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::engine::LiveDataset;
+use crate::error::{OsebaError, Result};
+use crate::ingest::Chunk;
+use crate::storage::RecordBatch;
+
+/// Cut a batch into `chunk_rows`-sized chunks (the last may be shorter) —
+/// the standard way tests, benches and the CSV streamer feed a live
+/// pipeline.
+pub fn chunk_batch(batch: &RecordBatch, chunk_rows: usize) -> Vec<Chunk> {
+    let chunk_rows = chunk_rows.max(1);
+    let mut out = Vec::new();
+    let mut lo = 0;
+    while lo < batch.rows() {
+        let hi = (lo + chunk_rows).min(batch.rows());
+        out.push(Chunk {
+            keys: batch.keys[lo..hi].to_vec(),
+            columns: batch.columns.iter().map(|c| c[lo..hi].to_vec()).collect(),
+        });
+        lo = hi;
+    }
+    out
+}
+
+/// A running ingest pipeline into a [`LiveDataset`].
+///
+/// Producers call [`LiveIngestor::send`] (blocking once `queue_depth`
+/// chunks are in flight — the standard streaming-orchestrator contract);
+/// a dedicated consumer thread drains the channel into
+/// [`LiveDataset::append`]. [`LiveIngestor::finish`] closes the channel,
+/// joins the consumer, and seals the unsealed tail — but unlike the
+/// one-shot pipeline the dataset itself stays open for a later ingestor
+/// (or direct appends).
+pub struct LiveIngestor {
+    live: Arc<LiveDataset>,
+    tx: Option<SyncSender<Chunk>>,
+    consumer: Option<JoinHandle<Result<usize>>>,
+}
+
+impl LiveIngestor {
+    /// Spawn the consumer thread over `live` with a channel of depth
+    /// `queue_depth` (clamped to ≥ 1).
+    pub fn spawn(live: Arc<LiveDataset>, queue_depth: usize) -> LiveIngestor {
+        let (tx, rx): (SyncSender<Chunk>, Receiver<Chunk>) =
+            std::sync::mpsc::sync_channel(queue_depth.max(1));
+        let sink = Arc::clone(&live);
+        let consumer = std::thread::Builder::new()
+            .name("oseba-live-ingest".into())
+            .spawn(move || -> Result<usize> {
+                let mut rows = 0usize;
+                for chunk in rx {
+                    rows += chunk.rows();
+                    sink.append(chunk)?;
+                }
+                Ok(rows)
+            })
+            .expect("spawn live-ingest consumer");
+        LiveIngestor { live, tx: Some(tx), consumer: Some(consumer) }
+    }
+
+    /// The dataset this ingestor feeds.
+    pub fn live(&self) -> &Arc<LiveDataset> {
+        &self.live
+    }
+
+    /// Queue one chunk, blocking while the channel is full. Fails once the
+    /// consumer has died (its error is reported by [`Self::finish`]).
+    pub fn send(&self, chunk: Chunk) -> Result<()> {
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| OsebaError::Ingest("send after finish".into()))?;
+        tx.send(chunk).map_err(|_| {
+            OsebaError::Ingest(
+                "live-ingest consumer stopped (append failed; see finish())".into(),
+            )
+        })
+    }
+
+    /// Queue one chunk without blocking. Returns `Ok(false)` when the
+    /// channel is full (caller may drop, retry or throttle), `Ok(true)`
+    /// when queued.
+    pub fn try_send(&self, chunk: Chunk) -> Result<bool> {
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| OsebaError::Ingest("send after finish".into()))?;
+        match tx.try_send(chunk) {
+            Ok(()) => Ok(true),
+            Err(TrySendError::Full(_)) => Ok(false),
+            Err(TrySendError::Disconnected(_)) => Err(OsebaError::Ingest(
+                "live-ingest consumer stopped (append failed; see finish())".into(),
+            )),
+        }
+    }
+
+    /// Close the channel, wait for the consumer to drain, and seal the
+    /// unsealed tail. Returns the total rows this ingestor appended. The
+    /// first append error from the consumer surfaces here.
+    pub fn finish(mut self) -> Result<usize> {
+        self.tx = None; // closes the channel; the consumer's loop ends
+        let handle = self.consumer.take().expect("finish called once");
+        let rows = handle
+            .join()
+            .map_err(|_| OsebaError::Cluster("live-ingest consumer panicked".into()))??;
+        self.live.flush()?;
+        Ok(rows)
+    }
+}
+
+impl Drop for LiveIngestor {
+    fn drop(&mut self) {
+        // Close the channel and reap the consumer so a dropped (not
+        // finished) ingestor cannot leak a thread; errors are discarded —
+        // callers who care use `finish`.
+        self.tx = None;
+        if let Some(handle) = self.consumer.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ContextConfig;
+    use crate::datagen::ClimateGen;
+    use crate::engine::{LiveConfig, OsebaContext};
+    use crate::index::{ContentIndex, RangeQuery};
+    use crate::storage::Schema;
+
+    fn ctx() -> OsebaContext {
+        OsebaContext::new(ContextConfig { num_workers: 2, memory_budget: None })
+    }
+
+    #[test]
+    fn pipeline_matches_batch_loaded_reference() {
+        let c = ctx();
+        let live = c
+            .create_live(
+                Schema::climate(),
+                LiveConfig { rows_per_partition: 1024, max_asl: 8 },
+            )
+            .unwrap();
+        let batch = ClimateGen::default().generate(10_000);
+        let ing = LiveIngestor::spawn(Arc::clone(&live), 2);
+        for chunk in chunk_batch(&batch, 333) {
+            ing.send(chunk).unwrap();
+        }
+        let rows = ing.finish().unwrap();
+        assert_eq!(rows, 10_000);
+
+        let snap = live.snapshot();
+        assert_eq!(snap.rows(), 10_000);
+        assert_eq!(snap.num_partitions(), 10);
+        // Index equals the batch-built reference.
+        let ref_parts = crate::storage::partition_batch_uniform(&batch, 1024).unwrap();
+        let ref_index = crate::index::Cias::build(&ref_parts).unwrap();
+        for q in [
+            RangeQuery { lo: 0, hi: 3600 * 999 },
+            RangeQuery { lo: 3600 * 2000, hi: 3600 * 8000 },
+        ] {
+            assert_eq!(snap.index().unwrap().lookup(q), ref_index.lookup(q), "{q:?}");
+        }
+        // Data identical too.
+        for (a, b) in snap.dataset().partitions().iter().zip(&ref_parts) {
+            assert_eq!(a.keys, b.keys);
+            assert_eq!(a.columns[0], b.columns[0]);
+        }
+        live.close();
+    }
+
+    #[test]
+    fn consumer_error_surfaces_at_finish() {
+        let c = ctx();
+        let live = c
+            .create_live(Schema::stock(), LiveConfig::default())
+            .unwrap();
+        let ing = LiveIngestor::spawn(Arc::clone(&live), 1);
+        let ok = Chunk { keys: vec![10, 20], columns: vec![vec![0.0; 2], vec![0.0; 2]] };
+        ing.send(ok).unwrap();
+        // Wrong width: the consumer's append fails and the pipeline stops.
+        let bad = Chunk { keys: vec![30], columns: vec![vec![0.0]] };
+        ing.send(bad).unwrap();
+        let err = ing.finish().unwrap_err();
+        assert!(err.to_string().contains("schema"), "got: {err}");
+        live.close();
+    }
+
+    #[test]
+    fn dataset_outlives_ingestor_sessions() {
+        let c = ctx();
+        let live = c
+            .create_live(
+                Schema::stock(),
+                LiveConfig { rows_per_partition: 4, max_asl: 8 },
+            )
+            .unwrap();
+        let mk = |start: i64| Chunk {
+            keys: (0..4).map(|i| start + i).collect(),
+            columns: vec![vec![1.0; 4], vec![2.0; 4]],
+        };
+        let ing = LiveIngestor::spawn(Arc::clone(&live), 1);
+        ing.send(mk(0)).unwrap();
+        assert_eq!(ing.finish().unwrap(), 4);
+        // A second session keeps appending to the same dataset.
+        let ing = LiveIngestor::spawn(Arc::clone(&live), 1);
+        ing.send(mk(10)).unwrap();
+        assert_eq!(ing.finish().unwrap(), 4);
+        let snap = live.snapshot();
+        assert_eq!(snap.rows(), 8);
+        assert_eq!(snap.num_partitions(), 2);
+        live.close();
+    }
+}

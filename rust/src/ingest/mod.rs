@@ -11,7 +11,7 @@
 //! (or a memory budget) falls behind, the producer blocks — the standard
 //! streaming-orchestrator contract.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 
@@ -22,21 +22,35 @@ use crate::index::{Cias, PartitionMeta};
 use crate::storage::{Partition, RecordBatch, Schema};
 use crate::store::TieredStore;
 
+pub mod live;
+
+pub use live::{chunk_batch, LiveIngestor};
+
 /// A chunk of rows flowing through the pipeline (columnar, sorted keys).
 #[derive(Clone, Debug)]
 pub struct Chunk {
+    /// Ordering keys of the chunk's rows, non-decreasing.
     pub keys: Vec<i64>,
     /// One vector per schema column.
     pub columns: Vec<Vec<f32>>,
 }
 
 impl Chunk {
+    /// Copy a whole batch into one chunk.
     pub fn from_batch(b: &RecordBatch) -> Chunk {
         Chunk { keys: b.keys.clone(), columns: b.columns.clone() }
     }
 
+    /// Number of rows in the chunk.
     pub fn rows(&self) -> usize {
         self.keys.len()
+    }
+
+    /// Raw (unpadded) byte footprint of the buffered rows: 8 bytes of key
+    /// plus 4 bytes per value column per row — what an unsealed chunk
+    /// charges the block manager.
+    pub fn raw_bytes(&self) -> usize {
+        self.rows() * (8 + 4 * self.columns.len())
     }
 }
 
@@ -64,6 +78,9 @@ pub struct Ingestor {
     ingested_rows: AtomicUsize,
     // Partial-partition buffer.
     pending: Mutex<Chunk>,
+    /// Set by [`Self::finish`]; a finished ingestor rejects further pushes
+    /// (they used to be buffered and silently dropped).
+    finished: AtomicBool,
 }
 
 impl Ingestor {
@@ -85,6 +102,7 @@ impl Ingestor {
             spill: None,
             ingested_rows: AtomicUsize::new(0),
             pending: Mutex::new(Chunk { keys: Vec::new(), columns: vec![Vec::new(); width] }),
+            finished: AtomicBool::new(false),
         })
     }
 
@@ -129,6 +147,13 @@ impl Ingestor {
             return Err(OsebaError::Schema("chunk keys not sorted".into()));
         }
         let mut pending = self.pending.lock().unwrap();
+        if self.finished.load(Ordering::SeqCst) {
+            // Used to be accepted: the rows were buffered after the final
+            // seal and silently never flushed. Misuse is now a clear error.
+            return Err(OsebaError::Ingest(
+                "push after finish: the ingestor has sealed its final partition".into(),
+            ));
+        }
         if let (Some(&last), Some(&first)) = (pending.keys.last(), chunk.keys.first()) {
             if first < last {
                 return Err(OsebaError::Schema(format!(
@@ -153,9 +178,12 @@ impl Ingestor {
         Ok(())
     }
 
-    /// Flush the partial tail as a final (shorter) partition.
+    /// Flush the partial tail as a final (shorter) partition. Idempotent;
+    /// after the first call the ingestor is sealed and [`Self::push`]
+    /// returns [`OsebaError::Ingest`].
     pub fn finish(&self) -> Result<()> {
         let mut pending = self.pending.lock().unwrap();
+        self.finished.store(true, Ordering::SeqCst);
         if pending.keys.is_empty() {
             return Ok(());
         }
@@ -410,5 +438,30 @@ mod tests {
         let (parts, index) = ing.snapshot();
         assert!(parts.is_empty());
         assert!(index.is_none());
+    }
+
+    #[test]
+    fn push_after_finish_is_a_clear_error() {
+        // Regression: pushes after finish used to be buffered and silently
+        // dropped (never sealed); now they fail loudly.
+        let ing = Ingestor::new(Schema::stock(), 100, MemoryTracker::unbounded()).unwrap();
+        let chunk = Chunk { keys: vec![1, 2], columns: vec![vec![0.0; 2], vec![0.0; 2]] };
+        ing.push(chunk.clone()).unwrap();
+        ing.finish().unwrap();
+        let err = ing.push(Chunk {
+            keys: vec![3],
+            columns: vec![vec![0.0], vec![0.0]],
+        })
+        .unwrap_err();
+        assert!(
+            matches!(err, OsebaError::Ingest(_)),
+            "want Ingest error, got: {err}"
+        );
+        assert!(err.to_string().contains("finish"), "got: {err}");
+        // The sealed state is unchanged and finish stays idempotent.
+        ing.finish().unwrap();
+        let (parts, _) = ing.snapshot();
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].rows, 2);
     }
 }

@@ -9,18 +9,24 @@
 //!   table-based and CIAS), a leader/worker coordinator ([`coordinator`])
 //!   with a concurrent multi-query batch planner, tiered persistent
 //!   storage ([`store`]: spill-to-disk `.oseg` segments with Hot/Cold
-//!   residency and super-index manifest snapshots), all over a simulated
-//!   cluster ([`cluster`]), and the PJRT runtime ([`runtime`]) that
-//!   executes AOT-compiled analysis kernels (behind the `xla` feature;
-//!   the default build uses the pure-rust native backend).
+//!   residency and super-index manifest snapshots), **live ingestion**
+//!   ([`engine::LiveDataset`] / [`ingest::LiveIngestor`]: append while
+//!   serving, with epoch-pinned snapshots and incremental super-index
+//!   maintenance), all over a simulated cluster ([`cluster`]), and the
+//!   PJRT runtime ([`runtime`]) that executes AOT-compiled analysis
+//!   kernels (behind the `xla` feature; the default build uses the
+//!   pure-rust native backend).
 //! * **Layer 2 (python/compile/model.py)** — JAX analysis graphs, lowered
 //!   once to `artifacts/*.hlo.txt`.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the masked
 //!   per-block statistics the analyses hot-loop on.
 //!
-//! See the repository-root `DESIGN.md` for the system inventory and
-//! `README.md` for the build/test/bench quickstart; the `rust/benches/`
-//! targets reproduce the paper's Fig 4 / Fig 6 measurements.
+//! See the repository-root `DESIGN.md` for the system inventory,
+//! `README.md` for the build/test/bench quickstart, and `docs/PROTOCOL.md`
+//! for the server wire protocol; the `rust/benches/` targets reproduce the
+//! paper's Fig 4 / Fig 6 measurements.
+
+#![warn(missing_docs)]
 
 pub mod analysis;
 pub mod bench;
@@ -48,9 +54,12 @@ pub mod prelude {
     pub use crate::analysis::{Analyzer, PeriodStats};
     pub use crate::config::ContextConfig;
     pub use crate::coordinator::{plan_batch, Coordinator, IndexKind, Method, PlannedQuery};
-    pub use crate::engine::{Dataset, OsebaContext};
+    pub use crate::engine::{
+        Dataset, EpochSnapshot, LiveConfig, LiveCounters, LiveDataset, OsebaContext,
+    };
     pub use crate::error::{OsebaError, Result};
     pub use crate::index::{Cias, ContentIndex, RangeQuery, TableIndex};
+    pub use crate::ingest::{chunk_batch, Chunk, LiveIngestor};
     pub use crate::runtime::AnalysisBackend;
     pub use crate::storage::Schema;
     pub use crate::store::{Residency, StoreCounters, TieredStore};

@@ -7,7 +7,11 @@
 //!              as one concurrent batch, printing the merged plan, the
 //!              per-query stats, and the partitions-touched savings.
 //! * `serve`  — load a dataset and serve interactive range-stat queries
-//!              over TCP (line-delimited JSON).
+//!              over TCP (line-delimited JSON; see docs/PROTOCOL.md).
+//!              With `--live`, start *empty* and accept `append` ops while
+//!              serving snapshot-consistent queries.
+//! * `ingest` — stream a CSV (file or stdin) into a running `serve --live`
+//!              server as `append` requests.
 //! * `index`  — build both indexes over a dataset and report their
 //!              footprint and lookup behaviour.
 //! * `save`   — generate a dataset and persist it as an `.oseg` segment
@@ -28,7 +32,7 @@ use oseba::cli::{bool_flag, flag, Cli};
 use oseba::config::{parse_bytes, AppConfig, BackendKind};
 use oseba::coordinator::{plan_batch, run_session, Coordinator, IndexKind, Method};
 use oseba::datagen::ClimateGen;
-use oseba::engine::MemoryTracker;
+use oseba::engine::{LiveConfig, MemoryTracker};
 use oseba::error::{OsebaError, Result};
 use oseba::index::{ContentIndex, RangeQuery};
 use oseba::runtime::make_backend;
@@ -36,6 +40,7 @@ use oseba::server::QueryServer;
 use oseba::storage::partition_batch_uniform;
 use oseba::store::TieredStore;
 use oseba::util::humansize;
+use oseba::util::json::Json;
 use oseba::util::rng::Xoshiro256;
 
 fn cli() -> Cli {
@@ -92,6 +97,25 @@ fn cli() -> Cli {
             let mut f = common();
             f.push(flag("addr", "bind address", Some("127.0.0.1:7341")));
             f.push(flag("index", "table | cias", Some("cias")));
+            f.push(bool_flag(
+                "live",
+                "start empty and accept `append` ops while serving (ignores --size)",
+            ));
+            f.push(flag(
+                "schema",
+                "live dataset schema: climate | stock | cdr",
+                Some("climate"),
+            ));
+            f.push(flag(
+                "rows-per-partition",
+                "live mode: rows per sealed partition",
+                Some("4096"),
+            ));
+            f.push(flag(
+                "max-asl",
+                "live mode: ASL length that triggers an index rebuild",
+                Some("8"),
+            ));
             f.push(flag(
                 "memory-budget",
                 "storage budget (k/m/g); excess partitions spill to disk",
@@ -103,6 +127,13 @@ fn cli() -> Cli {
                 None,
             ));
             f
+        })
+        .command("ingest", "stream a CSV into a running `serve --live` server", {
+            vec![
+                flag("addr", "server address", Some("127.0.0.1:7341")),
+                flag("file", "CSV path ('-' for stdin)", Some("-")),
+                flag("chunk-rows", "rows per append request", Some("2048")),
+            ]
         })
         .command("index", "build and inspect both indexes", common())
         .command("save", "generate a dataset and persist it as a segment store", {
@@ -389,12 +420,199 @@ fn cmd_serve(p: &oseba::cli::Parsed) -> Result<()> {
     let index_kind: IndexKind = p.get("index").unwrap().parse()?;
     let backend = make_backend(cfg.backend, &cfg.artifacts_dir)?;
     let coord = Arc::new(Coordinator::new(&cfg, backend)?);
+    let addr = p.get("addr").unwrap();
+    if p.get_bool("live") {
+        return cmd_serve_live(p, &cfg, coord, addr);
+    }
     let (ds, cleanup) = load_maybe_tiered(&coord, &cfg, p)?;
     let _cleanup = SpillCleanup(cleanup);
     let server = QueryServer::new(coord, ds, index_kind)?;
-    let addr = p.get("addr").unwrap();
     eprintln!("serving on {addr} (op: info | stats | shutdown)");
     server.serve(addr, |a| eprintln!("bound {a}"))
+}
+
+/// `serve --live`: start an empty live dataset (resident, or spilling when
+/// a budget / spill dir is configured) and accept `append` ops alongside
+/// snapshot-consistent queries.
+fn cmd_serve_live(
+    p: &oseba::cli::Parsed,
+    cfg: &AppConfig,
+    coord: Arc<Coordinator>,
+    addr: &str,
+) -> Result<()> {
+    let schema = match p.get("schema").unwrap() {
+        "climate" => oseba::storage::Schema::climate(),
+        "stock" => oseba::storage::Schema::stock(),
+        "cdr" => oseba::storage::Schema::cdr(),
+        other => {
+            return Err(OsebaError::Config(format!("unknown schema '{other}'")));
+        }
+    };
+    let live_cfg = LiveConfig {
+        rows_per_partition: p.get_parse("rows-per-partition")?.unwrap(),
+        max_asl: p.get_parse("max-asl")?.unwrap(),
+    };
+    let spill_dir = match p.get("spill-dir") {
+        Some(d) if !d.is_empty() => Some(std::path::PathBuf::from(d)),
+        _ => cfg.ctx.memory_budget.map(|_| {
+            std::env::temp_dir().join(format!("oseba-live-{}", std::process::id()))
+        }),
+    };
+    let cleanup = match (p.get("spill-dir"), &spill_dir) {
+        (Some(d), _) if !d.is_empty() => None, // user-chosen: keep
+        (_, Some(d)) => Some(d.clone()),       // auto temp: remove on exit
+        _ => None,
+    };
+    let _cleanup = SpillCleanup(cleanup);
+    let live = match &spill_dir {
+        Some(dir) => coord.create_live_spilling(schema, live_cfg, dir)?,
+        None => coord.create_live(schema, live_cfg)?,
+    };
+    eprintln!(
+        "serving LIVE on {addr} (op: info | stats | append | snapshot | shutdown); \
+         rows/partition {}, max ASL {}{}",
+        live_cfg.rows_per_partition,
+        live_cfg.max_asl,
+        spill_dir
+            .as_ref()
+            .map(|d| format!(", spill: {}", d.display()))
+            .unwrap_or_default()
+    );
+    let server = QueryServer::live(coord, live);
+    server.serve(addr, |a| eprintln!("bound {a}"))
+}
+
+/// The `append` request for one buffered chunk of rows.
+fn append_request(keys: &[i64], cols: &[Vec<f32>]) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("append")),
+        (
+            "keys",
+            Json::arr(keys.iter().map(|&k| Json::num(k as f64)).collect()),
+        ),
+        (
+            "columns",
+            Json::arr(
+                cols.iter()
+                    .map(|c| Json::arr(c.iter().map(|&v| Json::num(v as f64)).collect()))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// `ingest`: stream a CSV into a running live server as `append` requests.
+/// Rows are parsed and shipped incrementally — a chunk every `chunk_rows`
+/// lines — so an unbounded pipe on stdin (a live feed) works and memory
+/// stays O(chunk), not O(file).
+fn cmd_ingest(p: &oseba::cli::Parsed) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+
+    let addr = p.get("addr").unwrap();
+    let file = p.get("file").unwrap();
+    let chunk_rows: usize = p.get_parse("chunk-rows")?.unwrap();
+    if chunk_rows == 0 {
+        return Err(OsebaError::Config("chunk-rows must be > 0".into()));
+    }
+    let reader: Box<dyn BufRead> = if file == "-" {
+        Box::new(BufReader::new(std::io::stdin()))
+    } else {
+        let f = std::fs::File::open(file).map_err(|e| OsebaError::io(file, e))?;
+        Box::new(BufReader::new(f))
+    };
+    let mut lines = reader.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| OsebaError::Schema("empty csv".into()))??;
+    let width = header
+        .split(',')
+        .count()
+        .checked_sub(1)
+        .filter(|w| *w >= 1)
+        .ok_or_else(|| {
+            OsebaError::Schema("csv header needs a key column and value columns".into())
+        })?;
+    eprintln!("streaming '{file}' to {addr} in chunks of {chunk_rows} ({width} value columns)");
+
+    let stream = std::net::TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut resp_reader = BufReader::new(stream);
+    let mut ask = |req: &Json| -> Result<Json> {
+        writer.write_all(req.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        let mut line = String::new();
+        resp_reader.read_line(&mut line)?;
+        let resp = Json::parse(line.trim())?;
+        if resp.get("ok") != Some(&Json::Bool(true)) {
+            let msg = resp
+                .get("error")
+                .and_then(|e| e.as_str())
+                .unwrap_or("unknown server error");
+            return Err(OsebaError::Ingest(format!("server rejected request: {msg}")));
+        }
+        Ok(resp)
+    };
+
+    let bad_row = |lineno: usize, msg: &str| {
+        // +2: one for the header, one for 1-based numbering.
+        OsebaError::Schema(format!("csv row {}: {msg}", lineno + 2))
+    };
+    let mut keys: Vec<i64> = Vec::with_capacity(chunk_rows);
+    let mut cols: Vec<Vec<f32>> = vec![Vec::with_capacity(chunk_rows); width];
+    let mut sent = 0usize;
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut fields = line.split(',').map(str::trim);
+        let key: i64 = fields
+            .next()
+            .unwrap_or("")
+            .parse()
+            .map_err(|_| bad_row(lineno, "key not an integer"))?;
+        keys.push(key);
+        for (c, col) in cols.iter_mut().enumerate() {
+            let f = fields
+                .next()
+                .ok_or_else(|| bad_row(lineno, &format!("missing column {}", c + 1)))?;
+            col.push(f.parse().map_err(|_| bad_row(lineno, "value not a number"))?);
+        }
+        if fields.next().is_some() {
+            return Err(bad_row(lineno, "too many columns"));
+        }
+        if keys.len() >= chunk_rows {
+            let resp = ask(&append_request(&keys, &cols))?;
+            sent += keys.len();
+            keys.clear();
+            for c in &mut cols {
+                c.clear();
+            }
+            eprint!(
+                "\r{sent} rows | epoch {} | sealed {} | unsealed {}   ",
+                resp.get("epoch").and_then(|e| e.as_usize()).unwrap_or(0),
+                resp.get("sealed_rows").and_then(|e| e.as_usize()).unwrap_or(0),
+                resp.get("unsealed_rows").and_then(|e| e.as_usize()).unwrap_or(0),
+            );
+        }
+    }
+    if !keys.is_empty() {
+        ask(&append_request(&keys, &cols))?;
+        sent += keys.len();
+    }
+    eprintln!();
+    let snap = ask(&Json::obj(vec![("op", Json::str("snapshot"))]))?;
+    println!(
+        "done: {sent} rows sent; server at epoch {} with {} partitions / {} rows \
+         sealed ({} unsealed, asl {}, rebuilds {})",
+        snap.get("epoch").and_then(|e| e.as_usize()).unwrap_or(0),
+        snap.get("partitions").and_then(|e| e.as_usize()).unwrap_or(0),
+        snap.get("rows").and_then(|e| e.as_usize()).unwrap_or(0),
+        snap.get("unsealed_rows").and_then(|e| e.as_usize()).unwrap_or(0),
+        snap.get("asl_len").and_then(|e| e.as_usize()).unwrap_or(0),
+        snap.get("rebuilds").and_then(|e| e.as_usize()).unwrap_or(0),
+    );
+    Ok(())
 }
 
 fn cmd_index(p: &oseba::cli::Parsed) -> Result<()> {
@@ -536,6 +754,7 @@ fn main() {
         "run" => cmd_run(&parsed),
         "batch" => cmd_batch(&parsed),
         "serve" => cmd_serve(&parsed),
+        "ingest" => cmd_ingest(&parsed),
         "index" => cmd_index(&parsed),
         "save" => cmd_save(&parsed),
         "open" => cmd_open(&parsed),

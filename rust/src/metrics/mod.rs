@@ -31,10 +31,12 @@ pub struct PhaseRecord {
 /// Collects phase records for one method run and renders the series.
 #[derive(Clone, Debug, Default)]
 pub struct SessionMetrics {
+    /// Recorded phases, in execution order.
     pub records: Vec<PhaseRecord>,
 }
 
 impl SessionMetrics {
+    /// An empty collector.
     pub fn new() -> SessionMetrics {
         SessionMetrics::default()
     }
@@ -197,10 +199,12 @@ impl BatchReport {
 pub struct Timer(Instant);
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Timer {
         Timer(Instant::now())
     }
 
+    /// Seconds elapsed since [`Timer::start`].
     pub fn secs(&self) -> f64 {
         self.0.elapsed().as_secs_f64()
     }

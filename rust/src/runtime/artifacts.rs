@@ -11,7 +11,9 @@ use crate::util::json::Json;
 /// Shape + dtype of one parameter or result.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SpecDesc {
+    /// Dimension sizes (empty for a scalar).
     pub shape: Vec<usize>,
+    /// Element dtype name (e.g. "float32").
     pub dtype: String,
 }
 
@@ -36,20 +38,28 @@ impl SpecDesc {
 /// One AOT entry point.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct EntryDesc {
+    /// Entry-point name (manifest key).
     pub name: String,
     /// HLO text file, absolute.
     pub path: PathBuf,
+    /// Parameter specs, in call order.
     pub params: Vec<SpecDesc>,
+    /// Result specs, in return order.
     pub results: Vec<SpecDesc>,
 }
 
 /// The parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Rows per kernel block (must match `storage::BLOCK_ROWS`).
     pub block_rows: usize,
+    /// Histogram bin count the kernels were lowered with.
     pub hist_bins: usize,
+    /// Moving-average windows with dedicated fused kernels.
     pub ma_windows: Vec<usize>,
+    /// Hash of the lowering inputs (artifact staleness check).
     pub fingerprint: String,
+    /// Entry points by name.
     pub entries: BTreeMap<String, EntryDesc>,
 }
 

@@ -1,17 +1,27 @@
 //! Interactive query server: a line-delimited JSON protocol over TCP
-//! (std::net + the crate's thread pool), fronting a loaded dataset with
-//! both access paths. This is the "interactive analysis" deployment shape
-//! the paper motivates (§I: selective bulk analysis "usually involves
-//! interactive analysis").
+//! (std::net + the crate's thread pool), fronting either a **fixed**
+//! (loaded/opened) dataset or a **live** dataset that ingests while it
+//! serves. This is the "interactive analysis" deployment shape the paper
+//! motivates (§I: selective bulk analysis "usually involves interactive
+//! analysis"), extended to the continuously-arriving data that motivates
+//! it in the first place.
 //!
-//! Protocol (one JSON object per line):
+//! One JSON object per line; see `docs/PROTOCOL.md` for the complete
+//! reference (every op, field, error shape, and a worked `nc` session):
 //!
 //! ```text
 //! → {"op":"stats","lo":3600,"hi":7200,"column":"temperature","method":"oseba"}
 //! ← {"ok":true,"count":2,"max":21.4,"min":20.9,"mean":21.1,"std":0.2,"secs":0.0001}
+//! → {"op":"append","keys":[3600,7200],"columns":[[21.4,20.9],[80,81],[3,4],[120,121]]}
+//! ← {"ok":true,"epoch":0,"rows":2,"sealed_partitions":0,"sealed_rows":0,"unsealed_rows":2}
 //! → {"op":"info"}
 //! ← {"ok":true,"rows":100000,"partitions":15,"memory_bytes":...}
 //! ```
+//!
+//! Live-mode consistency: every `stats` request pins one epoch snapshot
+//! before planning, so a query observes either all of a sealed partition
+//! or none of it — never a torn intermediate — and reports the epoch it
+//! saw.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -19,17 +29,31 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::{Coordinator, IndexKind, Method};
-use crate::engine::Dataset;
+use crate::engine::{Dataset, LiveDataset};
 use crate::error::{OsebaError, Result};
 use crate::index::{ContentIndex, RangeQuery};
+use crate::ingest::Chunk;
 use crate::metrics::Timer;
 use crate::util::json::Json;
+
+/// What a server fronts.
+pub enum ServerSource {
+    /// An immutable (loaded or opened) dataset with a prebuilt index.
+    Fixed {
+        /// The dataset every query runs against.
+        ds: Arc<Dataset>,
+        /// The super index lookups go through.
+        index: Arc<dyn ContentIndex>,
+    },
+    /// A mutable live dataset; every request pins its own epoch snapshot,
+    /// and `append` extends the next epoch.
+    Live(Arc<LiveDataset>),
+}
 
 /// Server state shared across connections.
 pub struct QueryServer {
     coord: Arc<Coordinator>,
-    ds: Arc<Dataset>,
-    index: Arc<dyn ContentIndex>,
+    source: Arc<ServerSource>,
     shutdown: Arc<AtomicBool>,
 }
 
@@ -52,10 +76,20 @@ impl QueryServer {
         };
         Ok(QueryServer {
             coord,
-            ds: Arc::new(ds),
-            index,
+            source: Arc::new(ServerSource::Fixed { ds: Arc::new(ds), index }),
             shutdown: Arc::new(AtomicBool::new(false)),
         })
+    }
+
+    /// Build over a live dataset: clients may `append` chunks while other
+    /// clients query; the live index is maintained incrementally, so no
+    /// per-request index build happens.
+    pub fn live(coord: Arc<Coordinator>, live: Arc<LiveDataset>) -> QueryServer {
+        QueryServer {
+            coord,
+            source: Arc::new(ServerSource::Live(live)),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        }
     }
 
     /// Bind and serve until a `{"op":"shutdown"}` request arrives. Returns
@@ -68,13 +102,12 @@ impl QueryServer {
             match listener.accept() {
                 Ok((stream, _)) => {
                     // One thread per connection, connections are few and
-                    // long-lived (interactive sessions).
+                    // long-lived (interactive sessions / feed writers).
                     let coord = Arc::clone(&self.coord);
-                    let ds = Arc::clone(&self.ds);
-                    let index = Arc::clone(&self.index);
+                    let source = Arc::clone(&self.source);
                     let shutdown = Arc::clone(&self.shutdown);
                     std::thread::spawn(move || {
-                        let _ = handle_conn(stream, &coord, &ds, index.as_ref(), &shutdown);
+                        let _ = handle_conn(stream, &coord, &source, &shutdown);
                     });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -95,8 +128,7 @@ impl QueryServer {
 fn handle_conn(
     stream: TcpStream,
     coord: &Coordinator,
-    ds: &Dataset,
-    index: &dyn ContentIndex,
+    source: &ServerSource,
     shutdown: &AtomicBool,
 ) -> Result<()> {
     let mut writer = stream.try_clone()?;
@@ -106,7 +138,7 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let response = match handle_request(&line, coord, ds, index, shutdown) {
+        let response = match handle_request(&line, coord, source, shutdown) {
             Ok(j) => j,
             Err(e) => Json::obj(vec![
                 ("ok", Json::Bool(false)),
@@ -126,8 +158,7 @@ fn handle_conn(
 pub fn handle_request(
     line: &str,
     coord: &Coordinator,
-    ds: &Dataset,
-    index: &dyn ContentIndex,
+    source: &ServerSource,
     shutdown: &AtomicBool,
 ) -> Result<Json> {
     let req = Json::parse(line)?;
@@ -136,73 +167,203 @@ pub fn handle_request(
         .as_str()
         .ok_or_else(|| OsebaError::Json("op must be a string".into()))?;
     match op {
-        "info" => {
-            let mut fields = vec![
-                ("ok", Json::Bool(true)),
-                ("rows", Json::num(ds.total_rows() as f64)),
-                ("partitions", Json::num(ds.num_partitions() as f64)),
-                ("memory_bytes", Json::num(coord.context().memory_used() as f64)),
-                ("index", Json::str(index.name())),
-                ("index_bytes", Json::num(index.memory_bytes() as f64)),
-                ("key_min", Json::num(ds.key_min().unwrap_or(0) as f64)),
-                ("key_max", Json::num(ds.key_max().unwrap_or(0) as f64)),
-                ("tiered", Json::Bool(ds.is_tiered())),
-            ];
-            if let Some(store) = ds.store() {
-                let c = store.counters();
-                fields.push(("resident_bytes", Json::num(store.resident_bytes() as f64)));
-                fields.push(("total_bytes", Json::num(store.total_bytes() as f64)));
-                fields.push(("faults", Json::num(c.faults as f64)));
-                fields.push(("evictions", Json::num(c.evictions as f64)));
-                fields.push((
-                    "segment_bytes_read",
-                    Json::num(c.segment_bytes_read as f64),
-                ));
-            }
-            Ok(Json::obj(fields))
-        }
-        "stats" => {
-            let lo = req.require("lo")?.as_i64().ok_or_else(bad_num)?;
-            let hi = req.require("hi")?.as_i64().ok_or_else(bad_num)?;
-            let col_name = req
-                .require("column")?
-                .as_str()
-                .ok_or_else(|| OsebaError::Json("column must be a string".into()))?;
-            let column = ds.schema().column_index(col_name)?;
-            let method: Method = req
-                .get("method")
-                .and_then(|m| m.as_str())
-                .unwrap_or("oseba")
-                .parse()?;
-            let q = RangeQuery::new(lo, hi)?;
-            let timer = Timer::start();
-            let stats = match method {
-                Method::Oseba => coord.analyze_period_oseba(ds, index, q, column)?,
-                Method::Default => {
-                    let (st, filtered) = coord.analyze_period_default(ds, q, column)?;
-                    // The server keeps memory bounded: server-side filtered
-                    // datasets are transient.
-                    coord.context().unpersist(&filtered);
-                    st
-                }
-            };
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("count", Json::num(stats.count as f64)),
-                ("max", Json::num(stats.max as f64)),
-                ("min", Json::num(stats.min as f64)),
-                ("mean", Json::num(stats.mean)),
-                ("std", Json::num(stats.std)),
-                ("method", Json::str(method.label())),
-                ("secs", Json::num(timer.secs())),
-            ]))
-        }
+        "info" => handle_info(coord, source),
+        "stats" => handle_stats(&req, coord, source),
+        "append" => handle_append(&req, source),
+        "snapshot" => handle_snapshot(source),
         "shutdown" => {
             shutdown.store(true, Ordering::SeqCst);
             Ok(Json::obj(vec![("ok", Json::Bool(true)), ("bye", Json::Bool(true))]))
         }
         other => Err(OsebaError::Json(format!("unknown op '{other}'"))),
     }
+}
+
+/// Dataset-shape fields shared by fixed and live `info`.
+fn info_fields(ds: &Dataset, coord: &Coordinator, fields: &mut Vec<(&'static str, Json)>) {
+    fields.push(("rows", Json::num(ds.total_rows() as f64)));
+    fields.push(("partitions", Json::num(ds.num_partitions() as f64)));
+    fields.push(("memory_bytes", Json::num(coord.context().memory_used() as f64)));
+    fields.push(("key_min", Json::num(ds.key_min().unwrap_or(0) as f64)));
+    fields.push(("key_max", Json::num(ds.key_max().unwrap_or(0) as f64)));
+    fields.push(("tiered", Json::Bool(ds.is_tiered())));
+    if let Some(store) = ds.store() {
+        let c = store.counters();
+        fields.push(("resident_bytes", Json::num(store.resident_bytes() as f64)));
+        fields.push(("total_bytes", Json::num(store.total_bytes() as f64)));
+        fields.push(("faults", Json::num(c.faults as f64)));
+        fields.push(("evictions", Json::num(c.evictions as f64)));
+        fields.push(("segment_bytes_read", Json::num(c.segment_bytes_read as f64)));
+    }
+}
+
+fn handle_info(coord: &Coordinator, source: &ServerSource) -> Result<Json> {
+    let mut fields = vec![("ok", Json::Bool(true))];
+    match source {
+        ServerSource::Fixed { ds, index } => {
+            fields.push(("live", Json::Bool(false)));
+            info_fields(ds, coord, &mut fields);
+            fields.push(("index", Json::str(index.name())));
+            fields.push(("index_bytes", Json::num(index.memory_bytes() as f64)));
+        }
+        ServerSource::Live(live) => {
+            let snap = coord.snapshot_live(live);
+            let c = live.counters();
+            fields.push(("live", Json::Bool(true)));
+            info_fields(snap.dataset(), coord, &mut fields);
+            fields.push(("index", Json::str("cias")));
+            fields.push((
+                "index_bytes",
+                Json::num(snap.index().map_or(0, |i| i.memory_bytes()) as f64),
+            ));
+            // Epoch-scoped fields come from the snapshot so rows /
+            // partitions / epoch / asl_len always describe one consistent
+            // epoch even while appends race; the maintenance counters are
+            // instantaneous by nature.
+            fields.push(("epoch", Json::num(snap.epoch() as f64)));
+            fields.push((
+                "asl_len",
+                Json::num(snap.index().map_or(0, |i| i.asl_len()) as f64),
+            ));
+            fields.push(("unsealed_rows", Json::num(c.unsealed_rows as f64)));
+            fields.push(("appended_chunks", Json::num(c.appended_chunks as f64)));
+            fields.push((
+                "out_of_order_chunks",
+                Json::num(c.out_of_order_chunks as f64),
+            ));
+            fields.push(("index_appends", Json::num(c.index_appends as f64)));
+            fields.push(("asl_absorbed", Json::num(c.asl_absorbed as f64)));
+            fields.push(("rebuilds", Json::num(c.rebuilds as f64)));
+        }
+    }
+    Ok(Json::obj(fields))
+}
+
+fn handle_stats(req: &Json, coord: &Coordinator, source: &ServerSource) -> Result<Json> {
+    let lo = req.require("lo")?.as_i64().ok_or_else(bad_num)?;
+    let hi = req.require("hi")?.as_i64().ok_or_else(bad_num)?;
+    let q = RangeQuery::new(lo, hi)?;
+    let method: Method = req
+        .get("method")
+        .and_then(|m| m.as_str())
+        .unwrap_or("oseba")
+        .parse()?;
+    let col_name = req
+        .require("column")?
+        .as_str()
+        .ok_or_else(|| OsebaError::Json("column must be a string".into()))?;
+
+    // Live requests pin one epoch snapshot here; the borrow keeps it (and
+    // its partitions) alive for the whole request.
+    let snap;
+    let (ds, index, epoch): (&Dataset, &dyn ContentIndex, Option<u64>) = match source {
+        ServerSource::Fixed { ds, index } => (ds.as_ref(), index.as_ref(), None),
+        ServerSource::Live(live) => {
+            snap = coord.snapshot_live(live);
+            let index = snap.index().ok_or_else(|| {
+                OsebaError::InvalidRange("live dataset has no sealed partitions yet".into())
+            })?;
+            (snap.dataset(), index as &dyn ContentIndex, Some(snap.epoch()))
+        }
+    };
+    let column = ds.schema().column_index(col_name)?;
+    let timer = Timer::start();
+    let stats = match method {
+        Method::Oseba => coord.analyze_period_oseba(ds, index, q, column)?,
+        Method::Default => {
+            let (st, filtered) = coord.analyze_period_default(ds, q, column)?;
+            // The server keeps memory bounded: server-side filtered
+            // datasets are transient.
+            coord.context().unpersist(&filtered);
+            st
+        }
+    };
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("count", Json::num(stats.count as f64)),
+        ("max", Json::num(stats.max as f64)),
+        ("min", Json::num(stats.min as f64)),
+        ("mean", Json::num(stats.mean)),
+        ("std", Json::num(stats.std)),
+        ("method", Json::str(method.label())),
+        ("secs", Json::num(timer.secs())),
+    ];
+    if let Some(e) = epoch {
+        fields.push(("epoch", Json::num(e as f64)));
+    }
+    Ok(Json::obj(fields))
+}
+
+fn handle_append(req: &Json, source: &ServerSource) -> Result<Json> {
+    let ServerSource::Live(live) = source else {
+        return Err(OsebaError::Ingest(
+            "append requires a live server (start with `serve --live`)".into(),
+        ));
+    };
+    let keys = req
+        .require("keys")?
+        .as_arr()
+        .ok_or_else(|| OsebaError::Json("keys must be an array".into()))?
+        .iter()
+        .map(|k| {
+            k.as_i64()
+                .ok_or_else(|| OsebaError::Json("keys must be integers".into()))
+        })
+        .collect::<Result<Vec<i64>>>()?;
+    let columns = req
+        .require("columns")?
+        .as_arr()
+        .ok_or_else(|| OsebaError::Json("columns must be an array of arrays".into()))?
+        .iter()
+        .map(|col| {
+            col.as_arr()
+                .ok_or_else(|| OsebaError::Json("columns must be an array of arrays".into()))?
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .map(|x| x as f32)
+                        .ok_or_else(|| OsebaError::Json("column values must be numbers".into()))
+                })
+                .collect::<Result<Vec<f32>>>()
+        })
+        .collect::<Result<Vec<Vec<f32>>>>()?;
+    let rows = keys.len();
+    let epoch = live.append(Chunk { keys, columns })?;
+    let c = live.counters();
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("epoch", Json::num(epoch as f64)),
+        ("rows", Json::num(rows as f64)),
+        ("sealed_partitions", Json::num(c.sealed_partitions as f64)),
+        ("sealed_rows", Json::num(c.sealed_rows as f64)),
+        ("unsealed_rows", Json::num(c.unsealed_rows as f64)),
+    ]))
+}
+
+fn handle_snapshot(source: &ServerSource) -> Result<Json> {
+    let ServerSource::Live(live) = source else {
+        return Err(OsebaError::Ingest(
+            "snapshot requires a live server (start with `serve --live`)".into(),
+        ));
+    };
+    let snap = live.snapshot();
+    let c = live.counters();
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        // Epoch-scoped fields all come from the one snapshot (asl_len
+        // included); only unsealed_rows / rebuilds are instantaneous.
+        ("epoch", Json::num(snap.epoch() as f64)),
+        ("partitions", Json::num(snap.num_partitions() as f64)),
+        ("rows", Json::num(snap.rows() as f64)),
+        ("unsealed_rows", Json::num(c.unsealed_rows as f64)),
+        ("key_min", Json::num(snap.dataset().key_min().unwrap_or(0) as f64)),
+        ("key_max", Json::num(snap.dataset().key_max().unwrap_or(0) as f64)),
+        (
+            "asl_len",
+            Json::num(snap.index().map_or(0, |i| i.asl_len()) as f64),
+        ),
+        ("rebuilds", Json::num(c.rebuilds as f64)),
+    ]))
 }
 
 fn bad_num() -> OsebaError {
@@ -215,30 +376,48 @@ mod tests {
     use crate::config::AppConfig;
     use crate::coordinator::Coordinator;
     use crate::datagen::ClimateGen;
+    use crate::engine::LiveConfig;
     use crate::index::Cias;
     use crate::runtime::NativeBackend;
+    use crate::storage::Schema;
 
-    fn setup() -> (Coordinator, Dataset, Cias) {
+    fn setup() -> (Coordinator, ServerSource) {
         let cfg = AppConfig { cluster_workers: 2, ..Default::default() };
         let coord = Coordinator::new(&cfg, Arc::new(NativeBackend)).unwrap();
         let ds = coord.load(ClimateGen::default().generate(10_000), 5).unwrap();
         let index = Cias::build(ds.partitions()).unwrap();
-        (coord, ds, index)
+        let source =
+            ServerSource::Fixed { ds: Arc::new(ds), index: Arc::new(index) };
+        (coord, source)
+    }
+
+    fn setup_live() -> (Coordinator, ServerSource, Arc<LiveDataset>) {
+        let cfg = AppConfig { cluster_workers: 2, ..Default::default() };
+        let coord = Coordinator::new(&cfg, Arc::new(NativeBackend)).unwrap();
+        let live = coord
+            .create_live(
+                Schema::climate(),
+                LiveConfig { rows_per_partition: 1_000, max_asl: 8 },
+            )
+            .unwrap();
+        let source = ServerSource::Live(Arc::clone(&live));
+        (coord, source, live)
     }
 
     #[test]
     fn info_request() {
-        let (coord, ds, index) = setup();
+        let (coord, source) = setup();
         let flag = AtomicBool::new(false);
-        let r = handle_request(r#"{"op":"info"}"#, &coord, &ds, &index, &flag).unwrap();
+        let r = handle_request(r#"{"op":"info"}"#, &coord, &source, &flag).unwrap();
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("live"), Some(&Json::Bool(false)));
         assert_eq!(r.get("rows").unwrap().as_usize(), Some(10_000));
         assert_eq!(r.get("index").unwrap().as_str(), Some("cias"));
     }
 
     #[test]
     fn stats_request_both_methods_agree() {
-        let (coord, ds, index) = setup();
+        let (coord, source) = setup();
         let flag = AtomicBool::new(false);
         let mk = |method: &str| {
             format!(
@@ -246,13 +425,13 @@ mod tests {
                 3600 * 999
             )
         };
-        let a = handle_request(&mk("oseba"), &coord, &ds, &index, &flag).unwrap();
-        let b = handle_request(&mk("default"), &coord, &ds, &index, &flag).unwrap();
+        let a = handle_request(&mk("oseba"), &coord, &source, &flag).unwrap();
+        let b = handle_request(&mk("default"), &coord, &source, &flag).unwrap();
         assert_eq!(a.get("count"), b.get("count"));
         assert_eq!(a.get("max"), b.get("max"));
         // Default path must not leak server memory.
         let before = coord.context().memory_used();
-        handle_request(&mk("default"), &coord, &ds, &index, &flag).unwrap();
+        handle_request(&mk("default"), &coord, &source, &flag).unwrap();
         assert_eq!(coord.context().memory_used(), before);
     }
 
@@ -265,9 +444,11 @@ mod tests {
             .load_tiered(ClimateGen::default().generate(10_000), 5, &dir)
             .unwrap();
         let index = crate::index::Cias::from_meta(ds.store().unwrap().metas()).unwrap();
+        let source =
+            ServerSource::Fixed { ds: Arc::new(ds), index: Arc::new(index) };
         let flag = AtomicBool::new(false);
 
-        let r = handle_request(r#"{"op":"info"}"#, &coord, &ds, &index, &flag).unwrap();
+        let r = handle_request(r#"{"op":"info"}"#, &coord, &source, &flag).unwrap();
         assert_eq!(r.get("tiered"), Some(&Json::Bool(true)));
         assert_eq!(r.get("faults").unwrap().as_usize(), Some(0));
 
@@ -275,49 +456,148 @@ mod tests {
             r#"{{"op":"stats","lo":0,"hi":{},"column":"temperature"}}"#,
             3600 * 999
         );
-        let r = handle_request(&req, &coord, &ds, &index, &flag).unwrap();
+        let r = handle_request(&req, &coord, &source, &flag).unwrap();
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
         assert_eq!(r.get("count").unwrap().as_usize(), Some(1000));
-        coord.context().unpersist(&ds);
+        let ServerSource::Fixed { ds, .. } = &source else { unreachable!() };
+        coord.context().unpersist(ds);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
     fn malformed_requests_are_errors() {
-        let (coord, ds, index) = setup();
+        let (coord, source) = setup();
         let flag = AtomicBool::new(false);
-        assert!(handle_request("{", &coord, &ds, &index, &flag).is_err());
-        assert!(handle_request(r#"{"op":"nope"}"#, &coord, &ds, &index, &flag).is_err());
+        assert!(handle_request("{", &coord, &source, &flag).is_err());
+        assert!(handle_request(r#"{"op":"nope"}"#, &coord, &source, &flag).is_err());
         assert!(handle_request(
             r#"{"op":"stats","lo":5,"hi":1,"column":"temperature"}"#,
             &coord,
-            &ds,
-            &index,
+            &source,
             &flag
         )
         .is_err());
         assert!(handle_request(
             r#"{"op":"stats","lo":0,"hi":10,"column":"bogus"}"#,
             &coord,
-            &ds,
-            &index,
+            &source,
             &flag
         )
         .is_err());
+        // Live-only ops on a fixed server are clear errors.
+        let err = handle_request(
+            r#"{"op":"append","keys":[1],"columns":[[1],[1],[1],[1]]}"#,
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("live"), "got: {err}");
+        assert!(handle_request(r#"{"op":"snapshot"}"#, &coord, &source, &flag).is_err());
     }
 
     #[test]
     fn shutdown_sets_flag() {
-        let (coord, ds, index) = setup();
+        let (coord, source) = setup();
         let flag = AtomicBool::new(false);
-        let r = handle_request(r#"{"op":"shutdown"}"#, &coord, &ds, &index, &flag).unwrap();
+        let r = handle_request(r#"{"op":"shutdown"}"#, &coord, &source, &flag).unwrap();
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
         assert!(flag.load(Ordering::SeqCst));
     }
 
+    /// Build an append request for `rows` hourly rows starting at `start`.
+    fn append_req(start: i64, rows: usize) -> String {
+        let keys: Vec<String> =
+            (0..rows as i64).map(|i| (start + i * 3600).to_string()).collect();
+        let col: Vec<String> = (0..rows).map(|i| format!("{}.5", i % 30)).collect();
+        let cols = format!(
+            "[[{0}],[{0}],[{0}],[{0}]]",
+            col.join(",")
+        );
+        format!(
+            r#"{{"op":"append","keys":[{}],"columns":{}}}"#,
+            keys.join(","),
+            cols
+        )
+    }
+
+    #[test]
+    fn live_append_then_query_round_trip() {
+        let (coord, source, live) = setup_live();
+        let flag = AtomicBool::new(false);
+
+        // Empty live dataset: info works, stats is a clean error.
+        let r = handle_request(r#"{"op":"info"}"#, &coord, &source, &flag).unwrap();
+        assert_eq!(r.get("live"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("epoch").unwrap().as_usize(), Some(0));
+        assert!(handle_request(
+            r#"{"op":"stats","lo":0,"hi":10,"column":"temperature"}"#,
+            &coord,
+            &source,
+            &flag
+        )
+        .is_err());
+
+        // 600 rows: buffered, invisible.
+        let r = handle_request(&append_req(0, 600), &coord, &source, &flag).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("epoch").unwrap().as_usize(), Some(0));
+        assert_eq!(r.get("unsealed_rows").unwrap().as_usize(), Some(600));
+
+        // 600 more: one partition seals, queries see exactly 1000 rows.
+        let r = handle_request(&append_req(600 * 3600, 600), &coord, &source, &flag).unwrap();
+        assert_eq!(r.get("epoch").unwrap().as_usize(), Some(1));
+        assert_eq!(r.get("sealed_rows").unwrap().as_usize(), Some(1000));
+        assert_eq!(r.get("unsealed_rows").unwrap().as_usize(), Some(200));
+
+        let r = handle_request(
+            r#"{"op":"snapshot"}"#,
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap();
+        assert_eq!(r.get("epoch").unwrap().as_usize(), Some(1));
+        assert_eq!(r.get("partitions").unwrap().as_usize(), Some(1));
+        assert_eq!(r.get("rows").unwrap().as_usize(), Some(1000));
+
+        let stats = handle_request(
+            &format!(
+                r#"{{"op":"stats","lo":0,"hi":{},"column":"temperature"}}"#,
+                3600 * 10_000
+            ),
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap();
+        assert_eq!(stats.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(stats.get("count").unwrap().as_usize(), Some(1000));
+        assert_eq!(stats.get("epoch").unwrap().as_usize(), Some(1));
+
+        // Malformed appends are clear errors.
+        assert!(handle_request(
+            r#"{"op":"append","keys":[1],"columns":[[1]]}"#,
+            &coord,
+            &source,
+            &flag
+        )
+        .is_err());
+        assert!(handle_request(
+            r#"{"op":"append","keys":["x"],"columns":[[1],[1],[1],[1]]}"#,
+            &coord,
+            &source,
+            &flag
+        )
+        .is_err());
+        live.close();
+    }
+
     #[test]
     fn end_to_end_over_tcp() {
-        let (coord, ds, _index) = setup();
+        let cfg = AppConfig { cluster_workers: 2, ..Default::default() };
+        let coord = Coordinator::new(&cfg, Arc::new(NativeBackend)).unwrap();
+        let ds = coord.load(ClimateGen::default().generate(10_000), 5).unwrap();
         let server = QueryServer::new(Arc::new(coord), ds, IndexKind::Cias).unwrap();
         let (addr_tx, addr_rx) = std::sync::mpsc::channel();
         let shutdown = server.shutdown_handle();
@@ -343,5 +623,43 @@ mod tests {
         assert!(line2.contains("bye"));
         assert!(shutdown.load(Ordering::SeqCst));
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn live_server_over_tcp_ingests_and_serves() {
+        let cfg = AppConfig { cluster_workers: 2, ..Default::default() };
+        let coord = Arc::new(Coordinator::new(&cfg, Arc::new(NativeBackend)).unwrap());
+        let live = coord
+            .create_live(
+                Schema::climate(),
+                LiveConfig { rows_per_partition: 500, max_asl: 8 },
+            )
+            .unwrap();
+        let server = QueryServer::live(Arc::clone(&coord), Arc::clone(&live));
+        let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", |a| addr_tx.send(a).unwrap()).unwrap();
+        });
+        let addr = addr_rx.recv().unwrap();
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut ask = |req: &str| -> Json {
+            stream.write_all(req.as_bytes()).unwrap();
+            stream.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(line.trim()).unwrap()
+        };
+
+        let r = ask(&append_req(0, 500));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("epoch").unwrap().as_usize(), Some(1));
+        let r = ask(r#"{"op":"stats","lo":0,"hi":999999999,"column":"temperature"}"#);
+        assert_eq!(r.get("count").unwrap().as_usize(), Some(500));
+        let r = ask(r#"{"op":"shutdown"}"#);
+        assert_eq!(r.get("bye"), Some(&Json::Bool(true)));
+        handle.join().unwrap();
+        live.close();
     }
 }

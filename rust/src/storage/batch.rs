@@ -7,6 +7,7 @@ use crate::storage::schema::Schema;
 /// A columnar batch of rows sorted by key.
 #[derive(Clone, Debug)]
 pub struct RecordBatch {
+    /// The batch's column schema.
     pub schema: Schema,
     /// Ordering keys, non-decreasing. `len == rows`.
     pub keys: Vec<i64>,
@@ -39,6 +40,7 @@ impl RecordBatch {
         Ok(RecordBatch { schema, keys, columns })
     }
 
+    /// Number of rows in the batch.
     pub fn rows(&self) -> usize {
         self.keys.len()
     }
@@ -62,11 +64,13 @@ pub struct BatchBuilder {
 }
 
 impl BatchBuilder {
+    /// An empty builder for `schema`.
     pub fn new(schema: Schema) -> BatchBuilder {
         let width = schema.width();
         BatchBuilder { schema, keys: Vec::new(), columns: vec![Vec::new(); width] }
     }
 
+    /// An empty builder with `rows` preallocated per column.
     pub fn with_capacity(schema: Schema, rows: usize) -> BatchBuilder {
         let width = schema.width();
         BatchBuilder {
@@ -85,6 +89,7 @@ impl BatchBuilder {
         }
     }
 
+    /// Rows pushed so far.
     pub fn rows(&self) -> usize {
         self.keys.len()
     }

@@ -38,10 +38,12 @@ impl Default for Crc32 {
 }
 
 impl Crc32 {
+    /// A fresh hasher.
     pub fn new() -> Crc32 {
         Crc32 { state: 0xFFFF_FFFF }
     }
 
+    /// Fold `bytes` into the checksum.
     pub fn update(&mut self, bytes: &[u8]) {
         let t = table();
         for &b in bytes {
@@ -49,6 +51,7 @@ impl Crc32 {
         }
     }
 
+    /// The final checksum value (the hasher may keep updating).
     pub fn finish(&self) -> u32 {
         self.state ^ 0xFFFF_FFFF
     }

@@ -37,7 +37,9 @@ pub struct SegmentEntry {
 /// The parsed/serializable manifest.
 #[derive(Clone, Debug)]
 pub struct StoreManifest {
+    /// Schema of every segment in the store.
     pub schema: Schema,
+    /// Per-segment entries, in partition-id order.
     pub segments: Vec<SegmentEntry>,
     /// Super-index snapshot over the segments.
     pub index: Cias,

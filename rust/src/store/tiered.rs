@@ -101,7 +101,9 @@ fn segment_file(id: usize) -> String {
 
 /// In-memory footprint of a partition with `rows` valid rows. Saturating:
 /// manifest-supplied values must never panic, only fail allocation.
-fn partition_bytes(rows: usize, width: usize) -> usize {
+/// Crate-visible so a live snapshot can size its visible prefix from
+/// metadata alone.
+pub(crate) fn partition_bytes(rows: usize, width: usize) -> usize {
     let padded = rows.div_ceil(BLOCK_ROWS).max(1).saturating_mul(BLOCK_ROWS);
     rows.saturating_mul(8)
         .saturating_add(width.saturating_mul(padded).saturating_mul(4))
@@ -433,10 +435,12 @@ impl TieredStore {
         self.inner.lock().unwrap().slots.iter().map(|s| s.meta).collect()
     }
 
+    /// Number of partitions the store holds (Hot + Cold).
     pub fn num_partitions(&self) -> usize {
         self.inner.lock().unwrap().slots.len()
     }
 
+    /// Total valid rows across all partitions.
     pub fn total_rows(&self) -> usize {
         self.inner.lock().unwrap().slots.iter().map(|s| s.meta.rows).sum()
     }
@@ -458,14 +462,17 @@ impl TieredStore {
             .sum()
     }
 
+    /// Smallest key across all partitions (`None` when empty).
     pub fn key_min(&self) -> Option<i64> {
         self.inner.lock().unwrap().slots.first().map(|s| s.meta.key_min)
     }
 
+    /// Largest key across all partitions (`None` when empty).
     pub fn key_max(&self) -> Option<i64> {
         self.inner.lock().unwrap().slots.last().map(|s| s.meta.key_max)
     }
 
+    /// Current residency of partition `id` (`None` for an unknown id).
     pub fn residency(&self, id: usize) -> Option<Residency> {
         self.inner.lock().unwrap().slots.get(id).map(|s| {
             if s.resident.is_some() {
@@ -476,18 +483,22 @@ impl TieredStore {
         })
     }
 
+    /// The schema every stored partition matches.
     pub fn schema(&self) -> &Schema {
         &self.schema
     }
 
+    /// The segment directory this store reads/writes.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
+    /// The shared memory tracker Hot partitions are charged to.
     pub fn tracker(&self) -> &Arc<MemoryTracker> {
         &self.tracker
     }
 
+    /// Point-in-time copy of the fault/evict/I-O counters.
     pub fn counters(&self) -> StoreCounters {
         StoreCounters {
             faults: self.faults.load(Ordering::Relaxed),

@@ -28,7 +28,9 @@ pub fn temp_dir(label: &str) -> std::path::PathBuf {
 /// Property-run configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct Runner {
+    /// Number of random cases to draw.
     pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`.
     pub seed: u64,
 }
 
@@ -44,6 +46,7 @@ impl Default for Runner {
 }
 
 impl Runner {
+    /// A runner with explicit case count and seed.
     pub fn new(cases: usize, seed: u64) -> Runner {
         Runner { cases, seed }
     }

@@ -17,11 +17,17 @@ use crate::error::{OsebaError, Result};
 /// A JSON value. Objects use `BTreeMap` for deterministic serialization.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always an f64, as per the data model).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array of values.
     Arr(Vec<Json>),
+    /// An object (sorted keys → deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
@@ -97,6 +103,7 @@ impl Json {
             .ok_or_else(|| OsebaError::Json(format!("missing field '{key}'")))
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -104,6 +111,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -111,14 +119,17 @@ impl Json {
         }
     }
 
+    /// Non-negative integral numeric value, if representable as `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().filter(|n| n.fract() == 0.0 && *n >= 0.0).map(|n| n as usize)
     }
 
+    /// Integral numeric value, if representable as `i64`.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().filter(|n| n.fract() == 0.0).map(|n| n as i64)
     }
 
+    /// Element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -126,6 +137,7 @@ impl Json {
         }
     }
 
+    /// Field map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -135,18 +147,22 @@ impl Json {
 
     // --- builders (metrics dumps) ------------------------------------------
 
+    /// Object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Number value.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
 
+    /// String value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Array value.
     pub fn arr(xs: Vec<Json>) -> Json {
         Json::Arr(xs)
     }

@@ -5,13 +5,21 @@
 /// Summary of a sample of f64 measurements (timings in seconds, bytes, ...).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Median (nearest-rank).
     pub p50: f64,
+    /// 95th percentile (nearest-rank).
     pub p95: f64,
+    /// 99th percentile (nearest-rank).
     pub p99: f64,
+    /// Largest sample.
     pub max: f64,
 }
 
@@ -50,10 +58,15 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
 /// kernel outputs (DESIGN.md §3). `count == 0` is the identity element.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Moments {
+    /// Largest value seen (kernel sentinel when empty).
     pub max: f32,
+    /// Smallest value seen (kernel sentinel when empty).
     pub min: f32,
+    /// Sum of values.
     pub sum: f64,
+    /// Sum of squared values.
     pub sumsq: f64,
+    /// Number of values folded in.
     pub count: f64,
 }
 
@@ -101,10 +114,12 @@ impl Moments {
         }
     }
 
+    /// Whether no value has been folded in.
     pub fn is_empty(&self) -> bool {
         self.count == 0.0
     }
 
+    /// Arithmetic mean (NaN for an empty partial).
     pub fn mean(&self) -> f64 {
         self.sum / self.count
     }
@@ -121,20 +136,27 @@ impl Moments {
 /// merging stays associative; take `.l2()` at the very end).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DistancePartial {
+    /// Sum of absolute differences.
     pub l1: f64,
+    /// Sum of squared differences (kept squared so merging is associative).
     pub l2sq: f64,
+    /// Largest absolute difference.
     pub linf: f32,
+    /// Number of compared pairs.
     pub count: f64,
 }
 
 impl DistancePartial {
+    /// The identity (empty-range) partial.
     pub const EMPTY: DistancePartial =
         DistancePartial { l1: 0.0, l2sq: 0.0, linf: 0.0, count: 0.0 };
 
+    /// Build from the four f32 scalars a `distance` kernel execution returns.
     pub fn from_kernel(l1: f32, l2sq: f32, linf: f32, count: f32) -> Self {
         DistancePartial { l1: l1 as f64, l2sq: l2sq as f64, linf, count: count as f64 }
     }
 
+    /// Associative merge of two partials.
     pub fn merge(self, o: DistancePartial) -> DistancePartial {
         DistancePartial {
             l1: self.l1 + o.l1,
@@ -144,6 +166,7 @@ impl DistancePartial {
         }
     }
 
+    /// Finalized Euclidean distance.
     pub fn l2(&self) -> f64 {
         self.l2sq.sqrt()
     }

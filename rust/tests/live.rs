@@ -1,0 +1,227 @@
+//! Live-ingestion consistency tests: interleaved (and concurrent) appends
+//! and queries must always agree with a brute-force oracle evaluated over
+//! **exactly the partitions visible at the query's pinned epoch** — no
+//! torn reads, no vanishing rows across epochs.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use oseba::config::{AppConfig, ContextConfig};
+use oseba::coordinator::Coordinator;
+use oseba::engine::{EpochSnapshot, LiveConfig, LiveDataset};
+use oseba::index::RangeQuery;
+use oseba::ingest::Chunk;
+use oseba::runtime::NativeBackend;
+use oseba::storage::Schema;
+use oseba::testing::{gen, Runner};
+use oseba::util::rng::Xoshiro256;
+
+const ROWS_PER_PART: usize = 256;
+
+fn coord() -> Coordinator {
+    let cfg = AppConfig {
+        ctx: ContextConfig { num_workers: 4, memory_budget: None },
+        cluster_workers: 3,
+        ..Default::default()
+    };
+    Coordinator::new(&cfg, Arc::new(NativeBackend)).unwrap()
+}
+
+/// Block `b` of the synthetic stream: keys `[b*256, b*256+255]` (step 1),
+/// price = key % 877 (exact in f32), volume = 1.
+fn block_chunk(b: usize, lo: usize, hi: usize) -> Chunk {
+    let keys: Vec<i64> = (lo..hi).map(|i| (b * ROWS_PER_PART + i) as i64).collect();
+    let price: Vec<f32> = keys.iter().map(|&k| (k % 877) as f32).collect();
+    let volume = vec![1.0; keys.len()];
+    Chunk { keys, columns: vec![price, volume] }
+}
+
+/// Brute-force oracle over the snapshot's own partitions: `(count, max,
+/// min)` of the price column within `q`.
+fn oracle(snap: &EpochSnapshot, q: RangeQuery) -> (u64, f32, f32) {
+    let mut count = 0u64;
+    let mut max = f32::MIN;
+    let mut min = f32::MAX;
+    for p in snap.dataset().partitions() {
+        for (i, &k) in p.keys.iter().enumerate() {
+            if k >= q.lo && k <= q.hi {
+                count += 1;
+                max = max.max(p.columns[0][i]);
+                min = min.min(p.columns[0][i]);
+            }
+        }
+    }
+    (count, max, min)
+}
+
+/// Check one snapshot against the oracle for `q`. Returns the row count.
+fn check_snapshot(c: &Coordinator, snap: &EpochSnapshot, q: RangeQuery) -> u64 {
+    let (want_count, want_max, want_min) = oracle(snap, q);
+    match snap.index() {
+        None => {
+            assert_eq!(want_count, 0, "no index yet means nothing visible");
+            0
+        }
+        Some(index) => {
+            let got = c.analyze_period_oseba(snap.dataset(), index, q, 0);
+            if want_count == 0 {
+                assert!(got.is_err(), "empty selection must error, got {got:?}");
+                return 0;
+            }
+            let got = got.unwrap_or_else(|e| {
+                panic!("epoch {} query {q:?} failed: {e}", snap.epoch())
+            });
+            assert_eq!(got.count, want_count, "epoch {} {q:?}", snap.epoch());
+            assert_eq!(got.max, want_max, "epoch {} {q:?}", snap.epoch());
+            assert_eq!(got.min, want_min, "epoch {} {q:?}", snap.epoch());
+            want_count
+        }
+    }
+}
+
+/// A randomized append schedule: `blocks` whole partitions, of which
+/// `late` (none adjacent to the stream tail) are held back and appended
+/// out of order afterwards; in-order blocks are split into 1–3 chunks.
+#[derive(Debug)]
+struct Schedule {
+    blocks: usize,
+    late: Vec<usize>,
+    splits: Vec<usize>,
+    seed: u64,
+}
+
+fn make_schedule(rng: &mut Xoshiro256) -> Schedule {
+    let blocks = gen::usize_in(rng, 8, 24);
+    // Hold back ~1/4 of the interior blocks (never the last block, so the
+    // in-order stream always ends beyond every late block).
+    let mut late = Vec::new();
+    for b in 1..blocks - 1 {
+        if rng.below(4) == 0 {
+            late.push(b);
+        }
+    }
+    let splits = (0..blocks).map(|_| gen::usize_in(rng, 1, 4)).collect();
+    Schedule { blocks, late, splits, seed: rng.next_u64() }
+}
+
+/// Drive one schedule, calling `observe` after every append.
+fn run_schedule(live: &LiveDataset, s: &Schedule, mut observe: impl FnMut()) {
+    for b in 0..s.blocks {
+        if s.late.contains(&b) {
+            continue;
+        }
+        // Split the block into `splits[b]` consecutive chunks.
+        let n = s.splits[b];
+        let per = ROWS_PER_PART / n;
+        let mut lo = 0;
+        for i in 0..n {
+            let hi = if i == n - 1 { ROWS_PER_PART } else { lo + per };
+            live.append(block_chunk(b, lo, hi)).unwrap();
+            lo = hi;
+        }
+        observe();
+    }
+    // Late blocks arrive shuffled, each as one out-of-order chunk.
+    let mut order = s.late.clone();
+    Xoshiro256::seeded(s.seed).shuffle(&mut order);
+    for &b in &order {
+        live.append(block_chunk(b, 0, ROWS_PER_PART)).unwrap();
+        observe();
+    }
+}
+
+#[test]
+fn interleaved_appends_and_queries_match_pinned_oracle() {
+    let c = coord();
+    Runner::new(12, 0x11FE).run(
+        "live snapshot oracle",
+        make_schedule,
+        |s| {
+            let live = c
+                .create_live(
+                    Schema::stock(),
+                    LiveConfig { rows_per_partition: ROWS_PER_PART, max_asl: 3 },
+                )
+                .unwrap();
+            let mut qrng = Xoshiro256::seeded(s.seed ^ 0xABCD);
+            let span = (s.blocks * ROWS_PER_PART) as i64;
+            let mut last_epoch = 0;
+            let mut last_rows = 0;
+            run_schedule(&live, s, || {
+                let snap = c.snapshot_live(&live);
+                // Epochs and visible rows never go backwards.
+                assert!(snap.epoch() >= last_epoch);
+                assert!(snap.rows() >= last_rows);
+                last_epoch = snap.epoch();
+                last_rows = snap.rows();
+                let (lo, hi) = gen::range_pair(&mut qrng, 0, span);
+                check_snapshot(&c, &snap, RangeQuery { lo, hi });
+            });
+            // Final state: everything visible, whole-span query sees all.
+            let snap = c.snapshot_live(&live);
+            let total = (s.blocks * ROWS_PER_PART) as u64;
+            assert_eq!(snap.rows() as u64, total);
+            let n = check_snapshot(&c, &snap, RangeQuery { lo: 0, hi: span });
+            assert_eq!(n, total);
+            // Late blocks really were absorbed / rebuilt, not lost.
+            let counters = live.counters();
+            assert_eq!(counters.out_of_order_chunks, s.late.len());
+            live.close();
+            true
+        },
+    );
+}
+
+#[test]
+fn concurrent_queries_see_only_whole_epochs() {
+    let c = coord();
+    let live = c
+        .create_live(
+            Schema::stock(),
+            LiveConfig { rows_per_partition: ROWS_PER_PART, max_asl: 4 },
+        )
+        .unwrap();
+    let mut rng = Xoshiro256::seeded(0xC0FFEE);
+    let schedule = make_schedule(&mut rng);
+    let span = (schedule.blocks * ROWS_PER_PART) as i64;
+    let done = AtomicBool::new(false);
+
+    std::thread::scope(|scope| {
+        // Reader thread: snapshot + verify continuously while the writer
+        // appends in-order and out-of-order chunks.
+        let (c_ref, live_ref, done_ref) = (&c, &*live, &done);
+        let reader = scope.spawn(move || {
+            let mut qrng = Xoshiro256::seeded(7);
+            let mut last_epoch = 0;
+            let mut last_rows = 0;
+            let mut checks = 0usize;
+            loop {
+                let finished = done_ref.load(Ordering::SeqCst);
+                let snap = c_ref.snapshot_live(live_ref);
+                assert!(snap.epoch() >= last_epoch, "epoch went backwards");
+                assert!(snap.rows() >= last_rows, "rows vanished across epochs");
+                last_epoch = snap.epoch();
+                last_rows = snap.rows();
+                let (lo, hi) = gen::range_pair(&mut qrng, 0, span);
+                check_snapshot(c_ref, &snap, RangeQuery { lo, hi });
+                checks += 1;
+                if finished {
+                    break;
+                }
+            }
+            checks
+        });
+
+        run_schedule(&live, &schedule, || {});
+        done.store(true, Ordering::SeqCst);
+        let checks = reader.join().expect("reader thread");
+        assert!(checks > 0, "reader ran at least one verification");
+    });
+
+    // After the dust settles: full-span query equals the full oracle.
+    let snap = c.snapshot_live(&live);
+    let total = (schedule.blocks * ROWS_PER_PART) as u64;
+    assert_eq!(snap.rows() as u64, total);
+    assert_eq!(check_snapshot(&c, &snap, RangeQuery { lo: 0, hi: span }), total);
+    live.close();
+}
