@@ -28,13 +28,15 @@ fn run_one(cfg: &AppConfig, method: Method) -> oseba::Result<(SessionReport, usi
 }
 
 fn main() -> oseba::Result<()> {
-    let mut cfg = AppConfig::default();
-    cfg.dataset_bytes = std::env::var("OSEBA_BYTES")
-        .ok()
-        .map(|v| parse_bytes(&v))
-        .transpose()?
-        .unwrap_or(64 << 20);
-    cfg.num_partitions = 15;
+    let mut cfg = AppConfig {
+        dataset_bytes: std::env::var("OSEBA_BYTES")
+            .ok()
+            .map(|v| parse_bytes(&v))
+            .transpose()?
+            .unwrap_or(64 << 20),
+        num_partitions: 15,
+        ..AppConfig::default()
+    };
     if !std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
         eprintln!("(artifacts not built; using the native backend)");
         cfg.backend = BackendKind::Native;
@@ -106,7 +108,7 @@ fn main() -> oseba::Result<()> {
     println!("oseba (index: {} bytes):\n{}", oseba.index_bytes, oseba.metrics.table());
 
     // Machine-readable dump for EXPERIMENTS.md.
-    println!("JSON default: {}", default.metrics.to_json().to_string());
-    println!("JSON oseba:   {}", oseba.metrics.to_json().to_string());
+    println!("JSON default: {}", default.metrics.to_json());
+    println!("JSON oseba:   {}", oseba.metrics.to_json());
     Ok(())
 }

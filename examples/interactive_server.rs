@@ -21,8 +21,7 @@ use oseba::server::QueryServer;
 use oseba::util::json::Json;
 
 fn main() -> oseba::Result<()> {
-    let mut cfg = AppConfig::default();
-    cfg.dataset_bytes = 16 << 20;
+    let mut cfg = AppConfig { dataset_bytes: 16 << 20, ..AppConfig::default() };
     if !std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
         eprintln!("(artifacts not built; using the native backend)");
         cfg.backend = BackendKind::Native;

@@ -17,8 +17,7 @@ use oseba::util::humansize;
 fn main() -> oseba::Result<()> {
     // 1. Configuration: ~32 MiB of synthetic hourly climate data over 15
     //    partitions (the paper's partition count, scaled-down volume).
-    let mut cfg = AppConfig::default();
-    cfg.dataset_bytes = 32 << 20;
+    let mut cfg = AppConfig { dataset_bytes: 32 << 20, ..AppConfig::default() };
     let backend_kind = if std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
         BackendKind::Hlo
     } else {

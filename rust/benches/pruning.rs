@@ -1,0 +1,167 @@
+//! **Zone-map pruning bench**: a selective *value*-predicate query over a
+//! tiered dataset ~4× the memory budget. Key-only targeting must fault in
+//! every partition the key range admits (here: all of them — the key span
+//! is the whole dataset); zone-map pruning consults resident metadata and
+//! faults in only the partitions whose value domain can satisfy the
+//! predicate — measurably fewer `faults` and `segment_bytes_read`, with
+//! results identical to the unpruned oracle.
+//!
+//! Emits `BENCH_pruning.json` (machine-readable: faults, bytes read, wall
+//! time per arm) for the perf trajectory.
+//!
+//! Run: `cargo bench --bench pruning`
+//! (OSEBA_PRUNING_BUDGET rescales; dataset is 4× the budget.)
+
+mod common;
+
+use oseba::bench::{bench, section, table, BenchConfig};
+use oseba::config::{parse_bytes, BackendKind, ContextConfig};
+use oseba::coordinator::{plan_query, Coordinator, Query, QueryOutput};
+use oseba::engine::Dataset;
+use oseba::index::{ColumnPredicate, PredOp, RangeQuery};
+use oseba::runtime::make_backend;
+use oseba::storage::{BatchBuilder, Schema};
+use oseba::util::humansize;
+use oseba::util::json::Json;
+use oseba::util::rng::Xoshiro256;
+
+const PARTITIONS: usize = 32;
+
+fn coordinator(budget: usize) -> Coordinator {
+    let mut cfg = common::app_cfg(BackendKind::Native);
+    cfg.ctx = ContextConfig { num_workers: 4, memory_budget: Some(budget) };
+    let be = make_backend(cfg.backend, &cfg.artifacts_dir).expect("backend");
+    Coordinator::new(&cfg, be).expect("coordinator")
+}
+
+/// Trending `price` (≈ row index, so partitions carry disjoint value
+/// domains) + oscillating `volume`.
+fn trending_batch(rows: usize) -> oseba::storage::RecordBatch {
+    let mut rng = Xoshiro256::seeded(7);
+    let mut b = BatchBuilder::new(Schema::stock());
+    for i in 0..rows {
+        let price = i as f32 + (rng.next_f32() - 0.5) * 8.0;
+        let volume = (i as f32 / 64.0).sin() * 1_000.0;
+        b.push(i as i64, &[price, volume]);
+    }
+    b.finish().unwrap()
+}
+
+fn run_stats(c: &Coordinator, ds: &Dataset, plan: &oseba::coordinator::PhysicalPlan, q: &Query) -> oseba::analysis::PeriodStats {
+    match c.execute_physical(ds, plan, q).expect("execute") {
+        QueryOutput::Stats(s) => s,
+        _ => unreachable!(),
+    }
+}
+
+fn main() {
+    let budget = std::env::var("OSEBA_PRUNING_BUDGET")
+        .ok()
+        .map(|v| parse_bytes(&v).expect("OSEBA_PRUNING_BUDGET"))
+        .unwrap_or(8 << 20);
+    let raw = 4 * budget;
+    let rows = raw / Schema::stock().row_bytes();
+    let dir = std::env::temp_dir().join(format!("oseba-pruning-bench-{}", std::process::id()));
+
+    section(&format!(
+        "Zone-map pruning: {} tiered dataset under a {} budget ({} partitions)",
+        humansize::bytes(raw),
+        humansize::bytes(budget),
+        PARTITIONS
+    ));
+
+    let coord = coordinator(budget);
+    let ds = coord
+        .load_tiered(trending_batch(rows), PARTITIONS, &dir)
+        .expect("tiered load");
+    let store = ds.store().expect("tiered").clone();
+    let index = coord
+        .build_index(&ds, oseba::coordinator::IndexKind::Cias)
+        .expect("index");
+
+    // Full key span; the predicate admits only the top ~1/8 of prices —
+    // key targeting alone cannot skip anything, zone maps can.
+    let threshold = (rows as f32) * 7.0 / 8.0;
+    let query = Query::stats(RangeQuery { lo: 0, hi: i64::MAX }, 0).filtered(vec![
+        ColumnPredicate { column: 0, op: PredOp::Ge, value: threshold },
+    ]);
+    let pruned_plan = plan_query(&ds, index.as_ref(), &query, true).expect("plan");
+    let oracle_plan = plan_query(&ds, index.as_ref(), &query, false).expect("plan");
+    println!("{}", pruned_plan.explain.line());
+    assert!(
+        pruned_plan.explain.zone_pruned > PARTITIONS / 2,
+        "trending data must zone-prune most partitions: {:?}",
+        pruned_plan.explain
+    );
+
+    // Correctness first: identical results from both arms, cold cache.
+    store.shrink(usize::MAX).expect("evict all");
+    let want = run_stats(&coord, &ds, &oracle_plan, &query);
+    store.shrink(usize::MAX).expect("evict all");
+    let got = run_stats(&coord, &ds, &pruned_plan, &query);
+    assert_eq!(got, want, "zone pruning must not change results");
+
+    // Counters per arm, measured over one cold run each.
+    let mut arms: Vec<(&str, &oseba::coordinator::PhysicalPlan)> =
+        vec![("key-only (unpruned oracle)", &oracle_plan), ("zone-pruned", &pruned_plan)];
+    let cfg = BenchConfig::from_env();
+    let mut results = Vec::new();
+    let mut json_arms = Vec::new();
+    for (name, plan) in arms.drain(..) {
+        store.shrink(usize::MAX).expect("evict all");
+        let before = store.counters();
+        let stats = run_stats(&coord, &ds, plan, &query);
+        let delta = store.counters().since(&before);
+
+        let r = bench(&cfg, name, || {
+            store.shrink(usize::MAX).expect("evict all");
+            run_stats(&coord, &ds, plan, &query);
+        });
+        println!(
+            "  {name}: {} faults, {} read, count={}",
+            delta.faults,
+            humansize::bytes(delta.segment_bytes_read),
+            stats.count
+        );
+        json_arms.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("faults", Json::num(delta.faults as f64)),
+            ("segment_bytes_read", Json::num(delta.segment_bytes_read as f64)),
+            ("partitions_targeted", Json::num(plan.explain.targeted as f64)),
+            ("zone_pruned", Json::num(plan.explain.zone_pruned as f64)),
+            ("rows_selected", Json::num(stats.count as f64)),
+            ("secs_mean", Json::num(r.summary.mean)),
+            ("secs_p50", Json::num(r.summary.p50)),
+            ("secs_p95", Json::num(r.summary.p95)),
+        ]));
+        results.push(r);
+    }
+    println!("\n{}", table(&results));
+
+    // The acceptance gate: fewer faults, fewer bytes, same answer.
+    let (oracle, pruned) = (&json_arms[0], &json_arms[1]);
+    let f = |j: &Json, k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap();
+    assert!(
+        f(pruned, "faults") < f(oracle, "faults"),
+        "zone pruning must fault in fewer partitions"
+    );
+    assert!(
+        f(pruned, "segment_bytes_read") < f(oracle, "segment_bytes_read"),
+        "zone pruning must read fewer segment bytes"
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("pruning")),
+        ("raw_bytes", Json::num(raw as f64)),
+        ("budget_bytes", Json::num(budget as f64)),
+        ("partitions", Json::num(PARTITIONS as f64)),
+        ("rows", Json::num(rows as f64)),
+        ("arms", Json::arr(json_arms)),
+    ]);
+    let out = "BENCH_pruning.json";
+    std::fs::write(out, doc.to_string()).expect("write BENCH_pruning.json");
+    println!("wrote {out}");
+
+    coord.context().unpersist(&ds);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -7,6 +7,7 @@ use std::sync::Arc;
 
 use crate::engine::{Dataset, SliceView};
 use crate::error::{OsebaError, Result};
+use crate::index::{row_matches, ColumnPredicate};
 use crate::runtime::backend::AnalysisBackend;
 use crate::storage::BLOCK_ROWS;
 use crate::util::stats::{DistancePartial, Moments};
@@ -15,7 +16,7 @@ use crate::util::stats::{DistancePartial, Moments};
 /// ("computing the max, mean and standard deviation", §IV-A).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PeriodStats {
-    /// Selected rows.
+    /// Selected non-NaN rows.
     pub count: u64,
     /// Largest selected value.
     pub max: f32,
@@ -25,6 +26,9 @@ pub struct PeriodStats {
     pub mean: f64,
     /// Population standard deviation.
     pub std: f64,
+    /// Selected rows excluded because their value was NaN (the crate-wide
+    /// NaN policy: counted and surfaced, never folded into the moments).
+    pub nans: u64,
 }
 
 impl PeriodStats {
@@ -39,6 +43,7 @@ impl PeriodStats {
             min: m.min,
             mean: m.mean(),
             std: m.std(),
+            nans: m.nans as u64,
         })
     }
 }
@@ -46,7 +51,7 @@ impl PeriodStats {
 /// Finalized distance-comparison output.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DistanceResult {
-    /// Compared pairs.
+    /// Compared (non-NaN) pairs.
     pub count: u64,
     /// Manhattan (sum of absolute differences) distance.
     pub l1: f64,
@@ -56,6 +61,8 @@ pub struct DistanceResult {
     pub linf: f32,
     /// Mean absolute difference.
     pub mad: f64,
+    /// Pairs excluded because their difference was NaN.
+    pub nans: u64,
 }
 
 /// The analysis engine: a backend plus the block-decomposition logic.
@@ -119,10 +126,15 @@ impl Analyzer {
         column: usize,
         window: usize,
     ) -> Result<Vec<f32>> {
+        self.moving_average_of(&gather(views, column), window)
+    }
+
+    /// [`Self::moving_average`] over an already-gathered series — the
+    /// shared body for the view path and the predicate-filtered plan path.
+    pub fn moving_average_of(&self, series: &[f32], window: usize) -> Result<Vec<f32>> {
         if window == 0 {
             return Err(OsebaError::InvalidRange("window must be > 0".into()));
         }
-        let series = gather(views, column);
         let n = series.len();
         if n < window {
             return Ok(Vec::new());
@@ -158,18 +170,22 @@ impl Analyzer {
         column: usize,
         window: usize,
     ) -> Result<PeriodStats> {
-        let series = gather(views, column);
+        self.ma_stats_of(&gather(views, column), window)
+    }
+
+    /// [`Self::ma_stats`] over an already-gathered series.
+    pub fn ma_stats_of(&self, series: &[f32], window: usize) -> Result<PeriodStats> {
         let chunk_rows = self.backend.block_rows().unwrap_or(BLOCK_ROWS);
         if series.len() <= chunk_rows {
             // Fused single-kernel path.
             let mut chunk = vec![0f32; chunk_rows];
-            chunk[..series.len()].copy_from_slice(&series);
+            chunk[..series.len()].copy_from_slice(series);
             let m = self.backend.ma_stats(&chunk, 0, series.len(), window)?;
             return PeriodStats::from_moments(m)
                 .ok_or_else(|| OsebaError::InvalidRange("selection smaller than window".into()));
         }
         // General path: stitched MA then stats over it.
-        let ma = self.moving_average(views, column, window)?;
+        let ma = self.moving_average_of(series, window)?;
         if ma.is_empty() {
             return Err(OsebaError::InvalidRange("selection smaller than window".into()));
         }
@@ -191,8 +207,13 @@ impl Analyzer {
         b: &[SliceView<'_>],
         column: usize,
     ) -> Result<DistanceResult> {
-        let sa = gather(a, column);
-        let sb = gather(b, column);
+        self.distance_of(&gather(a, column), &gather(b, column))
+    }
+
+    /// Distance between two already-gathered, equally-long series — the
+    /// shared finisher for both the view path ([`Self::distance`]) and the
+    /// predicate-filtered plan path.
+    pub fn distance_of(&self, sa: &[f32], sb: &[f32]) -> Result<DistanceResult> {
         if sa.len() != sb.len() {
             return Err(OsebaError::InvalidRange(format!(
                 "distance requires equal selections ({} vs {} rows)",
@@ -214,12 +235,18 @@ impl Analyzer {
             cb[pb.len()..].fill(0.0);
             merged = merged.merge(self.backend.distance(&ca, &cb, 0, pa.len())?);
         }
+        if merged.count == 0.0 {
+            return Err(OsebaError::InvalidRange(
+                "every compared pair is NaN".into(),
+            ));
+        }
         Ok(DistanceResult {
             count: merged.count as u64,
             l1: merged.l1,
             l2: merged.l2(),
             linf: merged.linf,
             mad: merged.l1 / merged.count,
+            nans: merged.nans as u64,
         })
     }
 
@@ -289,6 +316,82 @@ pub fn slice_moments(
     }
 }
 
+/// Predicate-masked variant of [`slice_moments`]: the per-worker task body
+/// when a plan carries value predicates. Rows of `[row_start, row_end)`
+/// whose predicate-column values all match fold their `column` value into
+/// the moments (NaNs counted out as usual). The mask breaks the AOT
+/// static-shape contract, so this path scans on the engine; with an empty
+/// conjunction it defers to the kernel path unchanged — zero cost when no
+/// `where` clause is present.
+pub fn slice_moments_filtered(
+    backend: &dyn AnalysisBackend,
+    part: &crate::storage::Partition,
+    row_start: usize,
+    row_end: usize,
+    column: usize,
+    preds: &[ColumnPredicate],
+    batch: bool,
+) -> Result<Moments> {
+    if preds.is_empty() {
+        return slice_moments(backend, part, row_start, row_end, column, batch);
+    }
+    let mut m = Moments::EMPTY;
+    for r in row_start..row_end.min(part.rows) {
+        if row_matches(preds, |c| part.columns[c][r]) {
+            m.absorb(part.columns[column][r]);
+        }
+    }
+    Ok(m)
+}
+
+/// Gather the selected rows of `column` across views, keeping only rows
+/// that satisfy every predicate *and* whose target value is not NaN — the
+/// series prep for the trend (moving-average) analysis under a `where`
+/// clause. Unlike [`slice_moments_filtered`], NaN target values are
+/// dropped here outright (a windowed average has no way to count a NaN
+/// out without poisoning its whole window); the second return value is
+/// how many predicate-passing rows were dropped that way, so the caller
+/// can still surface them per the NaN policy. (Distance does **not** use
+/// this: dropping rows per side would shift the pairing — it pairs the
+/// raw selections positionally and drops *pairs* via [`selection_mask`].)
+pub fn gather_filtered(
+    views: &[SliceView<'_>],
+    column: usize,
+    preds: &[ColumnPredicate],
+) -> (Vec<f32>, usize) {
+    let mut out = Vec::new();
+    let mut nans = 0usize;
+    for v in views {
+        let target = v.column(column);
+        for (r, &x) in target.iter().enumerate() {
+            if !row_matches(preds, |c| v.column(c)[r]) {
+                continue;
+            }
+            if x.is_nan() {
+                nans += 1;
+                continue;
+            }
+            out.push(x);
+        }
+    }
+    (out, nans)
+}
+
+/// Per-row predicate mask of a selection, in gather order (one flag per
+/// selected row: does the row satisfy every predicate?). The distance
+/// path combines the masks of both sides so a pair is compared only when
+/// *both* rows pass — dropping pairs positionally instead of shifting
+/// one side's series.
+pub fn selection_mask(views: &[SliceView<'_>], preds: &[ColumnPredicate]) -> Vec<bool> {
+    let mut out = Vec::new();
+    for v in views {
+        for r in 0..v.rows() {
+            out.push(row_matches(preds, |c| v.column(c)[r]));
+        }
+    }
+    out
+}
+
 /// Decompose one view into `(padded block, start, end)` kernel tasks. The
 /// blocks come straight from the partition's padded column storage — no
 /// copying on the stats/histogram path.
@@ -310,7 +413,7 @@ fn block_ranges<'a>(
 
 /// Concatenate the selected rows of `column` across views (the series-prep
 /// step for order-dependent analyses like MA and distance).
-fn gather(views: &[SliceView<'_>], column: usize) -> Vec<f32> {
+pub(crate) fn gather(views: &[SliceView<'_>], column: usize) -> Vec<f32> {
     let total: usize = views.iter().map(|v| v.rows()).sum();
     let mut out = Vec::with_capacity(total);
     for v in views {
@@ -457,6 +560,59 @@ mod tests {
         assert!((fused.min - mn).abs() < 1e-4);
         assert!((fused.mean - mean).abs() < 1e-3);
         assert!((fused.std - std).abs() < 1e-3);
+    }
+
+    #[test]
+    fn filtered_moments_match_scan_oracle() {
+        use crate::index::{ColumnPredicate, PredOp};
+        let (_ctx, ds, _an) = setup(9_000, 3);
+        let part = &ds.partitions()[1];
+        let preds = vec![ColumnPredicate { column: 1, op: PredOp::Gt, value: 50.0 }];
+        let got = slice_moments_filtered(
+            &NativeBackend,
+            part,
+            10,
+            part.rows - 7,
+            0,
+            &preds,
+            true,
+        )
+        .unwrap();
+        // Oracle: direct row loop.
+        let mut want = crate::util::stats::Moments::EMPTY;
+        for r in 10..part.rows - 7 {
+            if part.columns[1][r] > 50.0 {
+                want.absorb(part.columns[0][r]);
+            }
+        }
+        assert_eq!(got, want);
+        assert!(got.count > 0.0, "some humidity rows exceed 50");
+        assert!(got.count < (part.rows - 17) as f64, "predicate is selective");
+
+        // Empty conjunction defers to the kernel path.
+        let unmasked =
+            slice_moments_filtered(&NativeBackend, part, 0, part.rows, 0, &[], true)
+                .unwrap();
+        let direct = slice_moments(&NativeBackend, part, 0, part.rows, 0, true).unwrap();
+        assert_eq!(unmasked, direct);
+    }
+
+    #[test]
+    fn gather_filtered_drops_nan_and_nonmatching() {
+        use crate::index::{ColumnPredicate, PredOp};
+        let part = crate::storage::Partition::from_rows(
+            0,
+            vec![1, 2, 3, 4],
+            vec![vec![1.0, f32::NAN, 3.0, 4.0], vec![0.0, 9.0, 9.0, 0.0]],
+        );
+        let part = Arc::new(part);
+        let views = vec![SliceView { part: &part, row_start: 0, row_end: 4 }];
+        let preds = vec![ColumnPredicate { column: 1, op: PredOp::Ge, value: 5.0 }];
+        // Row 1 matches the predicate but its target is NaN (counted);
+        // row 2 passes both.
+        assert_eq!(gather_filtered(&views, 0, &preds), (vec![3.0], 1));
+        // No predicates: only the NaN row drops, and it is counted.
+        assert_eq!(gather_filtered(&views, 0, &[]), (vec![1.0, 3.0, 4.0], 1));
     }
 
     #[test]

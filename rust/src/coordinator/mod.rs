@@ -1,22 +1,28 @@
-//! The leader: query planning, task routing/batching over the simulated
-//! cluster, partial merging, and the interactive-session driver that
-//! produces the paper's Fig 4 / Fig 6 measurements.
+//! The leader: the unified query-plan layer (logical [`Query`] →
+//! optimizer → [`PhysicalPlan`] → execution), task routing/batching over
+//! the simulated cluster, partial merging, and the interactive-session
+//! driver that produces the paper's Fig 4 / Fig 6 measurements.
 
+pub mod plan;
 pub mod planner;
 pub mod session;
 
+pub use plan::{
+    parse_predicates, plan_query, Explain, PhysicalPlan, PrunedRange, Query, QueryOp,
+    QueryOutput,
+};
 pub use planner::{plan_batch, IndexKind, Method, PlannedQuery};
 pub use session::{run_batch_session, run_session, BatchSessionReport, SessionReport};
 
 use std::sync::Arc;
 
-use crate::analysis::ops::slice_moments;
+use crate::analysis::ops::{gather_filtered, selection_mask, slice_moments_filtered};
 use crate::analysis::{Analyzer, PeriodStats};
 use crate::cluster::{Cluster, NetworkModel};
 use crate::config::AppConfig;
 use crate::engine::{Dataset, EpochSnapshot, LiveConfig, LiveDataset, OsebaContext};
 use crate::error::{OsebaError, Result};
-use crate::index::{Cias, ContentIndex, RangeQuery, TableIndex};
+use crate::index::{Cias, ColumnPredicate, ContentIndex, RangeQuery, TableIndex};
 use crate::metrics::{BatchReport, Timer};
 use crate::runtime::backend::AnalysisBackend;
 use crate::storage::{Partition, RecordBatch, Schema};
@@ -207,13 +213,15 @@ impl Coordinator {
             .iter()
             .map(|s| (Arc::clone(&filtered.partitions()[s.partition]), *s))
             .collect();
-        let stats = self.run_stats_tasks(owned, column)?;
+        let stats = self.run_stats_tasks(owned, column, &[])?;
         Ok((stats, filtered))
     }
 
-    /// **Oseba phase** (paper §IV-A "second method"): index lookup targets
-    /// the partitions + row ranges; per-worker tasks compute moments over
-    /// zero-copy views of the *original* partitions; the leader merges.
+    /// **Oseba phase** (paper §IV-A "second method"): a thin wrapper over
+    /// [`Self::execute_plan`] for a single key-range stats query — index
+    /// lookup targets the partitions + row ranges; per-worker tasks
+    /// compute moments over zero-copy views of the *original* partitions;
+    /// the leader merges.
     pub fn analyze_period_oseba(
         &self,
         ds: &Dataset,
@@ -221,15 +229,125 @@ impl Coordinator {
         q: RangeQuery,
         column: usize,
     ) -> Result<PeriodStats> {
-        let slices = index.lookup(q);
-        if slices.is_empty() {
-            return Err(OsebaError::InvalidRange(format!(
-                "no partitions intersect [{}, {}]",
-                q.lo, q.hi
-            )));
+        match self.execute_plan(ds, index, &Query::stats(q, column))?.0 {
+            QueryOutput::Stats(s) => Ok(s),
+            _ => unreachable!("stats query produces stats output"),
         }
-        let owned = self.ctx.resolve_slices(ds, &slices, q)?;
-        self.run_stats_tasks(owned, column)
+    }
+
+    /// Lower + execute one logical [`Query`]: CIAS/ASL key targeting,
+    /// zone-map pruning, batch merge of the ranges, then predicate-masked
+    /// execution over only the surviving slices. Every specialized
+    /// `analyze_*` entry point is a thin wrapper over this — fixed,
+    /// tiered and live(-snapshot) datasets all take the identical path.
+    pub fn execute_plan(
+        &self,
+        ds: &Dataset,
+        index: &dyn ContentIndex,
+        query: &Query,
+    ) -> Result<(QueryOutput, Explain)> {
+        let plan = plan_query(ds, index, query, true)?;
+        Ok((self.execute_physical(ds, &plan, query)?, plan.explain))
+    }
+
+    /// Execute an already-lowered [`PhysicalPlan`]. Public so the pruning
+    /// bench and the property tests can run the `zone_pruning: false`
+    /// oracle arm through the *identical* execution path.
+    pub fn execute_physical(
+        &self,
+        ds: &Dataset,
+        plan: &PhysicalPlan,
+        query: &Query,
+    ) -> Result<QueryOutput> {
+        match query.op {
+            QueryOp::Stats { column } => {
+                let mut owned = Vec::new();
+                for pr in &plan.ranges {
+                    owned.extend(self.ctx.resolve_slices(ds, &pr.slices, pr.range)?);
+                }
+                if owned.is_empty() {
+                    return Err(empty_selection_error(query));
+                }
+                let stats = self.run_stats_tasks(owned, column, &query.predicates)?;
+                Ok(QueryOutput::Stats(stats))
+            }
+            QueryOp::Trend { column, window } => {
+                let (series, dropped) =
+                    self.gather_plan_series(ds, &plan.ranges, column, &query.predicates)?;
+                let mut stats = self.analyzer.ma_stats_of(&series, window)?;
+                // NaN policy: the rows the gather dropped (NaN target
+                // values of predicate-passing rows) stay surfaced.
+                stats.nans += dropped as u64;
+                Ok(QueryOutput::Trend(stats))
+            }
+            QueryOp::Distance { column, .. } => {
+                let (av, am) =
+                    self.gather_plan_masked(ds, &plan.ranges, column, &query.predicates)?;
+                let (bv, bm) =
+                    self.gather_plan_masked(ds, &plan.baseline, column, &query.predicates)?;
+                if av.len() != bv.len() {
+                    return Err(OsebaError::InvalidRange(format!(
+                        "distance requires equal selections ({} vs {} rows)",
+                        av.len(),
+                        bv.len()
+                    )));
+                }
+                // Pairs are positional in the raw key selections; a pair
+                // is compared only when BOTH rows pass the predicates
+                // (dropped pairs never shift the alignment). NaN pairs
+                // are counted out by the distance kernel itself.
+                let (sa, sb): (Vec<f32>, Vec<f32>) = av
+                    .into_iter()
+                    .zip(bv)
+                    .zip(am.into_iter().zip(bm))
+                    .filter(|&(_, (ma, mb))| ma && mb)
+                    .map(|(pair, _)| pair)
+                    .unzip();
+                Ok(QueryOutput::Distance(self.analyzer.distance_of(&sa, &sb)?))
+            }
+        }
+    }
+
+    /// Pin + gather the (predicate-filtered) series of `column` across a
+    /// plan's pruned ranges, in range/partition order. The second return
+    /// value counts predicate-passing rows dropped for being NaN.
+    fn gather_plan_series(
+        &self,
+        ds: &Dataset,
+        ranges: &[PrunedRange],
+        column: usize,
+        predicates: &[ColumnPredicate],
+    ) -> Result<(Vec<f32>, usize)> {
+        let mut out = Vec::new();
+        let mut nans = 0usize;
+        for pr in ranges {
+            let pins = self.ctx.select_slices(ds, &pr.slices, pr.range)?;
+            let (vals, dropped) = gather_filtered(&pins.views(), column, predicates);
+            out.extend(vals);
+            nans += dropped;
+        }
+        Ok((out, nans))
+    }
+
+    /// Pin + gather one side of a distance comparison: the **raw** values
+    /// of `column` (NaNs and predicate failures included, so positions
+    /// stay aligned) plus the per-row predicate mask.
+    fn gather_plan_masked(
+        &self,
+        ds: &Dataset,
+        ranges: &[PrunedRange],
+        column: usize,
+        predicates: &[ColumnPredicate],
+    ) -> Result<(Vec<f32>, Vec<bool>)> {
+        let mut vals = Vec::new();
+        let mut mask = Vec::new();
+        for pr in ranges {
+            let pins = self.ctx.select_slices(ds, &pr.slices, pr.range)?;
+            let views = pins.views();
+            vals.extend(crate::analysis::ops::gather(&views, column));
+            mask.extend(selection_mask(&views, predicates));
+        }
+        Ok((vals, mask))
     }
 
     /// **Batch phase** (many concurrent sessions, one engine): plan N
@@ -266,6 +384,24 @@ impl Coordinator {
         queries: &[RangeQuery],
         column: usize,
     ) -> Result<(Vec<PeriodStats>, BatchReport)> {
+        self.execute_batch(ds, index, queries, &[], column)
+    }
+
+    /// The batch path with cross-layer predicate pushdown: plan N queries
+    /// into disjoint merged ranges, **zone-prune** each merged range's
+    /// partition list against `predicates` before anything is resolved
+    /// (cold partitions are never faulted in), route once per merged
+    /// range, run predicate-masked per-worker tasks, and demux exact
+    /// per-query stats. With an empty conjunction this is byte-for-byte
+    /// the classic batch path.
+    pub fn execute_batch(
+        &self,
+        ds: &Dataset,
+        index: &dyn ContentIndex,
+        queries: &[RangeQuery],
+        predicates: &[ColumnPredicate],
+        column: usize,
+    ) -> Result<(Vec<PeriodStats>, BatchReport)> {
         let timer = Timer::start();
         let store_before =
             ds.store().map(|s| s.counters()).unwrap_or_default();
@@ -288,9 +424,23 @@ impl Coordinator {
         type SubSlice = (Arc<Partition>, usize, usize, usize);
         let mut worker_lists: Vec<Vec<SubSlice>> = Vec::new();
         let mut partitions_touched = 0usize;
+        let mut zone_pruned = 0usize;
 
         for pq in &plan {
-            let slices = index.lookup(pq.range);
+            let mut slices = index.lookup(pq.range);
+            // Zone-map pruning (the same `zone_keep` decision the plan
+            // layer makes): a partition whose value domain cannot satisfy
+            // the conjunction is dropped here, before resolve — so a cold
+            // (tiered) partition is never faulted in for it.
+            if !predicates.is_empty() {
+                slices.retain(|s| {
+                    let keep = plan::zone_keep(ds, predicates, s.partition);
+                    if !keep {
+                        zone_pruned += 1;
+                    }
+                    keep
+                });
+            }
             // One resolve per merged range: N queries overlapping this
             // range cost one `partitions_targeted` count per partition,
             // not N.
@@ -322,12 +472,20 @@ impl Coordinator {
             .into_iter()
             .map(|list| {
                 let backend = Arc::clone(&self.backend);
+                let preds = predicates.to_vec();
                 move || -> Result<Vec<(usize, Moments)>> {
                     net.message(); // task dispatch to this worker
                     let mut out = Vec::with_capacity(list.len());
                     for (part, seg, rs, re) in &list {
-                        let m =
-                            slice_moments(backend.as_ref(), part, *rs, *re, column, batch)?;
+                        let m = slice_moments_filtered(
+                            backend.as_ref(),
+                            part,
+                            *rs,
+                            *re,
+                            column,
+                            &preds,
+                            batch,
+                        )?;
                         out.push((*seg, m));
                     }
                     net.message(); // result return
@@ -374,6 +532,7 @@ impl Coordinator {
             merged_ranges: plan.len(),
             segments: segments.len(),
             partitions_touched,
+            zone_pruned,
             tasks: n_tasks,
             faults: store_delta.faults,
             evictions: store_delta.evictions,
@@ -383,11 +542,29 @@ impl Coordinator {
         Ok((stats, report))
     }
 
-    /// Route owned slice tasks to workers, execute, merge, finalize.
+    /// Snapshot-pinned execution of one logical [`Query`] against a live
+    /// dataset — the live arm of the unified plan layer. Returns the
+    /// output, the pruning report, and the epoch it was computed at.
+    pub fn analyze_live_query(
+        &self,
+        live: &LiveDataset,
+        query: &Query,
+    ) -> Result<(QueryOutput, Explain, u64)> {
+        let snap = self.snapshot_live(live);
+        let index = snap.index().ok_or_else(|| {
+            OsebaError::InvalidRange("live dataset has no sealed partitions yet".into())
+        })?;
+        let (out, explain) = self.execute_plan(snap.dataset(), index, query)?;
+        Ok((out, explain, snap.epoch()))
+    }
+
+    /// Route owned slice tasks to workers, execute (predicate-masked when
+    /// `predicates` is non-empty), merge, finalize.
     fn run_stats_tasks(
         &self,
         owned: Vec<(Arc<crate::storage::Partition>, crate::index::PartitionSlice)>,
         column: usize,
+        predicates: &[ColumnPredicate],
     ) -> Result<PeriodStats> {
         let by_slice: std::collections::HashMap<usize, Arc<crate::storage::Partition>> =
             owned.iter().map(|(p, s)| (s.partition, Arc::clone(p))).collect();
@@ -401,6 +578,7 @@ impl Coordinator {
             .into_iter()
             .map(|(_w, slices)| {
                 let backend = Arc::clone(&self.backend);
+                let preds = predicates.to_vec();
                 let parts: Vec<_> = slices
                     .iter()
                     .map(|s| (Arc::clone(&by_slice[&s.partition]), *s))
@@ -409,12 +587,13 @@ impl Coordinator {
                     net.message(); // task dispatch to this worker
                     let mut m = Moments::EMPTY;
                     for (part, s) in &parts {
-                        m = m.merge(slice_moments(
+                        m = m.merge(slice_moments_filtered(
                             backend.as_ref(),
                             part,
                             s.row_start,
                             s.row_end,
                             column,
+                            &preds,
                             batch,
                         )?);
                     }
@@ -431,6 +610,23 @@ impl Coordinator {
         }
         PeriodStats::from_moments(merged)
             .ok_or_else(|| OsebaError::InvalidRange("empty selection".into()))
+    }
+}
+
+/// The error for a plan whose selection resolves to nothing — either the
+/// key ranges miss every partition, or zone maps proved the predicates
+/// unsatisfiable everywhere.
+fn empty_selection_error(query: &Query) -> OsebaError {
+    let ranges = match query.ranges.as_slice() {
+        [q] => format!("[{}, {}]", q.lo, q.hi),
+        qs => format!("{} ranges", qs.len()),
+    };
+    if query.predicates.is_empty() {
+        OsebaError::InvalidRange(format!("no partitions intersect {ranges}"))
+    } else {
+        OsebaError::InvalidRange(format!(
+            "no partition in {ranges} can satisfy the predicates"
+        ))
     }
 }
 
@@ -738,6 +934,189 @@ mod tests {
         let live = c.create_live(Schema::climate(), LiveConfig::default()).unwrap();
         assert!(c.analyze_live(&live, q_hours(0, 10), 0).is_err());
         assert!(c.analyze_live_batch(&live, &[q_hours(0, 10)], 0).is_err());
+        live.close();
+    }
+
+    #[test]
+    fn predicate_stats_match_scan_filter_oracle() {
+        use crate::analysis::Analyzer;
+        use crate::index::{ColumnPredicate, PredOp};
+        let c = coord(3);
+        let ds = c.load(ClimateGen::default().generate(20_000), 10).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        let q = q_hours(2_000, 12_000);
+        let query = Query::stats(q, 0)
+            .filtered(vec![ColumnPredicate { column: 0, op: PredOp::Gt, value: 15.0 }]);
+        let (out, explain) = c.execute_plan(&ds, index.as_ref(), &query).unwrap();
+        let got = out.stats().unwrap();
+        assert!(explain.targeted > 0);
+
+        // Scan-filter oracle through the fully general engine filter.
+        let filtered = c
+            .context()
+            .filter(&ds, "oracle", move |k, row| {
+                (q.lo..=q.hi).contains(&k) && row[0] > 15.0
+            })
+            .unwrap();
+        assert_eq!(got.count as usize, filtered.total_rows());
+        let want = c
+            .analyzer()
+            .period_stats(&Analyzer::full_views(&filtered), 0)
+            .unwrap();
+        assert_eq!(got.count, want.count);
+        assert_eq!(got.max, want.max);
+        assert_eq!(got.min, want.min);
+        assert!((got.mean - want.mean).abs() < 1e-3);
+        assert!((got.std - want.std).abs() < 1e-2);
+        c.context().unpersist(&filtered);
+    }
+
+    #[test]
+    fn trend_and_distance_ops_execute_through_plan() {
+        let c = coord(2);
+        let ds = c.load(ClimateGen::default().generate(10_000), 5).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+
+        let q = q_hours(0, 3_999);
+        let query = Query {
+            ranges: vec![q],
+            predicates: Vec::new(),
+            op: QueryOp::Trend { column: 0, window: 16 },
+        };
+        let (out, _) = c.execute_plan(&ds, index.as_ref(), &query).unwrap();
+        let QueryOutput::Trend(got) = out else { panic!("trend output") };
+        let pins = c.context().select_slices(&ds, &index.lookup(q), q).unwrap();
+        let want = c.analyzer().ma_stats(&pins.views(), 0, 16).unwrap();
+        assert_eq!(got, want);
+
+        // Distance of a selection against itself is zero.
+        let query = Query {
+            ranges: vec![q_hours(0, 999)],
+            predicates: Vec::new(),
+            op: QueryOp::Distance { column: 0, baseline: q_hours(0, 999) },
+        };
+        let (out, explain) = c.execute_plan(&ds, index.as_ref(), &query).unwrap();
+        let QueryOutput::Distance(d) = out else { panic!("distance output") };
+        assert_eq!(d.count, 1000);
+        assert_eq!(d.l1, 0.0);
+        assert_eq!(d.nans, 0);
+        assert!(explain.merged_ranges >= 2, "primary + baseline");
+    }
+
+    #[test]
+    fn distance_predicates_drop_pairs_positionally() {
+        use crate::index::{ColumnPredicate, PredOp};
+        use crate::storage::BatchBuilder;
+        // Regression: predicates on a distance query used to filter each
+        // side independently, silently shifting the pairing when the two
+        // sides dropped different rows. Pairs must be dropped positionally.
+        let mut b = BatchBuilder::new(Schema::stock());
+        for i in 0..100i64 {
+            let price = if i == 20 { f32::NAN } else { i as f32 };
+            let volume = if i == 10 || i == 75 { 0.0 } else { 1.0 };
+            b.push(i, &[price, volume]);
+        }
+        let c = coord(2);
+        let ds = c.load(b.finish().unwrap(), 4).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        let query = Query {
+            ranges: vec![RangeQuery { lo: 0, hi: 49 }],
+            predicates: vec![ColumnPredicate { column: 1, op: PredOp::Ge, value: 1.0 }],
+            op: QueryOp::Distance { column: 0, baseline: RangeQuery { lo: 50, hi: 99 } },
+        };
+        let (out, _) = c.execute_plan(&ds, index.as_ref(), &query).unwrap();
+        let QueryOutput::Distance(d) = out else { panic!("distance output") };
+        // 50 positional pairs, each |a - b| = 50. Pair 10 fails the
+        // predicate on the a side, pair 25 on the b side (row 75); pair
+        // 20 is a NaN pair counted out by the kernel.
+        assert_eq!(d.count, 47);
+        assert_eq!(d.nans, 1);
+        assert_eq!(d.linf, 50.0);
+        assert_eq!(d.l1, 47.0 * 50.0);
+        assert_eq!(d.mad, 50.0);
+    }
+
+    #[test]
+    fn batch_with_predicates_zone_prunes_cold_partitions() {
+        use crate::index::{ColumnPredicate, PredOp};
+        use crate::storage::BatchBuilder;
+        // Trending price column: each of the 4 partitions has a disjoint
+        // value domain, so a selective predicate admits exactly one.
+        let mut b = BatchBuilder::new(Schema::stock());
+        for i in 0..8_000 {
+            b.push(i as i64 * 10, &[i as f32, 7.0]);
+        }
+        let c = coord(3);
+        let ds = c.load(b.finish().unwrap(), 4).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        let preds = vec![ColumnPredicate { column: 0, op: PredOp::Ge, value: 6_000.0 }];
+        let qs = vec![RangeQuery { lo: 0, hi: i64::MAX }];
+
+        let before = c.context().counters();
+        let (stats, report) =
+            c.execute_batch(&ds, index.as_ref(), &qs, &preds, 0).unwrap();
+        let after = c.context().counters();
+        assert_eq!(report.zone_pruned, 3, "three partitions cannot match");
+        assert_eq!(report.partitions_touched, 1);
+        assert_eq!(after.partitions_targeted - before.partitions_targeted, 1);
+        assert_eq!(stats[0].count, 2_000);
+        assert_eq!(stats[0].min, 6_000.0);
+        assert_eq!(stats[0].max, 7_999.0);
+
+        // Identical to the same query executed without zone pruning.
+        let query = Query::stats(qs[0], 0).filtered(preds.clone());
+        let unpruned = plan_query(&ds, index.as_ref(), &query, false).unwrap();
+        assert_eq!(unpruned.explain.zone_pruned, 0);
+        let QueryOutput::Stats(oracle) =
+            c.execute_physical(&ds, &unpruned, &query).unwrap()
+        else {
+            panic!("stats output")
+        };
+        assert_eq!(stats[0], oracle, "pruning must not change results");
+    }
+
+    #[test]
+    fn live_query_through_plan_layer() {
+        use crate::index::{ColumnPredicate, PredOp};
+        let c = coord(2);
+        let live = c
+            .create_live(
+                Schema::climate(),
+                LiveConfig { rows_per_partition: 1_000, max_asl: 8 },
+            )
+            .unwrap();
+        for chunk in crate::ingest::chunk_batch(&ClimateGen::default().generate(8_000), 777) {
+            live.append(chunk).unwrap();
+        }
+        live.flush().unwrap();
+
+        let q = q_hours(500, 6_500);
+        let (want, epoch) = c.analyze_live(&live, q, 0).unwrap();
+        let (out, explain, e2) =
+            c.analyze_live_query(&live, &Query::stats(q, 0)).unwrap();
+        assert_eq!(e2, epoch);
+        assert_eq!(out.stats().unwrap(), want);
+        assert!(explain.targeted > 0);
+        assert!(explain.key_pruned > 0, "selective range skips partitions");
+
+        // Predicated live query agrees with a snapshot-side oracle.
+        let preds = vec![ColumnPredicate { column: 1, op: PredOp::Le, value: 60.0 }];
+        let (out, _, _) = c
+            .analyze_live_query(&live, &Query::stats(q, 1).filtered(preds))
+            .unwrap();
+        let got = out.stats().unwrap();
+        let snap = c.snapshot_live(&live);
+        let mut oracle = crate::util::stats::Moments::EMPTY;
+        for p in snap.dataset().partitions() {
+            for r in 0..p.rows {
+                if (q.lo..=q.hi).contains(&p.keys[r]) && p.columns[1][r] <= 60.0 {
+                    oracle.absorb(p.columns[1][r]);
+                }
+            }
+        }
+        assert_eq!(got.count, oracle.count as u64);
+        assert_eq!(got.max, oracle.max);
+        assert_eq!(got.min, oracle.min);
         live.close();
     }
 

@@ -1,0 +1,542 @@
+//! The unified query-plan layer: one logical [`Query`] (key range(s) ×
+//! optional value predicates × analysis op) that every entry point —
+//! single-period stats, batches, live snapshots, server requests — lowers
+//! through the same optimizer into a [`PhysicalPlan`].
+//!
+//! Lowering is a pure-metadata pipeline (DESIGN.md §10):
+//!
+//! 1. **Key targeting** — the super index (CIAS/ASL or table) maps each
+//!    merged key range to the partitions and row ranges that can hold it;
+//!    everything else is *key-pruned* without being touched.
+//! 2. **Zone-map pruning** — each surviving partition's per-column
+//!    [`crate::index::ZoneMap`]s are checked against the query's value
+//!    predicates; a partition whose value domain cannot satisfy the
+//!    conjunction is *zone-pruned*. For a tiered dataset the zones live in
+//!    the store's slot table (and the manifest), so cold partitions are
+//!    ruled out **before any fault-in** — fewer `faults`, fewer
+//!    `segment_bytes_read`.
+//! 3. **Batch merge** — multiple ranges go through
+//!    [`crate::coordinator::plan_batch`] first, so overlapping ranges
+//!    resolve each partition once.
+//!
+//! The [`Explain`] report carries the pruning arithmetic (partitions
+//! considered / key-pruned / zone-pruned / targeted, estimated bytes) for
+//! the CLI, the server's `explain` op, and the pruning bench.
+
+use crate::analysis::{DistanceResult, PeriodStats};
+use crate::coordinator::planner::plan_batch;
+use crate::engine::Dataset;
+use crate::error::{OsebaError, Result};
+use crate::index::{
+    zones_satisfiable, ColumnPredicate, ContentIndex, PartitionSlice, PredOp, RangeQuery,
+};
+use crate::storage::Schema;
+use crate::util::json::Json;
+
+/// The analysis an optimized query executes over its selection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QueryOp {
+    /// Period statistics (count/max/min/mean/std) of one column.
+    Stats {
+        /// Value column to analyze.
+        column: usize,
+    },
+    /// Moments of the trailing moving average over the selection.
+    Trend {
+        /// Value column to analyze.
+        column: usize,
+        /// Moving-average window (rows).
+        window: usize,
+    },
+    /// Distance comparison between the selection and a second key range
+    /// of equal length. Pairs are positional in the raw key selections;
+    /// predicates drop *pairs* (compared only when both rows pass), so
+    /// distance plans are key-targeted but never zone-pruned — removing a
+    /// partition from one side would shift the alignment.
+    Distance {
+        /// Value column to compare.
+        column: usize,
+        /// The comparison selection's key range (same predicates apply).
+        baseline: RangeQuery,
+    },
+}
+
+impl QueryOp {
+    /// The value column the op reads.
+    pub fn column(&self) -> usize {
+        match *self {
+            QueryOp::Stats { column }
+            | QueryOp::Trend { column, .. }
+            | QueryOp::Distance { column, .. } => column,
+        }
+    }
+}
+
+/// A logical selective-analysis query: *what* to compute over *which*
+/// keys and *which* value domain — independent of partition layout,
+/// residency, or index implementation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Query {
+    /// Inclusive key ranges whose union is the selection. Overlapping or
+    /// adjacent ranges are merged during lowering.
+    pub ranges: Vec<RangeQuery>,
+    /// Conjunction of value predicates (`temperature > 30.0 AND ...`);
+    /// empty means key-only selection.
+    pub predicates: Vec<ColumnPredicate>,
+    /// The analysis to run.
+    pub op: QueryOp,
+}
+
+impl Query {
+    /// A key-range stats query (the paper's selective period analysis).
+    pub fn stats(range: RangeQuery, column: usize) -> Query {
+        Query { ranges: vec![range], predicates: Vec::new(), op: QueryOp::Stats { column } }
+    }
+
+    /// Attach a `where` conjunction (builder style).
+    pub fn filtered(mut self, predicates: Vec<ColumnPredicate>) -> Query {
+        self.predicates = predicates;
+        self
+    }
+}
+
+/// The result of executing a [`Query`], matching its [`QueryOp`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QueryOutput {
+    /// Output of [`QueryOp::Stats`].
+    Stats(PeriodStats),
+    /// Output of [`QueryOp::Trend`] (moments of the MA series).
+    Trend(PeriodStats),
+    /// Output of [`QueryOp::Distance`].
+    Distance(DistanceResult),
+}
+
+impl QueryOutput {
+    /// The period statistics, when this is a stats/trend output.
+    pub fn stats(&self) -> Option<PeriodStats> {
+        match self {
+            QueryOutput::Stats(s) | QueryOutput::Trend(s) => Some(*s),
+            QueryOutput::Distance(_) => None,
+        }
+    }
+}
+
+/// One merged key range of a physical plan with its surviving (post-prune)
+/// partition slices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrunedRange {
+    /// The merged inclusive key range.
+    pub range: RangeQuery,
+    /// Index-targeted, zone-surviving slices, ordered by partition id.
+    pub slices: Vec<PartitionSlice>,
+}
+
+/// The pruning arithmetic of one lowering — what the planner skipped and
+/// what execution will touch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Explain {
+    /// Partitions visible in the dataset.
+    pub partitions: usize,
+    /// Disjoint merged ranges after batch-merging the input ranges.
+    pub merged_ranges: usize,
+    /// `(merged range, partition)` pairs the key index proposed.
+    pub considered: usize,
+    /// Partitions no merged range ever proposed (skipped by key metadata).
+    pub key_pruned: usize,
+    /// Proposed pairs removed because their zone maps cannot satisfy the
+    /// predicate conjunction.
+    pub zone_pruned: usize,
+    /// Surviving pairs execution will resolve (and, when tiered, fault in).
+    pub targeted: usize,
+    /// Upper-bound rows the surviving slices cover (pre-mask).
+    pub estimated_rows: usize,
+    /// Upper-bound raw bytes of the surviving slices (`rows × row_bytes`).
+    pub estimated_bytes: usize,
+}
+
+impl Explain {
+    /// One-line human rendering for CLI output.
+    pub fn line(&self) -> String {
+        format!(
+            "plan: {} partitions -> {} merged ranges, {} considered \
+             ({} key-pruned), {} zone-pruned, {} targeted (~{} rows, ~{} bytes)",
+            self.partitions,
+            self.merged_ranges,
+            self.considered,
+            self.key_pruned,
+            self.zone_pruned,
+            self.targeted,
+            self.estimated_rows,
+            self.estimated_bytes,
+        )
+    }
+
+    /// JSON rendering (the server's `explain` response body).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("partitions", Json::num(self.partitions as f64)),
+            ("merged_ranges", Json::num(self.merged_ranges as f64)),
+            ("considered", Json::num(self.considered as f64)),
+            ("key_pruned", Json::num(self.key_pruned as f64)),
+            ("zone_pruned", Json::num(self.zone_pruned as f64)),
+            ("targeted", Json::num(self.targeted as f64)),
+            ("estimated_rows", Json::num(self.estimated_rows as f64)),
+            ("estimated_bytes", Json::num(self.estimated_bytes as f64)),
+        ])
+    }
+}
+
+/// A lowered query: merged ranges with surviving slices (plus the baseline
+/// selection for distance ops) and the pruning report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhysicalPlan {
+    /// Merged, pruned selection ranges, in key order.
+    pub ranges: Vec<PrunedRange>,
+    /// The distance baseline's pruned ranges (empty for other ops).
+    pub baseline: Vec<PrunedRange>,
+    /// Pruning arithmetic over the whole plan (baseline included).
+    pub explain: Explain,
+}
+
+/// The single prune decision both the plan layer and the batch path use:
+/// does `partition` survive zone-map pruning for `predicates` on `ds`?
+/// `true` when there is nothing to prune by (no predicates, or no zones).
+pub(crate) fn zone_keep(
+    ds: &Dataset,
+    predicates: &[ColumnPredicate],
+    partition: usize,
+) -> bool {
+    predicates.is_empty()
+        || match ds.zone_maps(partition) {
+            Some(zones) => zones_satisfiable(predicates, &zones),
+            // Unknown zones (shouldn't happen): never prune blind.
+            None => true,
+        }
+}
+
+/// Key-target and zone-prune one set of ranges, accumulating into `ex`.
+fn prune_ranges(
+    ds: &Dataset,
+    index: &dyn ContentIndex,
+    ranges: &[RangeQuery],
+    predicates: &[ColumnPredicate],
+    zone_pruning: bool,
+    seen: &mut [bool],
+    ex: &mut Explain,
+) -> Result<Vec<PrunedRange>> {
+    let mut out = Vec::new();
+    for pq in plan_batch(ranges) {
+        ex.merged_ranges += 1;
+        let mut survivors = Vec::new();
+        for s in index.lookup(pq.range) {
+            ex.considered += 1;
+            if let Some(flag) = seen.get_mut(s.partition) {
+                *flag = true;
+            }
+            if !zone_pruning || zone_keep(ds, predicates, s.partition) {
+                ex.targeted += 1;
+                ex.estimated_rows += s.rows();
+                survivors.push(s);
+            } else {
+                ex.zone_pruned += 1;
+            }
+        }
+        out.push(PrunedRange { range: pq.range, slices: survivors });
+    }
+    Ok(out)
+}
+
+/// Lower a logical [`Query`] against a dataset and its super index into a
+/// [`PhysicalPlan`]: batch-merge the ranges, key-target each merged range
+/// through the index, and (when `zone_pruning` is set) drop partitions
+/// whose zone maps cannot satisfy the predicates. Pure metadata — no
+/// partition is read or faulted in. `zone_pruning: false` is the oracle
+/// arm the property tests and the pruning bench compare against.
+pub fn plan_query(
+    ds: &Dataset,
+    index: &dyn ContentIndex,
+    query: &Query,
+    zone_pruning: bool,
+) -> Result<PhysicalPlan> {
+    let width = ds.schema().width();
+    for (i, r) in query.ranges.iter().enumerate() {
+        if r.lo > r.hi {
+            return Err(OsebaError::InvalidRange(format!(
+                "query range {i}: lo {} > hi {}",
+                r.lo, r.hi
+            )));
+        }
+    }
+    for p in &query.predicates {
+        if p.column >= width {
+            return Err(OsebaError::Schema(format!(
+                "predicate column {} out of range (schema has {width} value columns)",
+                p.column
+            )));
+        }
+        if !p.value.is_finite() {
+            return Err(OsebaError::InvalidRange(format!(
+                "predicate value {} is not finite",
+                p.value
+            )));
+        }
+    }
+    if query.op.column() >= width {
+        return Err(OsebaError::Schema(format!(
+            "analysis column {} out of range (schema has {width} value columns)",
+            query.op.column()
+        )));
+    }
+    if let QueryOp::Trend { window, .. } = query.op {
+        if window == 0 {
+            return Err(OsebaError::InvalidRange("window must be > 0".into()));
+        }
+    }
+
+    // Distance pairs the two selections positionally, so zone pruning —
+    // which removes rows from one side only — would shift the alignment.
+    // Distance plans are key-targeted only; predicates drop *pairs* at
+    // execution instead.
+    let zone_pruning = zone_pruning && !matches!(query.op, QueryOp::Distance { .. });
+    let mut ex = Explain { partitions: ds.num_partitions(), ..Explain::default() };
+    let mut seen = vec![false; ex.partitions];
+    let ranges = prune_ranges(
+        ds,
+        index,
+        &query.ranges,
+        &query.predicates,
+        zone_pruning,
+        &mut seen,
+        &mut ex,
+    )?;
+    let baseline = match query.op {
+        QueryOp::Distance { baseline, .. } => {
+            if baseline.lo > baseline.hi {
+                return Err(OsebaError::InvalidRange(format!(
+                    "baseline range: lo {} > hi {}",
+                    baseline.lo, baseline.hi
+                )));
+            }
+            prune_ranges(
+                ds,
+                index,
+                &[baseline],
+                &query.predicates,
+                zone_pruning,
+                &mut seen,
+                &mut ex,
+            )?
+        }
+        _ => Vec::new(),
+    };
+    ex.key_pruned = ex.partitions - seen.iter().filter(|&&s| s).count();
+    ex.estimated_bytes = ex.estimated_rows * ds.schema().row_bytes();
+    Ok(PhysicalPlan { ranges, baseline, explain: ex })
+}
+
+/// Parse a `where` conjunction like `"temperature > 30, humidity <= 50"`
+/// (clauses joined by `,` or `and`; operators `>`, `>=`, `<`, `<=`)
+/// against a schema. Rejects unknown columns, unknown operators and
+/// non-finite constants.
+pub fn parse_predicates(spec: &str, schema: &Schema) -> Result<Vec<ColumnPredicate>> {
+    let mut out = Vec::new();
+    for clause in spec.split(',').flat_map(|c| c.split(" and ")) {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            continue;
+        }
+        let mut found = None;
+        for (sym, op) in [
+            (">=", PredOp::Ge),
+            ("<=", PredOp::Le),
+            (">", PredOp::Gt),
+            ("<", PredOp::Lt),
+        ] {
+            if let Some(i) = clause.find(sym) {
+                found = Some((i, sym, op));
+                break;
+            }
+        }
+        let Some((i, sym, op)) = found else {
+            return Err(OsebaError::Config(format!(
+                "predicate '{clause}' has no operator (supported: > >= < <=)"
+            )));
+        };
+        let name = clause[..i].trim();
+        let value: f32 = clause[i + sym.len()..]
+            .trim()
+            .parse()
+            .map_err(|_| {
+                OsebaError::Config(format!("predicate '{clause}': bad numeric constant"))
+            })?;
+        if !value.is_finite() {
+            return Err(OsebaError::Config(format!(
+                "predicate '{clause}': constant must be finite"
+            )));
+        }
+        let column = schema.column_index(name)?;
+        out.push(ColumnPredicate { column, op, value });
+    }
+    if out.is_empty() {
+        return Err(OsebaError::Config("empty where clause".into()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ContextConfig;
+    use crate::engine::OsebaContext;
+    use crate::index::Cias;
+    use crate::storage::{BatchBuilder, Schema};
+
+    /// 1000 rows in 4 partitions; `price` trends upward (0..1000) so each
+    /// partition has a disjoint price domain; `volume` is constant 7.
+    fn trending() -> (OsebaContext, Dataset, Cias) {
+        let mut b = BatchBuilder::new(Schema::stock());
+        for i in 0..1000 {
+            b.push(i as i64 * 10, &[i as f32, 7.0]);
+        }
+        let ctx = OsebaContext::new(ContextConfig { num_workers: 2, memory_budget: None });
+        let ds = ctx.load(b.finish().unwrap(), 4).unwrap();
+        let index = Cias::build(ds.partitions()).unwrap();
+        (ctx, ds, index)
+    }
+
+    fn pred(column: usize, op: PredOp, value: f32) -> ColumnPredicate {
+        ColumnPredicate { column, op, value }
+    }
+
+    #[test]
+    fn key_only_plan_prunes_nothing_by_zones() {
+        let (_ctx, ds, index) = trending();
+        let q = Query::stats(RangeQuery { lo: 0, hi: 2_490 }, 0);
+        let plan = plan_query(&ds, &index, &q, true).unwrap();
+        assert_eq!(plan.explain.partitions, 4);
+        assert_eq!(plan.explain.merged_ranges, 1);
+        assert_eq!(plan.explain.considered, 1, "one partition holds keys 0..=2490");
+        assert_eq!(plan.explain.key_pruned, 3);
+        assert_eq!(plan.explain.zone_pruned, 0);
+        assert_eq!(plan.explain.targeted, 1);
+        assert_eq!(plan.explain.estimated_rows, 250);
+        assert_eq!(
+            plan.explain.estimated_bytes,
+            250 * ds.schema().row_bytes()
+        );
+        assert!(plan.baseline.is_empty());
+    }
+
+    #[test]
+    fn zone_pruning_drops_partitions_key_targeting_cannot() {
+        let (_ctx, ds, index) = trending();
+        // Full key span, but only prices >= 750 exist in the last partition.
+        let q = Query::stats(RangeQuery { lo: 0, hi: i64::MAX }, 0)
+            .filtered(vec![pred(0, PredOp::Ge, 750.0)]);
+        let plan = plan_query(&ds, &index, &q, true).unwrap();
+        assert_eq!(plan.explain.considered, 4);
+        assert_eq!(plan.explain.key_pruned, 0);
+        assert_eq!(plan.explain.zone_pruned, 3);
+        assert_eq!(plan.explain.targeted, 1);
+        assert_eq!(plan.ranges.len(), 1);
+        assert_eq!(plan.ranges[0].slices.len(), 1);
+        assert_eq!(plan.ranges[0].slices[0].partition, 3);
+
+        // The oracle arm keeps everything.
+        let unpruned = plan_query(&ds, &index, &q, false).unwrap();
+        assert_eq!(unpruned.explain.zone_pruned, 0);
+        assert_eq!(unpruned.explain.targeted, 4);
+
+        // An unsatisfiable conjunction prunes every partition.
+        let impossible = Query::stats(RangeQuery { lo: 0, hi: i64::MAX }, 0)
+            .filtered(vec![pred(0, PredOp::Gt, 1e9)]);
+        let plan = plan_query(&ds, &index, &impossible, true).unwrap();
+        assert_eq!(plan.explain.targeted, 0);
+        assert_eq!(plan.explain.zone_pruned, 4);
+    }
+
+    #[test]
+    fn multi_range_merge_and_distance_baseline() {
+        let (_ctx, ds, index) = trending();
+        let q = Query {
+            ranges: vec![
+                RangeQuery { lo: 0, hi: 1_000 },
+                RangeQuery { lo: 500, hi: 2_000 }, // overlaps → merges
+            ],
+            predicates: Vec::new(),
+            op: QueryOp::Distance {
+                column: 0,
+                baseline: RangeQuery { lo: 7_500, hi: 9_500 },
+            },
+        };
+        let plan = plan_query(&ds, &index, &q, true).unwrap();
+        assert_eq!(plan.explain.merged_ranges, 2, "primary merge + baseline");
+        assert_eq!(plan.ranges.len(), 1);
+        assert_eq!(plan.baseline.len(), 1);
+        assert_eq!(plan.baseline[0].slices[0].partition, 3);
+        assert_eq!(plan.explain.key_pruned, 2, "partitions 1 and 2 untouched");
+    }
+
+    #[test]
+    fn plan_validates_inputs() {
+        let (_ctx, ds, index) = trending();
+        let bad_range = Query::stats(RangeQuery { lo: 9, hi: 1 }, 0);
+        assert!(plan_query(&ds, &index, &bad_range, true).is_err());
+        let bad_col = Query::stats(RangeQuery { lo: 0, hi: 1 }, 9);
+        assert!(plan_query(&ds, &index, &bad_col, true).is_err());
+        let bad_pred = Query::stats(RangeQuery { lo: 0, hi: 1 }, 0)
+            .filtered(vec![pred(5, PredOp::Gt, 0.0)]);
+        assert!(plan_query(&ds, &index, &bad_pred, true).is_err());
+        let nan_pred = Query::stats(RangeQuery { lo: 0, hi: 1 }, 0)
+            .filtered(vec![pred(0, PredOp::Gt, f32::NAN)]);
+        assert!(plan_query(&ds, &index, &nan_pred, true).is_err());
+        let zero_window = Query {
+            ranges: vec![RangeQuery { lo: 0, hi: 1 }],
+            predicates: Vec::new(),
+            op: QueryOp::Trend { column: 0, window: 0 },
+        };
+        assert!(plan_query(&ds, &index, &zero_window, true).is_err());
+    }
+
+    #[test]
+    fn explain_renders() {
+        let (_ctx, ds, index) = trending();
+        let q = Query::stats(RangeQuery { lo: 0, hi: 2_490 }, 0);
+        let ex = plan_query(&ds, &index, &q, true).unwrap().explain;
+        let line = ex.line();
+        assert!(line.contains("4 partitions"), "{line}");
+        assert!(line.contains("zone-pruned"), "{line}");
+        let j = ex.to_json().to_string();
+        assert!(j.contains("\"key_pruned\":3"), "{j}");
+        assert!(j.contains("\"targeted\":1"), "{j}");
+    }
+
+    #[test]
+    fn parse_predicates_accepts_conjunctions() {
+        let s = Schema::climate();
+        let ps = parse_predicates("temperature > 30, humidity <= 50", &s).unwrap();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0], pred(0, PredOp::Gt, 30.0));
+        assert_eq!(ps[1], pred(1, PredOp::Le, 50.0));
+        let ps = parse_predicates("wind_speed >= 1.5 and wind_dir < 180", &s).unwrap();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0], pred(2, PredOp::Ge, 1.5));
+        assert_eq!(ps[1], pred(3, PredOp::Lt, 180.0));
+
+        assert!(parse_predicates("", &s).is_err());
+        assert!(parse_predicates("temperature = 3", &s).is_err());
+        assert!(parse_predicates("bogus > 3", &s).is_err());
+        assert!(parse_predicates("temperature > banana", &s).is_err());
+        assert!(parse_predicates("temperature > inf", &s).is_err());
+    }
+
+    #[test]
+    fn query_builders() {
+        let q = Query::stats(RangeQuery { lo: 1, hi: 2 }, 3)
+            .filtered(vec![pred(0, PredOp::Lt, 1.0)]);
+        assert_eq!(q.ranges.len(), 1);
+        assert_eq!(q.predicates.len(), 1);
+        assert_eq!(q.op.column(), 3);
+        assert_eq!(QueryOp::Trend { column: 2, window: 5 }.column(), 2);
+    }
+}

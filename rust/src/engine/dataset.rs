@@ -155,6 +155,25 @@ impl Dataset {
         }
     }
 
+    /// Per-column zone maps of partition `partition` — pure metadata on
+    /// every backing (resident partitions carry them; a tiered store keeps
+    /// them in its slot table, so **no fault-in happens here**). `None`
+    /// for an id outside the visible dataset. This is what the query
+    /// planner consults for value-predicate pruning.
+    pub fn zone_maps(&self, partition: usize) -> Option<Vec<crate::index::ZoneMap>> {
+        match &self.store {
+            Some(st) => {
+                if let Some(v) = self.visible {
+                    if partition >= v {
+                        return None;
+                    }
+                }
+                st.zone_maps(partition)
+            }
+            None => self.parts.get(partition).map(|p| p.zones.clone()),
+        }
+    }
+
     /// Resolve a [`PartitionSlice`] into the backing partition plus the
     /// slice bounds — the zero-copy access path Oseba uses instead of
     /// materializing a filtered dataset. Resident datasets only; tiered

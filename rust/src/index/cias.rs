@@ -336,10 +336,17 @@ impl ContentIndex for Cias {
         let mut out = Vec::new();
 
         // --- compressed region: pure arithmetic -------------------------
-        let n_rows = (self.regular_parts * self.rows_per_part) as i64;
+        // i128 throughout: `hi - base_key` (and the `+ 1` past it) must
+        // not wrap for open-ended queries like `[0, i64::MAX]` over a
+        // step-1 grid — a regression the pruning bench exercises.
+        let n_rows = (self.regular_parts * self.rows_per_part) as i128;
         if n_rows > 0 {
-            let g_start = ceil_div(q.lo - self.base_key, self.step).max(0);
-            let g_end = ((q.hi - self.base_key).div_euclid(self.step) + 1).clamp(0, n_rows);
+            let step = self.step as i128;
+            let lo = q.lo as i128 - self.base_key as i128;
+            let g_start =
+                (lo.div_euclid(step) + i128::from(lo.rem_euclid(step) != 0)).max(0);
+            let g_end = ((q.hi as i128 - self.base_key as i128).div_euclid(step) + 1)
+                .clamp(0, n_rows);
             if g_start < g_end {
                 let (gs, ge) = (g_start as usize, g_end as usize);
                 let p_first = gs / self.rows_per_part;
@@ -664,6 +671,28 @@ mod tests {
         c.append_meta(next).unwrap();
         assert_eq!(c.asl_len(), 2);
         assert_eq!(c.regular_parts(), 2);
+    }
+
+    #[test]
+    fn open_ended_query_on_step_one_grid_does_not_overflow() {
+        // Regression: `(hi - base_key).div_euclid(step) + 1` used to wrap
+        // for `hi = i64::MAX` on a step-1 grid (debug panic / release
+        // wrap-to-empty). Open-ended queries must resolve the full region.
+        let metas = vec![PartitionMeta {
+            id: 0,
+            key_min: 0,
+            key_max: 99,
+            rows: 100,
+            step: Some(1),
+        }];
+        let cias = Cias::from_meta(metas).unwrap();
+        let got = cias.lookup(RangeQuery { lo: 0, hi: i64::MAX });
+        assert_eq!(
+            got,
+            vec![PartitionSlice { partition: 0, row_start: 0, row_end: 100 }]
+        );
+        let wide = cias.lookup(RangeQuery { lo: i64::MIN + 1, hi: i64::MAX });
+        assert_eq!(wide, got);
     }
 
     #[test]

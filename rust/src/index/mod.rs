@@ -15,4 +15,7 @@ pub mod types;
 pub use builder::extract_meta;
 pub use cias::Cias;
 pub use table::TableIndex;
-pub use types::{ContentIndex, PartitionMeta, PartitionSlice, RangeQuery};
+pub use types::{
+    row_matches, zone_maps_of, zones_satisfiable, ColumnPredicate, ContentIndex,
+    PartitionMeta, PartitionSlice, PredOp, RangeQuery, ZoneMap,
+};

@@ -1,4 +1,5 @@
-//! Core index vocabulary: range queries, partition slices and the
+//! Core index vocabulary: range queries, partition slices, per-column
+//! value-domain zone maps with the predicates that consult them, and the
 //! [`ContentIndex`] trait both index implementations satisfy.
 
 use crate::error::{OsebaError, Result};
@@ -61,6 +62,139 @@ pub trait ContentIndex: Send + Sync {
     fn num_partitions(&self) -> usize;
 }
 
+/// Per-column value-domain statistics of one partition: min/max over the
+/// non-NaN values plus a NaN count. This is the zone map predicate
+/// pruning consults — pure metadata, so a cold (spilled) partition can be
+/// ruled out *before* it is faulted in.
+///
+/// Zone maps ride next to [`PartitionMeta`] (in partitions, store slots
+/// and the manifest) rather than inside it: the CIAS compressed region
+/// keeps no per-partition metadata at all, so storing zones in the index
+/// would reintroduce the O(m) footprint §III-B eliminates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ZoneMap {
+    /// Smallest non-NaN value (`f32::INFINITY` when none).
+    pub min: f32,
+    /// Largest non-NaN value (`f32::NEG_INFINITY` when none).
+    pub max: f32,
+    /// Number of NaN values in the column.
+    pub nans: usize,
+}
+
+impl ZoneMap {
+    /// The empty zone map (identity for [`ZoneMap::absorb`]).
+    pub const EMPTY: ZoneMap =
+        ZoneMap { min: f32::INFINITY, max: f32::NEG_INFINITY, nans: 0 };
+
+    /// Zone map of a value slice (one pass; NaNs counted, not folded).
+    pub fn of(values: &[f32]) -> ZoneMap {
+        let mut z = ZoneMap::EMPTY;
+        for &x in values {
+            z.absorb(x);
+        }
+        z
+    }
+
+    /// Fold one value in.
+    pub fn absorb(&mut self, x: f32) {
+        if x.is_nan() {
+            self.nans += 1;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+    }
+
+    /// Whether the column holds no non-NaN value.
+    pub fn is_empty(&self) -> bool {
+        self.min > self.max
+    }
+}
+
+/// Zone maps for every value column of a partition's valid rows.
+pub fn zone_maps_of(columns: &[Vec<f32>], rows: usize) -> Vec<ZoneMap> {
+    columns.iter().map(|c| ZoneMap::of(&c[..rows.min(c.len())])).collect()
+}
+
+/// Comparison operator of a value predicate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PredOp {
+    /// `column > value`
+    Gt,
+    /// `column >= value`
+    Ge,
+    /// `column < value`
+    Lt,
+    /// `column <= value`
+    Le,
+}
+
+impl PredOp {
+    /// The operator's source spelling (`">"`, `">="`, ...).
+    pub fn symbol(&self) -> &'static str {
+        match self {
+            PredOp::Gt => ">",
+            PredOp::Ge => ">=",
+            PredOp::Lt => "<",
+            PredOp::Le => "<=",
+        }
+    }
+}
+
+/// One `column OP value` predicate over a value column. A conjunction of
+/// these is the `where` clause of a selective analysis; rows whose value
+/// is NaN never match (IEEE comparison semantics).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ColumnPredicate {
+    /// Index of the value column the predicate reads.
+    pub column: usize,
+    /// Comparison operator.
+    pub op: PredOp,
+    /// Comparison constant (finite).
+    pub value: f32,
+}
+
+impl ColumnPredicate {
+    /// Whether one row value satisfies the predicate (NaN never does).
+    pub fn matches(&self, x: f32) -> bool {
+        match self.op {
+            PredOp::Gt => x > self.value,
+            PredOp::Ge => x >= self.value,
+            PredOp::Lt => x < self.value,
+            PredOp::Le => x <= self.value,
+        }
+    }
+
+    /// Whether *any* row of a partition could satisfy the predicate,
+    /// judged from its zone map alone. `false` means the partition can be
+    /// pruned without reading it: the zone bounds cover every non-NaN
+    /// value, and NaN rows never match a comparison.
+    pub fn satisfiable(&self, z: &ZoneMap) -> bool {
+        match self.op {
+            PredOp::Gt => z.max > self.value,
+            PredOp::Ge => z.max >= self.value,
+            PredOp::Lt => z.min < self.value,
+            PredOp::Le => z.min <= self.value,
+        }
+    }
+}
+
+/// Whether a row (given by its per-column values accessor) satisfies every
+/// predicate of a conjunction.
+pub fn row_matches(preds: &[ColumnPredicate], value_of: impl Fn(usize) -> f32) -> bool {
+    preds.iter().all(|p| p.matches(value_of(p.column)))
+}
+
+/// Whether a partition survives zone-map pruning for a conjunction:
+/// every predicate must be satisfiable under the partition's zones.
+pub fn zones_satisfiable(preds: &[ColumnPredicate], zones: &[ZoneMap]) -> bool {
+    preds.iter().all(|p| match zones.get(p.column) {
+        Some(z) => p.satisfiable(z),
+        // Unknown zone (column out of range): never prune on it.
+        None => true,
+    })
+}
+
 /// Shared per-partition metadata record extracted at load time.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PartitionMeta {
@@ -91,5 +225,86 @@ mod tests {
     fn slice_rows() {
         let s = PartitionSlice { partition: 0, row_start: 10, row_end: 25 };
         assert_eq!(s.rows(), 15);
+    }
+
+    #[test]
+    fn zone_map_excludes_nans_from_bounds() {
+        let z = ZoneMap::of(&[3.0, f32::NAN, -1.0, 7.5, f32::NAN]);
+        assert_eq!(z.min, -1.0);
+        assert_eq!(z.max, 7.5);
+        assert_eq!(z.nans, 2);
+        assert!(!z.is_empty());
+
+        let all_nan = ZoneMap::of(&[f32::NAN, f32::NAN]);
+        assert!(all_nan.is_empty());
+        assert_eq!(all_nan.nans, 2);
+
+        assert!(ZoneMap::of(&[]).is_empty());
+    }
+
+    #[test]
+    fn zone_maps_of_covers_valid_rows_only() {
+        let cols = vec![vec![1.0, 2.0, 99.0, 99.0], vec![5.0, f32::NAN, 99.0, 99.0]];
+        let zs = zone_maps_of(&cols, 2);
+        assert_eq!(zs.len(), 2);
+        assert_eq!((zs[0].min, zs[0].max), (1.0, 2.0));
+        assert_eq!((zs[1].min, zs[1].max), (5.0, 5.0));
+        assert_eq!(zs[1].nans, 1);
+    }
+
+    #[test]
+    fn predicate_matches_and_nan_never_does() {
+        let p = ColumnPredicate { column: 0, op: PredOp::Gt, value: 30.0 };
+        assert!(p.matches(30.5));
+        assert!(!p.matches(30.0));
+        assert!(!p.matches(f32::NAN));
+        let p = ColumnPredicate { column: 0, op: PredOp::Le, value: 2.0 };
+        assert!(p.matches(2.0));
+        assert!(!p.matches(2.1));
+        assert!(!p.matches(f32::NAN));
+        assert_eq!(PredOp::Ge.symbol(), ">=");
+    }
+
+    #[test]
+    fn predicate_satisfiable_against_zone_bounds() {
+        let z = ZoneMap { min: 10.0, max: 20.0, nans: 3 };
+        let pred = |op, value| ColumnPredicate { column: 0, op, value };
+        assert!(pred(PredOp::Gt, 19.9).satisfiable(&z));
+        assert!(!pred(PredOp::Gt, 20.0).satisfiable(&z));
+        assert!(pred(PredOp::Ge, 20.0).satisfiable(&z));
+        assert!(pred(PredOp::Lt, 10.1).satisfiable(&z));
+        assert!(!pred(PredOp::Lt, 10.0).satisfiable(&z));
+        assert!(pred(PredOp::Le, 10.0).satisfiable(&z));
+        // An all-NaN partition satisfies no comparison: always prunable.
+        let empty = ZoneMap::EMPTY;
+        for op in [PredOp::Gt, PredOp::Ge, PredOp::Lt, PredOp::Le] {
+            assert!(!pred(op, 0.0).satisfiable(&empty), "{op:?}");
+        }
+    }
+
+    #[test]
+    fn conjunction_helpers() {
+        let preds = vec![
+            ColumnPredicate { column: 0, op: PredOp::Gt, value: 1.0 },
+            ColumnPredicate { column: 1, op: PredOp::Lt, value: 5.0 },
+        ];
+        let row = [2.0f32, 4.0];
+        assert!(row_matches(&preds, |c| row[c]));
+        let row = [2.0f32, 6.0];
+        assert!(!row_matches(&preds, |c| row[c]));
+
+        let zones = vec![
+            ZoneMap { min: 0.0, max: 3.0, nans: 0 },
+            ZoneMap { min: 4.0, max: 9.0, nans: 0 },
+        ];
+        assert!(zones_satisfiable(&preds, &zones));
+        let blocked = vec![
+            ZoneMap { min: 0.0, max: 1.0, nans: 0 }, // col0 > 1 impossible
+            ZoneMap { min: 4.0, max: 9.0, nans: 0 },
+        ];
+        assert!(!zones_satisfiable(&preds, &blocked));
+        // Empty conjunction never prunes, always matches.
+        assert!(zones_satisfiable(&[], &zones));
+        assert!(row_matches(&[], |_| 0.0));
     }
 }

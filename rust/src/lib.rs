@@ -6,8 +6,11 @@
 //!
 //! * **Layer 3 (this crate)** — a Spark-like in-memory partitioned data
 //!   engine ([`engine`]), the paper's content-aware indexes ([`index`]:
-//!   table-based and CIAS), a leader/worker coordinator ([`coordinator`])
-//!   with a concurrent multi-query batch planner, tiered persistent
+//!   table-based and CIAS, extended with per-partition value-domain zone
+//!   maps), a leader/worker coordinator ([`coordinator`]) with a unified
+//!   query-plan layer ([`coordinator::plan`]: logical query → key
+//!   targeting → zone-map predicate pruning → masked execution) and a
+//!   concurrent multi-query batch planner, tiered persistent
 //!   storage ([`store`]: spill-to-disk `.oseg` segments with Hot/Cold
 //!   residency and super-index manifest snapshots), **live ingestion**
 //!   ([`engine::LiveDataset`] / [`ingest::LiveIngestor`]: append while
@@ -53,12 +56,17 @@ pub use error::{OsebaError, Result};
 pub mod prelude {
     pub use crate::analysis::{Analyzer, PeriodStats};
     pub use crate::config::ContextConfig;
-    pub use crate::coordinator::{plan_batch, Coordinator, IndexKind, Method, PlannedQuery};
+    pub use crate::coordinator::{
+        parse_predicates, plan_batch, plan_query, Coordinator, Explain, IndexKind,
+        Method, PhysicalPlan, PlannedQuery, Query, QueryOp, QueryOutput,
+    };
     pub use crate::engine::{
         Dataset, EpochSnapshot, LiveConfig, LiveCounters, LiveDataset, OsebaContext,
     };
     pub use crate::error::{OsebaError, Result};
-    pub use crate::index::{Cias, ContentIndex, RangeQuery, TableIndex};
+    pub use crate::index::{
+        Cias, ColumnPredicate, ContentIndex, PredOp, RangeQuery, TableIndex, ZoneMap,
+    };
     pub use crate::ingest::{chunk_batch, Chunk, LiveIngestor};
     pub use crate::runtime::AnalysisBackend;
     pub use crate::storage::Schema;

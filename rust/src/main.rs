@@ -81,6 +81,11 @@ fn cli() -> Cli {
                 None,
             ));
             f.push(flag(
+                "where",
+                "value predicates, e.g. 'temperature>30,humidity<=50'",
+                None,
+            ));
+            f.push(flag(
                 "memory-budget",
                 "storage budget (k/m/g); excess partitions spill to disk",
                 None,
@@ -157,14 +162,16 @@ fn cli() -> Cli {
 }
 
 fn app_config(p: &oseba::cli::Parsed) -> Result<AppConfig> {
-    let mut cfg = AppConfig::default();
-    cfg.dataset_bytes = parse_bytes(p.get("size").unwrap())?;
-    cfg.num_partitions = p.get_parse("partitions")?.unwrap();
-    cfg.backend = p.get("backend").unwrap().parse()?;
-    cfg.artifacts_dir = p.get("artifacts").unwrap().to_string();
-    cfg.cluster_workers = p.get_parse("workers")?.unwrap();
-    cfg.seed = p.get_parse::<u64>("seed")?.unwrap();
-    cfg.net_latency_us = p.get_parse::<u64>("net-latency-us")?.unwrap();
+    let cfg = AppConfig {
+        dataset_bytes: parse_bytes(p.get("size").unwrap())?,
+        num_partitions: p.get_parse("partitions")?.unwrap(),
+        backend: p.get("backend").unwrap().parse()?,
+        artifacts_dir: p.get("artifacts").unwrap().to_string(),
+        cluster_workers: p.get_parse("workers")?.unwrap(),
+        seed: p.get_parse::<u64>("seed")?.unwrap(),
+        net_latency_us: p.get_parse::<u64>("net-latency-us")?.unwrap(),
+        ..AppConfig::default()
+    };
     cfg.validate()?;
     Ok(cfg)
 }
@@ -296,7 +303,7 @@ fn cmd_run(p: &oseba::cli::Parsed) -> Result<()> {
             );
         }
         if p.get_bool("json") {
-            println!("{}", report.metrics.to_json().to_string());
+            println!("{}", report.metrics.to_json());
         }
     }
     Ok(())
@@ -369,6 +376,11 @@ fn cmd_batch(p: &oseba::cli::Parsed) -> Result<()> {
         }
     };
 
+    let predicates = match p.get("where") {
+        Some(w) if !w.is_empty() => oseba::coordinator::parse_predicates(w, ds.schema())?,
+        _ => Vec::new(),
+    };
+
     // One index build serves the naive-cost comparison and the batch run.
     let index = coord.build_index(&ds, index_kind)?;
     let naive_touched: usize = queries.iter().map(|q| index.lookup(*q).len()).sum();
@@ -381,10 +393,13 @@ fn cmd_batch(p: &oseba::cli::Parsed) -> Result<()> {
             pq.range.lo, pq.range.hi, pq.sources
         );
     }
+    if !predicates.is_empty() {
+        println!("where: {} predicate(s) pushed down to zone maps", predicates.len());
+    }
 
     let before = coord.context().counters();
     let (stats, report) =
-        coord.analyze_batch_with_report(&ds, index.as_ref(), &queries, column)?;
+        coord.execute_batch(&ds, index.as_ref(), &queries, &predicates, column)?;
     let after = coord.context().counters();
     println!();
     for (i, (q, st)) in queries.iter().zip(&stats).enumerate() {
@@ -409,7 +424,7 @@ fn cmd_batch(p: &oseba::cli::Parsed) -> Result<()> {
     }
     println!("index: {} bytes ({index_kind:?})", index.memory_bytes());
     if p.get_bool("json") {
-        println!("{}", report.to_json().to_string());
+        println!("{}", report.to_json());
     }
     Ok(())
 }
@@ -427,7 +442,7 @@ fn cmd_serve(p: &oseba::cli::Parsed) -> Result<()> {
     let (ds, cleanup) = load_maybe_tiered(&coord, &cfg, p)?;
     let _cleanup = SpillCleanup(cleanup);
     let server = QueryServer::new(coord, ds, index_kind)?;
-    eprintln!("serving on {addr} (op: info | stats | shutdown)");
+    eprintln!("serving on {addr} (op: info | stats | explain | shutdown)");
     server.serve(addr, |a| eprintln!("bound {a}"))
 }
 
@@ -469,7 +484,7 @@ fn cmd_serve_live(
         None => coord.create_live(schema, live_cfg)?,
     };
     eprintln!(
-        "serving LIVE on {addr} (op: info | stats | append | snapshot | shutdown); \
+        "serving LIVE on {addr} (op: info | stats | explain | append | snapshot | shutdown); \
          rows/partition {}, max ASL {}{}",
         live_cfg.rows_per_partition,
         live_cfg.max_asl,
@@ -664,10 +679,12 @@ fn cmd_save(p: &oseba::cli::Parsed) -> Result<()> {
 }
 
 fn cmd_open(p: &oseba::cli::Parsed) -> Result<()> {
-    let mut cfg = AppConfig::default();
-    cfg.backend = p.get("backend").unwrap().parse()?;
-    cfg.artifacts_dir = p.get("artifacts").unwrap().to_string();
-    cfg.cluster_workers = p.get_parse("workers")?.unwrap();
+    let mut cfg = AppConfig {
+        backend: p.get("backend").unwrap().parse()?,
+        artifacts_dir: p.get("artifacts").unwrap().to_string(),
+        cluster_workers: p.get_parse("workers")?.unwrap(),
+        ..AppConfig::default()
+    };
     apply_budget(&mut cfg, p)?;
     let backend = make_backend(cfg.backend, &cfg.artifacts_dir)?;
     let coord = Coordinator::new(&cfg, backend)?;

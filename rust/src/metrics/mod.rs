@@ -142,6 +142,9 @@ pub struct BatchReport {
     /// merged range (overlapping queries share a single touch; a
     /// partition hit by several disjoint merged ranges counts once each).
     pub partitions_touched: usize,
+    /// Index-proposed slices dropped by zone-map predicate pruning before
+    /// resolve (0 for a batch without value predicates).
+    pub zone_pruned: usize,
     /// Worker task dispatches submitted to the pool.
     pub tasks: usize,
     /// Cold partitions faulted in from the tiered store (0 when the
@@ -168,6 +171,9 @@ impl BatchReport {
             self.tasks,
             humansize::secs(self.secs),
         );
+        if self.zone_pruned > 0 {
+            line.push_str(&format!(" | zone-pruned: {}", self.zone_pruned));
+        }
         if self.faults > 0 || self.evictions > 0 {
             line.push_str(&format!(
                 " | tiered: {} faults, {} evictions, {} read",
@@ -186,6 +192,7 @@ impl BatchReport {
             ("merged_ranges", Json::num(self.merged_ranges as f64)),
             ("segments", Json::num(self.segments as f64)),
             ("partitions_touched", Json::num(self.partitions_touched as f64)),
+            ("zone_pruned", Json::num(self.zone_pruned as f64)),
             ("tasks", Json::num(self.tasks as f64)),
             ("faults", Json::num(self.faults as f64)),
             ("evictions", Json::num(self.evictions as f64)),
@@ -265,6 +272,7 @@ mod tests {
             merged_ranges: 3,
             segments: 11,
             partitions_touched: 9,
+            zone_pruned: 0,
             tasks: 6,
             faults: 0,
             evictions: 0,
@@ -275,12 +283,16 @@ mod tests {
         assert!(line.contains("8 queries"));
         assert!(line.contains("3 merged ranges"));
         assert!(!line.contains("tiered"), "resident batches stay terse");
+        assert!(!line.contains("zone-pruned"), "predicate-free batches stay terse");
         let j = r.to_json().to_string();
         assert!(j.contains("\"merged_ranges\":3"));
         assert!(j.contains("\"partitions_touched\":9"));
+        assert!(j.contains("\"zone_pruned\":0"));
         let tiered = BatchReport { faults: 2, segment_bytes_read: 1 << 20, ..r };
         assert!(tiered.line().contains("2 faults"), "{}", tiered.line());
         assert!(tiered.to_json().to_string().contains("\"faults\":2"));
+        let pruned = BatchReport { zone_pruned: 4, ..r };
+        assert!(pruned.line().contains("zone-pruned: 4"), "{}", pruned.line());
     }
 
     #[test]

@@ -34,17 +34,26 @@ impl AnalysisBackend for NativeBackend {
     fn segment_stats(&self, block: &[f32], start: usize, end: usize) -> Result<Moments> {
         let (start, end) = clamp_range(block.len(), start, end);
         // f32 partial sums (like the kernel), widened at the partial level.
+        // NaNs are counted out (the crate-wide NaN policy, DESIGN.md §10).
         let mut mx = NEG_INF;
         let mut mn = POS_INF;
         let mut sum = 0f32;
         let mut sumsq = 0f32;
+        let mut nans = 0usize;
         for &x in &block[start..end] {
+            if x.is_nan() {
+                nans += 1;
+                continue;
+            }
             mx = mx.max(x);
             mn = mn.min(x);
             sum += x;
             sumsq += x * x;
         }
-        Ok(Moments::from_kernel(mx, mn, sum, sumsq, (end - start) as f32))
+        let mut m =
+            Moments::from_kernel(mx, mn, sum, sumsq, (end - start - nans) as f32);
+        m.nans = nans as f64;
+        Ok(m)
     }
 
     fn moving_average(
@@ -98,14 +107,22 @@ impl AnalysisBackend for NativeBackend {
         let mut l1 = 0f32;
         let mut l2sq = 0f32;
         let mut linf = 0f32;
+        let mut nans = 0usize;
         for i in start..end {
             let d = a[i] - b[i];
+            if d.is_nan() {
+                nans += 1;
+                continue;
+            }
             let ad = d.abs();
             l1 += ad;
             l2sq += d * d;
             linf = linf.max(ad);
         }
-        Ok(DistancePartial::from_kernel(l1, l2sq, linf, (end - start) as f32))
+        let mut p =
+            DistancePartial::from_kernel(l1, l2sq, linf, (end - start - nans) as f32);
+        p.nans = nans as f64;
+        Ok(p)
     }
 
     fn histogram64(
@@ -120,8 +137,11 @@ impl AnalysisBackend for NativeBackend {
         let width = (hi - lo) / HIST_BINS as f32;
         let mut bins = vec![0f32; HIST_BINS];
         for &x in &block[start..end] {
-            // Same clamp semantics as the kernel: out-of-range values land
-            // in the edge bins.
+            // NaNs are skipped (they used to alias to bin 0 via the cast);
+            // out-of-range values land in the edge bins, like the kernel.
+            if x.is_nan() {
+                continue;
+            }
             let raw = ((x - lo) / width) as i64;
             let b = raw.clamp(0, HIST_BINS as i64 - 1) as usize;
             bins[b] += 1.0;
@@ -221,12 +241,43 @@ mod tests {
     #[test]
     fn histogram_mass_and_edges() {
         let mut xs = vec![0.5f32; 90];
-        xs.extend([*&-5.0f32, 5.0]);
+        xs.extend([-5.0f32, 5.0]);
         let h = backend().histogram64(&xs, 0, 92, 0.0, 1.0).unwrap();
         assert_eq!(h.iter().sum::<f32>(), 92.0);
         assert_eq!(h[32], 90.0); // 0.5 → bin 32
         assert_eq!(h[0], 1.0); // clamped low
         assert_eq!(h[63], 1.0); // clamped high
+    }
+
+    #[test]
+    fn nan_policy_stats_distance_histogram() {
+        let b = backend();
+        // Stats: NaNs excluded from every moment, counted separately.
+        let m = b
+            .segment_stats(&[2.0, f32::NAN, 4.0, f32::NAN, 9.0], 0, 5)
+            .unwrap();
+        assert_eq!(m.count, 3.0);
+        assert_eq!(m.nans, 2.0);
+        assert_eq!(m.max, 9.0);
+        assert_eq!(m.min, 2.0);
+        assert_eq!(m.mean(), 5.0);
+        assert!(m.std().is_finite());
+
+        // Distance: a NaN on either side drops the pair, not the total.
+        let x = [1.0, f32::NAN, 3.0, 4.0];
+        let y = [1.0, 2.0, f32::NAN, 5.0];
+        let d = b.distance(&x, &y, 0, 4).unwrap();
+        assert_eq!(d.count, 2.0);
+        assert_eq!(d.nans, 2.0);
+        assert_eq!(d.l1, 1.0);
+        assert!(d.l2sq.is_finite());
+
+        // Histogram: NaN is skipped, not aliased into bin 0.
+        let h = b
+            .histogram64(&[0.5, f32::NAN, 0.5], 0, 3, 0.0, 1.0)
+            .unwrap();
+        assert_eq!(h.iter().sum::<f32>(), 2.0);
+        assert_eq!(h[0], 0.0);
     }
 
     #[test]

@@ -11,7 +11,9 @@
 //!
 //! ```text
 //! → {"op":"stats","lo":3600,"hi":7200,"column":"temperature","method":"oseba"}
-//! ← {"ok":true,"count":2,"max":21.4,"min":20.9,"mean":21.1,"std":0.2,"secs":0.0001}
+//! ← {"ok":true,"count":2,"max":21.4,"min":20.9,"mean":21.1,"std":0.2,"nans":0,"secs":0.0001}
+//! → {"op":"explain","lo":3600,"hi":7200,"column":"temperature","where":"temperature > 30"}
+//! ← {"ok":true,"plan":{"partitions":15,"considered":1,"key_pruned":14,"zone_pruned":1,...}}
 //! → {"op":"append","keys":[3600,7200],"columns":[[21.4,20.9],[80,81],[3,4],[120,121]]}
 //! ← {"ok":true,"epoch":0,"rows":2,"sealed_partitions":0,"sealed_rows":0,"unsealed_rows":2}
 //! → {"op":"info"}
@@ -28,10 +30,12 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use crate::coordinator::{Coordinator, IndexKind, Method};
+use crate::coordinator::{
+    parse_predicates, plan_query, Coordinator, IndexKind, Method, Query,
+};
 use crate::engine::{Dataset, LiveDataset};
 use crate::error::{OsebaError, Result};
-use crate::index::{ContentIndex, RangeQuery};
+use crate::index::{ColumnPredicate, ContentIndex, RangeQuery};
 use crate::ingest::Chunk;
 use crate::metrics::Timer;
 use crate::util::json::Json;
@@ -169,6 +173,7 @@ pub fn handle_request(
     match op {
         "info" => handle_info(coord, source),
         "stats" => handle_stats(&req, coord, source),
+        "explain" => handle_explain(&req, coord, source),
         "append" => handle_append(&req, source),
         "snapshot" => handle_snapshot(source),
         "shutdown" => {
@@ -239,43 +244,101 @@ fn handle_info(coord: &Coordinator, source: &ServerSource) -> Result<Json> {
     Ok(Json::obj(fields))
 }
 
-fn handle_stats(req: &Json, coord: &Coordinator, source: &ServerSource) -> Result<Json> {
+/// Parse the optional `where` field into predicates against `ds`' schema.
+fn parse_where(req: &Json, ds: &Dataset) -> Result<Vec<ColumnPredicate>> {
+    match req.get("where") {
+        None | Some(Json::Null) => Ok(Vec::new()),
+        Some(w) => {
+            let spec = w
+                .as_str()
+                .ok_or_else(|| OsebaError::Json("where must be a string".into()))?;
+            parse_predicates(spec, ds.schema())
+        }
+    }
+}
+
+/// The query source pinned for one request: a fixed server borrows its
+/// dataset/index; a live server pins one epoch snapshot (held here so its
+/// partitions stay alive for the whole request). Shared by `stats` and
+/// `explain`.
+enum SourcePin<'a> {
+    Fixed {
+        ds: &'a Dataset,
+        index: &'a dyn ContentIndex,
+    },
+    Live(crate::engine::EpochSnapshot),
+}
+
+impl<'a> SourcePin<'a> {
+    fn pin(coord: &Coordinator, source: &'a ServerSource) -> SourcePin<'a> {
+        match source {
+            ServerSource::Fixed { ds, index } => {
+                SourcePin::Fixed { ds: ds.as_ref(), index: index.as_ref() }
+            }
+            ServerSource::Live(live) => SourcePin::Live(coord.snapshot_live(live)),
+        }
+    }
+
+    /// The dataset, index and (live only) pinned epoch to plan against.
+    fn resolve(&self) -> Result<(&Dataset, &dyn ContentIndex, Option<u64>)> {
+        match self {
+            SourcePin::Fixed { ds, index } => Ok((*ds, *index, None)),
+            SourcePin::Live(snap) => {
+                let index = snap.index().ok_or_else(|| {
+                    OsebaError::InvalidRange(
+                        "live dataset has no sealed partitions yet".into(),
+                    )
+                })?;
+                Ok((snap.dataset(), index as &dyn ContentIndex, Some(snap.epoch())))
+            }
+        }
+    }
+}
+
+/// Parse the selection fields shared by `stats` and `explain`: the
+/// inclusive key range and the column name.
+fn parse_selection<'r>(req: &'r Json) -> Result<(RangeQuery, &'r str)> {
     let lo = req.require("lo")?.as_i64().ok_or_else(bad_num)?;
     let hi = req.require("hi")?.as_i64().ok_or_else(bad_num)?;
     let q = RangeQuery::new(lo, hi)?;
+    let col_name = req
+        .require("column")?
+        .as_str()
+        .ok_or_else(|| OsebaError::Json("column must be a string".into()))?;
+    Ok((q, col_name))
+}
+
+fn handle_stats(req: &Json, coord: &Coordinator, source: &ServerSource) -> Result<Json> {
+    let (q, col_name) = parse_selection(req)?;
     let method: Method = req
         .get("method")
         .and_then(|m| m.as_str())
         .unwrap_or("oseba")
         .parse()?;
-    let col_name = req
-        .require("column")?
-        .as_str()
-        .ok_or_else(|| OsebaError::Json("column must be a string".into()))?;
 
-    // Live requests pin one epoch snapshot here; the borrow keeps it (and
-    // its partitions) alive for the whole request.
-    let snap;
-    let (ds, index, epoch): (&Dataset, &dyn ContentIndex, Option<u64>) = match source {
-        ServerSource::Fixed { ds, index } => (ds.as_ref(), index.as_ref(), None),
-        ServerSource::Live(live) => {
-            snap = coord.snapshot_live(live);
-            let index = snap.index().ok_or_else(|| {
-                OsebaError::InvalidRange("live dataset has no sealed partitions yet".into())
-            })?;
-            (snap.dataset(), index as &dyn ContentIndex, Some(snap.epoch()))
-        }
-    };
+    let pin = SourcePin::pin(coord, source);
+    let (ds, index, epoch) = pin.resolve()?;
     let column = ds.schema().column_index(col_name)?;
+    let predicates = parse_where(req, ds)?;
     let timer = Timer::start();
-    let stats = match method {
-        Method::Oseba => coord.analyze_period_oseba(ds, index, q, column)?,
+    let (stats, zone_pruned) = match method {
+        Method::Oseba => {
+            let query = Query::stats(q, column).filtered(predicates);
+            let (out, explain) = coord.execute_plan(ds, index, &query)?;
+            (out.stats().expect("stats query"), Some(explain.zone_pruned))
+        }
         Method::Default => {
+            if !predicates.is_empty() {
+                return Err(OsebaError::Config(
+                    "where requires method=oseba (the scan baseline filters keys only)"
+                        .into(),
+                ));
+            }
             let (st, filtered) = coord.analyze_period_default(ds, q, column)?;
             // The server keeps memory bounded: server-side filtered
             // datasets are transient.
             coord.context().unpersist(&filtered);
-            st
+            (st, None)
         }
     };
     let mut fields = vec![
@@ -285,9 +348,34 @@ fn handle_stats(req: &Json, coord: &Coordinator, source: &ServerSource) -> Resul
         ("min", Json::num(stats.min as f64)),
         ("mean", Json::num(stats.mean)),
         ("std", Json::num(stats.std)),
+        ("nans", Json::num(stats.nans as f64)),
         ("method", Json::str(method.label())),
         ("secs", Json::num(timer.secs())),
     ];
+    if let Some(zp) = zone_pruned {
+        fields.push(("zone_pruned", Json::num(zp as f64)));
+    }
+    if let Some(e) = epoch {
+        fields.push(("epoch", Json::num(e as f64)));
+    }
+    Ok(Json::obj(fields))
+}
+
+/// `explain`: lower a stats query through the plan layer and report the
+/// pruning arithmetic **without executing it** — pure metadata, so on a
+/// tiered dataset nothing is faulted in.
+fn handle_explain(req: &Json, coord: &Coordinator, source: &ServerSource) -> Result<Json> {
+    let (q, col_name) = parse_selection(req)?;
+    let pin = SourcePin::pin(coord, source);
+    let (ds, index, epoch) = pin.resolve()?;
+    let column = ds.schema().column_index(col_name)?;
+    let predicates = parse_where(req, ds)?;
+    let query = Query::stats(q, column).filtered(predicates);
+    let plan = plan_query(ds, index, &query, true)?;
+    let mut fields = vec![("ok", Json::Bool(true))];
+    // The pruning arithmetic nests under its own key so the top level
+    // stays uniform with every other response shape.
+    fields.push(("plan", plan.explain.to_json()));
     if let Some(e) = epoch {
         fields.push(("epoch", Json::num(e as f64)));
     }
@@ -433,6 +521,105 @@ mod tests {
         let before = coord.context().memory_used();
         handle_request(&mk("default"), &coord, &source, &flag).unwrap();
         assert_eq!(coord.context().memory_used(), before);
+    }
+
+    #[test]
+    fn stats_where_clause_filters_and_reports() {
+        let (coord, source) = setup();
+        let flag = AtomicBool::new(false);
+        let all = handle_request(
+            &format!(
+                r#"{{"op":"stats","lo":0,"hi":{},"column":"temperature"}}"#,
+                3600 * 9_999
+            ),
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap();
+        let hot = handle_request(
+            &format!(
+                r#"{{"op":"stats","lo":0,"hi":{},"column":"temperature","where":"temperature > 15"}}"#,
+                3600 * 9_999
+            ),
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap();
+        let n_all = all.get("count").unwrap().as_usize().unwrap();
+        let n_hot = hot.get("count").unwrap().as_usize().unwrap();
+        assert!(n_hot < n_all, "predicate must be selective ({n_hot} vs {n_all})");
+        assert!(n_hot > 0);
+        assert!(hot.get("min").unwrap().as_f64().unwrap() > 15.0);
+        assert_eq!(hot.get("nans").unwrap().as_usize(), Some(0));
+        assert!(hot.get("zone_pruned").is_some());
+
+        // Bad clauses are clean errors; the scan baseline rejects `where`.
+        assert!(handle_request(
+            r#"{"op":"stats","lo":0,"hi":10,"column":"temperature","where":"bogus > 1"}"#,
+            &coord,
+            &source,
+            &flag
+        )
+        .is_err());
+        assert!(handle_request(
+            r#"{"op":"stats","lo":0,"hi":10,"column":"temperature","where":"temperature = 1"}"#,
+            &coord,
+            &source,
+            &flag
+        )
+        .is_err());
+        let err = handle_request(
+            r#"{"op":"stats","lo":0,"hi":10,"column":"temperature","where":"temperature > 1","method":"default"}"#,
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("oseba"), "got: {err}");
+    }
+
+    #[test]
+    fn explain_reports_pruning_without_executing() {
+        let (coord, source) = setup();
+        let flag = AtomicBool::new(false);
+        // Selective key range: 10_000 rows in 5 partitions of 2_000 rows.
+        let r = handle_request(
+            &format!(
+                r#"{{"op":"explain","lo":0,"hi":{},"column":"temperature"}}"#,
+                3600 * 999
+            ),
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        let plan = r.get("plan").unwrap();
+        assert_eq!(plan.get("partitions").unwrap().as_usize(), Some(5));
+        assert_eq!(plan.get("considered").unwrap().as_usize(), Some(1));
+        assert_eq!(plan.get("key_pruned").unwrap().as_usize(), Some(4));
+        assert_eq!(plan.get("zone_pruned").unwrap().as_usize(), Some(0));
+        assert_eq!(plan.get("targeted").unwrap().as_usize(), Some(1));
+        assert_eq!(plan.get("estimated_rows").unwrap().as_usize(), Some(1_000));
+        // An impossible predicate zone-prunes everything, still ok:false-free.
+        let r = handle_request(
+            &format!(
+                r#"{{"op":"explain","lo":0,"hi":{},"column":"temperature","where":"temperature > 100000"}}"#,
+                3600 * 9_999
+            ),
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap();
+        let plan = r.get("plan").unwrap();
+        assert_eq!(plan.get("targeted").unwrap().as_usize(), Some(0));
+        assert_eq!(
+            plan.get("zone_pruned").unwrap().as_usize(),
+            plan.get("considered").unwrap().as_usize()
+        );
     }
 
     #[test]

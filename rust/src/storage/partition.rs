@@ -8,6 +8,7 @@
 use std::sync::Arc;
 
 use crate::error::{OsebaError, Result};
+use crate::index::types::ZoneMap;
 use crate::storage::batch::RecordBatch;
 
 /// Rows per kernel block — must match `python/compile/kernels/BLOCK_ROWS`.
@@ -26,6 +27,11 @@ pub struct Partition {
     pub rows: usize,
     /// `rows` rounded up to a multiple of `BLOCK_ROWS`.
     pub padded_rows: usize,
+    /// Per-column zone maps over the valid rows (padding excluded),
+    /// computed once at construction — the value-domain metadata the
+    /// query planner prunes partitions by. Excluded from [`Self::bytes`]
+    /// (it is metadata, not storage-budget data).
+    pub zones: Vec<ZoneMap>,
 }
 
 impl Partition {
@@ -34,6 +40,7 @@ impl Partition {
         let rows = hi - lo;
         let padded_rows = rows.div_ceil(BLOCK_ROWS).max(1) * BLOCK_ROWS;
         let keys = batch.keys[lo..hi].to_vec();
+        let zones = batch.columns.iter().map(|c| ZoneMap::of(&c[lo..hi])).collect();
         let columns = batch
             .columns
             .iter()
@@ -44,7 +51,7 @@ impl Partition {
                 v
             })
             .collect();
-        Partition { id, keys, columns, rows, padded_rows }
+        Partition { id, keys, columns, rows, padded_rows, zones }
     }
 
     /// Build directly from owned columns (used by the filter baseline when
@@ -52,11 +59,12 @@ impl Partition {
     pub fn from_rows(id: usize, keys: Vec<i64>, mut columns: Vec<Vec<f32>>) -> Partition {
         let rows = keys.len();
         let padded_rows = rows.div_ceil(BLOCK_ROWS).max(1) * BLOCK_ROWS;
+        let zones = columns.iter().map(|c| ZoneMap::of(&c[..rows])).collect();
         for c in &mut columns {
             debug_assert_eq!(c.len(), rows);
             c.resize(padded_rows, 0.0);
         }
-        Partition { id, keys, columns, rows, padded_rows }
+        Partition { id, keys, columns, rows, padded_rows, zones }
     }
 
     /// Smallest key (None when empty).
@@ -219,6 +227,27 @@ mod tests {
         assert_eq!(p.upper_bound(1590), 50);
         assert_eq!(p.lower_bound(9999), 50);
         assert_eq!(p.lower_bound(0), 0);
+    }
+
+    #[test]
+    fn zones_cover_valid_rows_not_padding() {
+        let rb = batch(100);
+        let p = Partition::from_batch_range(0, &rb, 10, 60);
+        assert_eq!(p.zones.len(), 2);
+        // Column 0 holds 10.0..=59.0 over the valid rows; padding zeros
+        // must not drag min down.
+        assert_eq!(p.zones[0].min, 10.0);
+        assert_eq!(p.zones[0].max, 59.0);
+        assert_eq!(p.zones[0].nans, 0);
+
+        let q = Partition::from_rows(
+            1,
+            vec![1, 2, 3],
+            vec![vec![5.0, f32::NAN, -2.0], vec![0.0, 0.0, 0.0]],
+        );
+        assert_eq!(q.zones[0].min, -2.0);
+        assert_eq!(q.zones[0].max, 5.0);
+        assert_eq!(q.zones[0].nans, 1);
     }
 
     #[test]

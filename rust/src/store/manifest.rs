@@ -14,7 +14,7 @@
 use std::path::Path;
 
 use crate::error::{OsebaError, Result};
-use crate::index::{Cias, PartitionMeta};
+use crate::index::{Cias, PartitionMeta, ZoneMap};
 use crate::storage::Schema;
 use crate::util::json::Json;
 
@@ -22,16 +22,25 @@ use crate::util::json::Json;
 pub const MANIFEST_FILE: &str = "manifest.json";
 /// `format` field value identifying a store manifest.
 pub const FORMAT: &str = "oseba-store";
-/// Current manifest version.
-pub const VERSION: usize = 1;
+/// Current manifest version. Version 2 added per-segment `zones` (the
+/// per-column value-domain zone maps the query planner prunes by). v1
+/// manifests are still readable: their zones default to the unbounded
+/// sentinel, which never prunes (conservative, correct); `save` rewrites
+/// them at v2 with real zones.
+pub const VERSION: usize = 2;
+/// Oldest manifest version `open` still accepts.
+pub const MIN_VERSION: usize = 1;
 
 /// One segment's manifest entry.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SegmentEntry {
     /// Segment file name, relative to the store directory.
     pub file: String,
     /// The partition metadata (also a table-index row).
     pub meta: PartitionMeta,
+    /// Per-column zone maps (one per schema value column), so cold
+    /// partitions can be zone-pruned before any fault-in.
+    pub zones: Vec<ZoneMap>,
 }
 
 /// The parsed/serializable manifest.
@@ -95,6 +104,54 @@ fn key_fits(k: i64) -> bool {
     k.unsigned_abs() <= (1u64 << 53)
 }
 
+/// JSON rendering of one zone map. JSON has no NaN/Infinity, so an empty
+/// zone (no non-NaN value) is written as `{"empty":true,...}` and a
+/// non-finite bound degrades to `null` (parsed back as the unbounded
+/// sentinel — pruning stays conservative).
+fn zone_to_json(z: &ZoneMap) -> Json {
+    if z.is_empty() {
+        return Json::obj(vec![
+            ("empty", Json::Bool(true)),
+            ("nans", Json::num(z.nans as f64)),
+        ]);
+    }
+    let bound = |v: f32| {
+        if v.is_finite() {
+            Json::num(v as f64)
+        } else {
+            Json::Null
+        }
+    };
+    Json::obj(vec![
+        ("min", bound(z.min)),
+        ("max", bound(z.max)),
+        ("nans", Json::num(z.nans as f64)),
+    ])
+}
+
+fn zone_from_json(v: &Json) -> Result<ZoneMap> {
+    let nans = v.require("nans")?.as_usize().ok_or_else(|| {
+        OsebaError::Json("zone field 'nans' must be a non-negative integer".into())
+    })?;
+    if v.get("empty") == Some(&Json::Bool(true)) {
+        return Ok(ZoneMap { nans, ..ZoneMap::EMPTY });
+    }
+    let bound = |name: &str, unbounded: f32| -> Result<f32> {
+        match v.require(name)? {
+            Json::Null => Ok(unbounded),
+            j => j
+                .as_f64()
+                .map(|x| x as f32)
+                .ok_or_else(|| OsebaError::Json(format!("zone field '{name}' must be a number"))),
+        }
+    };
+    Ok(ZoneMap {
+        min: bound("min", f32::NEG_INFINITY)?,
+        max: bound("max", f32::INFINITY)?,
+        nans,
+    })
+}
+
 impl StoreManifest {
     /// Serialize. Fails if any key magnitude exceeds JSON-safe 2^53.
     pub fn to_json(&self) -> Result<Json> {
@@ -131,6 +188,10 @@ impl StoreManifest {
                                 _ => unreachable!(),
                             };
                             obj.insert("file".into(), Json::str(e.file.clone()));
+                            obj.insert(
+                                "zones".into(),
+                                Json::arr(e.zones.iter().map(zone_to_json).collect()),
+                            );
                             Json::Obj(obj)
                         })
                         .collect(),
@@ -160,14 +221,15 @@ impl StoreManifest {
                 )))
             }
         }
-        match v.require("version")?.as_usize() {
-            Some(VERSION) => {}
+        let version = match v.require("version")?.as_usize() {
+            Some(n) if (MIN_VERSION..=VERSION).contains(&n) => n,
             other => {
                 return Err(OsebaError::Store(format!(
-                    "unsupported manifest version {other:?} (want {VERSION})"
+                    "unsupported manifest version {other:?} \
+                     (want {MIN_VERSION}..={VERSION})"
                 )))
             }
-        }
+        };
 
         let sv = v.require("schema")?;
         let key = sv
@@ -216,7 +278,31 @@ impl StoreManifest {
                     "segment file '{file}' is not a bare file name"
                 )));
             }
-            segments.push(SegmentEntry { file, meta });
+            // v1 manifests predate zone maps: default every column to the
+            // unbounded sentinel — never prunes, always correct.
+            let zones = if version < 2 {
+                vec![
+                    ZoneMap { min: f32::NEG_INFINITY, max: f32::INFINITY, nans: 0 };
+                    schema.width()
+                ]
+            } else {
+                let zones = s
+                    .require("zones")?
+                    .as_arr()
+                    .ok_or_else(|| OsebaError::Json("segment zones must be an array".into()))?
+                    .iter()
+                    .map(zone_from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                if zones.len() != schema.width() {
+                    return Err(OsebaError::Store(format!(
+                        "segment {i} has {} zone maps for {} schema columns",
+                        zones.len(),
+                        schema.width()
+                    )));
+                }
+                zones
+            };
+            segments.push(SegmentEntry { file, meta, zones });
         }
         if segments.is_empty() {
             return Err(OsebaError::Store("manifest lists no segments".into()));
@@ -325,7 +411,14 @@ mod tests {
             schema: Schema::stock(),
             segments: metas
                 .iter()
-                .map(|m| SegmentEntry { file: format!("part-{:05}.oseg", m.id), meta: *m })
+                .map(|m| SegmentEntry {
+                    file: format!("part-{:05}.oseg", m.id),
+                    meta: *m,
+                    zones: vec![
+                        ZoneMap { min: -1.5, max: 42.0, nans: 0 },
+                        ZoneMap { min: 0.0, max: 9.0, nans: 3 },
+                    ],
+                })
                 .collect(),
             index,
         }
@@ -377,5 +470,51 @@ mod tests {
         assert!(StoreManifest::from_json(&Json::parse(&bad).unwrap()).is_err());
         // Not JSON at all.
         assert!(Json::parse("not json").is_err());
+        // Zone-map count must match the schema width.
+        let bad = good.replace(
+            r#""zones":[{"#,
+            r#""zones":[{"min":0,"max":1,"nans":0},{"#,
+        );
+        assert!(StoreManifest::from_json(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn v1_manifest_still_opens_with_unbounded_zones() {
+        // A manifest saved before zone maps existed (version 1, no
+        // `zones` field) must stay readable: its zones default to the
+        // never-prune sentinel, so old stores are not bricked.
+        let good = sample(2).to_json().unwrap().to_string();
+        let v1 = good
+            .replace("\"version\":2", "\"version\":1")
+            .replace(
+                r#","zones":[{"max":42,"min":-1.5,"nans":0},{"max":9,"min":0,"nans":3}]"#,
+                "",
+            );
+        assert!(!v1.contains("zones"), "surgery must strip every zones field");
+        let m = StoreManifest::from_json(&Json::parse(&v1).unwrap()).unwrap();
+        for e in &m.segments {
+            assert_eq!(e.zones.len(), 2);
+            for z in &e.zones {
+                assert_eq!(z.min, f32::NEG_INFINITY);
+                assert_eq!(z.max, f32::INFINITY);
+                assert_eq!(z.nans, 0);
+            }
+        }
+        // Unknown future versions are still rejected.
+        let v9 = good.replace("\"version\":2", "\"version\":9");
+        assert!(StoreManifest::from_json(&Json::parse(&v9).unwrap()).is_err());
+    }
+
+    #[test]
+    fn zone_maps_roundtrip_including_empty() {
+        let mut m = sample(2);
+        // One all-NaN column (empty bounds) must survive the round trip.
+        m.segments[1].zones[0] = ZoneMap { nans: 7, ..ZoneMap::EMPTY };
+        let back = StoreManifest::from_json(&m.to_json().unwrap()).unwrap();
+        assert_eq!(back.segments[0].zones, m.segments[0].zones);
+        let z = &back.segments[1].zones[0];
+        assert!(z.is_empty());
+        assert_eq!(z.nans, 7);
+        assert_eq!(back.segments[1].zones[1], m.segments[1].zones[1]);
     }
 }

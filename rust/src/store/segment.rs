@@ -21,6 +21,7 @@ use std::io::Write;
 use std::path::Path;
 
 use crate::error::{OsebaError, Result};
+use crate::index::types::zone_maps_of;
 use crate::storage::{Partition, BLOCK_ROWS};
 use crate::store::crc32::{crc32, Crc32};
 
@@ -210,7 +211,10 @@ pub fn decode_segment(path: &Path, buf: &[u8]) -> Result<Partition> {
         columns.push(col);
     }
 
-    Ok(Partition { id, keys, columns, rows, padded_rows })
+    // Zone maps are derived metadata: recompute from the verified data
+    // (cheaper than persisting them per segment, and always consistent).
+    let zones = zone_maps_of(&columns, rows);
+    Ok(Partition { id, keys, columns, rows, padded_rows, zones })
 }
 
 /// Read a partition back from `path`, verifying every section CRC.

@@ -24,7 +24,7 @@ use std::sync::{Arc, Mutex};
 use crate::engine::memory::MemoryTracker;
 use crate::error::{OsebaError, Result};
 use crate::index::builder::detect_step;
-use crate::index::{Cias, PartitionMeta};
+use crate::index::{Cias, PartitionMeta, ZoneMap};
 use crate::storage::{Partition, Schema, BLOCK_ROWS};
 use crate::store::manifest::{SegmentEntry, StoreManifest};
 use crate::store::segment::{read_segment, segment_len, write_segment};
@@ -66,6 +66,9 @@ impl StoreCounters {
 #[derive(Debug)]
 struct Slot {
     meta: PartitionMeta,
+    /// Per-column zone maps — resident metadata, so a Cold partition can
+    /// be zone-pruned without faulting it in.
+    zones: Vec<ZoneMap>,
     /// In-memory footprint (keys + padded columns) when hot.
     bytes: usize,
     /// Segment file name relative to the store directory.
@@ -156,6 +159,7 @@ impl TieredStore {
             .iter()
             .map(|e| Slot {
                 meta: e.meta,
+                zones: e.zones.clone(),
                 bytes: partition_bytes(e.meta.rows, width),
                 file: e.file.clone(),
                 on_disk: true,
@@ -224,6 +228,7 @@ impl TieredStore {
 
         let mut slot = Slot {
             meta,
+            zones: part.zones.clone(),
             bytes,
             file,
             on_disk: false,
@@ -407,7 +412,11 @@ impl TieredStore {
         let segments = inner
             .slots
             .iter()
-            .map(|s| SegmentEntry { file: s.file.clone(), meta: s.meta })
+            .map(|s| SegmentEntry {
+                file: s.file.clone(),
+                meta: s.meta,
+                zones: s.zones.clone(),
+            })
             .collect();
         StoreManifest::for_segments(self.schema.clone(), segments)?.save(&self.dir)
     }
@@ -433,6 +442,12 @@ impl TieredStore {
     /// Per-partition metadata (also the §III-A table-index rows).
     pub fn metas(&self) -> Vec<PartitionMeta> {
         self.inner.lock().unwrap().slots.iter().map(|s| s.meta).collect()
+    }
+
+    /// Per-column zone maps of partition `id` — pure metadata: no
+    /// residency change, no fault-in. `None` for an unknown id.
+    pub fn zone_maps(&self, id: usize) -> Option<Vec<ZoneMap>> {
+        self.inner.lock().unwrap().slots.get(id).map(|s| s.zones.clone())
     }
 
     /// Number of partitions the store holds (Hot + Cold).
@@ -643,6 +658,28 @@ mod tests {
     }
 
     #[test]
+    fn zone_maps_survive_save_open_without_fault_in() {
+        let dir = temp_dir("ts-zones");
+        let ps = parts(10_000, 4096);
+        let store =
+            TieredStore::create(&dir, Schema::stock(), MemoryTracker::unbounded()).unwrap();
+        fill(&store, &ps);
+        let want: Vec<_> = (0..3).map(|i| store.zone_maps(i).unwrap()).collect();
+        assert_eq!(want[0], ps[0].zones);
+        store.save().unwrap();
+        drop(store);
+
+        let (back, _index) =
+            TieredStore::open(&dir, MemoryTracker::unbounded()).unwrap();
+        for (i, w) in want.iter().enumerate() {
+            assert_eq!(back.zone_maps(i).as_ref(), Some(w), "partition {i}");
+        }
+        assert_eq!(back.counters(), StoreCounters::default(), "metadata only");
+        assert!(back.zone_maps(99).is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
     fn create_removes_stale_manifest() {
         let dir = temp_dir("ts-stale");
         let store =
@@ -675,13 +712,8 @@ mod tests {
         });
         assert!(store.insert(dup).is_err());
         // Wrong width.
-        let skinny = Arc::new(Partition {
-            id: 1,
-            keys: vec![i64::MAX - 1],
-            columns: vec![vec![0.0; BLOCK_ROWS]],
-            rows: 1,
-            padded_rows: BLOCK_ROWS,
-        });
+        let skinny =
+            Arc::new(Partition::from_rows(1, vec![i64::MAX - 1], vec![vec![0.0]]));
         assert!(store.insert(skinny).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
     }

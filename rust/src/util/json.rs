@@ -43,13 +43,6 @@ impl Json {
         Ok(v)
     }
 
-    /// Serialize compactly.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -165,6 +158,15 @@ impl Json {
     /// Array value.
     pub fn arr(xs: Vec<Json>) -> Json {
         Json::Arr(xs)
+    }
+}
+
+/// Compact serialization (`value.to_string()` comes via `ToString`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -56,18 +56,25 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
 
 /// Associative raw-moment partial: the merge algebra for `segment_stats`
 /// kernel outputs (DESIGN.md §3). `count == 0` is the identity element.
+///
+/// **NaN policy** (DESIGN.md §10): NaN values are *never* folded into
+/// `max`/`min`/`sum`/`sumsq`/`count` — they are counted in `nans` instead,
+/// so one corrupt reading cannot silently poison a whole period's mean and
+/// standard deviation. `count` is therefore the number of *non-NaN* values.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Moments {
-    /// Largest value seen (kernel sentinel when empty).
+    /// Largest non-NaN value seen (kernel sentinel when empty).
     pub max: f32,
-    /// Smallest value seen (kernel sentinel when empty).
+    /// Smallest non-NaN value seen (kernel sentinel when empty).
     pub min: f32,
-    /// Sum of values.
+    /// Sum of non-NaN values.
     pub sum: f64,
-    /// Sum of squared values.
+    /// Sum of squared non-NaN values.
     pub sumsq: f64,
-    /// Number of values folded in.
+    /// Number of non-NaN values folded in.
     pub count: f64,
+    /// Number of NaN values encountered (excluded from everything above).
+    pub nans: f64,
 }
 
 impl Moments {
@@ -78,11 +85,25 @@ impl Moments {
         sum: 0.0,
         sumsq: 0.0,
         count: 0.0,
+        nans: 0.0,
     };
 
     /// Build from the five f32 scalars a `segment_stats` execution returns.
+    ///
+    /// **Caveat:** the AOT kernels report no NaN count, so `nans` is 0
+    /// here and a NaN in kernel input still folds into the sums on the
+    /// HLO backend. The NaN policy is fully enforced by the native
+    /// backend and the predicate-masked engine path (DESIGN.md §10 notes
+    /// this as a known kernel-path limitation).
     pub fn from_kernel(max: f32, min: f32, sum: f32, sumsq: f32, count: f32) -> Moments {
-        Moments { max, min, sum: sum as f64, sumsq: sumsq as f64, count: count as f64 }
+        Moments {
+            max,
+            min,
+            sum: sum as f64,
+            sumsq: sumsq as f64,
+            count: count as f64,
+            nans: 0.0,
+        }
     }
 
     /// Single-pass scan of a raw slice (the Native backend / test oracle).
@@ -94,8 +115,12 @@ impl Moments {
         m
     }
 
-    /// Fold one value in.
+    /// Fold one value in (NaN is counted, not folded).
     pub fn absorb(&mut self, x: f32) {
+        if x.is_nan() {
+            self.nans += 1.0;
+            return;
+        }
         self.max = self.max.max(x);
         self.min = self.min.min(x);
         self.sum += x as f64;
@@ -111,6 +136,7 @@ impl Moments {
             sum: self.sum + other.sum,
             sumsq: self.sumsq + other.sumsq,
             count: self.count + other.count,
+            nans: self.nans + other.nans,
         }
     }
 
@@ -134,6 +160,9 @@ impl Moments {
 
 /// Distance partial algebra for the `distance` kernel (l2 kept squared so
 /// merging stays associative; take `.l2()` at the very end).
+///
+/// Same NaN policy as [`Moments`]: a pair whose difference is NaN (either
+/// side NaN) is counted in `nans` and excluded from every distance.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DistancePartial {
     /// Sum of absolute differences.
@@ -142,18 +171,26 @@ pub struct DistancePartial {
     pub l2sq: f64,
     /// Largest absolute difference.
     pub linf: f32,
-    /// Number of compared pairs.
+    /// Number of compared (non-NaN) pairs.
     pub count: f64,
+    /// Number of pairs excluded because their difference was NaN.
+    pub nans: f64,
 }
 
 impl DistancePartial {
     /// The identity (empty-range) partial.
     pub const EMPTY: DistancePartial =
-        DistancePartial { l1: 0.0, l2sq: 0.0, linf: 0.0, count: 0.0 };
+        DistancePartial { l1: 0.0, l2sq: 0.0, linf: 0.0, count: 0.0, nans: 0.0 };
 
     /// Build from the four f32 scalars a `distance` kernel execution returns.
     pub fn from_kernel(l1: f32, l2sq: f32, linf: f32, count: f32) -> Self {
-        DistancePartial { l1: l1 as f64, l2sq: l2sq as f64, linf, count: count as f64 }
+        DistancePartial {
+            l1: l1 as f64,
+            l2sq: l2sq as f64,
+            linf,
+            count: count as f64,
+            nans: 0.0,
+        }
     }
 
     /// Associative merge of two partials.
@@ -163,6 +200,7 @@ impl DistancePartial {
             l2sq: self.l2sq + o.l2sq,
             linf: self.linf.max(o.linf),
             count: self.count + o.count,
+            nans: self.nans + o.nans,
         }
     }
 
@@ -231,16 +269,37 @@ mod tests {
 
     #[test]
     fn distance_merge_associative() {
-        let a = DistancePartial { l1: 1.0, l2sq: 2.0, linf: 0.5, count: 3.0 };
-        let b = DistancePartial { l1: 2.0, l2sq: 1.0, linf: 0.9, count: 4.0 };
-        let c = DistancePartial { l1: 0.5, l2sq: 0.25, linf: 1.5, count: 1.0 };
+        let a = DistancePartial { l1: 1.0, l2sq: 2.0, linf: 0.5, count: 3.0, nans: 1.0 };
+        let b = DistancePartial { l1: 2.0, l2sq: 1.0, linf: 0.9, count: 4.0, nans: 0.0 };
+        let c = DistancePartial { l1: 0.5, l2sq: 0.25, linf: 1.5, count: 1.0, nans: 2.0 };
         assert_eq!(a.merge(b).merge(c), a.merge(b.merge(c)));
         assert_eq!(a.merge(DistancePartial::EMPTY), a);
     }
 
     #[test]
     fn distance_l2_is_sqrt() {
-        let d = DistancePartial { l1: 0.0, l2sq: 9.0, linf: 0.0, count: 1.0 };
+        let d = DistancePartial { l1: 0.0, l2sq: 9.0, linf: 0.0, count: 1.0, nans: 0.0 };
         assert_eq!(d.l2(), 3.0);
+    }
+
+    #[test]
+    fn moments_nan_counted_not_poisoning() {
+        // Regression: a single NaN used to poison sum/sumsq (mean and std
+        // came out NaN) while count kept growing silently.
+        let m = Moments::scan(&[1.0, f32::NAN, 3.0, f32::NAN]);
+        assert_eq!(m.count, 2.0);
+        assert_eq!(m.nans, 2.0);
+        assert_eq!(m.max, 3.0);
+        assert_eq!(m.min, 1.0);
+        assert_eq!(m.mean(), 2.0);
+        assert!(m.std().is_finite());
+        // Merging carries the NaN count.
+        let merged = m.merge(Moments::scan(&[f32::NAN]));
+        assert_eq!(merged.nans, 3.0);
+        assert_eq!(merged.count, 2.0);
+        // All-NaN scan is the empty partial plus a count.
+        let all = Moments::scan(&[f32::NAN; 4]);
+        assert!(all.is_empty());
+        assert_eq!(all.nans, 4.0);
     }
 }

@@ -1,0 +1,279 @@
+//! Seeded property tests for the unified query-plan layer: zone-map-pruned
+//! execution must be **bit-identical** to unpruned execution across random
+//! key ranges and value predicates, on fixed, tiered, and live-snapshot
+//! datasets. Pruning only ever removes partitions whose masked moments are
+//! the empty partial (the merge identity), so every float of the final
+//! statistics must match exactly — any drift is a planner bug.
+
+use std::sync::Arc;
+
+use oseba::config::{AppConfig, ContextConfig};
+use oseba::coordinator::{plan_query, Coordinator, Query, QueryOutput};
+use oseba::engine::{Dataset, LiveConfig};
+use oseba::index::{Cias, ColumnPredicate, ContentIndex, PredOp, RangeQuery};
+use oseba::ingest::Chunk;
+use oseba::runtime::NativeBackend;
+use oseba::storage::{BatchBuilder, RecordBatch, Schema};
+use oseba::util::rng::Xoshiro256;
+
+const ROWS: usize = 12_000;
+const PARTS: usize = 8;
+const STEP: i64 = 10;
+
+fn coordinator(budget: Option<usize>) -> Coordinator {
+    let cfg = AppConfig {
+        ctx: ContextConfig { num_workers: 4, memory_budget: budget },
+        cluster_workers: 3,
+        ..Default::default()
+    };
+    Coordinator::new(&cfg, Arc::new(NativeBackend)).unwrap()
+}
+
+/// A batch whose `price` column trends upward (so partitions have disjoint
+/// value domains — zone maps can prune) and whose `volume` column
+/// oscillates (so zone maps usually cannot). A sprinkle of NaNs exercises
+/// the NaN policy end to end.
+fn dataset(seed: u64) -> RecordBatch {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut b = BatchBuilder::new(Schema::stock());
+    for i in 0..ROWS {
+        let trend = i as f32 + (rng.next_f32() - 0.5) * 20.0;
+        let wave = (i as f32 / 50.0).sin() * 100.0;
+        let price = if rng.next_f64() < 0.001 { f32::NAN } else { trend };
+        b.push(i as i64 * STEP, &[price, wave]);
+    }
+    b.finish().unwrap()
+}
+
+/// Random conjunction of 0..=2 predicates over the stock columns.
+fn random_predicates(rng: &mut Xoshiro256) -> Vec<ColumnPredicate> {
+    let n = rng.range_u64(0, 3) as usize;
+    (0..n)
+        .map(|_| {
+            let column = rng.range_u64(0, 2) as usize;
+            let op = match rng.range_u64(0, 4) {
+                0 => PredOp::Gt,
+                1 => PredOp::Ge,
+                2 => PredOp::Lt,
+                _ => PredOp::Le,
+            };
+            let value = match column {
+                0 => rng.next_f64() as f32 * (ROWS as f32 + 200.0) - 100.0,
+                _ => rng.next_f64() as f32 * 240.0 - 120.0,
+            };
+            ColumnPredicate { column, op, value }
+        })
+        .collect()
+}
+
+fn random_range(rng: &mut Xoshiro256) -> RangeQuery {
+    let span = ROWS as i64 * STEP;
+    let a = rng.range_u64(0, span as u64) as i64;
+    let b = rng.range_u64(0, span as u64) as i64;
+    RangeQuery { lo: a.min(b), hi: a.max(b) }
+}
+
+/// Run one query through the pruned and unpruned arms and demand exact
+/// agreement; cross-check the row count against a direct scan oracle over
+/// the source batch. Returns how many slices zone pruning removed.
+fn check_one(
+    c: &Coordinator,
+    ds: &Dataset,
+    index: &dyn ContentIndex,
+    batch: &RecordBatch,
+    q: RangeQuery,
+    preds: &[ColumnPredicate],
+    visible_rows: usize,
+    label: &str,
+) -> usize {
+    let query = Query::stats(q, 0).filtered(preds.to_vec());
+    let pruned_plan = plan_query(ds, index, &query, true).unwrap();
+    let unpruned_plan = plan_query(ds, index, &query, false).unwrap();
+    assert_eq!(unpruned_plan.explain.zone_pruned, 0);
+    assert!(pruned_plan.explain.targeted <= unpruned_plan.explain.targeted);
+
+    let got = c.execute_physical(ds, &pruned_plan, &query);
+    let want = c.execute_physical(ds, &unpruned_plan, &query);
+
+    // Scan oracle over the raw batch (restricted to the rows visible to
+    // this dataset): exact count, exact extremes.
+    let mut count = 0u64;
+    let mut nans = 0u64;
+    let mut mx = f32::MIN;
+    let mut mn = f32::MAX;
+    for r in 0..visible_rows {
+        let k = batch.keys[r];
+        if k < q.lo || k > q.hi {
+            continue;
+        }
+        if !preds
+            .iter()
+            .all(|p| p.matches(batch.columns[p.column][r]))
+        {
+            continue;
+        }
+        let x = batch.columns[0][r];
+        if x.is_nan() {
+            nans += 1;
+            continue;
+        }
+        count += 1;
+        mx = mx.max(x);
+        mn = mn.min(x);
+    }
+
+    match (got, want) {
+        (Ok(QueryOutput::Stats(g)), Ok(QueryOutput::Stats(w))) => {
+            assert_eq!(g, w, "{label}: pruned vs unpruned differ for q={q:?} preds={preds:?}");
+            assert_eq!(g.count, count, "{label}: count vs oracle for q={q:?} preds={preds:?}");
+            assert_eq!(g.nans, nans, "{label}: nan count vs oracle");
+            if count > 0 {
+                assert_eq!(g.max, mx, "{label}: max vs oracle");
+                assert_eq!(g.min, mn, "{label}: min vs oracle");
+            }
+        }
+        (Err(_), Err(_)) => {
+            // An all-NaN selection also finalizes as "empty": no non-NaN
+            // value means no statistics to report.
+            assert_eq!(count, 0, "{label}: both arms errored but oracle counts rows");
+        }
+        (g, w) => panic!(
+            "{label}: arms disagree on success for q={q:?} preds={preds:?}: \
+             pruned={g:?} unpruned={w:?}"
+        ),
+    }
+    pruned_plan.explain.zone_pruned
+}
+
+#[test]
+fn pruned_matches_unpruned_on_fixed_dataset() {
+    let batch = dataset(42);
+    let c = coordinator(None);
+    let ds = c.load(batch.clone(), PARTS).unwrap();
+    let index = c.build_index(&ds, oseba::coordinator::IndexKind::Cias).unwrap();
+    let mut rng = Xoshiro256::seeded(1);
+    let mut total_pruned = 0usize;
+    for _ in 0..60 {
+        let q = random_range(&mut rng);
+        let preds = random_predicates(&mut rng);
+        total_pruned +=
+            check_one(&c, &ds, index.as_ref(), &batch, q, &preds, ROWS, "fixed");
+    }
+    assert!(total_pruned > 0, "trending column must trigger some zone pruning");
+}
+
+#[test]
+fn pruned_matches_unpruned_on_tiered_dataset() {
+    let dir = oseba::testing::temp_dir("pruning-tiered");
+    let batch = dataset(43);
+    // Budget ~2 of 8 partitions: most of the dataset lives on disk.
+    let probe = oseba::storage::partition_batch_uniform(&batch, ROWS / PARTS).unwrap();
+    let one = probe[0].bytes();
+    let c = coordinator(Some(2 * one + one / 2));
+    let ds = c.load_tiered(batch.clone(), PARTS, &dir).unwrap();
+    assert!(ds.is_tiered());
+    let index = c.build_index(&ds, oseba::coordinator::IndexKind::Cias).unwrap();
+    let mut rng = Xoshiro256::seeded(2);
+    for _ in 0..25 {
+        let q = random_range(&mut rng);
+        let preds = random_predicates(&mut rng);
+        check_one(&c, &ds, index.as_ref(), &batch, q, &preds, ROWS, "tiered");
+    }
+
+    // Deterministic fault check: a full-span query admitting only the top
+    // price quartile must fault in strictly fewer partitions than the
+    // partition count.
+    let store = ds.store().unwrap();
+    let preds =
+        vec![ColumnPredicate { column: 0, op: PredOp::Ge, value: ROWS as f32 - 1_000.0 }];
+    let query =
+        Query::stats(RangeQuery { lo: 0, hi: i64::MAX }, 0).filtered(preds);
+    let plan = plan_query(&ds, index.as_ref(), &query, true).unwrap();
+    assert!(plan.explain.zone_pruned >= PARTS / 2, "{:?}", plan.explain);
+    let before = store.counters();
+    c.execute_physical(&ds, &plan, &query).unwrap();
+    let faults = store.counters().since(&before).faults;
+    assert!(
+        faults <= plan.explain.targeted,
+        "faults ({faults}) bounded by targeted ({})",
+        plan.explain.targeted
+    );
+    c.context().unpersist(&ds);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn pruned_matches_unpruned_on_live_snapshot() {
+    let batch = dataset(44);
+    let c = coordinator(None);
+    let live = c
+        .create_live(
+            Schema::stock(),
+            LiveConfig { rows_per_partition: ROWS / PARTS, max_asl: 8 },
+        )
+        .unwrap();
+    // Stream the batch in as uneven chunks; keys are strictly increasing.
+    let mut lo = 0usize;
+    let mut rng = Xoshiro256::seeded(3);
+    while lo < ROWS {
+        let hi = (lo + 500 + rng.range_u64(0, 900) as usize).min(ROWS);
+        live.append(Chunk {
+            keys: batch.keys[lo..hi].to_vec(),
+            columns: batch.columns.iter().map(|c| c[lo..hi].to_vec()).collect(),
+        })
+        .unwrap();
+        lo = hi;
+    }
+    // Do NOT flush: the snapshot pins only sealed partitions, exactly the
+    // epoch semantics queries see in production.
+    let snap = c.snapshot_live(&live);
+    let index = snap.index().expect("sealed partitions exist");
+    let visible_rows = snap.rows();
+    assert!(visible_rows > 0);
+    for _ in 0..25 {
+        let q = random_range(&mut rng);
+        let preds = random_predicates(&mut rng);
+        check_one(
+            &c,
+            snap.dataset(),
+            index,
+            &batch,
+            q,
+            &preds,
+            visible_rows,
+            "live",
+        );
+    }
+    live.close();
+}
+
+/// The index kind must not matter to planning: table and CIAS produce the
+/// same pruned results.
+#[test]
+fn table_and_cias_plans_agree_under_predicates() {
+    let batch = dataset(45);
+    let c = coordinator(None);
+    let ds = c.load(batch, PARTS).unwrap();
+    let cias = Cias::build(ds.partitions()).unwrap();
+    let table = oseba::index::TableIndex::build(ds.partitions()).unwrap();
+    let mut rng = Xoshiro256::seeded(4);
+    for _ in 0..20 {
+        let q = random_range(&mut rng);
+        let preds = random_predicates(&mut rng);
+        let query = Query::stats(q, 0).filtered(preds);
+        let a = plan_query(&ds, &cias, &query, true).unwrap();
+        let b = plan_query(&ds, &table, &query, true).unwrap();
+        let ra = c.execute_physical(&ds, &a, &query);
+        let rb = c.execute_physical(&ds, &b, &query);
+        match (ra, rb) {
+            (Ok(QueryOutput::Stats(x)), Ok(QueryOutput::Stats(y))) => {
+                assert_eq!(x.count, y.count, "q={q:?}");
+                assert_eq!(x.max, y.max);
+                assert_eq!(x.min, y.min);
+                assert!((x.mean - y.mean).abs() < 1e-9);
+            }
+            (Err(_), Err(_)) => {}
+            (x, y) => panic!("index kinds disagree: {x:?} vs {y:?}"),
+        }
+    }
+}
