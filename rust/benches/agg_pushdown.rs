@@ -1,0 +1,192 @@
+//! **Aggregate-pushdown bench**: stats queries over a tiered dataset ~4×
+//! the memory budget, comparing the sketch-answered plan (covered
+//! partitions merged from super-index aggregate sketches) against the
+//! pre-PR scan plan (every targeted partition resolved + scanned).
+//!
+//! Two workloads:
+//! * **wide covered** — a range fully containing every partition: the
+//!   sketch path must read **0 segment bytes and fault 0 partitions in**,
+//!   while the scan path faults the whole dataset through the budget;
+//! * **narrow edge-heavy** — ranges that only ever partially overlap
+//!   partitions: no coverage exists, both arms degenerate to the same
+//!   edge scans (the no-regression arm).
+//!
+//! Results are asserted identical (`PeriodStats` equality) before any
+//! timing. Emits `BENCH_agg_pushdown.json` for the perf trajectory.
+//!
+//! Run: `cargo bench --bench agg_pushdown`
+//! (OSEBA_AGG_BUDGET rescales; dataset is 4× the budget.)
+
+mod common;
+
+use oseba::bench::{bench, section, table, BenchConfig};
+use oseba::config::{parse_bytes, BackendKind, ContextConfig};
+use oseba::coordinator::{
+    plan_query_opts, Coordinator, PhysicalPlan, PlanOptions, Query, QueryOutput,
+};
+use oseba::engine::Dataset;
+use oseba::index::RangeQuery;
+use oseba::runtime::make_backend;
+use oseba::util::humansize;
+use oseba::util::json::Json;
+
+const PARTITIONS: usize = 32;
+
+fn coordinator(budget: usize) -> Coordinator {
+    let mut cfg = common::app_cfg(BackendKind::Native);
+    cfg.ctx = ContextConfig { num_workers: 4, memory_budget: Some(budget) };
+    let be = make_backend(cfg.backend, &cfg.artifacts_dir).expect("backend");
+    Coordinator::new(&cfg, be).expect("coordinator")
+}
+
+fn run_stats(c: &Coordinator, ds: &Dataset, plan: &PhysicalPlan, q: &Query) -> oseba::analysis::PeriodStats {
+    match c.execute_physical(ds, plan, q).expect("execute") {
+        QueryOutput::Stats(s) => s,
+        other => panic!("stats output, got {other:?}"),
+    }
+}
+
+fn main() {
+    let budget = std::env::var("OSEBA_AGG_BUDGET")
+        .ok()
+        .map(|v| parse_bytes(&v).expect("OSEBA_AGG_BUDGET"))
+        .unwrap_or(8 << 20);
+    let raw = 4 * budget;
+    let dir =
+        std::env::temp_dir().join(format!("oseba-agg-bench-{}", std::process::id()));
+
+    section(&format!(
+        "Aggregate pushdown: {} tiered dataset under a {} budget ({} partitions)",
+        humansize::bytes(raw),
+        humansize::bytes(budget),
+        PARTITIONS
+    ));
+
+    let coord = coordinator(budget);
+    let batch = oseba::datagen::ClimateGen::default().generate_bytes(raw);
+    let rows = batch.rows();
+    let ds = coord.load_tiered(batch, PARTITIONS, &dir).expect("tiered load");
+    let store = ds.store().expect("tiered").clone();
+    let index = coord
+        .build_index(&ds, oseba::coordinator::IndexKind::Cias)
+        .expect("index");
+
+    let (kmin, kmax) = (ds.key_min().unwrap(), ds.key_max().unwrap());
+    let span = kmax - kmin;
+    // Wide covered workload: the whole key span — every partition is
+    // fully contained, so the sketch path reads nothing.
+    let wide = Query::stats(RangeQuery { lo: kmin, hi: kmax }, 0);
+    // Narrow edge-heavy workload: 8 slivers each ~1/300 of the span,
+    // straddling partition boundaries — nothing is ever covered.
+    let part_span = span / PARTITIONS as i64;
+    let narrow: Vec<Query> = (1..=8)
+        .map(|i| {
+            let mid = kmin + part_span * (4 * i) as i64;
+            Query::stats(RangeQuery { lo: mid - span / 600, hi: mid + span / 600 }, 0)
+        })
+        .collect();
+
+    let on = PlanOptions { zone_pruning: true, agg_pushdown: true };
+    let off = PlanOptions { zone_pruning: true, agg_pushdown: false };
+    let cfg = BenchConfig::from_env();
+    let mut results = Vec::new();
+    let mut json_arms = Vec::new();
+
+    for (workload, queries) in
+        [("wide-covered", vec![wide.clone()]), ("narrow-edges", narrow.clone())]
+    {
+        for (arm, opts) in [("sketch", on), ("scan (pre-PR)", off)] {
+            let plans: Vec<(Query, PhysicalPlan)> = queries
+                .iter()
+                .map(|q| {
+                    (q.clone(), plan_query_opts(&ds, index.as_ref(), q, opts).expect("plan"))
+                })
+                .collect();
+            let agg_answered: usize =
+                plans.iter().map(|(_, p)| p.explain.agg_answered).sum();
+            let rows_avoided: usize =
+                plans.iter().map(|(_, p)| p.explain.rows_avoided).sum();
+
+            // Counters over one cold run.
+            store.shrink(usize::MAX).expect("evict all");
+            let before = store.counters();
+            let mut counts = 0u64;
+            for (q, plan) in &plans {
+                counts += run_stats(&coord, &ds, plan, q).count;
+            }
+            let delta = store.counters().since(&before);
+
+            let r = bench(&cfg, &format!("{workload} / {arm}"), || {
+                store.shrink(usize::MAX).expect("evict all");
+                for (q, plan) in &plans {
+                    run_stats(&coord, &ds, plan, q);
+                }
+            });
+            println!(
+                "  {workload} / {arm}: {} faults, {} read, agg-answered {agg_answered}, \
+                 rows selected {counts}",
+                delta.faults,
+                humansize::bytes(delta.segment_bytes_read),
+            );
+            json_arms.push(Json::obj(vec![
+                ("workload", Json::str(workload)),
+                ("arm", Json::str(arm)),
+                ("faults", Json::num(delta.faults as f64)),
+                ("segment_bytes_read", Json::num(delta.segment_bytes_read as f64)),
+                ("agg_answered", Json::num(agg_answered as f64)),
+                ("rows_avoided", Json::num(rows_avoided as f64)),
+                ("rows_selected", Json::num(counts as f64)),
+                ("secs_mean", Json::num(r.summary.mean)),
+                ("secs_p50", Json::num(r.summary.p50)),
+                ("secs_p95", Json::num(r.summary.p95)),
+            ]));
+            results.push(r);
+        }
+    }
+    println!("\n{}", table(&results));
+
+    // Correctness gate: identical PeriodStats on both arms, cold cache.
+    let wide_on = plan_query_opts(&ds, index.as_ref(), &wide, on).expect("plan");
+    let wide_off = plan_query_opts(&ds, index.as_ref(), &wide, off).expect("plan");
+    store.shrink(usize::MAX).expect("evict all");
+    let got = run_stats(&coord, &ds, &wide_on, &wide);
+    store.shrink(usize::MAX).expect("evict all");
+    let want = run_stats(&coord, &ds, &wide_off, &wide);
+    assert_eq!(got, want, "sketch answers must be identical to scans");
+    for q in &narrow {
+        let p_on = plan_query_opts(&ds, index.as_ref(), q, on).expect("plan");
+        let p_off = plan_query_opts(&ds, index.as_ref(), q, off).expect("plan");
+        assert_eq!(run_stats(&coord, &ds, &p_on, q), run_stats(&coord, &ds, &p_off, q));
+    }
+
+    // Acceptance gate (the reproduction contract): on the fully-covered
+    // workload the sketch arm reads NOTHING — 0 faults, 0 segment bytes —
+    // while the pre-PR scan arm pays real I/O.
+    let f = |j: &Json, k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap();
+    let (sketch, scan) = (&json_arms[0], &json_arms[1]);
+    assert_eq!(f(sketch, "faults"), 0.0, "covered workload must fault nothing in");
+    assert_eq!(f(sketch, "segment_bytes_read"), 0.0);
+    assert!(f(scan, "faults") > 0.0, "the scan arm pays the fault-in");
+    assert!(f(scan, "segment_bytes_read") > 0.0);
+    assert_eq!(f(sketch, "agg_answered"), PARTITIONS as f64);
+    println!(
+        "covered workload: sketch 0 faults / 0 bytes vs scan {} faults / {}",
+        f(scan, "faults"),
+        humansize::bytes(f(scan, "segment_bytes_read") as usize)
+    );
+
+    common::write_bench_json(
+        "agg_pushdown",
+        Json::obj(vec![
+            ("bench", Json::str("agg_pushdown")),
+            ("raw_bytes", Json::num(raw as f64)),
+            ("budget_bytes", Json::num(budget as f64)),
+            ("partitions", Json::num(PARTITIONS as f64)),
+            ("rows", Json::num(rows as f64)),
+            ("arms", Json::arr(json_arms)),
+        ]),
+    );
+
+    coord.context().unpersist(&ds);
+    let _ = std::fs::remove_dir_all(&dir);
+}

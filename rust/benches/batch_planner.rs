@@ -31,6 +31,7 @@ fn main() {
         oseba::util::humansize::bytes(bytes)
     ));
 
+    let mut scales = Vec::new();
     for &n_queries in &[4usize, 16, 64] {
         let (coord, ds, _) = common::setup(bytes, 15, backend);
         let index = coord.build_index(&ds, IndexKind::Cias).expect("index");
@@ -76,7 +77,6 @@ fn main() {
         let naive_touched = (mid.partitions_targeted - before.partitions_targeted) / iters;
         let batch_touched = (after.partitions_targeted - mid.partitions_targeted) / iters;
 
-        println!("{}", table(&[naive, planned]));
         println!(
             "  {n_queries} queries -> {} merged ranges | partitions targeted per run: \
              naive {naive_touched}, planned {batch_touched}",
@@ -86,5 +86,24 @@ fn main() {
             batch_touched <= naive_touched,
             "planning must never touch more partitions"
         );
+        use oseba::util::json::Json;
+        scales.push(Json::obj(vec![
+            ("queries", Json::num(n_queries as f64)),
+            ("merged_ranges", Json::num(plan.len() as f64)),
+            ("naive_partitions_targeted", Json::num(naive_touched as f64)),
+            ("planned_partitions_targeted", Json::num(batch_touched as f64)),
+            ("naive_secs_p50", Json::num(naive.summary.p50)),
+            ("planned_secs_p50", Json::num(planned.summary.p50)),
+        ]));
+        println!("{}", table(&[naive, planned]));
     }
+    use oseba::util::json::Json;
+    common::write_bench_json(
+        "batch_planner",
+        Json::obj(vec![
+            ("bench", Json::str("batch_planner")),
+            ("raw_bytes", Json::num(bytes as f64)),
+            ("scales", Json::arr(scales)),
+        ]),
+    );
 }

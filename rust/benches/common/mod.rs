@@ -7,6 +7,17 @@ use oseba::coordinator::Coordinator;
 use oseba::datagen::ClimateGen;
 use oseba::engine::Dataset;
 use oseba::runtime::make_backend;
+use oseba::util::json::Json;
+
+/// Write a bench's machine-readable result document to
+/// `BENCH_<name>.json` in the working directory (the perf-trajectory
+/// artifact every paper-claim bench emits; CI uploads them).
+#[allow(dead_code)]
+pub fn write_bench_json(name: &str, doc: Json) {
+    let out = format!("BENCH_{name}.json");
+    std::fs::write(&out, doc.to_string()).unwrap_or_else(|e| panic!("write {out}: {e}"));
+    println!("wrote {out}");
+}
 
 /// Artifacts presence → backend selection shared by all benches.
 #[allow(dead_code)]

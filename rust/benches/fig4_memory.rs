@@ -74,4 +74,20 @@ fn main() {
     println!("\nshape check: default monotone ✓, oseba flat ✓, final ratio {:.2}x ✓",
         dm[4] as f64 / om[4] as f64);
     println!("index footprint: oseba={} bytes", oseba.index_bytes);
+
+    use oseba::util::json::Json;
+    let series_json = |xs: &[usize]| {
+        Json::arr(xs.iter().map(|&b| Json::num(b as f64)).collect())
+    };
+    common::write_bench_json(
+        "fig4_memory",
+        Json::obj(vec![
+            ("bench", Json::str("fig4_memory")),
+            ("raw_bytes", Json::num(*raw as f64)),
+            ("default_memory_bytes", series_json(&dm)),
+            ("oseba_memory_bytes", series_json(&om)),
+            ("final_ratio", Json::num(dm[4] as f64 / om[4] as f64)),
+            ("index_bytes", Json::num(oseba.index_bytes as f64)),
+        ]),
+    );
 }

@@ -79,4 +79,17 @@ fn main() {
         humansize::secs(gap[4]),
         acc[0][4] / acc[1][4]
     );
+
+    use oseba::util::json::Json;
+    let series = |xs: &[f64; 5]| Json::arr(xs.iter().map(|&t| Json::num(t)).collect());
+    common::write_bench_json(
+        "fig6_time",
+        Json::obj(vec![
+            ("bench", Json::str("fig6_time")),
+            ("raw_bytes", Json::num(bytes as f64)),
+            ("default_acc_secs", series(&acc[0])),
+            ("oseba_acc_secs", series(&acc[1])),
+            ("total_speedup", Json::num(acc[0][4] / acc[1][4])),
+        ]),
+    );
 }

@@ -116,4 +116,89 @@ fn main() {
         humansize::secs(cias_last),
         cias_last / cias_first
     );
+
+    // ---- segment_stats inner loop: 8-lane fold vs scalar reference -----
+    oseba::bench::section("segment_stats fold: 8-lane (shipping) vs scalar reference");
+    use oseba::runtime::{AnalysisBackend, NativeBackend};
+    use oseba::util::stats::Moments;
+    let mut rng = Xoshiro256::seeded(7);
+    let blocks: Vec<Vec<f32>> = (0..256)
+        .map(|_| (0..4096).map(|_| (rng.next_f32() - 0.5) * 100.0).collect())
+        .collect();
+
+    // Scalar single-accumulator reference (the pre-vectorization loop).
+    let scalar_fold = |xs: &[f32]| -> Moments {
+        let mut mx = -3.4e38f32;
+        let mut mn = 3.4e38f32;
+        let mut sum = 0f32;
+        let mut sumsq = 0f32;
+        let mut nans = 0usize;
+        for &x in xs {
+            if x.is_nan() {
+                nans += 1;
+                continue;
+            }
+            mx = mx.max(x);
+            mn = mn.min(x);
+            sum += x;
+            sumsq += x * x;
+        }
+        let mut m = Moments::from_kernel(mx, mn, sum, sumsq, (xs.len() - nans) as f32);
+        m.nans = nans as f64;
+        m
+    };
+
+    // Correctness vs the f64 scan oracle before timing anything.
+    for b in blocks.iter().take(8) {
+        let got = NativeBackend.segment_stats(b, 0, b.len()).expect("stats");
+        let want = Moments::scan(b);
+        assert_eq!(got.count, want.count);
+        assert_eq!(got.max, want.max);
+        assert_eq!(got.min, want.min);
+        assert!((got.mean() - want.mean()).abs() < 1e-3);
+    }
+
+    let mut fold_results = Vec::new();
+    {
+        let blocks = &blocks;
+        fold_results.push(bench(&cfg, "segment_stats 8-lane (256 blocks)", move || {
+            let mut acc = Moments::EMPTY;
+            for b in blocks {
+                acc = acc.merge(NativeBackend.segment_stats(b, 0, b.len()).expect("stats"));
+            }
+            std::hint::black_box(acc.count);
+        }));
+    }
+    {
+        let blocks = &blocks;
+        fold_results.push(bench(&cfg, "scalar reference   (256 blocks)", move || {
+            let mut acc = Moments::EMPTY;
+            for b in blocks {
+                acc = acc.merge(scalar_fold(b));
+            }
+            std::hint::black_box(acc.count);
+        }));
+    }
+    println!("{}", table(&fold_results));
+    let lanes = fold_results[0].summary.p50;
+    let scalar = fold_results[1].summary.p50;
+    println!(
+        "8-lane {} vs scalar {} -> {:.2}x per 1 MiB of f32 blocks",
+        humansize::secs(lanes),
+        humansize::secs(scalar),
+        scalar / lanes.max(1e-12)
+    );
+
+    use oseba::util::json::Json;
+    common::write_bench_json(
+        "index_micro",
+        Json::obj(vec![
+            ("bench", Json::str("index_micro")),
+            ("cias_lookup_p50_m15", Json::num(cias_first)),
+            ("cias_lookup_p50_m1e6", Json::num(cias_last)),
+            ("segment_stats_lanes_p50", Json::num(lanes)),
+            ("segment_stats_scalar_p50", Json::num(scalar)),
+            ("fold_speedup", Json::num(scalar / lanes.max(1e-12))),
+        ]),
+    );
 }

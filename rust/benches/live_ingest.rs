@@ -176,5 +176,25 @@ fn main() {
         "incremental maintenance ({inc}) must beat reload-per-epoch ({reload})"
     );
     println!("\nshape check: appends absorbed incrementally ✓, snapshots always whole ✓");
+
+    use oseba::util::json::Json;
+    common::write_bench_json(
+        "live_ingest",
+        Json::obj(vec![
+            ("bench", Json::str("live_ingest")),
+            ("rows", Json::num(total_rows as f64)),
+            ("ingest_secs", Json::num(ingest_secs)),
+            ("rows_per_sec", Json::num(total_rows as f64 / ingest_secs)),
+            (
+                "concurrent_queries_served",
+                Json::num(queries_ok.load(Ordering::Relaxed) as f64),
+            ),
+            ("index_appends", Json::num(c.index_appends as f64)),
+            ("asl_absorbed", Json::num(c.asl_absorbed as f64)),
+            ("rebuilds", Json::num(c.rebuilds as f64)),
+            ("incremental_maintenance_secs", Json::num(inc)),
+            ("reload_per_epoch_secs", Json::num(reload)),
+        ]),
+    );
     live.close();
 }

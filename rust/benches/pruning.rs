@@ -150,17 +150,17 @@ fn main() {
         "zone pruning must read fewer segment bytes"
     );
 
-    let doc = Json::obj(vec![
-        ("bench", Json::str("pruning")),
-        ("raw_bytes", Json::num(raw as f64)),
-        ("budget_bytes", Json::num(budget as f64)),
-        ("partitions", Json::num(PARTITIONS as f64)),
-        ("rows", Json::num(rows as f64)),
-        ("arms", Json::arr(json_arms)),
-    ]);
-    let out = "BENCH_pruning.json";
-    std::fs::write(out, doc.to_string()).expect("write BENCH_pruning.json");
-    println!("wrote {out}");
+    common::write_bench_json(
+        "pruning",
+        Json::obj(vec![
+            ("bench", Json::str("pruning")),
+            ("raw_bytes", Json::num(raw as f64)),
+            ("budget_bytes", Json::num(budget as f64)),
+            ("partitions", Json::num(PARTITIONS as f64)),
+            ("rows", Json::num(rows as f64)),
+            ("arms", Json::arr(json_arms)),
+        ]),
+    );
 
     coord.context().unpersist(&ds);
     let _ = std::fs::remove_dir_all(&dir);

@@ -161,5 +161,20 @@ fn main() {
     );
     println!("\nshape check: selective ≪ full ✓, save/open round trip exact ✓");
 
+    use oseba::util::json::Json;
+    common::write_bench_json(
+        "tiered",
+        Json::obj(vec![
+            ("bench", Json::str("tiered")),
+            ("raw_bytes", Json::num(raw as f64)),
+            ("budget_bytes", Json::num(budget as f64)),
+            ("dataset_bytes", Json::num(total as f64)),
+            ("selective_bytes_read_per_run", Json::num(sel_read_per_iter as f64)),
+            ("full_reload_bytes_read_per_run", Json::num(full_read_per_iter as f64)),
+            ("selective_faults_per_run", Json::num((sel.faults / sel_iters) as f64)),
+            ("save_secs", Json::num(save_secs)),
+            ("open_secs", Json::num(open_secs)),
+        ]),
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }

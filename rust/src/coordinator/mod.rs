@@ -8,8 +8,8 @@ pub mod planner;
 pub mod session;
 
 pub use plan::{
-    parse_predicates, plan_query, Explain, PhysicalPlan, PrunedRange, Query, QueryOp,
-    QueryOutput,
+    parse_predicates, plan_query, plan_query_opts, Explain, PhysicalPlan, PlanOptions,
+    PrunedRange, Query, QueryOp, QueryOutput,
 };
 pub use planner::{plan_batch, IndexKind, Method, PlannedQuery};
 pub use session::{run_batch_session, run_session, BatchSessionReport, SessionReport};
@@ -26,7 +26,35 @@ use crate::index::{Cias, ColumnPredicate, ContentIndex, RangeQuery, TableIndex};
 use crate::metrics::{BatchReport, Timer};
 use crate::runtime::backend::AnalysisBackend;
 use crate::storage::{Partition, RecordBatch, Schema};
-use crate::util::stats::Moments;
+use crate::util::stats::{Moments, TrendPartial};
+
+/// How one targeted slice contributes to plan execution: scanned from the
+/// pinned partition data, or answered by its seal-time aggregate sketch
+/// (on the native backend, bit-identical to the scan — same kernel-block
+/// fold; no data touch, no fault-in either way).
+enum PlanSource {
+    /// Read the slice rows from this pinned partition.
+    Scan(Arc<Partition>),
+    /// Merge the precomputed sketch partials instead of reading.
+    Sketch(crate::index::ColumnSketch),
+}
+
+/// A finalized linear-trend fit over a key-range selection (least squares
+/// of value over key), the consumer of the sketches' regression partials:
+/// covered partitions contribute their seal-time [`TrendPartial`]s, edge
+/// partitions are scanned — the merged fit is identical either way
+/// because the partial algebra is associative.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrendLine {
+    /// Least-squares slope (value units per key unit).
+    pub slope: f64,
+    /// Least-squares intercept (value at key 0).
+    pub intercept: f64,
+    /// (key, value) pairs fitted (NaN values excluded).
+    pub count: u64,
+    /// Pairs excluded because their value was NaN.
+    pub nans: u64,
+}
 
 /// The driver/leader of the system.
 pub struct Coordinator {
@@ -209,11 +237,13 @@ impl Coordinator {
             .filter(|p| p.rows > 0)
             .map(|p| crate::index::PartitionSlice { partition: p.id, row_start: 0, row_end: p.rows })
             .collect();
-        let owned: Vec<_> = slices
+        let items: Vec<_> = slices
             .iter()
-            .map(|s| (Arc::clone(&filtered.partitions()[s.partition]), *s))
+            .map(|s| {
+                (*s, PlanSource::Scan(Arc::clone(&filtered.partitions()[s.partition])))
+            })
             .collect();
-        let stats = self.run_stats_tasks(owned, column, &[])?;
+        let stats = self.run_stats_tasks(items, column, &[])?;
         Ok((stats, filtered))
     }
 
@@ -233,6 +263,50 @@ impl Coordinator {
             QueryOutput::Stats(s) => Ok(s),
             _ => unreachable!("stats query produces stats output"),
         }
+    }
+
+    /// Fit a least-squares **trend line** (value over key) to a key-range
+    /// selection, through the same covered/edge lowering as stats: fully
+    /// covered partitions contribute the centered regression co-moments
+    /// their aggregate sketches carry (zero data touch, zero fault-in
+    /// when cold); only the ≤2 edge partitions are resolved and scanned.
+    /// The partial algebra merges pairwise, so the fit equals a full
+    /// scan's wherever the merge tree groups the same way — the sketch
+    /// partial *is* the per-partition scan partial.
+    pub fn analyze_trend_line(
+        &self,
+        ds: &Dataset,
+        index: &dyn ContentIndex,
+        q: RangeQuery,
+        column: usize,
+    ) -> Result<(TrendLine, Explain)> {
+        let query = Query::stats(q, column);
+        let plan = plan_query(ds, index, &query, true)?;
+        let mut merged = TrendPartial::EMPTY;
+        self.for_each_plan_slice(ds, &plan.ranges, column, |s, src| {
+            merged = merged.merge(match src {
+                PlanSource::Sketch(sk) => sk.trend,
+                PlanSource::Scan(part) => TrendPartial::scan(
+                    &part.keys[s.row_start..s.row_end],
+                    &part.columns[column][s.row_start..s.row_end],
+                ),
+            });
+        })?;
+        let (Some(slope), Some(intercept)) = (merged.slope(), merged.intercept()) else {
+            return Err(OsebaError::InvalidRange(format!(
+                "selection [{}, {}] has no defined trend (fewer than two distinct keys)",
+                q.lo, q.hi
+            )));
+        };
+        Ok((
+            TrendLine {
+                slope,
+                intercept,
+                count: merged.n as u64,
+                nans: merged.nans as u64,
+            },
+            plan.explain,
+        ))
     }
 
     /// Lower + execute one logical [`Query`]: CIAS/ASL key targeting,
@@ -261,14 +335,11 @@ impl Coordinator {
     ) -> Result<QueryOutput> {
         match query.op {
             QueryOp::Stats { column } => {
-                let mut owned = Vec::new();
-                for pr in &plan.ranges {
-                    owned.extend(self.ctx.resolve_slices(ds, &pr.slices, pr.range)?);
-                }
-                if owned.is_empty() {
+                let items = self.stats_items(ds, &plan.ranges, column)?;
+                if items.is_empty() {
                     return Err(empty_selection_error(query));
                 }
-                let stats = self.run_stats_tasks(owned, column, &query.predicates)?;
+                let stats = self.run_stats_tasks(items, column, &query.predicates)?;
                 Ok(QueryOutput::Stats(stats))
             }
             QueryOp::Trend { column, window } => {
@@ -306,6 +377,59 @@ impl Coordinator {
                 Ok(QueryOutput::Distance(self.analyzer.distance_of(&sa, &sb)?))
             }
         }
+    }
+
+    /// The one covered/edge walk plan execution shares (stats and trend):
+    /// visit every surviving slice of a plan in range/partition order —
+    /// covered partitions as their sketches (no resolve, no fault-in —
+    /// their cold segments are never read), edge partitions as resolved
+    /// (pinned, refined, faulted in if cold) slices to scan. The visit
+    /// order is identical whether or not any partition is covered, so
+    /// sketch-answered and all-scanned runs merge partials in the same
+    /// structure — a precondition for bit-identical results. Covered
+    /// visits receive the plan's slice; scan visits the refined slice.
+    fn for_each_plan_slice(
+        &self,
+        ds: &Dataset,
+        ranges: &[PrunedRange],
+        column: usize,
+        mut visit: impl FnMut(crate::index::PartitionSlice, PlanSource),
+    ) -> Result<()> {
+        let mut answered = 0usize;
+        for pr in ranges {
+            for s in &pr.slices {
+                if pr.is_covered(s.partition) {
+                    let sk = ds.sketch(s.partition, column).ok_or_else(|| {
+                        OsebaError::Index(format!(
+                            "plan marked partition {} covered but it has no sketch",
+                            s.partition
+                        ))
+                    })?;
+                    answered += 1;
+                    visit(*s, PlanSource::Sketch(sk));
+                } else {
+                    for (part, refined) in
+                        self.ctx.resolve_slices(ds, std::slice::from_ref(s), pr.range)?
+                    {
+                        visit(refined, PlanSource::Scan(part));
+                    }
+                }
+            }
+        }
+        self.ctx.note_agg_answered(answered);
+        Ok(())
+    }
+
+    /// Collect [`Self::for_each_plan_slice`] into the stats work list.
+    fn stats_items(
+        &self,
+        ds: &Dataset,
+        ranges: &[PrunedRange],
+        column: usize,
+    ) -> Result<Vec<(crate::index::PartitionSlice, PlanSource)>> {
+        let mut items = Vec::new();
+        self.for_each_plan_slice(ds, ranges, column, |s, src| items.push((s, src)))?;
+        Ok(items)
     }
 
     /// Pin + gather the (predicate-filtered) series of `column` across a
@@ -419,12 +543,23 @@ impl Coordinator {
         // shared partials per-query stats are demultiplexed from.
         let mut segments: Vec<RangeQuery> = Vec::new();
         let mut seg_sources: Vec<Vec<usize>> = Vec::new();
+        // One work item per (partition, segment) contribution: a scanned
+        // sub-slice, or a covered partition's sketch partial. Sketch items
+        // ride the same routing and fold positions a scan of that
+        // partition would occupy, so pushdown never regroups the merge.
+        enum BatchItem {
+            /// Scan `[rs, re)` of this pinned partition for one segment.
+            Scan(Arc<Partition>, usize, usize, usize),
+            /// The covered partition's whole contribution to one segment.
+            Sketch(usize, Moments),
+        }
         // One work list per (merged range, owning worker), executed as one
         // pool task each — independent merged queries run concurrently.
-        type SubSlice = (Arc<Partition>, usize, usize, usize);
-        let mut worker_lists: Vec<Vec<SubSlice>> = Vec::new();
+        let mut worker_lists: Vec<Vec<BatchItem>> = Vec::new();
         let mut partitions_touched = 0usize;
         let mut zone_pruned = 0usize;
+        let mut agg_answered = 0usize;
+        let mut rows_avoided = 0usize;
 
         for pq in &plan {
             let mut slices = index.lookup(pq.range);
@@ -441,23 +576,58 @@ impl Coordinator {
                     keep
                 });
             }
-            // One resolve per merged range: N queries overlapping this
-            // range cost one `partitions_targeted` count per partition,
-            // not N.
             partitions_touched += slices.len();
-            let owned = self.ctx.resolve_slices(ds, &slices, pq.range)?;
             let seg_base = segments.len();
             for (seg, srcs) in pq.segments(queries) {
                 segments.push(seg);
                 seg_sources.push(srcs);
             }
-            let mut items: Vec<(usize, SubSlice)> = Vec::new();
-            for (part, slice) in &owned {
-                for (si, seg) in segments[seg_base..].iter().enumerate() {
-                    let rs = part.lower_bound(seg.lo).max(slice.row_start);
-                    let re = part.upper_bound(seg.hi).min(slice.row_end);
-                    if rs < re {
-                        items.push((slice.partition, (Arc::clone(part), seg_base + si, rs, re)));
+            // Aggregate pushdown: a partition whose key range lies fully
+            // inside ONE elementary segment contributes exactly its
+            // whole-partition partial to that segment — the sketch. Such
+            // partitions are never resolved, so cold ones fault nothing
+            // in. (Contained-in-a-segment implies contained in the merged
+            // range: segments tile it.) A partition straddling a segment
+            // boundary needs per-segment sub-slices and is scanned. Each
+            // partition intersecting the merged range contributes once,
+            // however many queries overlap it.
+            let segs_here = &segments[seg_base..];
+            let mut items: Vec<(usize, BatchItem)> = Vec::new();
+            for s in &slices {
+                let covered = if predicates.is_empty() {
+                    plan::covered_in(ds, s.partition, column, segs_here)
+                } else {
+                    None
+                };
+                match covered {
+                    Some((si, rows, sk)) => {
+                        agg_answered += 1;
+                        rows_avoided += rows;
+                        items.push((
+                            s.partition,
+                            BatchItem::Sketch(seg_base + si, sk.moments),
+                        ));
+                    }
+                    None => {
+                        for (part, slice) in
+                            self.ctx.resolve_slices(ds, std::slice::from_ref(s), pq.range)?
+                        {
+                            for (si, seg) in segs_here.iter().enumerate() {
+                                let rs = part.lower_bound(seg.lo).max(slice.row_start);
+                                let re = part.upper_bound(seg.hi).min(slice.row_end);
+                                if rs < re {
+                                    items.push((
+                                        slice.partition,
+                                        BatchItem::Scan(
+                                            Arc::clone(&part),
+                                            seg_base + si,
+                                            rs,
+                                            re,
+                                        ),
+                                    ));
+                                }
+                            }
+                        }
                     }
                 }
             }
@@ -465,6 +635,7 @@ impl Coordinator {
                 worker_lists.push(list);
             }
         }
+        self.ctx.note_agg_answered(agg_answered);
 
         let batch = self.batch_kernel_calls;
         let net = self.cluster.net;
@@ -476,17 +647,22 @@ impl Coordinator {
                 move || -> Result<Vec<(usize, Moments)>> {
                     net.message(); // task dispatch to this worker
                     let mut out = Vec::with_capacity(list.len());
-                    for (part, seg, rs, re) in &list {
-                        let m = slice_moments_filtered(
-                            backend.as_ref(),
-                            part,
-                            *rs,
-                            *re,
-                            column,
-                            &preds,
-                            batch,
-                        )?;
-                        out.push((*seg, m));
+                    for item in &list {
+                        out.push(match item {
+                            BatchItem::Sketch(seg, m) => (*seg, *m),
+                            BatchItem::Scan(part, seg, rs, re) => {
+                                let m = slice_moments_filtered(
+                                    backend.as_ref(),
+                                    part,
+                                    *rs,
+                                    *re,
+                                    column,
+                                    &preds,
+                                    batch,
+                                )?;
+                                (*seg, m)
+                            }
+                        });
                     }
                     net.message(); // result return
                     Ok(out)
@@ -533,6 +709,9 @@ impl Coordinator {
             segments: segments.len(),
             partitions_touched,
             zone_pruned,
+            agg_answered,
+            rows_avoided,
+            bytes_avoided: rows_avoided * ds.schema().row_bytes(),
             tasks: n_tasks,
             faults: store_delta.faults,
             evictions: store_delta.evictions,
@@ -558,44 +737,44 @@ impl Coordinator {
         Ok((out, explain, snap.epoch()))
     }
 
-    /// Route owned slice tasks to workers, execute (predicate-masked when
-    /// `predicates` is non-empty), merge, finalize.
+    /// Route slice tasks (scanned or sketch-answered) to their owning
+    /// workers, execute (predicate-masked when `predicates` is non-empty),
+    /// merge, finalize. Sketch items ride the same routing and fold
+    /// positions as the scans they replace, so turning pushdown on or off
+    /// never changes the merge structure — only whether data is read.
     fn run_stats_tasks(
         &self,
-        owned: Vec<(Arc<crate::storage::Partition>, crate::index::PartitionSlice)>,
+        items: Vec<(crate::index::PartitionSlice, PlanSource)>,
         column: usize,
         predicates: &[ColumnPredicate],
     ) -> Result<PeriodStats> {
-        let by_slice: std::collections::HashMap<usize, Arc<crate::storage::Partition>> =
-            owned.iter().map(|(p, s)| (s.partition, Arc::clone(p))).collect();
         let groups = self
             .cluster
-            .route(&owned.iter().map(|(_, s)| *s).collect::<Vec<_>>())?;
+            .route_tagged(items.into_iter().map(|(s, src)| (s.partition, (s, src))).collect())?;
 
         let batch = self.batch_kernel_calls;
         let net = self.cluster.net;
         let tasks: Vec<_> = groups
             .into_iter()
-            .map(|(_w, slices)| {
+            .map(|(_w, group)| {
                 let backend = Arc::clone(&self.backend);
                 let preds = predicates.to_vec();
-                let parts: Vec<_> = slices
-                    .iter()
-                    .map(|s| (Arc::clone(&by_slice[&s.partition]), *s))
-                    .collect();
                 move || -> Result<Moments> {
                     net.message(); // task dispatch to this worker
                     let mut m = Moments::EMPTY;
-                    for (part, s) in &parts {
-                        m = m.merge(slice_moments_filtered(
-                            backend.as_ref(),
-                            part,
-                            s.row_start,
-                            s.row_end,
-                            column,
-                            &preds,
-                            batch,
-                        )?);
+                    for (s, src) in &group {
+                        m = m.merge(match src {
+                            PlanSource::Sketch(sk) => sk.moments,
+                            PlanSource::Scan(part) => slice_moments_filtered(
+                                backend.as_ref(),
+                                part,
+                                s.row_start,
+                                s.row_end,
+                                column,
+                                &preds,
+                                batch,
+                            )?,
+                        });
                     }
                     net.message(); // result return
                     Ok(m)
@@ -1073,6 +1252,120 @@ mod tests {
             panic!("stats output")
         };
         assert_eq!(stats[0], oracle, "pruning must not change results");
+    }
+
+    #[test]
+    fn covered_query_answers_from_sketches_without_touching_cold_data() {
+        let dir = crate::testing::temp_dir("coord-agg");
+        let batch = ClimateGen::default().generate(30_000);
+        let one = crate::storage::partition_batch_uniform(&batch, 2_000).unwrap()[0].bytes();
+        let cfg = AppConfig {
+            ctx: ContextConfig { num_workers: 4, memory_budget: Some(3 * one + one / 2) },
+            cluster_workers: 3,
+            ..Default::default()
+        };
+        let c = Coordinator::new(&cfg, Arc::new(NativeBackend)).unwrap();
+        let ds = c.load_tiered(batch, 15, &dir).unwrap();
+        let store = Arc::clone(ds.store().unwrap());
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        store.shrink(usize::MAX).unwrap(); // everything Cold
+
+        // Full-span query: every partition is covered — answered entirely
+        // from sketches, with zero faults and zero segment bytes read.
+        let q = RangeQuery { lo: 0, hi: i64::MAX };
+        let query = Query::stats(q, 0);
+        let plan = plan_query(&ds, index.as_ref(), &query, true).unwrap();
+        assert_eq!(plan.explain.agg_answered, 15);
+        assert_eq!(plan.explain.rows_avoided, 30_000);
+        assert_eq!(plan.explain.estimated_rows, 0);
+        let counters_before = c.context().counters();
+        let before = store.counters();
+        let QueryOutput::Stats(got) = c.execute_physical(&ds, &plan, &query).unwrap()
+        else {
+            panic!("stats output")
+        };
+        let delta = store.counters().since(&before);
+        assert_eq!(delta.faults, 0, "covered partitions must not fault in");
+        assert_eq!(delta.segment_bytes_read, 0);
+        let cd = c.context().counters();
+        assert_eq!(
+            cd.partitions_agg_answered - counters_before.partitions_agg_answered,
+            15
+        );
+        assert_eq!(cd.partitions_targeted - counters_before.partitions_targeted, 15);
+
+        // The oracle arm (pushdown off) scans everything — and produces a
+        // bit-identical result, because a sketch partial IS the partial
+        // the scan computes, merged in the same structure.
+        store.shrink(usize::MAX).unwrap();
+        let opts = PlanOptions { zone_pruning: true, agg_pushdown: false };
+        let oracle_plan = plan_query_opts(&ds, index.as_ref(), &query, opts).unwrap();
+        assert_eq!(oracle_plan.explain.agg_answered, 0);
+        let before = store.counters();
+        let QueryOutput::Stats(want) =
+            c.execute_physical(&ds, &oracle_plan, &query).unwrap()
+        else {
+            panic!("stats output")
+        };
+        assert!(store.counters().since(&before).faults > 0, "oracle arm reads");
+        assert_eq!(got, want, "sketch-answered must be bit-identical to the scan");
+
+        // A partially-covering range scans only its ≤2 edges.
+        let h = 3600i64;
+        let q = RangeQuery { lo: 500 * h, hi: 25_500 * h }; // edges in parts 0 and 12
+        let query = Query::stats(q, 0);
+        let plan = plan_query(&ds, index.as_ref(), &query, true).unwrap();
+        assert_eq!(plan.explain.targeted, 13);
+        assert_eq!(plan.explain.agg_answered, 11, "interior partitions covered");
+        store.shrink(usize::MAX).unwrap();
+        let before = store.counters();
+        c.execute_physical(&ds, &plan, &query).unwrap();
+        assert_eq!(store.counters().since(&before).faults, 2, "edge partitions only");
+
+        c.context().unpersist(&ds);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn trend_line_merges_sketch_partials_with_scanned_edges() {
+        use crate::util::stats::TrendPartial;
+        use crate::storage::BatchBuilder;
+        // price = 2·key + 5 exactly (keys step 3): slope/intercept known.
+        let mut b = BatchBuilder::new(Schema::stock());
+        for i in 0..6_000i64 {
+            let k = i * 3;
+            b.push(k, &[(2 * k + 5) as f32, (i % 100) as f32]);
+        }
+        let c = coord(3);
+        let ds = c.load(b.finish().unwrap(), 6).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+
+        let q = RangeQuery { lo: 150, hi: 14_000 };
+        let (line, explain) = c.analyze_trend_line(&ds, index.as_ref(), q, 0).unwrap();
+        assert!(explain.agg_answered >= 3, "interior partitions ride sketches");
+        assert!((line.slope - 2.0).abs() < 1e-6, "slope {}", line.slope);
+        assert!((line.intercept - 5.0).abs() < 1e-3, "intercept {}", line.intercept);
+        assert_eq!(line.nans, 0);
+
+        // Oracle: one merged partial per partition slice, scanned raw —
+        // the same association the covered/edge path uses.
+        let slices = index.lookup(q);
+        let mut oracle = TrendPartial::EMPTY;
+        for (part, s) in c.context().resolve_slices(&ds, &slices, q).unwrap() {
+            oracle = oracle.merge(TrendPartial::scan(
+                &part.keys[s.row_start..s.row_end],
+                &part.columns[0][s.row_start..s.row_end],
+            ));
+        }
+        assert_eq!(line.count, oracle.n as u64);
+        assert_eq!(Some(line.slope), oracle.slope(), "bit-identical fit");
+        assert_eq!(Some(line.intercept), oracle.intercept());
+
+        // Degenerate selections are clear errors.
+        let one_key = RangeQuery { lo: 0, hi: 0 };
+        assert!(c.analyze_trend_line(&ds, index.as_ref(), one_key, 0).is_err());
+        let miss = RangeQuery { lo: i64::MAX - 5, hi: i64::MAX };
+        assert!(c.analyze_trend_line(&ds, index.as_ref(), miss, 0).is_err());
     }
 
     #[test]

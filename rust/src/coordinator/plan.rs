@@ -128,7 +128,41 @@ pub struct PrunedRange {
     /// The merged inclusive key range.
     pub range: RangeQuery,
     /// Index-targeted, zone-surviving slices, ordered by partition id.
+    /// Partitions listed in [`Self::covered`] keep their slice here (the
+    /// execution structure is identical either way); the slice is simply
+    /// answered from the sketch instead of being resolved.
     pub slices: Vec<PartitionSlice>,
+    /// Partition ids (a sorted subset of [`Self::slices`]) whose key range
+    /// is **fully contained** in [`Self::range`] and whose aggregate
+    /// sketch for the query's column exists: execution merges the sketch
+    /// partial instead of reading — zero data touch, zero fault-in when
+    /// cold. Empty for predicated queries and for ops that need raw rows
+    /// (trend moving averages, distance).
+    pub covered: Vec<usize>,
+}
+
+impl PrunedRange {
+    /// Whether `partition` is answered from its sketch in this range.
+    pub fn is_covered(&self, partition: usize) -> bool {
+        self.covered.binary_search(&partition).is_ok()
+    }
+}
+
+/// Optimizer switches for [`plan_query_opts`]. Both stages default to on;
+/// the off arms exist for the oracle comparisons the property tests and
+/// benches run through the *identical* execution path.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanOptions {
+    /// Drop partitions whose zone maps cannot satisfy the predicates.
+    pub zone_pruning: bool,
+    /// Answer fully-covered partitions from their aggregate sketches.
+    pub agg_pushdown: bool,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions { zone_pruning: true, agg_pushdown: true }
+    }
 }
 
 /// The pruning arithmetic of one lowering — what the planner skipped and
@@ -147,17 +181,31 @@ pub struct Explain {
     /// predicate conjunction.
     pub zone_pruned: usize,
     /// Surviving pairs execution will resolve (and, when tiered, fault in).
+    /// Sketch-answered pairs are counted here too — they are targeted by
+    /// the plan, just with zero data touch (see [`Self::agg_answered`]).
     pub targeted: usize,
-    /// Upper-bound rows the surviving slices cover (pre-mask).
+    /// Targeted pairs answered by merging the partition's aggregate
+    /// sketch: the key range fully covers the partition and no predicate
+    /// masks it, so execution reads **no data** for it (and, when the
+    /// partition is cold, faults **nothing** in).
+    pub agg_answered: usize,
+    /// Rows the sketch answers avoided reading.
+    pub rows_avoided: usize,
+    /// Raw bytes the sketch answers avoided reading (`rows_avoided ×
+    /// row_bytes`).
+    pub bytes_avoided: usize,
+    /// Upper-bound rows execution will actually read (pre-mask; covered
+    /// partitions excluded).
     pub estimated_rows: usize,
-    /// Upper-bound raw bytes of the surviving slices (`rows × row_bytes`).
+    /// Upper-bound raw bytes execution will actually read (`rows ×
+    /// row_bytes`).
     pub estimated_bytes: usize,
 }
 
 impl Explain {
     /// One-line human rendering for CLI output.
     pub fn line(&self) -> String {
-        format!(
+        let mut line = format!(
             "plan: {} partitions -> {} merged ranges, {} considered \
              ({} key-pruned), {} zone-pruned, {} targeted (~{} rows, ~{} bytes)",
             self.partitions,
@@ -168,7 +216,14 @@ impl Explain {
             self.targeted,
             self.estimated_rows,
             self.estimated_bytes,
-        )
+        );
+        if self.agg_answered > 0 {
+            line.push_str(&format!(
+                " | agg-answered: {} ({} rows, {} bytes avoided)",
+                self.agg_answered, self.rows_avoided, self.bytes_avoided,
+            ));
+        }
+        line
     }
 
     /// JSON rendering (the server's `explain` response body).
@@ -180,6 +235,9 @@ impl Explain {
             ("key_pruned", Json::num(self.key_pruned as f64)),
             ("zone_pruned", Json::num(self.zone_pruned as f64)),
             ("targeted", Json::num(self.targeted as f64)),
+            ("agg_answered", Json::num(self.agg_answered as f64)),
+            ("rows_avoided", Json::num(self.rows_avoided as f64)),
+            ("bytes_avoided", Json::num(self.bytes_avoided as f64)),
             ("estimated_rows", Json::num(self.estimated_rows as f64)),
             ("estimated_bytes", Json::num(self.estimated_bytes as f64)),
         ])
@@ -214,13 +272,37 @@ pub(crate) fn zone_keep(
         }
 }
 
-/// Key-target and zone-prune one set of ranges, accumulating into `ex`.
+/// The one covered/edge decision of the aggregate-pushdown lowering
+/// stage, shared by the plan layer (one candidate range per merged range)
+/// and the batch path (the elementary demux segments as candidates):
+/// `Some((range index, rows, sketch))` when every row of `partition` lies
+/// inside one of `ranges` (judged from O(1) key-bounds metadata — no data
+/// touch) *and* a sketch for `column` exists, so the partition can be
+/// answered by merging that sketch. Pure metadata on every backing,
+/// including cold tiered slots.
+pub(crate) fn covered_in(
+    ds: &Dataset,
+    partition: usize,
+    column: usize,
+    ranges: &[RangeQuery],
+) -> Option<(usize, usize, crate::index::ColumnSketch)> {
+    let (kmin, kmax, rows) = ds.partition_bounds(partition)?;
+    let idx = ranges.iter().position(|r| r.lo <= kmin && kmax <= r.hi)?;
+    let sketch = ds.sketch(partition, column)?;
+    Some((idx, rows, sketch))
+}
+
+/// Key-target, zone-prune and (for sketch-answerable ops) classify one set
+/// of ranges, accumulating into `ex`. `agg_column` is `Some(column)` when
+/// covered partitions may be answered from their aggregate sketches.
+#[allow(clippy::too_many_arguments)]
 fn prune_ranges(
     ds: &Dataset,
     index: &dyn ContentIndex,
     ranges: &[RangeQuery],
     predicates: &[ColumnPredicate],
     zone_pruning: bool,
+    agg_column: Option<usize>,
     seen: &mut [bool],
     ex: &mut Explain,
 ) -> Result<Vec<PrunedRange>> {
@@ -228,6 +310,7 @@ fn prune_ranges(
     for pq in plan_batch(ranges) {
         ex.merged_ranges += 1;
         let mut survivors = Vec::new();
+        let mut covered = Vec::new();
         for s in index.lookup(pq.range) {
             ex.considered += 1;
             if let Some(flag) = seen.get_mut(s.partition) {
@@ -235,13 +318,26 @@ fn prune_ranges(
             }
             if !zone_pruning || zone_keep(ds, predicates, s.partition) {
                 ex.targeted += 1;
-                ex.estimated_rows += s.rows();
+                match agg_column
+                    .and_then(|c| covered_in(ds, s.partition, c, std::slice::from_ref(&pq.range)))
+                {
+                    Some(_) => {
+                        // Answered from the sketch: no rows will be read.
+                        ex.agg_answered += 1;
+                        ex.rows_avoided += s.rows();
+                        covered.push(s.partition);
+                    }
+                    None => ex.estimated_rows += s.rows(),
+                }
                 survivors.push(s);
             } else {
                 ex.zone_pruned += 1;
             }
         }
-        out.push(PrunedRange { range: pq.range, slices: survivors });
+        // Lookup yields the compressed region in id order but ASL entries
+        // in *key* order — sort so `is_covered` can binary-search.
+        covered.sort_unstable();
+        out.push(PrunedRange { range: pq.range, slices: survivors, covered });
     }
     Ok(out)
 }
@@ -249,14 +345,28 @@ fn prune_ranges(
 /// Lower a logical [`Query`] against a dataset and its super index into a
 /// [`PhysicalPlan`]: batch-merge the ranges, key-target each merged range
 /// through the index, and (when `zone_pruning` is set) drop partitions
-/// whose zone maps cannot satisfy the predicates. Pure metadata — no
-/// partition is read or faulted in. `zone_pruning: false` is the oracle
-/// arm the property tests and the pruning bench compare against.
+/// whose zone maps cannot satisfy the predicates. Aggregate pushdown stays
+/// on; use [`plan_query_opts`] to switch it off for oracle comparisons.
+/// Pure metadata — no partition is read or faulted in. `zone_pruning:
+/// false` is the oracle arm the property tests and the pruning bench
+/// compare against.
 pub fn plan_query(
     ds: &Dataset,
     index: &dyn ContentIndex,
     query: &Query,
     zone_pruning: bool,
+) -> Result<PhysicalPlan> {
+    plan_query_opts(ds, index, query, PlanOptions { zone_pruning, agg_pushdown: true })
+}
+
+/// [`plan_query`] with every optimizer stage switchable — the entry point
+/// for oracle arms (`agg_pushdown: false` forces every targeted partition
+/// down the scan path, reproducing the pre-sketch plans).
+pub fn plan_query_opts(
+    ds: &Dataset,
+    index: &dyn ContentIndex,
+    query: &Query,
+    opts: PlanOptions,
 ) -> Result<PhysicalPlan> {
     let width = ds.schema().width();
     for (i, r) in query.ranges.iter().enumerate() {
@@ -297,7 +407,21 @@ pub fn plan_query(
     // which removes rows from one side only — would shift the alignment.
     // Distance plans are key-targeted only; predicates drop *pairs* at
     // execution instead.
-    let zone_pruning = zone_pruning && !matches!(query.op, QueryOp::Distance { .. });
+    let zone_pruning =
+        opts.zone_pruning && !matches!(query.op, QueryOp::Distance { .. });
+    // Aggregate pushdown applies only to `Stats` — the one op whose
+    // result is a pure fold of the sketch algebra. Trend needs the raw
+    // series (a moving average is order-dependent) and distance needs
+    // positional pairs; a predicate conjunction masks rows the sketch
+    // cannot un-fold, so any `where` clause also forces the scan path.
+    let agg_column = match query.op {
+        QueryOp::Stats { column }
+            if opts.agg_pushdown && query.predicates.is_empty() =>
+        {
+            Some(column)
+        }
+        _ => None,
+    };
     let mut ex = Explain { partitions: ds.num_partitions(), ..Explain::default() };
     let mut seen = vec![false; ex.partitions];
     let ranges = prune_ranges(
@@ -306,6 +430,7 @@ pub fn plan_query(
         &query.ranges,
         &query.predicates,
         zone_pruning,
+        agg_column,
         &mut seen,
         &mut ex,
     )?;
@@ -323,6 +448,7 @@ pub fn plan_query(
                 &[baseline],
                 &query.predicates,
                 zone_pruning,
+                None,
                 &mut seen,
                 &mut ex,
             )?
@@ -330,7 +456,9 @@ pub fn plan_query(
         _ => Vec::new(),
     };
     ex.key_pruned = ex.partitions - seen.iter().filter(|&&s| s).count();
-    ex.estimated_bytes = ex.estimated_rows * ds.schema().row_bytes();
+    let row_bytes = ds.schema().row_bytes();
+    ex.estimated_bytes = ex.estimated_rows * row_bytes;
+    ex.bytes_avoided = ex.rows_avoided * row_bytes;
     Ok(PhysicalPlan { ranges, baseline, explain: ex })
 }
 
@@ -419,12 +547,63 @@ mod tests {
         assert_eq!(plan.explain.key_pruned, 3);
         assert_eq!(plan.explain.zone_pruned, 0);
         assert_eq!(plan.explain.targeted, 1);
-        assert_eq!(plan.explain.estimated_rows, 250);
-        assert_eq!(
-            plan.explain.estimated_bytes,
-            250 * ds.schema().row_bytes()
-        );
+        // [0, 2490] contains the whole first partition (keys 0..=2490), so
+        // the sketch answers it: nothing will be read.
+        assert_eq!(plan.explain.agg_answered, 1);
+        assert_eq!(plan.explain.rows_avoided, 250);
+        assert_eq!(plan.explain.bytes_avoided, 250 * ds.schema().row_bytes());
+        assert_eq!(plan.explain.estimated_rows, 0);
+        assert_eq!(plan.explain.estimated_bytes, 0);
+        assert_eq!(plan.ranges[0].covered, vec![0]);
+        assert!(plan.ranges[0].is_covered(0));
         assert!(plan.baseline.is_empty());
+
+        // Shrinking the range by one key turns it into an edge: the
+        // partition must now be scanned (and the estimates book it).
+        let q = Query::stats(RangeQuery { lo: 0, hi: 2_480 }, 0);
+        let plan = plan_query(&ds, &index, &q, true).unwrap();
+        assert_eq!(plan.explain.agg_answered, 0);
+        assert_eq!(plan.explain.estimated_rows, 249);
+        assert!(plan.ranges[0].covered.is_empty());
+
+        // The oracle arm forces the covered partition down the scan path.
+        let q = Query::stats(RangeQuery { lo: 0, hi: 2_490 }, 0);
+        let opts = PlanOptions { zone_pruning: true, agg_pushdown: false };
+        let plan = plan_query_opts(&ds, &index, &q, opts).unwrap();
+        assert_eq!(plan.explain.agg_answered, 0);
+        assert_eq!(plan.explain.estimated_rows, 250);
+        assert!(plan.ranges[0].covered.is_empty());
+    }
+
+    #[test]
+    fn predicates_and_raw_row_ops_never_classify_covered() {
+        let (_ctx, ds, index) = trending();
+        // Full-span query: every partition is contained — all covered.
+        let all = Query::stats(RangeQuery { lo: 0, hi: i64::MAX }, 0);
+        let plan = plan_query(&ds, &index, &all, true).unwrap();
+        assert_eq!(plan.explain.agg_answered, 4);
+        assert_eq!(plan.explain.rows_avoided, 1000);
+
+        // Any `where` clause forces the scan path (the sketch cannot
+        // un-fold masked rows).
+        let filtered = all.clone().filtered(vec![pred(1, PredOp::Ge, 0.0)]);
+        let plan = plan_query(&ds, &index, &filtered, true).unwrap();
+        assert_eq!(plan.explain.agg_answered, 0);
+        assert_eq!(plan.explain.estimated_rows, 1000);
+
+        // Trend needs the raw series; distance needs positional pairs.
+        let trend = Query {
+            ranges: vec![RangeQuery { lo: 0, hi: i64::MAX }],
+            predicates: Vec::new(),
+            op: QueryOp::Trend { column: 0, window: 4 },
+        };
+        assert_eq!(plan_query(&ds, &index, &trend, true).unwrap().explain.agg_answered, 0);
+        let dist = Query {
+            ranges: vec![RangeQuery { lo: 0, hi: 2_490 }],
+            predicates: Vec::new(),
+            op: QueryOp::Distance { column: 0, baseline: RangeQuery { lo: 2_500, hi: 4_990 } },
+        };
+        assert_eq!(plan_query(&ds, &index, &dist, true).unwrap().explain.agg_answered, 0);
     }
 
     #[test]

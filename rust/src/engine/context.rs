@@ -39,6 +39,9 @@ pub struct EngineCounters {
     pub bytes_materialized: AtomicUsize,
     /// Partitions touched via the indexed (Oseba) path.
     pub partitions_targeted: AtomicUsize,
+    /// Targeted partitions answered from their aggregate sketches —
+    /// counted in `partitions_targeted` too, but with zero data touch.
+    pub partitions_agg_answered: AtomicUsize,
 }
 
 impl EngineCounters {
@@ -49,6 +52,7 @@ impl EngineCounters {
             rows_scanned: self.rows_scanned.load(Ordering::Relaxed),
             bytes_materialized: self.bytes_materialized.load(Ordering::Relaxed),
             partitions_targeted: self.partitions_targeted.load(Ordering::Relaxed),
+            partitions_agg_answered: self.partitions_agg_answered.load(Ordering::Relaxed),
         }
     }
 }
@@ -64,6 +68,9 @@ pub struct CounterSnapshot {
     pub bytes_materialized: usize,
     /// Partitions touched via the indexed (Oseba) path.
     pub partitions_targeted: usize,
+    /// Targeted partitions answered from their aggregate sketches
+    /// (a subset of `partitions_targeted`; zero data touch).
+    pub partitions_agg_answered: usize,
 }
 
 /// The engine context.
@@ -491,6 +498,15 @@ impl OsebaContext {
             }
         }
         Ok(out)
+    }
+
+    /// Record `n` sketch-answered (covered) partitions: they count as
+    /// targeted — the index proposed them — but touched no data.
+    pub(crate) fn note_agg_answered(&self, n: usize) {
+        if n > 0 {
+            self.counters.partitions_targeted.fetch_add(n, Ordering::Relaxed);
+            self.counters.partitions_agg_answered.fetch_add(n, Ordering::Relaxed);
+        }
     }
 
     /// Drop a dataset from the cache, releasing its memory.

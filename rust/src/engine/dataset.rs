@@ -155,22 +155,59 @@ impl Dataset {
         }
     }
 
+    /// Whether `partition` is outside this handle's visible prefix (live
+    /// snapshots over a shared, still-growing store).
+    fn hidden(&self, partition: usize) -> bool {
+        matches!(self.visible, Some(v) if partition >= v)
+    }
+
     /// Per-column zone maps of partition `partition` — pure metadata on
     /// every backing (resident partitions carry them; a tiered store keeps
     /// them in its slot table, so **no fault-in happens here**). `None`
     /// for an id outside the visible dataset. This is what the query
     /// planner consults for value-predicate pruning.
     pub fn zone_maps(&self, partition: usize) -> Option<Vec<crate::index::ZoneMap>> {
+        if self.hidden(partition) {
+            return None;
+        }
         match &self.store {
-            Some(st) => {
-                if let Some(v) = self.visible {
-                    if partition >= v {
-                        return None;
-                    }
-                }
-                st.zone_maps(partition)
+            Some(st) => st.zone_maps(partition),
+            None => self.parts.get(partition).map(|p| p.zone_maps()),
+        }
+    }
+
+    /// The aggregate sketch of one value column of one partition — pure
+    /// metadata, like [`Self::zone_maps`]: resident partitions carry
+    /// sketches from seal time, a tiered store keeps them in its slot
+    /// table (they survive eviction), so **no fault-in happens here**.
+    /// `None` for an id outside the visible dataset, an out-of-range
+    /// column, or a store opened from a pre-v3 manifest (whose partitions
+    /// then always scan — the conservative sentinel).
+    pub fn sketch(&self, partition: usize, column: usize) -> Option<crate::index::ColumnSketch> {
+        if self.hidden(partition) {
+            return None;
+        }
+        match &self.store {
+            Some(st) => st.sketch(partition, column),
+            None => self.parts.get(partition).and_then(|p| p.sketches.get(column).copied()),
+        }
+    }
+
+    /// Key bounds and row count of one visible partition —
+    /// `(key_min, key_max, rows)`, O(1) metadata on every backing (no
+    /// fault-in). This is what the planner's covered/edge classification
+    /// consults: a merged range containing `[key_min, key_max]` covers
+    /// every row of the partition.
+    pub fn partition_bounds(&self, partition: usize) -> Option<(i64, i64, usize)> {
+        if self.hidden(partition) {
+            return None;
+        }
+        match &self.store {
+            Some(st) => st.meta(partition).map(|m| (m.key_min, m.key_max, m.rows)),
+            None => {
+                let p = self.parts.get(partition)?;
+                Some((p.key_min()?, p.key_max()?, p.rows))
             }
-            None => self.parts.get(partition).map(|p| p.zones.clone()),
         }
     }
 

@@ -16,6 +16,6 @@ pub use builder::extract_meta;
 pub use cias::Cias;
 pub use table::TableIndex;
 pub use types::{
-    row_matches, zone_maps_of, zones_satisfiable, ColumnPredicate, ContentIndex,
-    PartitionMeta, PartitionSlice, PredOp, RangeQuery, ZoneMap,
+    row_matches, sketches_of, zones_satisfiable, ColumnPredicate, ColumnSketch,
+    ContentIndex, PartitionMeta, PartitionSlice, PredOp, RangeQuery, ZoneMap,
 };

@@ -1,8 +1,11 @@
 //! Core index vocabulary: range queries, partition slices, per-column
-//! value-domain zone maps with the predicates that consult them, and the
-//! [`ContentIndex`] trait both index implementations satisfy.
+//! value-domain zone maps with the predicates that consult them, the
+//! per-column aggregate sketches the planner answers covered partitions
+//! from, and the [`ContentIndex`] trait both index implementations
+//! satisfy.
 
 use crate::error::{OsebaError, Result};
+use crate::util::stats::{fold_stats_f32, Moments, TrendPartial};
 
 /// An inclusive key-range selection `[lo, hi]` — the paper's "data ranging
 /// from index i to j" (§III-A).
@@ -111,9 +114,85 @@ impl ZoneMap {
     }
 }
 
-/// Zone maps for every value column of a partition's valid rows.
-pub fn zone_maps_of(columns: &[Vec<f32>], rows: usize) -> Vec<ZoneMap> {
-    columns.iter().map(|c| ZoneMap::of(&c[..rows.min(c.len())])).collect()
+/// Associative **aggregate sketch** of one value column of one partition:
+/// the full [`Moments`] partial (max/min/sum/sumsq/count/nans — a strict
+/// superset of the min/max-only [`ZoneMap`]) plus the linear-trend
+/// regression partial over (key, value) pairs.
+///
+/// Sketches are computed once at seal time and carried wherever partition
+/// metadata lives (resident partitions, the tiered store's slot table,
+/// manifest v3), so a query whose key range *fully covers* a partition —
+/// and carries no value predicates — is answered by merging the sketch
+/// instead of scanning (or, when the partition is cold, faulting in) the
+/// data. The stats moments are folded block-by-block through
+/// [`crate::util::stats::fold_stats_f32`] — the same function the native
+/// backend's `segment_stats` kernel uses — so on the native backend a
+/// sketch partial is **bit-identical** to the partial a full scan of the
+/// partition would produce, and merged results cannot drift (the property
+/// tests assert exact equality). The AOT HLO kernels (non-default `xla`
+/// feature) may regroup their f32 reductions, so there — as for every
+/// other HLO-vs-native comparison in the crate — sketch-vs-scan agreement
+/// is tolerance-level, not bitwise. On NaN-bearing columns the gap is
+/// wider still: the HLO kernels fold NaN into their sums (the known
+/// kernel-path limitation, DESIGN.md §10) while sketches enforce the
+/// crate-wide counted-out policy — a sketch-answered partition therefore
+/// reports the *correct* statistics where the kernel scan would poison
+/// them, and a query straddling the covered/edge boundary can observe
+/// that difference.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ColumnSketch {
+    /// Raw-moment partial over the column's valid rows.
+    pub moments: Moments,
+    /// Linear-regression partial over (key, value) pairs.
+    pub trend: TrendPartial,
+}
+
+impl ColumnSketch {
+    /// The identity sketch (empty partition).
+    pub const EMPTY: ColumnSketch =
+        ColumnSketch { moments: Moments::EMPTY, trend: TrendPartial::EMPTY };
+
+    /// Sketch one column: `keys` are the partition's valid keys and
+    /// `values` the parallel column slice (`values.len() >= keys.len()`;
+    /// padding beyond the keys is ignored). `block_rows` is the kernel
+    /// block size the moments are folded in — pass
+    /// [`crate::storage::BLOCK_ROWS`] so the partial matches the scan
+    /// path's block decomposition exactly.
+    pub fn of(keys: &[i64], values: &[f32], block_rows: usize) -> ColumnSketch {
+        let rows = keys.len().min(values.len());
+        let values = &values[..rows];
+        let mut moments = Moments::EMPTY;
+        for block in values.chunks(block_rows.max(1)) {
+            let (mx, mn, sum, sumsq, nans) = fold_stats_f32(block);
+            let mut m =
+                Moments::from_kernel(mx, mn, sum, sumsq, (block.len() - nans) as f32);
+            m.nans = nans as f64;
+            moments = moments.merge(m);
+        }
+        ColumnSketch { moments, trend: TrendPartial::scan(keys, values) }
+    }
+
+    /// The zone map this sketch subsumes (min/max/nans), for predicate
+    /// pruning. Empty sketches map to the unbounded-empty sentinel.
+    pub fn zone(&self) -> ZoneMap {
+        if self.moments.is_empty() {
+            return ZoneMap { nans: self.moments.nans as usize, ..ZoneMap::EMPTY };
+        }
+        ZoneMap {
+            min: self.moments.min,
+            max: self.moments.max,
+            nans: self.moments.nans as usize,
+        }
+    }
+}
+
+/// Aggregate sketches for every value column of a partition's valid rows.
+pub fn sketches_of(
+    keys: &[i64],
+    columns: &[Vec<f32>],
+    block_rows: usize,
+) -> Vec<ColumnSketch> {
+    columns.iter().map(|c| ColumnSketch::of(keys, c, block_rows)).collect()
 }
 
 /// Comparison operator of a value predicate.
@@ -243,9 +322,13 @@ mod tests {
     }
 
     #[test]
-    fn zone_maps_of_covers_valid_rows_only() {
+    fn derived_zone_maps_cover_valid_rows_only() {
+        // Zones are a view of the sketches: padding rows (beyond the two
+        // keys) must stay invisible to the derived bounds.
+        let keys = vec![1, 2];
         let cols = vec![vec![1.0, 2.0, 99.0, 99.0], vec![5.0, f32::NAN, 99.0, 99.0]];
-        let zs = zone_maps_of(&cols, 2);
+        let zs: Vec<ZoneMap> =
+            sketches_of(&keys, &cols, 4096).iter().map(ColumnSketch::zone).collect();
         assert_eq!(zs.len(), 2);
         assert_eq!((zs[0].min, zs[0].max), (1.0, 2.0));
         assert_eq!((zs[1].min, zs[1].max), (5.0, 5.0));
@@ -280,6 +363,60 @@ mod tests {
         for op in [PredOp::Gt, PredOp::Ge, PredOp::Lt, PredOp::Le] {
             assert!(!pred(op, 0.0).satisfiable(&empty), "{op:?}");
         }
+    }
+
+    #[test]
+    fn column_sketch_matches_blockwise_fold_and_zone() {
+        use crate::util::stats::fold_stats_f32;
+        let keys: Vec<i64> = (0..10_000).map(|i| i * 3).collect();
+        let values: Vec<f32> =
+            (0..10_000).map(|i| if i == 77 { f32::NAN } else { (i % 311) as f32 }).collect();
+        let block = 4096usize;
+        let sk = ColumnSketch::of(&keys, &values, block);
+
+        // Oracle: the same blockwise kernel fold, merged in block order.
+        let mut want = Moments::EMPTY;
+        for b in values.chunks(block) {
+            let (mx, mn, sum, sumsq, nans) = fold_stats_f32(b);
+            let mut m = Moments::from_kernel(mx, mn, sum, sumsq, (b.len() - nans) as f32);
+            m.nans = nans as f64;
+            want = want.merge(m);
+        }
+        assert_eq!(sk.moments, want);
+        assert_eq!(sk.moments.count, 9_999.0);
+        assert_eq!(sk.moments.nans, 1.0);
+
+        // Trend matches a direct scan; padding past the keys is ignored.
+        assert_eq!(sk.trend, crate::util::stats::TrendPartial::scan(&keys, &values));
+        let mut padded = values.clone();
+        padded.extend([9e9, 9e9]);
+        assert_eq!(ColumnSketch::of(&keys, &padded, block), sk);
+
+        // The derived zone subsumes ZoneMap::of.
+        let z = sk.zone();
+        let direct = ZoneMap::of(&values);
+        assert_eq!((z.min, z.max, z.nans), (direct.min, direct.max, direct.nans));
+
+        // Empty and all-NaN sketches degrade to the empty zone.
+        assert!(ColumnSketch::EMPTY.zone().is_empty());
+        let nan_sk = ColumnSketch::of(&[1, 2], &[f32::NAN, f32::NAN], block);
+        assert!(nan_sk.zone().is_empty());
+        assert_eq!(nan_sk.zone().nans, 2);
+        assert!(nan_sk.moments.is_empty());
+        assert!(nan_sk.trend.is_empty());
+    }
+
+    #[test]
+    fn sketches_of_covers_every_column() {
+        let keys = vec![10, 20, 30];
+        let cols = vec![vec![1.0, 2.0, 3.0, 99.0], vec![5.0, 5.0, 5.0, 99.0]];
+        let sks = sketches_of(&keys, &cols, 4096);
+        assert_eq!(sks.len(), 2);
+        assert_eq!(sks[0].moments.count, 3.0);
+        assert_eq!(sks[0].moments.max, 3.0, "padding row 3 excluded");
+        assert_eq!(sks[1].moments.min, 5.0);
+        assert!((sks[0].trend.slope().unwrap() - 0.1).abs() < 1e-9);
+        assert_eq!(sks[1].trend.slope(), Some(0.0), "flat column fits a flat line");
     }
 
     #[test]

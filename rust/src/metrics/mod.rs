@@ -145,6 +145,14 @@ pub struct BatchReport {
     /// Index-proposed slices dropped by zone-map predicate pruning before
     /// resolve (0 for a batch without value predicates).
     pub zone_pruned: usize,
+    /// Surviving slices answered by merging their partition's aggregate
+    /// sketch: the partition lies fully inside one elementary segment, so
+    /// no data was read (and no cold segment faulted in) for it.
+    pub agg_answered: usize,
+    /// Rows the sketch answers avoided reading.
+    pub rows_avoided: usize,
+    /// Raw bytes the sketch answers avoided reading.
+    pub bytes_avoided: usize,
     /// Worker task dispatches submitted to the pool.
     pub tasks: usize,
     /// Cold partitions faulted in from the tiered store (0 when the
@@ -174,6 +182,13 @@ impl BatchReport {
         if self.zone_pruned > 0 {
             line.push_str(&format!(" | zone-pruned: {}", self.zone_pruned));
         }
+        if self.agg_answered > 0 {
+            line.push_str(&format!(
+                " | agg-answered: {} ({} avoided)",
+                self.agg_answered,
+                humansize::bytes(self.bytes_avoided),
+            ));
+        }
         if self.faults > 0 || self.evictions > 0 {
             line.push_str(&format!(
                 " | tiered: {} faults, {} evictions, {} read",
@@ -193,6 +208,9 @@ impl BatchReport {
             ("segments", Json::num(self.segments as f64)),
             ("partitions_touched", Json::num(self.partitions_touched as f64)),
             ("zone_pruned", Json::num(self.zone_pruned as f64)),
+            ("agg_answered", Json::num(self.agg_answered as f64)),
+            ("rows_avoided", Json::num(self.rows_avoided as f64)),
+            ("bytes_avoided", Json::num(self.bytes_avoided as f64)),
             ("tasks", Json::num(self.tasks as f64)),
             ("faults", Json::num(self.faults as f64)),
             ("evictions", Json::num(self.evictions as f64)),
@@ -226,7 +244,7 @@ mod tests {
             partitions_scanned: scanned,
             rows_scanned: scanned * 100,
             bytes_materialized: scanned * 1000,
-            partitions_targeted: 0,
+            ..CounterSnapshot::default()
         }
     }
 
@@ -272,27 +290,30 @@ mod tests {
             merged_ranges: 3,
             segments: 11,
             partitions_touched: 9,
-            zone_pruned: 0,
             tasks: 6,
-            faults: 0,
-            evictions: 0,
-            segment_bytes_read: 0,
             secs: 0.125,
+            ..BatchReport::default()
         };
         let line = r.line();
         assert!(line.contains("8 queries"));
         assert!(line.contains("3 merged ranges"));
         assert!(!line.contains("tiered"), "resident batches stay terse");
         assert!(!line.contains("zone-pruned"), "predicate-free batches stay terse");
+        assert!(!line.contains("agg-answered"), "scan-only batches stay terse");
         let j = r.to_json().to_string();
         assert!(j.contains("\"merged_ranges\":3"));
         assert!(j.contains("\"partitions_touched\":9"));
         assert!(j.contains("\"zone_pruned\":0"));
+        assert!(j.contains("\"agg_answered\":0"));
         let tiered = BatchReport { faults: 2, segment_bytes_read: 1 << 20, ..r };
         assert!(tiered.line().contains("2 faults"), "{}", tiered.line());
         assert!(tiered.to_json().to_string().contains("\"faults\":2"));
         let pruned = BatchReport { zone_pruned: 4, ..r };
         assert!(pruned.line().contains("zone-pruned: 4"), "{}", pruned.line());
+        let answered =
+            BatchReport { agg_answered: 5, rows_avoided: 100, bytes_avoided: 2400, ..r };
+        assert!(answered.line().contains("agg-answered: 5"), "{}", answered.line());
+        assert!(answered.to_json().to_string().contains("\"rows_avoided\":100"));
     }
 
     #[test]

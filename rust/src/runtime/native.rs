@@ -7,14 +7,12 @@
 
 use crate::error::Result;
 use crate::runtime::backend::AnalysisBackend;
-use crate::util::stats::{DistancePartial, Moments};
+use crate::util::stats::{fold_stats_f32, DistancePartial, Moments};
 
 /// The no-artifacts execution engine (baseline + test oracle).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NativeBackend;
 
-const NEG_INF: f32 = -3.4e38;
-const POS_INF: f32 = 3.4e38;
 const HIST_BINS: usize = 64;
 
 fn clamp_range(len: usize, start: usize, end: usize) -> (usize, usize) {
@@ -33,23 +31,13 @@ impl AnalysisBackend for NativeBackend {
 
     fn segment_stats(&self, block: &[f32], start: usize, end: usize) -> Result<Moments> {
         let (start, end) = clamp_range(block.len(), start, end);
-        // f32 partial sums (like the kernel), widened at the partial level.
+        // f32 partial sums (like the kernel), widened at the partial
+        // level, accumulated in 8 independent lanes so the fold pipelines
+        // instead of serializing on one accumulator — the shared
+        // `fold_stats_f32`, which is also how seal-time aggregate sketches
+        // are computed, so sketch partials are bit-identical to this scan.
         // NaNs are counted out (the crate-wide NaN policy, DESIGN.md §10).
-        let mut mx = NEG_INF;
-        let mut mn = POS_INF;
-        let mut sum = 0f32;
-        let mut sumsq = 0f32;
-        let mut nans = 0usize;
-        for &x in &block[start..end] {
-            if x.is_nan() {
-                nans += 1;
-                continue;
-            }
-            mx = mx.max(x);
-            mn = mn.min(x);
-            sum += x;
-            sumsq += x * x;
-        }
+        let (mx, mn, sum, sumsq, nans) = fold_stats_f32(&block[start..end]);
         let mut m =
             Moments::from_kernel(mx, mn, sum, sumsq, (end - start - nans) as f32);
         m.nans = nans as f64;
@@ -278,6 +266,47 @@ mod tests {
             .unwrap();
         assert_eq!(h.iter().sum::<f32>(), 2.0);
         assert_eq!(h[0], 0.0);
+    }
+
+    #[test]
+    fn lane_fold_matches_scan_oracle() {
+        // The 8-lane segment_stats must agree with the f64 `Moments::scan`
+        // oracle: exactly on count/nans/max/min (order-free folds), and
+        // exactly on the sums for integer-valued data (no rounding in any
+        // association); within tolerance on random data (f32 lane sums
+        // regroup the additions).
+        let b = backend();
+        let ints: Vec<f32> = (0..4096).map(|i| ((i * 31) % 1000) as f32).collect();
+        let got = b.segment_stats(&ints, 0, 4096).unwrap();
+        let want = Moments::scan(&ints);
+        assert_eq!(got.count, want.count);
+        assert_eq!(got.max, want.max);
+        assert_eq!(got.min, want.min);
+        assert_eq!(got.sum, want.sum);
+
+        let mut rng = Xoshiro256::seeded(99);
+        let mut xs: Vec<f32> =
+            (0..4096).map(|_| (rng.next_f32() - 0.5) * 200.0).collect();
+        for i in (0..4096).step_by(513) {
+            xs[i] = f32::NAN;
+        }
+        for (s, e) in [(0usize, 4096usize), (17, 4000), (100, 101), (5, 5)] {
+            let got = b.segment_stats(&xs, s, e).unwrap();
+            let want = Moments::scan(&xs[s..e]);
+            assert_eq!(got.count, want.count, "[{s},{e})");
+            assert_eq!(got.nans, want.nans, "[{s},{e})");
+            assert_eq!(got.max, want.max);
+            assert_eq!(got.min, want.min);
+            if want.count > 0.0 {
+                assert!(
+                    (got.mean() - want.mean()).abs() < 1e-3,
+                    "[{s},{e}): {} vs {}",
+                    got.mean(),
+                    want.mean()
+                );
+                assert!((got.std() - want.std()).abs() < 1e-2);
+            }
+        }
     }
 
     #[test]

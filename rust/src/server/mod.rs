@@ -189,6 +189,12 @@ fn info_fields(ds: &Dataset, coord: &Coordinator, fields: &mut Vec<(&'static str
     fields.push(("rows", Json::num(ds.total_rows() as f64)));
     fields.push(("partitions", Json::num(ds.num_partitions() as f64)));
     fields.push(("memory_bytes", Json::num(coord.context().memory_used() as f64)));
+    // Cumulative sketch answers served by this engine (zero-data-touch
+    // covered partitions) — the aggregate-pushdown win, surfaced live.
+    fields.push((
+        "agg_answered",
+        Json::num(coord.context().counters().partitions_agg_answered as f64),
+    ));
     fields.push(("key_min", Json::num(ds.key_min().unwrap_or(0) as f64)));
     fields.push(("key_max", Json::num(ds.key_max().unwrap_or(0) as f64)));
     fields.push(("tiered", Json::Bool(ds.is_tiered())));
@@ -321,11 +327,11 @@ fn handle_stats(req: &Json, coord: &Coordinator, source: &ServerSource) -> Resul
     let column = ds.schema().column_index(col_name)?;
     let predicates = parse_where(req, ds)?;
     let timer = Timer::start();
-    let (stats, zone_pruned) = match method {
+    let (stats, plan_explain) = match method {
         Method::Oseba => {
             let query = Query::stats(q, column).filtered(predicates);
             let (out, explain) = coord.execute_plan(ds, index, &query)?;
-            (out.stats().expect("stats query"), Some(explain.zone_pruned))
+            (out.stats().expect("stats query"), Some(explain))
         }
         Method::Default => {
             if !predicates.is_empty() {
@@ -352,8 +358,10 @@ fn handle_stats(req: &Json, coord: &Coordinator, source: &ServerSource) -> Resul
         ("method", Json::str(method.label())),
         ("secs", Json::num(timer.secs())),
     ];
-    if let Some(zp) = zone_pruned {
-        fields.push(("zone_pruned", Json::num(zp as f64)));
+    if let Some(ex) = plan_explain {
+        fields.push(("zone_pruned", Json::num(ex.zone_pruned as f64)));
+        fields.push(("agg_answered", Json::num(ex.agg_answered as f64)));
+        fields.push(("rows_avoided", Json::num(ex.rows_avoided as f64)));
     }
     if let Some(e) = epoch {
         fields.push(("epoch", Json::num(e as f64)));
@@ -578,6 +586,46 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("oseba"), "got: {err}");
+    }
+
+    #[test]
+    fn stats_and_info_report_sketch_answers() {
+        let (coord, source) = setup();
+        let flag = AtomicBool::new(false);
+        // Full-span query: every partition is fully covered — answered
+        // entirely from aggregate sketches.
+        let r = handle_request(
+            &format!(
+                r#"{{"op":"stats","lo":0,"hi":{},"column":"temperature"}}"#,
+                3600 * 9_999
+            ),
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap();
+        assert_eq!(r.get("count").unwrap().as_usize(), Some(10_000));
+        assert_eq!(r.get("agg_answered").unwrap().as_usize(), Some(5));
+        assert_eq!(r.get("rows_avoided").unwrap().as_usize(), Some(10_000));
+
+        // explain carries the same arithmetic without executing.
+        let r = handle_request(
+            &format!(
+                r#"{{"op":"explain","lo":0,"hi":{},"column":"temperature"}}"#,
+                3600 * 9_999
+            ),
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap();
+        let plan = r.get("plan").unwrap();
+        assert_eq!(plan.get("agg_answered").unwrap().as_usize(), Some(5));
+        assert_eq!(plan.get("estimated_rows").unwrap().as_usize(), Some(0));
+
+        // info surfaces the cumulative engine counter.
+        let r = handle_request(r#"{"op":"info"}"#, &coord, &source, &flag).unwrap();
+        assert_eq!(r.get("agg_answered").unwrap().as_usize(), Some(5));
     }
 
     #[test]

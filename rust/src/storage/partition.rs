@@ -8,7 +8,7 @@
 use std::sync::Arc;
 
 use crate::error::{OsebaError, Result};
-use crate::index::types::ZoneMap;
+use crate::index::types::{ColumnSketch, ZoneMap};
 use crate::storage::batch::RecordBatch;
 
 /// Rows per kernel block — must match `python/compile/kernels/BLOCK_ROWS`.
@@ -27,11 +27,15 @@ pub struct Partition {
     pub rows: usize,
     /// `rows` rounded up to a multiple of `BLOCK_ROWS`.
     pub padded_rows: usize,
-    /// Per-column zone maps over the valid rows (padding excluded),
-    /// computed once at construction — the value-domain metadata the
-    /// query planner prunes partitions by. Excluded from [`Self::bytes`]
-    /// (it is metadata, not storage-budget data).
-    pub zones: Vec<ZoneMap>,
+    /// Per-column **aggregate sketches** over the valid rows (padding
+    /// excluded), computed once at construction: full moments partials
+    /// (superseding the min/max-only zone maps, which [`Self::zone_maps`]
+    /// derives from them) plus linear-trend regression partials. The
+    /// planner answers fully-covered partitions from these without
+    /// touching the data. Excluded from [`Self::bytes`] (metadata, not
+    /// storage-budget data). Moments are folded with the kernel-block
+    /// algorithm, so a sketch is bit-identical to a full scan's partial.
+    pub sketches: Vec<ColumnSketch>,
 }
 
 impl Partition {
@@ -40,7 +44,11 @@ impl Partition {
         let rows = hi - lo;
         let padded_rows = rows.div_ceil(BLOCK_ROWS).max(1) * BLOCK_ROWS;
         let keys = batch.keys[lo..hi].to_vec();
-        let zones = batch.columns.iter().map(|c| ZoneMap::of(&c[lo..hi])).collect();
+        let sketches = batch
+            .columns
+            .iter()
+            .map(|c| ColumnSketch::of(&keys, &c[lo..hi], BLOCK_ROWS))
+            .collect();
         let columns = batch
             .columns
             .iter()
@@ -51,7 +59,7 @@ impl Partition {
                 v
             })
             .collect();
-        Partition { id, keys, columns, rows, padded_rows, zones }
+        Partition { id, keys, columns, rows, padded_rows, sketches }
     }
 
     /// Build directly from owned columns (used by the filter baseline when
@@ -59,12 +67,19 @@ impl Partition {
     pub fn from_rows(id: usize, keys: Vec<i64>, mut columns: Vec<Vec<f32>>) -> Partition {
         let rows = keys.len();
         let padded_rows = rows.div_ceil(BLOCK_ROWS).max(1) * BLOCK_ROWS;
-        let zones = columns.iter().map(|c| ZoneMap::of(&c[..rows])).collect();
+        let sketches =
+            columns.iter().map(|c| ColumnSketch::of(&keys, &c[..rows], BLOCK_ROWS)).collect();
         for c in &mut columns {
             debug_assert_eq!(c.len(), rows);
             c.resize(padded_rows, 0.0);
         }
-        Partition { id, keys, columns, rows, padded_rows, zones }
+        Partition { id, keys, columns, rows, padded_rows, sketches }
+    }
+
+    /// Per-column zone maps (min/max/nans), derived from the aggregate
+    /// sketches — the value-domain metadata predicate pruning consults.
+    pub fn zone_maps(&self) -> Vec<ZoneMap> {
+        self.sketches.iter().map(ColumnSketch::zone).collect()
     }
 
     /// Smallest key (None when empty).
@@ -230,24 +245,32 @@ mod tests {
     }
 
     #[test]
-    fn zones_cover_valid_rows_not_padding() {
+    fn sketches_cover_valid_rows_not_padding() {
         let rb = batch(100);
         let p = Partition::from_batch_range(0, &rb, 10, 60);
-        assert_eq!(p.zones.len(), 2);
+        assert_eq!(p.sketches.len(), 2);
+        let zones = p.zone_maps();
         // Column 0 holds 10.0..=59.0 over the valid rows; padding zeros
         // must not drag min down.
-        assert_eq!(p.zones[0].min, 10.0);
-        assert_eq!(p.zones[0].max, 59.0);
-        assert_eq!(p.zones[0].nans, 0);
+        assert_eq!(zones[0].min, 10.0);
+        assert_eq!(zones[0].max, 59.0);
+        assert_eq!(zones[0].nans, 0);
+        // The sketch moments carry the full fold, not just the bounds.
+        assert_eq!(p.sketches[0].moments.count, 50.0);
+        assert_eq!(p.sketches[0].moments.sum, (10..60).sum::<i32>() as f64);
+        // Keys step by 10, values by 1 → slope 0.1.
+        assert!((p.sketches[0].trend.slope().unwrap() - 0.1).abs() < 1e-9);
 
         let q = Partition::from_rows(
             1,
             vec![1, 2, 3],
             vec![vec![5.0, f32::NAN, -2.0], vec![0.0, 0.0, 0.0]],
         );
-        assert_eq!(q.zones[0].min, -2.0);
-        assert_eq!(q.zones[0].max, 5.0);
-        assert_eq!(q.zones[0].nans, 1);
+        let zones = q.zone_maps();
+        assert_eq!(zones[0].min, -2.0);
+        assert_eq!(zones[0].max, 5.0);
+        assert_eq!(zones[0].nans, 1);
+        assert_eq!(q.sketches[0].moments.nans, 1.0);
     }
 
     #[test]

@@ -14,20 +14,24 @@
 use std::path::Path;
 
 use crate::error::{OsebaError, Result};
-use crate::index::{Cias, PartitionMeta, ZoneMap};
+use crate::index::{Cias, ColumnSketch, PartitionMeta, ZoneMap};
 use crate::storage::Schema;
 use crate::util::json::Json;
+use crate::util::stats::{Moments, TrendPartial};
 
 /// Manifest file name inside a store directory.
 pub const MANIFEST_FILE: &str = "manifest.json";
 /// `format` field value identifying a store manifest.
 pub const FORMAT: &str = "oseba-store";
 /// Current manifest version. Version 2 added per-segment `zones` (the
-/// per-column value-domain zone maps the query planner prunes by). v1
-/// manifests are still readable: their zones default to the unbounded
-/// sentinel, which never prunes (conservative, correct); `save` rewrites
-/// them at v2 with real zones.
-pub const VERSION: usize = 2;
+/// per-column value-domain zone maps the query planner prunes by);
+/// version 3 adds per-segment `sketch` — the per-column aggregate
+/// sketches (moments + trend partials) the planner answers fully-covered
+/// partitions from without faulting them in. Older manifests are still
+/// readable: v1 zones default to the unbounded sentinel (never prunes),
+/// and pre-v3 sketches default to the "no sketch → always scan" sentinel
+/// (`None`); `save` rewrites at the current version with real metadata.
+pub const VERSION: usize = 3;
 /// Oldest manifest version `open` still accepts.
 pub const MIN_VERSION: usize = 1;
 
@@ -41,6 +45,11 @@ pub struct SegmentEntry {
     /// Per-column zone maps (one per schema value column), so cold
     /// partitions can be zone-pruned before any fault-in.
     pub zones: Vec<ZoneMap>,
+    /// Per-column aggregate sketches (one per schema value column), so
+    /// fully-covered cold partitions are answered with zero fault-in.
+    /// `None` for pre-v3 manifests, or when a sketch holds a non-finite
+    /// sum JSON cannot carry — both mean "always scan", never wrong.
+    pub sketches: Option<Vec<ColumnSketch>>,
 }
 
 /// The parsed/serializable manifest.
@@ -152,6 +161,70 @@ fn zone_from_json(v: &Json) -> Result<ZoneMap> {
     })
 }
 
+/// JSON rendering of one column's aggregate sketch. Every field of the
+/// moments and trend partials is finite for real data (NaNs are counted
+/// out of the sums by construction); a non-finite field (an `inf` data
+/// value summed in) cannot survive JSON, so the caller degrades the whole
+/// segment's sketch list to `null` instead — "no sketch → always scan".
+fn sketch_to_json(s: &ColumnSketch) -> Json {
+    let m = &s.moments;
+    let t = &s.trend;
+    Json::obj(vec![
+        ("max", Json::num(m.max as f64)),
+        ("min", Json::num(m.min as f64)),
+        ("sum", Json::num(m.sum)),
+        ("sumsq", Json::num(m.sumsq)),
+        ("count", Json::num(m.count)),
+        ("nans", Json::num(m.nans)),
+        (
+            "trend",
+            Json::obj(vec![
+                ("n", Json::num(t.n)),
+                ("mx", Json::num(t.mean_x)),
+                ("my", Json::num(t.mean_y)),
+                ("sxx", Json::num(t.sxx)),
+                ("sxy", Json::num(t.sxy)),
+                ("nans", Json::num(t.nans)),
+            ]),
+        ),
+    ])
+}
+
+/// Whether every numeric field of a sketch survives JSON (finite).
+fn sketch_fits_json(s: &ColumnSketch) -> bool {
+    let m = &s.moments;
+    let t = &s.trend;
+    [m.max as f64, m.min as f64, m.sum, m.sumsq, m.count, m.nans].iter().all(|v| v.is_finite())
+        && [t.n, t.mean_x, t.mean_y, t.sxx, t.sxy, t.nans].iter().all(|v| v.is_finite())
+}
+
+fn sketch_from_json(v: &Json) -> Result<ColumnSketch> {
+    let num = |obj: &Json, name: &str| -> Result<f64> {
+        obj.require(name)?.as_f64().ok_or_else(|| {
+            OsebaError::Json(format!("sketch field '{name}' must be a number"))
+        })
+    };
+    let t = v.require("trend")?;
+    Ok(ColumnSketch {
+        moments: Moments {
+            max: num(v, "max")? as f32,
+            min: num(v, "min")? as f32,
+            sum: num(v, "sum")?,
+            sumsq: num(v, "sumsq")?,
+            count: num(v, "count")?,
+            nans: num(v, "nans")?,
+        },
+        trend: TrendPartial {
+            n: num(t, "n")?,
+            mean_x: num(t, "mx")?,
+            mean_y: num(t, "my")?,
+            sxx: num(t, "sxx")?,
+            sxy: num(t, "sxy")?,
+            nans: num(t, "nans")?,
+        },
+    })
+}
+
 impl StoreManifest {
     /// Serialize. Fails if any key magnitude exceeds JSON-safe 2^53.
     pub fn to_json(&self) -> Result<Json> {
@@ -192,6 +265,13 @@ impl StoreManifest {
                                 "zones".into(),
                                 Json::arr(e.zones.iter().map(zone_to_json).collect()),
                             );
+                            let sketch = match &e.sketches {
+                                Some(sks) if sks.iter().all(sketch_fits_json) => {
+                                    Json::arr(sks.iter().map(sketch_to_json).collect())
+                                }
+                                _ => Json::Null,
+                            };
+                            obj.insert("sketch".into(), sketch);
                             Json::Obj(obj)
                         })
                         .collect(),
@@ -302,7 +382,40 @@ impl StoreManifest {
                 }
                 zones
             };
-            segments.push(SegmentEntry { file, meta, zones });
+            // Pre-v3 manifests predate aggregate sketches: those segments
+            // carry the "no sketch → always scan" sentinel. From v3 on the
+            // field is mandatory (`null` allowed for non-finite sketches),
+            // and a sketch list that disagrees with the schema's value
+            // column count is rejected outright — a silent index mismatch
+            // here would answer queries from the wrong column's sums.
+            let sketches = if version < 3 {
+                None
+            } else {
+                match s.require("sketch")? {
+                    Json::Null => None,
+                    Json::Arr(items) => {
+                        if items.len() != schema.width() {
+                            return Err(OsebaError::Store(format!(
+                                "segment {i} has {} sketch columns for {} schema columns",
+                                items.len(),
+                                schema.width()
+                            )));
+                        }
+                        Some(
+                            items
+                                .iter()
+                                .map(sketch_from_json)
+                                .collect::<Result<Vec<_>>>()?,
+                        )
+                    }
+                    _ => {
+                        return Err(OsebaError::Json(format!(
+                            "segment {i}: 'sketch' must be an array or null"
+                        )))
+                    }
+                }
+            };
+            segments.push(SegmentEntry { file, meta, zones, sketches });
         }
         if segments.is_empty() {
             return Err(OsebaError::Store("manifest lists no segments".into()));
@@ -395,6 +508,29 @@ mod tests {
     use crate::index::{ContentIndex, RangeQuery};
     use crate::testing::temp_dir;
 
+    /// A sketch with awkward (non-round) floats, to exercise exact JSON
+    /// round-tripping of f64 sums.
+    fn sample_sketch(salt: f64) -> ColumnSketch {
+        ColumnSketch {
+            moments: Moments {
+                max: 42.125,
+                min: -1.5,
+                sum: 12345.678_901_234 + salt,
+                sumsq: 9.876_543_210_123e7 + salt,
+                count: 100.0,
+                nans: 3.0,
+            },
+            trend: TrendPartial {
+                n: 100.0,
+                mean_x: 4.95e3 + salt,
+                mean_y: 123.456_789_012_34,
+                sxx: 8.3325e5 + salt / 3.0,
+                sxy: 2.083e4 + salt,
+                nans: 3.0,
+            },
+        }
+    }
+
     fn sample(nparts: usize) -> StoreManifest {
         let rows = 100usize;
         let metas: Vec<PartitionMeta> = (0..nparts)
@@ -418,6 +554,10 @@ mod tests {
                         ZoneMap { min: -1.5, max: 42.0, nans: 0 },
                         ZoneMap { min: 0.0, max: 9.0, nans: 3 },
                     ],
+                    sketches: Some(vec![
+                        sample_sketch(m.id as f64 / 7.0),
+                        sample_sketch(m.id as f64 / 11.0),
+                    ]),
                 })
                 .collect(),
             index,
@@ -478,20 +618,32 @@ mod tests {
         assert!(StoreManifest::from_json(&Json::parse(&bad).unwrap()).is_err());
     }
 
+    /// Downgrade a serialized manifest to `version`, stripping the fields
+    /// that version predates ("zones" < 2, "sketch" < 3).
+    fn downgrade(doc: &Json, version: usize) -> Json {
+        let Json::Obj(mut top) = doc.clone() else { panic!("manifest is an object") };
+        top.insert("version".into(), Json::num(version as f64));
+        if let Some(Json::Arr(segs)) = top.get_mut("segments") {
+            for s in segs {
+                let Json::Obj(seg) = s else { panic!("segment is an object") };
+                if version < 2 {
+                    seg.remove("zones");
+                }
+                if version < 3 {
+                    seg.remove("sketch");
+                }
+            }
+        }
+        Json::Obj(top)
+    }
+
     #[test]
-    fn v1_manifest_still_opens_with_unbounded_zones() {
-        // A manifest saved before zone maps existed (version 1, no
-        // `zones` field) must stay readable: its zones default to the
-        // never-prune sentinel, so old stores are not bricked.
-        let good = sample(2).to_json().unwrap().to_string();
-        let v1 = good
-            .replace("\"version\":2", "\"version\":1")
-            .replace(
-                r#","zones":[{"max":42,"min":-1.5,"nans":0},{"max":9,"min":0,"nans":3}]"#,
-                "",
-            );
-        assert!(!v1.contains("zones"), "surgery must strip every zones field");
-        let m = StoreManifest::from_json(&Json::parse(&v1).unwrap()).unwrap();
+    fn old_manifests_still_open_with_conservative_sentinels() {
+        let doc = sample(2).to_json().unwrap();
+
+        // v1 (no zones, no sketch): unbounded zones — never prunes — and
+        // no sketches — always scans.
+        let m = StoreManifest::from_json(&downgrade(&doc, 1)).unwrap();
         for e in &m.segments {
             assert_eq!(e.zones.len(), 2);
             for z in &e.zones {
@@ -499,10 +651,74 @@ mod tests {
                 assert_eq!(z.max, f32::INFINITY);
                 assert_eq!(z.nans, 0);
             }
+            assert!(e.sketches.is_none(), "v1 has no sketches");
         }
+
+        // v2 (zones, no sketch): real zones survive, sketches absent.
+        let m = StoreManifest::from_json(&downgrade(&doc, 2)).unwrap();
+        for e in &m.segments {
+            assert_eq!(e.zones[0].max, 42.0);
+            assert!(e.sketches.is_none(), "v2 has no sketches");
+        }
+
         // Unknown future versions are still rejected.
-        let v9 = good.replace("\"version\":2", "\"version\":9");
+        let good = doc.to_string();
+        let v9 = good.replace("\"version\":3", "\"version\":9");
         assert!(StoreManifest::from_json(&Json::parse(&v9).unwrap()).is_err());
+    }
+
+    #[test]
+    fn sketches_roundtrip_exactly_and_null_means_scan() {
+        let m = sample(3);
+        let back =
+            StoreManifest::from_json(&Json::parse(&m.to_json().unwrap().to_string()).unwrap())
+                .unwrap();
+        // Bit-exact f64 round trip: the covered-partition answer after
+        // open must equal the answer before save.
+        assert_eq!(back.segments, m.segments);
+
+        // A sketch with a non-finite sum degrades to null on write...
+        let mut inf = sample(2);
+        inf.segments[1].sketches.as_mut().unwrap()[0].moments.sum = f64::INFINITY;
+        let text = inf.to_json().unwrap().to_string();
+        let back = StoreManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(back.segments[1].sketches.is_none(), "non-finite → no sketch");
+        assert!(back.segments[0].sketches.is_some(), "other segments keep theirs");
+    }
+
+    #[test]
+    fn sketch_width_mismatch_is_a_clear_store_error() {
+        // A v3 manifest whose sketch list disagrees with the schema's
+        // value-column count must be an explicit `OsebaError::Store`, not
+        // a silent column-index mismatch at query time.
+        let doc = sample(2).to_json().unwrap();
+        let Json::Obj(mut top) = doc.clone() else { panic!() };
+        if let Some(Json::Arr(segs)) = top.get_mut("segments") {
+            let Json::Obj(seg) = &mut segs[0] else { panic!() };
+            let Some(Json::Arr(sks)) = seg.get_mut("sketch") else { panic!() };
+            sks.push(sks[0].clone()); // 3 sketch columns for a 2-column schema
+        }
+        let err = StoreManifest::from_json(&Json::Obj(top)).unwrap_err();
+        assert!(matches!(err, OsebaError::Store(_)), "got: {err:?}");
+        assert!(
+            err.to_string().contains("sketch columns"),
+            "error must name the mismatch, got: {err}"
+        );
+
+        // Wrong type for the sketch field is also a clean error.
+        let bad = doc.to_string().replacen("\"sketch\":[", "\"sketch\":7,\"x\":[", 1);
+        assert!(StoreManifest::from_json(&Json::parse(&bad).unwrap()).is_err());
+
+        // A v3 manifest with the sketch field missing entirely is rejected
+        // (the field is mandatory from v3 on; null is the opt-out).
+        let m = StoreManifest::from_json(&downgrade(&doc, 3));
+        assert!(m.is_ok(), "downgrade(3) keeps sketch — control arm");
+        let Json::Obj(mut top) = doc else { panic!() };
+        if let Some(Json::Arr(segs)) = top.get_mut("segments") {
+            let Json::Obj(seg) = &mut segs[0] else { panic!() };
+            seg.remove("sketch");
+        }
+        assert!(StoreManifest::from_json(&Json::Obj(top)).is_err());
     }
 
     #[test]

@@ -21,7 +21,7 @@ use std::io::Write;
 use std::path::Path;
 
 use crate::error::{OsebaError, Result};
-use crate::index::types::zone_maps_of;
+use crate::index::types::{sketches_of, ColumnSketch};
 use crate::storage::{Partition, BLOCK_ROWS};
 use crate::store::crc32::{crc32, Crc32};
 
@@ -127,6 +127,20 @@ impl<'a> Reader<'a> {
 /// Decode one partition from the `.oseg` byte layout. `path` is only used
 /// to name the file in errors.
 pub fn decode_segment(path: &Path, buf: &[u8]) -> Result<Partition> {
+    decode_segment_with(path, buf, None)
+}
+
+/// [`decode_segment`], optionally reusing already-known aggregate
+/// sketches (the tiered store's slot table keeps the seal-time sketches
+/// resident) instead of recomputing them from the decoded data — the
+/// fault-in fast path. Pass `None` to recompute; a `Some` whose length
+/// does not match the decoded column count is ignored (recomputed), so a
+/// caller can never attach mismatched metadata.
+pub(crate) fn decode_segment_with(
+    path: &Path,
+    buf: &[u8],
+    known_sketches: Option<Vec<ColumnSketch>>,
+) -> Result<Partition> {
     let mut r = Reader { path, buf, pos: 0 };
 
     let magic = r.take(4, "magic")?;
@@ -211,17 +225,36 @@ pub fn decode_segment(path: &Path, buf: &[u8]) -> Result<Partition> {
         columns.push(col);
     }
 
-    // Zone maps are derived metadata: recompute from the verified data
-    // (cheaper than persisting them per segment, and always consistent).
-    let zones = zone_maps_of(&columns, rows);
-    Ok(Partition { id, keys, columns, rows, padded_rows, zones })
+    // Every `Partition` carries valid sketches as an invariant: a decoded
+    // partition handed to `TieredStore::insert` (or any future consumer
+    // of `Partition::sketches`) must not smuggle in empty metadata that
+    // would mis-prune. The fault-in fast path attaches the seal-time
+    // sketches the store's slot table already holds (bit-identical by the
+    // shared-fold construction); without them — bare `read_segment`, or a
+    // store opened from a pre-v3 manifest — they are recomputed from the
+    // verified data (one extra O(rows) pass beside the CRC + parse; the
+    // blockwise fold matches seal time exactly).
+    let sketches = match known_sketches {
+        Some(sks) if sks.len() == width => sks,
+        _ => sketches_of(&keys, &columns, BLOCK_ROWS),
+    };
+    Ok(Partition { id, keys, columns, rows, padded_rows, sketches })
 }
 
 /// Read a partition back from `path`, verifying every section CRC.
 pub fn read_segment(path: impl AsRef<Path>) -> Result<Partition> {
+    read_segment_with(path, None)
+}
+
+/// [`read_segment`] with optional known sketches (see
+/// [`decode_segment_with`]) — the tiered store's fault-in entry point.
+pub(crate) fn read_segment_with(
+    path: impl AsRef<Path>,
+    known_sketches: Option<Vec<ColumnSketch>>,
+) -> Result<Partition> {
     let path = path.as_ref();
     let buf = std::fs::read(path).map_err(|e| OsebaError::io(path, e))?;
-    decode_segment(path, &buf)
+    decode_segment_with(path, &buf, known_sketches)
 }
 
 #[cfg(test)]

@@ -24,10 +24,10 @@ use std::sync::{Arc, Mutex};
 use crate::engine::memory::MemoryTracker;
 use crate::error::{OsebaError, Result};
 use crate::index::builder::detect_step;
-use crate::index::{Cias, PartitionMeta, ZoneMap};
+use crate::index::{Cias, ColumnSketch, PartitionMeta, ZoneMap};
 use crate::storage::{Partition, Schema, BLOCK_ROWS};
 use crate::store::manifest::{SegmentEntry, StoreManifest};
-use crate::store::segment::{read_segment, segment_len, write_segment};
+use crate::store::segment::{read_segment_with, segment_len, write_segment};
 
 /// Where a partition currently lives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -69,6 +69,11 @@ struct Slot {
     /// Per-column zone maps — resident metadata, so a Cold partition can
     /// be zone-pruned without faulting it in.
     zones: Vec<ZoneMap>,
+    /// Per-column aggregate sketches — resident metadata surviving
+    /// eviction, so a fully-covered Cold partition is answered with
+    /// **zero fault-in**. `None` for stores opened from a pre-v3 manifest
+    /// (those partitions always scan).
+    sketches: Option<Vec<ColumnSketch>>,
     /// In-memory footprint (keys + padded columns) when hot.
     bytes: usize,
     /// Segment file name relative to the store directory.
@@ -160,6 +165,7 @@ impl TieredStore {
             .map(|e| Slot {
                 meta: e.meta,
                 zones: e.zones.clone(),
+                sketches: e.sketches.clone(),
                 bytes: partition_bytes(e.meta.rows, width),
                 file: e.file.clone(),
                 on_disk: true,
@@ -228,7 +234,8 @@ impl TieredStore {
 
         let mut slot = Slot {
             meta,
-            zones: part.zones.clone(),
+            zones: part.zone_maps(),
+            sketches: Some(part.sketches.clone()),
             bytes,
             file,
             on_disk: false,
@@ -275,9 +282,12 @@ impl TieredStore {
             }
         }
 
-        // Cold: read + verify the segment, then make room and pin it.
+        // Cold: read + verify the segment, then make room and pin it. The
+        // slot's resident seal-time sketches are attached to the decoded
+        // partition (skipping the recompute pass); a pre-v3-manifest slot
+        // without sketches falls back to recomputing them from the data.
         let path = self.dir.join(&inner.slots[id].file);
-        let part = read_segment(&path)?;
+        let part = read_segment_with(&path, inner.slots[id].sketches.clone())?;
         let expect = inner.slots[id].meta;
         if part.id != id
             || part.rows != expect.rows
@@ -416,6 +426,7 @@ impl TieredStore {
                 file: s.file.clone(),
                 meta: s.meta,
                 zones: s.zones.clone(),
+                sketches: s.sketches.clone(),
             })
             .collect();
         StoreManifest::for_segments(self.schema.clone(), segments)?.save(&self.dir)
@@ -448,6 +459,26 @@ impl TieredStore {
     /// residency change, no fault-in. `None` for an unknown id.
     pub fn zone_maps(&self, id: usize) -> Option<Vec<ZoneMap>> {
         self.inner.lock().unwrap().slots.get(id).map(|s| s.zones.clone())
+    }
+
+    /// The aggregate sketch of one column of partition `id` — pure
+    /// metadata: no residency change, no fault-in. `None` for an unknown
+    /// id, an out-of-range column, or a store opened from a pre-v3
+    /// manifest (no sketch → the partition always scans).
+    pub fn sketch(&self, id: usize, column: usize) -> Option<ColumnSketch> {
+        self.inner
+            .lock()
+            .unwrap()
+            .slots
+            .get(id)
+            .and_then(|s| s.sketches.as_ref())
+            .and_then(|sk| sk.get(column).copied())
+    }
+
+    /// Metadata of partition `id` (`None` for an unknown id) — O(1), no
+    /// residency change.
+    pub fn meta(&self, id: usize) -> Option<PartitionMeta> {
+        self.inner.lock().unwrap().slots.get(id).map(|s| s.meta)
     }
 
     /// Number of partitions the store holds (Hot + Cold).
@@ -665,7 +696,10 @@ mod tests {
             TieredStore::create(&dir, Schema::stock(), MemoryTracker::unbounded()).unwrap();
         fill(&store, &ps);
         let want: Vec<_> = (0..3).map(|i| store.zone_maps(i).unwrap()).collect();
-        assert_eq!(want[0], ps[0].zones);
+        assert_eq!(want[0], ps[0].zone_maps());
+        let want_sk: Vec<_> =
+            (0..3).map(|i| store.sketch(i, 0).unwrap()).collect();
+        assert_eq!(want_sk[1], ps[1].sketches[0]);
         store.save().unwrap();
         drop(store);
 
@@ -674,8 +708,18 @@ mod tests {
         for (i, w) in want.iter().enumerate() {
             assert_eq!(back.zone_maps(i).as_ref(), Some(w), "partition {i}");
         }
+        // Sketches round-trip the manifest bit-for-bit and stay available
+        // while every partition is Cold — zero fault-in.
+        for (i, w) in want_sk.iter().enumerate() {
+            assert_eq!(back.sketch(i, 0), Some(*w), "partition {i}");
+            assert_eq!(back.residency(i), Some(Residency::Cold));
+        }
+        assert_eq!(back.sketch(0, 1), Some(ps[0].sketches[1]));
         assert_eq!(back.counters(), StoreCounters::default(), "metadata only");
         assert!(back.zone_maps(99).is_none());
+        assert!(back.sketch(99, 0).is_none());
+        assert!(back.sketch(0, 9).is_none());
+        assert_eq!(back.meta(1).map(|m| m.rows), Some(4096));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -152,9 +152,185 @@ impl Moments {
 
     /// Population standard deviation (matches the paper's "standard
     /// deviation" statistic and `ref.py::finalize_stats`).
+    ///
+    /// The raw-moment variance `E[x²] − E[x]²` cancels catastrophically
+    /// for large-magnitude data (sums ~1e16 differing in their last few
+    /// ulps), so the variance is clamped at 0 before the square root —
+    /// a merged partial can therefore never finalize to a NaN `std`.
     pub fn std(&self) -> f64 {
         let m = self.mean();
         (self.sumsq / self.count - m * m).max(0.0).sqrt()
+    }
+}
+
+/// Number of independent accumulator lanes [`fold_stats_f32`] uses. Eight
+/// f32 lanes break the serial add dependency so the scalar loop pipelines
+/// (and autovectorizes to one SIMD register on SSE/NEON).
+pub const FOLD_LANES: usize = 8;
+
+/// The shared f32 statistics fold: max / min / sum / sum-of-squares over
+/// the non-NaN values of `xs`, plus the NaN count.
+///
+/// This is **the** definition of a kernel-block partial: the native
+/// backend's `segment_stats` and the seal-time aggregate sketches
+/// ([`crate::index::ColumnSketch`]) both call it, so a sketch partial is
+/// bit-identical to the partial a scan of the same rows would produce —
+/// the invariant the aggregate-pushdown property tests assert.
+///
+/// Implementation: [`FOLD_LANES`] independent accumulators per pass
+/// (combined in fixed lane order at the end, so the result is
+/// deterministic), with branchless NaN handling — a NaN contributes 0 to
+/// the sums, is invisible to max/min (IEEE `max(acc, NaN) == acc`), and
+/// increments the NaN count.
+pub fn fold_stats_f32(xs: &[f32]) -> (f32, f32, f32, f32, usize) {
+    const NEG: f32 = -3.4e38;
+    const POS: f32 = 3.4e38;
+    let mut mx = [NEG; FOLD_LANES];
+    let mut mn = [POS; FOLD_LANES];
+    let mut sum = [0f32; FOLD_LANES];
+    let mut sumsq = [0f32; FOLD_LANES];
+    let mut nans = [0usize; FOLD_LANES];
+    let mut chunks = xs.chunks_exact(FOLD_LANES);
+    for chunk in &mut chunks {
+        for (l, &x) in chunk.iter().enumerate() {
+            let nan = x.is_nan();
+            let v = if nan { 0.0 } else { x };
+            // IEEE max/min return the non-NaN operand, so feeding the raw
+            // value is safe and keeps the loop branch-free.
+            mx[l] = mx[l].max(x);
+            mn[l] = mn[l].min(x);
+            sum[l] += v;
+            sumsq[l] += v * v;
+            nans[l] += nan as usize;
+        }
+    }
+    for (l, &x) in chunks.remainder().iter().enumerate() {
+        let nan = x.is_nan();
+        let v = if nan { 0.0 } else { x };
+        mx[l] = mx[l].max(x);
+        mn[l] = mn[l].min(x);
+        sum[l] += v;
+        sumsq[l] += v * v;
+        nans[l] += nan as usize;
+    }
+    // Fixed lane-order combine: deterministic for a given input slice.
+    let mut out = (NEG, POS, 0f32, 0f32, 0usize);
+    for l in 0..FOLD_LANES {
+        out.0 = out.0.max(mx[l]);
+        out.1 = out.1.min(mn[l]);
+        out.2 += sum[l];
+        out.3 += sumsq[l];
+        out.4 += nans[l];
+    }
+    out
+}
+
+/// Mergeable simple-linear-regression partial over (key, value) pairs:
+/// everything a least-squares fit `value ≈ slope·key + intercept` needs,
+/// carried in **centered co-moment** form (means + Σdx², Σdx·dy) rather
+/// than raw power sums. The raw form (`n·Σx² − (Σx)²`) cancels
+/// catastrophically for large-magnitude keys with a small spread —
+/// epoch-millisecond timestamps spanning a minute would yield a pure-noise
+/// denominator — while the centered co-moments stay conditioned on the
+/// *spread*, not the magnitude. Partials merge with the standard pairwise
+/// (Chan et al.) update, so per-partition partials computed at seal time
+/// (the aggregate sketch) and partials scanned from raw edge rows compose
+/// into the same fit (mathematically associative; f64 rounding may move
+/// the last ulps when the merge tree regroups).
+///
+/// Same NaN policy as [`Moments`]: a NaN value is counted in `nans` and
+/// excluded from the fit (keys are integers and cannot be NaN).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrendPartial {
+    /// Number of (key, value) pairs folded in (value non-NaN).
+    pub n: f64,
+    /// Mean key.
+    pub mean_x: f64,
+    /// Mean value.
+    pub mean_y: f64,
+    /// Centered key second moment Σ(x − mean_x)².
+    pub sxx: f64,
+    /// Centered co-moment Σ(x − mean_x)(y − mean_y).
+    pub sxy: f64,
+    /// Number of pairs excluded because their value was NaN.
+    pub nans: f64,
+}
+
+impl TrendPartial {
+    /// The identity (empty) partial.
+    pub const EMPTY: TrendPartial =
+        TrendPartial { n: 0.0, mean_x: 0.0, mean_y: 0.0, sxx: 0.0, sxy: 0.0, nans: 0.0 };
+
+    /// Single-pass fold of parallel key/value slices (`keys.len()` pairs;
+    /// `values` may be longer — padding is ignored).
+    pub fn scan(keys: &[i64], values: &[f32]) -> TrendPartial {
+        let mut t = TrendPartial::EMPTY;
+        for (&k, &v) in keys.iter().zip(values) {
+            t.absorb(k, v);
+        }
+        t
+    }
+
+    /// Fold one (key, value) pair in (NaN value is counted, not folded) —
+    /// the Welford-style running update.
+    pub fn absorb(&mut self, key: i64, value: f32) {
+        if value.is_nan() {
+            self.nans += 1.0;
+            return;
+        }
+        let x = key as f64;
+        let y = value as f64;
+        self.n += 1.0;
+        let dx = x - self.mean_x;
+        self.mean_x += dx / self.n;
+        let dy = y - self.mean_y;
+        self.mean_y += dy / self.n;
+        // Co-moment updates pair the pre-update x-delta with the
+        // post-update means (the standard numerically stable form).
+        self.sxy += dx * (y - self.mean_y);
+        self.sxx += dx * (x - self.mean_x);
+    }
+
+    /// Merge two partials (pairwise co-moment combination). Merging with
+    /// the empty partial is exact.
+    pub fn merge(self, o: TrendPartial) -> TrendPartial {
+        if self.n == 0.0 {
+            return TrendPartial { nans: self.nans + o.nans, ..o };
+        }
+        if o.n == 0.0 {
+            return TrendPartial { nans: self.nans + o.nans, ..self };
+        }
+        let n = self.n + o.n;
+        let dx = o.mean_x - self.mean_x;
+        let dy = o.mean_y - self.mean_y;
+        let w = self.n * o.n / n;
+        TrendPartial {
+            n,
+            mean_x: self.mean_x + dx * o.n / n,
+            mean_y: self.mean_y + dy * o.n / n,
+            sxx: self.sxx + o.sxx + dx * dx * w,
+            sxy: self.sxy + o.sxy + dx * dy * w,
+            nans: self.nans + o.nans,
+        }
+    }
+
+    /// Whether no pair has been folded in.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0.0
+    }
+
+    /// Least-squares slope, or `None` when fewer than two distinct keys
+    /// were folded in (a vertical/degenerate fit).
+    pub fn slope(&self) -> Option<f64> {
+        if self.n < 2.0 || self.sxx <= 0.0 {
+            return None;
+        }
+        Some(self.sxy / self.sxx)
+    }
+
+    /// Least-squares intercept (requires a defined [`Self::slope`]).
+    pub fn intercept(&self) -> Option<f64> {
+        self.slope().map(|b| self.mean_y - b * self.mean_x)
     }
 }
 
@@ -280,6 +456,178 @@ mod tests {
     fn distance_l2_is_sqrt() {
         let d = DistancePartial { l1: 0.0, l2sq: 9.0, linf: 0.0, count: 1.0, nans: 0.0 };
         assert_eq!(d.l2(), 3.0);
+    }
+
+    #[test]
+    fn fold_stats_matches_sequential_on_integer_data() {
+        // Integer-valued f32 data sums exactly in any association, so the
+        // 8-lane fold must agree with a sequential oracle bit-for-bit.
+        let xs: Vec<f32> = (0..1000).map(|i| ((i * 7) % 97) as f32).collect();
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let (mx, mn, sum, sumsq, nans) = fold_stats_f32(&xs[..len]);
+            let mut want = Moments::EMPTY;
+            for &x in &xs[..len] {
+                want.absorb(x);
+            }
+            if len == 0 {
+                assert_eq!(sum, 0.0);
+                assert!(mx < -1e38 && mn > 1e38);
+            } else {
+                assert_eq!(mx, want.max, "len={len}");
+                assert_eq!(mn, want.min, "len={len}");
+                assert_eq!(sum as f64, want.sum, "len={len}");
+                assert_eq!(sumsq as f64, want.sumsq, "len={len}");
+            }
+            assert_eq!(nans, 0);
+        }
+    }
+
+    #[test]
+    fn fold_stats_counts_nans_out() {
+        let mut xs = vec![1.0f32; 100];
+        xs[3] = f32::NAN;
+        xs[64] = f32::NAN;
+        xs[99] = 5.0;
+        let (mx, mn, sum, sumsq, nans) = fold_stats_f32(&xs);
+        assert_eq!(nans, 2);
+        assert_eq!(mx, 5.0);
+        assert_eq!(mn, 1.0);
+        assert_eq!(sum, 97.0 + 5.0);
+        assert_eq!(sumsq, 97.0 + 25.0);
+        // All-NaN input: sentinels + full count.
+        let (mx, mn, sum, _, nans) = fold_stats_f32(&[f32::NAN; 11]);
+        assert!(mx < -1e38 && mn > 1e38);
+        assert_eq!(sum, 0.0);
+        assert_eq!(nans, 11);
+    }
+
+    #[test]
+    fn trend_partial_merge_matches_whole_scan() {
+        let keys: Vec<i64> = (0..500).map(|i| i * 10).collect();
+        let vals: Vec<f32> = keys.iter().map(|&k| 3.0 + 0.25 * k as f32).collect();
+        let whole = TrendPartial::scan(&keys, &vals);
+        assert!((whole.slope().unwrap() - 0.25).abs() < 1e-9);
+        assert!((whole.intercept().unwrap() - 3.0).abs() < 1e-6);
+        for split in [1usize, 100, 499] {
+            let merged = TrendPartial::scan(&keys[..split], &vals[..split])
+                .merge(TrendPartial::scan(&keys[split..], &vals[split..]));
+            // Pairwise merge regroups the f64 arithmetic, so compare the
+            // fit (and the exact counts), not the partial bit patterns.
+            assert_eq!(merged.n, whole.n, "split={split}");
+            assert_eq!(merged.nans, whole.nans);
+            assert!((merged.mean_x - whole.mean_x).abs() < 1e-9, "split={split}");
+            assert!(
+                (merged.slope().unwrap() - whole.slope().unwrap()).abs() < 1e-9,
+                "split={split}"
+            );
+            assert!((merged.intercept().unwrap() - 3.0).abs() < 1e-6);
+        }
+        // The empty partial is an exact identity on both sides.
+        assert_eq!(whole.merge(TrendPartial::EMPTY), whole);
+        assert_eq!(TrendPartial::EMPTY.merge(whole), whole);
+        assert!(TrendPartial::EMPTY.is_empty());
+        assert!(TrendPartial::EMPTY.slope().is_none());
+    }
+
+    #[test]
+    fn trend_partial_survives_large_magnitude_keys() {
+        // Epoch-millisecond-scale keys spanning one minute: the raw-sum
+        // normal equations (`n·Σx² − (Σx)²`) are pure rounding noise at
+        // this magnitude; the centered co-moments must still recover the
+        // fit to high relative accuracy.
+        let base = 1_700_000_000_000i64;
+        let keys: Vec<i64> = (0..60_000).map(|i| base + i).collect();
+        let vals: Vec<f32> = (0..60_000).map(|i| 7.5 + 0.002 * i as f32).collect();
+        let whole = TrendPartial::scan(&keys, &vals);
+        let slope = whole.slope().expect("well-defined fit");
+        assert!((slope - 0.002).abs() < 1e-6, "slope {slope}");
+        // Predicted value at the middle key matches the data.
+        let b = whole.intercept().unwrap();
+        let mid = base + 30_000;
+        let predicted = slope * mid as f64 + b;
+        assert!((predicted - (7.5 + 0.002 * 30_000.0)).abs() < 0.05, "{predicted}");
+        // Merged from uneven chunks: fit still agrees tightly.
+        let merged = keys
+            .chunks(7_001)
+            .zip(vals.chunks(7_001))
+            .map(|(k, v)| TrendPartial::scan(k, v))
+            .fold(TrendPartial::EMPTY, TrendPartial::merge);
+        assert!((merged.slope().unwrap() - slope).abs() < 1e-8);
+    }
+
+    #[test]
+    fn trend_partial_nan_and_degenerate_cases() {
+        let mut t = TrendPartial::EMPTY;
+        t.absorb(1, 2.0);
+        t.absorb(2, f32::NAN);
+        t.absorb(3, 6.0);
+        assert_eq!(t.n, 2.0);
+        assert_eq!(t.nans, 1.0);
+        assert!((t.slope().unwrap() - 2.0).abs() < 1e-12);
+        // One point (or one repeated key) has no defined slope.
+        let one = TrendPartial::scan(&[5], &[1.0]);
+        assert!(one.slope().is_none() && one.intercept().is_none());
+        let repeated = TrendPartial::scan(&[5, 5, 5], &[1.0, 2.0, 3.0]);
+        assert!(repeated.slope().is_none());
+    }
+
+    #[test]
+    fn merged_std_survives_catastrophic_cancellation() {
+        // Numerical-stability stress (seeded): values at 1e8 scale make
+        // `E[x²] − E[x]²` cancel in its last few ulps. Merged partials
+        // must finalize to a *finite* std that matches a two-pass f64
+        // oracle within a scale-relative tolerance — and a constant
+        // series must clamp a tiny negative variance to exactly 0.
+        let mut rng = crate::util::rng::Xoshiro256::seeded(0xA66);
+        let scale = 1.0e8f32;
+        let xs: Vec<f32> =
+            (0..40_000).map(|_| scale + (rng.next_f32() - 0.5) * 1.0e3).collect();
+
+        // Two-pass f64 oracle.
+        let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64;
+        let var =
+            xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        let want_std = var.sqrt();
+        assert!(want_std > 100.0, "noise must be visible: {want_std}");
+
+        // f64 moments algebra, merged from uneven chunks.
+        let merged = xs
+            .chunks(977)
+            .map(Moments::scan)
+            .fold(Moments::EMPTY, Moments::merge);
+        let got = merged.std();
+        assert!(got.is_finite(), "merged std must never be NaN");
+        assert!(
+            (got - want_std).abs() < 0.05 * want_std,
+            "merged {got} vs oracle {want_std}"
+        );
+
+        // Constant series: zero variance must finalize to exactly 0.
+        let flat = vec![scale; 10_000];
+        let m = flat.chunks(333).map(Moments::scan).fold(Moments::EMPTY, Moments::merge);
+        assert_eq!(m.std(), 0.0);
+
+        // Direct negative-variance partial (sums rounded against each
+        // other, as large-scale merges produce): without the clamp this
+        // square-roots a negative number into NaN.
+        let hostile = Moments {
+            max: 1.0,
+            min: 1.0,
+            sum: 3.000_000_000_000_000_4,
+            sumsq: 2.999_999_999_999_999_6,
+            count: 3.0,
+            nans: 0.0,
+        };
+        assert!(hostile.sumsq / hostile.count < hostile.mean() * hostile.mean());
+        assert_eq!(hostile.std(), 0.0, "negative variance must clamp, not NaN");
+
+        // The f32 kernel-block fold at the same scale: far looser sums,
+        // but the finalized std must still be finite (clamped, never NaN)
+        // and bounded by a scale-relative error.
+        let (mx, mn, sum, sumsq, _) = fold_stats_f32(&flat);
+        let km = Moments::from_kernel(mx, mn, sum, sumsq, flat.len() as f32);
+        assert!(km.std().is_finite());
+        assert!(km.std() < 1e-2 * scale as f64, "kernel-fold std {}", km.std());
     }
 
     #[test]

@@ -8,7 +8,9 @@
 use std::sync::Arc;
 
 use oseba::config::{AppConfig, ContextConfig};
-use oseba::coordinator::{plan_query, Coordinator, Query, QueryOutput};
+use oseba::coordinator::{
+    plan_query, plan_query_opts, Coordinator, PlanOptions, Query, QueryOutput,
+};
 use oseba::engine::{Dataset, LiveConfig};
 use oseba::index::{Cias, ColumnPredicate, ContentIndex, PredOp, RangeQuery};
 use oseba::ingest::Chunk;
@@ -143,6 +145,186 @@ fn check_one(
         ),
     }
     pruned_plan.explain.zone_pruned
+}
+
+/// Run one predicate-free stats query through the sketch-answered arm
+/// (aggregate pushdown on) and the edge-scanned arm (pushdown off) and
+/// demand **bit-for-bit** agreement — a sketch partial is the partial the
+/// scan computes, merged in the same structure, so any drift is a bug.
+/// Cross-checks count/nans/extremes against a raw-batch scan oracle.
+/// Returns how many partitions the sketch answered.
+fn check_agg(
+    c: &Coordinator,
+    ds: &Dataset,
+    index: &dyn ContentIndex,
+    batch: &RecordBatch,
+    q: RangeQuery,
+    visible_rows: usize,
+    label: &str,
+) -> usize {
+    let query = Query::stats(q, 0);
+    let on = plan_query(ds, index, &query, true).unwrap();
+    let off = plan_query_opts(
+        ds,
+        index,
+        &query,
+        PlanOptions { zone_pruning: true, agg_pushdown: false },
+    )
+    .unwrap();
+    assert_eq!(off.explain.agg_answered, 0);
+    assert_eq!(on.explain.targeted, off.explain.targeted, "{label}: same targeting");
+    assert_eq!(
+        on.explain.estimated_rows + on.explain.rows_avoided,
+        off.explain.estimated_rows,
+        "{label}: covered rows move from estimated to avoided"
+    );
+
+    let got = c.execute_physical(ds, &on, &query);
+    let want = c.execute_physical(ds, &off, &query);
+
+    // Raw-batch scan oracle over the visible rows.
+    let mut count = 0u64;
+    let mut nans = 0u64;
+    let mut mx = f32::MIN;
+    let mut mn = f32::MAX;
+    for r in 0..visible_rows {
+        let k = batch.keys[r];
+        if k < q.lo || k > q.hi {
+            continue;
+        }
+        let x = batch.columns[0][r];
+        if x.is_nan() {
+            nans += 1;
+            continue;
+        }
+        count += 1;
+        mx = mx.max(x);
+        mn = mn.min(x);
+    }
+
+    match (got, want) {
+        (Ok(QueryOutput::Stats(g)), Ok(QueryOutput::Stats(w))) => {
+            assert_eq!(g, w, "{label}: sketch-answered vs edge-scanned differ for q={q:?}");
+            assert_eq!(g.count, count, "{label}: count vs oracle for q={q:?}");
+            assert_eq!(g.nans, nans, "{label}: nan count vs oracle");
+            if count > 0 {
+                assert_eq!(g.max, mx, "{label}: max vs oracle");
+                assert_eq!(g.min, mn, "{label}: min vs oracle");
+            }
+        }
+        (Err(_), Err(_)) => {
+            assert_eq!(count, 0, "{label}: both arms errored but oracle counts rows");
+        }
+        (g, w) => panic!("{label}: arms disagree on success for q={q:?}: {g:?} vs {w:?}"),
+    }
+    on.explain.agg_answered
+}
+
+#[test]
+fn sketch_answered_matches_scan_on_fixed_dataset() {
+    let batch = dataset(52);
+    let c = coordinator(None);
+    let ds = c.load(batch.clone(), PARTS).unwrap();
+    let index = c.build_index(&ds, oseba::coordinator::IndexKind::Cias).unwrap();
+    let mut rng = Xoshiro256::seeded(11);
+    let mut answered = 0usize;
+    for _ in 0..60 {
+        let q = random_range(&mut rng);
+        answered += check_agg(&c, &ds, index.as_ref(), &batch, q, ROWS, "fixed");
+    }
+    // Plus the guaranteed-covered full span (NaN-bearing column included).
+    answered += check_agg(
+        &c,
+        &ds,
+        index.as_ref(),
+        &batch,
+        RangeQuery { lo: 0, hi: i64::MAX },
+        ROWS,
+        "fixed-full",
+    );
+    assert!(answered > 0, "wide ranges must cover whole partitions");
+}
+
+#[test]
+fn sketch_answered_matches_scan_on_cold_tiered_dataset() {
+    let dir = oseba::testing::temp_dir("agg-tiered");
+    let batch = dataset(53);
+    let probe = oseba::storage::partition_batch_uniform(&batch, ROWS / PARTS).unwrap();
+    let one = probe[0].bytes();
+    let c = coordinator(Some(2 * one + one / 2));
+    let ds = c.load_tiered(batch.clone(), PARTS, &dir).unwrap();
+    let index = c.build_index(&ds, oseba::coordinator::IndexKind::Cias).unwrap();
+    let store = ds.store().unwrap().clone();
+    let mut rng = Xoshiro256::seeded(12);
+    let mut answered = 0usize;
+    for _ in 0..20 {
+        let q = random_range(&mut rng);
+        store.shrink(usize::MAX).unwrap(); // every partition Cold
+        answered += check_agg(&c, &ds, index.as_ref(), &batch, q, ROWS, "tiered");
+    }
+    // Plus a guaranteed-covered interior range (partitions 2..=5 whole).
+    store.shrink(usize::MAX).unwrap();
+    let part_keys = (ROWS / PARTS) as i64 * STEP;
+    let interior = RangeQuery { lo: 2 * part_keys, hi: 6 * part_keys - 1 };
+    answered += check_agg(&c, &ds, index.as_ref(), &batch, interior, ROWS, "tiered-int");
+    assert!(answered >= 4);
+
+    // The acceptance shape: a fully-covered query on an all-Cold store
+    // answers with zero faults and zero segment bytes.
+    store.shrink(usize::MAX).unwrap();
+    let before = store.counters();
+    let query = Query::stats(RangeQuery { lo: 0, hi: i64::MAX }, 0);
+    let plan = plan_query(&ds, index.as_ref(), &query, true).unwrap();
+    assert_eq!(plan.explain.agg_answered, PARTS);
+    c.execute_physical(&ds, &plan, &query).unwrap();
+    let d = store.counters().since(&before);
+    assert_eq!((d.faults, d.segment_bytes_read), (0, 0), "covered query touches no data");
+    c.context().unpersist(&ds);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn sketch_answered_matches_scan_on_live_snapshot() {
+    let batch = dataset(54);
+    let c = coordinator(None);
+    let live = c
+        .create_live(
+            Schema::stock(),
+            LiveConfig { rows_per_partition: ROWS / PARTS, max_asl: 8 },
+        )
+        .unwrap();
+    let mut lo = 0usize;
+    let mut rng = Xoshiro256::seeded(13);
+    while lo < ROWS {
+        let hi = (lo + 400 + rng.range_u64(0, 1_100) as usize).min(ROWS);
+        live.append(Chunk {
+            keys: batch.keys[lo..hi].to_vec(),
+            columns: batch.columns.iter().map(|c| c[lo..hi].to_vec()).collect(),
+        })
+        .unwrap();
+        lo = hi;
+    }
+    let snap = c.snapshot_live(&live);
+    let index = snap.index().expect("sealed partitions exist");
+    let visible_rows = snap.rows();
+    assert!(visible_rows > 0);
+    let mut answered = 0usize;
+    for _ in 0..20 {
+        let q = random_range(&mut rng);
+        answered +=
+            check_agg(&c, snap.dataset(), index, &batch, q, visible_rows, "live");
+    }
+    answered += check_agg(
+        &c,
+        snap.dataset(),
+        index,
+        &batch,
+        RangeQuery { lo: 0, hi: i64::MAX },
+        visible_rows,
+        "live-full",
+    );
+    assert!(answered > 0);
+    live.close();
 }
 
 #[test]

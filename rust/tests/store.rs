@@ -15,6 +15,7 @@ use oseba::runtime::NativeBackend;
 use oseba::storage::partition_batch_uniform;
 use oseba::store::{StoreManifest, TieredStore};
 use oseba::testing::{gen, temp_dir, Runner};
+use oseba::util::json::Json;
 
 fn coordinator(memory_budget: Option<usize>) -> Coordinator {
     let cfg = AppConfig {
@@ -147,6 +148,73 @@ fn tampered_manifest_is_rejected() {
     std::fs::remove_file(&path).unwrap();
     let err = c.open_store(&dir).unwrap_err();
     assert!(err.to_string().contains("manifest.json"), "got: {err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn manifest_sketch_width_mismatch_is_a_clear_store_error() {
+    // A v3 manifest whose per-segment sketch list disagrees with the
+    // schema's value-column count must fail `open` with an explicit
+    // `OsebaError::Store` naming the mismatch — never a silent
+    // column-index confusion when a covered query later reads the wrong
+    // column's sums.
+    let dir = temp_dir("bad-sketch");
+    save_store(&dir, 2_000, 2, 5);
+    let path = dir.join(oseba::store::MANIFEST_FILE);
+    let mut doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    {
+        let Json::Obj(top) = &mut doc else { panic!("manifest is an object") };
+        let Some(Json::Arr(segs)) = top.get_mut("segments") else { panic!("segments") };
+        let Json::Obj(seg) = &mut segs[0] else { panic!("segment object") };
+        let Some(Json::Arr(sks)) = seg.get_mut("sketch") else { panic!("sketch array") };
+        sks.push(sks[0].clone()); // 5 sketch columns for the 4-column schema
+    }
+    std::fs::write(&path, doc.to_string()).unwrap();
+
+    let c = coordinator(None);
+    let err = c.open_store(&dir).unwrap_err();
+    assert!(matches!(err, OsebaError::Store(_)), "got: {err:?}");
+    assert!(err.to_string().contains("sketch columns"), "got: {err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn opened_store_answers_covered_queries_from_manifest_sketches() {
+    use oseba::coordinator::{plan_query, Query};
+    let dir = temp_dir("open-sketch");
+    let rows = 8_000;
+    save_store(&dir, rows, 8, 0xA11);
+
+    // Tiny budget: everything stays Cold after open. A fully-covered
+    // query must still answer — from the manifest-restored sketches —
+    // with zero faults and zero segment bytes read.
+    let c = coordinator(Some(1));
+    let (ds, index) = c.open_store(&dir).unwrap();
+    let q = RangeQuery { lo: 0, hi: i64::MAX };
+    let query = Query::stats(q, 0);
+    let plan = plan_query(&ds, index.as_ref(), &query, true).unwrap();
+    assert_eq!(plan.explain.agg_answered, 8);
+    let store = ds.store().unwrap();
+    let before = store.counters();
+    let got = match c.execute_physical(&ds, &plan, &query).unwrap() {
+        oseba::coordinator::QueryOutput::Stats(s) => s,
+        other => panic!("stats output, got {other:?}"),
+    };
+    let d = store.counters().since(&before);
+    assert_eq!((d.faults, d.segment_bytes_read), (0, 0), "no data touched");
+    assert_eq!(got.count, rows as u64);
+
+    // And the answer is bit-identical to the fully-resident reference.
+    let cr = coordinator(None);
+    let rds = cr
+        .load(
+            ClimateGen { seed: 0xA11, ..Default::default() }.generate(rows),
+            8,
+        )
+        .unwrap();
+    let rindex = cr.build_index(&rds, IndexKind::Cias).unwrap();
+    let want = cr.analyze_period_oseba(&rds, rindex.as_ref(), q, 0).unwrap();
+    assert_bit_equal(&got, &want, "manifest sketches vs resident");
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
