@@ -14,17 +14,34 @@
 mod common;
 
 use oseba::analysis::five_periods;
-use oseba::bench::{bench, table, BenchConfig};
+use oseba::bench::{bench, table, BenchConfig, BenchResult};
 use oseba::config::BackendKind;
 use oseba::coordinator::{run_session, IndexKind, Method};
 use oseba::util::humansize;
+use oseba::util::json::Json;
 
 const BYTES: usize = 32 << 20;
+
+/// Timing rows as a JSON array for the bench's result document.
+fn rows_json(rows: &[BenchResult]) -> Json {
+    Json::arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("mean_secs", Json::num(r.summary.mean)),
+                    ("p50_secs", Json::num(r.summary.p50)),
+                ])
+            })
+            .collect(),
+    )
+}
 
 fn main() {
     let cfg = BenchConfig::from_env();
     let periods = five_periods();
     let backend = common::backend_kind();
+    let mut doc: Vec<(&str, Json)> = vec![("bench", Json::str("ablations"))];
 
     // --- A1: residency policy -------------------------------------------
     oseba::bench::section("A1: residency policy (32 MiB, native backend)");
@@ -59,6 +76,20 @@ fn main() {
     }
     assert!(mems[0].1 > mems[2].1, "cached default must hold more memory than oseba");
     assert!(mems[1].1 == mems[2].1, "unpersist restores the raw footprint");
+    doc.push(("a1_residency", rows_json(&rows)));
+    doc.push((
+        "a1_final_memory_bytes",
+        Json::arr(
+            mems.iter()
+                .map(|&(label, m)| {
+                    Json::obj(vec![
+                        ("name", Json::str(label)),
+                        ("bytes", Json::num(m as f64)),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
 
     // --- A2: backend ------------------------------------------------------
     oseba::bench::section("A2: backend HLO vs native (oseba method, 32 MiB)");
@@ -79,6 +110,7 @@ fn main() {
         }));
     }
     println!("{}", table(&rows));
+    doc.push(("a2_backend", rows_json(&rows)));
 
     // --- A3: kernel batching ----------------------------------------------
     oseba::bench::section("A3: kernel-service batching (oseba, hlo backend)");
@@ -105,6 +137,7 @@ fn main() {
             }));
         }
         println!("{}", table(&rows));
+        doc.push(("a3_kernel_batching", rows_json(&rows)));
     } else {
         println!("(skipped: requires artifacts)");
     }
@@ -127,4 +160,20 @@ fn main() {
     for (label, b) in &footprints {
         println!("  {label:<20} metadata footprint: {b} bytes");
     }
+    doc.push(("a4_index_kind", rows_json(&rows)));
+    doc.push((
+        "a4_index_footprint_bytes",
+        Json::arr(
+            footprints
+                .iter()
+                .map(|&(label, b)| {
+                    Json::obj(vec![
+                        ("name", Json::str(label)),
+                        ("bytes", Json::num(b as f64)),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
+    common::write_bench_json("ablations", Json::obj(doc));
 }

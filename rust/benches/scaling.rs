@@ -43,6 +43,7 @@ fn main() {
     );
 
     let mut speedups = Vec::new();
+    let mut points: Vec<(usize, f64, f64)> = Vec::new();
     for &bytes in &sizes {
         let mut totals = [0.0f64; 2];
         for (mi, method) in [Method::Default, Method::Oseba].into_iter().enumerate() {
@@ -57,6 +58,7 @@ fn main() {
         }
         let speedup = totals[0] / totals[1];
         speedups.push(speedup);
+        points.push((bytes, totals[0], totals[1]));
         println!(
             "{:<12} {:>12} {:>12} {:>8.2}x {:>14}",
             humansize::bytes(bytes),
@@ -76,5 +78,29 @@ fn main() {
         "\nshape check: speedup grows with raw size ✓ ({:.2}x → {:.2}x)",
         speedups.first().unwrap(),
         speedups.last().unwrap()
+    );
+
+    use oseba::util::json::Json;
+    common::write_bench_json(
+        "scaling",
+        Json::obj(vec![
+            ("bench", Json::str("scaling")),
+            (
+                "points",
+                Json::arr(
+                    points
+                        .iter()
+                        .map(|&(bytes, default_secs, oseba_secs)| {
+                            Json::obj(vec![
+                                ("raw_bytes", Json::num(bytes as f64)),
+                                ("default_secs", Json::num(default_secs)),
+                                ("oseba_secs", Json::num(oseba_secs)),
+                                ("speedup", Json::num(default_secs / oseba_secs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
     );
 }

@@ -61,6 +61,7 @@ pub fn bench<F: FnMut()>(cfg: &BenchConfig, name: &str, mut f: F) -> BenchResult
         f();
         samples.push(t.elapsed().as_secs_f64());
     }
+    // lint: allow(no-unwrap) -- `iters.max(1)` guarantees a non-empty sample.
     BenchResult { name: name.to_string(), summary: Summary::of(&samples).unwrap() }
 }
 

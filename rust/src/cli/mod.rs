@@ -52,6 +52,20 @@ impl Parsed {
         matches!(self.get(name), Some("true"))
     }
 
+    /// Flag value that must be present — flags declared with a default
+    /// always are, so this only errors on a spec/lookup mismatch (a typed
+    /// error, where an `unwrap` would take the whole process down).
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| OsebaError::Config(format!("missing required --{name}")))
+    }
+
+    /// Parse a required flag value into `T`.
+    pub fn require_parse<T: std::str::FromStr>(&self, name: &str) -> Result<T> {
+        self.get_parse(name)?
+            .ok_or_else(|| OsebaError::Config(format!("missing required --{name}")))
+    }
+
     /// Parse a flag value into `T`; `None` when the flag is absent.
     pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
         match self.get(name) {
@@ -232,6 +246,15 @@ mod tests {
     fn invalid_typed_value_is_error() {
         let p = cli().parse(&argv(&["run", "--size", "abc"])).unwrap();
         assert!(p.get_parse::<usize>("size").is_err());
+    }
+
+    #[test]
+    fn require_errors_instead_of_panicking() {
+        let p = cli().parse(&argv(&["run"])).unwrap();
+        assert_eq!(p.require("size").unwrap(), "100"); // default applies
+        assert_eq!(p.require_parse::<usize>("size").unwrap(), 100);
+        assert!(p.require("backend").is_err()); // no default, absent
+        assert!(p.require_parse::<usize>("backend").is_err());
     }
 
     #[test]

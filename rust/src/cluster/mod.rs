@@ -14,6 +14,7 @@ use std::time::Duration;
 
 use crate::error::{OsebaError, Result};
 use crate::index::PartitionSlice;
+use crate::util::sync::MutexExt;
 
 /// Network cost model applied per dispatched message.
 #[derive(Clone, Copy, Debug, Default)]
@@ -74,8 +75,7 @@ impl Cluster {
     /// Worker owning a partition.
     pub fn owner(&self, partition: usize) -> Result<usize> {
         self.placement
-            .lock()
-            .unwrap()
+            .lock_recover()
             .get(partition)
             .copied()
             .ok_or_else(|| OsebaError::Cluster(format!("unknown partition {partition}")))
@@ -93,7 +93,7 @@ impl Cluster {
         self.alive[w].store(false, Ordering::SeqCst);
         let survivors: Vec<usize> =
             (0..self.num_workers).filter(|&i| self.is_alive(i)).collect();
-        let mut placement = self.placement.lock().unwrap();
+        let mut placement = self.placement.lock_recover();
         let mut moved = 0usize;
         for slot in placement.iter_mut().filter(|s| **s == w) {
             *slot = survivors[moved % survivors.len()];
@@ -106,7 +106,7 @@ impl Cluster {
     /// datasets create fresh partition ids). New partitions go round-robin
     /// over *live* workers.
     pub fn ensure_partitions(&self, n: usize) {
-        let mut placement = self.placement.lock().unwrap();
+        let mut placement = self.placement.lock_recover();
         if placement.len() >= n {
             return;
         }
@@ -138,7 +138,7 @@ impl Cluster {
     /// tags sub-slices with segment ids this way). Returns `(worker,
     /// payloads)` groups, workers ascending, item order preserved.
     pub fn route_tagged<T>(&self, items: Vec<(usize, T)>) -> Result<Vec<(usize, Vec<T>)>> {
-        let placement = self.placement.lock().unwrap();
+        let placement = self.placement.lock_recover();
         let mut groups: Vec<Vec<T>> = (0..self.num_workers).map(|_| Vec::new()).collect();
         for (p, t) in items {
             let w = *placement
@@ -155,7 +155,7 @@ impl Cluster {
 
     /// Placement snapshot (tests / inspection).
     pub fn placement(&self) -> Vec<usize> {
-        self.placement.lock().unwrap().clone()
+        self.placement.lock_recover().clone()
     }
 }
 

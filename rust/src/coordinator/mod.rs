@@ -11,7 +11,7 @@ pub use plan::{
     parse_predicates, plan_query, plan_query_opts, Explain, PhysicalPlan, PlanOptions,
     PrunedRange, Query, QueryOp, QueryOutput,
 };
-pub use planner::{plan_batch, IndexKind, Method, PlannedQuery};
+pub use planner::{plan_batch, verify_batch, IndexKind, Method, PlannedQuery};
 pub use session::{run_batch_session, run_session, BatchSessionReport, SessionReport};
 
 use std::sync::Arc;
@@ -261,7 +261,9 @@ impl Coordinator {
     ) -> Result<PeriodStats> {
         match self.execute_plan(ds, index, &Query::stats(q, column))?.0 {
             QueryOutput::Stats(s) => Ok(s),
-            _ => unreachable!("stats query produces stats output"),
+            _ => Err(OsebaError::Runtime(
+                "stats query produced a non-stats output".into(),
+            )),
         }
     }
 
@@ -538,6 +540,11 @@ impl Coordinator {
             }
         }
         let plan = plan_batch(queries);
+        // Batch plans self-check in debug builds (DESIGN.md §12): sorted
+        // disjoint merged ranges, every valid query owned exactly once,
+        // demux segments tiling each merged range.
+        #[cfg(debug_assertions)]
+        planner::verify_batch(queries, &plan)?;
 
         // Global elementary-segment table across all merged ranges: the
         // shared partials per-query stats are demultiplexed from.

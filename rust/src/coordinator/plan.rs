@@ -256,6 +256,147 @@ pub struct PhysicalPlan {
     pub explain: Explain,
 }
 
+impl PhysicalPlan {
+    /// Check every structural invariant a lowering must satisfy (the plan
+    /// half of DESIGN.md §12). A violation is always a planner bug, never
+    /// bad user input, so it surfaces as [`OsebaError::Plan`] rather than
+    /// a panic: a release server degrades to one failed request.
+    ///
+    /// Checked, per range list (selection and baseline independently):
+    ///
+    /// * merged ranges are sorted and pairwise disjoint, none inverted;
+    /// * every slice is non-empty and each partition appears at most once
+    ///   per merged range;
+    /// * `covered` is strictly sorted, a subset of the range's slice
+    ///   partitions, and non-empty only for predicate-free `Stats` plans;
+    /// * every covered partition's key bounds are fully contained in its
+    ///   merged range and its sketch for the analysis column exists.
+    ///
+    /// Plus the [`Explain`] arithmetic: `merged_ranges`, `targeted`,
+    /// `agg_answered`, `estimated_rows` and `rows_avoided` are recomputed
+    /// from the plan itself; `considered = targeted + zone_pruned`; the
+    /// byte figures are the row figures times the schema row width.
+    ///
+    /// Pure metadata — no partition is read or faulted in. Called on every
+    /// plan in debug builds; the server's `explain` op exposes it in
+    /// release builds via the `verify` flag.
+    pub fn verify(&self, ds: &Dataset, query: &Query) -> Result<()> {
+        let err = |m: String| Err(OsebaError::Plan(m));
+        let column = query.op.column();
+        let sketchable =
+            matches!(query.op, QueryOp::Stats { .. }) && query.predicates.is_empty();
+        let mut targeted = 0usize;
+        let mut agg_answered = 0usize;
+        let mut est_rows = 0usize;
+        let mut rows_avoided = 0usize;
+        for (label, ranges, covered_allowed) in [
+            ("selection", &self.ranges, sketchable),
+            ("baseline", &self.baseline, false),
+        ] {
+            for w in ranges.windows(2) {
+                if w[1].range.lo <= w[0].range.hi {
+                    return err(format!(
+                        "{label} ranges not sorted/disjoint: [{}, {}] then [{}, {}]",
+                        w[0].range.lo, w[0].range.hi, w[1].range.lo, w[1].range.hi
+                    ));
+                }
+            }
+            for pr in ranges.iter() {
+                if pr.range.lo > pr.range.hi {
+                    return err(format!(
+                        "{label} range [{}, {}] is inverted",
+                        pr.range.lo, pr.range.hi
+                    ));
+                }
+                let mut parts = std::collections::BTreeSet::new();
+                for s in &pr.slices {
+                    if s.row_start >= s.row_end {
+                        return err(format!(
+                            "{label} slice of partition {} is empty ([{}, {}))",
+                            s.partition, s.row_start, s.row_end
+                        ));
+                    }
+                    if !parts.insert(s.partition) {
+                        return err(format!(
+                            "partition {} appears twice in one {label} range",
+                            s.partition
+                        ));
+                    }
+                }
+                targeted += pr.slices.len();
+                if pr.covered.windows(2).any(|w| w[0] >= w[1]) {
+                    return err(format!(
+                        "{label} covered list is not strictly sorted: {:?}",
+                        pr.covered
+                    ));
+                }
+                if !covered_allowed && !pr.covered.is_empty() {
+                    return err(format!(
+                        "sketch-covered partitions on a plan that cannot use sketches \
+                         ({label}, op {:?}, {} predicate(s))",
+                        query.op,
+                        query.predicates.len()
+                    ));
+                }
+                for &p in &pr.covered {
+                    if !parts.contains(&p) {
+                        return err(format!(
+                            "covered partition {p} has no slice in its {label} range"
+                        ));
+                    }
+                    let Some((kmin, kmax, _)) = ds.partition_bounds(p) else {
+                        return err(format!("covered partition {p} has no key bounds"));
+                    };
+                    if kmin < pr.range.lo || pr.range.hi < kmax {
+                        return err(format!(
+                            "covered partition {p} keys [{kmin}, {kmax}] are not \
+                             contained in merged range [{}, {}]",
+                            pr.range.lo, pr.range.hi
+                        ));
+                    }
+                    if ds.sketch(p, column).is_none() {
+                        return err(format!(
+                            "covered partition {p} has no sketch for column {column}"
+                        ));
+                    }
+                }
+                agg_answered += pr.covered.len();
+                for s in &pr.slices {
+                    if pr.is_covered(s.partition) {
+                        rows_avoided += s.rows();
+                    } else {
+                        est_rows += s.rows();
+                    }
+                }
+            }
+        }
+        let ex = &self.explain;
+        let row_bytes = ds.schema().row_bytes();
+        let checks = [
+            ("merged_ranges", ex.merged_ranges, self.ranges.len() + self.baseline.len()),
+            ("targeted", ex.targeted, targeted),
+            ("agg_answered", ex.agg_answered, agg_answered),
+            ("considered", ex.considered, ex.targeted + ex.zone_pruned),
+            ("estimated_rows", ex.estimated_rows, est_rows),
+            ("rows_avoided", ex.rows_avoided, rows_avoided),
+            ("estimated_bytes", ex.estimated_bytes, ex.estimated_rows * row_bytes),
+            ("bytes_avoided", ex.bytes_avoided, ex.rows_avoided * row_bytes),
+        ];
+        for (name, got, want) in checks {
+            if got != want {
+                return err(format!("explain.{name} = {got}, recomputed {want}"));
+            }
+        }
+        if ex.key_pruned > ex.partitions {
+            return err(format!(
+                "explain.key_pruned {} exceeds partition count {}",
+                ex.key_pruned, ex.partitions
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// The single prune decision both the plan layer and the batch path use:
 /// does `partition` survive zone-map pruning for `predicates` on `ds`?
 /// `true` when there is nothing to prune by (no predicates, or no zones).
@@ -459,7 +600,13 @@ pub fn plan_query_opts(
     let row_bytes = ds.schema().row_bytes();
     ex.estimated_bytes = ex.estimated_rows * row_bytes;
     ex.bytes_avoided = ex.rows_avoided * row_bytes;
-    Ok(PhysicalPlan { ranges, baseline, explain: ex })
+    let plan = PhysicalPlan { ranges, baseline, explain: ex };
+    // Every lowering self-checks in debug builds (tests, benches run with
+    // `--release` skip it; the server's `explain {verify}` runs it on
+    // demand in any build).
+    #[cfg(debug_assertions)]
+    plan.verify(ds, query)?;
+    Ok(plan)
 }
 
 /// Parse a `where` conjunction like `"temperature > 30, humidity <= 50"`
@@ -717,5 +864,193 @@ mod tests {
         assert_eq!(q.predicates.len(), 1);
         assert_eq!(q.op.column(), 3);
         assert_eq!(QueryOp::Trend { column: 2, window: 5 }.column(), 2);
+    }
+
+    #[test]
+    fn verify_accepts_every_lowering_shape() {
+        let (_ctx, ds, index) = trending();
+        let queries = [
+            Query::stats(RangeQuery { lo: 0, hi: 2_490 }, 0),
+            Query::stats(RangeQuery { lo: 0, hi: i64::MAX }, 0),
+            Query::stats(RangeQuery { lo: 0, hi: i64::MAX }, 0)
+                .filtered(vec![pred(0, PredOp::Ge, 750.0)]),
+            Query {
+                ranges: vec![RangeQuery { lo: 0, hi: 1_000 }, RangeQuery { lo: 5_000, hi: 6_000 }],
+                predicates: Vec::new(),
+                op: QueryOp::Trend { column: 0, window: 4 },
+            },
+            Query {
+                ranges: vec![RangeQuery { lo: 0, hi: 2_490 }],
+                predicates: Vec::new(),
+                op: QueryOp::Distance {
+                    column: 0,
+                    baseline: RangeQuery { lo: 2_500, hi: 4_990 },
+                },
+            },
+        ];
+        for q in &queries {
+            for (zp, ap) in [(true, true), (true, false), (false, true), (false, false)] {
+                let opts = PlanOptions { zone_pruning: zp, agg_pushdown: ap };
+                let plan = plan_query_opts(&ds, &index, q, opts).unwrap();
+                plan.verify(&ds, q).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn verify_rejects_corrupted_plans() {
+        let (_ctx, ds, index) = trending();
+        // Two disjoint merged ranges, both sketch-covered.
+        let q = Query {
+            ranges: vec![RangeQuery { lo: 0, hi: 2_490 }, RangeQuery { lo: 5_000, hi: 7_490 }],
+            predicates: Vec::new(),
+            op: QueryOp::Stats { column: 0 },
+        };
+        let plan = plan_query(&ds, &index, &q, true).unwrap();
+        assert_eq!(plan.ranges.len(), 2);
+        plan.verify(&ds, &q).unwrap();
+
+        let expect = |p: &PhysicalPlan, needle: &str| {
+            let msg = p.verify(&ds, &q).unwrap_err().to_string();
+            assert!(msg.contains("plan invariant"), "got: {msg}");
+            assert!(msg.contains(needle), "wanted '{needle}' in: {msg}");
+        };
+
+        // Out-of-order merged ranges.
+        let mut bad = plan.clone();
+        bad.ranges.swap(0, 1);
+        expect(&bad, "not sorted/disjoint");
+
+        // Inverted range bounds.
+        let mut bad = plan.clone();
+        bad.ranges.truncate(1);
+        bad.ranges[0].range = RangeQuery { lo: 10, hi: 0 };
+        bad.explain.merged_ranges = 1;
+        expect(&bad, "inverted");
+
+        // An empty slice.
+        let mut bad = plan.clone();
+        bad.ranges[0].slices[0].row_end = bad.ranges[0].slices[0].row_start;
+        expect(&bad, "is empty");
+
+        // The same partition targeted twice in one range.
+        let mut bad = plan.clone();
+        let dup = bad.ranges[0].slices[0];
+        bad.ranges[0].slices.push(dup);
+        expect(&bad, "appears twice");
+
+        // Covered set not sorted.
+        let mut bad = plan.clone();
+        bad.ranges[0].covered = vec![0, 0];
+        expect(&bad, "not strictly sorted");
+
+        // Covered partition without a slice.
+        let mut bad = plan.clone();
+        bad.ranges[0].covered = vec![3];
+        expect(&bad, "no slice");
+
+        // Covered partition whose keys spill outside the merged range.
+        let mut bad = plan.clone();
+        bad.ranges[0].range.hi = 100;
+        expect(&bad, "not contained in merged range");
+
+        // Explain arithmetic drift.
+        let mut bad = plan.clone();
+        bad.explain.targeted += 1;
+        expect(&bad, "explain.targeted");
+        let mut bad = plan.clone();
+        bad.explain.estimated_bytes += 1;
+        expect(&bad, "explain.estimated_bytes");
+        let mut bad = plan.clone();
+        bad.explain.key_pruned = bad.explain.partitions + 1;
+        expect(&bad, "key_pruned");
+    }
+
+    #[test]
+    fn verify_rejects_sketches_on_raw_row_ops() {
+        let (_ctx, ds, index) = trending();
+        let q = Query {
+            ranges: vec![RangeQuery { lo: 0, hi: 2_490 }],
+            predicates: Vec::new(),
+            op: QueryOp::Trend { column: 0, window: 4 },
+        };
+        let mut plan = plan_query(&ds, &index, &q, true).unwrap();
+        assert!(plan.ranges[0].covered.is_empty());
+        plan.ranges[0].covered = vec![0];
+        plan.explain.agg_answered = 1;
+        let msg = plan.verify(&ds, &q).unwrap_err().to_string();
+        assert!(msg.contains("cannot use sketches"), "got: {msg}");
+    }
+
+    /// Seeded fuzz harness: random datasets × random queries, every
+    /// lowering must verify. A failure prints the reproducing seed.
+    #[test]
+    fn fuzzed_lowerings_always_verify() {
+        use crate::util::rng::Xoshiro256;
+        for seed in 0..48u64 {
+            let mut rng = Xoshiro256::seeded(seed);
+            // Random sorted-key dataset over the stock schema.
+            let rows = rng.range_u64(50, 2_000) as usize;
+            let mut b = BatchBuilder::new(Schema::stock());
+            let mut key = 0i64;
+            for _ in 0..rows {
+                key += rng.range_u64(1, 20) as i64;
+                b.push(key, &[rng.uniform(-100.0, 100.0) as f32, rng.next_f32()]);
+            }
+            let ctx =
+                OsebaContext::new(ContextConfig { num_workers: 2, memory_budget: None });
+            let parts = rng.range_u64(1, 9) as usize;
+            let ds = ctx.load(b.finish().unwrap(), parts).unwrap();
+            let index = Cias::build(ds.partitions()).unwrap();
+            let span = key;
+
+            for case in 0..8 {
+                let mut ranges = Vec::new();
+                for _ in 0..rng.range_u64(1, 4) {
+                    let a = rng.range_u64(0, span as u64 + 1) as i64;
+                    let bnd = rng.range_u64(0, span as u64 + 1) as i64;
+                    ranges.push(RangeQuery { lo: a.min(bnd), hi: a.max(bnd) });
+                }
+                let mut predicates = Vec::new();
+                for _ in 0..rng.below(3) {
+                    let op = match rng.below(4) {
+                        0 => PredOp::Gt,
+                        1 => PredOp::Ge,
+                        2 => PredOp::Lt,
+                        _ => PredOp::Le,
+                    };
+                    predicates.push(pred(
+                        rng.below(2) as usize,
+                        op,
+                        rng.uniform(-120.0, 120.0) as f32,
+                    ));
+                }
+                let op = match rng.below(3) {
+                    0 => QueryOp::Stats { column: rng.below(2) as usize },
+                    1 => QueryOp::Trend {
+                        column: rng.below(2) as usize,
+                        window: rng.range_u64(1, 12) as usize,
+                    },
+                    _ => {
+                        let a = rng.range_u64(0, span as u64 + 1) as i64;
+                        let bnd = rng.range_u64(0, span as u64 + 1) as i64;
+                        QueryOp::Distance {
+                            column: rng.below(2) as usize,
+                            baseline: RangeQuery { lo: a.min(bnd), hi: a.max(bnd) },
+                        }
+                    }
+                };
+                let query = Query { ranges, predicates, op };
+                let opts = PlanOptions {
+                    zone_pruning: rng.below(2) == 0,
+                    agg_pushdown: rng.below(2) == 0,
+                };
+                let plan = plan_query_opts(&ds, &index, &query, opts)
+                    .unwrap_or_else(|e| panic!("seed {seed} case {case}: plan failed: {e}"));
+                plan.verify(&ds, &query).unwrap_or_else(|e| {
+                    panic!("seed {seed} case {case}: verify failed: {e}\nquery: {query:?}")
+                });
+            }
+        }
     }
 }

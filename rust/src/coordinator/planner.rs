@@ -141,6 +141,126 @@ pub fn plan_batch(queries: &[RangeQuery]) -> Vec<PlannedQuery> {
     out
 }
 
+/// Check the invariants [`plan_batch`] and [`PlannedQuery::segments`]
+/// promise (the batch half of DESIGN.md §12), against the original input
+/// batch:
+///
+/// * planned ranges are sorted, pairwise disjoint and non-adjacent, none
+///   inverted;
+/// * every valid input query appears in exactly one `sources` list
+///   (ascending, no duplicates), is contained in its merged range, and
+///   the merged range is exactly the hull of its sources;
+/// * the elementary segments tile each merged range: they start at its
+///   `lo`, end at its `hi`, leave no gaps, and every covering query
+///   really contains its segment.
+///
+/// Violations surface as [`OsebaError::Plan`] — always a planner bug.
+/// Pure metadata; the coordinator runs this on every batch in debug
+/// builds.
+pub fn verify_batch(queries: &[RangeQuery], plan: &[PlannedQuery]) -> Result<()> {
+    let err = |m: String| Err(OsebaError::Plan(m));
+    for w in plan.windows(2) {
+        // i128: `hi + 1` must not overflow when a range ends at i64::MAX.
+        if (w[1].range.lo as i128) <= (w[0].range.hi as i128) + 1 {
+            return err(format!(
+                "batch ranges not sorted/disjoint/non-adjacent: [{}, {}] then [{}, {}]",
+                w[0].range.lo, w[0].range.hi, w[1].range.lo, w[1].range.hi
+            ));
+        }
+    }
+    let mut owner: Vec<Option<usize>> = vec![None; queries.len()];
+    for (pi, pq) in plan.iter().enumerate() {
+        if pq.range.lo > pq.range.hi {
+            return err(format!(
+                "batch range [{}, {}] is inverted",
+                pq.range.lo, pq.range.hi
+            ));
+        }
+        if pq.sources.is_empty() {
+            return err(format!(
+                "batch range [{}, {}] has no source queries",
+                pq.range.lo, pq.range.hi
+            ));
+        }
+        if pq.sources.windows(2).any(|w| w[0] >= w[1]) {
+            return err(format!(
+                "sources of batch range {pi} are not strictly ascending: {:?}",
+                pq.sources
+            ));
+        }
+        let (mut lo, mut hi) = (i64::MAX, i64::MIN);
+        for &i in &pq.sources {
+            let Some(q) = queries.get(i) else {
+                return err(format!(
+                    "batch range {pi} references query {i}, but the batch has {}",
+                    queries.len()
+                ));
+            };
+            if q.lo > q.hi {
+                return err(format!(
+                    "batch range {pi} claims inverted input query {i}"
+                ));
+            }
+            if let Some(prev) = owner[i].replace(pi) {
+                return err(format!(
+                    "query {i} appears in batch ranges {prev} and {pi}"
+                ));
+            }
+            if q.lo < pq.range.lo || pq.range.hi < q.hi {
+                return err(format!(
+                    "query {i} [{}, {}] is not contained in its merged range [{}, {}]",
+                    q.lo, q.hi, pq.range.lo, pq.range.hi
+                ));
+            }
+            lo = lo.min(q.lo);
+            hi = hi.max(q.hi);
+        }
+        if lo != pq.range.lo || hi != pq.range.hi {
+            return err(format!(
+                "merged range [{}, {}] is not the hull of its sources ([{lo}, {hi}])",
+                pq.range.lo, pq.range.hi
+            ));
+        }
+        // The demux segments must tile the merged range exactly.
+        let segs = pq.segments(queries);
+        match (segs.first(), segs.last()) {
+            (Some(first), Some(last))
+                if first.0.lo == pq.range.lo && last.0.hi == pq.range.hi => {}
+            _ => {
+                return err(format!(
+                    "segments of batch range {pi} do not span [{}, {}]",
+                    pq.range.lo, pq.range.hi
+                ));
+            }
+        }
+        for w in segs.windows(2) {
+            if (w[1].0.lo as i128) != (w[0].0.hi as i128) + 1 {
+                return err(format!(
+                    "segments of batch range {pi} leave a gap between key {} and key {}",
+                    w[0].0.hi, w[1].0.lo
+                ));
+            }
+        }
+        for (seg, covering) in &segs {
+            for &i in covering {
+                if queries[i].lo > seg.lo || seg.hi > queries[i].hi {
+                    return err(format!(
+                        "segment [{}, {}] lists query {i} [{}, {}] as covering, \
+                         but the query does not contain it",
+                        seg.lo, seg.hi, queries[i].lo, queries[i].hi
+                    ));
+                }
+            }
+        }
+    }
+    for (i, q) in queries.iter().enumerate() {
+        if q.lo <= q.hi && owner[i].is_none() {
+            return err(format!("valid query {i} was dropped by the batch plan"));
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -239,6 +359,94 @@ mod tests {
                 (q(11, 20), vec![1]),
             ]
         );
+    }
+
+    #[test]
+    fn verify_batch_accepts_planner_output() {
+        let cases: Vec<Vec<RangeQuery>> = vec![
+            vec![],
+            vec![q(5, 9)],
+            vec![q(50, 60), q(0, 10), q(21, 30), q(5, 20)],
+            vec![q(12, 20), q(0, 10)],
+            vec![q(0, 100), q(0, 100), q(30, 40)],
+            vec![q(9, 1), q(2, 4)],
+            vec![q(i64::MAX - 10, i64::MAX), q(i64::MAX - 3, i64::MAX)],
+            vec![q(0, 5), q(100, 200), q(3, 40), q(150, 160), q(300, 300)],
+        ];
+        for qs in &cases {
+            verify_batch(qs, &plan_batch(qs)).unwrap();
+        }
+        // Seeded fuzz: random batches must always verify.
+        use crate::util::rng::Xoshiro256;
+        for seed in 0..64u64 {
+            let mut rng = Xoshiro256::seeded(seed);
+            let n = rng.range_u64(1, 24) as usize;
+            let qs: Vec<RangeQuery> = (0..n)
+                .map(|_| {
+                    let a = rng.range_u64(0, 10_000) as i64;
+                    let b = rng.range_u64(0, 10_000) as i64;
+                    // Leave ~1 in 8 inverted to exercise the drop path.
+                    if rng.below(8) == 0 { q(a.max(b), a.min(b).min(a.max(b) - 1)) } else { q(a.min(b), a.max(b)) }
+                })
+                .collect();
+            verify_batch(&qs, &plan_batch(&qs))
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}\nbatch: {qs:?}"));
+        }
+    }
+
+    #[test]
+    fn verify_batch_rejects_corrupted_plans() {
+        let qs = [q(0, 10), q(5, 20), q(50, 60)];
+        let plan = plan_batch(&qs);
+        assert_eq!(plan.len(), 2);
+        verify_batch(&qs, &plan).unwrap();
+
+        let expect = |p: &[PlannedQuery], needle: &str| {
+            let msg = verify_batch(&qs, p).unwrap_err().to_string();
+            assert!(msg.contains("plan invariant"), "got: {msg}");
+            assert!(msg.contains(needle), "wanted '{needle}' in: {msg}");
+        };
+
+        // Out of order.
+        let mut bad = plan.clone();
+        bad.swap(0, 1);
+        expect(&bad, "not sorted");
+
+        // Adjacent ranges that should have merged.
+        let bad = vec![
+            PlannedQuery { range: q(0, 20), sources: vec![0, 1] },
+            PlannedQuery { range: q(21, 60), sources: vec![2] },
+        ];
+        expect(&bad, "non-adjacent");
+
+        // A dropped valid query.
+        let bad = vec![plan[0].clone()];
+        expect(&bad, "dropped");
+
+        // The same query claimed twice.
+        let mut bad = plan.clone();
+        bad[1].sources = vec![0, 2];
+        expect(&bad, "appears in batch ranges");
+
+        // Source not contained in its merged range.
+        let mut bad = plan.clone();
+        bad[0].range.hi = 15;
+        expect(&bad, "not contained");
+
+        // Merged range wider than the hull of its sources.
+        let mut bad = plan.clone();
+        bad[1].range.hi = 99;
+        expect(&bad, "hull");
+
+        // Unsorted sources.
+        let mut bad = plan.clone();
+        bad[0].sources = vec![1, 0];
+        expect(&bad, "ascending");
+
+        // Out-of-bounds source index.
+        let mut bad = plan.clone();
+        bad[1].sources = vec![7];
+        expect(&bad, "references query 7");
     }
 
     #[test]

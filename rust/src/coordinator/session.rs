@@ -6,7 +6,7 @@ use crate::analysis::{PeriodSpec, PeriodStats};
 use crate::coordinator::planner::{IndexKind, Method};
 use crate::coordinator::Coordinator;
 use crate::engine::{CounterSnapshot, Dataset};
-use crate::error::Result;
+use crate::error::{OsebaError, Result};
 use crate::index::RangeQuery;
 use crate::metrics::{BatchReport, SessionMetrics, Timer};
 
@@ -39,8 +39,9 @@ pub fn run_session(
     column: usize,
     unpersist_filtered: bool,
 ) -> Result<SessionReport> {
-    let key_min = ds.key_min().expect("non-empty dataset");
-    let key_max = ds.key_max().expect("non-empty dataset");
+    let (Some(key_min), Some(key_max)) = (ds.key_min(), ds.key_max()) else {
+        return Err(OsebaError::InvalidRange("session over an empty dataset".into()));
+    };
 
     // Index construction happens once, at load time (its cost is part of
     // phase 1's measurement in the paper's framing; here we time it
@@ -73,7 +74,11 @@ pub fn run_session(
                 }
                 st
             }
-            _ => unreachable!(),
+            _ => {
+                return Err(OsebaError::Runtime(
+                    "session index missing for the Oseba method".into(),
+                ))
+            }
         };
         let mut secs = timer.secs();
         if i == 0 {

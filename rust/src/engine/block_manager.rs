@@ -20,6 +20,7 @@ use crate::engine::memory::MemoryTracker;
 use crate::error::{OsebaError, Result};
 use crate::storage::Partition;
 use crate::store::TieredStore;
+use crate::util::sync::MutexExt;
 
 /// Identifier of a cached dataset.
 pub type DatasetId = u64;
@@ -81,8 +82,8 @@ impl BlockManager {
     /// allocation is declared impossible.
     pub fn cache(&self, id: DatasetId, parts: Vec<Arc<Partition>>) -> Result<()> {
         let bytes: usize = parts.iter().map(|p| p.bytes()).sum();
-        let mut cache = self.cache.lock().unwrap();
-        if cache.contains_key(&id) || self.stores.lock().unwrap().contains_key(&id) {
+        let mut cache = self.cache.lock_recover();
+        if cache.contains_key(&id) || self.stores.lock_recover().contains_key(&id) {
             return Err(OsebaError::Schema(format!("dataset {id} already cached")));
         }
         self.allocate_reclaiming(bytes)?;
@@ -94,14 +95,14 @@ impl BlockManager {
     /// [`Self::cache`], budget pressure spills registered stores first.
     pub fn charge_unsealed(&self, id: DatasetId, bytes: usize) -> Result<()> {
         self.allocate_reclaiming(bytes)?;
-        *self.unsealed.lock().unwrap().entry(id).or_insert(0) += bytes;
+        *self.unsealed.lock_recover().entry(id).or_insert(0) += bytes;
         Ok(())
     }
 
     /// Credit back up to `bytes` of dataset `id`'s unsealed charge (rows
     /// were sealed into a partition, or the live dataset closed).
     pub fn release_unsealed(&self, id: DatasetId, bytes: usize) {
-        let mut unsealed = self.unsealed.lock().unwrap();
+        let mut unsealed = self.unsealed.lock_recover();
         if let Some(slot) = unsealed.get_mut(&id) {
             let take = bytes.min(*slot);
             *slot -= take;
@@ -114,15 +115,15 @@ impl BlockManager {
 
     /// Total bytes currently charged for unsealed live-chunk buffers.
     pub fn unsealed_bytes(&self) -> usize {
-        self.unsealed.lock().unwrap().values().sum()
+        self.unsealed.lock_recover().values().sum()
     }
 
     /// Register a tiered dataset's store (no bytes charged here — the
     /// store charges the shared tracker as partitions go Hot).
     pub fn register_store(&self, id: DatasetId, store: Arc<TieredStore>) -> Result<()> {
         // Lock order everywhere is cache → stores (see `cache`/`reclaim`).
-        let cache = self.cache.lock().unwrap();
-        let mut stores = self.stores.lock().unwrap();
+        let cache = self.cache.lock_recover();
+        let mut stores = self.stores.lock_recover();
         if stores.contains_key(&id) || cache.contains_key(&id) {
             return Err(OsebaError::Schema(format!("dataset {id} already cached")));
         }
@@ -134,7 +135,7 @@ impl BlockManager {
     /// nothing spillable remains).
     fn reclaim(&self, needed: usize) -> Result<usize> {
         let stores: Vec<Arc<TieredStore>> =
-            self.stores.lock().unwrap().values().cloned().collect();
+            self.stores.lock_recover().values().cloned().collect();
         let mut freed = 0usize;
         for store in stores {
             if freed >= needed {
@@ -147,12 +148,12 @@ impl BlockManager {
 
     /// Fetch a cached dataset's partitions (resident datasets only).
     pub fn get(&self, id: DatasetId) -> Option<Vec<Arc<Partition>>> {
-        self.cache.lock().unwrap().get(&id).map(|e| e.parts.clone())
+        self.cache.lock_recover().get(&id).map(|e| e.parts.clone())
     }
 
     /// The tiered store backing dataset `id`, if registered.
     pub fn get_store(&self, id: DatasetId) -> Option<Arc<TieredStore>> {
-        self.stores.lock().unwrap().get(&id).cloned()
+        self.stores.lock_recover().get(&id).cloned()
     }
 
     /// Evict a dataset, crediting its bytes. Returns whether it was cached.
@@ -160,15 +161,15 @@ impl BlockManager {
     /// disk are untouched).
     pub fn unpersist(&self, id: DatasetId) -> bool {
         // Any unsealed live-buffer charge dies with the registration.
-        if let Some(bytes) = self.unsealed.lock().unwrap().remove(&id) {
+        if let Some(bytes) = self.unsealed.lock_recover().remove(&id) {
             self.tracker.release(bytes);
         }
-        let entry = self.cache.lock().unwrap().remove(&id);
+        let entry = self.cache.lock_recover().remove(&id);
         if let Some(e) = entry {
             self.tracker.release(e.bytes);
             return true;
         }
-        match self.stores.lock().unwrap().remove(&id) {
+        match self.stores.lock_recover().remove(&id) {
             Some(store) => {
                 store.release_resident();
                 true
@@ -189,7 +190,7 @@ impl BlockManager {
 
     /// Number of registered datasets (resident + tiered).
     pub fn num_cached(&self) -> usize {
-        self.cache.lock().unwrap().len() + self.stores.lock().unwrap().len()
+        self.cache.lock_recover().len() + self.stores.lock_recover().len()
     }
 
     /// The shared tracker (for coordinator metrics).

@@ -25,6 +25,7 @@ use crate::index::types::{PartitionSlice, RangeQuery};
 use crate::index::Cias;
 use crate::storage::{partition_batch_uniform, Partition, RecordBatch};
 use crate::store::TieredStore;
+use crate::util::sync::MutexExt;
 use crate::util::threadpool::ThreadPool;
 
 /// Per-context scan/materialization counters — the computation-cost signal
@@ -42,6 +43,9 @@ pub struct EngineCounters {
     /// Targeted partitions answered from their aggregate sketches —
     /// counted in `partitions_targeted` too, but with zero data touch.
     pub partitions_agg_answered: AtomicUsize,
+    /// Server request handlers that died by panic and were caught at the
+    /// session boundary (the connection survives; the request errors).
+    pub sessions_failed: AtomicUsize,
 }
 
 impl EngineCounters {
@@ -53,6 +57,7 @@ impl EngineCounters {
             bytes_materialized: self.bytes_materialized.load(Ordering::Relaxed),
             partitions_targeted: self.partitions_targeted.load(Ordering::Relaxed),
             partitions_agg_answered: self.partitions_agg_answered.load(Ordering::Relaxed),
+            sessions_failed: self.sessions_failed.load(Ordering::Relaxed),
         }
     }
 }
@@ -71,6 +76,8 @@ pub struct CounterSnapshot {
     /// Targeted partitions answered from their aggregate sketches
     /// (a subset of `partitions_targeted`; zero data touch).
     pub partitions_agg_answered: usize,
+    /// Server request handlers caught panicking at the session boundary.
+    pub sessions_failed: usize,
 }
 
 /// The engine context.
@@ -103,7 +110,7 @@ impl OsebaContext {
     }
 
     fn register(&self, id: DatasetId, name: &str, lineage: &Lineage) {
-        self.lineage.lock().unwrap().push((id, name.to_string(), lineage.clone()));
+        self.lineage.lock_recover().push((id, name.to_string(), lineage.clone()));
     }
 
     /// Load a batch into memory as a uniformly-partitioned, cached dataset
@@ -529,9 +536,15 @@ impl OsebaContext {
         self.counters.snapshot()
     }
 
+    /// Record one request handler caught panicking at the server's
+    /// session boundary (surfaced as `sessions_failed` in server info).
+    pub fn record_session_failure(&self) {
+        self.counters.sessions_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Lineage log: `(id, name, lineage)` in creation order (Fig 2).
     pub fn lineage_log(&self) -> Vec<(DatasetId, String, Lineage)> {
-        self.lineage.lock().unwrap().clone()
+        self.lineage.lock_recover().clone()
     }
 
     /// The shared scan pool (used by the coordinator for analysis tasks).

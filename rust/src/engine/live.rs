@@ -38,6 +38,7 @@ use crate::index::{Cias, PartitionMeta};
 use crate::ingest::Chunk;
 use crate::storage::{Partition, Schema};
 use crate::store::TieredStore;
+use crate::util::sync::MutexExt;
 
 /// Tuning knobs for a live dataset.
 #[derive(Clone, Copy, Debug)]
@@ -283,14 +284,14 @@ impl LiveDataset {
                 "live chunk keys must be strictly increasing".into(),
             ));
         }
-        let mut w = self.write.lock().unwrap();
+        let mut w = self.write.lock_recover();
         if w.closed {
             return Err(OsebaError::Ingest("append to a closed live dataset".into()));
         }
-        if chunk.rows() == 0 {
+        let Some(&first) = chunk.keys.first() else {
+            // Empty chunk: a no-op, not an error.
             return Ok(self.published().epoch);
-        }
-        let first = *chunk.keys.first().unwrap();
+        };
         // Strictly above the watermark continues the stream; a first key
         // *equal* to the watermark is a duplicate and goes down the
         // out-of-order path, whose overlap checks reject it cleanly.
@@ -303,7 +304,7 @@ impl LiveDataset {
             // for retry, so it still counts as appended.
             self.appended_chunks.fetch_add(1, Ordering::Relaxed);
             w.pending_charged += add;
-            w.watermark = Some(*chunk.keys.last().unwrap());
+            w.watermark = Some(chunk.keys.last().copied().unwrap_or(first));
             w.pending_keys.extend_from_slice(&chunk.keys);
             for (p, c) in w.pending_cols.iter_mut().zip(&chunk.columns) {
                 p.extend_from_slice(c);
@@ -317,7 +318,7 @@ impl LiveDataset {
                         .into(),
                 ));
             }
-            let last = *chunk.keys.last().unwrap();
+            let last = chunk.keys.last().copied().unwrap_or(first);
             if let Some(&pending_first) = w.pending_keys.first() {
                 if last >= pending_first {
                     return Err(OsebaError::Ingest(format!(
@@ -338,7 +339,7 @@ impl LiveDataset {
     /// Seal the unsealed tail as a final (shorter, hence ASL) partition,
     /// making the buffered rows visible. The dataset stays appendable.
     pub fn flush(&self) -> Result<u64> {
-        let mut w = self.write.lock().unwrap();
+        let mut w = self.write.lock_recover();
         if w.closed {
             return Err(OsebaError::Ingest("flush of a closed live dataset".into()));
         }
@@ -380,7 +381,7 @@ impl LiveDataset {
 
     /// Point-in-time ingest/index counters.
     pub fn counters(&self) -> LiveCounters {
-        let w = self.write.lock().unwrap();
+        let w = self.write.lock_recover();
         let cur = self.published();
         LiveCounters {
             epoch: cur.epoch,
@@ -401,7 +402,7 @@ impl LiveDataset {
     /// their pinned data alive — like `unpersist`, closing releases
     /// *accounting*, not borrowed working sets. Idempotent.
     pub fn close(&self) {
-        let mut w = self.write.lock().unwrap();
+        let mut w = self.write.lock_recover();
         if w.closed {
             return;
         }
@@ -424,11 +425,11 @@ impl LiveDataset {
     }
 
     fn published(&self) -> Arc<Published> {
-        Arc::clone(&*self.current.lock().unwrap())
+        Arc::clone(&*self.current.lock_recover())
     }
 
     fn publish(&self, p: Published) {
-        *self.current.lock().unwrap() = Arc::new(p);
+        *self.current.lock_recover() = Arc::new(p);
     }
 
     /// Seal every complete `rows_per_partition` span of the buffer.

@@ -51,6 +51,13 @@ pub enum OsebaError {
     /// dataset, or an out-of-order chunk that overlaps existing data.
     Ingest(String),
 
+    /// A lowered physical plan violated a structural invariant (disjoint
+    /// merged ranges, covered ⊆ targeted, demux segments tiling, ...).
+    /// Always a planner bug, never bad user input — surfaced as a typed
+    /// error so a release server degrades to a failed request instead of
+    /// dying. Checked on every plan in debug builds.
+    Plan(String),
+
     /// Memory budget exhausted and eviction could not reclaim enough.
     OutOfMemory {
         /// Bytes the failing allocation asked for.
@@ -85,6 +92,7 @@ impl fmt::Display for OsebaError {
             OsebaError::Json(m) => write!(f, "json error: {m}"),
             OsebaError::Store(m) => write!(f, "store error: {m}"),
             OsebaError::Ingest(m) => write!(f, "ingest error: {m}"),
+            OsebaError::Plan(m) => write!(f, "plan invariant violated: {m}"),
             OsebaError::OutOfMemory { requested, budget } => write!(
                 f,
                 "out of storage memory: requested {requested} bytes, budget {budget}"
@@ -137,6 +145,8 @@ mod tests {
         assert!(e.to_string().contains("requested 10"));
         let e = OsebaError::Ingest("push after finish".into());
         assert!(e.to_string().contains("ingest error"));
+        let e = OsebaError::Plan("ranges overlap".into());
+        assert!(e.to_string().contains("plan invariant"));
     }
 
     #[test]

@@ -68,6 +68,8 @@ impl LiveIngestor {
                 }
                 Ok(rows)
             })
+            // The pipeline cannot exist without its consumer thread.
+            // lint: allow(no-unwrap) -- spawn fails only on OS thread exhaustion
             .expect("spawn live-ingest consumer");
         LiveIngestor { live, tx: Some(tx), consumer: Some(consumer) }
     }
@@ -113,7 +115,12 @@ impl LiveIngestor {
     /// first append error from the consumer surfaces here.
     pub fn finish(mut self) -> Result<usize> {
         self.tx = None; // closes the channel; the consumer's loop ends
-        let handle = self.consumer.take().expect("finish called once");
+        let handle = match self.consumer.take() {
+            Some(h) => h,
+            // Unreachable in practice (`finish` consumes `self`), but a
+            // typed error beats dying if that ever changes.
+            None => return Err(OsebaError::Ingest("live ingestor already finished".into())),
+        };
         let rows = handle
             .join()
             .map_err(|_| OsebaError::Cluster("live-ingest consumer panicked".into()))??;

@@ -21,6 +21,7 @@ use crate::index::builder::detect_step;
 use crate::index::{Cias, PartitionMeta};
 use crate::storage::{Partition, RecordBatch, Schema};
 use crate::store::TieredStore;
+use crate::util::sync::MutexExt;
 
 pub mod live;
 
@@ -146,7 +147,7 @@ impl Ingestor {
         if chunk.keys.windows(2).any(|w| w[0] > w[1]) {
             return Err(OsebaError::Schema("chunk keys not sorted".into()));
         }
-        let mut pending = self.pending.lock().unwrap();
+        let mut pending = self.pending.lock_recover();
         if self.finished.load(Ordering::SeqCst) {
             // Used to be accepted: the rows were buffered after the final
             // seal and silently never flushed. Misuse is now a clear error.
@@ -182,7 +183,7 @@ impl Ingestor {
     /// after the first call the ingestor is sealed and [`Self::push`]
     /// returns [`OsebaError::Ingest`].
     pub fn finish(&self) -> Result<()> {
-        let mut pending = self.pending.lock().unwrap();
+        let mut pending = self.pending.lock_recover();
         self.finished.store(true, Ordering::SeqCst);
         if pending.keys.is_empty() {
             return Ok(());
@@ -195,7 +196,7 @@ impl Ingestor {
     }
 
     fn seal(&self, keys: Vec<i64>, cols: Vec<Vec<f32>>) -> Result<()> {
-        let mut state = self.state.lock().unwrap();
+        let mut state = self.state.lock_recover();
         let id = state.sealed;
         let part = Arc::new(Partition::from_rows(id, keys, cols));
         // The store extracts metadata (including the O(rows) step scan)
@@ -230,13 +231,13 @@ impl Ingestor {
     /// semantics.) When spilling, the partitions live in the store
     /// ([`Self::spill_store`]) and the vec is empty.
     pub fn snapshot(&self) -> (Vec<Arc<Partition>>, Option<Cias>) {
-        let state = self.state.lock().unwrap();
+        let state = self.state.lock_recover();
         (state.parts.clone(), state.index.clone())
     }
 
     /// Sealed partition count / row count / total ingested rows.
     pub fn progress(&self) -> (usize, usize, usize) {
-        let state = self.state.lock().unwrap();
+        let state = self.state.lock_recover();
         (state.sealed, state.rows, self.ingested_rows.load(Ordering::Relaxed))
     }
 }

@@ -163,13 +163,13 @@ fn cli() -> Cli {
 
 fn app_config(p: &oseba::cli::Parsed) -> Result<AppConfig> {
     let cfg = AppConfig {
-        dataset_bytes: parse_bytes(p.get("size").unwrap())?,
-        num_partitions: p.get_parse("partitions")?.unwrap(),
-        backend: p.get("backend").unwrap().parse()?,
-        artifacts_dir: p.get("artifacts").unwrap().to_string(),
-        cluster_workers: p.get_parse("workers")?.unwrap(),
-        seed: p.get_parse::<u64>("seed")?.unwrap(),
-        net_latency_us: p.get_parse::<u64>("net-latency-us")?.unwrap(),
+        dataset_bytes: parse_bytes(p.require("size")?)?,
+        num_partitions: p.require_parse("partitions")?,
+        backend: p.require("backend")?.parse()?,
+        artifacts_dir: p.require("artifacts")?.to_string(),
+        cluster_workers: p.require_parse("workers")?,
+        seed: p.require_parse::<u64>("seed")?,
+        net_latency_us: p.require_parse::<u64>("net-latency-us")?,
         ..AppConfig::default()
     };
     cfg.validate()?;
@@ -259,14 +259,14 @@ fn load_maybe_tiered(
 
 fn cmd_run(p: &oseba::cli::Parsed) -> Result<()> {
     let cfg = app_config(p)?;
-    let index_kind: IndexKind = p.get("index").unwrap().parse()?;
-    let methods: Vec<Method> = match p.get("method").unwrap() {
+    let index_kind: IndexKind = p.require("index")?.parse()?;
+    let methods: Vec<Method> = match p.require("method")? {
         "both" => vec![Method::Default, Method::Oseba],
         m => vec![m.parse()?],
     };
-    let column_name = p.get("column").unwrap();
+    let column_name = p.require("column")?;
 
-    let repeat: usize = p.get_parse("repeat")?.unwrap();
+    let repeat: usize = p.require_parse("repeat")?;
     for method in methods {
         // Fresh coordinator per method: the paper measures each run from a
         // clean cluster state.
@@ -354,25 +354,22 @@ fn random_queries(
 fn cmd_batch(p: &oseba::cli::Parsed) -> Result<()> {
     let mut cfg = app_config(p)?;
     apply_budget(&mut cfg, p)?;
-    let index_kind: IndexKind = p.get("index").unwrap().parse()?;
+    let index_kind: IndexKind = p.require("index")?.parse()?;
     let backend = make_backend(cfg.backend, &cfg.artifacts_dir)?;
     let coord = Coordinator::new(&cfg, backend)?;
     let (ds, cleanup) = load_maybe_tiered(&coord, &cfg, p)?;
     let _cleanup = SpillCleanup(cleanup);
-    let column = ds.schema().column_index(p.get("column").unwrap())?;
+    let column = ds.schema().column_index(p.require("column")?)?;
 
     let queries = match p.get("ranges") {
         Some(spec) if !spec.is_empty() => parse_ranges(spec)?,
         _ => {
-            let n: usize = p.get_parse("queries")?.unwrap();
-            let width: f64 = p.get_parse::<f64>("width-pct")?.unwrap() / 100.0;
-            random_queries(
-                n,
-                width,
-                cfg.seed,
-                ds.key_min().expect("non-empty dataset"),
-                ds.key_max().expect("non-empty dataset"),
-            )
+            let n: usize = p.require_parse("queries")?;
+            let width: f64 = p.require_parse::<f64>("width-pct")? / 100.0;
+            let (Some(key_min), Some(key_max)) = (ds.key_min(), ds.key_max()) else {
+                return Err(OsebaError::Config("generated dataset is empty".into()));
+            };
+            random_queries(n, width, cfg.seed, key_min, key_max)
         }
     };
 
@@ -432,10 +429,10 @@ fn cmd_batch(p: &oseba::cli::Parsed) -> Result<()> {
 fn cmd_serve(p: &oseba::cli::Parsed) -> Result<()> {
     let mut cfg = app_config(p)?;
     apply_budget(&mut cfg, p)?;
-    let index_kind: IndexKind = p.get("index").unwrap().parse()?;
+    let index_kind: IndexKind = p.require("index")?.parse()?;
     let backend = make_backend(cfg.backend, &cfg.artifacts_dir)?;
     let coord = Arc::new(Coordinator::new(&cfg, backend)?);
-    let addr = p.get("addr").unwrap();
+    let addr = p.require("addr")?;
     if p.get_bool("live") {
         return cmd_serve_live(p, &cfg, coord, addr);
     }
@@ -455,7 +452,7 @@ fn cmd_serve_live(
     coord: Arc<Coordinator>,
     addr: &str,
 ) -> Result<()> {
-    let schema = match p.get("schema").unwrap() {
+    let schema = match p.require("schema")? {
         "climate" => oseba::storage::Schema::climate(),
         "stock" => oseba::storage::Schema::stock(),
         "cdr" => oseba::storage::Schema::cdr(),
@@ -464,8 +461,8 @@ fn cmd_serve_live(
         }
     };
     let live_cfg = LiveConfig {
-        rows_per_partition: p.get_parse("rows-per-partition")?.unwrap(),
-        max_asl: p.get_parse("max-asl")?.unwrap(),
+        rows_per_partition: p.require_parse("rows-per-partition")?,
+        max_asl: p.require_parse("max-asl")?,
     };
     let spill_dir = match p.get("spill-dir") {
         Some(d) if !d.is_empty() => Some(std::path::PathBuf::from(d)),
@@ -523,9 +520,9 @@ fn append_request(keys: &[i64], cols: &[Vec<f32>]) -> Json {
 fn cmd_ingest(p: &oseba::cli::Parsed) -> Result<()> {
     use std::io::{BufRead, BufReader, Write};
 
-    let addr = p.get("addr").unwrap();
-    let file = p.get("file").unwrap();
-    let chunk_rows: usize = p.get_parse("chunk-rows")?.unwrap();
+    let addr = p.require("addr")?;
+    let file = p.require("file")?;
+    let chunk_rows: usize = p.require_parse("chunk-rows")?;
     if chunk_rows == 0 {
         return Err(OsebaError::Config("chunk-rows must be > 0".into()));
     }
@@ -652,7 +649,7 @@ fn cmd_index(p: &oseba::cli::Parsed) -> Result<()> {
 
 fn cmd_save(p: &oseba::cli::Parsed) -> Result<()> {
     let cfg = app_config(p)?;
-    let dir = p.get("dir").unwrap();
+    let dir = p.require("dir")?;
     let gen = ClimateGen { seed: cfg.seed, ..Default::default() };
     let batch = gen.generate_bytes(cfg.dataset_bytes);
     let rows = batch.rows();
@@ -680,20 +677,22 @@ fn cmd_save(p: &oseba::cli::Parsed) -> Result<()> {
 
 fn cmd_open(p: &oseba::cli::Parsed) -> Result<()> {
     let mut cfg = AppConfig {
-        backend: p.get("backend").unwrap().parse()?,
-        artifacts_dir: p.get("artifacts").unwrap().to_string(),
-        cluster_workers: p.get_parse("workers")?.unwrap(),
+        backend: p.require("backend")?.parse()?,
+        artifacts_dir: p.require("artifacts")?.to_string(),
+        cluster_workers: p.require_parse("workers")?,
         ..AppConfig::default()
     };
     apply_budget(&mut cfg, p)?;
     let backend = make_backend(cfg.backend, &cfg.artifacts_dir)?;
     let coord = Coordinator::new(&cfg, backend)?;
 
-    let dir = p.get("dir").unwrap();
+    let dir = p.require("dir")?;
     let timer = std::time::Instant::now();
     let (ds, index) = coord.open_store(dir)?;
     let open_secs = timer.elapsed().as_secs_f64();
-    let store = ds.store().expect("open_store returns a tiered dataset");
+    let store = ds.store().ok_or_else(|| {
+        OsebaError::Store("open_store returned a dataset without a segment store".into())
+    })?;
     println!(
         "opened '{dir}' in {}: {} rows in {} partitions ({} on disk), index {} bytes",
         humansize::secs(open_secs),
@@ -776,7 +775,9 @@ fn main() {
         "save" => cmd_save(&parsed),
         "open" => cmd_open(&parsed),
         "info" => cmd_info(&parsed),
-        _ => unreachable!("cli validated"),
+        // `Cli::parse` only returns declared commands, but an exhaustive
+        // error here beats a panic if the two lists ever drift.
+        other => Err(OsebaError::Config(format!("unknown command '{other}'"))),
     };
     if let Err(e) = result {
         eprintln!("error: {e}");

@@ -72,7 +72,9 @@ impl PjRtRuntime {
                 args.len()
             )));
         }
-        let exe = self.executables.get(name).expect("just compiled");
+        let exe = self.executables.get(name).ok_or_else(|| {
+            OsebaError::Runtime(format!("{name}: executable missing after compile"))
+        })?;
         let mut out = exe.execute::<xla::Literal>(args)?;
         self.executions += 1;
         // Single device, single output: an N-tuple literal.

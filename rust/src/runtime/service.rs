@@ -20,6 +20,7 @@ use crate::runtime::backend::{check_block_len, AnalysisBackend};
 #[cfg(feature = "xla")]
 use crate::runtime::pjrt::{lit, PjRtRuntime};
 use crate::util::stats::{DistancePartial, Moments};
+use crate::util::sync::MutexExt;
 
 #[cfg_attr(not(feature = "xla"), allow(dead_code))]
 enum Request {
@@ -320,8 +321,7 @@ fn run_hist(
 impl KernelHandle {
     fn send(&self, req: Request) -> Result<()> {
         self.tx
-            .lock()
-            .unwrap()
+            .lock_recover()
             .send(req)
             .map_err(|_| OsebaError::Runtime("kernel service is gone".into()))
     }

@@ -142,13 +142,7 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let response = match handle_request(&line, coord, source, shutdown) {
-            Ok(j) => j,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::str(e.to_string())),
-            ]),
-        };
+        let response = respond(&line, coord, source, shutdown);
         writer.write_all(response.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
         if shutdown.load(Ordering::SeqCst) {
@@ -156,6 +150,54 @@ fn handle_conn(
         }
     }
     Ok(())
+}
+
+/// One request line → one response object, never a connection teardown:
+/// typed errors become `{"ok":false,"error":...}`, and a handler that
+/// *panics* is caught right here at the session boundary — the panic is
+/// reported as a protocol-level error with `"panic":true`, the engine's
+/// `sessions_failed` counter is bumped, and the connection keeps serving.
+pub fn respond(
+    line: &str,
+    coord: &Coordinator,
+    source: &ServerSource,
+    shutdown: &AtomicBool,
+) -> Json {
+    respond_caught(coord, std::panic::AssertUnwindSafe(|| {
+        handle_request(line, coord, source, shutdown)
+    }))
+}
+
+/// The catch-unwind half of [`respond`], generic over the handler so the
+/// panic path itself is unit-testable without a panicking op in the
+/// protocol.
+fn respond_caught(
+    coord: &Coordinator,
+    handler: impl FnOnce() -> Result<Json> + std::panic::UnwindSafe,
+) -> Json {
+    match std::panic::catch_unwind(handler) {
+        Ok(Ok(j)) => j,
+        Ok(Err(e)) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::str(e.to_string())),
+        ]),
+        Err(payload) => {
+            coord.context().record_session_failure();
+            let msg = payload
+                .downcast_ref::<&'static str>()
+                .copied()
+                .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+                .unwrap_or("non-string panic payload");
+            Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                (
+                    "error",
+                    Json::str(format!("internal error: request handler panicked: {msg}")),
+                ),
+                ("panic", Json::Bool(true)),
+            ])
+        }
+    }
 }
 
 /// Process one request line (exposed for unit tests — no socket needed).
@@ -194,6 +236,24 @@ fn info_fields(ds: &Dataset, coord: &Coordinator, fields: &mut Vec<(&'static str
     fields.push((
         "agg_answered",
         Json::num(coord.context().counters().partitions_agg_answered as f64),
+    ));
+    // The full engine-counter snapshot, nested under one key with the
+    // exact `EngineCounters` field names (oseba-lint's counters-surfaced
+    // rule checks every field appears here).
+    let ec = coord.context().counters();
+    fields.push((
+        "counters",
+        Json::obj(vec![
+            ("partitions_scanned", Json::num(ec.partitions_scanned as f64)),
+            ("rows_scanned", Json::num(ec.rows_scanned as f64)),
+            ("bytes_materialized", Json::num(ec.bytes_materialized as f64)),
+            ("partitions_targeted", Json::num(ec.partitions_targeted as f64)),
+            (
+                "partitions_agg_answered",
+                Json::num(ec.partitions_agg_answered as f64),
+            ),
+            ("sessions_failed", Json::num(ec.sessions_failed as f64)),
+        ]),
     ));
     fields.push(("key_min", Json::num(ds.key_min().unwrap_or(0) as f64)));
     fields.push(("key_max", Json::num(ds.key_max().unwrap_or(0) as f64)));
@@ -331,7 +391,10 @@ fn handle_stats(req: &Json, coord: &Coordinator, source: &ServerSource) -> Resul
         Method::Oseba => {
             let query = Query::stats(q, column).filtered(predicates);
             let (out, explain) = coord.execute_plan(ds, index, &query)?;
-            (out.stats().expect("stats query"), Some(explain))
+            let st = out.stats().ok_or_else(|| {
+                OsebaError::Runtime("stats query produced a non-stats output".into())
+            })?;
+            (st, Some(explain))
         }
         Method::Default => {
             if !predicates.is_empty() {
@@ -384,6 +447,14 @@ fn handle_explain(req: &Json, coord: &Coordinator, source: &ServerSource) -> Res
     // The pruning arithmetic nests under its own key so the top level
     // stays uniform with every other response shape.
     fields.push(("plan", plan.explain.to_json()));
+    // `"verify": true` runs the plan-invariant checker (DESIGN.md §12) on
+    // this lowering — debug builds check every plan already; this exposes
+    // the same check to release deployments. A violation fails the
+    // request with the `plan invariant violated` message.
+    if matches!(req.get("verify"), Some(Json::Bool(true))) {
+        plan.verify(ds, &query)?;
+        fields.push(("verified", Json::Bool(true)));
+    }
     if let Some(e) = epoch {
         fields.push(("epoch", Json::num(e as f64)));
     }
@@ -651,6 +722,20 @@ mod tests {
         assert_eq!(plan.get("zone_pruned").unwrap().as_usize(), Some(0));
         assert_eq!(plan.get("targeted").unwrap().as_usize(), Some(1));
         assert_eq!(plan.get("estimated_rows").unwrap().as_usize(), Some(1_000));
+        assert_eq!(r.get("verified"), None, "verify only runs when asked");
+        // `"verify": true` runs the plan-invariant checker on the lowering.
+        let r = handle_request(
+            &format!(
+                r#"{{"op":"explain","lo":0,"hi":{},"column":"temperature","verify":true}}"#,
+                3600 * 999
+            ),
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("verified"), Some(&Json::Bool(true)));
         // An impossible predicate zone-prunes everything, still ok:false-free.
         let r = handle_request(
             &format!(
@@ -729,6 +814,31 @@ mod tests {
         .unwrap_err();
         assert!(err.to_string().contains("live"), "got: {err}");
         assert!(handle_request(r#"{"op":"snapshot"}"#, &coord, &source, &flag).is_err());
+    }
+
+    #[test]
+    fn panicking_handler_is_caught_at_the_session_boundary() {
+        let (coord, source) = setup();
+        let flag = AtomicBool::new(false);
+        assert_eq!(coord.context().counters().sessions_failed, 0);
+
+        // A handler that dies by panic becomes a protocol-level error …
+        let r = respond_caught(&coord, std::panic::AssertUnwindSafe(|| panic!("boom")));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(r.get("panic"), Some(&Json::Bool(true)));
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("boom"));
+        assert_eq!(coord.context().counters().sessions_failed, 1);
+
+        // … the session keeps serving afterwards …
+        let r = respond(r#"{"op":"info"}"#, &coord, &source, &flag);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        let c = r.get("counters").unwrap();
+        assert_eq!(c.get("sessions_failed").unwrap().as_usize(), Some(1));
+
+        // … and typed errors keep their plain (non-panic) shape.
+        let r = respond("{", &coord, &source, &flag);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert!(r.get("panic").is_none());
     }
 
     #[test]

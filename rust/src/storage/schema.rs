@@ -35,17 +35,20 @@ impl Schema {
     /// The paper's climate schema (§IV-A).
     pub fn climate() -> Schema {
         Schema::new("time", &["temperature", "humidity", "wind_speed", "wind_dir"])
+            // lint: allow(no-unwrap) -- static column list, provably valid.
             .expect("static schema")
     }
 
     /// A stock-tick schema for the moving-average example.
     pub fn stock() -> Schema {
+        // lint: allow(no-unwrap) -- static column list, provably valid.
         Schema::new("time", &["price", "volume"]).expect("static schema")
     }
 
     /// A call-detail-record schema for the events-analysis example.
     pub fn cdr() -> Schema {
         Schema::new("time", &["duration", "dest_prefix", "hour_of_day"])
+            // lint: allow(no-unwrap) -- static column list, provably valid.
             .expect("static schema")
     }
 

@@ -63,14 +63,21 @@ pub struct StoreManifest {
     pub index: Cias,
 }
 
-fn meta_to_json(m: &PartitionMeta) -> Json {
-    Json::obj(vec![
+fn meta_to_json_map(m: &PartitionMeta) -> std::collections::BTreeMap<String, Json> {
+    [
         ("id", Json::num(m.id as f64)),
         ("key_min", Json::num(m.key_min as f64)),
         ("key_max", Json::num(m.key_max as f64)),
         ("rows", Json::num(m.rows as f64)),
         ("step", m.step.map(|s| Json::num(s as f64)).unwrap_or(Json::Null)),
-    ])
+    ]
+    .into_iter()
+    .map(|(k, v)| (k.to_string(), v))
+    .collect()
+}
+
+fn meta_to_json(m: &PartitionMeta) -> Json {
+    Json::Obj(meta_to_json_map(m))
 }
 
 use crate::store::segment::MAX_ROWS;
@@ -256,10 +263,7 @@ impl StoreManifest {
                     self.segments
                         .iter()
                         .map(|e| {
-                            let mut obj = match meta_to_json(&e.meta) {
-                                Json::Obj(m) => m,
-                                _ => unreachable!(),
-                            };
+                            let mut obj = meta_to_json_map(&e.meta);
                             obj.insert("file".into(), Json::str(e.file.clone()));
                             obj.insert(
                                 "zones".into(),

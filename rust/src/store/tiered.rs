@@ -28,6 +28,7 @@ use crate::index::{Cias, ColumnSketch, PartitionMeta, ZoneMap};
 use crate::storage::{Partition, Schema, BLOCK_ROWS};
 use crate::store::manifest::{SegmentEntry, StoreManifest};
 use crate::store::segment::{read_segment_with, segment_len, write_segment};
+use crate::util::sync::MutexExt;
 
 /// Where a partition currently lives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -206,7 +207,7 @@ impl TieredStore {
             return Err(OsebaError::Schema("cannot store an empty partition".into()));
         };
 
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock_recover();
         let id = inner.slots.len();
         if part.id != id {
             return Err(OsebaError::Store(format!(
@@ -268,7 +269,7 @@ impl TieredStore {
     /// The returned handle pins the data for the caller regardless of
     /// later evictions (evicting only drops the store's reference).
     pub fn fetch(&self, id: usize) -> Result<Arc<Partition>> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock_recover();
         inner.clock += 1;
         let now = inner.clock;
         let nslots = inner.slots.len();
@@ -370,8 +371,17 @@ impl TieredStore {
             return Ok(());
         }
         let path = self.dir.join(&inner.slots[vi].file);
-        let part =
-            Arc::clone(inner.slots[vi].resident.as_ref().expect("hot slot has data"));
+        // Every slot is resident, on disk, or both (insert establishes one
+        // of the two); a slot with neither is corrupt state, not a bug to
+        // die on — surface it as a store error.
+        let part = match inner.slots[vi].resident.as_ref() {
+            Some(p) => Arc::clone(p),
+            None => {
+                return Err(OsebaError::Store(format!(
+                    "partition {vi} has neither a resident copy nor a segment"
+                )))
+            }
+        };
         let written = write_segment(&path, &part)?;
         self.bytes_written.fetch_add(written, Ordering::Relaxed);
         inner.slots[vi].on_disk = true;
@@ -393,7 +403,7 @@ impl TieredStore {
     /// (or nothing hot remains). Returns the bytes actually freed — the
     /// block manager's memory-pressure hook.
     pub fn shrink(&self, needed: usize) -> Result<usize> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock_recover();
         let mut freed = 0usize;
         while freed < needed {
             match self.spill_lru(&mut inner, usize::MAX)? {
@@ -409,7 +419,7 @@ impl TieredStore {
     /// snapshot). Hot partitions stay hot — `save` is a checkpoint, not an
     /// eviction.
     pub fn save(&self) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock_recover();
         if inner.slots.is_empty() {
             return Err(OsebaError::Store(format!(
                 "store '{}' has no partitions to save",
@@ -436,7 +446,7 @@ impl TieredStore {
     /// unpersist path. Segments already on disk are untouched; hot-only
     /// data is discarded (unpersist means discard).
     pub fn release_resident(&self) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock_recover();
         for slot in &mut inner.slots {
             if slot.resident.take().is_some() {
                 self.tracker.release(slot.bytes);
@@ -452,13 +462,13 @@ impl TieredStore {
 
     /// Per-partition metadata (also the §III-A table-index rows).
     pub fn metas(&self) -> Vec<PartitionMeta> {
-        self.inner.lock().unwrap().slots.iter().map(|s| s.meta).collect()
+        self.inner.lock_recover().slots.iter().map(|s| s.meta).collect()
     }
 
     /// Per-column zone maps of partition `id` — pure metadata: no
     /// residency change, no fault-in. `None` for an unknown id.
     pub fn zone_maps(&self, id: usize) -> Option<Vec<ZoneMap>> {
-        self.inner.lock().unwrap().slots.get(id).map(|s| s.zones.clone())
+        self.inner.lock_recover().slots.get(id).map(|s| s.zones.clone())
     }
 
     /// The aggregate sketch of one column of partition `id` — pure
@@ -467,8 +477,7 @@ impl TieredStore {
     /// manifest (no sketch → the partition always scans).
     pub fn sketch(&self, id: usize, column: usize) -> Option<ColumnSketch> {
         self.inner
-            .lock()
-            .unwrap()
+            .lock_recover()
             .slots
             .get(id)
             .and_then(|s| s.sketches.as_ref())
@@ -478,29 +487,28 @@ impl TieredStore {
     /// Metadata of partition `id` (`None` for an unknown id) — O(1), no
     /// residency change.
     pub fn meta(&self, id: usize) -> Option<PartitionMeta> {
-        self.inner.lock().unwrap().slots.get(id).map(|s| s.meta)
+        self.inner.lock_recover().slots.get(id).map(|s| s.meta)
     }
 
     /// Number of partitions the store holds (Hot + Cold).
     pub fn num_partitions(&self) -> usize {
-        self.inner.lock().unwrap().slots.len()
+        self.inner.lock_recover().slots.len()
     }
 
     /// Total valid rows across all partitions.
     pub fn total_rows(&self) -> usize {
-        self.inner.lock().unwrap().slots.iter().map(|s| s.meta.rows).sum()
+        self.inner.lock_recover().slots.iter().map(|s| s.meta.rows).sum()
     }
 
     /// In-memory footprint of the full dataset if everything were Hot.
     pub fn total_bytes(&self) -> usize {
-        self.inner.lock().unwrap().slots.iter().map(|s| s.bytes).sum()
+        self.inner.lock_recover().slots.iter().map(|s| s.bytes).sum()
     }
 
     /// Bytes currently Hot (charged to the tracker by this store).
     pub fn resident_bytes(&self) -> usize {
         self.inner
-            .lock()
-            .unwrap()
+            .lock_recover()
             .slots
             .iter()
             .filter(|s| s.resident.is_some())
@@ -510,17 +518,17 @@ impl TieredStore {
 
     /// Smallest key across all partitions (`None` when empty).
     pub fn key_min(&self) -> Option<i64> {
-        self.inner.lock().unwrap().slots.first().map(|s| s.meta.key_min)
+        self.inner.lock_recover().slots.first().map(|s| s.meta.key_min)
     }
 
     /// Largest key across all partitions (`None` when empty).
     pub fn key_max(&self) -> Option<i64> {
-        self.inner.lock().unwrap().slots.last().map(|s| s.meta.key_max)
+        self.inner.lock_recover().slots.last().map(|s| s.meta.key_max)
     }
 
     /// Current residency of partition `id` (`None` for an unknown id).
     pub fn residency(&self, id: usize) -> Option<Residency> {
-        self.inner.lock().unwrap().slots.get(id).map(|s| {
+        self.inner.lock_recover().slots.get(id).map(|s| {
             if s.resident.is_some() {
                 Residency::Hot
             } else {

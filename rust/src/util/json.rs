@@ -330,7 +330,10 @@ impl<'a> Parser<'a> {
                     // Consume one UTF-8 scalar.
                     let rest = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| err(self, "invalid utf-8"))?;
-                    let c = rest.chars().next().unwrap();
+                    let c = match rest.chars().next() {
+                        Some(c) => c,
+                        None => return Err(err(self, "truncated utf-8")),
+                    };
                     s.push(c);
                     self.i += c.len_utf8();
                 }
@@ -361,7 +364,8 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
-        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| err(self, "invalid number"))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| err(self, "invalid number"))

@@ -5,4 +5,5 @@ pub mod humansize;
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;

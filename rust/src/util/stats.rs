@@ -30,7 +30,7 @@ impl Summary {
             return None;
         }
         let mut v: Vec<f64> = samples.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
         let n = v.len();
         let mean = v.iter().sum::<f64>() / n as f64;
         let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;

@@ -1,0 +1,97 @@
+//! Poison-tolerant locking helpers.
+//!
+//! The engine's shared state (store tiers, block cache, live datasets,
+//! cluster registries, pool queues) is guarded by `std` mutexes. A panic on
+//! one thread while a guard is held poisons the mutex, and the default
+//! `lock().unwrap()` idiom then cascades that one failure into a panic in
+//! every other thread that touches the lock — a poisoned block cache would
+//! take down the whole server even though the cached bytes are still valid.
+//!
+//! All of this crate's critical sections either complete their updates
+//! before any fallible call or protect plain data whose worst case after an
+//! interrupted update is a stale-but-well-formed value (cache maps, counter
+//! structs, queues of owned jobs). Recovering the guard is therefore sound,
+//! and strictly better than propagating the panic: the first panic is still
+//! reported (the server catches it at the session boundary and returns a
+//! typed error), while unrelated sessions keep working.
+//!
+//! `oseba-lint` (`tools/lint`) bans `lock().unwrap()` tree-wide; these
+//! helpers are the sanctioned replacement.
+
+use std::sync::{Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Recover the guard from a possibly-poisoned lock result.
+///
+/// Works for `Mutex::lock`, `RwLock::read`/`write`, and `Condvar::wait`
+/// results alike, since all of them wrap their guard in `PoisonError`.
+pub fn recover<G>(r: Result<G, PoisonError<G>>) -> G {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Mutex` extension: lock and recover from poisoning in one call.
+pub trait MutexExt<T: ?Sized> {
+    /// Like `lock().unwrap()` but recovers the guard if the mutex was
+    /// poisoned by a panicking thread instead of propagating the panic.
+    fn lock_recover(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T: ?Sized> MutexExt<T> for Mutex<T> {
+    fn lock_recover(&self) -> MutexGuard<'_, T> {
+        recover(self.lock())
+    }
+}
+
+/// `RwLock` extension: acquire and recover from poisoning in one call.
+pub trait RwLockExt<T: ?Sized> {
+    /// Poison-tolerant `read().unwrap()`.
+    fn read_recover(&self) -> RwLockReadGuard<'_, T>;
+    /// Poison-tolerant `write().unwrap()`.
+    fn write_recover(&self) -> RwLockWriteGuard<'_, T>;
+}
+
+impl<T: ?Sized> RwLockExt<T> for RwLock<T> {
+    fn read_recover(&self) -> RwLockReadGuard<'_, T> {
+        recover(self.read())
+    }
+
+    fn write_recover(&self) -> RwLockWriteGuard<'_, T> {
+        recover(self.write())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn poison<T: Send + 'static>(m: &Arc<Mutex<T>>) {
+        let m2 = Arc::clone(m);
+        let h = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("deliberate poison");
+        });
+        assert!(h.join().is_err());
+        assert!(m.is_poisoned());
+    }
+
+    #[test]
+    fn lock_recover_returns_guard_after_poison() {
+        let m = Arc::new(Mutex::new(41));
+        poison(&m);
+        *m.lock_recover() += 1;
+        assert_eq!(*m.lock_recover(), 42);
+    }
+
+    #[test]
+    fn rwlock_recover_after_poison() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = Arc::clone(&l);
+        let h = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("deliberate poison");
+        });
+        assert!(h.join().is_err());
+        l.write_recover().push(4);
+        assert_eq!(*l.read_recover(), vec![1, 2, 3, 4]);
+    }
+}

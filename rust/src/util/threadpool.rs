@@ -6,6 +6,7 @@
 //! wait for all" pattern with panic propagation, which is what the
 //! coordinator's stage execution needs.
 
+use crate::util::sync::recover;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -47,6 +48,8 @@ impl ThreadPool {
                 std::thread::Builder::new()
                     .name(format!("oseba-worker-{i}"))
                     .spawn(move || worker_loop(sh))
+                    // No caller can make progress without workers.
+                    // lint: allow(no-unwrap) -- spawn fails only on OS thread exhaustion
                     .expect("spawn worker thread")
             })
             .collect();
@@ -61,15 +64,15 @@ impl ThreadPool {
     /// Enqueue a job; it runs on some worker thread.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
         self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
-        self.shared.queue.lock().unwrap().push_back(Box::new(job));
+        recover(self.shared.queue.lock()).push_back(Box::new(job));
         self.shared.available.notify_one();
     }
 
     /// Block until every queued job has completed.
     pub fn wait_idle(&self) {
-        let mut guard = self.shared.idle_lock.lock().unwrap();
+        let mut guard = recover(self.shared.idle_lock.lock());
         while self.shared.in_flight.load(Ordering::SeqCst) != 0 {
-            guard = self.shared.idle.wait(guard).unwrap();
+            guard = recover(self.shared.idle.wait(guard));
         }
     }
 
@@ -94,7 +97,7 @@ impl ThreadPool {
             self.execute(move || {
                 let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
                 let (lock, done) = &*state;
-                let mut guard = lock.lock().unwrap();
+                let mut guard = recover(lock.lock());
                 guard.0[i] = Some(r);
                 guard.1 -= 1;
                 if guard.1 == 0 {
@@ -103,14 +106,15 @@ impl ThreadPool {
             });
         }
         let (lock, done) = &*state;
-        let mut guard = lock.lock().unwrap();
+        let mut guard = recover(lock.lock());
         while guard.1 != 0 {
-            guard = done.wait(guard).unwrap();
+            guard = recover(done.wait(guard));
         }
         let slots = std::mem::take(&mut guard.0);
         drop(guard);
         slots
             .into_iter()
+            // lint: allow(no-unwrap) -- the barrier waited for remaining == 0, so every slot is filled
             .map(|slot| match slot.expect("task completed") {
                 Ok(v) => v,
                 Err(p) => std::panic::resume_unwind(p),
@@ -127,7 +131,7 @@ struct InFlightGuard<'a>(&'a Shared);
 impl Drop for InFlightGuard<'_> {
     fn drop(&mut self) {
         if self.0.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
-            let _guard = self.0.idle_lock.lock().unwrap();
+            let _guard = recover(self.0.idle_lock.lock());
             self.0.idle.notify_all();
         }
     }
@@ -136,7 +140,7 @@ impl Drop for InFlightGuard<'_> {
 fn worker_loop(sh: Arc<Shared>) {
     loop {
         let job = {
-            let mut q = sh.queue.lock().unwrap();
+            let mut q = recover(sh.queue.lock());
             loop {
                 if let Some(job) = q.pop_front() {
                     break job;
@@ -144,7 +148,7 @@ fn worker_loop(sh: Arc<Shared>) {
                 if sh.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                q = sh.available.wait(q).unwrap();
+                q = recover(sh.available.wait(q));
             }
         };
         // Contain panics so the worker thread survives a panicking job
@@ -276,6 +280,57 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn pool_survives_poisoned_queue_mutex() {
+        // Poison the queue mutex from a foreign thread (panic while holding
+        // the guard), then prove the pool still accepts, runs, and drains
+        // work. Without `recover` every later `execute`/`worker_loop` lock
+        // would panic on `PoisonError` and the pool would be bricked.
+        let pool = ThreadPool::new(2);
+        let sh = Arc::clone(&pool.shared);
+        let poisoner = std::thread::spawn(move || {
+            let _guard = sh.queue.lock().unwrap();
+            panic!("poison the queue mutex");
+        });
+        assert!(poisoner.join().is_err(), "poisoner must have panicked");
+        assert!(pool.shared.queue.is_poisoned(), "mutex really is poisoned");
+
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+        // scope_execute (its own barrier mutex) works too.
+        let tasks: Vec<fn() -> i32> = vec![|| 1, || 2, || 3];
+        assert_eq!(pool.scope_execute(tasks), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn pool_survives_poisoned_idle_lock() {
+        // Same drill for the idle/wait_idle condvar mutex.
+        let pool = ThreadPool::new(2);
+        let sh = Arc::clone(&pool.shared);
+        let poisoner = std::thread::spawn(move || {
+            let _guard = sh.idle_lock.lock().unwrap();
+            panic!("poison the idle mutex");
+        });
+        assert!(poisoner.join().is_err());
+        assert!(pool.shared.idle_lock.is_poisoned());
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..5 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle(); // must return despite the poisoned idle lock
+        assert_eq!(counter.load(Ordering::SeqCst), 5);
     }
 
     #[test]

@@ -9,7 +9,7 @@ use std::sync::Arc;
 use oseba::config::{AppConfig, ContextConfig};
 use oseba::coordinator::Coordinator;
 use oseba::engine::{EpochSnapshot, LiveConfig, LiveDataset};
-use oseba::index::RangeQuery;
+use oseba::index::{ContentIndex, RangeQuery};
 use oseba::ingest::Chunk;
 use oseba::runtime::NativeBackend;
 use oseba::storage::Schema;
@@ -223,5 +223,127 @@ fn concurrent_queries_see_only_whole_epochs() {
     let total = (schedule.blocks * ROWS_PER_PART) as u64;
     assert_eq!(snap.rows() as u64, total);
     assert_eq!(check_snapshot(&c, &snap, RangeQuery { lo: 0, hi: span }), total);
+    live.close();
+}
+
+/// Epoch-publication stress: one appender, one concurrent *sealer*
+/// (`flush` races `append` for the write half), and several snapshot
+/// readers. Every pinned snapshot must be whole — partitions sum to the
+/// published row count, keys stay globally sorted, the published index
+/// indexes exactly the published rows — and epochs/rows never go
+/// backwards. Shaped for ThreadSanitizer: the assertions are cheap, so
+/// the threads spend their time racing publication, not verifying.
+#[test]
+fn epoch_publication_survives_concurrent_seal_and_snapshot() {
+    const BLOCKS: usize = 48;
+    const READERS: usize = 4;
+    let c = coord();
+    let live = c
+        .create_live(
+            Schema::stock(),
+            LiveConfig { rows_per_partition: ROWS_PER_PART, max_asl: 4 },
+        )
+        .unwrap();
+    let span = (BLOCKS * ROWS_PER_PART) as i64;
+    let done = AtomicBool::new(false);
+
+    std::thread::scope(|scope| {
+        let (c_ref, live_ref, done_ref) = (&c, &*live, &done);
+        // Appender: the in-order stream, split so the unsealed tail is
+        // usually non-empty when the sealer fires.
+        let appender = scope.spawn(move || {
+            for b in 0..BLOCKS {
+                for (lo, hi) in [(0, 100), (100, ROWS_PER_PART)] {
+                    live_ref.append(block_chunk(b, lo, hi)).unwrap();
+                }
+            }
+            done_ref.store(true, Ordering::SeqCst);
+        });
+        // Sealer: races `flush` against the appends, forcing extra epoch
+        // publications (short ASL partitions) mid-stream.
+        let sealer = scope.spawn(move || {
+            let mut seals = 0usize;
+            while !done_ref.load(Ordering::SeqCst) {
+                live_ref.flush().unwrap();
+                seals += 1;
+                std::thread::yield_now();
+            }
+            seals
+        });
+        let readers: Vec<_> = (0..READERS)
+            .map(|r| {
+                scope.spawn(move || {
+                    let mut qrng = Xoshiro256::seeded(0x5EA1 + r as u64);
+                    let mut last_epoch = 0u64;
+                    let mut last_rows = 0usize;
+                    let mut checks = 0usize;
+                    loop {
+                        let finished = done_ref.load(Ordering::SeqCst);
+                        let snap = live_ref.snapshot();
+                        assert!(snap.epoch() >= last_epoch, "reader {r}: epoch went backwards");
+                        assert!(snap.rows() >= last_rows, "reader {r}: rows vanished");
+                        last_epoch = snap.epoch();
+                        last_rows = snap.rows();
+                        let parts = snap.dataset().partitions();
+                        // Whole, not torn: data sums to the published count.
+                        let total: usize = parts.iter().map(|p| p.keys.len()).sum();
+                        assert_eq!(
+                            total,
+                            snap.rows(),
+                            "reader {r}: torn snapshot at epoch {}",
+                            snap.epoch()
+                        );
+                        // In-order stream: keys stay globally sorted.
+                        for w in parts.windows(2) {
+                            let (prev, next) = (&w[0], &w[1]);
+                            if let (Some(&a), Some(&b)) = (prev.keys.last(), next.keys.first()) {
+                                assert!(a < b, "reader {r}: partitions out of key order");
+                            }
+                        }
+                        // The published index indexes exactly the published rows.
+                        if let Some(index) = snap.index() {
+                            let indexed: usize = index
+                                .lookup(RangeQuery { lo: 0, hi: i64::MAX })
+                                .iter()
+                                .map(|s| s.rows())
+                                .sum();
+                            assert_eq!(
+                                indexed,
+                                snap.rows(),
+                                "reader {r}: index disagrees with epoch {}",
+                                snap.epoch()
+                            );
+                        }
+                        // Periodically run the full query oracle too.
+                        if checks % 7 == 0 {
+                            let (lo, hi) = gen::range_pair(&mut qrng, 0, span);
+                            check_snapshot(c_ref, &snap, RangeQuery { lo, hi });
+                        }
+                        checks += 1;
+                        if finished {
+                            break;
+                        }
+                    }
+                    checks
+                })
+            })
+            .collect();
+
+        appender.join().expect("appender thread");
+        let seals = sealer.join().expect("sealer thread");
+        assert!(seals > 0, "sealer ran at least once");
+        for reader in readers {
+            assert!(reader.join().expect("reader thread") > 0);
+        }
+    });
+
+    // Everything visible at the end; the sealer's extra partitions hold
+    // the same rows.
+    let snap = c.snapshot_live(&live);
+    assert_eq!(snap.rows(), BLOCKS * ROWS_PER_PART);
+    assert_eq!(
+        check_snapshot(&c, &snap, RangeQuery { lo: 0, hi: span }),
+        (BLOCKS * ROWS_PER_PART) as u64
+    );
     live.close();
 }

@@ -1,0 +1,141 @@
+#!/usr/bin/env python3
+"""Compare two sets of BENCH_*.json files and print a delta table.
+
+Standard library only. Both sides are searched recursively for files
+named ``BENCH_<name>.json`` (the machine-readable documents every
+paper-claim bench emits via ``benches/common::write_bench_json``).
+Documents present on only one side are listed but not compared.
+
+For each bench present on both sides, the two JSON trees are walked in
+lockstep and every numeric leaf with the same path is compared. Leaves
+whose path mentions ``secs`` are treated as timings: the delta column
+shows the relative change, and ``--fail-above PCT`` turns a slowdown
+beyond PCT percent on any timing leaf into exit code 1. Other numeric
+leaves (byte counts, row counts, speedups) are shown for context but
+never fail the run.
+
+With no baseline documents the script prints how to record one and
+exits 0 — the delta gate only arms itself once someone has committed
+real measured numbers (never fabricate them; see bench_results/README).
+
+Usage:
+    tools/bench_delta.py [--baseline DIR] [--current DIR] [--fail-above PCT]
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def find_docs(root):
+    """Map bench name -> parsed JSON for every BENCH_*.json under root."""
+    docs = {}
+    root = Path(root)
+    if not root.is_dir():
+        return docs
+    for path in sorted(root.rglob("BENCH_*.json")):
+        name = path.stem[len("BENCH_"):]
+        try:
+            docs[name] = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: skipping unreadable {path}: {e}", file=sys.stderr)
+    return docs
+
+
+def numeric_leaves(node, prefix=""):
+    """Yield (dotted path, value) for every numeric leaf of a JSON tree.
+
+    Array elements are keyed by their "name" field when present (bench
+    rows are name-tagged objects), else by index — so reordering rows
+    does not misalign the comparison.
+    """
+    if isinstance(node, bool):
+        return
+    if isinstance(node, (int, float)):
+        yield prefix, float(node)
+    elif isinstance(node, dict):
+        for k, v in node.items():
+            yield from numeric_leaves(v, f"{prefix}.{k}" if prefix else k)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            key = v.get("name", i) if isinstance(v, dict) else i
+            yield from numeric_leaves(v, f"{prefix}[{key}]")
+
+
+def compare(name, base_doc, cur_doc, fail_above):
+    """Print the delta rows of one bench; return the timing regressions."""
+    base = dict(numeric_leaves(base_doc))
+    cur = dict(numeric_leaves(cur_doc))
+    regressions = []
+    rows = []
+    for path in sorted(base.keys() & cur.keys()):
+        b, c = base[path], cur[path]
+        timing = "secs" in path
+        if b == c:
+            continue
+        if b != 0:
+            pct = 100.0 * (c - b) / b
+            delta = f"{pct:+8.1f}%"
+        else:
+            pct = None
+            delta = "     new"
+        flag = ""
+        if timing and pct is not None and pct > fail_above:
+            flag = "  << regression"
+            regressions.append((f"{name}:{path}", pct))
+        rows.append((path, b, c, delta, flag))
+    missing = sorted(base.keys() ^ cur.keys())
+    print(f"\n{name}: {len(rows)} changed leaves, "
+          f"{len(missing)} present on one side only")
+    for path, b, c, delta, flag in rows:
+        print(f"  {path:<60} {b:>14.6g} -> {c:>14.6g} {delta}{flag}")
+    for path in missing:
+        side = "baseline" if path in base else "current"
+        print(f"  {path:<60} ({side} only)")
+    return regressions
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="bench_results",
+                    help="directory holding recorded BENCH_*.json baselines")
+    ap.add_argument("--current", default="rust",
+                    help="directory holding freshly-emitted BENCH_*.json")
+    ap.add_argument("--fail-above", type=float, default=None, metavar="PCT",
+                    help="exit 1 if any timing leaf slowed by more than "
+                         "PCT percent (default: informational only)")
+    args = ap.parse_args()
+
+    base = find_docs(args.baseline)
+    cur = find_docs(args.current)
+    if not base:
+        print(f"no recorded baselines under {args.baseline!r} — nothing to "
+              "compare.\nTo record one: run the benches on the reference "
+              "machine and copy the emitted\nBENCH_*.json files into "
+              f"{args.baseline!r} (see bench_results/README.md).")
+        return 0
+    if not cur:
+        print(f"no BENCH_*.json found under {args.current!r} — run the "
+              "benches first.")
+        return 0
+
+    fail_above = args.fail_above if args.fail_above is not None else float("inf")
+    regressions = []
+    for name in sorted(base.keys() & cur.keys()):
+        regressions += compare(name, base[name], cur[name], fail_above)
+    for name in sorted(base.keys() ^ cur.keys()):
+        side = "baseline" if name in base else "current"
+        print(f"\n{name}: {side} only — not compared")
+
+    if regressions:
+        print(f"\n{len(regressions)} timing leaf(s) regressed beyond "
+              f"{fail_above:.1f}%:")
+        for path, pct in regressions:
+            print(f"  {path}: {pct:+.1f}%")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

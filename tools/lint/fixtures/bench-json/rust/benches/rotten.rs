@@ -1,0 +1,6 @@
+//! Seeded violation: a bench target that never emits its BENCH_*.json
+//! artifact via write_bench_json.
+
+fn main() {
+    println!("silent bench: no machine-readable output");
+}

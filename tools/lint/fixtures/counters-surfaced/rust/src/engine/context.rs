@@ -1,0 +1,12 @@
+//! Seeded violation: `ghost_counter` is declared but nothing updates it
+//! and the server never surfaces it.
+
+pub struct EngineCounters {
+    pub partitions_scanned: usize,
+    pub ghost_counter: usize,
+}
+
+pub fn bump(c: &mut EngineCounters) {
+    c.partitions_scanned += 1;
+    let _ = c.partitions_scanned;
+}

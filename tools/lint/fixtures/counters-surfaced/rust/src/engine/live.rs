@@ -1,0 +1,11 @@
+//! LiveCounters side of the fixture: `epoch` is healthy (updated, read,
+//! and surfaced) so only `ghost_counter` in context.rs fires.
+
+pub struct LiveCounters {
+    pub epoch: u64,
+}
+
+pub fn read(c: &LiveCounters) -> u64 {
+    let e = c.epoch;
+    e + c.epoch
+}

@@ -1,0 +1,8 @@
+//! Server anchor: surfaces `partitions_scanned` and `epoch` but not
+//! `ghost_counter`.
+
+pub fn info() -> String {
+    let mut s = String::from("partitions_scanned");
+    s.push_str("epoch");
+    s
+}

@@ -1,0 +1,9 @@
+//! Seeded violation: `NeverBuilt` is declared but no code constructs it.
+
+/// Error enum with a dead variant.
+pub enum OsebaError {
+    /// Constructed in uses.rs.
+    Used(String),
+    /// Constructed nowhere — the seeded violation.
+    NeverBuilt(String),
+}

@@ -1,0 +1,5 @@
+//! Constructs only one of the two variants.
+
+pub fn g() -> OsebaError {
+    OsebaError::Used(String::from("x"))
+}

@@ -1,0 +1,21 @@
+//! Seeded violation: the reader guards the v2 upgrade but not v3, while
+//! VERSION says the writer can emit v3.
+
+pub const VERSION: u32 = 3;
+pub const MIN_VERSION: u32 = 1;
+
+pub fn to_json(version: u32) -> u32 {
+    VERSION + version
+}
+
+pub fn from_json(version: u32) -> bool {
+    if version < MIN_VERSION || version > VERSION {
+        return false;
+    }
+    if version < 2 {
+        // v1 upgrade path handled...
+        return true;
+    }
+    // ...but no `version < 3` guard — the seeded violation.
+    true
+}

@@ -1,0 +1,7 @@
+//! Seeded violation: `.lock().unwrap()` — the poisoning cascade.
+
+use std::sync::Mutex;
+
+pub fn f(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}

@@ -1,0 +1,11 @@
+//! Seeded violation: panicking macros outside test scope.
+
+pub fn f(x: u32) -> u32 {
+    if x == 0 {
+        panic!("zero");
+    }
+    match x {
+        1 => unreachable!("one"),
+        _ => x,
+    }
+}

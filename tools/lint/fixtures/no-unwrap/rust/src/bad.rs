@@ -1,0 +1,9 @@
+//! Seeded violation: `.unwrap()` / `.expect(..)` outside test scope.
+
+pub fn first(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn second(v: Option<u32>) -> u32 {
+    v.expect("present")
+}
