@@ -1,0 +1,57 @@
+"""bench_delta gate tests: quantile leaves (p50/p99, as the traffic
+harness emits) regress under --fail-above exactly like timing leaves,
+while count-style leaves never fail the run."""
+
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[2]
+
+spec = importlib.util.spec_from_file_location(
+    "bench_delta", ROOT / "tools" / "bench_delta.py"
+)
+bench_delta = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(bench_delta)
+
+
+def test_quantile_leaf_detection():
+    assert bench_delta.is_quantile_leaf("classes[cdr].p50")
+    assert bench_delta.is_quantile_leaf("classes[climate].p99")
+    assert bench_delta.is_quantile_leaf("ops.op_stats.p999")
+    assert not bench_delta.is_quantile_leaf("classes[cdr].ops")
+    assert not bench_delta.is_quantile_leaf("cias_lookup_p50_m15")
+    assert not bench_delta.is_quantile_leaf("classes[cdr].p5000")
+
+
+def write_doc(root, classes):
+    root.mkdir(parents=True, exist_ok=True)
+    doc = {"bench": "traffic", "classes": classes}
+    (root / "BENCH_traffic.json").write_text(json.dumps(doc))
+
+
+def run_main(monkeypatch, base, cur, fail_above):
+    argv = ["bench_delta.py", "--baseline", str(base), "--current", str(cur),
+            "--fail-above", str(fail_above)]
+    monkeypatch.setattr(sys, "argv", argv)
+    return bench_delta.main()
+
+
+def test_p99_regression_fails_the_gate(monkeypatch, tmp_path, capsys):
+    write_doc(tmp_path / "base", [{"name": "cdr", "ops": 200, "p99": 0.002}])
+    write_doc(tmp_path / "cur", [{"name": "cdr", "ops": 200, "p99": 0.004}])
+    assert run_main(monkeypatch, tmp_path / "base", tmp_path / "cur", 10) == 1
+    assert "regression" in capsys.readouterr().out
+
+
+def test_count_changes_never_fail(monkeypatch, tmp_path):
+    write_doc(tmp_path / "base", [{"name": "cdr", "ops": 200, "p99": 0.002}])
+    write_doc(tmp_path / "cur", [{"name": "cdr", "ops": 120, "p99": 0.002}])
+    assert run_main(monkeypatch, tmp_path / "base", tmp_path / "cur", 10) == 0
+
+
+def test_improvement_passes(monkeypatch, tmp_path):
+    write_doc(tmp_path / "base", [{"name": "cdr", "p99": 0.004}])
+    write_doc(tmp_path / "cur", [{"name": "cdr", "p99": 0.002}])
+    assert run_main(monkeypatch, tmp_path / "base", tmp_path / "cur", 10) == 0

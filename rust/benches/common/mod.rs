@@ -33,6 +33,7 @@ pub fn backend_kind() -> BackendKind {
     }
 }
 
+#[allow(dead_code)]
 pub fn app_cfg(backend: BackendKind) -> AppConfig {
     AppConfig {
         ctx: ContextConfig { num_workers: 4, memory_budget: None },
@@ -44,6 +45,7 @@ pub fn app_cfg(backend: BackendKind) -> AppConfig {
 }
 
 /// Fresh coordinator + loaded climate dataset of `bytes` raw size.
+#[allow(dead_code)]
 pub fn setup(bytes: usize, partitions: usize, backend: BackendKind) -> (Coordinator, Dataset, usize) {
     let cfg = app_cfg(backend);
     let be = make_backend(cfg.backend, &cfg.artifacts_dir).expect("backend");

@@ -189,6 +189,53 @@ fn main() {
         scalar / lanes.max(1e-12)
     );
 
+    // ---- observability overhead: instrumented vs uninstrumented stats ----
+    oseba::bench::section("metrics overhead on the stats path (registry on vs off)");
+    use oseba::coordinator::Query;
+    let (coord, ds, _raw) = common::setup_native(4 << 20, 16);
+    let cias = Cias::build(ds.partitions()).expect("cias");
+    let key_hi = ds.key_max().unwrap_or(0);
+    let stats_queries: Vec<Query> = {
+        let mut rng = Xoshiro256::seeded(42);
+        (0..200)
+            .map(|_| {
+                let lo = rng.below((key_hi - step * 64) as u64 + 1) as i64;
+                Query::stats(RangeQuery { lo, hi: lo + step * 64 }, 0)
+            })
+            .collect()
+    };
+    let run_queries = |label: &str| {
+        let (coord, ds, cias, qs) = (&coord, &ds, &cias, &stats_queries);
+        bench(&cfg, label, move || {
+            for q in qs {
+                let _ = coord.execute_plan(ds, cias, q).expect("stats");
+            }
+        })
+    };
+    let metrics_on = run_queries("stats x200, metrics on ");
+    coord.context().metrics().set_enabled(false);
+    let metrics_off = run_queries("stats x200, metrics off");
+    coord.context().metrics().set_enabled(true);
+    println!("{}", table(&[metrics_on.clone(), metrics_off.clone()]));
+    // Min-of-iters: the least-noisy estimate of the true cost of each arm.
+    let on_min = metrics_on.summary.min;
+    let off_min = metrics_off.summary.min;
+    let overhead_ratio = on_min / off_min.max(1e-12);
+    let per_query = (on_min - off_min).max(0.0) / stats_queries.len() as f64;
+    println!(
+        "instrumented {} vs uninstrumented {} -> ratio {:.3} ({:.1e}s/query)",
+        humansize::secs(on_min),
+        humansize::secs(off_min),
+        overhead_ratio,
+        per_query
+    );
+    // ISSUE 7 acceptance: histogram recording costs <5% of the stats
+    // path (or, on noisy CI boxes, under 5us absolute per query).
+    assert!(
+        overhead_ratio < 1.05 || per_query < 5e-6,
+        "metrics overhead too high: ratio {overhead_ratio:.3}, {per_query:.2e}s/query"
+    );
+
     use oseba::util::json::Json;
     common::write_bench_json(
         "index_micro",
@@ -199,6 +246,9 @@ fn main() {
             ("segment_stats_lanes_p50", Json::num(lanes)),
             ("segment_stats_scalar_p50", Json::num(scalar)),
             ("fold_speedup", Json::num(scalar / lanes.max(1e-12))),
+            ("metrics_on_min_secs", Json::num(on_min)),
+            ("metrics_off_min_secs", Json::num(off_min)),
+            ("metrics_overhead_ratio", Json::num(overhead_ratio)),
         ]),
     );
 }

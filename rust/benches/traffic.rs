@@ -1,0 +1,248 @@
+//! Mixed-traffic harness: replay a configurable op mixture from the three
+//! datagens against live server loops and report per-class latency
+//! quantiles straight from the crate's own latency histograms.
+//!
+//! Three servers run concurrently, one per workload class:
+//!
+//! * `climate` — wide scans (~20% of the keyspace) over `temperature`;
+//! * `stock`   — one-day windows over `price`;
+//! * `cdr`     — point lookups over `duration` with a `where` predicate.
+//!
+//! Worker threads each hold one connection per server and draw ops from
+//! the mixture with a seeded RNG, so a run is reproducible. Latencies are
+//! recorded into per-class [`LatencyHistogram`]s (the same type the
+//! server's `metrics` op serves) and merged across threads — this bench
+//! dogfoods the observability layer it measures.
+//!
+//! Knobs (env): `OSEBA_TRAFFIC_OPS` total ops (default 600),
+//! `OSEBA_TRAFFIC_CONC` worker threads (default 4), `OSEBA_TRAFFIC_ROWS`
+//! rows per dataset (default 60_000), `OSEBA_TRAFFIC_MIX` weights as
+//! `climate:stock:cdr` (default `1:1:1`).
+//!
+//! Emits `BENCH_traffic.json` with p50/p99/mean latency, error count,
+//! faults and bytes materialized per op class.
+
+mod common;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+use oseba::config::AppConfig;
+use oseba::coordinator::{Coordinator, IndexKind};
+use oseba::datagen::{CdrGen, ClimateGen, StockGen};
+use oseba::metrics::{LatencyHistogram, Timer};
+use oseba::runtime::NativeBackend;
+use oseba::server::QueryServer;
+use oseba::util::json::Json;
+use oseba::util::rng::Xoshiro256;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// One workload class: a dedicated server plus the request generator for
+/// its op shape.
+struct OpClass {
+    name: &'static str,
+    addr: std::net::SocketAddr,
+    /// Inclusive key range of the loaded dataset.
+    key_hi: i64,
+    key_step: i64,
+    handle: std::thread::JoinHandle<()>,
+    hist: Arc<LatencyHistogram>,
+    errors: Arc<AtomicU64>,
+}
+
+impl OpClass {
+    /// A request line for this class drawn from `rng`.
+    fn request(&self, rng: &mut Xoshiro256) -> String {
+        match self.name {
+            "climate" => {
+                // Wide scan: ~20% of the keyspace, random offset.
+                let span = self.key_hi / 5;
+                let lo = rng.below((self.key_hi - span) as u64 + 1) as i64;
+                format!(
+                    r#"{{"op":"stats","lo":{lo},"hi":{},"column":"temperature"}}"#,
+                    lo + span
+                )
+            }
+            "stock" => {
+                // One trading day of per-minute bars.
+                let span = 86_400.min(self.key_hi);
+                let lo = rng.below((self.key_hi - span) as u64 + 1) as i64;
+                format!(r#"{{"op":"stats","lo":{lo},"hi":{},"column":"price"}}"#, lo + span)
+            }
+            _ => {
+                // Point lookup on the key grid, predicate pushed down.
+                let key = rng.below((self.key_hi / self.key_step) as u64 + 1) as i64
+                    * self.key_step;
+                format!(
+                    r#"{{"op":"stats","lo":{key},"hi":{key},"column":"duration","where":"duration >= 0"}}"#
+                )
+            }
+        }
+    }
+}
+
+/// Start one server over `batch`-shaped data and return its class handle.
+fn start_class(
+    name: &'static str,
+    batch: oseba::storage::RecordBatch,
+    key_step: i64,
+) -> OpClass {
+    let cfg = AppConfig { cluster_workers: 2, ..Default::default() };
+    let coord = Coordinator::new(&cfg, Arc::new(NativeBackend)).expect("coordinator");
+    let ds = coord.load(batch, 16).expect("load");
+    let key_hi = ds.key_max().unwrap_or(0);
+    let server =
+        QueryServer::new(Arc::new(coord), ds, IndexKind::Cias).expect("server");
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", |a| addr_tx.send(a).unwrap()).expect("serve");
+    });
+    let addr = addr_rx.recv().expect("bound address");
+    OpClass {
+        name,
+        addr,
+        key_hi,
+        key_step,
+        handle,
+        hist: Arc::new(LatencyHistogram::new()),
+        errors: Arc::new(AtomicU64::new(0)),
+    }
+}
+
+/// One line-delimited JSON round trip.
+fn ask(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    req: &str,
+) -> Json {
+    stream.write_all(req.as_bytes()).expect("send");
+    stream.write_all(b"\n").expect("send");
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("recv");
+    Json::parse(line.trim()).expect("response json")
+}
+
+fn main() {
+    let ops = env_usize("OSEBA_TRAFFIC_OPS", 600);
+    let conc = env_usize("OSEBA_TRAFFIC_CONC", 4).max(1);
+    let rows = env_usize("OSEBA_TRAFFIC_ROWS", 60_000);
+    let mix_spec = std::env::var("OSEBA_TRAFFIC_MIX").unwrap_or_else(|_| "1:1:1".into());
+    let weights: Vec<u64> = mix_spec
+        .split(':')
+        .map(|w| w.parse().expect("OSEBA_TRAFFIC_MIX must be w:w:w"))
+        .collect();
+    assert_eq!(weights.len(), 3, "OSEBA_TRAFFIC_MIX must be climate:stock:cdr");
+    let total_weight: u64 = weights.iter().sum();
+    assert!(total_weight > 0, "OSEBA_TRAFFIC_MIX must have a non-zero weight");
+
+    println!("traffic: {ops} ops, {conc} workers, {rows} rows/class, mix {mix_spec}");
+    let classes = Arc::new([
+        start_class("climate", ClimateGen::default().generate(rows), 3_600),
+        start_class("stock", StockGen::default().generate(rows), 60),
+        start_class("cdr", CdrGen::default().generate(rows), 30),
+    ]);
+
+    let wall = Timer::start();
+    let per_worker = ops.div_ceil(conc);
+    let workers: Vec<_> = (0..conc)
+        .map(|w| {
+            let classes = Arc::clone(&classes);
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256::seeded(0x7AFF1C + w as u64);
+                // One long-lived connection per server, like a real client.
+                let mut conns: Vec<(TcpStream, BufReader<TcpStream>)> = classes
+                    .iter()
+                    .map(|c| {
+                        let s = TcpStream::connect(c.addr).expect("connect");
+                        let r = BufReader::new(s.try_clone().expect("clone"));
+                        (s, r)
+                    })
+                    .collect();
+                for _ in 0..per_worker {
+                    let mut pick = rng.below(total_weight);
+                    let mut idx = 0;
+                    while pick >= weights[idx] {
+                        pick -= weights[idx];
+                        idx += 1;
+                    }
+                    let class = &classes[idx];
+                    let req = class.request(&mut rng);
+                    let (stream, reader) = &mut conns[idx];
+                    let t = Timer::start();
+                    let resp = ask(stream, reader, &req);
+                    class.hist.record_duration(t.elapsed());
+                    if resp.get("ok") != Some(&Json::Bool(true)) {
+                        class.errors.fetch_add(1, Ordering::Relaxed);
+                        eprintln!("{} error: {resp}", class.name);
+                    }
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().expect("worker");
+    }
+    let wall_secs = wall.secs();
+
+    // Drain per-class engine counters over the wire (the servers own
+    // their coordinators), then shut each one down.
+    let mut class_docs = Vec::new();
+    let Ok(classes) = Arc::try_unwrap(classes) else {
+        panic!("workers joined; no Arc clones remain")
+    };
+    for class in classes {
+        let mut stream = TcpStream::connect(class.addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+        let info = ask(&mut stream, &mut reader, r#"{"op":"info"}"#);
+        let counters = info.get("counters").expect("info counters");
+        let bytes = counters.get("bytes_materialized").and_then(Json::as_f64).unwrap_or(0.0);
+        // In-memory datasets never fault; a tiered deployment surfaces
+        // the same leaf with real traffic.
+        let faults = info.get("faults").and_then(Json::as_f64).unwrap_or(0.0);
+        ask(&mut stream, &mut reader, r#"{"op":"shutdown"}"#);
+        class.handle.join().expect("server thread");
+
+        let snap = class.hist.snapshot();
+        let errors = class.errors.load(Ordering::Relaxed);
+        println!(
+            "  {:<8} {:>6} ops  p50 {:>10.6}s  p99 {:>10.6}s  {} errors",
+            class.name,
+            snap.count(),
+            snap.p50() as f64 / 1e9,
+            snap.p99() as f64 / 1e9,
+            errors,
+        );
+        class_docs.push(Json::obj(vec![
+            ("name", Json::str(class.name)),
+            ("ops", Json::num(snap.count() as f64)),
+            ("errors", Json::num(errors as f64)),
+            ("p50", Json::num(snap.p50() as f64 / 1e9)),
+            ("p99", Json::num(snap.p99() as f64 / 1e9)),
+            ("mean_secs", Json::num(snap.mean_secs())),
+            ("faults", Json::num(faults)),
+            ("bytes_selected", Json::num(bytes)),
+        ]));
+    }
+
+    let done = per_worker * conc;
+    println!(
+        "traffic: {done} ops in {wall_secs:.3}s ({:.0} ops/s)",
+        done as f64 / wall_secs.max(1e-9)
+    );
+    common::write_bench_json(
+        "traffic",
+        Json::obj(vec![
+            ("bench", Json::str("traffic")),
+            ("ops", Json::num(done as f64)),
+            ("concurrency", Json::num(conc as f64)),
+            ("rows_per_class", Json::num(rows as f64)),
+            ("wall_secs", Json::num(wall_secs)),
+            ("classes", Json::arr(class_docs)),
+        ]),
+    );
+}

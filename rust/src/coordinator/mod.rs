@@ -9,12 +9,13 @@ pub mod session;
 
 pub use plan::{
     parse_predicates, plan_query, plan_query_opts, Explain, PhysicalPlan, PlanOptions,
-    PrunedRange, Query, QueryOp, QueryOutput,
+    PlanTimings, PrunedRange, Query, QueryOp, QueryOutput,
 };
 pub use planner::{plan_batch, verify_batch, IndexKind, Method, PlannedQuery};
 pub use session::{run_batch_session, run_session, BatchSessionReport, SessionReport};
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::analysis::ops::{gather_filtered, selection_mask, slice_moments_filtered};
 use crate::analysis::{Analyzer, PeriodStats};
@@ -23,7 +24,7 @@ use crate::config::AppConfig;
 use crate::engine::{Dataset, EpochSnapshot, LiveConfig, LiveDataset, OsebaContext};
 use crate::error::{OsebaError, Result};
 use crate::index::{Cias, ColumnPredicate, ContentIndex, RangeQuery, TableIndex};
-use crate::metrics::{BatchReport, Timer};
+use crate::metrics::{phase_mark, BatchReport, PlanPhase, Span, Timer};
 use crate::runtime::backend::AnalysisBackend;
 use crate::storage::{Partition, RecordBatch, Schema};
 use crate::util::stats::{Moments, TrendPartial};
@@ -37,6 +38,57 @@ enum PlanSource {
     Scan(Arc<Partition>),
     /// Merge the precomputed sketch partials instead of reading.
     Sketch(crate::index::ColumnSketch),
+}
+
+/// Wall-clock split of one physical execution: slice resolve / cold
+/// fault-in versus scanning + partial merging. Accumulated with
+/// [`phase_mark`], so readings are monotonic-safe.
+#[derive(Clone, Copy, Debug, Default)]
+struct ExecTimings {
+    fault_in: Duration,
+    scan_merge: Duration,
+}
+
+/// Assemble the span tree of one executed plan. Phase wall times come
+/// from the lowering/execution timings; per-phase counts come straight
+/// from the plan's [`Explain`], so a trace always agrees with the
+/// `explain` output for the same query.
+fn trace_span(plan: &PhysicalPlan, et: &ExecTimings, faults: usize, total: Duration) -> Span {
+    let ex = &plan.explain;
+    Span::new("query")
+        .with_secs(total.as_secs_f64())
+        .count("partitions", ex.partitions as u64)
+        .count("merged_ranges", ex.merged_ranges as u64)
+        .child(
+            Span::new("targeting")
+                .with_secs(plan.timings.targeting.as_secs_f64())
+                .count("considered", ex.considered as u64)
+                .count("key_pruned", ex.key_pruned as u64),
+        )
+        .child(
+            Span::new("zone_pruning")
+                .with_secs(plan.timings.zone_pruning.as_secs_f64())
+                .count("zone_pruned", ex.zone_pruned as u64),
+        )
+        .child(
+            Span::new("sketch_classify")
+                .with_secs(plan.timings.sketch_classify.as_secs_f64())
+                .count("agg_answered", ex.agg_answered as u64)
+                .count("rows_avoided", ex.rows_avoided as u64)
+                .count("bytes_avoided", ex.bytes_avoided as u64),
+        )
+        .child(
+            Span::new("fault_in")
+                .with_secs(et.fault_in.as_secs_f64())
+                .count("targeted", ex.targeted as u64)
+                .count("faults", faults as u64),
+        )
+        .child(
+            Span::new("scan_merge")
+                .with_secs(et.scan_merge.as_secs_f64())
+                .count("estimated_rows", ex.estimated_rows as u64)
+                .count("estimated_bytes", ex.estimated_bytes as u64),
+        )
 }
 
 /// A finalized linear-trend fit over a key-range selection (least squares
@@ -322,8 +374,52 @@ impl Coordinator {
         index: &dyn ContentIndex,
         query: &Query,
     ) -> Result<(QueryOutput, Explain)> {
+        let (out, explain, _) = self.execute_plan_observed(ds, index, query, false)?;
+        Ok((out, explain))
+    }
+
+    /// [`Self::execute_plan`] plus the per-query trace: the returned
+    /// [`Span`] tree carries wall time per plan/execution phase and the
+    /// phase counts from the same plan's [`Explain`] (so a trace always
+    /// agrees with `explain` for the identical query). The server's
+    /// `"trace":true` flag and the slow-query log are fed from here.
+    pub fn execute_plan_traced(
+        &self,
+        ds: &Dataset,
+        index: &dyn ContentIndex,
+        query: &Query,
+    ) -> Result<(QueryOutput, Explain, Span)> {
+        let (out, explain, span) = self.execute_plan_observed(ds, index, query, true)?;
+        Ok((out, explain, span.unwrap_or_default()))
+    }
+
+    /// Shared body of [`Self::execute_plan`] / [`Self::execute_plan_traced`]:
+    /// lower, record per-phase latencies into the metrics registry, execute,
+    /// and (when asked) assemble the span tree.
+    fn execute_plan_observed(
+        &self,
+        ds: &Dataset,
+        index: &dyn ContentIndex,
+        query: &Query,
+        want_trace: bool,
+    ) -> Result<(QueryOutput, Explain, Option<Span>)> {
+        let total = Instant::now();
         let plan = plan_query(ds, index, query, true)?;
-        Ok((self.execute_physical(ds, &plan, query)?, plan.explain))
+        let m = self.ctx.metrics();
+        m.record_phase(PlanPhase::Targeting, plan.timings.targeting);
+        m.record_phase(PlanPhase::ZonePruning, plan.timings.zone_pruning);
+        m.record_phase(PlanPhase::SketchClassify, plan.timings.sketch_classify);
+        let store_before = ds.store().map(|s| s.counters()).unwrap_or_default();
+        let mut et = ExecTimings::default();
+        let out = self.execute_physical_timed(ds, &plan, query, &mut et)?;
+        m.record_phase(PlanPhase::FaultIn, et.fault_in);
+        m.record_phase(PlanPhase::ScanMerge, et.scan_merge);
+        let span = want_trace.then(|| {
+            let faults =
+                ds.store().map(|s| s.counters().since(&store_before).faults).unwrap_or(0);
+            trace_span(&plan, &et, faults, total.elapsed())
+        });
+        Ok((out, plan.explain, span))
     }
 
     /// Execute an already-lowered [`PhysicalPlan`]. Public so the pruning
@@ -335,25 +431,45 @@ impl Coordinator {
         plan: &PhysicalPlan,
         query: &Query,
     ) -> Result<QueryOutput> {
+        self.execute_physical_timed(ds, plan, query, &mut ExecTimings::default())
+    }
+
+    /// [`Self::execute_physical`] with the execution wall clock split into
+    /// fault-in (slice resolve, including cold faults) and scan/merge.
+    /// Trend and distance gather+analyze in one pass, so their whole body
+    /// is attributed to scan/merge.
+    fn execute_physical_timed(
+        &self,
+        ds: &Dataset,
+        plan: &PhysicalPlan,
+        query: &Query,
+        et: &mut ExecTimings,
+    ) -> Result<QueryOutput> {
         match query.op {
             QueryOp::Stats { column } => {
+                let mark = Instant::now();
                 let items = self.stats_items(ds, &plan.ranges, column)?;
+                let mark = phase_mark(&mut et.fault_in, mark);
                 if items.is_empty() {
                     return Err(empty_selection_error(query));
                 }
                 let stats = self.run_stats_tasks(items, column, &query.predicates)?;
+                phase_mark(&mut et.scan_merge, mark);
                 Ok(QueryOutput::Stats(stats))
             }
             QueryOp::Trend { column, window } => {
+                let mark = Instant::now();
                 let (series, dropped) =
                     self.gather_plan_series(ds, &plan.ranges, column, &query.predicates)?;
                 let mut stats = self.analyzer.ma_stats_of(&series, window)?;
                 // NaN policy: the rows the gather dropped (NaN target
                 // values of predicate-passing rows) stay surfaced.
                 stats.nans += dropped as u64;
+                phase_mark(&mut et.scan_merge, mark);
                 Ok(QueryOutput::Trend(stats))
             }
             QueryOp::Distance { column, .. } => {
+                let mark = Instant::now();
                 let (av, am) =
                     self.gather_plan_masked(ds, &plan.ranges, column, &query.predicates)?;
                 let (bv, bm) =
@@ -376,7 +492,9 @@ impl Coordinator {
                     .filter(|&(_, (ma, mb))| ma && mb)
                     .map(|(pair, _)| pair)
                     .unzip();
-                Ok(QueryOutput::Distance(self.analyzer.distance_of(&sa, &sb)?))
+                let distance = self.analyzer.distance_of(&sa, &sb)?;
+                phase_mark(&mut et.scan_merge, mark);
+                Ok(QueryOutput::Distance(distance))
             }
         }
     }
@@ -677,6 +795,7 @@ impl Coordinator {
             })
             .collect();
         let n_tasks = tasks.len();
+        let mark = Instant::now();
         let partials = self.ctx.pool().scope_execute(tasks);
 
         let mut seg_moments = vec![Moments::EMPTY; segments.len()];
@@ -685,6 +804,8 @@ impl Coordinator {
                 seg_moments[seg] = seg_moments[seg].merge(m);
             }
         }
+        let mut scan_merge = Duration::ZERO;
+        let mark = phase_mark(&mut scan_merge, mark);
         // Demux: a query's moments are the merge of the elementary
         // segments it covers (each segment knows its covering sources).
         let mut per_query = vec![Moments::EMPTY; queries.len()];
@@ -705,6 +826,10 @@ impl Coordinator {
                 })
             })
             .collect::<Result<Vec<_>>>()?;
+        let mut demux = Duration::ZERO;
+        phase_mark(&mut demux, mark);
+        self.ctx.metrics().record_phase(PlanPhase::ScanMerge, scan_merge);
+        self.ctx.metrics().record_phase(PlanPhase::Demux, demux);
 
         let store_delta = ds
             .store()

@@ -23,6 +23,8 @@
 //! considered / key-pruned / zone-pruned / targeted, estimated bytes) for
 //! the CLI, the server's `explain` op, and the pruning bench.
 
+use std::time::{Duration, Instant};
+
 use crate::analysis::{DistanceResult, PeriodStats};
 use crate::coordinator::planner::plan_batch;
 use crate::engine::Dataset;
@@ -30,6 +32,7 @@ use crate::error::{OsebaError, Result};
 use crate::index::{
     zones_satisfiable, ColumnPredicate, ContentIndex, PartitionSlice, PredOp, RangeQuery,
 };
+use crate::metrics::phase_mark;
 use crate::storage::Schema;
 use crate::util::json::Json;
 
@@ -244,9 +247,23 @@ impl Explain {
     }
 }
 
+/// Wall-clock spent in each optimizer phase of one lowering, measured
+/// with monotonic-safe arithmetic ([`phase_mark`]) so a zero-width phase
+/// can never record a negative duration. Fed into the per-phase latency
+/// histograms and the `"trace":true` span tree.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanTimings {
+    /// Key-index lookups (CIAS/ASL targeting).
+    pub targeting: Duration,
+    /// Zone-map predicate checks over proposed slices.
+    pub zone_pruning: Duration,
+    /// Sketch coverage classification of surviving slices.
+    pub sketch_classify: Duration,
+}
+
 /// A lowered query: merged ranges with surviving slices (plus the baseline
 /// selection for distance ops) and the pruning report.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct PhysicalPlan {
     /// Merged, pruned selection ranges, in key order.
     pub ranges: Vec<PrunedRange>,
@@ -254,6 +271,19 @@ pub struct PhysicalPlan {
     pub baseline: Vec<PrunedRange>,
     /// Pruning arithmetic over the whole plan (baseline included).
     pub explain: Explain,
+    /// Wall-clock per optimizer phase (observability only).
+    pub timings: PlanTimings,
+}
+
+/// Plan identity is structural — ranges, baseline, explain. `timings` is
+/// a measurement of one lowering, not part of what the plan *is*: two
+/// identical lowerings are the same plan however long each took.
+impl PartialEq for PhysicalPlan {
+    fn eq(&self, other: &Self) -> bool {
+        self.ranges == other.ranges
+            && self.baseline == other.baseline
+            && self.explain == other.explain
+    }
 }
 
 impl PhysicalPlan {
@@ -434,8 +464,9 @@ pub(crate) fn covered_in(
 }
 
 /// Key-target, zone-prune and (for sketch-answerable ops) classify one set
-/// of ranges, accumulating into `ex`. `agg_column` is `Some(column)` when
-/// covered partitions may be answered from their aggregate sketches.
+/// of ranges, accumulating counts into `ex` and per-phase wall time into
+/// `timings`. `agg_column` is `Some(column)` when covered partitions may
+/// be answered from their aggregate sketches.
 #[allow(clippy::too_many_arguments)]
 fn prune_ranges(
     ds: &Dataset,
@@ -446,35 +477,50 @@ fn prune_ranges(
     agg_column: Option<usize>,
     seen: &mut [bool],
     ex: &mut Explain,
+    timings: &mut PlanTimings,
 ) -> Result<Vec<PrunedRange>> {
     let mut out = Vec::new();
     for pq in plan_batch(ranges) {
         ex.merged_ranges += 1;
-        let mut survivors = Vec::new();
-        let mut covered = Vec::new();
-        for s in index.lookup(pq.range) {
-            ex.considered += 1;
+        // Phase 1 — targeting: the super index proposes candidate slices.
+        let mark = Instant::now();
+        let proposed = index.lookup(pq.range);
+        ex.considered += proposed.len();
+        for s in &proposed {
             if let Some(flag) = seen.get_mut(s.partition) {
                 *flag = true;
             }
+        }
+        let mark = phase_mark(&mut timings.targeting, mark);
+        // Phase 2 — zone pruning: drop slices whose zone maps cannot
+        // satisfy the predicate conjunction.
+        let mut survivors = Vec::with_capacity(proposed.len());
+        for s in proposed {
             if !zone_pruning || zone_keep(ds, predicates, s.partition) {
-                ex.targeted += 1;
-                match agg_column
-                    .and_then(|c| covered_in(ds, s.partition, c, std::slice::from_ref(&pq.range)))
-                {
-                    Some(_) => {
-                        // Answered from the sketch: no rows will be read.
-                        ex.agg_answered += 1;
-                        ex.rows_avoided += s.rows();
-                        covered.push(s.partition);
-                    }
-                    None => ex.estimated_rows += s.rows(),
-                }
                 survivors.push(s);
             } else {
                 ex.zone_pruned += 1;
             }
         }
+        let mark = phase_mark(&mut timings.zone_pruning, mark);
+        // Phase 3 — sketch classification: covered survivors are answered
+        // from their aggregate sketches, the rest go to the scan path.
+        let mut covered = Vec::new();
+        for s in &survivors {
+            ex.targeted += 1;
+            match agg_column
+                .and_then(|c| covered_in(ds, s.partition, c, std::slice::from_ref(&pq.range)))
+            {
+                Some(_) => {
+                    // Answered from the sketch: no rows will be read.
+                    ex.agg_answered += 1;
+                    ex.rows_avoided += s.rows();
+                    covered.push(s.partition);
+                }
+                None => ex.estimated_rows += s.rows(),
+            }
+        }
+        phase_mark(&mut timings.sketch_classify, mark);
         // Lookup yields the compressed region in id order but ASL entries
         // in *key* order — sort so `is_covered` can binary-search.
         covered.sort_unstable();
@@ -565,6 +611,7 @@ pub fn plan_query_opts(
     };
     let mut ex = Explain { partitions: ds.num_partitions(), ..Explain::default() };
     let mut seen = vec![false; ex.partitions];
+    let mut timings = PlanTimings::default();
     let ranges = prune_ranges(
         ds,
         index,
@@ -574,6 +621,7 @@ pub fn plan_query_opts(
         agg_column,
         &mut seen,
         &mut ex,
+        &mut timings,
     )?;
     let baseline = match query.op {
         QueryOp::Distance { baseline, .. } => {
@@ -592,6 +640,7 @@ pub fn plan_query_opts(
                 None,
                 &mut seen,
                 &mut ex,
+                &mut timings,
             )?
         }
         _ => Vec::new(),
@@ -600,7 +649,7 @@ pub fn plan_query_opts(
     let row_bytes = ds.schema().row_bytes();
     ex.estimated_bytes = ex.estimated_rows * row_bytes;
     ex.bytes_avoided = ex.rows_avoided * row_bytes;
-    let plan = PhysicalPlan { ranges, baseline, explain: ex };
+    let plan = PhysicalPlan { ranges, baseline, explain: ex, timings };
     // Every lowering self-checks in debug builds (tests, benches run with
     // `--release` skip it; the server's `explain {verify}` runs it on
     // demand in any build).

@@ -23,6 +23,7 @@ use crate::engine::memory::MemoryTracker;
 use crate::error::{OsebaError, Result};
 use crate::index::types::{PartitionSlice, RangeQuery};
 use crate::index::Cias;
+use crate::metrics::MetricsRegistry;
 use crate::storage::{partition_batch_uniform, Partition, RecordBatch};
 use crate::store::TieredStore;
 use crate::util::sync::MutexExt;
@@ -87,6 +88,7 @@ pub struct OsebaContext {
     next_id: AtomicU64,
     lineage: Mutex<Vec<(DatasetId, String, Lineage)>>,
     counters: EngineCounters,
+    metrics: MetricsRegistry,
 }
 
 impl OsebaContext {
@@ -102,6 +104,7 @@ impl OsebaContext {
             next_id: AtomicU64::new(1),
             lineage: Mutex::new(Vec::new()),
             counters: EngineCounters::default(),
+            metrics: MetricsRegistry::new(),
         }
     }
 
@@ -540,6 +543,13 @@ impl OsebaContext {
     /// session boundary (surfaced as `sessions_failed` in server info).
     pub fn record_session_failure(&self) {
         self.counters.sessions_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The unified observability registry: per-op / per-phase latency
+    /// histograms and the slow-query log (surfaced by the server's
+    /// `metrics` op).
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
     }
 
     /// Lineage log: `(id, name, lineage)` in creation order (Fig 2).

@@ -1,0 +1,325 @@
+//! Fixed-bucket log-scale latency histograms.
+//!
+//! The recorder ([`LatencyHistogram`]) is lock-free and float-free: one
+//! atomic increment per sample on a power-of-two bucket grid over
+//! nanoseconds. Bucket `0` holds exactly the value `0`; bucket `i`
+//! (`1 <= i < 63`) holds `[2^(i-1), 2^i - 1]`; the top bucket is
+//! open-ended. Quantiles are extracted from a [`HistSnapshot`] by exact
+//! rank over the bucket counts and reported as the bucket's upper bound,
+//! so the returned value is never below the true sample and less than 2x
+//! above it (a factor-2 error bound, one bucket of resolution).
+//!
+//! Snapshots are plain vectors: merging two is element-wise addition,
+//! which makes merge trivially associative and commutative — per-thread
+//! recording with a fold at the end is exact.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Number of buckets: one per possible `u64` bit length, plus bucket 0
+/// for the value zero (the top two bit lengths share the last bucket).
+pub const BUCKETS: usize = 64;
+
+/// Bucket index of a nanosecond value: its bit length, clamped into the
+/// open-ended top bucket.
+pub fn bucket_of(nanos: u64) -> usize {
+    ((u64::BITS - nanos.leading_zeros()) as usize).min(BUCKETS - 1)
+}
+
+/// Inclusive upper bound of a bucket (what quantile extraction reports).
+pub fn bucket_hi(bucket: usize) -> u64 {
+    if bucket == 0 {
+        0
+    } else if bucket >= BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << bucket) - 1
+    }
+}
+
+/// Concurrent fixed-bucket histogram of nanosecond latencies.
+///
+/// `record` is wait-free (two relaxed `fetch_add`s) and allocation-free;
+/// readers take a [`HistSnapshot`] and do all arithmetic off the hot
+/// path.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    /// Sum of recorded nanoseconds (for mean extraction).
+    sum: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> LatencyHistogram {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample, in nanoseconds.
+    pub fn record(&self, nanos: u64) {
+        self.buckets[bucket_of(nanos)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Record one sample from a [`Duration`] (saturating past ~584 years).
+    pub fn record_duration(&self, d: Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// A point-in-time copy of the bucket counts.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum_nanos: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Immutable copy of a [`LatencyHistogram`]: bucket counts plus the
+/// nanosecond sum. All quantile/merge arithmetic lives here, off the
+/// recording path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Per-bucket sample counts ([`BUCKETS`] entries).
+    pub buckets: Vec<u64>,
+    /// Sum of recorded nanoseconds.
+    pub sum_nanos: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> HistSnapshot {
+        HistSnapshot { buckets: vec![0; BUCKETS], sum_nanos: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Element-wise sum of two snapshots (associative and commutative).
+    pub fn merge(&self, other: &HistSnapshot) -> HistSnapshot {
+        let n = self.buckets.len().max(other.buckets.len());
+        let get = |v: &[u64], i: usize| v.get(i).copied().unwrap_or(0);
+        HistSnapshot {
+            buckets: (0..n)
+                .map(|i| get(&self.buckets, i).saturating_add(get(&other.buckets, i)))
+                .collect(),
+            sum_nanos: self.sum_nanos.saturating_add(other.sum_nanos),
+        }
+    }
+
+    /// Exact-rank quantile in nanoseconds: the upper bound of the bucket
+    /// holding the sample of rank `ceil(q * count)` (nearest-rank, the
+    /// same convention as [`crate::util::stats::percentile`]). Returns 0
+    /// for an empty snapshot.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (i, c) in self.buckets.iter().enumerate() {
+            cum = cum.saturating_add(*c);
+            if cum >= rank {
+                return bucket_hi(i);
+            }
+        }
+        bucket_hi(BUCKETS - 1)
+    }
+
+    /// Median, in nanoseconds.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// 95th percentile, in nanoseconds.
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    /// 99th percentile, in nanoseconds.
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// 99.9th percentile, in nanoseconds.
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+
+    /// Mean sample, in seconds (0 for an empty snapshot).
+    pub fn mean_secs(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_nanos as f64 / n as f64 / 1e9
+        }
+    }
+
+    /// JSON rendering: the count plus p50/p95/p99/p999 and the mean, all
+    /// quantiles in seconds (the unit every other bench leaf uses).
+    pub fn to_json(&self) -> Json {
+        let secs = |nanos: u64| Json::num(nanos as f64 / 1e9);
+        Json::obj(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("p50", secs(self.p50())),
+            ("p95", secs(self.p95())),
+            ("p99", secs(self.p99())),
+            ("p999", secs(self.p999())),
+            ("mean_secs", Json::num(self.mean_secs())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+    use crate::util::stats::percentile;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_hi(0), 0);
+        assert_eq!(bucket_hi(1), 1);
+        assert_eq!(bucket_hi(2), 3);
+        assert_eq!(bucket_hi(11), 2047);
+        assert_eq!(bucket_hi(BUCKETS - 1), u64::MAX);
+        // Every value's bucket upper bound is >= the value and < 2x it.
+        for v in [1u64, 2, 3, 5, 100, 999, 4096, 1 << 40] {
+            let hi = bucket_hi(bucket_of(v));
+            assert!(hi >= v && hi < v.saturating_mul(2), "v={v} hi={hi}");
+        }
+    }
+
+    /// Quantiles must land in the same bucket as an exact-sort oracle.
+    fn check_against_oracle(samples: &[u64]) {
+        let h = LatencyHistogram::new();
+        for &s in samples {
+            h.record(s);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), samples.len() as u64);
+        let mut sorted: Vec<f64> = samples.iter().map(|&s| s as f64).collect();
+        sorted.sort_by(f64::total_cmp);
+        for q in [0.5, 0.95, 0.99, 0.999] {
+            let oracle = percentile(&sorted, q) as u64;
+            let got = snap.quantile(q);
+            assert_eq!(bucket_of(got), bucket_of(oracle), "q={q} oracle={oracle} got={got}");
+            assert!(got >= oracle, "q={q} oracle={oracle} got={got}");
+            assert!(
+                oracle == 0 || got < oracle.saturating_mul(2),
+                "q={q} oracle={oracle} got={got}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantiles_match_oracle_uniform() {
+        let mut rng = Xoshiro256::seeded(7);
+        let samples: Vec<u64> = (0..10_000).map(|_| rng.below(1_000_000)).collect();
+        check_against_oracle(&samples);
+    }
+
+    #[test]
+    fn quantiles_match_oracle_log_normal() {
+        let mut rng = Xoshiro256::seeded(11);
+        let samples: Vec<u64> =
+            (0..10_000).map(|_| (rng.normal_with(8.0, 2.0).exp()) as u64).collect();
+        check_against_oracle(&samples);
+    }
+
+    #[test]
+    fn quantiles_match_oracle_point_mass() {
+        check_against_oracle(&vec![12_345u64; 5_000]);
+        check_against_oracle(&vec![0u64; 100]);
+    }
+
+    fn random_snapshot(seed: u64) -> HistSnapshot {
+        let mut rng = Xoshiro256::seeded(seed);
+        let h = LatencyHistogram::new();
+        for _ in 0..1_000 {
+            h.record(rng.below(1 << 30));
+        }
+        h.snapshot()
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let (a, b, c) = (random_snapshot(1), random_snapshot(2), random_snapshot(3));
+        assert_eq!(a.merge(&b), b.merge(&a));
+        assert_eq!(a.merge(&b).merge(&c), a.merge(&b.merge(&c)));
+        assert_eq!(a.merge(&b).count(), a.count() + b.count());
+        assert_eq!(a.merge(&HistSnapshot::default()), a);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_no_samples() {
+        let h = Arc::new(LatencyHistogram::new());
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(t * 1_000 + (i % 97));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().expect("recorder thread");
+        }
+        assert_eq!(h.snapshot().count(), 80_000);
+    }
+
+    #[test]
+    fn empty_and_extreme_values() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.snapshot().quantile(0.5), 0);
+        assert_eq!(h.snapshot().mean_secs(), 0.0);
+        h.record(0);
+        h.record(u64::MAX);
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 2);
+        assert_eq!(snap.quantile(0.5), 0);
+        assert_eq!(snap.p999(), u64::MAX);
+        h.record_duration(Duration::from_micros(3));
+        assert_eq!(h.snapshot().count(), 3);
+    }
+
+    #[test]
+    fn json_has_quantile_keys() {
+        let h = LatencyHistogram::new();
+        for i in 0..100 {
+            h.record(i * 1_000);
+        }
+        let j = h.snapshot().to_json().to_string();
+        for key in ["\"count\":", "\"p50\":", "\"p95\":", "\"p99\":", "\"p999\":", "\"mean_secs\":"]
+        {
+            assert!(j.contains(key), "{key} missing from {j}");
+        }
+    }
+}

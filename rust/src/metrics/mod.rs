@@ -1,7 +1,26 @@
-//! Phase-level experiment metrics: the instrument that emits the Fig 4
-//! (accumulated memory) and Fig 6 (accumulated time) series.
+//! Observability: experiment metrics, per-query trace spans, latency
+//! histograms, and the unified metrics registry.
+//!
+//! The original instruments live in this module: [`SessionMetrics`] /
+//! [`BatchReport`] emit the paper's Fig 4 (accumulated memory) and Fig 6
+//! (accumulated time) series, and [`Timer`] is the shared wall-clock.
+//! PR 7 grew the subsystem into three layers (see docs/OBSERVABILITY.md):
+//!
+//! * [`trace`] — per-query span trees and the bounded slow-query log;
+//! * [`hist`] — lock-free fixed-bucket log-scale latency histograms
+//!   with exact-rank quantile extraction;
+//! * [`registry`] — one registry unifying every counter and histogram,
+//!   surfaced by the server's `metrics` op.
 
-use std::time::Instant;
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use hist::{bucket_hi, bucket_of, HistSnapshot, LatencyHistogram, BUCKETS};
+pub use registry::{MetricsRegistry, PlanPhase, ServerOp, OP_METRICS, PHASE_METRICS};
+pub use trace::{phase_mark, sane_secs, SlowEntry, SlowQueryLog, Span, SLOW_LOG_CAPACITY};
+
+use std::time::{Duration, Instant};
 
 use crate::engine::CounterSnapshot;
 use crate::util::humansize;
@@ -42,6 +61,10 @@ impl SessionMetrics {
     }
 
     /// Record a phase from raw observations.
+    ///
+    /// Counter deltas saturate at zero and `secs` is clamped through
+    /// [`sane_secs`]: snapshots taken out of order across threads (or a
+    /// zero-width phase) record as zero instead of underflowing.
     #[allow(clippy::too_many_arguments)]
     pub fn record(
         &mut self,
@@ -55,12 +78,14 @@ impl SessionMetrics {
         self.records.push(PhaseRecord {
             phase,
             method: method.to_string(),
-            secs,
+            secs: sane_secs(secs),
             memory_bytes,
-            partitions_scanned: after.partitions_scanned - before.partitions_scanned,
-            partitions_targeted: after.partitions_targeted - before.partitions_targeted,
-            rows_scanned: after.rows_scanned - before.rows_scanned,
-            bytes_materialized: after.bytes_materialized - before.bytes_materialized,
+            partitions_scanned: after.partitions_scanned.saturating_sub(before.partitions_scanned),
+            partitions_targeted: after
+                .partitions_targeted
+                .saturating_sub(before.partitions_targeted),
+            rows_scanned: after.rows_scanned.saturating_sub(before.rows_scanned),
+            bytes_materialized: after.bytes_materialized.saturating_sub(before.bytes_materialized),
         });
     }
 
@@ -220,7 +245,8 @@ impl BatchReport {
     }
 }
 
-/// Simple scoped timer.
+/// Simple scoped timer over the monotonic clock. `Instant::elapsed`
+/// saturates at zero, so readings can never be negative.
 pub struct Timer(Instant);
 
 impl Timer {
@@ -232,6 +258,11 @@ impl Timer {
     /// Seconds elapsed since [`Timer::start`].
     pub fn secs(&self) -> f64 {
         self.0.elapsed().as_secs_f64()
+    }
+
+    /// Time elapsed since [`Timer::start`], for histogram recording.
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
     }
 }
 
@@ -321,5 +352,24 @@ mod tests {
         let t = Timer::start();
         std::thread::sleep(std::time::Duration::from_millis(5));
         assert!(t.secs() >= 0.004);
+        assert!(t.elapsed() >= std::time::Duration::from_millis(5));
+    }
+
+    #[test]
+    fn record_is_monotonic_safe() {
+        // Snapshots captured out of order across threads: `after` is
+        // behind `before`. Deltas must clamp to zero, not underflow.
+        let mut m = SessionMetrics::new();
+        m.record(1, "oseba", -0.5, 0, snap(30), snap(10));
+        let r = &m.records[0];
+        assert_eq!(r.partitions_scanned, 0);
+        assert_eq!(r.rows_scanned, 0);
+        assert_eq!(r.bytes_materialized, 0);
+        assert_eq!(r.secs, 0.0, "negative wall readings clamp to zero");
+        // Zero-width phase: identical snapshots, zero seconds.
+        m.record(2, "oseba", 0.0, 0, snap(10), snap(10));
+        assert_eq!(m.records[1].partitions_scanned, 0);
+        let j = m.to_json().to_string();
+        assert!(!j.contains('-'), "no negative durations in JSON: {j}");
     }
 }

@@ -1,0 +1,279 @@
+//! The unified metrics registry: per-server-op and per-plan-phase
+//! latency histograms plus the slow-query log, behind one snapshot.
+//!
+//! The registry lives on the engine context, so every execution path —
+//! server ops, direct coordinator calls, batch sessions — records into
+//! the same histograms. Recording can be disabled at runtime
+//! ([`MetricsRegistry::set_enabled`]); the disabled path is one relaxed
+//! atomic load, which is also how the overhead bench measures the
+//! uninstrumented arm.
+//!
+//! Histogram names are registered in [`OP_METRICS`] / [`PHASE_METRICS`],
+//! index-aligned with [`ServerOp`] / [`PlanPhase`]. `oseba-lint`'s
+//! `counters-surfaced` rule cross-checks these constants against the
+//! server's `metrics` response builder, so a histogram cannot be
+//! registered here and silently dropped from exposition.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use crate::metrics::hist::{HistSnapshot, LatencyHistogram};
+use crate::metrics::trace::SlowQueryLog;
+
+/// Registered per-server-op histogram names, index-aligned with
+/// [`ServerOp`]. Every name must appear in the server's `metrics` op
+/// output (enforced by `oseba-lint`).
+pub const OP_METRICS: [&str; 6] =
+    ["op_info", "op_stats", "op_explain", "op_append", "op_snapshot", "op_metrics"];
+
+/// Registered per-plan-phase histogram names, index-aligned with
+/// [`PlanPhase`]. Every name must appear in the server's `metrics` op
+/// output (enforced by `oseba-lint`).
+pub const PHASE_METRICS: [&str; 6] = [
+    "phase_targeting",
+    "phase_zone_pruning",
+    "phase_sketch_classify",
+    "phase_fault_in",
+    "phase_scan_merge",
+    "phase_demux",
+];
+
+/// Instrumented server ops (everything except `shutdown`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServerOp {
+    /// `info` — dataset/server summary.
+    Info,
+    /// `stats` — range statistics query.
+    Stats,
+    /// `explain` — plan a query without executing it.
+    Explain,
+    /// `append` — live ingest of a chunk.
+    Append,
+    /// `snapshot` — pin the current live epoch.
+    Snapshot,
+    /// `metrics` — observability snapshot (this subsystem).
+    Metrics,
+}
+
+impl ServerOp {
+    /// All ops, index-aligned with [`OP_METRICS`].
+    pub const ALL: [ServerOp; 6] = [
+        ServerOp::Info,
+        ServerOp::Stats,
+        ServerOp::Explain,
+        ServerOp::Append,
+        ServerOp::Snapshot,
+        ServerOp::Metrics,
+    ];
+
+    /// Registered histogram name for this op.
+    pub fn name(self) -> &'static str {
+        OP_METRICS[self as usize]
+    }
+
+    /// Map a protocol `"op"` string to its instrumented op, if any.
+    pub fn from_op_str(op: &str) -> Option<ServerOp> {
+        match op {
+            "info" => Some(ServerOp::Info),
+            "stats" => Some(ServerOp::Stats),
+            "explain" => Some(ServerOp::Explain),
+            "append" => Some(ServerOp::Append),
+            "snapshot" => Some(ServerOp::Snapshot),
+            "metrics" => Some(ServerOp::Metrics),
+            _ => None,
+        }
+    }
+}
+
+/// Instrumented plan/execution phases of a single query or batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanPhase {
+    /// Key-index lookup proposing candidate slices.
+    Targeting,
+    /// Zone-map predicate checks over proposed slices.
+    ZonePruning,
+    /// Sketch coverage classification of surviving slices.
+    SketchClassify,
+    /// Resolving slices against the tiered store (cold faults included).
+    FaultIn,
+    /// Scanning resident data and merging partial moments.
+    ScanMerge,
+    /// Distributing merged segment results back to batch queries.
+    Demux,
+}
+
+impl PlanPhase {
+    /// All phases, index-aligned with [`PHASE_METRICS`].
+    pub const ALL: [PlanPhase; 6] = [
+        PlanPhase::Targeting,
+        PlanPhase::ZonePruning,
+        PlanPhase::SketchClassify,
+        PlanPhase::FaultIn,
+        PlanPhase::ScanMerge,
+        PlanPhase::Demux,
+    ];
+
+    /// Registered histogram name for this phase.
+    pub fn name(self) -> &'static str {
+        PHASE_METRICS[self as usize]
+    }
+
+    /// Span-tree node name: the histogram name minus the `phase_` prefix.
+    pub fn span_name(self) -> &'static str {
+        match self {
+            PlanPhase::Targeting => "targeting",
+            PlanPhase::ZonePruning => "zone_pruning",
+            PlanPhase::SketchClassify => "sketch_classify",
+            PlanPhase::FaultIn => "fault_in",
+            PlanPhase::ScanMerge => "scan_merge",
+            PlanPhase::Demux => "demux",
+        }
+    }
+}
+
+/// One registry of every latency histogram plus the slow-query log.
+#[derive(Debug)]
+pub struct MetricsRegistry {
+    enabled: AtomicBool,
+    ops: [LatencyHistogram; OP_METRICS.len()],
+    phases: [LatencyHistogram; PHASE_METRICS.len()],
+    slow: SlowQueryLog,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> MetricsRegistry {
+        MetricsRegistry::new()
+    }
+}
+
+impl MetricsRegistry {
+    /// A fresh registry, enabled.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry {
+            enabled: AtomicBool::new(true),
+            ops: std::array::from_fn(|_| LatencyHistogram::new()),
+            phases: std::array::from_fn(|_| LatencyHistogram::new()),
+            slow: SlowQueryLog::default(),
+        }
+    }
+
+    /// Turn recording on or off (off: `record_*` are one atomic load).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether recording is currently enabled.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Record one server-op latency.
+    pub fn record_op(&self, op: ServerOp, d: Duration) {
+        if self.enabled() {
+            self.ops[op as usize].record_duration(d);
+        }
+    }
+
+    /// Record one plan-phase latency.
+    pub fn record_phase(&self, phase: PlanPhase, d: Duration) {
+        if self.enabled() {
+            self.phases[phase as usize].record_duration(d);
+        }
+    }
+
+    /// Snapshot of one server-op histogram.
+    pub fn op(&self, op: ServerOp) -> HistSnapshot {
+        self.ops[op as usize].snapshot()
+    }
+
+    /// Snapshot of one plan-phase histogram.
+    pub fn phase(&self, phase: PlanPhase) -> HistSnapshot {
+        self.phases[phase as usize].snapshot()
+    }
+
+    /// The slow-query log fed by traced server queries.
+    pub fn slow_log(&self) -> &SlowQueryLog {
+        &self.slow
+    }
+
+    /// Prometheus-style text exposition: one `oseba_<name>` gauge line
+    /// per supplied counter, then summary-style quantile/count/sum lines
+    /// for every registered op and phase histogram.
+    pub fn prometheus_text(&self, gauges: &[(String, f64)]) -> String {
+        let mut out = String::new();
+        out.push_str("# oseba metrics (text exposition)\n");
+        for (name, value) in gauges {
+            out.push_str(&format!("oseba_{name} {value}\n"));
+        }
+        let mut summary = |name: &str, snap: HistSnapshot| {
+            for (q, nanos) in [("0.5", snap.p50()), ("0.95", snap.p95()), ("0.99", snap.p99())] {
+                out.push_str(&format!(
+                    "oseba_{name}_latency_seconds{{quantile=\"{q}\"}} {}\n",
+                    nanos as f64 / 1e9
+                ));
+            }
+            out.push_str(&format!("oseba_{name}_latency_seconds_count {}\n", snap.count()));
+            out.push_str(&format!(
+                "oseba_{name}_latency_seconds_sum {}\n",
+                snap.sum_nanos as f64 / 1e9
+            ));
+        };
+        for op in ServerOp::ALL {
+            summary(op.name(), self.op(op));
+        }
+        for phase in PlanPhase::ALL {
+            summary(phase.name(), self.phase(phase));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_index_aligned() {
+        for (i, op) in ServerOp::ALL.iter().enumerate() {
+            assert_eq!(op.name(), OP_METRICS[i]);
+        }
+        for (i, phase) in PlanPhase::ALL.iter().enumerate() {
+            assert_eq!(phase.name(), PHASE_METRICS[i]);
+            assert_eq!(format!("phase_{}", phase.span_name()), PHASE_METRICS[i]);
+        }
+        assert_eq!(ServerOp::from_op_str("stats"), Some(ServerOp::Stats));
+        assert_eq!(ServerOp::from_op_str("shutdown"), None);
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let m = MetricsRegistry::new();
+        assert!(m.enabled());
+        m.record_op(ServerOp::Stats, Duration::from_micros(5));
+        m.set_enabled(false);
+        m.record_op(ServerOp::Stats, Duration::from_micros(5));
+        m.record_phase(PlanPhase::Targeting, Duration::from_micros(5));
+        m.set_enabled(true);
+        assert_eq!(m.op(ServerOp::Stats).count(), 1);
+        assert_eq!(m.phase(PlanPhase::Targeting).count(), 0);
+    }
+
+    #[test]
+    fn prometheus_text_exposes_every_registered_name() {
+        let m = MetricsRegistry::new();
+        m.record_op(ServerOp::Info, Duration::from_micros(3));
+        let text = m.prometheus_text(&[("engine_partitions_scanned".to_string(), 4.0)]);
+        assert!(text.contains("oseba_engine_partitions_scanned 4\n"));
+        for name in OP_METRICS.iter().chain(PHASE_METRICS.iter()) {
+            assert!(
+                text.contains(&format!("oseba_{name}_latency_seconds_count")),
+                "{name} missing"
+            );
+        }
+        assert!(text.contains("oseba_op_info_latency_seconds{quantile=\"0.5\"}"));
+        // Every non-comment line is `name value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");
+        }
+    }
+}

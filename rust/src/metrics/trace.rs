@@ -1,0 +1,246 @@
+//! Per-query trace spans and the bounded slow-query log.
+//!
+//! A [`Span`] is one node of a query's phase tree: a name, a wall-clock
+//! reading, the counts the planner's `Explain` computed for that phase,
+//! and child spans. Spans are built *after* execution from already-
+//! measured durations, so tracing adds no branches to the hot path.
+//!
+//! All wall-clock readings pass through [`sane_secs`]: the JSON a trace
+//! emits can never contain a negative or non-finite duration, even if a
+//! phase was zero-width or upstream clock arithmetic misbehaved.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::sync::MutexExt;
+
+/// Clamp a wall-clock reading for serialization: negative, NaN, or
+/// infinite readings (a zero-width phase rounded badly, or reordered
+/// timestamps from another thread) become `0.0`.
+pub fn sane_secs(secs: f64) -> f64 {
+    if secs.is_finite() && secs > 0.0 {
+        secs
+    } else {
+        0.0
+    }
+}
+
+/// Fold the monotonic-safe elapsed time since `start` into `slot` and
+/// return a fresh mark for the next phase (one clock read per phase
+/// boundary). `saturating_duration_since` means a non-monotonic reading
+/// can never underflow into a huge bogus duration.
+pub fn phase_mark(slot: &mut Duration, start: Instant) -> Instant {
+    let now = Instant::now();
+    *slot += now.saturating_duration_since(start);
+    now
+}
+
+/// One node of a per-query trace: a named phase with its wall time, the
+/// plan counts attributed to it, and nested child phases.
+#[derive(Clone, Debug, Default)]
+pub struct Span {
+    /// Phase name (`"query"`, `"targeting"`, `"zone_pruning"`, ...).
+    pub name: &'static str,
+    /// Wall-clock seconds spent in the phase.
+    pub secs: f64,
+    /// Phase-attributed counts, straight from the plan's `Explain`.
+    pub counts: Vec<(&'static str, u64)>,
+    /// Nested phases, in execution order.
+    pub children: Vec<Span>,
+}
+
+impl Span {
+    /// A new leaf span with zero duration and no counts.
+    pub fn new(name: &'static str) -> Span {
+        Span { name, secs: 0.0, counts: Vec::new(), children: Vec::new() }
+    }
+
+    /// Set the wall time (clamped through [`sane_secs`]).
+    pub fn with_secs(mut self, secs: f64) -> Span {
+        self.secs = sane_secs(secs);
+        self
+    }
+
+    /// Attach one named count.
+    pub fn count(mut self, key: &'static str, value: u64) -> Span {
+        self.counts.push((key, value));
+        self
+    }
+
+    /// Attach a child phase.
+    pub fn child(mut self, child: Span) -> Span {
+        self.children.push(child);
+        self
+    }
+
+    /// JSON rendering: `name`/`secs`, each count inlined as its own key,
+    /// and `children` (always present, possibly empty).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::str(self.name)),
+            ("secs", Json::num(sane_secs(self.secs))),
+        ];
+        for &(key, value) in &self.counts {
+            fields.push((key, Json::num(value as f64)));
+        }
+        fields.push(("children", Json::arr(self.children.iter().map(Span::to_json).collect())));
+        Json::obj(fields)
+    }
+}
+
+/// Default capacity of the slow-query log: the N worst traces kept.
+pub const SLOW_LOG_CAPACITY: usize = 8;
+
+/// One retained slow query: how long it took, which op ran it, and the
+/// full trace + explain for post-hoc diagnosis.
+#[derive(Clone, Debug)]
+pub struct SlowEntry {
+    /// Wall-clock seconds for the whole request.
+    pub secs: f64,
+    /// Server op that ran the query (e.g. `"stats"`).
+    pub op: &'static str,
+    /// The query's span tree, serialized.
+    pub trace: Json,
+    /// The query's `explain` output, serialized.
+    pub explain: Json,
+}
+
+/// Bounded in-memory log of the worst (slowest) queries seen.
+///
+/// `offer` keeps the `cap` entries with the largest `secs`: a new entry
+/// replaces the current minimum only when it is slower, so the log
+/// converges on the true worst set regardless of arrival order.
+#[derive(Debug)]
+pub struct SlowQueryLog {
+    cap: usize,
+    entries: Mutex<Vec<SlowEntry>>,
+}
+
+impl Default for SlowQueryLog {
+    fn default() -> SlowQueryLog {
+        SlowQueryLog::new(SLOW_LOG_CAPACITY)
+    }
+}
+
+impl SlowQueryLog {
+    /// An empty log retaining at most `cap` entries.
+    pub fn new(cap: usize) -> SlowQueryLog {
+        SlowQueryLog { cap, entries: Mutex::new(Vec::new()) }
+    }
+
+    /// Offer one finished query; it is retained iff it ranks among the
+    /// `cap` slowest seen so far.
+    pub fn offer(&self, entry: SlowEntry) {
+        let mut entries = self.entries.lock_recover();
+        if entries.len() < self.cap {
+            entries.push(entry);
+            return;
+        }
+        let min = entries
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.secs.total_cmp(&b.1.secs))
+            .map(|(i, e)| (i, e.secs));
+        if let Some((i, min_secs)) = min {
+            if entry.secs > min_secs {
+                entries[i] = entry;
+            }
+        }
+    }
+
+    /// Retained entries, slowest first.
+    pub fn snapshot(&self) -> Vec<SlowEntry> {
+        let mut entries = self.entries.lock_recover().clone();
+        entries.sort_by(|a, b| b.secs.total_cmp(&a.secs));
+        entries
+    }
+
+    /// JSON rendering: an array of `{secs, op, trace, explain}` objects,
+    /// slowest first.
+    pub fn to_json(&self) -> Json {
+        Json::arr(
+            self.snapshot()
+                .into_iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("secs", Json::num(sane_secs(e.secs))),
+                        ("op", Json::str(e.op)),
+                        ("trace", e.trace),
+                        ("explain", e.explain),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sane_secs_clamps_garbage() {
+        assert_eq!(sane_secs(0.25), 0.25);
+        assert_eq!(sane_secs(0.0), 0.0);
+        assert_eq!(sane_secs(-1.0), 0.0);
+        assert_eq!(sane_secs(f64::NAN), 0.0);
+        assert_eq!(sane_secs(f64::INFINITY), 0.0);
+        assert_eq!(sane_secs(f64::NEG_INFINITY), 0.0);
+    }
+
+    #[test]
+    fn zero_width_span_serializes_to_zero() {
+        // A forced zero-width phase: started and closed on the same
+        // instant, then pushed through negative arithmetic upstream.
+        let mut slot = Duration::ZERO;
+        let start = Instant::now();
+        phase_mark(&mut slot, start);
+        let span = Span::new("targeting").with_secs(-slot.as_secs_f64()).count("considered", 0);
+        let j = span.to_json().to_string();
+        assert!(j.contains("\"secs\":0"), "negative/zero width must clamp to 0: {j}");
+        assert!(j.contains("\"considered\":0"));
+        assert!(j.contains("\"children\":[]"));
+    }
+
+    #[test]
+    fn span_tree_round_trips_counts() {
+        let span = Span::new("query")
+            .with_secs(0.5)
+            .count("partitions", 5)
+            .child(Span::new("targeting").with_secs(0.1).count("considered", 7));
+        let j = span.to_json();
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("query"));
+        assert_eq!(j.get("partitions").and_then(Json::as_usize), Some(5));
+        let children = j.get("children").and_then(Json::as_arr).expect("children");
+        assert_eq!(children.len(), 1);
+        assert_eq!(children[0].get("considered").and_then(Json::as_usize), Some(7));
+    }
+
+    fn entry(secs: f64) -> SlowEntry {
+        SlowEntry { secs, op: "stats", trace: Json::Null, explain: Json::Null }
+    }
+
+    #[test]
+    fn slow_log_keeps_the_worst() {
+        let log = SlowQueryLog::new(3);
+        for secs in [0.1, 0.5, 0.2, 0.9, 0.05, 0.3] {
+            log.offer(entry(secs));
+        }
+        let kept: Vec<f64> = log.snapshot().iter().map(|e| e.secs).collect();
+        assert_eq!(kept, vec![0.9, 0.5, 0.3]);
+        let j = log.to_json().to_string();
+        assert!(j.contains("\"op\":\"stats\""));
+    }
+
+    #[test]
+    fn slow_log_is_bounded() {
+        let log = SlowQueryLog::default();
+        for i in 0..100 {
+            log.offer(entry(i as f64));
+        }
+        let kept = log.snapshot();
+        assert_eq!(kept.len(), SLOW_LOG_CAPACITY);
+        assert_eq!(kept[0].secs, 99.0);
+    }
+}

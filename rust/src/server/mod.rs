@@ -37,7 +37,7 @@ use crate::engine::{Dataset, LiveDataset};
 use crate::error::{OsebaError, Result};
 use crate::index::{ColumnPredicate, ContentIndex, RangeQuery};
 use crate::ingest::Chunk;
-use crate::metrics::Timer;
+use crate::metrics::{PlanPhase, ServerOp, SlowEntry, Span, Timer};
 use crate::util::json::Json;
 
 /// What a server fronts.
@@ -212,18 +212,26 @@ pub fn handle_request(
         .require("op")?
         .as_str()
         .ok_or_else(|| OsebaError::Json("op must be a string".into()))?;
-    match op {
+    let timer = Timer::start();
+    let result = match op {
         "info" => handle_info(coord, source),
         "stats" => handle_stats(&req, coord, source),
         "explain" => handle_explain(&req, coord, source),
         "append" => handle_append(&req, source),
         "snapshot" => handle_snapshot(source),
+        "metrics" => handle_metrics(&req, coord, source),
         "shutdown" => {
             shutdown.store(true, Ordering::SeqCst);
             Ok(Json::obj(vec![("ok", Json::Bool(true)), ("bye", Json::Bool(true))]))
         }
         other => Err(OsebaError::Json(format!("unknown op '{other}'"))),
+    };
+    // Protocol-level wall time per op — errors included, so the latency
+    // histograms see every answered request.
+    if let Some(server_op) = ServerOp::from_op_str(op) {
+        coord.context().metrics().record_op(server_op, timer.elapsed());
     }
+    result
 }
 
 /// Dataset-shape fields shared by fixed and live `info`.
@@ -258,6 +266,13 @@ fn info_fields(ds: &Dataset, coord: &Coordinator, fields: &mut Vec<(&'static str
     fields.push(("key_min", Json::num(ds.key_min().unwrap_or(0) as f64)));
     fields.push(("key_max", Json::num(ds.key_max().unwrap_or(0) as f64)));
     fields.push(("tiered", Json::Bool(ds.is_tiered())));
+    // How many `metrics` requests this server has answered — non-zero
+    // advertises the op, letting older clients discover it from `info`
+    // without changing any existing field.
+    fields.push((
+        "metrics_ops",
+        Json::num(coord.context().metrics().op(ServerOp::Metrics).count() as f64),
+    ));
     if let Some(store) = ds.store() {
         let c = store.counters();
         fields.push(("resident_bytes", Json::num(store.resident_bytes() as f64)));
@@ -387,14 +402,26 @@ fn handle_stats(req: &Json, coord: &Coordinator, source: &ServerSource) -> Resul
     let column = ds.schema().column_index(col_name)?;
     let predicates = parse_where(req, ds)?;
     let timer = Timer::start();
-    let (stats, plan_explain) = match method {
+    let (stats, plan_explain, trace) = match method {
         Method::Oseba => {
             let query = Query::stats(q, column).filtered(predicates);
-            let (out, explain) = coord.execute_plan(ds, index, &query)?;
+            let (out, explain, span) = coord.execute_plan_traced(ds, index, &query)?;
             let st = out.stats().ok_or_else(|| {
                 OsebaError::Runtime("stats query produced a non-stats output".into())
             })?;
-            (st, Some(explain))
+            let trace = span.to_json();
+            // Every executed stats query is offered to the slow-query
+            // ring; only the worst few survive.
+            let m = coord.context().metrics();
+            if m.enabled() {
+                m.slow_log().offer(SlowEntry {
+                    secs: timer.secs(),
+                    op: "stats",
+                    trace: trace.clone(),
+                    explain: explain.to_json(),
+                });
+            }
+            (st, Some(explain), Some(trace))
         }
         Method::Default => {
             if !predicates.is_empty() {
@@ -407,9 +434,10 @@ fn handle_stats(req: &Json, coord: &Coordinator, source: &ServerSource) -> Resul
             // The server keeps memory bounded: server-side filtered
             // datasets are transient.
             coord.context().unpersist(&filtered);
-            (st, None)
+            (st, None, None)
         }
     };
+    let secs = timer.secs();
     let mut fields = vec![
         ("ok", Json::Bool(true)),
         ("count", Json::num(stats.count as f64)),
@@ -419,7 +447,7 @@ fn handle_stats(req: &Json, coord: &Coordinator, source: &ServerSource) -> Resul
         ("std", Json::num(stats.std)),
         ("nans", Json::num(stats.nans as f64)),
         ("method", Json::str(method.label())),
-        ("secs", Json::num(timer.secs())),
+        ("secs", Json::num(secs)),
     ];
     if let Some(ex) = plan_explain {
         fields.push(("zone_pruned", Json::num(ex.zone_pruned as f64)));
@@ -428,6 +456,13 @@ fn handle_stats(req: &Json, coord: &Coordinator, source: &ServerSource) -> Resul
     }
     if let Some(e) = epoch {
         fields.push(("epoch", Json::num(e as f64)));
+    }
+    // `"trace":true` attaches the span tree. The scan baseline has no
+    // plan phases, so it reports a root-only span.
+    if matches!(req.get("trace"), Some(Json::Bool(true))) {
+        let span_json =
+            trace.unwrap_or_else(|| Span::new("query").with_secs(secs).to_json());
+        fields.push(("trace", span_json));
     }
     Ok(Json::obj(fields))
 }
@@ -458,6 +493,107 @@ fn handle_explain(req: &Json, coord: &Coordinator, source: &ServerSource) -> Res
     if let Some(e) = epoch {
         fields.push(("epoch", Json::num(e as f64)));
     }
+    Ok(Json::obj(fields))
+}
+
+/// `metrics`: one snapshot of the unified observability registry — every
+/// engine/live/tiered counter, the per-op and per-phase latency
+/// histograms (count + p50/p95/p99/p999), and the slow-query log.
+/// `{"text":true}` returns the same numbers as a Prometheus-style text
+/// exposition instead. Every name registered in `OP_METRICS` /
+/// `PHASE_METRICS` is listed literally here — oseba-lint's
+/// counters-surfaced rule cross-checks the two, so a histogram cannot be
+/// registered without being exposed.
+fn handle_metrics(req: &Json, coord: &Coordinator, source: &ServerSource) -> Result<Json> {
+    let m = coord.context().metrics();
+    let ec = coord.context().counters();
+    let counters: Vec<(&'static str, f64)> = vec![
+        ("partitions_scanned", ec.partitions_scanned as f64),
+        ("rows_scanned", ec.rows_scanned as f64),
+        ("bytes_materialized", ec.bytes_materialized as f64),
+        ("partitions_targeted", ec.partitions_targeted as f64),
+        ("partitions_agg_answered", ec.partitions_agg_answered as f64),
+        ("sessions_failed", ec.sessions_failed as f64),
+    ];
+    let mut live_fields: Vec<(&'static str, f64)> = Vec::new();
+    let mut store_fields: Vec<(&'static str, f64)> = Vec::new();
+    match source {
+        ServerSource::Fixed { ds, .. } => {
+            if let Some(store) = ds.store() {
+                let c = store.counters();
+                store_fields.push(("faults", c.faults as f64));
+                store_fields.push(("evictions", c.evictions as f64));
+                store_fields.push(("segment_bytes_read", c.segment_bytes_read as f64));
+                store_fields.push(("segment_bytes_written", c.segment_bytes_written as f64));
+            }
+        }
+        ServerSource::Live(live) => {
+            let c = live.counters();
+            live_fields.push(("epoch", c.epoch as f64));
+            live_fields.push(("appended_chunks", c.appended_chunks as f64));
+            live_fields.push(("out_of_order_chunks", c.out_of_order_chunks as f64));
+            live_fields.push(("sealed_partitions", c.sealed_partitions as f64));
+            live_fields.push(("sealed_rows", c.sealed_rows as f64));
+            live_fields.push(("unsealed_rows", c.unsealed_rows as f64));
+            live_fields.push(("index_appends", c.index_appends as f64));
+            live_fields.push(("asl_absorbed", c.asl_absorbed as f64));
+            live_fields.push(("asl_len", c.asl_len as f64));
+            live_fields.push(("rebuilds", c.rebuilds as f64));
+        }
+    }
+    if matches!(req.get("text"), Some(Json::Bool(true))) {
+        let mut gauges: Vec<(String, f64)> = Vec::new();
+        for (k, v) in &counters {
+            gauges.push((format!("engine_{k}"), *v));
+        }
+        for (k, v) in &live_fields {
+            gauges.push((format!("live_{k}"), *v));
+        }
+        for (k, v) in &store_fields {
+            gauges.push((format!("store_{k}"), *v));
+        }
+        return Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("text", Json::str(m.prometheus_text(&gauges))),
+        ]));
+    }
+    let to_obj = |fields: &[(&'static str, f64)]| {
+        Json::obj(fields.iter().map(|&(k, v)| (k, Json::num(v))).collect())
+    };
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("enabled", Json::Bool(m.enabled())),
+        ("counters", to_obj(&counters)),
+    ];
+    if !live_fields.is_empty() {
+        fields.push(("live", to_obj(&live_fields)));
+    }
+    if !store_fields.is_empty() {
+        fields.push(("tiered", to_obj(&store_fields)));
+    }
+    fields.push((
+        "ops",
+        Json::obj(vec![
+            ("op_info", m.op(ServerOp::Info).to_json()),
+            ("op_stats", m.op(ServerOp::Stats).to_json()),
+            ("op_explain", m.op(ServerOp::Explain).to_json()),
+            ("op_append", m.op(ServerOp::Append).to_json()),
+            ("op_snapshot", m.op(ServerOp::Snapshot).to_json()),
+            ("op_metrics", m.op(ServerOp::Metrics).to_json()),
+        ]),
+    ));
+    fields.push((
+        "phases",
+        Json::obj(vec![
+            ("phase_targeting", m.phase(PlanPhase::Targeting).to_json()),
+            ("phase_zone_pruning", m.phase(PlanPhase::ZonePruning).to_json()),
+            ("phase_sketch_classify", m.phase(PlanPhase::SketchClassify).to_json()),
+            ("phase_fault_in", m.phase(PlanPhase::FaultIn).to_json()),
+            ("phase_scan_merge", m.phase(PlanPhase::ScanMerge).to_json()),
+            ("phase_demux", m.phase(PlanPhase::Demux).to_json()),
+        ]),
+    ));
+    fields.push(("slow_queries", m.slow_log().to_json()));
     Ok(Json::obj(fields))
 }
 
@@ -1006,5 +1142,270 @@ mod tests {
         assert_eq!(r.get("bye"), Some(&Json::Bool(true)));
         handle.join().unwrap();
         live.close();
+    }
+
+    /// Top-level keys of a response, in the (sorted) order they serialize.
+    fn keys_of(r: &Json) -> Vec<String> {
+        r.as_obj().unwrap().keys().cloned().collect()
+    }
+
+    #[test]
+    fn info_schema_is_pinned() {
+        // Back-compat contract (ISSUE 7): `info` keeps its exact shape,
+        // plus the `metrics_ops` discovery counter. Keys serialize sorted.
+        let (coord, source) = setup();
+        let flag = AtomicBool::new(false);
+        let r = handle_request(r#"{"op":"info"}"#, &coord, &source, &flag).unwrap();
+        assert_eq!(
+            keys_of(&r),
+            [
+                "agg_answered",
+                "counters",
+                "index",
+                "index_bytes",
+                "key_max",
+                "key_min",
+                "live",
+                "memory_bytes",
+                "metrics_ops",
+                "ok",
+                "partitions",
+                "rows",
+                "tiered",
+            ]
+        );
+        assert_eq!(
+            keys_of(r.get("counters").unwrap()),
+            [
+                "bytes_materialized",
+                "partitions_agg_answered",
+                "partitions_scanned",
+                "partitions_targeted",
+                "rows_scanned",
+                "sessions_failed",
+            ]
+        );
+        assert_eq!(r.get("metrics_ops").unwrap().as_usize(), Some(0));
+
+        let (coord, source, live) = setup_live();
+        handle_request(&append_req(0, 1_000), &coord, &source, &flag).unwrap();
+        let r = handle_request(r#"{"op":"info"}"#, &coord, &source, &flag).unwrap();
+        assert_eq!(
+            keys_of(&r),
+            [
+                "agg_answered",
+                "appended_chunks",
+                "asl_absorbed",
+                "asl_len",
+                "counters",
+                "epoch",
+                "index",
+                "index_appends",
+                "index_bytes",
+                "key_max",
+                "key_min",
+                "live",
+                "memory_bytes",
+                "metrics_ops",
+                "ok",
+                "out_of_order_chunks",
+                "partitions",
+                "rebuilds",
+                "rows",
+                "tiered",
+            ]
+        );
+        live.close();
+    }
+
+    #[test]
+    fn metrics_op_unifies_counters_and_histograms() {
+        let (coord, source) = setup();
+        let flag = AtomicBool::new(false);
+        // Scripted session: info, two stats, one explain.
+        handle_request(r#"{"op":"info"}"#, &coord, &source, &flag).unwrap();
+        let stats_req = format!(
+            r#"{{"op":"stats","lo":0,"hi":{},"column":"temperature"}}"#,
+            3600 * 999
+        );
+        handle_request(&stats_req, &coord, &source, &flag).unwrap();
+        handle_request(&stats_req, &coord, &source, &flag).unwrap();
+        handle_request(
+            &format!(
+                r#"{{"op":"explain","lo":0,"hi":{},"column":"temperature"}}"#,
+                3600 * 999
+            ),
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap();
+
+        let r = handle_request(r#"{"op":"metrics"}"#, &coord, &source, &flag).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("enabled"), Some(&Json::Bool(true)));
+        // Every pre-existing engine counter is present, with real traffic.
+        let counters = r.get("counters").unwrap();
+        assert_eq!(
+            keys_of(counters),
+            [
+                "bytes_materialized",
+                "partitions_agg_answered",
+                "partitions_scanned",
+                "partitions_targeted",
+                "rows_scanned",
+                "sessions_failed",
+            ]
+        );
+        assert!(counters.get("partitions_targeted").unwrap().as_usize().unwrap() > 0);
+        // Per-op histograms: all six registered, with non-zero counts for
+        // the ops the session ran.
+        let ops = r.get("ops").unwrap();
+        assert_eq!(
+            keys_of(ops),
+            ["op_append", "op_explain", "op_info", "op_metrics", "op_snapshot", "op_stats"]
+        );
+        let count_of = |j: &Json, key: &str| {
+            j.get(key).unwrap().get("count").unwrap().as_usize().unwrap()
+        };
+        assert_eq!(count_of(ops, "op_stats"), 2);
+        assert_eq!(count_of(ops, "op_info"), 1);
+        assert_eq!(count_of(ops, "op_explain"), 1);
+        assert_eq!(count_of(ops, "op_metrics"), 0, "recorded after the handler returns");
+        assert!(ops.get("op_stats").unwrap().get("p50").unwrap().as_f64().unwrap() > 0.0);
+        assert!(ops.get("op_stats").unwrap().get("p999").is_some());
+        // Per-phase histograms: the stats queries exercised the planner.
+        let phases = r.get("phases").unwrap();
+        assert_eq!(
+            keys_of(phases),
+            [
+                "phase_demux",
+                "phase_fault_in",
+                "phase_scan_merge",
+                "phase_sketch_classify",
+                "phase_targeting",
+                "phase_zone_pruning",
+            ]
+        );
+        assert_eq!(count_of(phases, "phase_targeting"), 2);
+        assert_eq!(count_of(phases, "phase_scan_merge"), 2);
+        // The slow-query log retained the stats queries with their
+        // traces and explains.
+        let slow = r.get("slow_queries").unwrap().as_arr().unwrap();
+        assert_eq!(slow.len(), 2);
+        assert!(slow[0].get("trace").is_some());
+        assert!(slow[0].get("explain").is_some());
+        assert_eq!(slow[0].get("op").unwrap().as_str(), Some("stats"));
+
+        // A second metrics call observes the first; info advertises both.
+        let r2 = handle_request(r#"{"op":"metrics"}"#, &coord, &source, &flag).unwrap();
+        assert_eq!(count_of(r2.get("ops").unwrap(), "op_metrics"), 1);
+        let info = handle_request(r#"{"op":"info"}"#, &coord, &source, &flag).unwrap();
+        assert_eq!(info.get("metrics_ops").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn metrics_text_exposition() {
+        let (coord, source) = setup();
+        let flag = AtomicBool::new(false);
+        handle_request(
+            &format!(
+                r#"{{"op":"stats","lo":0,"hi":{},"column":"temperature"}}"#,
+                3600 * 999
+            ),
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap();
+        let r =
+            handle_request(r#"{"op":"metrics","text":true}"#, &coord, &source, &flag).unwrap();
+        let text = r.get("text").unwrap().as_str().unwrap();
+        assert!(text.contains("oseba_engine_partitions_targeted "), "{text}");
+        assert!(text.contains("oseba_op_stats_latency_seconds_count 1"), "{text}");
+        assert!(text.contains("oseba_op_stats_latency_seconds{quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("oseba_phase_targeting_latency_seconds_count 1"), "{text}");
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad exposition line: {line}");
+        }
+    }
+
+    #[test]
+    fn trace_span_tree_matches_explain() {
+        let (coord, source) = setup();
+        let flag = AtomicBool::new(false);
+        // Narrow range: non-trivial targeting/key-pruning arithmetic.
+        let r = handle_request(
+            &format!(
+                r#"{{"op":"stats","lo":0,"hi":{},"column":"temperature","trace":true}}"#,
+                3600 * 999
+            ),
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap();
+        let trace = r.get("trace").unwrap();
+        assert_eq!(trace.get("name").unwrap().as_str(), Some("query"));
+        let plan = handle_request(
+            &format!(
+                r#"{{"op":"explain","lo":0,"hi":{},"column":"temperature"}}"#,
+                3600 * 999
+            ),
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap();
+        let plan = plan.get("plan").unwrap();
+        let children = trace.get("children").unwrap().as_arr().unwrap();
+        let names: Vec<&str> =
+            children.iter().map(|c| c.get("name").unwrap().as_str().unwrap()).collect();
+        assert_eq!(
+            names,
+            ["targeting", "zone_pruning", "sketch_classify", "fault_in", "scan_merge"]
+        );
+        let child = |name: &str| {
+            children.iter().find(|c| c.get("name").unwrap().as_str() == Some(name)).unwrap()
+        };
+        // Per-phase counts agree with the identical query's explain.
+        for (span, key) in [
+            ("targeting", "considered"),
+            ("targeting", "key_pruned"),
+            ("zone_pruning", "zone_pruned"),
+            ("sketch_classify", "agg_answered"),
+            ("sketch_classify", "rows_avoided"),
+            ("fault_in", "targeted"),
+            ("scan_merge", "estimated_rows"),
+        ] {
+            assert_eq!(child(span).get(key), plan.get(key), "span '{span}' count '{key}'");
+        }
+        // Every span serializes a sane (non-negative, finite) wall time.
+        for c in children {
+            assert!(c.get("secs").unwrap().as_f64().unwrap() >= 0.0);
+        }
+        // Untraced responses carry no span tree; the scan baseline
+        // reports a root-only span when asked.
+        let r = handle_request(
+            &format!(r#"{{"op":"stats","lo":0,"hi":{},"column":"temperature"}}"#, 3600 * 999),
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap();
+        assert!(r.get("trace").is_none());
+        let r = handle_request(
+            &format!(
+                r#"{{"op":"stats","lo":0,"hi":{},"column":"temperature","method":"default","trace":true}}"#,
+                3600 * 999
+            ),
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap();
+        let trace = r.get("trace").unwrap();
+        assert_eq!(trace.get("name").unwrap().as_str(), Some("query"));
+        assert_eq!(trace.get("children").unwrap().as_arr().map(<[Json]>::len), Some(0));
     }
 }

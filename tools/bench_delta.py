@@ -8,11 +8,12 @@ Documents present on only one side are listed but not compared.
 
 For each bench present on both sides, the two JSON trees are walked in
 lockstep and every numeric leaf with the same path is compared. Leaves
-whose path mentions ``secs`` are treated as timings: the delta column
-shows the relative change, and ``--fail-above PCT`` turns a slowdown
-beyond PCT percent on any timing leaf into exit code 1. Other numeric
-leaves (byte counts, row counts, speedups) are shown for context but
-never fail the run.
+whose path mentions ``secs`` and latency-quantile leaves (a final path
+segment like ``p50`` / ``p99`` / ``p999``, as the traffic harness
+emits) are treated as timings: the delta column shows the relative
+change, and ``--fail-above PCT`` turns a slowdown beyond PCT percent
+on any such leaf into exit code 1. Other numeric leaves (byte counts,
+row counts, speedups) are shown for context but never fail the run.
 
 With no baseline documents the script prints how to record one and
 exits 0 — the delta gate only arms itself once someone has committed
@@ -24,8 +25,16 @@ Usage:
 
 import argparse
 import json
+import re
 import sys
 from pathlib import Path
+
+QUANTILE_RE = re.compile(r"^p\d{2,3}$")
+
+
+def is_quantile_leaf(path):
+    """True if the leaf's last dotted segment is a quantile (p50..p999)."""
+    return bool(QUANTILE_RE.match(path.rsplit(".", 1)[-1]))
 
 
 def find_docs(root):
@@ -71,7 +80,7 @@ def compare(name, base_doc, cur_doc, fail_above):
     rows = []
     for path in sorted(base.keys() & cur.keys()):
         b, c = base[path], cur[path]
-        timing = "secs" in path
+        timing = "secs" in path or is_quantile_leaf(path)
         if b == c:
             continue
         if b != 0:
@@ -129,7 +138,7 @@ def main():
         print(f"\n{name}: {side} only — not compared")
 
     if regressions:
-        print(f"\n{len(regressions)} timing leaf(s) regressed beyond "
+        print(f"\n{len(regressions)} timing/quantile leaf(s) regressed beyond "
               f"{fail_above:.1f}%:")
         for path, pct in regressions:
             print(f"  {path}: {pct:+.1f}%")

@@ -1,0 +1,5 @@
+//! Registry anchor: `op_info` and `phase_targeting` are surfaced by the
+//! fixture server, `op_ghost` is registered but never listed — fires.
+
+pub const OP_METRICS: [&str; 2] = ["op_info", "op_ghost"];
+pub const PHASE_METRICS: [&str; 1] = ["phase_targeting"];

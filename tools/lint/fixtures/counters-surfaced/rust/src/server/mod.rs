@@ -1,8 +1,10 @@
-//! Server anchor: surfaces `partitions_scanned` and `epoch` but not
-//! `ghost_counter`.
+//! Server anchor: surfaces `partitions_scanned`, `epoch`, `op_info` and
+//! `phase_targeting` but neither `ghost_counter` nor `op_ghost`.
 
 pub fn info() -> String {
     let mut s = String::from("partitions_scanned");
     s.push_str("epoch");
+    s.push_str("op_info");
+    s.push_str("phase_targeting");
     s
 }

@@ -791,6 +791,9 @@ fn enum_variants(span: &str) -> Vec<String> {
 /// somewhere in the crate AND surfaced by the server (its name appears as
 /// a response key in non-test `server/mod.rs`). A counter the server
 /// never reports is invisible telemetry; one nothing updates is a lie.
+/// Likewise every histogram name registered in the metrics registry
+/// (`OP_METRICS` / `PHASE_METRICS`) must appear in the server's `metrics`
+/// op output.
 fn rule_counters_surfaced(files: &[SourceFile]) -> Vec<Finding> {
     let mut out = Vec::new();
     let Some(server) = find_file(files, "server/mod.rs") else {
@@ -848,7 +851,62 @@ fn rule_counters_surfaced(files: &[SourceFile]) -> Vec<Finding> {
             }
         }
     }
+    // Histogram names get the same treatment: every name registered in
+    // the metrics registry's `OP_METRICS` / `PHASE_METRICS` tables must
+    // be listed literally by the server's `metrics` op, else it is an
+    // invisible histogram nothing can scrape.
+    let Some(reg) = find_file(files, "metrics/registry.rs") else {
+        out.extend(anchor_missing(Rule::CountersSurfaced, "metrics/registry.rs"));
+        return out;
+    };
+    for const_name in ["OP_METRICS", "PHASE_METRICS"] {
+        let Some((start, end)) = const_span(&reg.masked.code, const_name) else {
+            out.extend(anchor_missing(
+                Rule::CountersSurfaced,
+                &format!("const {const_name} in metrics/registry.rs"),
+            ));
+            continue;
+        };
+        let (first, last) = (line_at(&reg.masked.code, start), line_at(&reg.masked.code, end));
+        for (line, name) in reg.masked.strings.iter().filter(|(l, _)| *l >= first && *l <= last) {
+            if !surfaced.iter().any(|s| *s == name.as_str()) {
+                out.push(Finding {
+                    rule: Rule::CountersSurfaced,
+                    file: reg.rel.clone(),
+                    line: line + 1,
+                    msg: format!(
+                        "registered metric \"{name}\" is never surfaced by the server metrics op"
+                    ),
+                });
+            }
+        }
+    }
     out
+}
+
+/// Byte span of `const NAME ... ;` (the `;` at bracket depth 0, so the
+/// `;` inside an array-length annotation does not end the span).
+fn const_span(code: &str, name: &str) -> Option<(usize, usize)> {
+    let pat = format!("const {name}");
+    let pos = code.find(&pat)?;
+    let b = code.as_bytes();
+    let mut depth = 0i64;
+    let mut i = pos + pat.len();
+    while i < b.len() {
+        match b[i] {
+            b'[' | b'(' | b'{' => depth += 1,
+            b']' | b')' | b'}' => depth -= 1,
+            b';' if depth == 0 => return Some((pos, i)),
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+/// 0-based line of a byte offset (the convention `mask_source` uses).
+fn line_at(code: &str, pos: usize) -> usize {
+    code[..pos].bytes().filter(|&b| b == b'\n').count()
 }
 
 fn struct_span(code: &str, name: &str) -> Option<(usize, usize)> {
