@@ -1,0 +1,268 @@
+//! **Point-lookup bench**: equality predicates (`col == v`) over a tiered
+//! dataset ~4× the memory budget, where the value column is a permutation
+//! of the row index — every partition's zone map spans essentially the
+//! whole value domain (zone pruning is blind), but each probe value lives
+//! in exactly one partition. Per-partition membership filters prune from
+//! resident metadata **before fault-in**, so a needle query faults O(1)
+//! partitions instead of all of them.
+//!
+//! Two arms, identical queries, cold cache each run:
+//!   * zone-only  — `PlanOptions { filter_pruning: false, .. }`
+//!   * filter-on  — the default plan
+//! plus a measured false-positive-rate curve vs `fbits` for the filter
+//! itself, checked against its analytic bound.
+//!
+//! Emits `BENCH_point_lookup.json` (faults, bytes read, partitions
+//! targeted, wall time per arm; the FPR curve) for the perf trajectory.
+//!
+//! Run: `cargo bench --bench point_lookup`
+//! (OSEBA_POINT_LOOKUP_BUDGET rescales; dataset is 4× the budget.)
+
+mod common;
+
+use oseba::bench::{bench, section, table, BenchConfig};
+use oseba::config::{parse_bytes, BackendKind, ContextConfig};
+use oseba::coordinator::{
+    plan_query_opts, Coordinator, PlanOptions, Query, QueryOutput,
+};
+use oseba::engine::Dataset;
+use oseba::index::{ColumnPredicate, FilterBuilder, PredOp, RangeQuery};
+use oseba::runtime::make_backend;
+use oseba::storage::{BatchBuilder, Schema};
+use oseba::util::humansize;
+use oseba::util::json::Json;
+
+const PARTITIONS: usize = 32;
+/// Multiplicative step of the value permutation (prime, so it is coprime
+/// with any domain size that is not a multiple of it).
+const STEP: u64 = 37;
+
+fn coordinator(budget: usize) -> Coordinator {
+    let mut cfg = common::app_cfg(BackendKind::Native);
+    cfg.ctx = ContextConfig { num_workers: 4, memory_budget: Some(budget) };
+    let be = make_backend(cfg.backend, &cfg.artifacts_dir).expect("backend");
+    Coordinator::new(&cfg, be).expect("coordinator")
+}
+
+/// `price[i] = (i * STEP) % domain` — a permutation of `0..domain` when
+/// `gcd(STEP, domain) = 1`. Consecutive rows jump by STEP and wrap, so a
+/// partition of contiguous rows sees values spread over the whole domain
+/// (zone maps are useless for equality), yet each value occurs in only
+/// `rows / domain` ≈ 1 partition.
+fn permuted_batch(rows: usize, domain: u64) -> oseba::storage::RecordBatch {
+    let mut b = BatchBuilder::new(Schema::stock());
+    for i in 0..rows as u64 {
+        let price = (i * STEP % domain) as f32;
+        b.push(i as i64, &[price, 7.0]);
+    }
+    b.finish().unwrap()
+}
+
+fn run_stats(
+    c: &Coordinator,
+    ds: &Dataset,
+    plan: &oseba::coordinator::PhysicalPlan,
+    q: &Query,
+) -> oseba::analysis::PeriodStats {
+    match c.execute_physical(ds, plan, q).expect("execute") {
+        QueryOutput::Stats(s) => s,
+        _ => unreachable!(),
+    }
+}
+
+fn needle_query(value: f32) -> Query {
+    Query::stats(RangeQuery { lo: 0, hi: i64::MAX }, 0).filtered(vec![
+        ColumnPredicate { column: 0, op: PredOp::Eq, value },
+    ])
+}
+
+fn main() {
+    let budget = std::env::var("OSEBA_POINT_LOOKUP_BUDGET")
+        .ok()
+        .map(|v| parse_bytes(&v).expect("OSEBA_POINT_LOOKUP_BUDGET"))
+        .unwrap_or(8 << 20);
+    let raw = 4 * budget;
+    let mut rows = raw / Schema::stock().row_bytes();
+    if rows as u64 % STEP == 0 {
+        rows += 1; // keep gcd(STEP, domain) = 1
+    }
+    // Values must be exactly representable as f32 integers.
+    let domain = (rows as u64).min((1 << 24) - 1);
+    let dir =
+        std::env::temp_dir().join(format!("oseba-point-lookup-bench-{}", std::process::id()));
+
+    section(&format!(
+        "Point lookups: {} tiered dataset under a {} budget ({} partitions)",
+        humansize::bytes(raw),
+        humansize::bytes(budget),
+        PARTITIONS
+    ));
+
+    let coord = coordinator(budget);
+    let ds = coord
+        .load_tiered(permuted_batch(rows, domain), PARTITIONS, &dir)
+        .expect("tiered load");
+    let store = ds.store().expect("tiered").clone();
+    let index = coord
+        .build_index(&ds, oseba::coordinator::IndexKind::Cias)
+        .expect("index");
+    println!(
+        "  filters: {} across {} partitions",
+        humansize::bytes(ds.filter_bytes()),
+        PARTITIONS
+    );
+    assert!(ds.filter_bytes() > 0, "tiered load must build membership filters");
+
+    // 8 present needles spread across the key space, plus their absent
+    // twins (x + 0.5 never occurs: every stored value is an integer).
+    let present: Vec<f32> = (0..8u64)
+        .map(|p| ((p * rows as u64 / 8 + 123) * STEP % domain) as f32)
+        .collect();
+    let absent: Vec<f32> = present.iter().map(|v| v + 0.5).collect();
+    let needles: Vec<f32> = present.iter().chain(absent.iter()).copied().collect();
+
+    let zone_only =
+        PlanOptions { zone_pruning: true, filter_pruning: false, agg_pushdown: true };
+    let filter_on = PlanOptions::default();
+
+    // Correctness first, cold cache: identical answers from both arms on
+    // present needles; identical (zero) match counts on absent ones. The
+    // moment fields of an empty selection are NaN, so absent needles
+    // compare counts only.
+    for (k, &v) in needles.iter().enumerate() {
+        let q = needle_query(v);
+        let zp = plan_query_opts(&ds, index.as_ref(), &q, zone_only).expect("plan");
+        let fp = plan_query_opts(&ds, index.as_ref(), &q, filter_on).expect("plan");
+        store.shrink(usize::MAX).expect("evict all");
+        let want = run_stats(&coord, &ds, &zp, &q);
+        store.shrink(usize::MAX).expect("evict all");
+        let got = run_stats(&coord, &ds, &fp, &q);
+        assert!(
+            fp.explain.targeted <= 4,
+            "needle {v} must touch O(1) partitions: {:?}",
+            fp.explain
+        );
+        if k < present.len() {
+            assert!(want.count >= 1, "present needle {v} must match");
+            assert_eq!(got, want, "filter pruning must not change results");
+        } else {
+            assert_eq!(want.count, 0, "absent needle {v} must not match");
+            assert_eq!(got.count, want.count);
+        }
+    }
+
+    // Counters + wall time per arm: all needles, cold cache per pass.
+    let cfg = BenchConfig::from_env();
+    let mut results = Vec::new();
+    let mut json_arms = Vec::new();
+    for (name, opts) in [("zone-map-only", zone_only), ("membership-filters", filter_on)] {
+        let plans: Vec<(Query, oseba::coordinator::PhysicalPlan)> = needles
+            .iter()
+            .map(|&v| {
+                let q = needle_query(v);
+                let p = plan_query_opts(&ds, index.as_ref(), &q, opts).expect("plan");
+                (q, p)
+            })
+            .collect();
+        let targeted: usize = plans.iter().map(|(_, p)| p.explain.targeted).sum();
+        let filter_pruned: usize = plans.iter().map(|(_, p)| p.explain.filter_pruned).sum();
+
+        store.shrink(usize::MAX).expect("evict all");
+        let before = store.counters();
+        for (q, p) in &plans {
+            run_stats(&coord, &ds, p, q);
+        }
+        let delta = store.counters().since(&before);
+
+        let r = bench(&cfg, name, || {
+            store.shrink(usize::MAX).expect("evict all");
+            for (q, p) in &plans {
+                run_stats(&coord, &ds, p, q);
+            }
+        });
+        println!(
+            "  {name}: {} faults, {} read, {} partitions targeted, {} filter-pruned",
+            delta.faults,
+            humansize::bytes(delta.segment_bytes_read),
+            targeted,
+            filter_pruned
+        );
+        json_arms.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("faults", Json::num(delta.faults as f64)),
+            ("segment_bytes_read", Json::num(delta.segment_bytes_read as f64)),
+            ("partitions_targeted", Json::num(targeted as f64)),
+            ("filter_pruned", Json::num(filter_pruned as f64)),
+            ("needles", Json::num(needles.len() as f64)),
+            ("secs_mean", Json::num(r.summary.mean)),
+            ("secs_p50", Json::num(r.summary.p50)),
+            ("secs_p95", Json::num(r.summary.p95)),
+        ]));
+        results.push(r);
+    }
+    println!("\n{}", table(&results));
+
+    // The acceptance gate: fewer faults, fewer bytes, same answers.
+    let (zone, filt) = (&json_arms[0], &json_arms[1]);
+    let f = |j: &Json, k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap();
+    assert!(
+        f(filt, "faults") < f(zone, "faults") / 4.0,
+        "filters must fault in far fewer partitions ({} vs {})",
+        f(filt, "faults"),
+        f(zone, "faults")
+    );
+    assert!(
+        f(filt, "segment_bytes_read") < f(zone, "segment_bytes_read"),
+        "filters must read fewer segment bytes"
+    );
+
+    // Measured FPR vs bits/key: 100k distinct integer values in, 100k
+    // never-inserted probes (x + 0.5), against the analytic bound
+    // 2·SLOTS/2^fbits. Growth leaves the table ≥ half loaded, so the
+    // measured rate sits below the full-table bound.
+    section("False-positive rate vs fingerprint bits");
+    let n = 100_000u32;
+    let mut fpr_curve = Vec::new();
+    for fbits in [6u32, 8, 10, 12, 14, 16] {
+        let mut b = FilterBuilder::new(fbits);
+        for i in 0..n {
+            b.insert(i as f32);
+        }
+        let filter = b.finish();
+        let false_pos =
+            (0..n).filter(|&i| filter.contains(i as f32 + 0.5)).count();
+        let measured = false_pos as f64 / n as f64;
+        let bound = filter.fpr_bound();
+        let bits_per_key = filter.memory_bytes() as f64 * 8.0 / filter.len() as f64;
+        println!(
+            "  fbits={fbits:2}: measured {measured:.5}, bound {bound:.5}, {bits_per_key:.1} bits/key"
+        );
+        assert!(
+            measured <= bound + 0.003,
+            "fbits={fbits}: measured FPR {measured} exceeds bound {bound}"
+        );
+        fpr_curve.push(Json::obj(vec![
+            ("fbits", Json::num(fbits as f64)),
+            ("measured_fpr", Json::num(measured)),
+            ("fpr_bound", Json::num(bound)),
+            ("bits_per_key", Json::num(bits_per_key)),
+        ]));
+    }
+
+    common::write_bench_json(
+        "point_lookup",
+        Json::obj(vec![
+            ("bench", Json::str("point_lookup")),
+            ("raw_bytes", Json::num(raw as f64)),
+            ("budget_bytes", Json::num(budget as f64)),
+            ("partitions", Json::num(PARTITIONS as f64)),
+            ("rows", Json::num(rows as f64)),
+            ("filter_bytes", Json::num(ds.filter_bytes() as f64)),
+            ("arms", Json::arr(json_arms)),
+            ("fpr_curve", Json::arr(fpr_curve)),
+        ]),
+    );
+
+    coord.context().unpersist(&ds);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -71,6 +71,12 @@ fn trace_span(plan: &PhysicalPlan, et: &ExecTimings, faults: usize, total: Durat
                 .count("zone_pruned", ex.zone_pruned as u64),
         )
         .child(
+            Span::new("filter_pruning")
+                .with_secs(plan.timings.filter_pruning.as_secs_f64())
+                .count("filter_pruned", ex.filter_pruned as u64)
+                .count("filter_bytes", ex.filter_bytes as u64),
+        )
+        .child(
             Span::new("sketch_classify")
                 .with_secs(plan.timings.sketch_classify.as_secs_f64())
                 .count("agg_answered", ex.agg_answered as u64)
@@ -408,6 +414,7 @@ impl Coordinator {
         let m = self.ctx.metrics();
         m.record_phase(PlanPhase::Targeting, plan.timings.targeting);
         m.record_phase(PlanPhase::ZonePruning, plan.timings.zone_pruning);
+        m.record_phase(PlanPhase::FilterPruning, plan.timings.filter_pruning);
         m.record_phase(PlanPhase::SketchClassify, plan.timings.sketch_classify);
         let store_before = ds.store().map(|s| s.counters()).unwrap_or_default();
         let mut et = ExecTimings::default();
@@ -683,6 +690,7 @@ impl Coordinator {
         let mut worker_lists: Vec<Vec<BatchItem>> = Vec::new();
         let mut partitions_touched = 0usize;
         let mut zone_pruned = 0usize;
+        let mut filter_pruned = 0usize;
         let mut agg_answered = 0usize;
         let mut rows_avoided = 0usize;
 
@@ -697,6 +705,16 @@ impl Coordinator {
                     let keep = plan::zone_keep(ds, predicates, s.partition);
                     if !keep {
                         zone_pruned += 1;
+                    }
+                    keep
+                });
+                // Membership-filter pruning (the same `filter_keep`
+                // decision): equality predicates probe each survivor's
+                // per-column filter; a miss drops it before resolve.
+                slices.retain(|s| {
+                    let (keep, _) = plan::filter_keep(ds, predicates, s.partition);
+                    if !keep {
+                        filter_pruned += 1;
                     }
                     keep
                 });
@@ -841,6 +859,7 @@ impl Coordinator {
             segments: segments.len(),
             partitions_touched,
             zone_pruned,
+            filter_pruned,
             agg_answered,
             rows_avoided,
             bytes_avoided: rows_avoided * ds.schema().row_bytes(),
@@ -1387,6 +1406,47 @@ mod tests {
     }
 
     #[test]
+    fn batch_with_equality_predicate_filter_prunes_what_zones_cannot() {
+        use crate::index::{ColumnPredicate, PredOp};
+        use crate::storage::BatchBuilder;
+        // price walks the multiples of 37 modulo 10000 (a cycle longer
+        // than any partition): every partition's zone map spans nearly
+        // the whole domain, so only the membership filters can rule a
+        // probe value out. 5000.0 occurs exactly once, in partition 2.
+        let mut b = BatchBuilder::new(Schema::stock());
+        for i in 0..8_000u64 {
+            b.push(i as i64 * 10, &[(i * 37 % 10_000) as f32, 7.0]);
+        }
+        let c = coord(3);
+        let ds = c.load(b.finish().unwrap(), 4).unwrap();
+        let index = c.build_index(&ds, IndexKind::Cias).unwrap();
+        let preds = vec![ColumnPredicate { column: 0, op: PredOp::Eq, value: 5_000.0 }];
+        let qs = vec![RangeQuery { lo: 0, hi: i64::MAX }];
+
+        let (stats, report) =
+            c.execute_batch(&ds, index.as_ref(), &qs, &preds, 0).unwrap();
+        assert_eq!(report.zone_pruned, 0, "zones span the probe everywhere");
+        // A false positive may keep an extra partition but can never drop
+        // the one that truly holds the probe.
+        assert!(report.filter_pruned >= 2, "filters must prune");
+        assert_eq!(report.partitions_touched, 4 - report.filter_pruned);
+        assert_eq!(stats[0].count, 1);
+        assert_eq!(stats[0].min, 5_000.0);
+        assert_eq!(stats[0].max, 5_000.0);
+
+        // Identical to the same query executed without any pruning.
+        let query = Query::stats(qs[0], 0).filtered(preds.clone());
+        let unpruned = plan_query(&ds, index.as_ref(), &query, false).unwrap();
+        assert_eq!(unpruned.explain.filter_pruned, 0);
+        let QueryOutput::Stats(oracle) =
+            c.execute_physical(&ds, &unpruned, &query).unwrap()
+        else {
+            panic!("stats output")
+        };
+        assert_eq!(stats[0], oracle, "pruning must not change results");
+    }
+
+    #[test]
     fn covered_query_answers_from_sketches_without_touching_cold_data() {
         let dir = crate::testing::temp_dir("coord-agg");
         let batch = ClimateGen::default().generate(30_000);
@@ -1430,7 +1490,8 @@ mod tests {
         // bit-identical result, because a sketch partial IS the partial
         // the scan computes, merged in the same structure.
         store.shrink(usize::MAX).unwrap();
-        let opts = PlanOptions { zone_pruning: true, agg_pushdown: false };
+        let opts =
+            PlanOptions { zone_pruning: true, filter_pruning: true, agg_pushdown: false };
         let oracle_plan = plan_query_opts(&ds, index.as_ref(), &query, opts).unwrap();
         assert_eq!(oracle_plan.explain.agg_answered, 0);
         let before = store.counters();

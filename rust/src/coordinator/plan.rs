@@ -15,7 +15,14 @@
 //!    the store's slot table (and the manifest), so cold partitions are
 //!    ruled out **before any fault-in** — fewer `faults`, fewer
 //!    `segment_bytes_read`.
-//! 3. **Batch merge** — multiple ranges go through
+//! 3. **Filter pruning** — equality predicates (`col == v`) probe each
+//!    zone-surviving partition's per-column
+//!    [`crate::index::MembershipFilter`]; a miss is definite (filters
+//!    never report false negatives), so the partition is dropped. Like
+//!    zones, filters for cold partitions live in the store's slot table —
+//!    a point lookup faults in only the partitions that can hold the
+//!    needle.
+//! 4. **Batch merge** — multiple ranges go through
 //!    [`crate::coordinator::plan_batch`] first, so overlapping ranges
 //!    resolve each partition once.
 //!
@@ -151,20 +158,23 @@ impl PrunedRange {
     }
 }
 
-/// Optimizer switches for [`plan_query_opts`]. Both stages default to on;
+/// Optimizer switches for [`plan_query_opts`]. Every stage defaults to on;
 /// the off arms exist for the oracle comparisons the property tests and
 /// benches run through the *identical* execution path.
 #[derive(Clone, Copy, Debug)]
 pub struct PlanOptions {
     /// Drop partitions whose zone maps cannot satisfy the predicates.
     pub zone_pruning: bool,
+    /// Probe per-partition membership filters for equality predicates and
+    /// drop partitions whose filter definitely excludes the probe value.
+    pub filter_pruning: bool,
     /// Answer fully-covered partitions from their aggregate sketches.
     pub agg_pushdown: bool,
 }
 
 impl Default for PlanOptions {
     fn default() -> Self {
-        PlanOptions { zone_pruning: true, agg_pushdown: true }
+        PlanOptions { zone_pruning: true, filter_pruning: true, agg_pushdown: true }
     }
 }
 
@@ -183,6 +193,12 @@ pub struct Explain {
     /// Proposed pairs removed because their zone maps cannot satisfy the
     /// predicate conjunction.
     pub zone_pruned: usize,
+    /// Zone-surviving pairs removed because a membership filter proved an
+    /// equality predicate's probe value is absent from the partition.
+    pub filter_pruned: usize,
+    /// Total in-memory bytes of the membership filters the planner probed
+    /// (the metadata cost paid to avoid the pruned fault-ins).
+    pub filter_bytes: usize,
     /// Surviving pairs execution will resolve (and, when tiered, fault in).
     /// Sketch-answered pairs are counted here too — they are targeted by
     /// the plan, just with zero data touch (see [`Self::agg_answered`]).
@@ -210,16 +226,21 @@ impl Explain {
     pub fn line(&self) -> String {
         let mut line = format!(
             "plan: {} partitions -> {} merged ranges, {} considered \
-             ({} key-pruned), {} zone-pruned, {} targeted (~{} rows, ~{} bytes)",
+             ({} key-pruned), {} zone-pruned, {} filter-pruned, {} targeted \
+             (~{} rows, ~{} bytes)",
             self.partitions,
             self.merged_ranges,
             self.considered,
             self.key_pruned,
             self.zone_pruned,
+            self.filter_pruned,
             self.targeted,
             self.estimated_rows,
             self.estimated_bytes,
         );
+        if self.filter_bytes > 0 {
+            line.push_str(&format!(" | filter bytes probed: {}", self.filter_bytes));
+        }
         if self.agg_answered > 0 {
             line.push_str(&format!(
                 " | agg-answered: {} ({} rows, {} bytes avoided)",
@@ -237,6 +258,8 @@ impl Explain {
             ("considered", Json::num(self.considered as f64)),
             ("key_pruned", Json::num(self.key_pruned as f64)),
             ("zone_pruned", Json::num(self.zone_pruned as f64)),
+            ("filter_pruned", Json::num(self.filter_pruned as f64)),
+            ("filter_bytes", Json::num(self.filter_bytes as f64)),
             ("targeted", Json::num(self.targeted as f64)),
             ("agg_answered", Json::num(self.agg_answered as f64)),
             ("rows_avoided", Json::num(self.rows_avoided as f64)),
@@ -257,6 +280,9 @@ pub struct PlanTimings {
     pub targeting: Duration,
     /// Zone-map predicate checks over proposed slices.
     pub zone_pruning: Duration,
+    /// Membership-filter probes for equality predicates over
+    /// zone-surviving slices.
+    pub filter_pruning: Duration,
     /// Sketch coverage classification of surviving slices.
     pub sketch_classify: Duration,
 }
@@ -304,8 +330,9 @@ impl PhysicalPlan {
     ///
     /// Plus the [`Explain`] arithmetic: `merged_ranges`, `targeted`,
     /// `agg_answered`, `estimated_rows` and `rows_avoided` are recomputed
-    /// from the plan itself; `considered = targeted + zone_pruned`; the
-    /// byte figures are the row figures times the schema row width.
+    /// from the plan itself; `considered = targeted + zone_pruned +
+    /// filter_pruned`; the byte figures are the row figures times the
+    /// schema row width.
     ///
     /// Pure metadata — no partition is read or faulted in. Called on every
     /// plan in debug builds; the server's `explain` op exposes it in
@@ -406,7 +433,7 @@ impl PhysicalPlan {
             ("merged_ranges", ex.merged_ranges, self.ranges.len() + self.baseline.len()),
             ("targeted", ex.targeted, targeted),
             ("agg_answered", ex.agg_answered, agg_answered),
-            ("considered", ex.considered, ex.targeted + ex.zone_pruned),
+            ("considered", ex.considered, ex.targeted + ex.zone_pruned + ex.filter_pruned),
             ("estimated_rows", ex.estimated_rows, est_rows),
             ("rows_avoided", ex.rows_avoided, rows_avoided),
             ("estimated_bytes", ex.estimated_bytes, ex.estimated_rows * row_bytes),
@@ -443,6 +470,43 @@ pub(crate) fn zone_keep(
         }
 }
 
+/// The membership-filter prune decision both the plan layer and the batch
+/// path use: does `partition` survive its per-column filters for the
+/// equality predicates in `predicates`? Returns `(keep, bytes)` where
+/// `bytes` is the in-memory size of every filter actually probed — the
+/// metadata cost of the decision. Only [`PredOp::Eq`] predicates probe; a
+/// partition without filters (pre-v4 manifests) or without a filter for
+/// the predicate's column is always kept — "no filter" means "always
+/// consider", never "absent".
+pub(crate) fn filter_keep(
+    ds: &Dataset,
+    predicates: &[ColumnPredicate],
+    partition: usize,
+) -> (bool, usize) {
+    if !predicates.iter().any(|p| p.op == PredOp::Eq) {
+        return (true, 0);
+    }
+    let Some(filters) = ds.filters(partition) else {
+        return (true, 0);
+    };
+    let mut bytes = 0usize;
+    for p in predicates {
+        if p.op != PredOp::Eq {
+            continue;
+        }
+        let Some(f) = filters.get(p.column) else {
+            continue;
+        };
+        bytes += f.memory_bytes();
+        if !f.contains(p.value) {
+            // A filter miss is definite: the probe value is not in the
+            // partition, so the conjunction cannot match any of its rows.
+            return (false, bytes);
+        }
+    }
+    (true, bytes)
+}
+
 /// The one covered/edge decision of the aggregate-pushdown lowering
 /// stage, shared by the plan layer (one candidate range per merged range)
 /// and the batch path (the elementary demux segments as candidates):
@@ -474,6 +538,7 @@ fn prune_ranges(
     ranges: &[RangeQuery],
     predicates: &[ColumnPredicate],
     zone_pruning: bool,
+    filter_pruning: bool,
     agg_column: Option<usize>,
     seen: &mut [bool],
     ex: &mut Explain,
@@ -503,7 +568,27 @@ fn prune_ranges(
             }
         }
         let mark = phase_mark(&mut timings.zone_pruning, mark);
-        // Phase 3 — sketch classification: covered survivors are answered
+        // Phase 3 — filter pruning: equality predicates probe each
+        // survivor's per-column membership filter; a miss is definite, so
+        // the partition is dropped before any fault-in. Pure metadata —
+        // for a tiered dataset the filters live in the store's slot table.
+        let mut kept = Vec::with_capacity(survivors.len());
+        for s in survivors {
+            let (keep, bytes) = if filter_pruning {
+                filter_keep(ds, predicates, s.partition)
+            } else {
+                (true, 0)
+            };
+            ex.filter_bytes += bytes;
+            if keep {
+                kept.push(s);
+            } else {
+                ex.filter_pruned += 1;
+            }
+        }
+        let survivors = kept;
+        let mark = phase_mark(&mut timings.filter_pruning, mark);
+        // Phase 4 — sketch classification: covered survivors are answered
         // from their aggregate sketches, the rest go to the scan path.
         let mut covered = Vec::new();
         for s in &survivors {
@@ -531,19 +616,25 @@ fn prune_ranges(
 
 /// Lower a logical [`Query`] against a dataset and its super index into a
 /// [`PhysicalPlan`]: batch-merge the ranges, key-target each merged range
-/// through the index, and (when `zone_pruning` is set) drop partitions
-/// whose zone maps cannot satisfy the predicates. Aggregate pushdown stays
-/// on; use [`plan_query_opts`] to switch it off for oracle comparisons.
-/// Pure metadata — no partition is read or faulted in. `zone_pruning:
-/// false` is the oracle arm the property tests and the pruning bench
-/// compare against.
+/// through the index, and (when `prune` is set) drop partitions whose
+/// zone maps cannot satisfy the predicates or whose membership filters
+/// exclude an equality probe. Aggregate pushdown stays on; use
+/// [`plan_query_opts`] to switch it off for oracle comparisons.
+/// Pure metadata — no partition is read or faulted in. `prune: false`
+/// switches off both zone-map and membership-filter pruning — the oracle
+/// arm the property tests and the pruning bench compare against.
 pub fn plan_query(
     ds: &Dataset,
     index: &dyn ContentIndex,
     query: &Query,
-    zone_pruning: bool,
+    prune: bool,
 ) -> Result<PhysicalPlan> {
-    plan_query_opts(ds, index, query, PlanOptions { zone_pruning, agg_pushdown: true })
+    plan_query_opts(
+        ds,
+        index,
+        query,
+        PlanOptions { zone_pruning: prune, filter_pruning: prune, agg_pushdown: true },
+    )
 }
 
 /// [`plan_query`] with every optimizer stage switchable — the entry point
@@ -593,9 +684,10 @@ pub fn plan_query_opts(
     // Distance pairs the two selections positionally, so zone pruning —
     // which removes rows from one side only — would shift the alignment.
     // Distance plans are key-targeted only; predicates drop *pairs* at
-    // execution instead.
-    let zone_pruning =
-        opts.zone_pruning && !matches!(query.op, QueryOp::Distance { .. });
+    // execution instead. The same applies to filter pruning.
+    let is_distance = matches!(query.op, QueryOp::Distance { .. });
+    let zone_pruning = opts.zone_pruning && !is_distance;
+    let filter_pruning = opts.filter_pruning && !is_distance;
     // Aggregate pushdown applies only to `Stats` — the one op whose
     // result is a pure fold of the sketch algebra. Trend needs the raw
     // series (a moving average is order-dependent) and distance needs
@@ -618,6 +710,7 @@ pub fn plan_query_opts(
         &query.ranges,
         &query.predicates,
         zone_pruning,
+        filter_pruning,
         agg_column,
         &mut seen,
         &mut ex,
@@ -637,6 +730,7 @@ pub fn plan_query_opts(
                 &[baseline],
                 &query.predicates,
                 zone_pruning,
+                filter_pruning,
                 None,
                 &mut seen,
                 &mut ex,
@@ -659,9 +753,9 @@ pub fn plan_query_opts(
 }
 
 /// Parse a `where` conjunction like `"temperature > 30, humidity <= 50"`
-/// (clauses joined by `,` or `and`; operators `>`, `>=`, `<`, `<=`)
-/// against a schema. Rejects unknown columns, unknown operators and
-/// non-finite constants.
+/// (clauses joined by `,` or `and`; operators `>`, `>=`, `<`, `<=`,
+/// `==`) against a schema. Rejects unknown columns, unknown operators
+/// (including bare `=`) and non-finite constants.
 pub fn parse_predicates(spec: &str, schema: &Schema) -> Result<Vec<ColumnPredicate>> {
     let mut out = Vec::new();
     for clause in spec.split(',').flat_map(|c| c.split(" and ")) {
@@ -670,7 +764,11 @@ pub fn parse_predicates(spec: &str, schema: &Schema) -> Result<Vec<ColumnPredica
             continue;
         }
         let mut found = None;
+        // `==` must be matched before the single-char operators — none of
+        // the others are its prefix, but keeping it first makes that
+        // invariant obvious.
         for (sym, op) in [
+            ("==", PredOp::Eq),
             (">=", PredOp::Ge),
             ("<=", PredOp::Le),
             (">", PredOp::Gt),
@@ -683,7 +781,7 @@ pub fn parse_predicates(spec: &str, schema: &Schema) -> Result<Vec<ColumnPredica
         }
         let Some((i, sym, op)) = found else {
             return Err(OsebaError::Config(format!(
-                "predicate '{clause}' has no operator (supported: > >= < <=)"
+                "predicate '{clause}' has no operator (supported: > >= < <= ==)"
             )));
         };
         let name = clause[..i].trim();
@@ -732,6 +830,66 @@ mod tests {
         ColumnPredicate { column, op, value }
     }
 
+    /// 1000 rows in 4 partitions; `price` walks the multiples of 37
+    /// modulo 1000 (a permutation of 0..1000), so every partition's zone
+    /// map spans almost the whole domain — only the membership filters
+    /// can rule a specific value out.
+    fn cycling() -> (OsebaContext, Dataset, Cias) {
+        let mut b = BatchBuilder::new(Schema::stock());
+        for i in 0..1000u64 {
+            b.push(i as i64 * 10, &[(i * 37 % 1000) as f32, 7.0]);
+        }
+        let ctx = OsebaContext::new(ContextConfig { num_workers: 2, memory_budget: None });
+        let ds = ctx.load(b.finish().unwrap(), 4).unwrap();
+        let index = Cias::build(ds.partitions()).unwrap();
+        (ctx, ds, index)
+    }
+
+    #[test]
+    fn filter_pruning_drops_partitions_zone_maps_cannot() {
+        let (_ctx, ds, index) = cycling();
+        // 500.0 exists only in partition 2, but every partition's price
+        // zone spans it: zones keep all four, filters keep (at least) the
+        // one that holds it. False positives may keep an extra partition
+        // but can never drop the true one, so the asserts bound rather
+        // than pin the counts.
+        let q = Query::stats(RangeQuery { lo: 0, hi: i64::MAX }, 0)
+            .filtered(vec![pred(0, PredOp::Eq, 500.0)]);
+        let plan = plan_query(&ds, &index, &q, true).unwrap();
+        assert_eq!(plan.explain.considered, 4);
+        assert_eq!(plan.explain.zone_pruned, 0);
+        assert!(plan.explain.filter_pruned >= 2, "explain: {:?}", plan.explain);
+        assert_eq!(plan.explain.targeted, 4 - plan.explain.filter_pruned);
+        assert!(plan.explain.filter_bytes > 0);
+        assert!(
+            plan.ranges[0].slices.iter().any(|s| s.partition == 2),
+            "the partition that truly holds the needle must survive"
+        );
+
+        // A value no row holds (all prices are integers) prunes
+        // everything, modulo at most a stray false positive.
+        let absent = Query::stats(RangeQuery { lo: 0, hi: i64::MAX }, 0)
+            .filtered(vec![pred(0, PredOp::Eq, 500.5)]);
+        let plan = plan_query(&ds, &index, &absent, true).unwrap();
+        assert!(plan.explain.targeted <= 1, "explain: {:?}", plan.explain);
+
+        // The oracle arm keeps everything the zones keep and probes no
+        // filter bytes.
+        let opts =
+            PlanOptions { zone_pruning: true, filter_pruning: false, agg_pushdown: true };
+        let plan = plan_query_opts(&ds, &index, &q, opts).unwrap();
+        assert_eq!(plan.explain.filter_pruned, 0);
+        assert_eq!(plan.explain.filter_bytes, 0);
+        assert_eq!(plan.explain.targeted, 4);
+
+        // Non-equality predicates never probe filters.
+        let ranged = Query::stats(RangeQuery { lo: 0, hi: i64::MAX }, 0)
+            .filtered(vec![pred(0, PredOp::Ge, 0.0)]);
+        let plan = plan_query(&ds, &index, &ranged, true).unwrap();
+        assert_eq!(plan.explain.filter_pruned, 0);
+        assert_eq!(plan.explain.filter_bytes, 0);
+    }
+
     #[test]
     fn key_only_plan_prunes_nothing_by_zones() {
         let (_ctx, ds, index) = trending();
@@ -764,7 +922,8 @@ mod tests {
 
         // The oracle arm forces the covered partition down the scan path.
         let q = Query::stats(RangeQuery { lo: 0, hi: 2_490 }, 0);
-        let opts = PlanOptions { zone_pruning: true, agg_pushdown: false };
+        let opts =
+            PlanOptions { zone_pruning: true, filter_pruning: true, agg_pushdown: false };
         let plan = plan_query_opts(&ds, &index, &q, opts).unwrap();
         assert_eq!(plan.explain.agg_answered, 0);
         assert_eq!(plan.explain.estimated_rows, 250);
@@ -881,9 +1040,12 @@ mod tests {
         let line = ex.line();
         assert!(line.contains("4 partitions"), "{line}");
         assert!(line.contains("zone-pruned"), "{line}");
+        assert!(line.contains("filter-pruned"), "{line}");
         let j = ex.to_json().to_string();
         assert!(j.contains("\"key_pruned\":3"), "{j}");
         assert!(j.contains("\"targeted\":1"), "{j}");
+        assert!(j.contains("\"filter_pruned\":0"), "{j}");
+        assert!(j.contains("\"filter_bytes\":"), "{j}");
     }
 
     #[test]
@@ -897,8 +1059,13 @@ mod tests {
         assert_eq!(ps.len(), 2);
         assert_eq!(ps[0], pred(2, PredOp::Ge, 1.5));
         assert_eq!(ps[1], pred(3, PredOp::Lt, 180.0));
+        let ps = parse_predicates("temperature == 21.5 and humidity > 10", &s).unwrap();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0], pred(0, PredOp::Eq, 21.5));
+        assert_eq!(ps[1], pred(1, PredOp::Gt, 10.0));
 
         assert!(parse_predicates("", &s).is_err());
+        // Bare `=` stays an error — only `==` is the equality operator.
         assert!(parse_predicates("temperature = 3", &s).is_err());
         assert!(parse_predicates("bogus > 3", &s).is_err());
         assert!(parse_predicates("temperature > banana", &s).is_err());
@@ -939,9 +1106,15 @@ mod tests {
         ];
         for q in &queries {
             for (zp, ap) in [(true, true), (true, false), (false, true), (false, false)] {
-                let opts = PlanOptions { zone_pruning: zp, agg_pushdown: ap };
-                let plan = plan_query_opts(&ds, &index, q, opts).unwrap();
-                plan.verify(&ds, q).unwrap();
+                for fp in [true, false] {
+                    let opts = PlanOptions {
+                        zone_pruning: zp,
+                        filter_pruning: fp,
+                        agg_pushdown: ap,
+                    };
+                    let plan = plan_query_opts(&ds, &index, q, opts).unwrap();
+                    plan.verify(&ds, q).unwrap();
+                }
             }
         }
     }
@@ -1062,10 +1235,11 @@ mod tests {
                 }
                 let mut predicates = Vec::new();
                 for _ in 0..rng.below(3) {
-                    let op = match rng.below(4) {
+                    let op = match rng.below(5) {
                         0 => PredOp::Gt,
                         1 => PredOp::Ge,
                         2 => PredOp::Lt,
+                        3 => PredOp::Eq,
                         _ => PredOp::Le,
                     };
                     predicates.push(pred(
@@ -1092,6 +1266,7 @@ mod tests {
                 let query = Query { ranges, predicates, op };
                 let opts = PlanOptions {
                     zone_pruning: rng.below(2) == 0,
+                    filter_pruning: rng.below(2) == 0,
                     agg_pushdown: rng.below(2) == 0,
                 };
                 let plan = plan_query_opts(&ds, &index, &query, opts)

@@ -193,6 +193,39 @@ impl Dataset {
         }
     }
 
+    /// The per-column membership filters of one partition — pure
+    /// metadata, like [`Self::sketch`]: resident partitions carry filters
+    /// from seal time, a tiered store keeps them in its slot table (they
+    /// survive eviction), so **no fault-in happens here** — an equality
+    /// probe can rule a Cold partition out before any segment read.
+    /// `None` for an id outside the visible dataset or a store opened
+    /// from a pre-v4 manifest (no filter → the planner always considers
+    /// the partition).
+    pub fn filters(
+        &self,
+        partition: usize,
+    ) -> Option<Arc<Vec<crate::index::MembershipFilter>>> {
+        if self.hidden(partition) {
+            return None;
+        }
+        match &self.store {
+            Some(st) => st.filters(partition),
+            None => self.parts.get(partition).map(|p| Arc::clone(&p.filters)),
+        }
+    }
+
+    /// Total resident footprint of the membership filters across visible
+    /// partitions, in bytes — the metadata cost `explain`/`info` surface
+    /// as `filter_bytes`.
+    pub fn filter_bytes(&self) -> usize {
+        (0..self.num_partitions())
+            .filter_map(|i| self.filters(i))
+            .map(|fs| {
+                fs.iter().map(crate::index::MembershipFilter::memory_bytes).sum::<usize>()
+            })
+            .sum()
+    }
+
     /// Key bounds and row count of one visible partition —
     /// `(key_min, key_max, rows)`, O(1) metadata on every backing (no
     /// fault-in). This is what the planner's covered/edge classification

@@ -9,11 +9,13 @@
 
 pub mod builder;
 pub mod cias;
+pub mod filter;
 pub mod table;
 pub mod types;
 
 pub use builder::extract_meta;
 pub use cias::Cias;
+pub use filter::{filters_of, FilterBuilder, MembershipFilter};
 pub use table::TableIndex;
 pub use types::{
     row_matches, sketches_of, zones_satisfiable, ColumnPredicate, ColumnSketch,

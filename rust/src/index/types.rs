@@ -206,6 +206,9 @@ pub enum PredOp {
     Lt,
     /// `column <= value`
     Le,
+    /// `column == value` — the point-lookup operator. The only operator
+    /// membership-filter pruning fires for (DESIGN.md §14).
+    Eq,
 }
 
 impl PredOp {
@@ -216,6 +219,7 @@ impl PredOp {
             PredOp::Ge => ">=",
             PredOp::Lt => "<",
             PredOp::Le => "<=",
+            PredOp::Eq => "==",
         }
     }
 }
@@ -241,6 +245,7 @@ impl ColumnPredicate {
             PredOp::Ge => x >= self.value,
             PredOp::Lt => x < self.value,
             PredOp::Le => x <= self.value,
+            PredOp::Eq => x == self.value,
         }
     }
 
@@ -254,6 +259,7 @@ impl ColumnPredicate {
             PredOp::Ge => z.max >= self.value,
             PredOp::Lt => z.min < self.value,
             PredOp::Le => z.min <= self.value,
+            PredOp::Eq => z.min <= self.value && self.value <= z.max,
         }
     }
 }
@@ -345,7 +351,13 @@ mod tests {
         assert!(p.matches(2.0));
         assert!(!p.matches(2.1));
         assert!(!p.matches(f32::NAN));
+        let p = ColumnPredicate { column: 0, op: PredOp::Eq, value: 2.0 };
+        assert!(p.matches(2.0));
+        assert!(p.matches(-0.0 + 2.0));
+        assert!(!p.matches(2.0000002));
+        assert!(!p.matches(f32::NAN));
         assert_eq!(PredOp::Ge.symbol(), ">=");
+        assert_eq!(PredOp::Eq.symbol(), "==");
     }
 
     #[test]
@@ -358,9 +370,15 @@ mod tests {
         assert!(pred(PredOp::Lt, 10.1).satisfiable(&z));
         assert!(!pred(PredOp::Lt, 10.0).satisfiable(&z));
         assert!(pred(PredOp::Le, 10.0).satisfiable(&z));
+        // Eq is satisfiable exactly inside the closed zone interval.
+        assert!(pred(PredOp::Eq, 10.0).satisfiable(&z));
+        assert!(pred(PredOp::Eq, 15.0).satisfiable(&z));
+        assert!(pred(PredOp::Eq, 20.0).satisfiable(&z));
+        assert!(!pred(PredOp::Eq, 9.9).satisfiable(&z));
+        assert!(!pred(PredOp::Eq, 20.1).satisfiable(&z));
         // An all-NaN partition satisfies no comparison: always prunable.
         let empty = ZoneMap::EMPTY;
-        for op in [PredOp::Gt, PredOp::Ge, PredOp::Lt, PredOp::Le] {
+        for op in [PredOp::Gt, PredOp::Ge, PredOp::Lt, PredOp::Le, PredOp::Eq] {
             assert!(!pred(op, 0.0).satisfiable(&empty), "{op:?}");
         }
     }

@@ -170,6 +170,10 @@ pub struct BatchReport {
     /// Index-proposed slices dropped by zone-map predicate pruning before
     /// resolve (0 for a batch without value predicates).
     pub zone_pruned: usize,
+    /// Zone-surviving slices dropped because a per-partition membership
+    /// filter proved an equality predicate's probe value absent (0 for a
+    /// batch without `==` predicates).
+    pub filter_pruned: usize,
     /// Surviving slices answered by merging their partition's aggregate
     /// sketch: the partition lies fully inside one elementary segment, so
     /// no data was read (and no cold segment faulted in) for it.
@@ -207,6 +211,9 @@ impl BatchReport {
         if self.zone_pruned > 0 {
             line.push_str(&format!(" | zone-pruned: {}", self.zone_pruned));
         }
+        if self.filter_pruned > 0 {
+            line.push_str(&format!(" | filter-pruned: {}", self.filter_pruned));
+        }
         if self.agg_answered > 0 {
             line.push_str(&format!(
                 " | agg-answered: {} ({} avoided)",
@@ -233,6 +240,7 @@ impl BatchReport {
             ("segments", Json::num(self.segments as f64)),
             ("partitions_touched", Json::num(self.partitions_touched as f64)),
             ("zone_pruned", Json::num(self.zone_pruned as f64)),
+            ("filter_pruned", Json::num(self.filter_pruned as f64)),
             ("agg_answered", Json::num(self.agg_answered as f64)),
             ("rows_avoided", Json::num(self.rows_avoided as f64)),
             ("bytes_avoided", Json::num(self.bytes_avoided as f64)),
@@ -341,6 +349,11 @@ mod tests {
         assert!(tiered.to_json().to_string().contains("\"faults\":2"));
         let pruned = BatchReport { zone_pruned: 4, ..r };
         assert!(pruned.line().contains("zone-pruned: 4"), "{}", pruned.line());
+        assert!(!pruned.line().contains("filter-pruned"), "equality-free stays terse");
+        assert!(pruned.to_json().to_string().contains("\"filter_pruned\":0"));
+        let fpruned = BatchReport { filter_pruned: 3, ..r };
+        assert!(fpruned.line().contains("filter-pruned: 3"), "{}", fpruned.line());
+        assert!(fpruned.to_json().to_string().contains("\"filter_pruned\":3"));
         let answered =
             BatchReport { agg_answered: 5, rows_avoided: 100, bytes_avoided: 2400, ..r };
         assert!(answered.line().contains("agg-answered: 5"), "{}", answered.line());

@@ -29,9 +29,10 @@ pub const OP_METRICS: [&str; 6] =
 /// Registered per-plan-phase histogram names, index-aligned with
 /// [`PlanPhase`]. Every name must appear in the server's `metrics` op
 /// output (enforced by `oseba-lint`).
-pub const PHASE_METRICS: [&str; 6] = [
+pub const PHASE_METRICS: [&str; 7] = [
     "phase_targeting",
     "phase_zone_pruning",
+    "phase_filter_pruning",
     "phase_sketch_classify",
     "phase_fault_in",
     "phase_scan_merge",
@@ -92,6 +93,9 @@ pub enum PlanPhase {
     Targeting,
     /// Zone-map predicate checks over proposed slices.
     ZonePruning,
+    /// Membership-filter probes for equality predicates over
+    /// zone-surviving slices.
+    FilterPruning,
     /// Sketch coverage classification of surviving slices.
     SketchClassify,
     /// Resolving slices against the tiered store (cold faults included).
@@ -104,9 +108,10 @@ pub enum PlanPhase {
 
 impl PlanPhase {
     /// All phases, index-aligned with [`PHASE_METRICS`].
-    pub const ALL: [PlanPhase; 6] = [
+    pub const ALL: [PlanPhase; 7] = [
         PlanPhase::Targeting,
         PlanPhase::ZonePruning,
+        PlanPhase::FilterPruning,
         PlanPhase::SketchClassify,
         PlanPhase::FaultIn,
         PlanPhase::ScanMerge,
@@ -123,6 +128,7 @@ impl PlanPhase {
         match self {
             PlanPhase::Targeting => "targeting",
             PlanPhase::ZonePruning => "zone_pruning",
+            PlanPhase::FilterPruning => "filter_pruning",
             PlanPhase::SketchClassify => "sketch_classify",
             PlanPhase::FaultIn => "fault_in",
             PlanPhase::ScanMerge => "scan_merge",

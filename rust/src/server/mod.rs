@@ -263,6 +263,9 @@ fn info_fields(ds: &Dataset, coord: &Coordinator, fields: &mut Vec<(&'static str
             ("sessions_failed", Json::num(ec.sessions_failed as f64)),
         ]),
     ));
+    // Resident metadata cost of the per-partition membership filters
+    // (0 for a store opened from a pre-v4 manifest — no filters there).
+    fields.push(("filter_bytes", Json::num(ds.filter_bytes() as f64)));
     fields.push(("key_min", Json::num(ds.key_min().unwrap_or(0) as f64)));
     fields.push(("key_max", Json::num(ds.key_max().unwrap_or(0) as f64)));
     fields.push(("tiered", Json::Bool(ds.is_tiered())));
@@ -451,6 +454,7 @@ fn handle_stats(req: &Json, coord: &Coordinator, source: &ServerSource) -> Resul
     ];
     if let Some(ex) = plan_explain {
         fields.push(("zone_pruned", Json::num(ex.zone_pruned as f64)));
+        fields.push(("filter_pruned", Json::num(ex.filter_pruned as f64)));
         fields.push(("agg_answered", Json::num(ex.agg_answered as f64)));
         fields.push(("rows_avoided", Json::num(ex.rows_avoided as f64)));
     }
@@ -587,6 +591,7 @@ fn handle_metrics(req: &Json, coord: &Coordinator, source: &ServerSource) -> Res
         Json::obj(vec![
             ("phase_targeting", m.phase(PlanPhase::Targeting).to_json()),
             ("phase_zone_pruning", m.phase(PlanPhase::ZonePruning).to_json()),
+            ("phase_filter_pruning", m.phase(PlanPhase::FilterPruning).to_json()),
             ("phase_sketch_classify", m.phase(PlanPhase::SketchClassify).to_json()),
             ("phase_fault_in", m.phase(PlanPhase::FaultIn).to_json()),
             ("phase_scan_merge", m.phase(PlanPhase::ScanMerge).to_json()),
@@ -856,6 +861,7 @@ mod tests {
         assert_eq!(plan.get("considered").unwrap().as_usize(), Some(1));
         assert_eq!(plan.get("key_pruned").unwrap().as_usize(), Some(4));
         assert_eq!(plan.get("zone_pruned").unwrap().as_usize(), Some(0));
+        assert_eq!(plan.get("filter_pruned").unwrap().as_usize(), Some(0));
         assert_eq!(plan.get("targeted").unwrap().as_usize(), Some(1));
         assert_eq!(plan.get("estimated_rows").unwrap().as_usize(), Some(1_000));
         assert_eq!(r.get("verified"), None, "verify only runs when asked");
@@ -889,6 +895,23 @@ mod tests {
             plan.get("zone_pruned").unwrap().as_usize(),
             plan.get("considered").unwrap().as_usize()
         );
+        // An equality clause lowers through the membership-filter stage;
+        // `verify` re-checks considered = targeted + zone_pruned +
+        // filter_pruned on the result, whatever the filters decided.
+        let r = handle_request(
+            &format!(
+                r#"{{"op":"explain","lo":0,"hi":{},"column":"temperature","where":"temperature == 21.5","verify":true}}"#,
+                3600 * 9_999
+            ),
+            &coord,
+            &source,
+            &flag,
+        )
+        .unwrap();
+        assert_eq!(r.get("verified"), Some(&Json::Bool(true)));
+        let plan = r.get("plan").unwrap();
+        assert!(plan.get("filter_pruned").is_some());
+        assert!(plan.get("filter_bytes").is_some());
     }
 
     #[test]
@@ -1161,6 +1184,7 @@ mod tests {
             [
                 "agg_answered",
                 "counters",
+                "filter_bytes",
                 "index",
                 "index_bytes",
                 "key_max",
@@ -1199,6 +1223,7 @@ mod tests {
                 "asl_len",
                 "counters",
                 "epoch",
+                "filter_bytes",
                 "index",
                 "index_appends",
                 "index_bytes",
@@ -1281,6 +1306,7 @@ mod tests {
             [
                 "phase_demux",
                 "phase_fault_in",
+                "phase_filter_pruning",
                 "phase_scan_merge",
                 "phase_sketch_classify",
                 "phase_targeting",
@@ -1363,7 +1389,14 @@ mod tests {
             children.iter().map(|c| c.get("name").unwrap().as_str().unwrap()).collect();
         assert_eq!(
             names,
-            ["targeting", "zone_pruning", "sketch_classify", "fault_in", "scan_merge"]
+            [
+                "targeting",
+                "zone_pruning",
+                "filter_pruning",
+                "sketch_classify",
+                "fault_in",
+                "scan_merge",
+            ]
         );
         let child = |name: &str| {
             children.iter().find(|c| c.get("name").unwrap().as_str() == Some(name)).unwrap()
@@ -1373,6 +1406,8 @@ mod tests {
             ("targeting", "considered"),
             ("targeting", "key_pruned"),
             ("zone_pruning", "zone_pruned"),
+            ("filter_pruning", "filter_pruned"),
+            ("filter_pruning", "filter_bytes"),
             ("sketch_classify", "agg_answered"),
             ("sketch_classify", "rows_avoided"),
             ("fault_in", "targeted"),

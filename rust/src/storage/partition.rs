@@ -8,6 +8,7 @@
 use std::sync::Arc;
 
 use crate::error::{OsebaError, Result};
+use crate::index::filter::MembershipFilter;
 use crate::index::types::{ColumnSketch, ZoneMap};
 use crate::storage::batch::RecordBatch;
 
@@ -36,6 +37,15 @@ pub struct Partition {
     /// storage-budget data). Moments are folded with the kernel-block
     /// algorithm, so a sketch is bit-identical to a full scan's partial.
     pub sketches: Vec<ColumnSketch>,
+    /// Per-column **membership filters** over the valid rows (padding and
+    /// NaNs excluded), built once at seal time: growable cuckoo filters
+    /// over exact f32 bit patterns that the planner probes for equality
+    /// predicates (`col == v`) — a `false` proves the partition holds no
+    /// matching row and prunes it without a scan (DESIGN.md §14). Shared
+    /// via `Arc` so the tiered store's slot table keeps them resident
+    /// after the data itself is evicted. Metadata, excluded from
+    /// [`Self::bytes`] like the sketches.
+    pub filters: Arc<Vec<MembershipFilter>>,
 }
 
 impl Partition {
@@ -49,6 +59,9 @@ impl Partition {
             .iter()
             .map(|c| ColumnSketch::of(&keys, &c[lo..hi], BLOCK_ROWS))
             .collect();
+        let filters = Arc::new(
+            batch.columns.iter().map(|c| MembershipFilter::build(&c[lo..hi])).collect(),
+        );
         let columns = batch
             .columns
             .iter()
@@ -59,7 +72,7 @@ impl Partition {
                 v
             })
             .collect();
-        Partition { id, keys, columns, rows, padded_rows, sketches }
+        Partition { id, keys, columns, rows, padded_rows, sketches, filters }
     }
 
     /// Build directly from owned columns (used by the filter baseline when
@@ -69,11 +82,13 @@ impl Partition {
         let padded_rows = rows.div_ceil(BLOCK_ROWS).max(1) * BLOCK_ROWS;
         let sketches =
             columns.iter().map(|c| ColumnSketch::of(&keys, &c[..rows], BLOCK_ROWS)).collect();
+        let filters =
+            Arc::new(columns.iter().map(|c| MembershipFilter::build(&c[..rows])).collect());
         for c in &mut columns {
             debug_assert_eq!(c.len(), rows);
             c.resize(padded_rows, 0.0);
         }
-        Partition { id, keys, columns, rows, padded_rows, sketches }
+        Partition { id, keys, columns, rows, padded_rows, sketches, filters }
     }
 
     /// Per-column zone maps (min/max/nans), derived from the aggregate

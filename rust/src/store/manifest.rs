@@ -12,10 +12,12 @@
 //! precision and are rejected at save time.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::error::{OsebaError, Result};
-use crate::index::{Cias, ColumnSketch, PartitionMeta, ZoneMap};
+use crate::index::{Cias, ColumnSketch, MembershipFilter, PartitionMeta, ZoneMap};
 use crate::storage::Schema;
+use crate::store::crc32::crc32;
 use crate::util::json::Json;
 use crate::util::stats::{Moments, TrendPartial};
 
@@ -25,13 +27,17 @@ pub const MANIFEST_FILE: &str = "manifest.json";
 pub const FORMAT: &str = "oseba-store";
 /// Current manifest version. Version 2 added per-segment `zones` (the
 /// per-column value-domain zone maps the query planner prunes by);
-/// version 3 adds per-segment `sketch` — the per-column aggregate
+/// version 3 added per-segment `sketch` — the per-column aggregate
 /// sketches (moments + trend partials) the planner answers fully-covered
-/// partitions from without faulting them in. Older manifests are still
-/// readable: v1 zones default to the unbounded sentinel (never prunes),
-/// and pre-v3 sketches default to the "no sketch → always scan" sentinel
-/// (`None`); `save` rewrites at the current version with real metadata.
-pub const VERSION: usize = 3;
+/// partitions from without faulting them in; version 4 adds per-segment
+/// `filter` — the per-column membership filters (hex-encoded with their
+/// own CRC-32) the planner prunes equality predicates by before
+/// fault-in. Older manifests are still readable: v1 zones default to the
+/// unbounded sentinel (never prunes), pre-v3 sketches default to the "no
+/// sketch → always scan" sentinel (`None`), and pre-v4 filters default
+/// to the "no filter → always consider" sentinel (`None`); `save`
+/// rewrites at the current version with real metadata.
+pub const VERSION: usize = 4;
 /// Oldest manifest version `open` still accepts.
 pub const MIN_VERSION: usize = 1;
 
@@ -50,6 +56,11 @@ pub struct SegmentEntry {
     /// `None` for pre-v3 manifests, or when a sketch holds a non-finite
     /// sum JSON cannot carry — both mean "always scan", never wrong.
     pub sketches: Option<Vec<ColumnSketch>>,
+    /// Per-column membership filters (one per schema value column), so
+    /// cold partitions are filter-pruned for equality predicates before
+    /// any fault-in. `None` for pre-v4 manifests — "no filter → always
+    /// consider", never wrong.
+    pub filters: Option<Arc<Vec<MembershipFilter>>>,
 }
 
 /// The parsed/serializable manifest.
@@ -205,6 +216,75 @@ fn sketch_fits_json(s: &ColumnSketch) -> bool {
         && [t.n, t.mean_x, t.mean_y, t.sxx, t.sxy, t.nans].iter().all(|v| v.is_finite())
 }
 
+fn to_hex(bytes: &[u8]) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(HEX[(b >> 4) as usize] as char);
+        s.push(HEX[(b & 15) as usize] as char);
+    }
+    s
+}
+
+fn from_hex(s: &str) -> Result<Vec<u8>> {
+    let nibble = |c: u8| -> Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(OsebaError::Store(format!(
+                "filter section holds a non-hex byte 0x{c:02x}"
+            ))),
+        }
+    };
+    let raw = s.as_bytes();
+    if raw.len() % 2 != 0 {
+        return Err(OsebaError::Store(format!(
+            "filter section has odd hex length {}",
+            raw.len()
+        )));
+    }
+    raw.chunks_exact(2).map(|p| Ok(nibble(p[0])? << 4 | nibble(p[1])?)).collect()
+}
+
+/// Hex section of one column's membership filter: the filter codec bytes
+/// prefixed with their own CRC-32 (little-endian), so a flipped character
+/// anywhere in the section is rejected at open time.
+fn filter_to_json(f: &MembershipFilter) -> Json {
+    let payload = f.to_bytes();
+    let mut framed = Vec::with_capacity(4 + payload.len());
+    framed.extend_from_slice(&crc32(&payload).to_le_bytes());
+    framed.extend_from_slice(&payload);
+    Json::str(to_hex(&framed))
+}
+
+fn filter_from_json(v: &Json, segment: usize, column: usize) -> Result<MembershipFilter> {
+    let hex = v.as_str().ok_or_else(|| {
+        OsebaError::Store(format!(
+            "segment {segment} filter column {column} must be a hex string"
+        ))
+    })?;
+    let framed = from_hex(hex)
+        .map_err(|e| OsebaError::Store(format!("segment {segment} filter column {column}: {e}")))?;
+    if framed.len() < 4 {
+        return Err(OsebaError::Store(format!(
+            "segment {segment} filter column {column} truncated ({} bytes)",
+            framed.len()
+        )));
+    }
+    let stored = u32::from_le_bytes([framed[0], framed[1], framed[2], framed[3]]);
+    let payload = &framed[4..];
+    let computed = crc32(payload);
+    if stored != computed {
+        return Err(OsebaError::Store(format!(
+            "segment {segment} filter column {column} crc mismatch \
+             (stored {stored:08x}, computed {computed:08x})"
+        )));
+    }
+    MembershipFilter::from_bytes(payload)
+        .map_err(|e| OsebaError::Store(format!("segment {segment} filter column {column}: {e}")))
+}
+
 fn sketch_from_json(v: &Json) -> Result<ColumnSketch> {
     let num = |obj: &Json, name: &str| -> Result<f64> {
         obj.require(name)?.as_f64().ok_or_else(|| {
@@ -276,6 +356,13 @@ impl StoreManifest {
                                 _ => Json::Null,
                             };
                             obj.insert("sketch".into(), sketch);
+                            let filter = match &e.filters {
+                                Some(fs) => {
+                                    Json::arr(fs.iter().map(filter_to_json).collect())
+                                }
+                                None => Json::Null,
+                            };
+                            obj.insert("filter".into(), filter);
                             Json::Obj(obj)
                         })
                         .collect(),
@@ -419,7 +506,42 @@ impl StoreManifest {
                     }
                 }
             };
-            segments.push(SegmentEntry { file, meta, zones, sketches });
+            // Pre-v4 manifests predate membership filters: those segments
+            // carry the "no filter → always consider" sentinel. From v4 on
+            // the field is mandatory (`null` = explicit opt-out), each
+            // column's hex section is CRC-checked, and a filter list that
+            // disagrees with the schema's value column count is rejected
+            // outright — a misaligned filter would prune on the wrong
+            // column's membership and silently drop rows.
+            let filters = if version < 4 {
+                None
+            } else {
+                match s.require("filter")? {
+                    Json::Null => None,
+                    Json::Arr(items) => {
+                        if items.len() != schema.width() {
+                            return Err(OsebaError::Store(format!(
+                                "segment {i} has {} filter columns for {} schema columns",
+                                items.len(),
+                                schema.width()
+                            )));
+                        }
+                        Some(Arc::new(
+                            items
+                                .iter()
+                                .enumerate()
+                                .map(|(ci, f)| filter_from_json(f, i, ci))
+                                .collect::<Result<Vec<_>>>()?,
+                        ))
+                    }
+                    _ => {
+                        return Err(OsebaError::Store(format!(
+                            "segment {i}: 'filter' must be an array or null"
+                        )))
+                    }
+                }
+            };
+            segments.push(SegmentEntry { file, meta, zones, sketches, filters });
         }
         if segments.is_empty() {
             return Err(OsebaError::Store("manifest lists no segments".into()));
@@ -562,6 +684,10 @@ mod tests {
                         sample_sketch(m.id as f64 / 7.0),
                         sample_sketch(m.id as f64 / 11.0),
                     ]),
+                    filters: Some(Arc::new(vec![
+                        MembershipFilter::build(&[1.25, -3.5, 42.0, m.id as f32]),
+                        MembershipFilter::build(&[0.0, 7.75, m.id as f32 * 0.5]),
+                    ])),
                 })
                 .collect(),
             index,
@@ -623,7 +749,7 @@ mod tests {
     }
 
     /// Downgrade a serialized manifest to `version`, stripping the fields
-    /// that version predates ("zones" < 2, "sketch" < 3).
+    /// that version predates ("zones" < 2, "sketch" < 3, "filter" < 4).
     fn downgrade(doc: &Json, version: usize) -> Json {
         let Json::Obj(mut top) = doc.clone() else { panic!("manifest is an object") };
         top.insert("version".into(), Json::num(version as f64));
@@ -636,6 +762,9 @@ mod tests {
                 if version < 3 {
                     seg.remove("sketch");
                 }
+                if version < 4 {
+                    seg.remove("filter");
+                }
             }
         }
         Json::Obj(top)
@@ -645,8 +774,9 @@ mod tests {
     fn old_manifests_still_open_with_conservative_sentinels() {
         let doc = sample(2).to_json().unwrap();
 
-        // v1 (no zones, no sketch): unbounded zones — never prunes — and
-        // no sketches — always scans.
+        // v1 (no zones, no sketch, no filter): unbounded zones — never
+        // prunes — and no sketches/filters — always scans, always
+        // considers.
         let m = StoreManifest::from_json(&downgrade(&doc, 1)).unwrap();
         for e in &m.segments {
             assert_eq!(e.zones.len(), 2);
@@ -656,6 +786,7 @@ mod tests {
                 assert_eq!(z.nans, 0);
             }
             assert!(e.sketches.is_none(), "v1 has no sketches");
+            assert!(e.filters.is_none(), "v1 has no filters");
         }
 
         // v2 (zones, no sketch): real zones survive, sketches absent.
@@ -663,11 +794,20 @@ mod tests {
         for e in &m.segments {
             assert_eq!(e.zones[0].max, 42.0);
             assert!(e.sketches.is_none(), "v2 has no sketches");
+            assert!(e.filters.is_none(), "v2 has no filters");
+        }
+
+        // v3 (zones + sketches, no filter): sketches survive, filters
+        // default to the always-consider sentinel.
+        let m = StoreManifest::from_json(&downgrade(&doc, 3)).unwrap();
+        for e in &m.segments {
+            assert!(e.sketches.is_some(), "v3 keeps sketches");
+            assert!(e.filters.is_none(), "v3 has no filters");
         }
 
         // Unknown future versions are still rejected.
         let good = doc.to_string();
-        let v9 = good.replace("\"version\":3", "\"version\":9");
+        let v9 = good.replace("\"version\":4", "\"version\":9");
         assert!(StoreManifest::from_json(&Json::parse(&v9).unwrap()).is_err());
     }
 
@@ -721,6 +861,98 @@ mod tests {
         if let Some(Json::Arr(segs)) = top.get_mut("segments") {
             let Json::Obj(seg) = &mut segs[0] else { panic!() };
             seg.remove("sketch");
+        }
+        assert!(StoreManifest::from_json(&Json::Obj(top)).is_err());
+    }
+
+    #[test]
+    fn filters_roundtrip_and_null_means_always_consider() {
+        let m = sample(3);
+        let back =
+            StoreManifest::from_json(&Json::parse(&m.to_json().unwrap().to_string()).unwrap())
+                .unwrap();
+        // Bit-exact round trip: probes after open answer exactly as the
+        // filters built at seal time would.
+        assert_eq!(back.segments, m.segments);
+        let fs = back.segments[1].filters.as_ref().unwrap();
+        assert!(fs[0].contains(-3.5));
+        assert!(fs[1].contains(7.75));
+
+        // An explicit null filter field is the opt-out, not an error.
+        let mut none = sample(2);
+        none.segments[1].filters = None;
+        let text = none.to_json().unwrap().to_string();
+        let back = StoreManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(back.segments[1].filters.is_none(), "null → always consider");
+        assert!(back.segments[0].filters.is_some(), "other segments keep theirs");
+    }
+
+    #[test]
+    fn filter_tampering_is_a_clear_store_error() {
+        let doc = sample(2).to_json().unwrap();
+
+        // Pull segment 0's first filter hex section out of the document.
+        let hex_of = |doc: &Json| -> String {
+            let segs = doc.get("segments").unwrap().as_arr().unwrap();
+            let fs = segs[0].get("filter").unwrap().as_arr().unwrap();
+            fs[0].as_str().unwrap().to_string()
+        };
+        let replace_hex = |doc: &Json, new_hex: &str| -> Json {
+            let Json::Obj(mut top) = doc.clone() else { panic!() };
+            if let Some(Json::Arr(segs)) = top.get_mut("segments") {
+                let Json::Obj(seg) = &mut segs[0] else { panic!() };
+                let Some(Json::Arr(fs)) = seg.get_mut("filter") else { panic!() };
+                fs[0] = Json::str(new_hex.to_string());
+            }
+            Json::Obj(top)
+        };
+        let hex = hex_of(&doc);
+
+        // Corrupt CRC: flip one hex digit of the payload (past the 8-char
+        // CRC prefix) — the section's own CRC-32 must catch it.
+        let mut chars: Vec<char> = hex.chars().collect();
+        let at = 12;
+        chars[at] = if chars[at] == '0' { '1' } else { '0' };
+        let flipped: String = chars.iter().collect();
+        let err =
+            StoreManifest::from_json(&replace_hex(&doc, &flipped)).unwrap_err();
+        assert!(matches!(err, OsebaError::Store(_)), "got: {err:?}");
+        assert!(err.to_string().contains("crc"), "got: {err}");
+
+        // Truncated filter bytes (valid hex, short payload).
+        let err = StoreManifest::from_json(&replace_hex(&doc, &hex[..hex.len() - 16]))
+            .unwrap_err();
+        assert!(matches!(err, OsebaError::Store(_)), "got: {err:?}");
+
+        // Odd hex length and non-hex characters are clean errors too.
+        assert!(StoreManifest::from_json(&replace_hex(&doc, &hex[..hex.len() - 1])).is_err());
+        assert!(StoreManifest::from_json(&replace_hex(&doc, "zz00")).is_err());
+
+        // Filter-column-count mismatch: 3 filters for a 2-column schema.
+        let Json::Obj(mut top) = doc.clone() else { panic!() };
+        if let Some(Json::Arr(segs)) = top.get_mut("segments") {
+            let Json::Obj(seg) = &mut segs[0] else { panic!() };
+            let Some(Json::Arr(fs)) = seg.get_mut("filter") else { panic!() };
+            fs.push(fs[0].clone());
+        }
+        let err = StoreManifest::from_json(&Json::Obj(top)).unwrap_err();
+        assert!(matches!(err, OsebaError::Store(_)), "got: {err:?}");
+        assert!(err.to_string().contains("filter columns"), "got: {err}");
+
+        // Wrong type for the filter field is a clean error.
+        let Json::Obj(mut top) = doc.clone() else { panic!() };
+        if let Some(Json::Arr(segs)) = top.get_mut("segments") {
+            let Json::Obj(seg) = &mut segs[0] else { panic!() };
+            seg.insert("filter".into(), Json::num(7.0));
+        }
+        assert!(StoreManifest::from_json(&Json::Obj(top)).is_err());
+
+        // A v4 manifest with the filter field missing entirely is rejected
+        // (the field is mandatory from v4 on; null is the opt-out).
+        let Json::Obj(mut top) = doc else { panic!() };
+        if let Some(Json::Arr(segs)) = top.get_mut("segments") {
+            let Json::Obj(seg) = &mut segs[0] else { panic!() };
+            seg.remove("filter");
         }
         assert!(StoreManifest::from_json(&Json::Obj(top)).is_err());
     }

@@ -19,8 +19,10 @@
 
 use std::io::Write;
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::error::{OsebaError, Result};
+use crate::index::filter::{filters_of, MembershipFilter};
 use crate::index::types::{sketches_of, ColumnSketch};
 use crate::storage::{Partition, BLOCK_ROWS};
 use crate::store::crc32::{crc32, Crc32};
@@ -127,19 +129,21 @@ impl<'a> Reader<'a> {
 /// Decode one partition from the `.oseg` byte layout. `path` is only used
 /// to name the file in errors.
 pub fn decode_segment(path: &Path, buf: &[u8]) -> Result<Partition> {
-    decode_segment_with(path, buf, None)
+    decode_segment_with(path, buf, None, None)
 }
 
 /// [`decode_segment`], optionally reusing already-known aggregate
-/// sketches (the tiered store's slot table keeps the seal-time sketches
-/// resident) instead of recomputing them from the decoded data — the
-/// fault-in fast path. Pass `None` to recompute; a `Some` whose length
-/// does not match the decoded column count is ignored (recomputed), so a
-/// caller can never attach mismatched metadata.
+/// sketches and membership filters (the tiered store's slot table keeps
+/// the seal-time metadata resident) instead of recomputing them from the
+/// decoded data — the fault-in fast path. Pass `None` to recompute; a
+/// `Some` whose length does not match the decoded column count is
+/// ignored (recomputed), so a caller can never attach mismatched
+/// metadata.
 pub(crate) fn decode_segment_with(
     path: &Path,
     buf: &[u8],
     known_sketches: Option<Vec<ColumnSketch>>,
+    known_filters: Option<Arc<Vec<MembershipFilter>>>,
 ) -> Result<Partition> {
     let mut r = Reader { path, buf, pos: 0 };
 
@@ -238,23 +242,32 @@ pub(crate) fn decode_segment_with(
         Some(sks) if sks.len() == width => sks,
         _ => sketches_of(&keys, &columns, BLOCK_ROWS),
     };
-    Ok(Partition { id, keys, columns, rows, padded_rows, sketches })
+    // Membership filters follow the same invariant: attach the resident
+    // seal-time filters when the widths agree, else rebuild from the
+    // verified data (deterministic, so the rebuild is bit-identical to
+    // the seal-time construction over the same values).
+    let filters = match known_filters {
+        Some(fs) if fs.len() == width => fs,
+        _ => Arc::new(filters_of(&columns, rows)),
+    };
+    Ok(Partition { id, keys, columns, rows, padded_rows, sketches, filters })
 }
 
 /// Read a partition back from `path`, verifying every section CRC.
 pub fn read_segment(path: impl AsRef<Path>) -> Result<Partition> {
-    read_segment_with(path, None)
+    read_segment_with(path, None, None)
 }
 
-/// [`read_segment`] with optional known sketches (see
+/// [`read_segment`] with optional known sketches and filters (see
 /// [`decode_segment_with`]) — the tiered store's fault-in entry point.
 pub(crate) fn read_segment_with(
     path: impl AsRef<Path>,
     known_sketches: Option<Vec<ColumnSketch>>,
+    known_filters: Option<Arc<Vec<MembershipFilter>>>,
 ) -> Result<Partition> {
     let path = path.as_ref();
     let buf = std::fs::read(path).map_err(|e| OsebaError::io(path, e))?;
-    decode_segment_with(path, &buf, known_sketches)
+    decode_segment_with(path, &buf, known_sketches, known_filters)
 }
 
 #[cfg(test)]

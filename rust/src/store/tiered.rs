@@ -24,7 +24,7 @@ use std::sync::{Arc, Mutex};
 use crate::engine::memory::MemoryTracker;
 use crate::error::{OsebaError, Result};
 use crate::index::builder::detect_step;
-use crate::index::{Cias, ColumnSketch, PartitionMeta, ZoneMap};
+use crate::index::{Cias, ColumnSketch, MembershipFilter, PartitionMeta, ZoneMap};
 use crate::storage::{Partition, Schema, BLOCK_ROWS};
 use crate::store::manifest::{SegmentEntry, StoreManifest};
 use crate::store::segment::{read_segment_with, segment_len, write_segment};
@@ -75,6 +75,11 @@ struct Slot {
     /// **zero fault-in**. `None` for stores opened from a pre-v3 manifest
     /// (those partitions always scan).
     sketches: Option<Vec<ColumnSketch>>,
+    /// Per-column membership filters — resident metadata surviving
+    /// eviction, so a Cold partition is filter-pruned for equality
+    /// predicates **before fault-in**. `None` for stores opened from a
+    /// pre-v4 manifest (no filter → always consider, DESIGN.md §14).
+    filters: Option<Arc<Vec<MembershipFilter>>>,
     /// In-memory footprint (keys + padded columns) when hot.
     bytes: usize,
     /// Segment file name relative to the store directory.
@@ -167,6 +172,7 @@ impl TieredStore {
                 meta: e.meta,
                 zones: e.zones.clone(),
                 sketches: e.sketches.clone(),
+                filters: e.filters.clone(),
                 bytes: partition_bytes(e.meta.rows, width),
                 file: e.file.clone(),
                 on_disk: true,
@@ -237,6 +243,7 @@ impl TieredStore {
             meta,
             zones: part.zone_maps(),
             sketches: Some(part.sketches.clone()),
+            filters: Some(Arc::clone(&part.filters)),
             bytes,
             file,
             on_disk: false,
@@ -288,7 +295,11 @@ impl TieredStore {
         // partition (skipping the recompute pass); a pre-v3-manifest slot
         // without sketches falls back to recomputing them from the data.
         let path = self.dir.join(&inner.slots[id].file);
-        let part = read_segment_with(&path, inner.slots[id].sketches.clone())?;
+        let part = read_segment_with(
+            &path,
+            inner.slots[id].sketches.clone(),
+            inner.slots[id].filters.clone(),
+        )?;
         let expect = inner.slots[id].meta;
         if part.id != id
             || part.rows != expect.rows
@@ -437,6 +448,7 @@ impl TieredStore {
                 meta: s.meta,
                 zones: s.zones.clone(),
                 sketches: s.sketches.clone(),
+                filters: s.filters.clone(),
             })
             .collect();
         StoreManifest::for_segments(self.schema.clone(), segments)?.save(&self.dir)
@@ -482,6 +494,28 @@ impl TieredStore {
             .get(id)
             .and_then(|s| s.sketches.as_ref())
             .and_then(|sk| sk.get(column).copied())
+    }
+
+    /// The per-column membership filters of partition `id` — pure
+    /// metadata: no residency change, no fault-in, so a Cold partition is
+    /// filter-pruned before any segment read. `None` for an unknown id or
+    /// a store opened from a pre-v4 manifest (no filter → the planner
+    /// always considers the partition).
+    pub fn filters(&self, id: usize) -> Option<Arc<Vec<MembershipFilter>>> {
+        self.inner.lock_recover().slots.get(id).and_then(|s| s.filters.clone())
+    }
+
+    /// Total resident footprint of the membership filters across all
+    /// partitions, in bytes — the metadata cost the server's `info` op
+    /// surfaces as `filter_bytes`.
+    pub fn filter_bytes(&self) -> usize {
+        self.inner
+            .lock_recover()
+            .slots
+            .iter()
+            .filter_map(|s| s.filters.as_ref())
+            .map(|fs| fs.iter().map(MembershipFilter::memory_bytes).sum::<usize>())
+            .sum()
     }
 
     /// Metadata of partition `id` (`None` for an unknown id) — O(1), no
@@ -728,6 +762,46 @@ mod tests {
         assert!(back.sketch(99, 0).is_none());
         assert!(back.sketch(0, 9).is_none());
         assert_eq!(back.meta(1).map(|m| m.rows), Some(4096));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn membership_filters_survive_save_open_without_fault_in() {
+        let dir = temp_dir("ts-filters");
+        let ps = parts(10_000, 4096);
+        let store =
+            TieredStore::create(&dir, Schema::stock(), MemoryTracker::unbounded()).unwrap();
+        fill(&store, &ps);
+        assert!(store.filter_bytes() > 0);
+        let want: Vec<_> = (0..3).map(|i| store.filters(i).unwrap()).collect();
+        assert_eq!(*want[1], *ps[1].filters);
+        store.save().unwrap();
+        drop(store);
+
+        let (back, _index) =
+            TieredStore::open(&dir, MemoryTracker::unbounded()).unwrap();
+        // Filters round-trip the manifest bit-for-bit and stay available
+        // while every partition is Cold — probes prune with zero fault-in.
+        for (i, w) in want.iter().enumerate() {
+            let fs = back.filters(i).unwrap();
+            assert_eq!(*fs, **w, "partition {i}");
+            assert_eq!(back.residency(i), Some(Residency::Cold));
+            // Partition i of `parts` holds column-0 values i*4096.. — a
+            // value from another partition must not be claimed present
+            // unless it is a (rare, deterministic-here) false positive;
+            // the value it does hold must always be found.
+            let present = (i * 4096) as f32;
+            assert!(fs[0].contains(present), "partition {i} lost {present}");
+        }
+        assert_eq!(back.filter_bytes(), want.iter().map(|fs| {
+            fs.iter().map(MembershipFilter::memory_bytes).sum::<usize>()
+        }).sum::<usize>());
+        assert_eq!(back.counters(), StoreCounters::default(), "metadata only");
+        assert!(back.filters(99).is_none());
+
+        // Fault-in attaches the resident filters to the decoded partition.
+        let p0 = back.fetch(0).unwrap();
+        assert!(Arc::ptr_eq(&p0.filters, &back.filters(0).unwrap()));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -1,9 +1,11 @@
-//! Seeded property tests for the unified query-plan layer: zone-map-pruned
-//! execution must be **bit-identical** to unpruned execution across random
-//! key ranges and value predicates, on fixed, tiered, and live-snapshot
-//! datasets. Pruning only ever removes partitions whose masked moments are
-//! the empty partial (the merge identity), so every float of the final
-//! statistics must match exactly — any drift is a planner bug.
+//! Seeded property tests for the unified query-plan layer: zone-map- and
+//! membership-filter-pruned execution must be **bit-identical** to
+//! unpruned execution across random key ranges, value predicates, and
+//! equality point probes, on fixed, tiered, and live-snapshot datasets.
+//! Pruning only ever removes partitions whose masked moments are the empty
+//! partial (the merge identity), so every float of the final statistics
+//! must match exactly — any drift is a planner or filter bug (a filter
+//! false negative shows up here as a count mismatch vs the scan oracle).
 
 use std::sync::Arc;
 
@@ -48,21 +50,26 @@ fn dataset(seed: u64) -> RecordBatch {
 }
 
 /// Random conjunction of 0..=2 predicates over the stock columns.
+/// Equality probes get a rounded value — over these continuous columns
+/// they rarely match anything, which is exactly the case membership
+/// filters prune, and the scan oracle keeps them honest either way.
 fn random_predicates(rng: &mut Xoshiro256) -> Vec<ColumnPredicate> {
     let n = rng.range_u64(0, 3) as usize;
     (0..n)
         .map(|_| {
             let column = rng.range_u64(0, 2) as usize;
-            let op = match rng.range_u64(0, 4) {
+            let op = match rng.range_u64(0, 5) {
                 0 => PredOp::Gt,
                 1 => PredOp::Ge,
                 2 => PredOp::Lt,
-                _ => PredOp::Le,
+                3 => PredOp::Le,
+                _ => PredOp::Eq,
             };
             let value = match column {
                 0 => rng.next_f64() as f32 * (ROWS as f32 + 200.0) - 100.0,
                 _ => rng.next_f64() as f32 * 240.0 - 120.0,
             };
+            let value = if op == PredOp::Eq { value.round() } else { value };
             ColumnPredicate { column, op, value }
         })
         .collect()
@@ -92,6 +99,7 @@ fn check_one(
     let pruned_plan = plan_query(ds, index, &query, true).unwrap();
     let unpruned_plan = plan_query(ds, index, &query, false).unwrap();
     assert_eq!(unpruned_plan.explain.zone_pruned, 0);
+    assert_eq!(unpruned_plan.explain.filter_pruned, 0);
     assert!(pruned_plan.explain.targeted <= unpruned_plan.explain.targeted);
 
     let got = c.execute_physical(ds, &pruned_plan, &query);
@@ -147,6 +155,100 @@ fn check_one(
     pruned_plan.explain.zone_pruned
 }
 
+/// Value domain of the point-probe datasets: equal to ROWS and coprime
+/// with the permutation step 37, so `price[i] = (i * 37) % DOMAIN` is a
+/// bijection — every partition's zone map spans essentially the whole
+/// domain (zone maps cannot prune an equality probe) while each value
+/// occurs in exactly one partition (filters can).
+const DOMAIN: u64 = 12_000;
+
+/// Integer-valued permuted `price` plus an oscillating `volume`, with a
+/// sprinkle of NaNs so the Eq-never-matches-NaN policy stays in the loop.
+fn probe_dataset(seed: u64) -> RecordBatch {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut b = BatchBuilder::new(Schema::stock());
+    for i in 0..ROWS as u64 {
+        let v = (i * 37 % DOMAIN) as f32;
+        let price = if rng.next_f64() < 0.001 { f32::NAN } else { v };
+        let wave = (i as f32 / 50.0).sin() * 100.0;
+        b.push(i as i64 * STEP, &[price, wave]);
+    }
+    b.finish().unwrap()
+}
+
+/// One full-span equality probe through three arms — filters on, zone
+/// maps only, fully unpruned — plus a raw-batch scan oracle. All arms
+/// must agree bit-exactly (a filter false negative would show up as a
+/// dropped match here). Returns how many partitions the filter stage
+/// pruned.
+fn check_point(
+    c: &Coordinator,
+    ds: &Dataset,
+    index: &dyn ContentIndex,
+    batch: &RecordBatch,
+    value: f32,
+    visible_rows: usize,
+    label: &str,
+) -> usize {
+    let query = Query::stats(RangeQuery { lo: 0, hi: i64::MAX }, 0)
+        .filtered(vec![ColumnPredicate { column: 0, op: PredOp::Eq, value }]);
+    let on = plan_query(ds, index, &query, true).unwrap();
+    let zones = plan_query_opts(
+        ds,
+        index,
+        &query,
+        PlanOptions { zone_pruning: true, filter_pruning: false, agg_pushdown: true },
+    )
+    .unwrap();
+    let raw = plan_query(ds, index, &query, false).unwrap();
+    assert_eq!(zones.explain.filter_pruned, 0);
+    assert_eq!(zones.explain.filter_bytes, 0);
+    assert!(on.explain.targeted <= zones.explain.targeted);
+
+    // Raw scan oracle (full key span, so only the predicate selects).
+    let mut count = 0u64;
+    let mut mx = f32::MIN;
+    let mut mn = f32::MAX;
+    for r in 0..visible_rows {
+        let x = batch.columns[0][r];
+        if x == value {
+            count += 1;
+            mx = mx.max(x);
+            mn = mn.min(x);
+        }
+    }
+
+    let got = c.execute_physical(ds, &on, &query);
+    let via_zones = c.execute_physical(ds, &zones, &query);
+    let want = c.execute_physical(ds, &raw, &query);
+    match (got, via_zones, want) {
+        (
+            Ok(QueryOutput::Stats(g)),
+            Ok(QueryOutput::Stats(z)),
+            Ok(QueryOutput::Stats(w)),
+        ) => {
+            assert_eq!(g, w, "{label}: filters-on vs unpruned differ for probe {value}");
+            assert_eq!(z, w, "{label}: zones-only vs unpruned differ for probe {value}");
+            assert_eq!(g.count, count, "{label}: count vs oracle for probe {value}");
+            assert_eq!(g.nans, 0, "{label}: Eq never selects a NaN row");
+            if count > 0 {
+                assert_eq!(g.max, mx, "{label}: max vs oracle");
+                assert_eq!(g.min, mn, "{label}: min vs oracle");
+            }
+        }
+        (Err(_), Err(_), Err(_)) => {
+            // An empty selection finalizes as "no statistics to report" in
+            // every arm alike.
+            assert_eq!(count, 0, "{label}: all arms errored but oracle counts rows");
+        }
+        (g, z, w) => panic!(
+            "{label}: arms disagree on success for probe {value}: \
+             filters={g:?} zones={z:?} unpruned={w:?}"
+        ),
+    }
+    on.explain.filter_pruned
+}
+
 /// Run one predicate-free stats query through the sketch-answered arm
 /// (aggregate pushdown on) and the edge-scanned arm (pushdown off) and
 /// demand **bit-for-bit** agreement — a sketch partial is the partial the
@@ -168,7 +270,7 @@ fn check_agg(
         ds,
         index,
         &query,
-        PlanOptions { zone_pruning: true, agg_pushdown: false },
+        PlanOptions { zone_pruning: true, filter_pruning: true, agg_pushdown: false },
     )
     .unwrap();
     assert_eq!(off.explain.agg_answered, 0);
@@ -458,4 +560,115 @@ fn table_and_cias_plans_agree_under_predicates() {
             (x, y) => panic!("index kinds disagree: {x:?} vs {y:?}"),
         }
     }
+}
+
+#[test]
+fn filter_pruned_matches_unpruned_on_fixed_point_probes() {
+    let batch = probe_dataset(61);
+    let c = coordinator(None);
+    let ds = c.load(batch.clone(), PARTS).unwrap();
+    let index = c.build_index(&ds, oseba::coordinator::IndexKind::Cias).unwrap();
+    let mut rng = Xoshiro256::seeded(21);
+    let mut filter_pruned = 0usize;
+    for _ in 0..20 {
+        let v = rng.range_u64(0, DOMAIN) as f32;
+        filter_pruned += check_point(&c, &ds, index.as_ref(), &batch, v, ROWS, "fixed");
+        // The absent twin: x + 0.5 never occurs (stored values are
+        // integers), so filters should prune everything but false
+        // positives.
+        filter_pruned +=
+            check_point(&c, &ds, index.as_ref(), &batch, v + 0.5, ROWS, "fixed-absent");
+    }
+    assert!(filter_pruned > 0, "point probes must trigger filter pruning");
+}
+
+#[test]
+fn filter_pruned_matches_unpruned_on_cold_tiered_point_probes() {
+    let dir = oseba::testing::temp_dir("filter-tiered");
+    let batch = probe_dataset(62);
+    // Budget ~2 of 8 partitions: most of the dataset lives on disk.
+    let probe = oseba::storage::partition_batch_uniform(&batch, ROWS / PARTS).unwrap();
+    let one = probe[0].bytes();
+    let c = coordinator(Some(2 * one + one / 2));
+    let ds = c.load_tiered(batch.clone(), PARTS, &dir).unwrap();
+    let index = c.build_index(&ds, oseba::coordinator::IndexKind::Cias).unwrap();
+    let store = ds.store().unwrap().clone();
+    let mut rng = Xoshiro256::seeded(22);
+    let mut filter_pruned = 0usize;
+    for _ in 0..10 {
+        let v = rng.range_u64(0, DOMAIN) as f32;
+        store.shrink(usize::MAX).unwrap(); // every partition Cold
+        filter_pruned += check_point(&c, &ds, index.as_ref(), &batch, v, ROWS, "tiered");
+        store.shrink(usize::MAX).unwrap();
+        filter_pruned +=
+            check_point(&c, &ds, index.as_ref(), &batch, v + 0.5, ROWS, "tiered-absent");
+    }
+    assert!(filter_pruned > 0);
+
+    // The acceptance shape: an equality probe on an all-Cold store faults
+    // in only the partitions its filters admit — O(1), not O(partitions) —
+    // because filters live in the slot table, not in the evicted segments.
+    store.shrink(usize::MAX).unwrap();
+    let v = (4_321u64 * 37 % DOMAIN) as f32;
+    let query = Query::stats(RangeQuery { lo: 0, hi: i64::MAX }, 0)
+        .filtered(vec![ColumnPredicate { column: 0, op: PredOp::Eq, value: v }]);
+    let plan = plan_query(&ds, index.as_ref(), &query, true).unwrap();
+    assert!(plan.explain.zone_pruned == 0, "zones are blind here: {:?}", plan.explain);
+    assert!(plan.explain.filter_pruned >= PARTS / 2, "{:?}", plan.explain);
+    assert!(plan.explain.targeted <= 3, "{:?}", plan.explain);
+    let before = store.counters();
+    let _ = c.execute_physical(&ds, &plan, &query);
+    let faults = store.counters().since(&before).faults;
+    assert!(
+        faults <= plan.explain.targeted,
+        "faults ({faults}) bounded by targeted ({})",
+        plan.explain.targeted
+    );
+    c.context().unpersist(&ds);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn filter_pruned_matches_unpruned_on_live_snapshot_point_probes() {
+    let batch = probe_dataset(63);
+    let c = coordinator(None);
+    let live = c
+        .create_live(
+            Schema::stock(),
+            LiveConfig { rows_per_partition: ROWS / PARTS, max_asl: 8 },
+        )
+        .unwrap();
+    // Stream the batch in as uneven chunks; keys are strictly increasing.
+    let mut lo = 0usize;
+    let mut rng = Xoshiro256::seeded(23);
+    while lo < ROWS {
+        let hi = (lo + 500 + rng.range_u64(0, 900) as usize).min(ROWS);
+        live.append(Chunk {
+            keys: batch.keys[lo..hi].to_vec(),
+            columns: batch.columns.iter().map(|c| c[lo..hi].to_vec()).collect(),
+        })
+        .unwrap();
+        lo = hi;
+    }
+    let snap = c.snapshot_live(&live);
+    let index = snap.index().expect("sealed partitions exist");
+    let visible_rows = snap.rows();
+    assert!(visible_rows > 0);
+    let mut filter_pruned = 0usize;
+    for _ in 0..10 {
+        let v = rng.range_u64(0, DOMAIN) as f32;
+        filter_pruned +=
+            check_point(&c, snap.dataset(), index, &batch, v, visible_rows, "live");
+        filter_pruned += check_point(
+            &c,
+            snap.dataset(),
+            index,
+            &batch,
+            v + 0.5,
+            visible_rows,
+            "live-absent",
+        );
+    }
+    assert!(filter_pruned > 0, "live-sealed partitions must carry filters");
+    live.close();
 }

@@ -179,6 +179,86 @@ fn manifest_sketch_width_mismatch_is_a_clear_store_error() {
 }
 
 #[test]
+fn tampered_filter_section_is_rejected() {
+    // Every way a v4 manifest's per-segment `filter` array can go bad must
+    // fail `open` with an explicit `OsebaError::Store` — a silently
+    // accepted corrupt filter could prune a partition that holds matches.
+    let dir = temp_dir("bad-filter");
+    save_store(&dir, 2_000, 2, 9);
+    let path = dir.join(oseba::store::MANIFEST_FILE);
+    let pristine = std::fs::read_to_string(&path).unwrap();
+    let c = coordinator(None);
+
+    let mutate = |f: &dyn Fn(&mut Vec<Json>)| -> OsebaError {
+        let mut doc = Json::parse(&pristine).unwrap();
+        {
+            let Json::Obj(top) = &mut doc else { panic!("manifest is an object") };
+            let Some(Json::Arr(segs)) = top.get_mut("segments") else { panic!("segments") };
+            let Json::Obj(seg) = &mut segs[0] else { panic!("segment object") };
+            let Some(Json::Arr(fs)) = seg.get_mut("filter") else { panic!("filter array") };
+            f(fs);
+        }
+        std::fs::write(&path, doc.to_string()).unwrap();
+        c.open_store(&dir).unwrap_err()
+    };
+
+    // A flipped hex character anywhere in the section fails its CRC.
+    let err = mutate(&|fs| {
+        let Json::Str(h) = &mut fs[0] else { panic!("hex string") };
+        let flip = if h.as_bytes()[0] == b'0' { "1" } else { "0" };
+        h.replace_range(0..1, flip);
+    });
+    assert!(matches!(err, OsebaError::Store(_)), "got: {err:?}");
+    assert!(err.to_string().contains("crc mismatch"), "got: {err}");
+
+    // Too short to even hold the CRC prefix.
+    let err = mutate(&|fs| fs[0] = Json::str("ab"));
+    assert!(matches!(err, OsebaError::Store(_)), "got: {err:?}");
+    assert!(err.to_string().contains("truncated"), "got: {err}");
+
+    // Odd-length and non-hex sections are named, not panicked on.
+    let err = mutate(&|fs| fs[0] = Json::str("abc"));
+    assert!(err.to_string().contains("odd hex length"), "got: {err}");
+    let err = mutate(&|fs| fs[0] = Json::str("zz"));
+    assert!(err.to_string().contains("non-hex"), "got: {err}");
+
+    // A filter list disagreeing with the schema's column count would
+    // probe the wrong column's membership — rejected outright.
+    let err = mutate(&|fs| fs.push(fs[0].clone()));
+    assert!(matches!(err, OsebaError::Store(_)), "got: {err:?}");
+    assert!(err.to_string().contains("filter columns"), "got: {err}");
+
+    // Wrong JSON type inside the array.
+    let err = mutate(&|fs| fs[0] = Json::num(1.0));
+    assert!(err.to_string().contains("hex string"), "got: {err}");
+
+    // The pristine manifest still opens (the harness itself is sound),
+    // and an explicit `"filter": null` opt-out opens filterless.
+    std::fs::write(&path, &pristine).unwrap();
+    let (ds, _) = c.open_store(&dir).unwrap();
+    assert!(ds.filter_bytes() > 0, "v4 store restores filters");
+    c.context().unpersist(&ds);
+    let mut doc = Json::parse(&pristine).unwrap();
+    {
+        let Json::Obj(top) = &mut doc else { panic!("manifest is an object") };
+        let Some(Json::Arr(segs)) = top.get_mut("segments") else { panic!("segments") };
+        for seg in segs.iter_mut() {
+            let Json::Obj(seg) = seg else { panic!("segment object") };
+            seg.insert("filter".into(), Json::Null);
+        }
+    }
+    std::fs::write(&path, doc.to_string()).unwrap();
+    let (ds, index) = c.open_store(&dir).unwrap();
+    assert_eq!(ds.filter_bytes(), 0, "null filters mean none restored");
+    // Filterless stores still answer queries (filters only ever prune).
+    let st = c
+        .analyze_period_oseba(&ds, index.as_ref(), RangeQuery { lo: 0, hi: i64::MAX }, 0)
+        .unwrap();
+    assert_eq!(st.count, 2_000);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn opened_store_answers_covered_queries_from_manifest_sketches() {
     use oseba::coordinator::{plan_query, Query};
     let dir = temp_dir("open-sketch");

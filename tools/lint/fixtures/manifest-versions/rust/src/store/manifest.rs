@@ -1,7 +1,8 @@
-//! Seeded violation: the reader guards the v2 upgrade but not v3, while
-//! VERSION says the writer can emit v3.
+//! Seeded violation: the reader guards the v2 (zones) and v3 (sketches)
+//! upgrades but not v4 (filters), while VERSION says the writer can emit
+//! v4.
 
-pub const VERSION: u32 = 3;
+pub const VERSION: u32 = 4;
 pub const MIN_VERSION: u32 = 1;
 
 pub fn to_json(version: u32) -> u32 {
@@ -16,6 +17,10 @@ pub fn from_json(version: u32) -> bool {
         // v1 upgrade path handled...
         return true;
     }
-    // ...but no `version < 3` guard — the seeded violation.
+    if version < 3 {
+        // ...v2 upgrade path handled...
+        return true;
+    }
+    // ...but no `version < 4` guard — the seeded violation.
     true
 }
