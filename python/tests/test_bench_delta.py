@@ -1,6 +1,7 @@
-"""bench_delta gate tests: quantile leaves (p50/p99, as the traffic
-harness emits) regress under --fail-above exactly like timing leaves,
-while count-style leaves never fail the run."""
+"""bench_delta gate tests: timing leaves (secs mentions, p50/p99
+quantiles, quantile-suffixed and min-of-iterations microbench leaves)
+regress under --fail-above, while count-style leaves never fail the
+run."""
 
 import importlib.util
 import json
@@ -16,13 +17,19 @@ bench_delta = importlib.util.module_from_spec(spec)
 spec.loader.exec_module(bench_delta)
 
 
-def test_quantile_leaf_detection():
-    assert bench_delta.is_quantile_leaf("classes[cdr].p50")
-    assert bench_delta.is_quantile_leaf("classes[climate].p99")
-    assert bench_delta.is_quantile_leaf("ops.op_stats.p999")
-    assert not bench_delta.is_quantile_leaf("classes[cdr].ops")
-    assert not bench_delta.is_quantile_leaf("cias_lookup_p50_m15")
-    assert not bench_delta.is_quantile_leaf("classes[cdr].p5000")
+def test_timing_leaf_detection():
+    assert bench_delta.is_timing_leaf("classes[cdr].p50")
+    assert bench_delta.is_timing_leaf("classes[climate].p99")
+    assert bench_delta.is_timing_leaf("ops.op_stats.p999")
+    assert bench_delta.is_timing_leaf("arms[block-sketch].secs_mean")
+    assert bench_delta.is_timing_leaf("cias_lookup_p50_m15")
+    assert bench_delta.is_timing_leaf("segment_stats_lanes_p50")
+    assert bench_delta.is_timing_leaf("masked_fold_lanes_min")
+    assert not bench_delta.is_timing_leaf("classes[cdr].ops")
+    assert not bench_delta.is_timing_leaf("classes[cdr].p5000")
+    assert not bench_delta.is_timing_leaf("masked_fold_speedup")
+    assert not bench_delta.is_timing_leaf("bits_per_key")
+    assert not bench_delta.is_timing_leaf("measured_fpr")
 
 
 def write_doc(root, classes):

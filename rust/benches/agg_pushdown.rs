@@ -86,8 +86,18 @@ fn main() {
         })
         .collect();
 
-    let on = PlanOptions { zone_pruning: true, filter_pruning: true, agg_pushdown: true };
-    let off = PlanOptions { zone_pruning: true, filter_pruning: true, agg_pushdown: false };
+    let on = PlanOptions {
+        zone_pruning: true,
+        filter_pruning: true,
+        agg_pushdown: true,
+        block_pruning: true,
+    };
+    let off = PlanOptions {
+        zone_pruning: true,
+        filter_pruning: true,
+        agg_pushdown: false,
+        block_pruning: true,
+    };
     let cfg = BenchConfig::from_env();
     let mut results = Vec::new();
     let mut json_arms = Vec::new();

@@ -1,0 +1,279 @@
+//! **Block-sketch masked-scan bench**: the sub-partition sketch hierarchy
+//! against a block-blind baseline on the two workloads it exists for,
+//! over a tiered dataset ~4× the memory budget (cold faults are real):
+//!
+//!   * **edge-heavy** — narrow windows that clip partitions at (and near)
+//!     kernel-block boundaries. Interior blocks answer by merging their
+//!     retained seal-time partials; only the ≤2 remainder blocks fold
+//!     rows, and a window that lands exactly on the block grid never
+//!     faults its partition at all.
+//!   * **fraud-mix** — a CDR-style conjunction (`duration > 900 AND
+//!     cost > 900`) where each rare condition clusters in a *different*
+//!     block of most partitions. Partition-level zones pass both
+//!     predicates, but block-level zones prune every block — the cold
+//!     partition skips its segment bytes before fault-in. Only the few
+//!     partitions where the conditions co-locate scan one block.
+//!
+//! Two arms per workload, identical queries, cold cache per pass:
+//!   * block-blind   — `PlanOptions { block_pruning: false, .. }`
+//!   * block-sketch  — the default plan
+//! Answers must be bit-identical (the block partials and the scan fold
+//! share `fold_stats_f32`; a pruned block's masked fold is the merge
+//! identity), with fewer rows folded and strictly fewer segment bytes.
+//!
+//! Emits `BENCH_masked_scan.json` for the perf trajectory.
+//!
+//! Run: `cargo bench --bench masked_scan`
+//! (OSEBA_MASKED_SCAN_BUDGET rescales; dataset is 4× the budget.)
+
+mod common;
+
+use oseba::bench::{bench, section, table, BenchConfig};
+use oseba::config::{parse_bytes, BackendKind, ContextConfig};
+use oseba::coordinator::{
+    plan_query_opts, Coordinator, PhysicalPlan, PlanOptions, Query, QueryOutput,
+};
+use oseba::engine::Dataset;
+use oseba::index::{ColumnPredicate, PredOp, RangeQuery};
+use oseba::runtime::make_backend;
+use oseba::storage::{BatchBuilder, Schema, BLOCK_ROWS};
+use oseba::util::humansize;
+use oseba::util::json::Json;
+
+/// Three kernel blocks per partition: one spike block per condition plus
+/// one interior block for coverage/co-location.
+const BLOCKS_PER_PART: usize = 3;
+
+fn coordinator(budget: usize) -> Coordinator {
+    let mut cfg = common::app_cfg(BackendKind::Native);
+    cfg.ctx = ContextConfig { num_workers: 4, memory_budget: Some(budget) };
+    let be = make_backend(cfg.backend, &cfg.artifacts_dir).expect("backend");
+    Coordinator::new(&cfg, be).expect("coordinator")
+}
+
+/// CDR-style batch: keys are the row index (step 1, so key windows map
+/// onto exact row windows). Column 0 "duration" spikes past 900 only in
+/// block 0 of each partition; column 1 "cost" spikes only in block 2.
+/// In every 8th partition, block 1 holds rows where BOTH spike — the
+/// actual fraud the conjunction is hunting.
+fn cdr_batch(partitions: usize) -> oseba::storage::RecordBatch {
+    let rows_per = BLOCKS_PER_PART * BLOCK_ROWS;
+    let mut b = BatchBuilder::new(Schema::stock());
+    for i in 0..partitions * rows_per {
+        let (p, r) = (i / rows_per, i % rows_per);
+        let mut duration = (r % 600) as f32;
+        let mut cost = ((r * 7) % 600) as f32;
+        if r < BLOCK_ROWS && r % 512 == 0 {
+            duration = 901.0;
+        }
+        if r >= 2 * BLOCK_ROWS && r % 512 == 0 {
+            cost = 905.0;
+        }
+        if p % 8 == 0 && (BLOCK_ROWS..2 * BLOCK_ROWS).contains(&r) && r % 1024 == 0 {
+            duration = 950.0;
+            cost = 960.0;
+        }
+        b.push(i as i64, &[duration, cost]);
+    }
+    b.finish().unwrap()
+}
+
+fn run_stats(
+    c: &Coordinator,
+    ds: &Dataset,
+    plan: &PhysicalPlan,
+    q: &Query,
+) -> oseba::analysis::PeriodStats {
+    match c.execute_physical(ds, plan, q).expect("execute") {
+        QueryOutput::Stats(s) => s,
+        _ => unreachable!(),
+    }
+}
+
+struct Workload {
+    name: &'static str,
+    queries: Vec<Query>,
+}
+
+fn main() {
+    let budget = std::env::var("OSEBA_MASKED_SCAN_BUDGET")
+        .ok()
+        .map(|v| parse_bytes(&v).expect("OSEBA_MASKED_SCAN_BUDGET"))
+        .unwrap_or(8 << 20);
+    let rows_per = BLOCKS_PER_PART * BLOCK_ROWS;
+    let row_bytes = Schema::stock().row_bytes();
+    let partitions = (4 * budget / (rows_per * row_bytes)).max(8);
+    let rows = partitions * rows_per;
+    let raw = rows * row_bytes;
+    let dir =
+        std::env::temp_dir().join(format!("oseba-masked-scan-bench-{}", std::process::id()));
+
+    section(&format!(
+        "Masked scans: {} tiered dataset under a {} budget ({} partitions x {} blocks)",
+        humansize::bytes(raw),
+        humansize::bytes(budget),
+        partitions,
+        BLOCKS_PER_PART
+    ));
+
+    let coord = coordinator(budget);
+    let ds = coord
+        .load_tiered(cdr_batch(partitions), partitions, &dir)
+        .expect("tiered load");
+    let store = ds.store().expect("tiered").clone();
+    let index = coord
+        .build_index(&ds, oseba::coordinator::IndexKind::Cias)
+        .expect("index");
+
+    // Edge-heavy: every partition gets a window starting one block in
+    // (grid-aligned: fully covered, never faulted) and every other
+    // partition also gets an off-grid window (one remainder block folds).
+    let mut edge_queries = Vec::new();
+    for p in 0..partitions {
+        let base = (p * rows_per) as i64;
+        edge_queries.push(Query::stats(
+            RangeQuery { lo: base + BLOCK_ROWS as i64, hi: base + rows_per as i64 - 1 },
+            0,
+        ));
+        if p % 2 == 0 {
+            edge_queries.push(Query::stats(
+                RangeQuery {
+                    lo: base + BLOCK_ROWS as i64 + 200,
+                    hi: base + rows_per as i64 - 1,
+                },
+                0,
+            ));
+        }
+    }
+    // Fraud-mix: the full-span conjunction, repeated so the wall-clock
+    // arm measures more than one planning pass.
+    let fraud_query = || {
+        Query::stats(RangeQuery { lo: 0, hi: rows as i64 - 1 }, 0).filtered(vec![
+            ColumnPredicate { column: 0, op: PredOp::Gt, value: 900.0 },
+            ColumnPredicate { column: 1, op: PredOp::Gt, value: 900.0 },
+        ])
+    };
+    let workloads = [
+        Workload { name: "edge-heavy", queries: edge_queries },
+        Workload { name: "fraud-mix", queries: (0..8).map(|_| fraud_query()).collect() },
+    ];
+
+    let blind = PlanOptions { block_pruning: false, ..PlanOptions::default() };
+    let assisted = PlanOptions::default();
+
+    let cfg = BenchConfig::from_env();
+    let mut json_workloads = Vec::new();
+    for w in &workloads {
+        section(&format!("workload: {}", w.name));
+
+        // Correctness first, cold cache: bit-identical answers per query.
+        for q in &w.queries {
+            let bp = plan_query_opts(&ds, index.as_ref(), q, blind).expect("plan");
+            let ap = plan_query_opts(&ds, index.as_ref(), q, assisted).expect("plan");
+            store.shrink(usize::MAX).expect("evict all");
+            let want = run_stats(&coord, &ds, &bp, q);
+            store.shrink(usize::MAX).expect("evict all");
+            let got = run_stats(&coord, &ds, &ap, q);
+            assert_eq!(got, want, "block sketches must not change answers ({})", w.name);
+        }
+
+        let mut results = Vec::new();
+        let mut json_arms = Vec::new();
+        for (name, opts) in [("block-blind", blind), ("block-sketch", assisted)] {
+            let plans: Vec<(Query, PhysicalPlan)> = w
+                .queries
+                .iter()
+                .map(|q| {
+                    let p = plan_query_opts(&ds, index.as_ref(), q, opts).expect("plan");
+                    (q.clone(), p)
+                })
+                .collect();
+            let rows_folded: usize =
+                plans.iter().map(|(_, p)| p.explain.estimated_rows).sum();
+            let rows_avoided: usize =
+                plans.iter().map(|(_, p)| p.explain.rows_avoided).sum();
+            let blocks_covered: usize =
+                plans.iter().map(|(_, p)| p.explain.blocks_covered).sum();
+            let blocks_pruned: usize =
+                plans.iter().map(|(_, p)| p.explain.blocks_pruned).sum();
+
+            store.shrink(usize::MAX).expect("evict all");
+            let before = store.counters();
+            for (q, p) in &plans {
+                run_stats(&coord, &ds, p, q);
+            }
+            let delta = store.counters().since(&before);
+
+            let r = bench(&cfg, &format!("{} {name}", w.name), || {
+                store.shrink(usize::MAX).expect("evict all");
+                for (q, p) in &plans {
+                    run_stats(&coord, &ds, p, q);
+                }
+            });
+            println!(
+                "  {name}: {} rows folded, {} avoided, {} blocks covered, {} pruned, {} faults, {} read",
+                rows_folded,
+                rows_avoided,
+                blocks_covered,
+                blocks_pruned,
+                delta.faults,
+                humansize::bytes(delta.segment_bytes_read)
+            );
+            json_arms.push(Json::obj(vec![
+                ("name", Json::str(name)),
+                ("rows_folded", Json::num(rows_folded as f64)),
+                ("rows_avoided", Json::num(rows_avoided as f64)),
+                ("blocks_covered", Json::num(blocks_covered as f64)),
+                ("blocks_pruned", Json::num(blocks_pruned as f64)),
+                ("faults", Json::num(delta.faults as f64)),
+                ("segment_bytes_read", Json::num(delta.segment_bytes_read as f64)),
+                ("queries", Json::num(w.queries.len() as f64)),
+                ("secs_mean", Json::num(r.summary.mean)),
+                ("secs_p50", Json::num(r.summary.p50)),
+                ("secs_p95", Json::num(r.summary.p95)),
+            ]));
+            results.push(r);
+        }
+        println!("\n{}", table(&results));
+
+        // The acceptance gate per workload: fewer rows folded, strictly
+        // fewer segment bytes, same answers (asserted above).
+        let (bl, sk) = (&json_arms[0], &json_arms[1]);
+        let f = |j: &Json, k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap();
+        assert!(
+            f(sk, "rows_folded") < f(bl, "rows_folded"),
+            "{}: block sketches must fold fewer rows ({} vs {})",
+            w.name,
+            f(sk, "rows_folded"),
+            f(bl, "rows_folded")
+        );
+        assert!(
+            f(sk, "segment_bytes_read") < f(bl, "segment_bytes_read"),
+            "{}: block sketches must read strictly fewer segment bytes ({} vs {})",
+            w.name,
+            f(sk, "segment_bytes_read"),
+            f(bl, "segment_bytes_read")
+        );
+        assert!(f(sk, "blocks_covered") + f(sk, "blocks_pruned") > 0.0);
+
+        json_workloads.push(Json::obj(vec![
+            ("name", Json::str(w.name)),
+            ("arms", Json::arr(json_arms)),
+        ]));
+    }
+
+    common::write_bench_json(
+        "masked_scan",
+        Json::obj(vec![
+            ("bench", Json::str("masked_scan")),
+            ("raw_bytes", Json::num(raw as f64)),
+            ("budget_bytes", Json::num(budget as f64)),
+            ("partitions", Json::num(partitions as f64)),
+            ("rows", Json::num(rows as f64)),
+            ("workloads", Json::arr(json_workloads)),
+        ]),
+    );
+
+    coord.context().unpersist(&ds);
+    let _ = std::fs::remove_dir_all(&dir);
+}

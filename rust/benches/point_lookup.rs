@@ -122,7 +122,12 @@ fn main() {
     let needles: Vec<f32> = present.iter().chain(absent.iter()).copied().collect();
 
     let zone_only =
-        PlanOptions { zone_pruning: true, filter_pruning: false, agg_pushdown: true };
+        PlanOptions {
+            zone_pruning: true,
+            filter_pruning: false,
+            agg_pushdown: true,
+            block_pruning: true,
+        };
     let filter_on = PlanOptions::default();
 
     // Correctness first, cold cache: identical answers from both arms on

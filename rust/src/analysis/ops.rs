@@ -7,10 +7,10 @@ use std::sync::Arc;
 
 use crate::engine::{Dataset, SliceView};
 use crate::error::{OsebaError, Result};
-use crate::index::{row_matches, ColumnPredicate};
+use crate::index::ColumnPredicate;
 use crate::runtime::backend::AnalysisBackend;
 use crate::storage::BLOCK_ROWS;
-use crate::util::stats::{DistancePartial, Moments};
+use crate::util::stats::{fold_stats_f32_masked, DistancePartial, Moments};
 
 /// Finalized period statistics — the paper's per-phase analysis output
 /// ("computing the max, mean and standard deviation", §IV-A).
@@ -293,6 +293,9 @@ pub fn slice_moments(
     column: usize,
     batch: bool,
 ) -> Result<Moments> {
+    // Clamp to the valid rows: the last block is zero-padded to
+    // BLOCK_ROWS, and an over-long range must not fold that padding.
+    let row_end = row_end.min(part.rows);
     let first = row_start / BLOCK_ROWS;
     let last = row_end.saturating_sub(1) / BLOCK_ROWS;
     let mut tasks: Vec<(&[f32], usize, usize)> = Vec::new();
@@ -320,9 +323,16 @@ pub fn slice_moments(
 /// when a plan carries value predicates. Rows of `[row_start, row_end)`
 /// whose predicate-column values all match fold their `column` value into
 /// the moments (NaNs counted out as usual). The mask breaks the AOT
-/// static-shape contract, so this path scans on the engine; with an empty
-/// conjunction it defers to the kernel path unchanged — zero cost when no
-/// `where` clause is present.
+/// static-shape contract, so this path folds on the engine — but with the
+/// same blockwise structure as the kernel path: per kernel block, the
+/// mask is built once from the hoisted predicate-column blocks (one pass
+/// per predicate, no per-row closure dispatch), then one branchless
+/// [`fold_stats_f32_masked`] pass folds the target block; the per-block
+/// partials merge in block order. That structure is what makes block-
+/// sketch pruning exact — a block whose mask selects nothing merges as
+/// the identity — and deterministic (fixed lane-order combine). With an
+/// empty conjunction it defers to the kernel path unchanged — zero cost
+/// when no `where` clause is present.
 pub fn slice_moments_filtered(
     backend: &dyn AnalysisBackend,
     part: &crate::storage::Partition,
@@ -335,13 +345,37 @@ pub fn slice_moments_filtered(
     if preds.is_empty() {
         return slice_moments(backend, part, row_start, row_end, column, batch);
     }
-    let mut m = Moments::EMPTY;
-    for r in row_start..row_end.min(part.rows) {
-        if row_matches(preds, |c| part.columns[c][r]) {
-            m.absorb(part.columns[column][r]);
-        }
+    let row_end = row_end.min(part.rows);
+    if row_start >= row_end {
+        return Ok(Moments::EMPTY);
     }
-    Ok(m)
+    let mut merged = Moments::EMPTY;
+    let mut mask = vec![false; BLOCK_ROWS];
+    let first = row_start / BLOCK_ROWS;
+    let last = (row_end - 1) / BLOCK_ROWS;
+    for b in first..=last.min(part.num_blocks().saturating_sub(1)) {
+        let base = b * BLOCK_ROWS;
+        let s = row_start.saturating_sub(base);
+        let e = (row_end - base).min(BLOCK_ROWS);
+        if s >= e {
+            continue;
+        }
+        mask[..s].fill(false);
+        mask[s..e].fill(true);
+        for p in preds {
+            let col = part.block(p.column, b);
+            for (keep, &x) in mask[s..e].iter_mut().zip(&col[s..e]) {
+                *keep &= p.matches(x);
+            }
+        }
+        let xs = part.block(column, b);
+        let (mx, mn, sum, sumsq, selected, nans) =
+            fold_stats_f32_masked(&xs[..e], &mask[..e]);
+        let mut m = Moments::from_kernel(mx, mn, sum, sumsq, (selected - nans) as f32);
+        m.nans = nans as f64;
+        merged = merged.merge(m);
+    }
+    Ok(merged)
 }
 
 /// Gather the selected rows of `column` across views, keeping only rows
@@ -359,12 +393,15 @@ pub fn gather_filtered(
     column: usize,
     preds: &[ColumnPredicate],
 ) -> (Vec<f32>, usize) {
-    let mut out = Vec::new();
+    let total: usize = views.iter().map(|v| v.rows()).sum();
+    let mut out = Vec::with_capacity(total);
     let mut nans = 0usize;
     for v in views {
         let target = v.column(column);
+        // One column lookup per predicate per view, not per row.
+        let cols: Vec<&[f32]> = preds.iter().map(|p| v.column(p.column)).collect();
         for (r, &x) in target.iter().enumerate() {
-            if !row_matches(preds, |c| v.column(c)[r]) {
+            if !preds.iter().zip(&cols).all(|(p, col)| p.matches(col[r])) {
                 continue;
             }
             if x.is_nan() {
@@ -383,10 +420,19 @@ pub fn gather_filtered(
 /// *both* rows pass — dropping pairs positionally instead of shifting
 /// one side's series.
 pub fn selection_mask(views: &[SliceView<'_>], preds: &[ColumnPredicate]) -> Vec<bool> {
-    let mut out = Vec::new();
+    let total: usize = views.iter().map(|v| v.rows()).sum();
+    let mut out = Vec::with_capacity(total);
     for v in views {
-        for r in 0..v.rows() {
-            out.push(row_matches(preds, |c| v.column(c)[r]));
+        // Column-at-a-time: start all-true for the view's rows, then AND
+        // each predicate in one pass over its hoisted column slice. Every
+        // row keeps its flag — positional alignment is the whole point.
+        let base = out.len();
+        out.resize(base + v.rows(), true);
+        for p in preds {
+            let col = v.column(p.column);
+            for (keep, &x) in out[base..].iter_mut().zip(col) {
+                *keep &= p.matches(x);
+            }
         }
     }
     out
@@ -565,29 +611,49 @@ mod tests {
     #[test]
     fn filtered_moments_match_scan_oracle() {
         use crate::index::{ColumnPredicate, PredOp};
-        let (_ctx, ds, _an) = setup(9_000, 3);
+        let (_ctx, ds, _an) = setup(9_000, 2); // 4500-row partitions: two blocks each
         let part = &ds.partitions()[1];
         let preds = vec![ColumnPredicate { column: 1, op: PredOp::Gt, value: 50.0 }];
-        let got = slice_moments_filtered(
-            &NativeBackend,
-            part,
-            10,
-            part.rows - 7,
-            0,
-            &preds,
-            true,
-        )
-        .unwrap();
-        // Oracle: direct row loop.
+        let (rs, re) = (10, part.rows - 7);
+        let got =
+            slice_moments_filtered(&NativeBackend, part, rs, re, 0, &preds, true).unwrap();
+        // Exact oracle: the same per-block masked kernel folds, merged in
+        // block order — the filtered path must be bit-identical to it.
         let mut want = crate::util::stats::Moments::EMPTY;
-        for r in 10..part.rows - 7 {
-            if part.columns[1][r] > 50.0 {
-                want.absorb(part.columns[0][r]);
-            }
+        for b in rs / BLOCK_ROWS..=(re - 1) / BLOCK_ROWS {
+            let base = b * BLOCK_ROWS;
+            let s = rs.saturating_sub(base);
+            let e = (re - base).min(BLOCK_ROWS);
+            let mask: Vec<bool> =
+                (0..e).map(|r| r >= s && part.columns[1][base + r] > 50.0).collect();
+            let (mx, mn, sum, sumsq, selected, nans) =
+                fold_stats_f32_masked(&part.block(0, b)[..e], &mask);
+            let mut m = crate::util::stats::Moments::from_kernel(
+                mx,
+                mn,
+                sum,
+                sumsq,
+                (selected - nans) as f32,
+            );
+            m.nans = nans as f64;
+            want = want.merge(m);
         }
         assert_eq!(got, want);
         assert!(got.count > 0.0, "some humidity rows exceed 50");
-        assert!(got.count < (part.rows - 17) as f64, "predicate is selective");
+        assert!(got.count < (re - rs) as f64, "predicate is selective");
+        // Semantics oracle: a sequential row loop agrees exactly on the
+        // counts and extrema, to tolerance on the folded sum.
+        let mut seq = crate::util::stats::Moments::EMPTY;
+        for r in rs..re {
+            if part.columns[1][r] > 50.0 {
+                seq.absorb(part.columns[0][r]);
+            }
+        }
+        assert_eq!(got.count, seq.count);
+        assert_eq!(got.nans, seq.nans);
+        assert_eq!(got.max, seq.max);
+        assert_eq!(got.min, seq.min);
+        assert!((got.sum - seq.sum).abs() < 1e-3 * seq.sum.abs().max(1.0));
 
         // Empty conjunction defers to the kernel path.
         let unmasked =
@@ -595,6 +661,25 @@ mod tests {
                 .unwrap();
         let direct = slice_moments(&NativeBackend, part, 0, part.rows, 0, true).unwrap();
         assert_eq!(unmasked, direct);
+    }
+
+    #[test]
+    fn slice_moments_clamps_row_end_to_valid_rows() {
+        use crate::index::{ColumnPredicate, PredOp};
+        let (_ctx, ds, _an) = setup(8_200, 1); // 3 blocks; 8 valid rows in the last
+        let part = &ds.partitions()[0];
+        let clamped =
+            slice_moments(&NativeBackend, part, 4_000, usize::MAX, 0, true).unwrap();
+        let exact = slice_moments(&NativeBackend, part, 4_000, part.rows, 0, true).unwrap();
+        assert_eq!(clamped, exact, "rows past the end must not fold the zero padding");
+        assert_eq!(clamped.count + clamped.nans, (part.rows - 4_000) as f64);
+        // The filtered path clamps the same way (ClimateGen humidity is
+        // always >= 0, so the predicate keeps every valid row).
+        let preds = vec![ColumnPredicate { column: 1, op: PredOp::Ge, value: 0.0 }];
+        let filtered =
+            slice_moments_filtered(&NativeBackend, part, 4_000, usize::MAX, 0, &preds, true)
+                .unwrap();
+        assert_eq!(filtered.count + filtered.nans, clamped.count + clamped.nans);
     }
 
     #[test]

@@ -23,10 +23,12 @@ use crate::cluster::{Cluster, NetworkModel};
 use crate::config::AppConfig;
 use crate::engine::{Dataset, EpochSnapshot, LiveConfig, LiveDataset, OsebaContext};
 use crate::error::{OsebaError, Result};
-use crate::index::{Cias, ColumnPredicate, ContentIndex, RangeQuery, TableIndex};
+use crate::index::{
+    for_each_block_class, BlockClass, Cias, ColumnPredicate, ContentIndex, RangeQuery, TableIndex,
+};
 use crate::metrics::{phase_mark, BatchReport, PlanPhase, Span, Timer};
 use crate::runtime::backend::AnalysisBackend;
-use crate::storage::{Partition, RecordBatch, Schema};
+use crate::storage::{Partition, RecordBatch, Schema, BLOCK_ROWS};
 use crate::util::stats::{Moments, TrendPartial};
 
 /// How one targeted slice contributes to plan execution: scanned from the
@@ -38,6 +40,67 @@ enum PlanSource {
     Scan(Arc<Partition>),
     /// Merge the precomputed sketch partials instead of reading.
     Sketch(crate::index::ColumnSketch),
+    /// Merge this pre-merged partial of the slice's covered blocks —
+    /// block classification left nothing to scan, so the partition was
+    /// never resolved (a cold slot's segment stays unread).
+    Blocks(Moments),
+}
+
+/// Fold `[row_start, row_end)` of `column` with block-sketch assistance:
+/// walk the slice's kernel blocks in order — merge the retained partial
+/// of a fully-selected block (predicate-free selections only), skip a
+/// block whose block-level zones cannot satisfy the conjunction, and
+/// masked-fold the rest. Bit-identical on the native backend to the
+/// plain slice fold, which decomposes at the same block boundaries with
+/// the same kernels: a covered partial IS that block's fold, a pruned
+/// block's fold selects nothing (merging it is the identity), and the
+/// left-to-right merge order is unchanged.
+fn assisted_slice_moments(
+    backend: &dyn AnalysisBackend,
+    part: &Arc<Partition>,
+    row_start: usize,
+    row_end: usize,
+    column: usize,
+    preds: &[ColumnPredicate],
+    batch: bool,
+) -> Result<Moments> {
+    let blocks = Arc::clone(&part.block_sketches);
+    if blocks.block_rows() != BLOCK_ROWS || blocks.num_blocks() == 0 {
+        return slice_moments_filtered(backend, part, row_start, row_end, column, preds, batch);
+    }
+    let cover_ok = preds.is_empty() && column < blocks.num_columns();
+    let mut m = Moments::EMPTY;
+    let mut err = None;
+    for_each_block_class(
+        &blocks,
+        part.rows,
+        row_start,
+        row_end,
+        preds,
+        cover_ok,
+        |b, bs, be, class| {
+            if err.is_some() {
+                return;
+            }
+            match class {
+                BlockClass::Covered => {
+                    // `cover_ok` guarantees the partial exists.
+                    m = m.merge(blocks.moments(column, b).unwrap_or(Moments::EMPTY));
+                }
+                BlockClass::Pruned => {}
+                BlockClass::Scanned => {
+                    match slice_moments_filtered(backend, part, bs, be, column, preds, batch) {
+                        Ok(p) => m = m.merge(p),
+                        Err(e) => err = Some(e),
+                    }
+                }
+            }
+        },
+    );
+    match err {
+        Some(e) => Err(e),
+        None => Ok(m),
+    }
 }
 
 /// Wall-clock split of one physical execution: slice resolve / cold
@@ -82,6 +145,12 @@ fn trace_span(plan: &PhysicalPlan, et: &ExecTimings, faults: usize, total: Durat
                 .count("agg_answered", ex.agg_answered as u64)
                 .count("rows_avoided", ex.rows_avoided as u64)
                 .count("bytes_avoided", ex.bytes_avoided as u64),
+        )
+        .child(
+            Span::new("block_classify")
+                .with_secs(plan.timings.block_classify.as_secs_f64())
+                .count("blocks_covered", ex.blocks_covered as u64)
+                .count("blocks_pruned", ex.blocks_pruned as u64),
         )
         .child(
             Span::new("fault_in")
@@ -301,7 +370,7 @@ impl Coordinator {
                 (*s, PlanSource::Scan(Arc::clone(&filtered.partitions()[s.partition])))
             })
             .collect();
-        let stats = self.run_stats_tasks(items, column, &[])?;
+        let stats = self.run_stats_tasks(items, column, &[], false)?;
         Ok((stats, filtered))
     }
 
@@ -343,13 +412,17 @@ impl Coordinator {
         let query = Query::stats(q, column);
         let plan = plan_query(ds, index, &query, true)?;
         let mut merged = TrendPartial::EMPTY;
-        self.for_each_plan_slice(ds, &plan.ranges, column, |s, src| {
+        self.for_each_plan_slice(ds, &plan.ranges, column, None, |s, src| {
             merged = merged.merge(match src {
                 PlanSource::Sketch(sk) => sk.trend,
                 PlanSource::Scan(part) => TrendPartial::scan(
                     &part.keys[s.row_start..s.row_end],
                     &part.columns[column][s.row_start..s.row_end],
                 ),
+                // Block sketches hold no regression partials; the trend
+                // walk passes `block_preds: None`, so this variant is
+                // never emitted for it.
+                PlanSource::Blocks(_) => TrendPartial::EMPTY,
             });
         })?;
         let (Some(slope), Some(intercept)) = (merged.slope(), merged.intercept()) else {
@@ -416,6 +489,7 @@ impl Coordinator {
         m.record_phase(PlanPhase::ZonePruning, plan.timings.zone_pruning);
         m.record_phase(PlanPhase::FilterPruning, plan.timings.filter_pruning);
         m.record_phase(PlanPhase::SketchClassify, plan.timings.sketch_classify);
+        m.record_phase(PlanPhase::BlockClassify, plan.timings.block_classify);
         let store_before = ds.store().map(|s| s.counters()).unwrap_or_default();
         let mut et = ExecTimings::default();
         let out = self.execute_physical_timed(ds, &plan, query, &mut et)?;
@@ -455,12 +529,15 @@ impl Coordinator {
         match query.op {
             QueryOp::Stats { column } => {
                 let mark = Instant::now();
-                let items = self.stats_items(ds, &plan.ranges, column)?;
+                let block_preds =
+                    plan.block_assist.then_some(query.predicates.as_slice());
+                let items = self.stats_items(ds, &plan.ranges, column, block_preds)?;
                 let mark = phase_mark(&mut et.fault_in, mark);
                 if items.is_empty() {
                     return Err(empty_selection_error(query));
                 }
-                let stats = self.run_stats_tasks(items, column, &query.predicates)?;
+                let stats =
+                    self.run_stats_tasks(items, column, &query.predicates, plan.block_assist)?;
                 phase_mark(&mut et.scan_merge, mark);
                 Ok(QueryOutput::Stats(stats))
             }
@@ -515,14 +592,26 @@ impl Coordinator {
     /// sketch-answered and all-scanned runs merge partials in the same
     /// structure — a precondition for bit-identical results. Covered
     /// visits receive the plan's slice; scan visits the refined slice.
+    ///
+    /// `block_preds` is `Some(conjunction)` when the plan carries block
+    /// assist (stats only — the trend walk passes `None` because block
+    /// sketches hold no regression partials). An assisted slice is
+    /// classified here, pre-resolve, from pure metadata: blocks are
+    /// booked into the engine counters, and when classification leaves
+    /// nothing to scan the slice is answered as [`PlanSource::Blocks`]
+    /// without ever resolving — a cold partition faults nothing in.
     fn for_each_plan_slice(
         &self,
         ds: &Dataset,
         ranges: &[PrunedRange],
         column: usize,
+        block_preds: Option<&[ColumnPredicate]>,
         mut visit: impl FnMut(crate::index::PartitionSlice, PlanSource),
     ) -> Result<()> {
         let mut answered = 0usize;
+        let mut block_answered = 0usize;
+        let mut covered_blocks = 0usize;
+        let mut pruned_blocks = 0usize;
         for pr in ranges {
             for s in &pr.slices {
                 if pr.is_covered(s.partition) {
@@ -534,16 +623,50 @@ impl Coordinator {
                     })?;
                     answered += 1;
                     visit(*s, PlanSource::Sketch(sk));
-                } else {
-                    for (part, refined) in
-                        self.ctx.resolve_slices(ds, std::slice::from_ref(s), pr.range)?
+                    continue;
+                }
+                if let Some(preds) = block_preds {
+                    if let Some((blocks, rows, cover_ok)) =
+                        plan::block_assist_for(ds, s, pr.range, preds, column)
                     {
-                        visit(refined, PlanSource::Scan(part));
+                        let mut merged = Moments::EMPTY;
+                        let mut scanned = 0usize;
+                        for_each_block_class(
+                            &blocks,
+                            rows,
+                            s.row_start,
+                            s.row_end,
+                            preds,
+                            cover_ok,
+                            |b, _bs, _be, class| match class {
+                                BlockClass::Covered => {
+                                    covered_blocks += 1;
+                                    // `cover_ok` guarantees the partial exists.
+                                    merged = merged.merge(
+                                        blocks.moments(column, b).unwrap_or(Moments::EMPTY),
+                                    );
+                                }
+                                BlockClass::Pruned => pruned_blocks += 1,
+                                BlockClass::Scanned => scanned += 1,
+                            },
+                        );
+                        if scanned == 0 {
+                            block_answered += 1;
+                            visit(*s, PlanSource::Blocks(merged));
+                            continue;
+                        }
                     }
+                }
+                for (part, refined) in
+                    self.ctx.resolve_slices(ds, std::slice::from_ref(s), pr.range)?
+                {
+                    visit(refined, PlanSource::Scan(part));
                 }
             }
         }
         self.ctx.note_agg_answered(answered);
+        self.ctx.note_targeted(block_answered);
+        self.ctx.note_blocks(covered_blocks, pruned_blocks);
         Ok(())
     }
 
@@ -553,9 +676,12 @@ impl Coordinator {
         ds: &Dataset,
         ranges: &[PrunedRange],
         column: usize,
+        block_preds: Option<&[ColumnPredicate]>,
     ) -> Result<Vec<(crate::index::PartitionSlice, PlanSource)>> {
         let mut items = Vec::new();
-        self.for_each_plan_slice(ds, ranges, column, |s, src| items.push((s, src)))?;
+        self.for_each_plan_slice(ds, ranges, column, block_preds, |s, src| {
+            items.push((s, src))
+        })?;
         Ok(items)
     }
 
@@ -693,6 +819,8 @@ impl Coordinator {
         let mut filter_pruned = 0usize;
         let mut agg_answered = 0usize;
         let mut rows_avoided = 0usize;
+        let mut blocks_covered = 0usize;
+        let mut blocks_pruned = 0usize;
 
         for pq in &plan {
             let mut slices = index.lookup(pq.range);
@@ -717,6 +845,21 @@ impl Coordinator {
                         filter_pruned += 1;
                     }
                     keep
+                });
+                // Block-level pre-check (the same classification the
+                // plan layer books): a survivor whose every block the
+                // conjunction rules out contributes nothing to any
+                // segment — drop it before resolve, so a cold partition
+                // with a hostile block grid is never faulted in.
+                slices.retain(|s| {
+                    match plan::block_counts_for(ds, s, pq.range, predicates, column) {
+                        Some(c) if c.scanned == 0 => {
+                            blocks_pruned += c.pruned;
+                            rows_avoided += c.rows_avoided;
+                            false
+                        }
+                        _ => true,
+                    }
                 });
             }
             partitions_touched += slices.len();
@@ -759,6 +902,28 @@ impl Coordinator {
                                 let rs = part.lower_bound(seg.lo).max(slice.row_start);
                                 let re = part.upper_bound(seg.hi).min(slice.row_end);
                                 if rs < re {
+                                    // Book the block classification the
+                                    // worker's assisted fold will apply
+                                    // to this sub-slice. (rs, re) come
+                                    // from the partition's actual keys,
+                                    // so the bounds are exact; a block
+                                    // wholly inside them belongs to this
+                                    // segment alone, which is what makes
+                                    // merging its partial demux-safe.
+                                    let sub = crate::index::PartitionSlice {
+                                        partition: slice.partition,
+                                        row_start: rs,
+                                        row_end: re,
+                                    };
+                                    // Not booked into `rows_avoided`:
+                                    // the partition is resolved either
+                                    // way, so its bytes were read.
+                                    if let Some(c) = plan::block_counts_for(
+                                        ds, &sub, *seg, predicates, column,
+                                    ) {
+                                        blocks_covered += c.covered;
+                                        blocks_pruned += c.pruned;
+                                    }
                                     items.push((
                                         slice.partition,
                                         BatchItem::Scan(
@@ -779,6 +944,7 @@ impl Coordinator {
             }
         }
         self.ctx.note_agg_answered(agg_answered);
+        self.ctx.note_blocks(blocks_covered, blocks_pruned);
 
         let batch = self.batch_kernel_calls;
         let net = self.cluster.net;
@@ -794,7 +960,7 @@ impl Coordinator {
                         out.push(match item {
                             BatchItem::Sketch(seg, m) => (*seg, *m),
                             BatchItem::Scan(part, seg, rs, re) => {
-                                let m = slice_moments_filtered(
+                                let m = assisted_slice_moments(
                                     backend.as_ref(),
                                     part,
                                     *rs,
@@ -863,6 +1029,8 @@ impl Coordinator {
             agg_answered,
             rows_avoided,
             bytes_avoided: rows_avoided * ds.schema().row_bytes(),
+            blocks_covered,
+            blocks_pruned,
             tasks: n_tasks,
             faults: store_delta.faults,
             evictions: store_delta.evictions,
@@ -898,6 +1066,7 @@ impl Coordinator {
         items: Vec<(crate::index::PartitionSlice, PlanSource)>,
         column: usize,
         predicates: &[ColumnPredicate],
+        block_assist: bool,
     ) -> Result<PeriodStats> {
         let groups = self
             .cluster
@@ -916,6 +1085,16 @@ impl Coordinator {
                     for (s, src) in &group {
                         m = m.merge(match src {
                             PlanSource::Sketch(sk) => sk.moments,
+                            PlanSource::Blocks(partial) => *partial,
+                            PlanSource::Scan(part) if block_assist => assisted_slice_moments(
+                                backend.as_ref(),
+                                part,
+                                s.row_start,
+                                s.row_end,
+                                column,
+                                &preds,
+                                batch,
+                            )?,
                             PlanSource::Scan(part) => slice_moments_filtered(
                                 backend.as_ref(),
                                 part,
@@ -1490,8 +1669,12 @@ mod tests {
         // bit-identical result, because a sketch partial IS the partial
         // the scan computes, merged in the same structure.
         store.shrink(usize::MAX).unwrap();
-        let opts =
-            PlanOptions { zone_pruning: true, filter_pruning: true, agg_pushdown: false };
+        let opts = PlanOptions {
+            zone_pruning: true,
+            filter_pruning: true,
+            agg_pushdown: false,
+            block_pruning: false,
+        };
         let oracle_plan = plan_query_opts(&ds, index.as_ref(), &query, opts).unwrap();
         assert_eq!(oracle_plan.explain.agg_answered, 0);
         let before = store.counters();

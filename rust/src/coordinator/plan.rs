@@ -30,6 +30,7 @@
 //! considered / key-pruned / zone-pruned / targeted, estimated bytes) for
 //! the CLI, the server's `explain` op, and the pruning bench.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::analysis::{DistanceResult, PeriodStats};
@@ -37,10 +38,11 @@ use crate::coordinator::planner::plan_batch;
 use crate::engine::Dataset;
 use crate::error::{OsebaError, Result};
 use crate::index::{
-    zones_satisfiable, ColumnPredicate, ContentIndex, PartitionSlice, PredOp, RangeQuery,
+    count_block_classes, usable_blocks, zones_satisfiable, BlockCounts, BlockSketches,
+    ColumnPredicate, ContentIndex, PartitionSlice, PredOp, RangeQuery,
 };
 use crate::metrics::phase_mark;
-use crate::storage::Schema;
+use crate::storage::{Schema, BLOCK_ROWS};
 use crate::util::json::Json;
 
 /// The analysis an optimized query executes over its selection.
@@ -170,11 +172,21 @@ pub struct PlanOptions {
     pub filter_pruning: bool,
     /// Answer fully-covered partitions from their aggregate sketches.
     pub agg_pushdown: bool,
+    /// Classify scan-path `Stats` slices at kernel-block granularity:
+    /// interior blocks of an edge partition are answered from their
+    /// retained block partials, and blocks whose block-level zones cannot
+    /// satisfy the predicate conjunction are skipped.
+    pub block_pruning: bool,
 }
 
 impl Default for PlanOptions {
     fn default() -> Self {
-        PlanOptions { zone_pruning: true, filter_pruning: true, agg_pushdown: true }
+        PlanOptions {
+            zone_pruning: true,
+            filter_pruning: true,
+            agg_pushdown: true,
+            block_pruning: true,
+        }
     }
 }
 
@@ -214,11 +226,25 @@ pub struct Explain {
     /// row_bytes`).
     pub bytes_avoided: usize,
     /// Upper-bound rows execution will actually read (pre-mask; covered
-    /// partitions excluded).
+    /// partitions and covered/pruned blocks excluded).
     pub estimated_rows: usize,
     /// Upper-bound raw bytes execution will actually read (`rows ×
     /// row_bytes`).
     pub estimated_bytes: usize,
+    /// Kernel blocks the hierarchy classified across scan-path slices
+    /// (always `blocks_covered + blocks_pruned + blocks_scanned`).
+    pub blocks_considered: usize,
+    /// Classified blocks answered by merging their retained seal-time
+    /// partial — the edge-partition interior the hierarchy rescues from
+    /// the scan path. Their rows land in [`Self::rows_avoided`].
+    pub blocks_covered: usize,
+    /// Classified blocks skipped because their block-level zones cannot
+    /// satisfy the predicate conjunction. Rows also in
+    /// [`Self::rows_avoided`].
+    pub blocks_pruned: usize,
+    /// Classified blocks execution must still fold row-by-row (remainder
+    /// blocks of an edge, predicate-satisfiable blocks).
+    pub blocks_scanned: usize,
 }
 
 impl Explain {
@@ -247,6 +273,15 @@ impl Explain {
                 self.agg_answered, self.rows_avoided, self.bytes_avoided,
             ));
         }
+        if self.blocks_considered > 0 {
+            line.push_str(&format!(
+                " | blocks: {} covered, {} pruned, {} scanned of {}",
+                self.blocks_covered,
+                self.blocks_pruned,
+                self.blocks_scanned,
+                self.blocks_considered,
+            ));
+        }
         line
     }
 
@@ -266,6 +301,10 @@ impl Explain {
             ("bytes_avoided", Json::num(self.bytes_avoided as f64)),
             ("estimated_rows", Json::num(self.estimated_rows as f64)),
             ("estimated_bytes", Json::num(self.estimated_bytes as f64)),
+            ("blocks_considered", Json::num(self.blocks_considered as f64)),
+            ("blocks_covered", Json::num(self.blocks_covered as f64)),
+            ("blocks_pruned", Json::num(self.blocks_pruned as f64)),
+            ("blocks_scanned", Json::num(self.blocks_scanned as f64)),
         ])
     }
 }
@@ -285,6 +324,9 @@ pub struct PlanTimings {
     pub filter_pruning: Duration,
     /// Sketch coverage classification of surviving slices.
     pub sketch_classify: Duration,
+    /// Kernel-block classification (covered / pruned / scanned) of the
+    /// slices the sketch stage left on the scan path.
+    pub block_classify: Duration,
 }
 
 /// A lowered query: merged ranges with surviving slices (plus the baseline
@@ -299,6 +341,10 @@ pub struct PhysicalPlan {
     pub explain: Explain,
     /// Wall-clock per optimizer phase (observability only).
     pub timings: PlanTimings,
+    /// Whether kernel-block classification ran on this lowering (`Stats`
+    /// op with [`PlanOptions::block_pruning`] on). Execution and
+    /// [`Self::verify`] replay the identical classification when set.
+    pub block_assist: bool,
 }
 
 /// Plan identity is structural — ranges, baseline, explain. `timings` is
@@ -332,7 +378,10 @@ impl PhysicalPlan {
     /// `agg_answered`, `estimated_rows` and `rows_avoided` are recomputed
     /// from the plan itself; `considered = targeted + zone_pruned +
     /// filter_pruned`; the byte figures are the row figures times the
-    /// schema row width.
+    /// schema row width. When [`Self::block_assist`] is set the kernel-
+    /// block classification is replayed slice by slice and the block
+    /// counts must match, including `blocks_covered + blocks_pruned +
+    /// blocks_scanned = blocks_considered`.
     ///
     /// Pure metadata — no partition is read or faulted in. Called on every
     /// plan in debug builds; the server's `explain` op exposes it in
@@ -346,6 +395,7 @@ impl PhysicalPlan {
         let mut agg_answered = 0usize;
         let mut est_rows = 0usize;
         let mut rows_avoided = 0usize;
+        let mut blocks = BlockCounts::default();
         for (label, ranges, covered_allowed) in [
             ("selection", &self.ranges, sketchable),
             ("baseline", &self.baseline, false),
@@ -421,6 +471,18 @@ impl PhysicalPlan {
                 for s in &pr.slices {
                     if pr.is_covered(s.partition) {
                         rows_avoided += s.rows();
+                    } else if let Some(b) = self
+                        .block_assist
+                        .then(|| block_counts_for(ds, s, pr.range, &query.predicates, column))
+                        .flatten()
+                    {
+                        // Replay the exact block classification the
+                        // lowering ran (same helper, same inputs).
+                        blocks.covered += b.covered;
+                        blocks.pruned += b.pruned;
+                        blocks.scanned += b.scanned;
+                        rows_avoided += b.rows_avoided;
+                        est_rows += b.rows_scanned;
                     } else {
                         est_rows += s.rows();
                     }
@@ -438,6 +500,14 @@ impl PhysicalPlan {
             ("rows_avoided", ex.rows_avoided, rows_avoided),
             ("estimated_bytes", ex.estimated_bytes, ex.estimated_rows * row_bytes),
             ("bytes_avoided", ex.bytes_avoided, ex.rows_avoided * row_bytes),
+            ("blocks_covered", ex.blocks_covered, blocks.covered),
+            ("blocks_pruned", ex.blocks_pruned, blocks.pruned),
+            ("blocks_scanned", ex.blocks_scanned, blocks.scanned),
+            (
+                "blocks_considered",
+                ex.blocks_considered,
+                ex.blocks_covered + ex.blocks_pruned + ex.blocks_scanned,
+            ),
         ];
         for (name, got, want) in checks {
             if got != want {
@@ -527,6 +597,54 @@ pub(crate) fn covered_in(
     Some((idx, rows, sketch))
 }
 
+/// The one block-hierarchy decision the plan layer, [`PhysicalPlan::verify`]
+/// and the executor all share, so their classifications can never drift:
+/// `Some((blocks, rows, cover_ok))` when the slice's partition has usable
+/// block sketches — present, non-empty, and at the kernel block size
+/// ([`BLOCK_ROWS`]), so planner metadata and any faulted-in partition
+/// describe the same grid — *and* the slice bounds are exact. A
+/// whole-partition slice is conservative (an unknown-step index returns
+/// it unrefined; resolve narrows it against the actual keys later), so
+/// it is trusted only when the partition's key bounds are contained in
+/// `range`, which makes the refinement the identity. `cover_ok` says
+/// whether whole in-range blocks may be *covered* (answered by merging
+/// their retained partial), which needs a predicate-free selection and
+/// partials for the analysis column. Pure metadata on every backing —
+/// cold slots classify before fault-in.
+pub(crate) fn block_assist_for(
+    ds: &Dataset,
+    s: &PartitionSlice,
+    range: RangeQuery,
+    predicates: &[ColumnPredicate],
+    column: usize,
+) -> Option<(Arc<BlockSketches>, usize, bool)> {
+    let (kmin, kmax, rows) = ds.partition_bounds(s.partition)?;
+    let exact = s.row_start > 0
+        || s.row_end < rows
+        || (range.lo <= kmin && kmax <= range.hi);
+    if !exact {
+        return None;
+    }
+    let blocks = usable_blocks(ds.block_sketches(s.partition), BLOCK_ROWS)?;
+    let cover_ok = predicates.is_empty() && column < blocks.num_columns();
+    Some((blocks, rows, cover_ok))
+}
+
+/// Block-classification arithmetic of one scan-path slice (`None` when
+/// its partition has no usable hierarchy or the slice is conservative):
+/// what [`prune_ranges`] books into [`Explain`] and
+/// [`PhysicalPlan::verify`] recomputes.
+pub(crate) fn block_counts_for(
+    ds: &Dataset,
+    s: &PartitionSlice,
+    range: RangeQuery,
+    predicates: &[ColumnPredicate],
+    column: usize,
+) -> Option<BlockCounts> {
+    let (blocks, rows, cover_ok) = block_assist_for(ds, s, range, predicates, column)?;
+    Some(count_block_classes(&blocks, rows, s.row_start, s.row_end, predicates, cover_ok))
+}
+
 /// Key-target, zone-prune and (for sketch-answerable ops) classify one set
 /// of ranges, accumulating counts into `ex` and per-phase wall time into
 /// `timings`. `agg_column` is `Some(column)` when covered partitions may
@@ -540,6 +658,7 @@ fn prune_ranges(
     zone_pruning: bool,
     filter_pruning: bool,
     agg_column: Option<usize>,
+    block_column: Option<usize>,
     seen: &mut [bool],
     ex: &mut Explain,
     timings: &mut PlanTimings,
@@ -591,6 +710,7 @@ fn prune_ranges(
         // Phase 4 — sketch classification: covered survivors are answered
         // from their aggregate sketches, the rest go to the scan path.
         let mut covered = Vec::new();
+        let mut edges = Vec::new();
         for s in &survivors {
             ex.targeted += 1;
             match agg_column
@@ -602,10 +722,30 @@ fn prune_ranges(
                     ex.rows_avoided += s.rows();
                     covered.push(s.partition);
                 }
+                None => edges.push(*s),
+            }
+        }
+        let mark = phase_mark(&mut timings.sketch_classify, mark);
+        // Phase 5 — block classification: slices the sketch stage left on
+        // the scan path drop to kernel-block granularity. Interior blocks
+        // of an edge partition merge their retained partials (covered);
+        // blocks whose block-level zones cannot satisfy the conjunction
+        // are skipped (pruned); only the rest book estimated rows. Pure
+        // metadata — cold partitions classify before any fault-in.
+        for s in &edges {
+            match block_column.and_then(|c| block_counts_for(ds, s, pq.range, predicates, c)) {
+                Some(b) => {
+                    ex.blocks_considered += b.considered();
+                    ex.blocks_covered += b.covered;
+                    ex.blocks_pruned += b.pruned;
+                    ex.blocks_scanned += b.scanned;
+                    ex.rows_avoided += b.rows_avoided;
+                    ex.estimated_rows += b.rows_scanned;
+                }
                 None => ex.estimated_rows += s.rows(),
             }
         }
-        phase_mark(&mut timings.sketch_classify, mark);
+        phase_mark(&mut timings.block_classify, mark);
         // Lookup yields the compressed region in id order but ASL entries
         // in *key* order — sort so `is_covered` can binary-search.
         covered.sort_unstable();
@@ -633,7 +773,12 @@ pub fn plan_query(
         ds,
         index,
         query,
-        PlanOptions { zone_pruning: prune, filter_pruning: prune, agg_pushdown: true },
+        PlanOptions {
+            zone_pruning: prune,
+            filter_pruning: prune,
+            agg_pushdown: true,
+            block_pruning: true,
+        },
     )
 }
 
@@ -701,6 +846,15 @@ pub fn plan_query_opts(
         }
         _ => None,
     };
+    // Block classification applies to `Stats` only, like the sketch
+    // stage, but survives a `where` clause: a masked fold still skips
+    // blocks whose block-level zones rule the conjunction out. Trend and
+    // distance read raw ordered rows, so dropping interior blocks would
+    // corrupt them.
+    let block_column = match query.op {
+        QueryOp::Stats { column } if opts.block_pruning => Some(column),
+        _ => None,
+    };
     let mut ex = Explain { partitions: ds.num_partitions(), ..Explain::default() };
     let mut seen = vec![false; ex.partitions];
     let mut timings = PlanTimings::default();
@@ -712,6 +866,7 @@ pub fn plan_query_opts(
         zone_pruning,
         filter_pruning,
         agg_column,
+        block_column,
         &mut seen,
         &mut ex,
         &mut timings,
@@ -732,6 +887,7 @@ pub fn plan_query_opts(
                 zone_pruning,
                 filter_pruning,
                 None,
+                None,
                 &mut seen,
                 &mut ex,
                 &mut timings,
@@ -743,7 +899,13 @@ pub fn plan_query_opts(
     let row_bytes = ds.schema().row_bytes();
     ex.estimated_bytes = ex.estimated_rows * row_bytes;
     ex.bytes_avoided = ex.rows_avoided * row_bytes;
-    let plan = PhysicalPlan { ranges, baseline, explain: ex, timings };
+    let plan = PhysicalPlan {
+        ranges,
+        baseline,
+        explain: ex,
+        timings,
+        block_assist: block_column.is_some(),
+    };
     // Every lowering self-checks in debug builds (tests, benches run with
     // `--release` skip it; the server's `explain {verify}` runs it on
     // demand in any build).
@@ -875,8 +1037,12 @@ mod tests {
 
         // The oracle arm keeps everything the zones keep and probes no
         // filter bytes.
-        let opts =
-            PlanOptions { zone_pruning: true, filter_pruning: false, agg_pushdown: true };
+        let opts = PlanOptions {
+            zone_pruning: true,
+            filter_pruning: false,
+            agg_pushdown: true,
+            block_pruning: true,
+        };
         let plan = plan_query_opts(&ds, &index, &q, opts).unwrap();
         assert_eq!(plan.explain.filter_pruned, 0);
         assert_eq!(plan.explain.filter_bytes, 0);
@@ -908,26 +1074,100 @@ mod tests {
         assert_eq!(plan.explain.bytes_avoided, 250 * ds.schema().row_bytes());
         assert_eq!(plan.explain.estimated_rows, 0);
         assert_eq!(plan.explain.estimated_bytes, 0);
+        assert_eq!(plan.explain.blocks_considered, 0, "covered slices skip blocks");
         assert_eq!(plan.ranges[0].covered, vec![0]);
         assert!(plan.ranges[0].is_covered(0));
         assert!(plan.baseline.is_empty());
 
         // Shrinking the range by one key turns it into an edge: the
-        // partition must now be scanned (and the estimates book it).
+        // remainder block must now be scanned (and the estimates book it).
         let q = Query::stats(RangeQuery { lo: 0, hi: 2_480 }, 0);
         let plan = plan_query(&ds, &index, &q, true).unwrap();
         assert_eq!(plan.explain.agg_answered, 0);
         assert_eq!(plan.explain.estimated_rows, 249);
+        assert_eq!(plan.explain.blocks_considered, 1, "250 rows fit one block");
+        assert_eq!(plan.explain.blocks_scanned, 1);
         assert!(plan.ranges[0].covered.is_empty());
 
-        // The oracle arm forces the covered partition down the scan path.
+        // With sketch pushdown off but block assist on, the hierarchy
+        // still answers the fully-contained block from its partial.
         let q = Query::stats(RangeQuery { lo: 0, hi: 2_490 }, 0);
-        let opts =
-            PlanOptions { zone_pruning: true, filter_pruning: true, agg_pushdown: false };
+        let opts = PlanOptions {
+            zone_pruning: true,
+            filter_pruning: true,
+            agg_pushdown: false,
+            block_pruning: true,
+        };
+        let plan = plan_query_opts(&ds, &index, &q, opts).unwrap();
+        assert_eq!(plan.explain.agg_answered, 0);
+        assert_eq!(plan.explain.blocks_covered, 1);
+        assert_eq!(plan.explain.estimated_rows, 0);
+        assert_eq!(plan.explain.rows_avoided, 250);
+        assert!(plan.ranges[0].covered.is_empty());
+
+        // The full oracle arm forces the partition down the scan path.
+        let opts = PlanOptions {
+            zone_pruning: true,
+            filter_pruning: true,
+            agg_pushdown: false,
+            block_pruning: false,
+        };
         let plan = plan_query_opts(&ds, &index, &q, opts).unwrap();
         assert_eq!(plan.explain.agg_answered, 0);
         assert_eq!(plan.explain.estimated_rows, 250);
+        assert_eq!(plan.explain.blocks_considered, 0);
         assert!(plan.ranges[0].covered.is_empty());
+        assert!(!plan.block_assist);
+    }
+
+    #[test]
+    fn block_classification_books_edges_and_predicates() {
+        // One partition spanning three kernel blocks (4096 + 4096 + 1808
+        // rows), price = row index, keys stepping by 10.
+        let mut b = BatchBuilder::new(Schema::stock());
+        for i in 0..(2 * BLOCK_ROWS + 1808) {
+            b.push(i as i64 * 10, &[i as f32, 7.0]);
+        }
+        let ctx = OsebaContext::new(ContextConfig { num_workers: 2, memory_budget: None });
+        let ds = ctx.load(b.finish().unwrap(), 1).unwrap();
+        let index = Cias::build(ds.partitions()).unwrap();
+
+        // An edge range covering rows 0..6000: block 0 is fully interior
+        // (answered from its partial), block 1 is the remainder scan,
+        // block 2 is outside the selection.
+        let q = Query::stats(RangeQuery { lo: 0, hi: 59_990 }, 0);
+        let plan = plan_query(&ds, &index, &q, true).unwrap();
+        assert!(plan.block_assist);
+        assert_eq!(plan.explain.agg_answered, 0);
+        assert_eq!(plan.explain.blocks_considered, 2);
+        assert_eq!(plan.explain.blocks_covered, 1);
+        assert_eq!(plan.explain.blocks_pruned, 0);
+        assert_eq!(plan.explain.blocks_scanned, 1);
+        assert_eq!(plan.explain.rows_avoided, BLOCK_ROWS);
+        assert_eq!(plan.explain.estimated_rows, 6000 - BLOCK_ROWS);
+        assert!(plan.explain.line().contains("blocks: 1 covered"), "{}", plan.explain.line());
+
+        // A predicate only the last block can satisfy prunes the first
+        // two at block granularity even though the partition-level zone
+        // map keeps the partition.
+        let q = Query::stats(RangeQuery { lo: 0, hi: i64::MAX }, 0)
+            .filtered(vec![pred(0, PredOp::Gt, 8200.0)]);
+        let plan = plan_query(&ds, &index, &q, true).unwrap();
+        assert_eq!(plan.explain.zone_pruned, 0);
+        assert_eq!(plan.explain.targeted, 1);
+        assert_eq!(plan.explain.blocks_considered, 3);
+        assert_eq!(plan.explain.blocks_pruned, 2);
+        assert_eq!(plan.explain.blocks_covered, 0, "predicates disable coverage");
+        assert_eq!(plan.explain.blocks_scanned, 1);
+        assert_eq!(plan.explain.rows_avoided, 2 * BLOCK_ROWS);
+        assert_eq!(plan.explain.estimated_rows, 1808);
+
+        // The off arm books the whole slice as a scan.
+        let opts = PlanOptions { block_pruning: false, ..PlanOptions::default() };
+        let plan = plan_query_opts(&ds, &index, &q, opts).unwrap();
+        assert!(!plan.block_assist);
+        assert_eq!(plan.explain.blocks_considered, 0);
+        assert_eq!(plan.explain.estimated_rows, 2 * BLOCK_ROWS + 1808);
     }
 
     #[test]
@@ -1046,6 +1286,8 @@ mod tests {
         assert!(j.contains("\"targeted\":1"), "{j}");
         assert!(j.contains("\"filter_pruned\":0"), "{j}");
         assert!(j.contains("\"filter_bytes\":"), "{j}");
+        assert!(j.contains("\"blocks_considered\":0"), "{j}");
+        assert!(j.contains("\"blocks_pruned\":0"), "{j}");
     }
 
     #[test]
@@ -1106,11 +1348,14 @@ mod tests {
         ];
         for q in &queries {
             for (zp, ap) in [(true, true), (true, false), (false, true), (false, false)] {
-                for fp in [true, false] {
+                for (fp, bp) in
+                    [(true, true), (true, false), (false, true), (false, false)]
+                {
                     let opts = PlanOptions {
                         zone_pruning: zp,
                         filter_pruning: fp,
                         agg_pushdown: ap,
+                        block_pruning: bp,
                     };
                     let plan = plan_query_opts(&ds, &index, q, opts).unwrap();
                     plan.verify(&ds, q).unwrap();
@@ -1268,6 +1513,7 @@ mod tests {
                     zone_pruning: rng.below(2) == 0,
                     filter_pruning: rng.below(2) == 0,
                     agg_pushdown: rng.below(2) == 0,
+                    block_pruning: rng.below(2) == 0,
                 };
                 let plan = plan_query_opts(&ds, &index, &query, opts)
                     .unwrap_or_else(|e| panic!("seed {seed} case {case}: plan failed: {e}"));

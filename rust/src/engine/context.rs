@@ -44,6 +44,12 @@ pub struct EngineCounters {
     /// Targeted partitions answered from their aggregate sketches —
     /// counted in `partitions_targeted` too, but with zero data touch.
     pub partitions_agg_answered: AtomicUsize,
+    /// Kernel blocks answered by merging their retained seal-time
+    /// partials (block-sketch hierarchy) — zero data touch per block.
+    pub blocks_covered: AtomicUsize,
+    /// Kernel blocks skipped because their block-level zone cannot
+    /// satisfy the query's predicate conjunction.
+    pub blocks_pruned: AtomicUsize,
     /// Server request handlers that died by panic and were caught at the
     /// session boundary (the connection survives; the request errors).
     pub sessions_failed: AtomicUsize,
@@ -58,6 +64,8 @@ impl EngineCounters {
             bytes_materialized: self.bytes_materialized.load(Ordering::Relaxed),
             partitions_targeted: self.partitions_targeted.load(Ordering::Relaxed),
             partitions_agg_answered: self.partitions_agg_answered.load(Ordering::Relaxed),
+            blocks_covered: self.blocks_covered.load(Ordering::Relaxed),
+            blocks_pruned: self.blocks_pruned.load(Ordering::Relaxed),
             sessions_failed: self.sessions_failed.load(Ordering::Relaxed),
         }
     }
@@ -77,6 +85,10 @@ pub struct CounterSnapshot {
     /// Targeted partitions answered from their aggregate sketches
     /// (a subset of `partitions_targeted`; zero data touch).
     pub partitions_agg_answered: usize,
+    /// Kernel blocks answered from retained block-sketch partials.
+    pub blocks_covered: usize,
+    /// Kernel blocks skipped by block-level predicate pruning.
+    pub blocks_pruned: usize,
     /// Server request handlers caught panicking at the session boundary.
     pub sessions_failed: usize,
 }
@@ -516,6 +528,28 @@ impl OsebaContext {
         if n > 0 {
             self.counters.partitions_targeted.fetch_add(n, Ordering::Relaxed);
             self.counters.partitions_agg_answered.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Record `n` slices answered entirely from block partials: their
+    /// partitions count as targeted — the index proposed them — but were
+    /// never resolved, so no fault-in (and no sketch answer) is booked.
+    pub(crate) fn note_targeted(&self, n: usize) {
+        if n > 0 {
+            self.counters.partitions_targeted.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Record block-level outcomes from the sub-partition hierarchy:
+    /// `covered` blocks answered by merging retained partials, `pruned`
+    /// blocks skipped by block-zone predicate checks. Neither touches
+    /// column data.
+    pub(crate) fn note_blocks(&self, covered: usize, pruned: usize) {
+        if covered > 0 {
+            self.counters.blocks_covered.fetch_add(covered, Ordering::Relaxed);
+        }
+        if pruned > 0 {
+            self.counters.blocks_pruned.fetch_add(pruned, Ordering::Relaxed);
         }
     }
 

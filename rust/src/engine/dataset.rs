@@ -214,6 +214,26 @@ impl Dataset {
         }
     }
 
+    /// The per-block sketch hierarchy of one partition — pure metadata,
+    /// like [`Self::sketch`]: resident partitions carry block sketches
+    /// from seal time, a tiered store keeps them in its slot table (they
+    /// survive eviction), so **no fault-in happens here** — the planner
+    /// classifies a Cold partition's blocks before any segment read.
+    /// `None` for an id outside the visible dataset or a store opened
+    /// from a pre-v5 manifest (no hierarchy → every block scans).
+    pub fn block_sketches(
+        &self,
+        partition: usize,
+    ) -> Option<Arc<crate::index::BlockSketches>> {
+        if self.hidden(partition) {
+            return None;
+        }
+        match &self.store {
+            Some(st) => st.block_sketches(partition),
+            None => self.parts.get(partition).map(|p| Arc::clone(&p.block_sketches)),
+        }
+    }
+
     /// Total resident footprint of the membership filters across visible
     /// partitions, in bytes — the metadata cost `explain`/`info` surface
     /// as `filter_bytes`.

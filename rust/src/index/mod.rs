@@ -18,6 +18,8 @@ pub use cias::Cias;
 pub use filter::{filters_of, FilterBuilder, MembershipFilter};
 pub use table::TableIndex;
 pub use types::{
-    row_matches, sketches_of, zones_satisfiable, ColumnPredicate, ColumnSketch,
-    ContentIndex, PartitionMeta, PartitionSlice, PredOp, RangeQuery, ZoneMap,
+    count_block_classes, for_each_block_class, row_matches, sketches_of,
+    sketches_with_blocks, usable_blocks, zones_satisfiable, BlockClass, BlockCounts,
+    BlockSketches, ColumnPredicate, ColumnSketch, ContentIndex, PartitionMeta,
+    PartitionSlice, PredOp, RangeQuery, ZoneMap,
 };

@@ -4,6 +4,8 @@
 //! from, and the [`ContentIndex`] trait both index implementations
 //! satisfy.
 
+use std::sync::Arc;
+
 use crate::error::{OsebaError, Result};
 use crate::util::stats::{fold_stats_f32, Moments, TrendPartial};
 
@@ -159,17 +161,34 @@ impl ColumnSketch {
     /// [`crate::storage::BLOCK_ROWS`] so the partial matches the scan
     /// path's block decomposition exactly.
     pub fn of(keys: &[i64], values: &[f32], block_rows: usize) -> ColumnSketch {
+        ColumnSketch::with_blocks(keys, values, block_rows).0
+    }
+
+    /// [`Self::of`], also **retaining** the per-block [`Moments`] partials
+    /// the merged sketch is folded from (one per `block_rows` chunk of the
+    /// valid rows, in block order). The merged sketch is exactly the
+    /// fixed-order merge of the returned partials, so answering a block
+    /// from its partial is bit-identical to scanning it — the invariant
+    /// the sub-partition (block-sketch) pushdown rests on.
+    pub fn with_blocks(
+        keys: &[i64],
+        values: &[f32],
+        block_rows: usize,
+    ) -> (ColumnSketch, Vec<Moments>) {
         let rows = keys.len().min(values.len());
         let values = &values[..rows];
-        let mut moments = Moments::EMPTY;
-        for block in values.chunks(block_rows.max(1)) {
-            let (mx, mn, sum, sumsq, nans) = fold_stats_f32(block);
-            let mut m =
-                Moments::from_kernel(mx, mn, sum, sumsq, (block.len() - nans) as f32);
-            m.nans = nans as f64;
-            moments = moments.merge(m);
-        }
-        ColumnSketch { moments, trend: TrendPartial::scan(keys, values) }
+        let blocks: Vec<Moments> = values
+            .chunks(block_rows.max(1))
+            .map(|block| {
+                let (mx, mn, sum, sumsq, nans) = fold_stats_f32(block);
+                let mut m =
+                    Moments::from_kernel(mx, mn, sum, sumsq, (block.len() - nans) as f32);
+                m.nans = nans as f64;
+                m
+            })
+            .collect();
+        let moments = blocks.iter().copied().fold(Moments::EMPTY, Moments::merge);
+        (ColumnSketch { moments, trend: TrendPartial::scan(keys, values) }, blocks)
     }
 
     /// The zone map this sketch subsumes (min/max/nans), for predicate
@@ -193,6 +212,340 @@ pub fn sketches_of(
     block_rows: usize,
 ) -> Vec<ColumnSketch> {
     columns.iter().map(|c| ColumnSketch::of(keys, c, block_rows)).collect()
+}
+
+/// [`sketches_of`] plus the retained [`BlockSketches`] — one fold at seal
+/// time produces both the merged per-partition sketches and the per-block
+/// partials they were merged from.
+pub fn sketches_with_blocks(
+    keys: &[i64],
+    columns: &[Vec<f32>],
+    block_rows: usize,
+) -> (Vec<ColumnSketch>, BlockSketches) {
+    let mut sketches = Vec::with_capacity(columns.len());
+    let mut blocks = Vec::with_capacity(columns.len());
+    for c in columns {
+        let (sk, b) = ColumnSketch::with_blocks(keys, c, block_rows);
+        sketches.push(sk);
+        blocks.push(b);
+    }
+    (sketches, BlockSketches::from_parts(block_rows, blocks))
+}
+
+/// **Sub-partition sketch hierarchy**: the per-block [`Moments`] partials
+/// of every value column of one partition, retained from the seal-time
+/// fold instead of being discarded after the merge (DESIGN.md §15).
+///
+/// Each partial covers one `block_rows`-sized chunk of the partition's
+/// *valid* rows (the last block may be shorter; padding is never folded),
+/// and subsumes a per-block zone map ([`Self::zone`]). Because the
+/// partials come from the same [`fold_stats_f32`] the scan path uses,
+/// answering a fully-selected block by its partial is bit-identical to
+/// scanning it on the native backend.
+///
+/// Like the partition-level sketches and membership filters, block
+/// sketches are metadata: they ride in an `Arc` next to the data (the
+/// partition, the tiered store's slot table, manifest v5) so a cold
+/// partition's blocks can be classified without faulting anything in.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockSketches {
+    /// Rows per block the partials were folded in.
+    block_rows: usize,
+    /// Per-column, per-block partials (`columns[c][b]`); every column has
+    /// the same number of blocks.
+    columns: Vec<Vec<Moments>>,
+}
+
+/// Hard cap on the column count [`BlockSketches::from_bytes`] accepts
+/// (matches the segment codec's width bound).
+const MAX_BLOCK_SKETCH_COLUMNS: usize = 1 << 12;
+/// Hard cap on the per-column block count [`BlockSketches::from_bytes`]
+/// accepts (`MAX_ROWS / BLOCK_ROWS`).
+const MAX_BLOCK_SKETCH_BLOCKS: usize = 1 << 28;
+/// Encoded size of one [`Moments`] partial in the block-sketch codec.
+const MOMENTS_WIRE_BYTES: usize = 4 + 4 + 8 + 8 + 8 + 8;
+
+impl BlockSketches {
+    /// Assemble from per-column partial vectors, as returned by
+    /// [`ColumnSketch::with_blocks`] (every `columns[c]` must hold the
+    /// same number of blocks). Partition construction folds column by
+    /// column and assembles with this; prefer [`sketches_with_blocks`]
+    /// when the columns are already gathered.
+    pub fn from_parts(block_rows: usize, columns: Vec<Vec<Moments>>) -> BlockSketches {
+        debug_assert!(
+            columns.windows(2).all(|w| w[0].len() == w[1].len()),
+            "ragged block-sketch columns"
+        );
+        BlockSketches { block_rows, columns }
+    }
+
+    /// Rows per block the partials were folded in.
+    pub fn block_rows(&self) -> usize {
+        self.block_rows
+    }
+
+    /// Number of value columns covered.
+    pub fn num_columns(&self) -> usize {
+        self.columns.len()
+    }
+
+    /// Number of blocks per column (every column has the same count).
+    pub fn num_blocks(&self) -> usize {
+        self.columns.first().map_or(0, Vec::len)
+    }
+
+    /// The partial of one block of one column.
+    pub fn moments(&self, column: usize, block: usize) -> Option<Moments> {
+        self.columns.get(column).and_then(|c| c.get(block)).copied()
+    }
+
+    /// The zone map one block's partial subsumes (min/max/nans), for
+    /// block-level predicate pruning. Out-of-range coordinates yield the
+    /// unbounded-empty sentinel (which satisfies no comparison — callers
+    /// must bounds-check first if they want "unknown → keep").
+    pub fn zone(&self, column: usize, block: usize) -> ZoneMap {
+        let Some(m) = self.moments(column, block) else {
+            return ZoneMap::EMPTY;
+        };
+        if m.is_empty() {
+            return ZoneMap { nans: m.nans as usize, ..ZoneMap::EMPTY };
+        }
+        ZoneMap { min: m.min, max: m.max, nans: m.nans as usize }
+    }
+
+    /// Whether block `block` could hold a row satisfying every predicate
+    /// of the conjunction, judged from its per-block zones alone. A
+    /// predicate on a column the sketches do not cover never prunes.
+    pub fn satisfiable(&self, preds: &[ColumnPredicate], block: usize) -> bool {
+        preds.iter().all(|p| match self.columns.get(p.column) {
+            Some(c) if block < c.len() => p.satisfiable(&self.zone(p.column, block)),
+            _ => true,
+        })
+    }
+
+    /// Resident metadata footprint in bytes (slot-table accounting).
+    pub fn bytes(&self) -> usize {
+        std::mem::size_of::<BlockSketches>()
+            + self
+                .columns
+                .iter()
+                .map(|c| c.len() * std::mem::size_of::<Moments>())
+                .sum::<usize>()
+    }
+
+    /// Serialize for the manifest's block-sketch section: a fixed little-
+    /// endian layout (`block_rows`, column count, per-column block count,
+    /// then every partial in column-major order). Binary, so non-finite
+    /// partials round-trip exactly — no JSON opt-out like the sketch
+    /// section needs.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let blocks = self.num_blocks();
+        let mut out = Vec::with_capacity(
+            12 + self.columns.len() * blocks * MOMENTS_WIRE_BYTES,
+        );
+        out.extend_from_slice(&(self.block_rows as u32).to_le_bytes());
+        out.extend_from_slice(&(self.columns.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(blocks as u32).to_le_bytes());
+        for col in &self.columns {
+            for m in col {
+                out.extend_from_slice(&m.max.to_le_bytes());
+                out.extend_from_slice(&m.min.to_le_bytes());
+                out.extend_from_slice(&m.sum.to_le_bytes());
+                out.extend_from_slice(&m.sumsq.to_le_bytes());
+                out.extend_from_slice(&m.count.to_le_bytes());
+                out.extend_from_slice(&m.nans.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Decode a [`Self::to_bytes`] payload, validating the header bounds
+    /// and the exact payload length before allocating anything.
+    pub fn from_bytes(bytes: &[u8]) -> Result<BlockSketches> {
+        let err = |msg: &str| OsebaError::Store(format!("block sketches: {msg}"));
+        if bytes.len() < 12 {
+            return Err(err("truncated header"));
+        }
+        let u32_at = |i: usize| {
+            let mut b = [0u8; 4];
+            b.copy_from_slice(&bytes[i..i + 4]);
+            u32::from_le_bytes(b) as usize
+        };
+        let block_rows = u32_at(0);
+        let ncols = u32_at(4);
+        let nblocks = u32_at(8);
+        if block_rows == 0 {
+            return Err(err("block_rows must be > 0"));
+        }
+        if ncols > MAX_BLOCK_SKETCH_COLUMNS {
+            return Err(err("column count out of bounds"));
+        }
+        if nblocks > MAX_BLOCK_SKETCH_BLOCKS {
+            return Err(err("block count out of bounds"));
+        }
+        let want = 12 + ncols * nblocks * MOMENTS_WIRE_BYTES;
+        if bytes.len() != want {
+            return Err(err(&format!(
+                "payload length {} != expected {want}",
+                bytes.len()
+            )));
+        }
+        let f32_at = |i: usize| {
+            let mut b = [0u8; 4];
+            b.copy_from_slice(&bytes[i..i + 4]);
+            f32::from_le_bytes(b)
+        };
+        let f64_at = |i: usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&bytes[i..i + 8]);
+            f64::from_le_bytes(b)
+        };
+        let mut columns = Vec::with_capacity(ncols);
+        let mut pos = 12usize;
+        for _ in 0..ncols {
+            let mut col = Vec::with_capacity(nblocks);
+            for _ in 0..nblocks {
+                col.push(Moments {
+                    max: f32_at(pos),
+                    min: f32_at(pos + 4),
+                    sum: f64_at(pos + 8),
+                    sumsq: f64_at(pos + 16),
+                    count: f64_at(pos + 24),
+                    nans: f64_at(pos + 32),
+                });
+                pos += MOMENTS_WIRE_BYTES;
+            }
+            columns.push(col);
+        }
+        Ok(BlockSketches { block_rows, columns })
+    }
+}
+
+/// How one kernel block of a planned slice is handled by the block-sketch
+/// pushdown (DESIGN.md §15).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockClass {
+    /// Fully selected, predicate-free: answered by merging the retained
+    /// block partial — no data read.
+    Covered,
+    /// The block's zones cannot satisfy the predicate conjunction: no row
+    /// can match, so the block is skipped without being read.
+    Pruned,
+    /// Must be scanned (a partially-selected remainder block, or a block
+    /// whose zones admit matches).
+    Scanned,
+}
+
+/// Walk the kernel blocks of valid rows `[row_start, row_end)` of a
+/// partition holding `rows` valid rows, classifying each block against
+/// its retained sketches: `visit(block, s, e, class)` receives the block
+/// index, the absolute valid-row bounds of the intersection, and the
+/// class. `cover_ok` gates the [`BlockClass::Covered`] answer (only a
+/// predicate-free moments fold may use a partial); block-zone pruning
+/// fires only when `preds` is non-empty. Classification is shared by the
+/// planner (explain arithmetic), the plan verifier, and the executor, so
+/// the three can never disagree.
+pub fn for_each_block_class(
+    blocks: &BlockSketches,
+    rows: usize,
+    row_start: usize,
+    row_end: usize,
+    preds: &[ColumnPredicate],
+    cover_ok: bool,
+    mut visit: impl FnMut(usize, usize, usize, BlockClass),
+) {
+    let row_end = row_end.min(rows);
+    if row_start >= row_end {
+        return;
+    }
+    let br = blocks.block_rows().max(1);
+    let first = row_start / br;
+    let last = ((row_end - 1) / br).min(blocks.num_blocks().saturating_sub(1));
+    for b in first..=last {
+        let bs = b * br;
+        let be = (bs + br).min(rows);
+        let s = row_start.max(bs);
+        let e = row_end.min(be);
+        if s >= e {
+            continue;
+        }
+        let class = if !preds.is_empty() && !blocks.satisfiable(preds, b) {
+            BlockClass::Pruned
+        } else if cover_ok && preds.is_empty() && s == bs && e == be {
+            BlockClass::Covered
+        } else {
+            BlockClass::Scanned
+        };
+        visit(b, s, e, class);
+    }
+}
+
+/// Summed outcome of classifying one slice's blocks — the explain/verify
+/// arithmetic (`covered + pruned + scanned = considered`, and the same
+/// identity over rows).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BlockCounts {
+    /// Blocks answered from their retained partial.
+    pub covered: usize,
+    /// Blocks skipped by block-zone pruning.
+    pub pruned: usize,
+    /// Blocks that must be scanned.
+    pub scanned: usize,
+    /// Selected rows inside covered or pruned blocks (not folded by a scan).
+    pub rows_avoided: usize,
+    /// Selected rows inside scanned blocks.
+    pub rows_scanned: usize,
+}
+
+impl BlockCounts {
+    /// Total blocks the slice intersects.
+    pub fn considered(&self) -> usize {
+        self.covered + self.pruned + self.scanned
+    }
+}
+
+/// Classify a slice's blocks and return only the counts (the plan-time /
+/// verify-time arithmetic; the executor uses [`for_each_block_class`]
+/// directly). `blocks` sketches whose `block_rows` disagree with the
+/// caller's kernel block size must be rejected by the caller beforehand.
+pub fn count_block_classes(
+    blocks: &BlockSketches,
+    rows: usize,
+    row_start: usize,
+    row_end: usize,
+    preds: &[ColumnPredicate],
+    cover_ok: bool,
+) -> BlockCounts {
+    let mut counts = BlockCounts::default();
+    for_each_block_class(blocks, rows, row_start, row_end, preds, cover_ok, |_, s, e, class| {
+        match class {
+            BlockClass::Covered => {
+                counts.covered += 1;
+                counts.rows_avoided += e - s;
+            }
+            BlockClass::Pruned => {
+                counts.pruned += 1;
+                counts.rows_avoided += e - s;
+            }
+            BlockClass::Scanned => {
+                counts.scanned += 1;
+                counts.rows_scanned += e - s;
+            }
+        }
+    });
+    counts
+}
+
+/// An `Arc`'d [`BlockSketches`] usable with kernel block size
+/// `block_rows`, or `None` when absent or mis-sized — the conservative
+/// "no block sketches → scan" gate every consumer goes through (a
+/// manifest written with a different block size must not steer a scan
+/// decomposed at this build's [`crate::storage::BLOCK_ROWS`]).
+pub fn usable_blocks(
+    blocks: Option<Arc<BlockSketches>>,
+    block_rows: usize,
+) -> Option<Arc<BlockSketches>> {
+    blocks.filter(|b| b.block_rows() == block_rows && b.num_blocks() > 0)
 }
 
 /// Comparison operator of a value predicate.
@@ -435,6 +788,194 @@ mod tests {
         assert_eq!(sks[1].moments.min, 5.0);
         assert!((sks[0].trend.slope().unwrap() - 0.1).abs() < 1e-9);
         assert_eq!(sks[1].trend.slope(), Some(0.0), "flat column fits a flat line");
+    }
+
+    #[test]
+    fn block_sketches_retain_the_fold_the_merged_sketch_uses() {
+        // The merged sketch must be exactly the fixed-order merge of the
+        // retained partials — the invariant covered-block answers rest on.
+        let keys: Vec<i64> = (0..10_000).collect();
+        let cols = vec![
+            (0..10_000)
+                .map(|i| if i % 997 == 0 { f32::NAN } else { (i % 173) as f32 })
+                .collect::<Vec<f32>>(),
+            (0..10_000).map(|i| (i as f32).sin() * 40.0).collect(),
+        ];
+        let block = 4096usize;
+        let (sks, blocks) = sketches_with_blocks(&keys, &cols, block);
+        assert_eq!(sks, sketches_of(&keys, &cols, block));
+        assert_eq!(blocks.block_rows(), block);
+        assert_eq!(blocks.num_columns(), 2);
+        assert_eq!(blocks.num_blocks(), 10_000usize.div_ceil(block));
+        for (c, sk) in sks.iter().enumerate() {
+            let merged = (0..blocks.num_blocks())
+                .map(|b| blocks.moments(c, b).unwrap())
+                .fold(Moments::EMPTY, Moments::merge);
+            assert_eq!(merged, sk.moments, "column {c}");
+            // Each partial matches a direct kernel fold of its block.
+            for (b, chunk) in cols[c].chunks(block).enumerate() {
+                let (mx, mn, sum, sumsq, nans) = fold_stats_f32(chunk);
+                let mut want =
+                    Moments::from_kernel(mx, mn, sum, sumsq, (chunk.len() - nans) as f32);
+                want.nans = nans as f64;
+                assert_eq!(blocks.moments(c, b), Some(want), "col {c} block {b}");
+            }
+        }
+        // Per-block zones subsume the partials; out-of-range is empty.
+        let z = blocks.zone(0, 0);
+        assert_eq!(z.max, 172.0);
+        assert!(blocks.zone(0, 99).is_empty());
+        assert!(blocks.zone(9, 0).is_empty());
+        assert!(blocks.bytes() > 0);
+        assert_eq!(blocks.moments(0, 99), None);
+    }
+
+    #[test]
+    fn block_sketches_codec_round_trips_including_non_finite() {
+        let keys: Vec<i64> = (0..9_000).collect();
+        let cols = vec![
+            (0..9_000).map(|i| (i % 59) as f32).collect::<Vec<f32>>(),
+            vec![f32::NAN; 9_000], // all-NaN column → sentinel bounds
+        ];
+        let (_, blocks) = sketches_with_blocks(&keys, &cols, 4096);
+        let bytes = blocks.to_bytes();
+        let back = BlockSketches::from_bytes(&bytes).unwrap();
+        assert_eq!(back, blocks);
+        // Empty sketch set round-trips too.
+        let (_, empty) = sketches_with_blocks(&[], &[], 4096);
+        assert_eq!(BlockSketches::from_bytes(&empty.to_bytes()).unwrap(), empty);
+    }
+
+    #[test]
+    fn block_sketches_codec_rejects_garbage() {
+        let keys: Vec<i64> = (0..100).collect();
+        let cols = vec![(0..100).map(|i| i as f32).collect::<Vec<f32>>()];
+        let (_, blocks) = sketches_with_blocks(&keys, &cols, 64);
+        let good = blocks.to_bytes();
+
+        // Truncated header and truncated payload.
+        assert!(BlockSketches::from_bytes(&good[..4]).is_err());
+        assert!(BlockSketches::from_bytes(&good[..good.len() - 1]).is_err());
+        // Trailing junk.
+        let mut long = good.clone();
+        long.push(0);
+        assert!(BlockSketches::from_bytes(&long).is_err());
+        // Zero block_rows.
+        let mut zeroed = good.clone();
+        zeroed[..4].copy_from_slice(&0u32.to_le_bytes());
+        assert!(BlockSketches::from_bytes(&zeroed).is_err());
+        // Hostile header counts must be rejected before allocation.
+        let mut huge = good.clone();
+        huge[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(BlockSketches::from_bytes(&huge).is_err());
+        let mut huge = good;
+        huge[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(BlockSketches::from_bytes(&huge).is_err());
+    }
+
+    #[test]
+    fn block_classification_covers_prunes_and_scans() {
+        // 3 blocks of 4 rows; 10 valid rows (last block is a 2-row stub).
+        let keys: Vec<i64> = (0..10).collect();
+        let cols = vec![vec![
+            1.0,
+            1.0,
+            1.0,
+            1.0, // block 0: zone [1,1]
+            5.0,
+            6.0,
+            7.0,
+            8.0, // block 1: zone [5,8]
+            2.0,
+            f32::NAN, // block 2 (stub): zone [2,2], 1 NaN
+        ]];
+        let (_, blocks) = sketches_with_blocks(&keys, &cols, 4);
+        let classify = |s, e, preds: &[ColumnPredicate], cover| {
+            let mut out = Vec::new();
+            for_each_block_class(&blocks, 10, s, e, preds, cover, |b, bs, be, c| {
+                out.push((b, bs, be, c));
+            });
+            out
+        };
+
+        // Predicate-free full range: interior blocks covered, stub scanned
+        // only if partially selected — here fully selected, so covered.
+        assert_eq!(
+            classify(0, 10, &[], true),
+            vec![
+                (0, 0, 4, BlockClass::Covered),
+                (1, 4, 8, BlockClass::Covered),
+                (2, 8, 10, BlockClass::Covered),
+            ]
+        );
+        // Edge slice: remainder blocks scanned, interior covered.
+        assert_eq!(
+            classify(2, 9, &[], true),
+            vec![
+                (0, 2, 4, BlockClass::Scanned),
+                (1, 4, 8, BlockClass::Covered),
+                (2, 8, 9, BlockClass::Scanned),
+            ]
+        );
+        // cover_ok = false downgrades covered to scanned.
+        assert_eq!(
+            classify(4, 8, &[], false),
+            vec![(1, 4, 8, BlockClass::Scanned)]
+        );
+        // Predicate prunes blocks whose zone cannot satisfy it — even
+        // partially-selected ones — and NaN rows never rescue a block.
+        let gt4 = [ColumnPredicate { column: 0, op: PredOp::Gt, value: 4.0 }];
+        assert_eq!(
+            classify(2, 10, &gt4, true),
+            vec![
+                (0, 2, 4, BlockClass::Pruned),
+                (1, 4, 8, BlockClass::Scanned),
+                (2, 8, 10, BlockClass::Pruned),
+            ]
+        );
+        // Conjunction: satisfiable per-zone on different blocks only.
+        let conj = [
+            ColumnPredicate { column: 0, op: PredOp::Gt, value: 4.0 },
+            ColumnPredicate { column: 0, op: PredOp::Lt, value: 6.0 },
+        ];
+        assert_eq!(
+            classify(0, 10, &conj, true),
+            vec![
+                (0, 0, 4, BlockClass::Pruned),
+                (1, 4, 8, BlockClass::Scanned),
+                (2, 8, 10, BlockClass::Pruned),
+            ]
+        );
+        // Unknown predicate column never prunes.
+        let unknown = [ColumnPredicate { column: 7, op: PredOp::Gt, value: 1e9 }];
+        assert_eq!(classify(8, 10, &unknown, true), vec![(2, 8, 10, BlockClass::Scanned)]);
+        // Over-long row_end clamps to rows; empty range visits nothing.
+        assert_eq!(classify(8, 400, &[], true), vec![(2, 8, 10, BlockClass::Covered)]);
+        assert!(classify(5, 5, &[], true).is_empty());
+
+        // Counts agree with the walker and satisfy the invariant.
+        let counts = count_block_classes(&blocks, 10, 2, 10, &gt4, true);
+        assert_eq!(counts.pruned, 2);
+        assert_eq!(counts.scanned, 1);
+        assert_eq!(counts.covered, 0);
+        assert_eq!(counts.considered(), 3);
+        assert_eq!(counts.rows_avoided, 2 + 2);
+        assert_eq!(counts.rows_scanned, 4);
+        let full = count_block_classes(&blocks, 10, 0, 10, &[], true);
+        assert_eq!((full.covered, full.rows_avoided, full.rows_scanned), (3, 10, 0));
+    }
+
+    #[test]
+    fn usable_blocks_gates_on_block_size() {
+        let keys: Vec<i64> = (0..100).collect();
+        let cols = vec![(0..100).map(|i| i as f32).collect::<Vec<f32>>()];
+        let (_, blocks) = sketches_with_blocks(&keys, &cols, 64);
+        let arc = Arc::new(blocks);
+        assert!(usable_blocks(Some(Arc::clone(&arc)), 64).is_some());
+        assert!(usable_blocks(Some(Arc::clone(&arc)), 4096).is_none(), "mis-sized");
+        assert!(usable_blocks(None, 64).is_none());
+        let (_, empty) = sketches_with_blocks(&[], &[], 64);
+        assert!(usable_blocks(Some(Arc::new(empty)), 64).is_none(), "no blocks");
     }
 
     #[test]

@@ -178,10 +178,18 @@ pub struct BatchReport {
     /// sketch: the partition lies fully inside one elementary segment, so
     /// no data was read (and no cold segment faulted in) for it.
     pub agg_answered: usize,
-    /// Rows the sketch answers avoided reading.
+    /// Rows never read: sketch answers plus partitions dropped whole by
+    /// block-level predicate pruning before resolve.
     pub rows_avoided: usize,
-    /// Raw bytes the sketch answers avoided reading.
+    /// Raw bytes those avoided rows would have occupied.
     pub bytes_avoided: usize,
+    /// Blocks answered by merging their retained block partial instead
+    /// of folding their rows (block-sketch hierarchy, predicate-free).
+    pub blocks_covered: usize,
+    /// Blocks skipped because their block-level zones cannot satisfy the
+    /// predicate conjunction — including every block of partitions
+    /// dropped before resolve.
+    pub blocks_pruned: usize,
     /// Worker task dispatches submitted to the pool.
     pub tasks: usize,
     /// Cold partitions faulted in from the tiered store (0 when the
@@ -221,6 +229,12 @@ impl BatchReport {
                 humansize::bytes(self.bytes_avoided),
             ));
         }
+        if self.blocks_covered > 0 || self.blocks_pruned > 0 {
+            line.push_str(&format!(
+                " | blocks: {} covered, {} pruned",
+                self.blocks_covered, self.blocks_pruned,
+            ));
+        }
         if self.faults > 0 || self.evictions > 0 {
             line.push_str(&format!(
                 " | tiered: {} faults, {} evictions, {} read",
@@ -244,6 +258,8 @@ impl BatchReport {
             ("agg_answered", Json::num(self.agg_answered as f64)),
             ("rows_avoided", Json::num(self.rows_avoided as f64)),
             ("bytes_avoided", Json::num(self.bytes_avoided as f64)),
+            ("blocks_covered", Json::num(self.blocks_covered as f64)),
+            ("blocks_pruned", Json::num(self.blocks_pruned as f64)),
             ("tasks", Json::num(self.tasks as f64)),
             ("faults", Json::num(self.faults as f64)),
             ("evictions", Json::num(self.evictions as f64)),
@@ -358,6 +374,11 @@ mod tests {
             BatchReport { agg_answered: 5, rows_avoided: 100, bytes_avoided: 2400, ..r };
         assert!(answered.line().contains("agg-answered: 5"), "{}", answered.line());
         assert!(answered.to_json().to_string().contains("\"rows_avoided\":100"));
+        assert!(!r.line().contains("blocks:"), "block-free batches stay terse");
+        assert!(r.to_json().to_string().contains("\"blocks_covered\":0"));
+        let blocks = BatchReport { blocks_covered: 7, blocks_pruned: 2, ..r };
+        assert!(blocks.line().contains("blocks: 7 covered, 2 pruned"), "{}", blocks.line());
+        assert!(blocks.to_json().to_string().contains("\"blocks_pruned\":2"));
     }
 
     #[test]

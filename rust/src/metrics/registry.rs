@@ -29,11 +29,12 @@ pub const OP_METRICS: [&str; 6] =
 /// Registered per-plan-phase histogram names, index-aligned with
 /// [`PlanPhase`]. Every name must appear in the server's `metrics` op
 /// output (enforced by `oseba-lint`).
-pub const PHASE_METRICS: [&str; 7] = [
+pub const PHASE_METRICS: [&str; 8] = [
     "phase_targeting",
     "phase_zone_pruning",
     "phase_filter_pruning",
     "phase_sketch_classify",
+    "phase_block_classify",
     "phase_fault_in",
     "phase_scan_merge",
     "phase_demux",
@@ -98,6 +99,9 @@ pub enum PlanPhase {
     FilterPruning,
     /// Sketch coverage classification of surviving slices.
     SketchClassify,
+    /// Block-level classification of scan-path slices against the
+    /// sub-partition sketch hierarchy (covered/pruned/scanned).
+    BlockClassify,
     /// Resolving slices against the tiered store (cold faults included).
     FaultIn,
     /// Scanning resident data and merging partial moments.
@@ -108,11 +112,12 @@ pub enum PlanPhase {
 
 impl PlanPhase {
     /// All phases, index-aligned with [`PHASE_METRICS`].
-    pub const ALL: [PlanPhase; 7] = [
+    pub const ALL: [PlanPhase; 8] = [
         PlanPhase::Targeting,
         PlanPhase::ZonePruning,
         PlanPhase::FilterPruning,
         PlanPhase::SketchClassify,
+        PlanPhase::BlockClassify,
         PlanPhase::FaultIn,
         PlanPhase::ScanMerge,
         PlanPhase::Demux,
@@ -130,6 +135,7 @@ impl PlanPhase {
             PlanPhase::ZonePruning => "zone_pruning",
             PlanPhase::FilterPruning => "filter_pruning",
             PlanPhase::SketchClassify => "sketch_classify",
+            PlanPhase::BlockClassify => "block_classify",
             PlanPhase::FaultIn => "fault_in",
             PlanPhase::ScanMerge => "scan_merge",
             PlanPhase::Demux => "demux",

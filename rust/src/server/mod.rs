@@ -260,6 +260,8 @@ fn info_fields(ds: &Dataset, coord: &Coordinator, fields: &mut Vec<(&'static str
                 "partitions_agg_answered",
                 Json::num(ec.partitions_agg_answered as f64),
             ),
+            ("blocks_covered", Json::num(ec.blocks_covered as f64)),
+            ("blocks_pruned", Json::num(ec.blocks_pruned as f64)),
             ("sessions_failed", Json::num(ec.sessions_failed as f64)),
         ]),
     ));
@@ -457,6 +459,8 @@ fn handle_stats(req: &Json, coord: &Coordinator, source: &ServerSource) -> Resul
         fields.push(("filter_pruned", Json::num(ex.filter_pruned as f64)));
         fields.push(("agg_answered", Json::num(ex.agg_answered as f64)));
         fields.push(("rows_avoided", Json::num(ex.rows_avoided as f64)));
+        fields.push(("blocks_covered", Json::num(ex.blocks_covered as f64)));
+        fields.push(("blocks_pruned", Json::num(ex.blocks_pruned as f64)));
     }
     if let Some(e) = epoch {
         fields.push(("epoch", Json::num(e as f64)));
@@ -517,6 +521,8 @@ fn handle_metrics(req: &Json, coord: &Coordinator, source: &ServerSource) -> Res
         ("bytes_materialized", ec.bytes_materialized as f64),
         ("partitions_targeted", ec.partitions_targeted as f64),
         ("partitions_agg_answered", ec.partitions_agg_answered as f64),
+        ("blocks_covered", ec.blocks_covered as f64),
+        ("blocks_pruned", ec.blocks_pruned as f64),
         ("sessions_failed", ec.sessions_failed as f64),
     ];
     let mut live_fields: Vec<(&'static str, f64)> = Vec::new();
@@ -593,6 +599,7 @@ fn handle_metrics(req: &Json, coord: &Coordinator, source: &ServerSource) -> Res
             ("phase_zone_pruning", m.phase(PlanPhase::ZonePruning).to_json()),
             ("phase_filter_pruning", m.phase(PlanPhase::FilterPruning).to_json()),
             ("phase_sketch_classify", m.phase(PlanPhase::SketchClassify).to_json()),
+            ("phase_block_classify", m.phase(PlanPhase::BlockClassify).to_json()),
             ("phase_fault_in", m.phase(PlanPhase::FaultIn).to_json()),
             ("phase_scan_merge", m.phase(PlanPhase::ScanMerge).to_json()),
             ("phase_demux", m.phase(PlanPhase::Demux).to_json()),
@@ -1201,6 +1208,8 @@ mod tests {
         assert_eq!(
             keys_of(r.get("counters").unwrap()),
             [
+                "blocks_covered",
+                "blocks_pruned",
                 "bytes_materialized",
                 "partitions_agg_answered",
                 "partitions_scanned",
@@ -1274,6 +1283,8 @@ mod tests {
         assert_eq!(
             keys_of(counters),
             [
+                "blocks_covered",
+                "blocks_pruned",
                 "bytes_materialized",
                 "partitions_agg_answered",
                 "partitions_scanned",
@@ -1304,6 +1315,7 @@ mod tests {
         assert_eq!(
             keys_of(phases),
             [
+                "phase_block_classify",
                 "phase_demux",
                 "phase_fault_in",
                 "phase_filter_pruning",
@@ -1394,6 +1406,7 @@ mod tests {
                 "zone_pruning",
                 "filter_pruning",
                 "sketch_classify",
+                "block_classify",
                 "fault_in",
                 "scan_merge",
             ]
@@ -1410,6 +1423,8 @@ mod tests {
             ("filter_pruning", "filter_bytes"),
             ("sketch_classify", "agg_answered"),
             ("sketch_classify", "rows_avoided"),
+            ("block_classify", "blocks_covered"),
+            ("block_classify", "blocks_pruned"),
             ("fault_in", "targeted"),
             ("scan_merge", "estimated_rows"),
         ] {

@@ -9,7 +9,7 @@ use std::sync::Arc;
 
 use crate::error::{OsebaError, Result};
 use crate::index::filter::MembershipFilter;
-use crate::index::types::{ColumnSketch, ZoneMap};
+use crate::index::types::{BlockSketches, ColumnSketch, ZoneMap};
 use crate::storage::batch::RecordBatch;
 
 /// Rows per kernel block — must match `python/compile/kernels/BLOCK_ROWS`.
@@ -46,6 +46,14 @@ pub struct Partition {
     /// after the data itself is evicted. Metadata, excluded from
     /// [`Self::bytes`] like the sketches.
     pub filters: Arc<Vec<MembershipFilter>>,
+    /// Per-column **block sketches**: the per-[`BLOCK_ROWS`]-block
+    /// [`crate::util::stats::Moments`] partials the merged [`Self::sketches`]
+    /// are folded from, retained at seal time (DESIGN.md §15). The
+    /// executor answers fully-selected, predicate-free blocks by merging
+    /// these, and skips blocks whose block-level zones cannot satisfy a
+    /// predicate conjunction. Shared via `Arc` for the same reason as the
+    /// filters; metadata, excluded from [`Self::bytes`].
+    pub block_sketches: Arc<BlockSketches>,
 }
 
 impl Partition {
@@ -54,11 +62,14 @@ impl Partition {
         let rows = hi - lo;
         let padded_rows = rows.div_ceil(BLOCK_ROWS).max(1) * BLOCK_ROWS;
         let keys = batch.keys[lo..hi].to_vec();
-        let sketches = batch
-            .columns
-            .iter()
-            .map(|c| ColumnSketch::of(&keys, &c[lo..hi], BLOCK_ROWS))
-            .collect();
+        let mut sketches = Vec::with_capacity(batch.columns.len());
+        let mut block_cols = Vec::with_capacity(batch.columns.len());
+        for c in &batch.columns {
+            let (sk, b) = ColumnSketch::with_blocks(&keys, &c[lo..hi], BLOCK_ROWS);
+            sketches.push(sk);
+            block_cols.push(b);
+        }
+        let block_sketches = Arc::new(BlockSketches::from_parts(BLOCK_ROWS, block_cols));
         let filters = Arc::new(
             batch.columns.iter().map(|c| MembershipFilter::build(&c[lo..hi])).collect(),
         );
@@ -72,7 +83,7 @@ impl Partition {
                 v
             })
             .collect();
-        Partition { id, keys, columns, rows, padded_rows, sketches, filters }
+        Partition { id, keys, columns, rows, padded_rows, sketches, filters, block_sketches }
     }
 
     /// Build directly from owned columns (used by the filter baseline when
@@ -80,15 +91,21 @@ impl Partition {
     pub fn from_rows(id: usize, keys: Vec<i64>, mut columns: Vec<Vec<f32>>) -> Partition {
         let rows = keys.len();
         let padded_rows = rows.div_ceil(BLOCK_ROWS).max(1) * BLOCK_ROWS;
-        let sketches =
-            columns.iter().map(|c| ColumnSketch::of(&keys, &c[..rows], BLOCK_ROWS)).collect();
+        let mut sketches = Vec::with_capacity(columns.len());
+        let mut block_cols = Vec::with_capacity(columns.len());
+        for c in &columns {
+            let (sk, b) = ColumnSketch::with_blocks(&keys, &c[..rows], BLOCK_ROWS);
+            sketches.push(sk);
+            block_cols.push(b);
+        }
+        let block_sketches = Arc::new(BlockSketches::from_parts(BLOCK_ROWS, block_cols));
         let filters =
             Arc::new(columns.iter().map(|c| MembershipFilter::build(&c[..rows])).collect());
         for c in &mut columns {
             debug_assert_eq!(c.len(), rows);
             c.resize(padded_rows, 0.0);
         }
-        Partition { id, keys, columns, rows, padded_rows, sketches, filters }
+        Partition { id, keys, columns, rows, padded_rows, sketches, filters, block_sketches }
     }
 
     /// Per-column zone maps (min/max/nans), derived from the aggregate
@@ -292,7 +309,31 @@ mod tests {
     fn bytes_accounts_padding() {
         let rb = batch(100);
         let p = Partition::from_batch_range(0, &rb, 0, 100);
+        // Sketches, filters, and block sketches are metadata — excluded.
         assert_eq!(p.bytes(), 100 * 8 + 2 * BLOCK_ROWS * 4);
+    }
+
+    #[test]
+    fn block_sketches_retained_and_consistent() {
+        use crate::util::stats::Moments;
+        let rb = batch(10_000);
+        let p = Partition::from_batch_range(0, &rb, 0, 10_000);
+        let bs = &p.block_sketches;
+        assert_eq!(bs.block_rows(), BLOCK_ROWS);
+        assert_eq!(bs.num_columns(), 2);
+        // Blocks cover valid rows only: ceil(10000 / 4096) = 3, even
+        // though padding makes three full kernel blocks.
+        assert_eq!(bs.num_blocks(), 10_000usize.div_ceil(BLOCK_ROWS));
+        for c in 0..2 {
+            let merged = (0..bs.num_blocks())
+                .map(|b| bs.moments(c, b).unwrap())
+                .fold(Moments::EMPTY, Moments::merge);
+            assert_eq!(merged, p.sketches[c].moments, "column {c}");
+        }
+        // from_rows retains them too.
+        let q = Partition::from_rows(1, vec![1, 2, 3], vec![vec![5.0, f32::NAN, -2.0]]);
+        assert_eq!(q.block_sketches.num_blocks(), 1);
+        assert_eq!(q.block_sketches.moments(0, 0).unwrap().nans, 1.0);
     }
 
     #[test]

@@ -15,7 +15,9 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::error::{OsebaError, Result};
-use crate::index::{Cias, ColumnSketch, MembershipFilter, PartitionMeta, ZoneMap};
+use crate::index::{
+    BlockSketches, Cias, ColumnSketch, MembershipFilter, PartitionMeta, ZoneMap,
+};
 use crate::storage::Schema;
 use crate::store::crc32::crc32;
 use crate::util::json::Json;
@@ -29,15 +31,20 @@ pub const FORMAT: &str = "oseba-store";
 /// per-column value-domain zone maps the query planner prunes by);
 /// version 3 added per-segment `sketch` — the per-column aggregate
 /// sketches (moments + trend partials) the planner answers fully-covered
-/// partitions from without faulting them in; version 4 adds per-segment
+/// partitions from without faulting them in; version 4 added per-segment
 /// `filter` — the per-column membership filters (hex-encoded with their
 /// own CRC-32) the planner prunes equality predicates by before
-/// fault-in. Older manifests are still readable: v1 zones default to the
-/// unbounded sentinel (never prunes), pre-v3 sketches default to the "no
-/// sketch → always scan" sentinel (`None`), and pre-v4 filters default
-/// to the "no filter → always consider" sentinel (`None`); `save`
+/// fault-in; version 5 adds per-segment `blocks` — the per-block sketch
+/// hierarchy (the binary [`BlockSketches`] codec, hex-encoded with its
+/// own CRC-32) the executor classifies kernel blocks of cold partitions
+/// by before fault-in (DESIGN.md §15). Older manifests are still
+/// readable: v1 zones default to the unbounded sentinel (never prunes),
+/// pre-v3 sketches default to the "no sketch → always scan" sentinel
+/// (`None`), pre-v4 filters default to the "no filter → always consider"
+/// sentinel (`None`), and pre-v5 blocks default to the "no block
+/// sketches → scan every targeted block" sentinel (`None`); `save`
 /// rewrites at the current version with real metadata.
-pub const VERSION: usize = 4;
+pub const VERSION: usize = 5;
 /// Oldest manifest version `open` still accepts.
 pub const MIN_VERSION: usize = 1;
 
@@ -61,6 +68,11 @@ pub struct SegmentEntry {
     /// any fault-in. `None` for pre-v4 manifests — "no filter → always
     /// consider", never wrong.
     pub filters: Option<Arc<Vec<MembershipFilter>>>,
+    /// Per-block sketch hierarchy (every column, every kernel block), so
+    /// cold partitions' blocks are classified — covered, pruned, or
+    /// scanned — before any fault-in. `None` for pre-v5 manifests — "no
+    /// block sketches → scan every targeted block", never wrong.
+    pub blocks: Option<Arc<BlockSketches>>,
 }
 
 /// The parsed/serializable manifest.
@@ -233,14 +245,14 @@ fn from_hex(s: &str) -> Result<Vec<u8>> {
             b'a'..=b'f' => Ok(c - b'a' + 10),
             b'A'..=b'F' => Ok(c - b'A' + 10),
             _ => Err(OsebaError::Store(format!(
-                "filter section holds a non-hex byte 0x{c:02x}"
+                "hex section holds a non-hex byte 0x{c:02x}"
             ))),
         }
     };
     let raw = s.as_bytes();
     if raw.len() % 2 != 0 {
         return Err(OsebaError::Store(format!(
-            "filter section has odd hex length {}",
+            "hex section has odd length {}",
             raw.len()
         )));
     }
@@ -283,6 +295,48 @@ fn filter_from_json(v: &Json, segment: usize, column: usize) -> Result<Membershi
     }
     MembershipFilter::from_bytes(payload)
         .map_err(|e| OsebaError::Store(format!("segment {segment} filter column {column}: {e}")))
+}
+
+/// Hex section of one segment's block-sketch hierarchy: the binary
+/// [`BlockSketches`] codec bytes prefixed with their own CRC-32
+/// (little-endian), mirroring the filter section's framing — a flipped
+/// character anywhere in the section is rejected at open time. Binary,
+/// so non-finite partials (an `inf` data value summed into a block)
+/// round-trip exactly; unlike the sketch section there is no forced
+/// `null` degradation.
+fn blocks_to_json(b: &BlockSketches) -> Json {
+    let payload = b.to_bytes();
+    let mut framed = Vec::with_capacity(4 + payload.len());
+    framed.extend_from_slice(&crc32(&payload).to_le_bytes());
+    framed.extend_from_slice(&payload);
+    Json::str(to_hex(&framed))
+}
+
+fn blocks_from_json(v: &Json, segment: usize) -> Result<BlockSketches> {
+    let hex = v.as_str().ok_or_else(|| {
+        OsebaError::Store(format!(
+            "segment {segment} blocks section must be a hex string"
+        ))
+    })?;
+    let framed = from_hex(hex)
+        .map_err(|e| OsebaError::Store(format!("segment {segment} blocks section: {e}")))?;
+    if framed.len() < 4 {
+        return Err(OsebaError::Store(format!(
+            "segment {segment} blocks section truncated ({} bytes)",
+            framed.len()
+        )));
+    }
+    let stored = u32::from_le_bytes([framed[0], framed[1], framed[2], framed[3]]);
+    let payload = &framed[4..];
+    let computed = crc32(payload);
+    if stored != computed {
+        return Err(OsebaError::Store(format!(
+            "segment {segment} blocks section crc mismatch \
+             (stored {stored:08x}, computed {computed:08x})"
+        )));
+    }
+    BlockSketches::from_bytes(payload)
+        .map_err(|e| OsebaError::Store(format!("segment {segment} blocks section: {e}")))
 }
 
 fn sketch_from_json(v: &Json) -> Result<ColumnSketch> {
@@ -363,6 +417,11 @@ impl StoreManifest {
                                 None => Json::Null,
                             };
                             obj.insert("filter".into(), filter);
+                            let blocks = match &e.blocks {
+                                Some(b) => blocks_to_json(b),
+                                None => Json::Null,
+                            };
+                            obj.insert("blocks".into(), blocks);
                             Json::Obj(obj)
                         })
                         .collect(),
@@ -541,7 +600,40 @@ impl StoreManifest {
                     }
                 }
             };
-            segments.push(SegmentEntry { file, meta, zones, sketches, filters });
+            // Pre-v5 manifests predate block sketches: those segments
+            // carry the "no block sketches → scan every targeted block"
+            // sentinel. From v5 on the field is mandatory (`null` =
+            // explicit opt-out), the hex section is CRC-checked, and the
+            // decoded hierarchy must agree with the schema's value column
+            // count and the segment's row count — a misaligned hierarchy
+            // would answer blocks from the wrong column's partials.
+            let blocks = if version < 5 {
+                None
+            } else {
+                match s.require("blocks")? {
+                    Json::Null => None,
+                    j => {
+                        let b = blocks_from_json(j, i)?;
+                        if b.num_columns() != schema.width() {
+                            return Err(OsebaError::Store(format!(
+                                "segment {i} has {} block-sketch columns for {} schema columns",
+                                b.num_columns(),
+                                schema.width()
+                            )));
+                        }
+                        if b.num_blocks() != meta.rows.div_ceil(b.block_rows()) {
+                            return Err(OsebaError::Store(format!(
+                                "segment {i} has {} block sketches for {} rows at {} per block",
+                                b.num_blocks(),
+                                meta.rows,
+                                b.block_rows()
+                            )));
+                        }
+                        Some(Arc::new(b))
+                    }
+                }
+            };
+            segments.push(SegmentEntry { file, meta, zones, sketches, filters, blocks });
         }
         if segments.is_empty() {
             return Err(OsebaError::Store("manifest lists no segments".into()));
@@ -657,6 +749,23 @@ mod tests {
         }
     }
 
+    /// A two-column, two-block hierarchy with awkward floats (rows = 100
+    /// at 64 rows per block → 2 blocks per column).
+    fn sample_blocks(salt: f64) -> Arc<BlockSketches> {
+        let m = |s: f64| Moments {
+            max: 42.125 + s as f32,
+            min: -1.5,
+            sum: 1234.567_890_123 + s,
+            sumsq: 9.876_543_21e4 + s,
+            count: 50.0,
+            nans: 1.0,
+        };
+        Arc::new(BlockSketches::from_parts(
+            64,
+            vec![vec![m(salt), m(salt + 0.5)], vec![m(salt + 1.0), m(salt + 1.5)]],
+        ))
+    }
+
     fn sample(nparts: usize) -> StoreManifest {
         let rows = 100usize;
         let metas: Vec<PartitionMeta> = (0..nparts)
@@ -688,6 +797,7 @@ mod tests {
                         MembershipFilter::build(&[1.25, -3.5, 42.0, m.id as f32]),
                         MembershipFilter::build(&[0.0, 7.75, m.id as f32 * 0.5]),
                     ])),
+                    blocks: Some(sample_blocks(m.id as f64 / 13.0)),
                 })
                 .collect(),
             index,
@@ -749,7 +859,8 @@ mod tests {
     }
 
     /// Downgrade a serialized manifest to `version`, stripping the fields
-    /// that version predates ("zones" < 2, "sketch" < 3, "filter" < 4).
+    /// that version predates ("zones" < 2, "sketch" < 3, "filter" < 4,
+    /// "blocks" < 5).
     fn downgrade(doc: &Json, version: usize) -> Json {
         let Json::Obj(mut top) = doc.clone() else { panic!("manifest is an object") };
         top.insert("version".into(), Json::num(version as f64));
@@ -764,6 +875,9 @@ mod tests {
                 }
                 if version < 4 {
                     seg.remove("filter");
+                }
+                if version < 5 {
+                    seg.remove("blocks");
                 }
             }
         }
@@ -787,6 +901,7 @@ mod tests {
             }
             assert!(e.sketches.is_none(), "v1 has no sketches");
             assert!(e.filters.is_none(), "v1 has no filters");
+            assert!(e.blocks.is_none(), "v1 has no block sketches");
         }
 
         // v2 (zones, no sketch): real zones survive, sketches absent.
@@ -803,11 +918,20 @@ mod tests {
         for e in &m.segments {
             assert!(e.sketches.is_some(), "v3 keeps sketches");
             assert!(e.filters.is_none(), "v3 has no filters");
+            assert!(e.blocks.is_none(), "v3 has no block sketches");
+        }
+
+        // v4 (zones + sketches + filters, no blocks): filters survive,
+        // block sketches default to the scan-every-block sentinel.
+        let m = StoreManifest::from_json(&downgrade(&doc, 4)).unwrap();
+        for e in &m.segments {
+            assert!(e.filters.is_some(), "v4 keeps filters");
+            assert!(e.blocks.is_none(), "v4 has no block sketches");
         }
 
         // Unknown future versions are still rejected.
         let good = doc.to_string();
-        let v9 = good.replace("\"version\":4", "\"version\":9");
+        let v9 = good.replace("\"version\":5", "\"version\":9");
         assert!(StoreManifest::from_json(&Json::parse(&v9).unwrap()).is_err());
     }
 
@@ -953,6 +1077,90 @@ mod tests {
         if let Some(Json::Arr(segs)) = top.get_mut("segments") {
             let Json::Obj(seg) = &mut segs[0] else { panic!() };
             seg.remove("filter");
+        }
+        assert!(StoreManifest::from_json(&Json::Obj(top)).is_err());
+    }
+
+    #[test]
+    fn block_sketch_tampering_is_a_clear_store_error() {
+        let doc = sample(2).to_json().unwrap();
+
+        // Non-finite partials survive the binary section exactly (no JSON
+        // null degradation like the sketch list).
+        let mut inf = sample(2);
+        inf.segments[1].blocks = Some(Arc::new(BlockSketches::from_parts(
+            64,
+            vec![
+                vec![Moments { sum: f64::INFINITY, ..Moments::EMPTY }, Moments::EMPTY],
+                vec![Moments::EMPTY, Moments::EMPTY],
+            ],
+        )));
+        let text = inf.to_json().unwrap().to_string();
+        let back = StoreManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.segments[1].blocks, inf.segments[1].blocks);
+
+        let hex_of = |doc: &Json| -> String {
+            let segs = doc.get("segments").unwrap().as_arr().unwrap();
+            segs[0].get("blocks").unwrap().as_str().unwrap().to_string()
+        };
+        let replace_blocks = |doc: &Json, v: Json| -> Json {
+            let Json::Obj(mut top) = doc.clone() else { panic!() };
+            if let Some(Json::Arr(segs)) = top.get_mut("segments") {
+                let Json::Obj(seg) = &mut segs[0] else { panic!() };
+                seg.insert("blocks".into(), v);
+            }
+            Json::Obj(top)
+        };
+        let hex = hex_of(&doc);
+
+        // Corrupt CRC: flip one hex digit of the payload (past the 8-char
+        // CRC prefix) — the section's own CRC-32 must catch it.
+        let mut chars: Vec<char> = hex.chars().collect();
+        let at = 12;
+        chars[at] = if chars[at] == '0' { '1' } else { '0' };
+        let flipped: String = chars.iter().collect();
+        let err = StoreManifest::from_json(&replace_blocks(&doc, Json::str(flipped)))
+            .unwrap_err();
+        assert!(matches!(err, OsebaError::Store(_)), "got: {err:?}");
+        assert!(err.to_string().contains("crc"), "got: {err}");
+        assert!(err.to_string().contains("blocks section"), "got: {err}");
+
+        // Truncated payload (valid hex, even length), odd hex length,
+        // non-hex characters, wrong JSON type: all clean errors.
+        let short = Json::str(hex[..hex.len() - 16].to_string());
+        assert!(StoreManifest::from_json(&replace_blocks(&doc, short)).is_err());
+        let odd = Json::str(hex[..hex.len() - 1].to_string());
+        assert!(StoreManifest::from_json(&replace_blocks(&doc, odd)).is_err());
+        let junk = Json::str("zz00".to_string());
+        assert!(StoreManifest::from_json(&replace_blocks(&doc, junk)).is_err());
+        assert!(StoreManifest::from_json(&replace_blocks(&doc, Json::num(7.0))).is_err());
+
+        // An explicit null is the opt-out, not an error.
+        let back = StoreManifest::from_json(&replace_blocks(&doc, Json::Null)).unwrap();
+        assert!(back.segments[0].blocks.is_none(), "null → scan every block");
+        assert!(back.segments[1].blocks.is_some(), "other segments keep theirs");
+
+        // Width mismatch: 3 block-sketch columns for a 2-column schema.
+        let m = Moments::EMPTY;
+        let mut wide = sample(2);
+        wide.segments[0].blocks =
+            Some(Arc::new(BlockSketches::from_parts(64, vec![vec![m; 2]; 3])));
+        let err = StoreManifest::from_json(&wide.to_json().unwrap()).unwrap_err();
+        assert!(err.to_string().contains("block-sketch columns"), "got: {err}");
+
+        // Block-count/row-count mismatch: 1 block for 100 rows at 64/block.
+        let mut stub = sample(2);
+        stub.segments[0].blocks =
+            Some(Arc::new(BlockSketches::from_parts(64, vec![vec![m; 1]; 2])));
+        let err = StoreManifest::from_json(&stub.to_json().unwrap()).unwrap_err();
+        assert!(err.to_string().contains("block sketches for"), "got: {err}");
+
+        // A v5 manifest with the blocks field missing entirely is rejected
+        // (the field is mandatory from v5 on; null is the opt-out).
+        let Json::Obj(mut top) = doc else { panic!() };
+        if let Some(Json::Arr(segs)) = top.get_mut("segments") {
+            let Json::Obj(seg) = &mut segs[0] else { panic!() };
+            seg.remove("blocks");
         }
         assert!(StoreManifest::from_json(&Json::Obj(top)).is_err());
     }

@@ -23,7 +23,7 @@ use std::sync::Arc;
 
 use crate::error::{OsebaError, Result};
 use crate::index::filter::{filters_of, MembershipFilter};
-use crate::index::types::{sketches_of, ColumnSketch};
+use crate::index::types::{sketches_with_blocks, BlockSketches, ColumnSketch};
 use crate::storage::{Partition, BLOCK_ROWS};
 use crate::store::crc32::{crc32, Crc32};
 
@@ -129,21 +129,23 @@ impl<'a> Reader<'a> {
 /// Decode one partition from the `.oseg` byte layout. `path` is only used
 /// to name the file in errors.
 pub fn decode_segment(path: &Path, buf: &[u8]) -> Result<Partition> {
-    decode_segment_with(path, buf, None, None)
+    decode_segment_with(path, buf, None, None, None)
 }
 
 /// [`decode_segment`], optionally reusing already-known aggregate
-/// sketches and membership filters (the tiered store's slot table keeps
-/// the seal-time metadata resident) instead of recomputing them from the
-/// decoded data — the fault-in fast path. Pass `None` to recompute; a
-/// `Some` whose length does not match the decoded column count is
-/// ignored (recomputed), so a caller can never attach mismatched
-/// metadata.
+/// sketches, membership filters, and block sketches (the tiered store's
+/// slot table keeps the seal-time metadata resident) instead of
+/// recomputing them from the decoded data — the fault-in fast path. Pass
+/// `None` to recompute; a `Some` whose shape does not match the decoded
+/// partition (column count, and for block sketches the kernel block size
+/// and block count) is ignored (recomputed), so a caller can never attach
+/// mismatched metadata.
 pub(crate) fn decode_segment_with(
     path: &Path,
     buf: &[u8],
     known_sketches: Option<Vec<ColumnSketch>>,
     known_filters: Option<Arc<Vec<MembershipFilter>>>,
+    known_blocks: Option<Arc<BlockSketches>>,
 ) -> Result<Partition> {
     let mut r = Reader { path, buf, pos: 0 };
 
@@ -238,9 +240,22 @@ pub(crate) fn decode_segment_with(
     // store opened from a pre-v3 manifest — they are recomputed from the
     // verified data (one extra O(rows) pass beside the CRC + parse; the
     // blockwise fold matches seal time exactly).
-    let sketches = match known_sketches {
-        Some(sks) if sks.len() == width => sks,
-        _ => sketches_of(&keys, &columns, BLOCK_ROWS),
+    // Block sketches share the fold with the merged sketches, so a single
+    // recompute pass refreshes whichever of the two is missing or
+    // mis-shaped (e.g. a store opened from a pre-v5 manifest attaches
+    // sketches but must rebuild the per-block partials).
+    let good_sketches = known_sketches.filter(|s| s.len() == width);
+    let good_blocks = known_blocks.filter(|b| {
+        b.block_rows() == BLOCK_ROWS
+            && b.num_columns() == width
+            && b.num_blocks() == rows.div_ceil(BLOCK_ROWS)
+    });
+    let (sketches, block_sketches) = match (good_sketches, good_blocks) {
+        (Some(sks), Some(bs)) => (sks, bs),
+        (sks, bs) => {
+            let (rsks, rbs) = sketches_with_blocks(&keys, &columns, BLOCK_ROWS);
+            (sks.unwrap_or(rsks), bs.unwrap_or_else(|| Arc::new(rbs)))
+        }
     };
     // Membership filters follow the same invariant: attach the resident
     // seal-time filters when the widths agree, else rebuild from the
@@ -250,24 +265,26 @@ pub(crate) fn decode_segment_with(
         Some(fs) if fs.len() == width => fs,
         _ => Arc::new(filters_of(&columns, rows)),
     };
-    Ok(Partition { id, keys, columns, rows, padded_rows, sketches, filters })
+    Ok(Partition { id, keys, columns, rows, padded_rows, sketches, filters, block_sketches })
 }
 
 /// Read a partition back from `path`, verifying every section CRC.
 pub fn read_segment(path: impl AsRef<Path>) -> Result<Partition> {
-    read_segment_with(path, None, None)
+    read_segment_with(path, None, None, None)
 }
 
-/// [`read_segment`] with optional known sketches and filters (see
-/// [`decode_segment_with`]) — the tiered store's fault-in entry point.
+/// [`read_segment`] with optional known sketches, filters, and block
+/// sketches (see [`decode_segment_with`]) — the tiered store's fault-in
+/// entry point.
 pub(crate) fn read_segment_with(
     path: impl AsRef<Path>,
     known_sketches: Option<Vec<ColumnSketch>>,
     known_filters: Option<Arc<Vec<MembershipFilter>>>,
+    known_blocks: Option<Arc<BlockSketches>>,
 ) -> Result<Partition> {
     let path = path.as_ref();
     let buf = std::fs::read(path).map_err(|e| OsebaError::io(path, e))?;
-    decode_segment_with(path, &buf, known_sketches, known_filters)
+    decode_segment_with(path, &buf, known_sketches, known_filters, known_blocks)
 }
 
 #[cfg(test)]

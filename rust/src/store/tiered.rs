@@ -24,7 +24,9 @@ use std::sync::{Arc, Mutex};
 use crate::engine::memory::MemoryTracker;
 use crate::error::{OsebaError, Result};
 use crate::index::builder::detect_step;
-use crate::index::{Cias, ColumnSketch, MembershipFilter, PartitionMeta, ZoneMap};
+use crate::index::{
+    BlockSketches, Cias, ColumnSketch, MembershipFilter, PartitionMeta, ZoneMap,
+};
 use crate::storage::{Partition, Schema, BLOCK_ROWS};
 use crate::store::manifest::{SegmentEntry, StoreManifest};
 use crate::store::segment::{read_segment_with, segment_len, write_segment};
@@ -80,6 +82,12 @@ struct Slot {
     /// predicates **before fault-in**. `None` for stores opened from a
     /// pre-v4 manifest (no filter → always consider, DESIGN.md §14).
     filters: Option<Arc<Vec<MembershipFilter>>>,
+    /// Per-block sketch hierarchy — resident metadata surviving eviction,
+    /// so a Cold partition's blocks are classified (covered / pruned /
+    /// scanned) **before fault-in**. `None` for stores opened from a
+    /// pre-v5 manifest (no block sketches → the partition's edge and
+    /// predicate scans read every targeted block, DESIGN.md §15).
+    block_sketches: Option<Arc<BlockSketches>>,
     /// In-memory footprint (keys + padded columns) when hot.
     bytes: usize,
     /// Segment file name relative to the store directory.
@@ -173,6 +181,7 @@ impl TieredStore {
                 zones: e.zones.clone(),
                 sketches: e.sketches.clone(),
                 filters: e.filters.clone(),
+                block_sketches: e.blocks.clone(),
                 bytes: partition_bytes(e.meta.rows, width),
                 file: e.file.clone(),
                 on_disk: true,
@@ -244,6 +253,7 @@ impl TieredStore {
             zones: part.zone_maps(),
             sketches: Some(part.sketches.clone()),
             filters: Some(Arc::clone(&part.filters)),
+            block_sketches: Some(Arc::clone(&part.block_sketches)),
             bytes,
             file,
             on_disk: false,
@@ -299,6 +309,7 @@ impl TieredStore {
             &path,
             inner.slots[id].sketches.clone(),
             inner.slots[id].filters.clone(),
+            inner.slots[id].block_sketches.clone(),
         )?;
         let expect = inner.slots[id].meta;
         if part.id != id
@@ -449,6 +460,7 @@ impl TieredStore {
                 zones: s.zones.clone(),
                 sketches: s.sketches.clone(),
                 filters: s.filters.clone(),
+                blocks: s.block_sketches.clone(),
             })
             .collect();
         StoreManifest::for_segments(self.schema.clone(), segments)?.save(&self.dir)
@@ -503,6 +515,15 @@ impl TieredStore {
     /// always considers the partition).
     pub fn filters(&self, id: usize) -> Option<Arc<Vec<MembershipFilter>>> {
         self.inner.lock_recover().slots.get(id).and_then(|s| s.filters.clone())
+    }
+
+    /// The per-block sketch hierarchy of partition `id` — pure metadata:
+    /// no residency change, no fault-in, so a Cold partition's blocks are
+    /// classified before any segment read. `None` for an unknown id or a
+    /// store opened from a pre-v5 manifest (no block sketches → every
+    /// targeted block scans).
+    pub fn block_sketches(&self, id: usize) -> Option<Arc<BlockSketches>> {
+        self.inner.lock_recover().slots.get(id).and_then(|s| s.block_sketches.clone())
     }
 
     /// Total resident footprint of the membership filters across all
@@ -802,6 +823,39 @@ mod tests {
         // Fault-in attaches the resident filters to the decoded partition.
         let p0 = back.fetch(0).unwrap();
         assert!(Arc::ptr_eq(&p0.filters, &back.filters(0).unwrap()));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn block_sketches_survive_save_open_without_fault_in() {
+        let dir = temp_dir("ts-blocks");
+        let ps = parts(10_000, 4096);
+        let store =
+            TieredStore::create(&dir, Schema::stock(), MemoryTracker::unbounded()).unwrap();
+        fill(&store, &ps);
+        let want: Vec<_> = (0..3).map(|i| store.block_sketches(i).unwrap()).collect();
+        assert_eq!(*want[1], *ps[1].block_sketches);
+        store.save().unwrap();
+        drop(store);
+
+        let (back, _index) =
+            TieredStore::open(&dir, MemoryTracker::unbounded()).unwrap();
+        // Block sketches round-trip the manifest bit-for-bit and stay
+        // available while every partition is Cold — block classification
+        // with zero fault-in.
+        for (i, w) in want.iter().enumerate() {
+            let bs = back.block_sketches(i).unwrap();
+            assert_eq!(*bs, **w, "partition {i}");
+            assert_eq!(bs.block_rows(), BLOCK_ROWS);
+            assert_eq!(back.residency(i), Some(Residency::Cold));
+        }
+        assert_eq!(back.counters(), StoreCounters::default(), "metadata only");
+        assert!(back.block_sketches(99).is_none());
+
+        // Fault-in attaches the resident block sketches to the decoded
+        // partition instead of recomputing them.
+        let p0 = back.fetch(0).unwrap();
+        assert!(Arc::ptr_eq(&p0.block_sketches, &back.block_sketches(0).unwrap()));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

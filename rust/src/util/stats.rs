@@ -225,6 +225,82 @@ pub fn fold_stats_f32(xs: &[f32]) -> (f32, f32, f32, f32, usize) {
     out
 }
 
+/// Predicate-masked variant of [`fold_stats_f32`]: fold only the rows of
+/// `xs` whose `mask` entry is `true`, returning
+/// `(max, min, sum, sumsq, selected, nans)` where `selected` is the
+/// number of mask-true rows and `nans` the number of *selected* NaN
+/// values (so `selected - nans` is the moments count). Rows with a
+/// `false` mask are invisible: they contribute 0 to the sums, nothing to
+/// max/min, and their NaN-ness is never counted.
+///
+/// The lane structure mirrors [`fold_stats_f32`] exactly — the same
+/// [`FOLD_LANES`] accumulator arrays, the same branchless NaN handling
+/// (a masked-in value feeds max/min raw, relying on IEEE
+/// `max(acc, NaN) == acc`), and the same fixed lane-order combine — so
+/// with an all-true mask the result is **bit-identical** to
+/// [`fold_stats_f32`] over the same slice, and for any mask the result
+/// is deterministic for a given `(xs, mask)` input.
+///
+/// Only `mask[..xs.len()]` is consulted; `mask` must be at least as long
+/// as `xs`.
+pub fn fold_stats_f32_masked(xs: &[f32], mask: &[bool]) -> (f32, f32, f32, f32, usize, usize) {
+    const NEG: f32 = -3.4e38;
+    const POS: f32 = 3.4e38;
+    assert!(mask.len() >= xs.len(), "mask shorter than values");
+    let mask = &mask[..xs.len()];
+    let mut mx = [NEG; FOLD_LANES];
+    let mut mn = [POS; FOLD_LANES];
+    let mut sum = [0f32; FOLD_LANES];
+    let mut sumsq = [0f32; FOLD_LANES];
+    let mut sel = [0usize; FOLD_LANES];
+    let mut nans = [0usize; FOLD_LANES];
+    let mut chunks = xs.chunks_exact(FOLD_LANES);
+    let mut mchunks = mask.chunks_exact(FOLD_LANES);
+    for (chunk, mchunk) in (&mut chunks).zip(&mut mchunks) {
+        for l in 0..FOLD_LANES {
+            let x = chunk[l];
+            let keep = mchunk[l];
+            let nan = x.is_nan() & keep;
+            // Per-lane select: a masked-out row degenerates to the lane's
+            // identity values, so the loop stays branch-free.
+            let v = if nan | !keep { 0.0 } else { x };
+            let hi = if keep { x } else { NEG };
+            let lo = if keep { x } else { POS };
+            mx[l] = mx[l].max(hi);
+            mn[l] = mn[l].min(lo);
+            sum[l] += v;
+            sumsq[l] += v * v;
+            sel[l] += keep as usize;
+            nans[l] += nan as usize;
+        }
+    }
+    for (l, (&x, &keep)) in
+        chunks.remainder().iter().zip(mchunks.remainder()).enumerate()
+    {
+        let nan = x.is_nan() & keep;
+        let v = if nan | !keep { 0.0 } else { x };
+        let hi = if keep { x } else { NEG };
+        let lo = if keep { x } else { POS };
+        mx[l] = mx[l].max(hi);
+        mn[l] = mn[l].min(lo);
+        sum[l] += v;
+        sumsq[l] += v * v;
+        sel[l] += keep as usize;
+        nans[l] += nan as usize;
+    }
+    // Fixed lane-order combine: deterministic for a given (xs, mask).
+    let mut out = (NEG, POS, 0f32, 0f32, 0usize, 0usize);
+    for l in 0..FOLD_LANES {
+        out.0 = out.0.max(mx[l]);
+        out.1 = out.1.min(mn[l]);
+        out.2 += sum[l];
+        out.3 += sumsq[l];
+        out.4 += sel[l];
+        out.5 += nans[l];
+    }
+    out
+}
+
 /// Mergeable simple-linear-regression partial over (key, value) pairs:
 /// everything a least-squares fit `value ≈ slope·key + intercept` needs,
 /// carried in **centered co-moment** form (means + Σdx², Σdx·dy) rather
@@ -499,6 +575,93 @@ mod tests {
         assert!(mx < -1e38 && mn > 1e38);
         assert_eq!(sum, 0.0);
         assert_eq!(nans, 11);
+    }
+
+    #[test]
+    fn masked_fold_all_true_is_bit_identical_to_unmasked() {
+        // Awkward (non-exactly-summing) f32 data: the masked fold with an
+        // all-true mask must reproduce fold_stats_f32 *bitwise*, since the
+        // lane schedule is identical.
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32).sin() * 1e3 + 0.1).collect();
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let mask = vec![true; len];
+            let (mx, mn, sum, sumsq, sel, nans) =
+                fold_stats_f32_masked(&xs[..len], &mask);
+            let (wmx, wmn, wsum, wsumsq, wnans) = fold_stats_f32(&xs[..len]);
+            assert_eq!(mx.to_bits(), wmx.to_bits(), "len={len}");
+            assert_eq!(mn.to_bits(), wmn.to_bits(), "len={len}");
+            assert_eq!(sum.to_bits(), wsum.to_bits(), "len={len}");
+            assert_eq!(sumsq.to_bits(), wsumsq.to_bits(), "len={len}");
+            assert_eq!(sel, len);
+            assert_eq!(nans, wnans);
+        }
+    }
+
+    #[test]
+    fn masked_fold_matches_scan_oracle_on_selected_rows() {
+        // Seeded pseudo-random mask over integer-valued data (sums are
+        // exact in any association): the masked fold must agree with a
+        // sequential absorb of exactly the selected rows.
+        let xs: Vec<f32> = (0..777).map(|i| ((i * 13) % 251) as f32 - 40.0).collect();
+        for (period, longer_mask) in [(2usize, false), (3, true), (7, false), (1, true)] {
+            let mut mask: Vec<bool> = (0..xs.len()).map(|i| i % period == 0).collect();
+            if longer_mask {
+                mask.extend([true; 9]); // tail beyond xs must be ignored
+            }
+            let (mx, mn, sum, sumsq, sel, nans) = fold_stats_f32_masked(&xs, &mask);
+            let mut want = Moments::EMPTY;
+            for (i, &x) in xs.iter().enumerate() {
+                if i % period == 0 {
+                    want.absorb(x);
+                }
+            }
+            assert_eq!(mx, want.max, "period={period}");
+            assert_eq!(mn, want.min, "period={period}");
+            assert_eq!(sum as f64, want.sum, "period={period}");
+            assert_eq!(sumsq as f64, want.sumsq, "period={period}");
+            assert_eq!(sel, xs.len().div_ceil(period));
+            assert_eq!(nans, 0);
+        }
+    }
+
+    #[test]
+    fn masked_fold_nan_policy_and_edge_masks() {
+        // Selected NaNs are counted; deselected NaNs are invisible.
+        let mut xs = vec![2.0f32; 40];
+        xs[5] = f32::NAN; // selected below
+        xs[6] = f32::NAN; // masked out below
+        xs[39] = 7.0;
+        let mut mask = vec![true; 40];
+        mask[6] = false;
+        mask[0] = false; // a masked-out ordinary value
+        let (mx, mn, sum, sumsq, sel, nans) = fold_stats_f32_masked(&xs, &mask);
+        assert_eq!(nans, 1, "only the selected NaN counts");
+        assert_eq!(sel, 38);
+        assert_eq!(mx, 7.0);
+        assert_eq!(mn, 2.0);
+        assert_eq!(sum, 36.0 * 2.0 + 7.0);
+        assert_eq!(sumsq, 36.0 * 4.0 + 49.0);
+
+        // All-false mask: the identity partial regardless of the data.
+        let (mx, mn, sum, sumsq, sel, nans) =
+            fold_stats_f32_masked(&xs, &vec![false; 40]);
+        assert!(mx < -1e38 && mn > 1e38);
+        assert_eq!((sum, sumsq, sel, nans), (0.0, 0.0, 0, 0));
+
+        // Empty input.
+        let (_, _, sum, _, sel, nans) = fold_stats_f32_masked(&[], &[]);
+        assert_eq!((sum, sel, nans), (0.0, 0, 0));
+
+        // Deterministic: repeated runs produce the same bits.
+        let a = fold_stats_f32_masked(&xs, &mask);
+        let b = fold_stats_f32_masked(&xs, &mask);
+        assert_eq!(a.2.to_bits(), b.2.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "mask shorter")]
+    fn masked_fold_rejects_short_mask() {
+        fold_stats_f32_masked(&[1.0, 2.0], &[true]);
     }
 
     #[test]

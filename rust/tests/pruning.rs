@@ -17,7 +17,7 @@ use oseba::engine::{Dataset, LiveConfig};
 use oseba::index::{Cias, ColumnPredicate, ContentIndex, PredOp, RangeQuery};
 use oseba::ingest::Chunk;
 use oseba::runtime::NativeBackend;
-use oseba::storage::{BatchBuilder, RecordBatch, Schema};
+use oseba::storage::{BatchBuilder, RecordBatch, Schema, BLOCK_ROWS};
 use oseba::util::rng::Xoshiro256;
 
 const ROWS: usize = 12_000;
@@ -38,12 +38,19 @@ fn coordinator(budget: Option<usize>) -> Coordinator {
 /// oscillates (so zone maps usually cannot). A sprinkle of NaNs exercises
 /// the NaN policy end to end.
 fn dataset(seed: u64) -> RecordBatch {
+    trending_batch(seed, ROWS, 0.001)
+}
+
+/// The same trending shape at any row count and NaN density — the block
+/// battery uses multi-block partitions (rows/partition > BLOCK_ROWS) and
+/// a denser NaN sprinkle.
+fn trending_batch(seed: u64, rows: usize, nan_rate: f64) -> RecordBatch {
     let mut rng = Xoshiro256::seeded(seed);
     let mut b = BatchBuilder::new(Schema::stock());
-    for i in 0..ROWS {
+    for i in 0..rows {
         let trend = i as f32 + (rng.next_f32() - 0.5) * 20.0;
         let wave = (i as f32 / 50.0).sin() * 100.0;
-        let price = if rng.next_f64() < 0.001 { f32::NAN } else { trend };
+        let price = if rng.next_f64() < nan_rate { f32::NAN } else { trend };
         b.push(i as i64 * STEP, &[price, wave]);
     }
     b.finish().unwrap()
@@ -76,7 +83,11 @@ fn random_predicates(rng: &mut Xoshiro256) -> Vec<ColumnPredicate> {
 }
 
 fn random_range(rng: &mut Xoshiro256) -> RangeQuery {
-    let span = ROWS as i64 * STEP;
+    random_range_rows(rng, ROWS)
+}
+
+fn random_range_rows(rng: &mut Xoshiro256, rows: usize) -> RangeQuery {
+    let span = rows as i64 * STEP;
     let a = rng.range_u64(0, span as u64) as i64;
     let b = rng.range_u64(0, span as u64) as i64;
     RangeQuery { lo: a.min(b), hi: a.max(b) }
@@ -197,7 +208,12 @@ fn check_point(
         ds,
         index,
         &query,
-        PlanOptions { zone_pruning: true, filter_pruning: false, agg_pushdown: true },
+        PlanOptions {
+            zone_pruning: true,
+            filter_pruning: false,
+            agg_pushdown: true,
+            block_pruning: true,
+        },
     )
     .unwrap();
     let raw = plan_query(ds, index, &query, false).unwrap();
@@ -270,7 +286,14 @@ fn check_agg(
         ds,
         index,
         &query,
-        PlanOptions { zone_pruning: true, filter_pruning: true, agg_pushdown: false },
+        // The oracle arm is fully blind: no sketch answers and no block
+        // assist, so `estimated_rows` books every targeted row.
+        PlanOptions {
+            zone_pruning: true,
+            filter_pruning: true,
+            agg_pushdown: false,
+            block_pruning: false,
+        },
     )
     .unwrap();
     assert_eq!(off.explain.agg_answered, 0);
@@ -426,6 +449,266 @@ fn sketch_answered_matches_scan_on_live_snapshot() {
         "live-full",
     );
     assert!(answered > 0);
+    live.close();
+}
+
+/// Row count of the block-battery datasets: three kernel blocks per
+/// partition, so edge slices cross block boundaries and block-level zones
+/// are strictly finer than the partition zone.
+const BROWS: usize = PARTS * 3 * BLOCK_ROWS;
+
+/// Random conjunction of 0..=2 comparison predicates scaled to a
+/// `rows`-row trending batch (no Eq — the point-probe battery owns those;
+/// comparisons are what block zones prune).
+fn random_block_predicates(rng: &mut Xoshiro256, rows: usize) -> Vec<ColumnPredicate> {
+    let n = rng.range_u64(0, 3) as usize;
+    (0..n)
+        .map(|_| {
+            let column = rng.range_u64(0, 2) as usize;
+            let op = match rng.range_u64(0, 4) {
+                0 => PredOp::Gt,
+                1 => PredOp::Ge,
+                2 => PredOp::Lt,
+                _ => PredOp::Le,
+            };
+            let value = match column {
+                0 => rng.next_f64() as f32 * (rows as f32 + 200.0) - 100.0,
+                _ => rng.next_f64() as f32 * 240.0 - 120.0,
+            };
+            ColumnPredicate { column, op, value }
+        })
+        .collect()
+}
+
+/// Run one query with block sketches on (the default plan) and off, and
+/// demand **bit-exact** agreement plus a raw-batch scan oracle — a
+/// covered block's retained partial is the partial the scan would fold,
+/// and a pruned block's masked fold is the merge identity, so every float
+/// must match. Also checks the explain arithmetic (`blocks_covered +
+/// blocks_pruned + blocks_scanned = blocks_considered`; the blind arm
+/// classifies nothing). Returns the assisted plan's (covered, pruned).
+fn check_blocks(
+    c: &Coordinator,
+    ds: &Dataset,
+    index: &dyn ContentIndex,
+    batch: &RecordBatch,
+    q: RangeQuery,
+    preds: &[ColumnPredicate],
+    visible_rows: usize,
+    label: &str,
+) -> (usize, usize) {
+    let query = Query::stats(q, 0).filtered(preds.to_vec());
+    let on = plan_query(ds, index, &query, true).unwrap();
+    let off = plan_query_opts(
+        ds,
+        index,
+        &query,
+        PlanOptions { block_pruning: false, ..PlanOptions::default() },
+    )
+    .unwrap();
+    let ex = &on.explain;
+    assert_eq!(
+        ex.blocks_covered + ex.blocks_pruned + ex.blocks_scanned,
+        ex.blocks_considered,
+        "{label}: block arithmetic for q={q:?} preds={preds:?}"
+    );
+    assert_eq!(
+        off.explain.blocks_considered, 0,
+        "{label}: blind arm must classify no blocks"
+    );
+    assert!(
+        ex.estimated_rows <= off.explain.estimated_rows,
+        "{label}: block assist only shrinks the folded-row estimate"
+    );
+
+    let got = c.execute_physical(ds, &on, &query);
+    let want = c.execute_physical(ds, &off, &query);
+
+    // Scan oracle over the raw batch: exact count, NaNs and extremes.
+    let mut count = 0u64;
+    let mut nans = 0u64;
+    let mut mx = f32::MIN;
+    let mut mn = f32::MAX;
+    for r in 0..visible_rows {
+        let k = batch.keys[r];
+        if k < q.lo || k > q.hi {
+            continue;
+        }
+        if !preds
+            .iter()
+            .all(|p| p.matches(batch.columns[p.column][r]))
+        {
+            continue;
+        }
+        let x = batch.columns[0][r];
+        if x.is_nan() {
+            nans += 1;
+            continue;
+        }
+        count += 1;
+        mx = mx.max(x);
+        mn = mn.min(x);
+    }
+
+    match (got, want) {
+        (Ok(QueryOutput::Stats(g)), Ok(QueryOutput::Stats(w))) => {
+            assert_eq!(
+                g, w,
+                "{label}: blocks-on vs blocks-off differ for q={q:?} preds={preds:?}"
+            );
+            assert_eq!(g.count, count, "{label}: count vs oracle for q={q:?} preds={preds:?}");
+            assert_eq!(g.nans, nans, "{label}: nan count vs oracle");
+            if count > 0 {
+                assert_eq!(g.max, mx, "{label}: max vs oracle");
+                assert_eq!(g.min, mn, "{label}: min vs oracle");
+            }
+        }
+        (Err(_), Err(_)) => {
+            assert_eq!(count, 0, "{label}: both arms errored but oracle counts rows");
+        }
+        (g, w) => panic!(
+            "{label}: arms disagree on success for q={q:?} preds={preds:?}: {g:?} vs {w:?}"
+        ),
+    }
+    (ex.blocks_covered, ex.blocks_pruned)
+}
+
+#[test]
+fn block_assisted_matches_blind_on_fixed_dataset() {
+    let batch = trending_batch(71, BROWS, 0.01);
+    let c = coordinator(None);
+    let ds = c.load(batch.clone(), PARTS).unwrap();
+    let index = c.build_index(&ds, oseba::coordinator::IndexKind::Cias).unwrap();
+    let mut rng = Xoshiro256::seeded(31);
+    for _ in 0..30 {
+        let q = random_range_rows(&mut rng, BROWS);
+        let preds = random_block_predicates(&mut rng, BROWS);
+        check_blocks(&c, &ds, index.as_ref(), &batch, q, &preds, BROWS, "fixed");
+    }
+    // Deterministic shapes. A predicate-free window starting one block
+    // into partition 0 covers its two interior blocks...
+    let aligned =
+        RangeQuery { lo: BLOCK_ROWS as i64 * STEP, hi: (3 * BLOCK_ROWS as i64 - 1) * STEP };
+    let (cv, _) =
+        check_blocks(&c, &ds, index.as_ref(), &batch, aligned, &[], BROWS, "fixed-aligned");
+    assert_eq!(cv, 2, "grid-aligned edge window answers from covered blocks");
+    // ...and a price cutoff above partition 0's first two blocks prunes
+    // exactly those (the trending column makes block zones disjoint).
+    let cut = vec![ColumnPredicate {
+        column: 0,
+        op: PredOp::Ge,
+        value: 2.0 * BLOCK_ROWS as f32 + 200.0,
+    }];
+    let (_, pr) = check_blocks(
+        &c,
+        &ds,
+        index.as_ref(),
+        &batch,
+        RangeQuery { lo: 0, hi: i64::MAX },
+        &cut,
+        BROWS,
+        "fixed-cut",
+    );
+    assert_eq!(pr, 2, "block zones prune below the cutoff");
+}
+
+#[test]
+fn block_assisted_matches_blind_on_cold_tiered_dataset() {
+    let dir = oseba::testing::temp_dir("blocks-tiered");
+    let batch = trending_batch(72, BROWS, 0.01);
+    // Budget ~2.5 of 8 partitions: most of the dataset lives on disk.
+    let probe = oseba::storage::partition_batch_uniform(&batch, BROWS / PARTS).unwrap();
+    let one = probe[0].bytes();
+    let c = coordinator(Some(2 * one + one / 2));
+    let ds = c.load_tiered(batch.clone(), PARTS, &dir).unwrap();
+    let index = c.build_index(&ds, oseba::coordinator::IndexKind::Cias).unwrap();
+    let store = ds.store().unwrap().clone();
+    let mut rng = Xoshiro256::seeded(32);
+    for _ in 0..12 {
+        store.shrink(usize::MAX).unwrap(); // every partition Cold
+        let q = random_range_rows(&mut rng, BROWS);
+        let preds = random_block_predicates(&mut rng, BROWS);
+        check_blocks(&c, &ds, index.as_ref(), &batch, q, &preds, BROWS, "tiered");
+    }
+
+    // The acceptance shape: a grid-aligned edge window on an all-Cold
+    // store answers from the slot table's block partials without faulting
+    // a single byte in — the blind arm pays the fault and must agree
+    // bit-for-bit.
+    store.shrink(usize::MAX).unwrap();
+    let q = RangeQuery { lo: BLOCK_ROWS as i64 * STEP, hi: (3 * BLOCK_ROWS as i64 - 1) * STEP };
+    let query = Query::stats(q, 0);
+    let plan = plan_query(&ds, index.as_ref(), &query, true).unwrap();
+    assert_eq!(plan.explain.blocks_covered, 2, "{:?}", plan.explain);
+    assert_eq!(plan.explain.estimated_rows, 0, "{:?}", plan.explain);
+    let before = store.counters();
+    let on = c.execute_physical(&ds, &plan, &query).unwrap();
+    let d = store.counters().since(&before);
+    assert_eq!((d.faults, d.segment_bytes_read), (0, 0), "covered blocks touch no data");
+    store.shrink(usize::MAX).unwrap();
+    let blind = plan_query_opts(
+        &ds,
+        index.as_ref(),
+        &query,
+        PlanOptions { block_pruning: false, ..PlanOptions::default() },
+    )
+    .unwrap();
+    let before = store.counters();
+    let off = c.execute_physical(&ds, &blind, &query).unwrap();
+    assert!(store.counters().since(&before).faults > 0, "blind edge scan must fault");
+    match (on, off) {
+        (QueryOutput::Stats(a), QueryOutput::Stats(b)) => assert_eq!(a, b),
+        other => panic!("stats outputs expected: {other:?}"),
+    }
+    c.context().unpersist(&ds);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn block_assisted_matches_blind_on_live_snapshot() {
+    let batch = trending_batch(73, BROWS, 0.01);
+    let c = coordinator(None);
+    let live = c
+        .create_live(
+            Schema::stock(),
+            LiveConfig { rows_per_partition: BROWS / PARTS, max_asl: 8 },
+        )
+        .unwrap();
+    let mut lo = 0usize;
+    let mut rng = Xoshiro256::seeded(33);
+    while lo < BROWS {
+        let hi = (lo + 2_000 + rng.range_u64(0, 3_000) as usize).min(BROWS);
+        live.append(Chunk {
+            keys: batch.keys[lo..hi].to_vec(),
+            columns: batch.columns.iter().map(|c| c[lo..hi].to_vec()).collect(),
+        })
+        .unwrap();
+        lo = hi;
+    }
+    let snap = c.snapshot_live(&live);
+    let index = snap.index().expect("sealed partitions exist");
+    let visible_rows = snap.rows();
+    assert!(visible_rows >= 3 * BLOCK_ROWS, "at least one partition sealed");
+    for _ in 0..10 {
+        let q = random_range_rows(&mut rng, BROWS);
+        let preds = random_block_predicates(&mut rng, BROWS);
+        check_blocks(&c, snap.dataset(), index, &batch, q, &preds, visible_rows, "live");
+    }
+    // Live-sealed partitions retain their seal-time block partials too:
+    // the aligned edge window over partition 0 is block-covered.
+    let aligned =
+        RangeQuery { lo: BLOCK_ROWS as i64 * STEP, hi: (3 * BLOCK_ROWS as i64 - 1) * STEP };
+    let (cv, _) = check_blocks(
+        &c,
+        snap.dataset(),
+        index,
+        &batch,
+        aligned,
+        &[],
+        visible_rows,
+        "live-aligned",
+    );
+    assert_eq!(cv, 2, "sealed partitions carry block partials");
     live.close();
 }
 

@@ -259,6 +259,100 @@ fn tampered_filter_section_is_rejected() {
 }
 
 #[test]
+fn tampered_blocks_section_is_rejected() {
+    // Every way a v5 manifest's per-segment `blocks` section can go bad
+    // must fail `open` with an explicit `OsebaError::Store` — a silently
+    // accepted corrupt hierarchy could prune a block that holds matches
+    // or answer one from garbage partials.
+    let dir = temp_dir("bad-blocks");
+    save_store(&dir, 2_000, 2, 11);
+    let path = dir.join(oseba::store::MANIFEST_FILE);
+    let pristine = std::fs::read_to_string(&path).unwrap();
+    let c = coordinator(None);
+
+    let mutate = |f: &dyn Fn(&mut Json)| -> OsebaError {
+        let mut doc = Json::parse(&pristine).unwrap();
+        {
+            let Json::Obj(top) = &mut doc else { panic!("manifest is an object") };
+            let Some(Json::Arr(segs)) = top.get_mut("segments") else { panic!("segments") };
+            let Json::Obj(seg) = &mut segs[0] else { panic!("segment object") };
+            let Some(b) = seg.get_mut("blocks") else { panic!("blocks section") };
+            f(b);
+        }
+        std::fs::write(&path, doc.to_string()).unwrap();
+        c.open_store(&dir).unwrap_err()
+    };
+
+    // A flipped hex character in the payload (past the 8-char CRC prefix)
+    // fails the section CRC.
+    let err = mutate(&|b| {
+        let Json::Str(h) = b else { panic!("hex string") };
+        let flip = if h.as_bytes()[10] == b'0' { "1" } else { "0" };
+        h.replace_range(10..11, flip);
+    });
+    assert!(matches!(err, OsebaError::Store(_)), "got: {err:?}");
+    assert!(err.to_string().contains("crc mismatch"), "got: {err}");
+
+    // Too short to even hold the CRC prefix.
+    let err = mutate(&|b| *b = Json::str("ab"));
+    assert!(matches!(err, OsebaError::Store(_)), "got: {err:?}");
+    assert!(err.to_string().contains("truncated"), "got: {err}");
+
+    // Odd-length and non-hex sections are named, not panicked on.
+    let err = mutate(&|b| *b = Json::str("abc"));
+    assert!(err.to_string().contains("odd hex length"), "got: {err}");
+    let err = mutate(&|b| *b = Json::str("zz"));
+    assert!(err.to_string().contains("non-hex"), "got: {err}");
+
+    // Wrong JSON type.
+    let err = mutate(&|b| *b = Json::num(1.0));
+    assert!(err.to_string().contains("hex string"), "got: {err}");
+
+    // The pristine manifest still opens (the harness itself is sound);
+    // an explicit `"blocks": null` opt-out opens block-blind and still
+    // answers — block sketches only ever accelerate.
+    std::fs::write(&path, &pristine).unwrap();
+    let (ds, _) = c.open_store(&dir).unwrap();
+    c.context().unpersist(&ds);
+    let mut doc = Json::parse(&pristine).unwrap();
+    {
+        let Json::Obj(top) = &mut doc else { panic!("manifest is an object") };
+        let Some(Json::Arr(segs)) = top.get_mut("segments") else { panic!("segments") };
+        for seg in segs.iter_mut() {
+            let Json::Obj(seg) = seg else { panic!("segment object") };
+            seg.insert("blocks".into(), Json::Null);
+        }
+    }
+    std::fs::write(&path, doc.to_string()).unwrap();
+    let (ds, index) = c.open_store(&dir).unwrap();
+    let st = c
+        .analyze_period_oseba(&ds, index.as_ref(), RangeQuery { lo: 0, hi: i64::MAX }, 0)
+        .unwrap();
+    assert_eq!(st.count, 2_000);
+    c.context().unpersist(&ds);
+
+    // A v4 manifest (no `blocks` field at all) still opens: pre-v5
+    // segments get the "no block sketches → scan" sentinel.
+    let mut doc = Json::parse(&pristine).unwrap();
+    {
+        let Json::Obj(top) = &mut doc else { panic!("manifest is an object") };
+        top.insert("version".into(), Json::num(4.0));
+        let Some(Json::Arr(segs)) = top.get_mut("segments") else { panic!("segments") };
+        for seg in segs.iter_mut() {
+            let Json::Obj(seg) = seg else { panic!("segment object") };
+            seg.remove("blocks");
+        }
+    }
+    std::fs::write(&path, doc.to_string()).unwrap();
+    let (ds, index) = c.open_store(&dir).unwrap();
+    let st = c
+        .analyze_period_oseba(&ds, index.as_ref(), RangeQuery { lo: 0, hi: i64::MAX }, 0)
+        .unwrap();
+    assert_eq!(st.count, 2_000);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn opened_store_answers_covered_queries_from_manifest_sketches() {
     use oseba::coordinator::{plan_query, Query};
     let dir = temp_dir("open-sketch");

@@ -7,13 +7,15 @@ paper-claim bench emits via ``benches/common::write_bench_json``).
 Documents present on only one side are listed but not compared.
 
 For each bench present on both sides, the two JSON trees are walked in
-lockstep and every numeric leaf with the same path is compared. Leaves
-whose path mentions ``secs`` and latency-quantile leaves (a final path
-segment like ``p50`` / ``p99`` / ``p999``, as the traffic harness
-emits) are treated as timings: the delta column shows the relative
-change, and ``--fail-above PCT`` turns a slowdown beyond PCT percent
-on any such leaf into exit code 1. Other numeric leaves (byte counts,
-row counts, speedups) are shown for context but never fail the run.
+lockstep and every numeric leaf with the same path is compared. Timing
+leaves are gated: paths mentioning ``secs``, latency-quantile leaves (a
+final path segment like ``p50`` / ``p99`` / ``p999``, as the traffic
+harness emits), quantile-suffixed leaves (``segment_stats_lanes_p50``),
+and min-of-iterations leaves (``masked_fold_lanes_min``, as the
+microbench fold arms emit). The delta column shows the relative change,
+and ``--fail-above PCT`` turns a slowdown beyond PCT percent on any
+such leaf into exit code 1. Other numeric leaves (byte counts, row
+counts, speedups) are shown for context but never fail the run.
 
 With no baseline documents the script prints how to record one and
 exits 0 — the delta gate only arms itself once someone has committed
@@ -30,11 +32,19 @@ import sys
 from pathlib import Path
 
 QUANTILE_RE = re.compile(r"^p\d{2,3}$")
+QUANTILE_TOKEN_RE = re.compile(r"(^|_)p\d{2,3}(_|$)")
 
 
-def is_quantile_leaf(path):
-    """True if the leaf's last dotted segment is a quantile (p50..p999)."""
-    return bool(QUANTILE_RE.match(path.rsplit(".", 1)[-1]))
+def is_timing_leaf(path):
+    """True for leaves holding wall-clock timings: any ``secs`` mention,
+    a bare-quantile final segment (p50..p999), a quantile token inside
+    the final segment (``cias_lookup_p50_m15``), or a min-of-iterations
+    suffix (``masked_fold_lanes_min``)."""
+    last = path.rsplit(".", 1)[-1]
+    return ("secs" in path
+            or bool(QUANTILE_RE.match(last))
+            or bool(QUANTILE_TOKEN_RE.search(last))
+            or last.endswith("_min"))
 
 
 def find_docs(root):
@@ -80,7 +90,7 @@ def compare(name, base_doc, cur_doc, fail_above):
     rows = []
     for path in sorted(base.keys() & cur.keys()):
         b, c = base[path], cur[path]
-        timing = "secs" in path or is_quantile_leaf(path)
+        timing = is_timing_leaf(path)
         if b == c:
             continue
         if b != 0:

@@ -1,8 +1,8 @@
-//! Seeded violation: the reader guards the v2 (zones) and v3 (sketches)
-//! upgrades but not v4 (filters), while VERSION says the writer can emit
-//! v4.
+//! Seeded violation: the reader guards the v2 (zones), v3 (sketches) and
+//! v4 (filters) upgrades but not v5 (block sketches), while VERSION says
+//! the writer can emit v5.
 
-pub const VERSION: u32 = 4;
+pub const VERSION: u32 = 5;
 pub const MIN_VERSION: u32 = 1;
 
 pub fn to_json(version: u32) -> u32 {
@@ -21,6 +21,10 @@ pub fn from_json(version: u32) -> bool {
         // ...v2 upgrade path handled...
         return true;
     }
-    // ...but no `version < 4` guard — the seeded violation.
+    if version < 4 {
+        // ...v3 upgrade path handled...
+        return true;
+    }
+    // ...but no `version < 5` guard — the seeded violation.
     true
 }
