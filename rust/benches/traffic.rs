@@ -17,10 +17,15 @@
 //! Knobs (env): `OSEBA_TRAFFIC_OPS` total ops (default 600),
 //! `OSEBA_TRAFFIC_CONC` worker threads (default 4), `OSEBA_TRAFFIC_ROWS`
 //! rows per dataset (default 60_000), `OSEBA_TRAFFIC_MIX` weights as
-//! `climate:stock:cdr` (default `1:1:1`).
+//! `climate:stock:cdr` (default `1:1:1`), `OSEBA_TRAFFIC_FAULT_OPS` /
+//! `OSEBA_TRAFFIC_FAULT_PROB` for the injected-fault arm (default
+//! 200 ops at 15% per-read error probability; `0` ops disables it).
 //!
 //! Emits `BENCH_traffic.json` with p50/p99/mean latency, error count,
-//! faults and bytes materialized per op class.
+//! faults and bytes materialized per op class, plus a `faulted` object:
+//! the same stats op shape against a tiered store whose segment reads
+//! fail probabilistically, reporting error rate, latency under faults,
+//! and the store's retry/quarantine counters (DESIGN.md §16).
 
 mod common;
 
@@ -40,6 +45,107 @@ use oseba::util::rng::Xoshiro256;
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Injected-fault arm: narrow stats scans against a tiered store whose
+/// segment reads error with probability `prob`, exercising the store's
+/// retry path end to end. Every op starts cold (`release_resident`), so
+/// every op pays the faulty read path; the returned object carries the
+/// observed error rate, the latency quantiles *under faults*, and the
+/// store's recovery counters.
+fn faulted_arm(rows: usize, ops: usize, prob: f64) -> Json {
+    use oseba::engine::Lineage;
+    use oseba::index::RangeQuery;
+    use oseba::store::fault::{site, FaultInjector, FaultKind, FaultRule};
+    use oseba::store::{StoreIo, TieredStore};
+
+    let dir = std::env::temp_dir()
+        .join(format!("oseba-traffic-faults-{}", std::process::id()));
+    // Build and save the store over clean I/O — faults arm on reads only.
+    let batch = ClimateGen::default().generate(rows);
+    {
+        let store = TieredStore::create_with(
+            &dir,
+            batch.schema.clone(),
+            oseba::engine::MemoryTracker::unbounded(),
+            StoreIo::disabled(),
+        )
+        .expect("create store");
+        let per = rows.div_ceil(16);
+        for part in oseba::storage::partition_batch_uniform(&batch, per).expect("partition") {
+            store.insert(part).expect("insert");
+        }
+        store.save().expect("save");
+    }
+
+    let cfg = AppConfig { cluster_workers: 2, ..Default::default() };
+    let coord = Coordinator::new(&cfg, Arc::new(NativeBackend)).expect("coordinator");
+    let injector = Arc::new(FaultInjector::new(0xFA17));
+    injector.add_rule(FaultRule::new(site::SEGMENT_READ, FaultKind::Error).prob(prob));
+    let tracker = coord.context().block_manager().tracker();
+    let (store, index) =
+        TieredStore::open_with(&dir, tracker, StoreIo::with(Arc::clone(&injector)))
+            .expect("open store");
+    let store = Arc::new(store);
+    let ds = coord
+        .context()
+        .adopt_tiered(
+            store.schema().clone(),
+            Arc::clone(&store),
+            Lineage::Source { name: "traffic-faults".into() },
+        )
+        .expect("adopt store");
+    coord.cluster().ensure_partitions(ds.num_partitions());
+
+    let key_hi = ds.key_max().unwrap_or(0);
+    let before = store.counters();
+    let hist = LatencyHistogram::new();
+    let mut errors = 0u64;
+    let mut rng = Xoshiro256::seeded(0xFA17_7AFF);
+    for _ in 0..ops {
+        // Narrow scans off the partition grid: edge slices cannot be
+        // answered from sketches, so every op reads segment bytes.
+        let span = (key_hi / 64).max(1);
+        let lo = rng.below((key_hi - span).max(0) as u64 + 1) as i64;
+        let q = RangeQuery { lo, hi: lo + span };
+        // Cold-start every op — otherwise the first fault-in pins the
+        // partitions resident and later ops never touch the fault sites.
+        store.release_resident();
+        let t = Timer::start();
+        if coord.analyze_period_oseba(&ds, &index, q, 0).is_err() {
+            errors += 1;
+        }
+        hist.record_duration(t.elapsed());
+    }
+    let d = store.counters().since(&before);
+    let snap = hist.snapshot();
+    println!(
+        "  faulted  {:>6} ops  p50 {:>10.6}s  p99 {:>10.6}s  {} errors  {} retries ({} recovered)",
+        ops,
+        snap.p50() as f64 / 1e9,
+        snap.p99() as f64 / 1e9,
+        errors,
+        d.io_retries,
+        d.io_retry_successes,
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    Json::obj(vec![
+        ("read_error_prob", Json::num(prob)),
+        ("ops", Json::num(ops as f64)),
+        ("errors", Json::num(errors as f64)),
+        ("error_rate", Json::num(errors as f64 / (ops.max(1)) as f64)),
+        ("p50", Json::num(snap.p50() as f64 / 1e9)),
+        ("p99", Json::num(snap.p99() as f64 / 1e9)),
+        ("mean_secs", Json::num(snap.mean_secs())),
+        ("io_retries", Json::num(d.io_retries as f64)),
+        ("io_retry_successes", Json::num(d.io_retry_successes as f64)),
+        ("partitions_quarantined", Json::num(d.quarantined as f64)),
+        ("recovery_secs", Json::num(d.recovery_nanos as f64 / 1e9)),
+    ])
 }
 
 /// One workload class: a dedicated server plus the request generator for
@@ -234,6 +340,15 @@ fn main() {
         "traffic: {done} ops in {wall_secs:.3}s ({:.0} ops/s)",
         done as f64 / wall_secs.max(1e-9)
     );
+
+    let fault_ops = env_usize("OSEBA_TRAFFIC_FAULT_OPS", 200);
+    let fault_prob = env_f64("OSEBA_TRAFFIC_FAULT_PROB", 0.15);
+    let faulted = if fault_ops > 0 {
+        faulted_arm(rows, fault_ops, fault_prob)
+    } else {
+        Json::Null
+    };
+
     common::write_bench_json(
         "traffic",
         Json::obj(vec![
@@ -243,6 +358,7 @@ fn main() {
             ("rows_per_class", Json::num(rows as f64)),
             ("wall_secs", Json::num(wall_secs)),
             ("classes", Json::arr(class_docs)),
+            ("faulted", faulted),
         ]),
     );
 }

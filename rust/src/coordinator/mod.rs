@@ -105,11 +105,15 @@ fn assisted_slice_moments(
 
 /// Wall-clock split of one physical execution: slice resolve / cold
 /// fault-in versus scanning + partial merging. Accumulated with
-/// [`phase_mark`], so readings are monotonic-safe.
+/// [`phase_mark`], so readings are monotonic-safe. Also carries the
+/// execution-time degraded count — slices the plan targeted but whose
+/// partition failed verification *during* this execution (and was
+/// quarantined by the store), answered by skipping.
 #[derive(Clone, Copy, Debug, Default)]
 struct ExecTimings {
     fault_in: Duration,
     scan_merge: Duration,
+    degraded: usize,
 }
 
 /// Assemble the span tree of one executed plan. Phase wall times come
@@ -412,7 +416,7 @@ impl Coordinator {
         let query = Query::stats(q, column);
         let plan = plan_query(ds, index, &query, true)?;
         let mut merged = TrendPartial::EMPTY;
-        self.for_each_plan_slice(ds, &plan.ranges, column, None, |s, src| {
+        let degraded = self.for_each_plan_slice(ds, &plan.ranges, column, None, |s, src| {
             merged = merged.merge(match src {
                 PlanSource::Sketch(sk) => sk.trend,
                 PlanSource::Scan(part) => TrendPartial::scan(
@@ -431,6 +435,8 @@ impl Coordinator {
                 q.lo, q.hi
             )));
         };
+        let mut explain = plan.explain;
+        explain.degraded += degraded;
         Ok((
             TrendLine {
                 slope,
@@ -438,7 +444,7 @@ impl Coordinator {
                 count: merged.n as u64,
                 nans: merged.nans as u64,
             },
-            plan.explain,
+            explain,
         ))
     }
 
@@ -495,12 +501,28 @@ impl Coordinator {
         let out = self.execute_physical_timed(ds, &plan, query, &mut et)?;
         m.record_phase(PlanPhase::FaultIn, et.fault_in);
         m.record_phase(PlanPhase::ScanMerge, et.scan_merge);
-        let span = want_trace.then(|| {
-            let faults =
-                ds.store().map(|s| s.counters().since(&store_before).faults).unwrap_or(0);
-            trace_span(&plan, &et, faults, total.elapsed())
-        });
-        Ok((out, plan.explain, span))
+        let store_delta = ds
+            .store()
+            .map(|s| s.counters().since(&store_before))
+            .unwrap_or_default();
+        // Time the store spent retrying/quarantining while this query
+        // resolved its slices. Recorded only when fault handling actually
+        // ran, so the histogram's count is the number of affected queries.
+        if store_delta.recovery_nanos > 0 {
+            m.record_phase(
+                PlanPhase::FaultRecovery,
+                Duration::from_nanos(store_delta.recovery_nanos),
+            );
+        }
+        // Plan-time degraded (already in `plan.explain`) counts slices the
+        // lowering dropped for known-quarantined partitions; execution-time
+        // degraded adds partitions that failed verification during *this*
+        // execution.
+        let mut explain = plan.explain;
+        explain.degraded += et.degraded;
+        let span =
+            want_trace.then(|| trace_span(&plan, &et, store_delta.faults, total.elapsed()));
+        Ok((out, explain, span))
     }
 
     /// Execute an already-lowered [`PhysicalPlan`]. Public so the pruning
@@ -531,7 +553,9 @@ impl Coordinator {
                 let mark = Instant::now();
                 let block_preds =
                     plan.block_assist.then_some(query.predicates.as_slice());
-                let items = self.stats_items(ds, &plan.ranges, column, block_preds)?;
+                let (items, degraded) =
+                    self.stats_items(ds, &plan.ranges, column, block_preds)?;
+                et.degraded += degraded;
                 let mark = phase_mark(&mut et.fault_in, mark);
                 if items.is_empty() {
                     return Err(empty_selection_error(query));
@@ -600,6 +624,13 @@ impl Coordinator {
     /// booked into the engine counters, and when classification leaves
     /// nothing to scan the slice is answered as [`PlanSource::Blocks`]
     /// without ever resolving — a cold partition faults nothing in.
+    ///
+    /// Returns the number of slices skipped as **degraded**: a resolve
+    /// that fails with a store-level verification error (the segment was
+    /// corrupt and the store quarantined the partition) drops the slice
+    /// instead of failing the query — unless the store is in strict mode,
+    /// in which case the error propagates. I/O errors other than
+    /// verification failures always propagate.
     fn for_each_plan_slice(
         &self,
         ds: &Dataset,
@@ -607,7 +638,8 @@ impl Coordinator {
         column: usize,
         block_preds: Option<&[ColumnPredicate]>,
         mut visit: impl FnMut(crate::index::PartitionSlice, PlanSource),
-    ) -> Result<()> {
+    ) -> Result<usize> {
+        let mut degraded = 0usize;
         let mut answered = 0usize;
         let mut block_answered = 0usize;
         let mut covered_blocks = 0usize;
@@ -657,9 +689,19 @@ impl Coordinator {
                         }
                     }
                 }
-                for (part, refined) in
-                    self.ctx.resolve_slices(ds, std::slice::from_ref(s), pr.range)?
-                {
+                let resolved =
+                    match self.ctx.resolve_slices(ds, std::slice::from_ref(s), pr.range) {
+                        Ok(r) => r,
+                        Err(OsebaError::Store(_)) if !ds.strict_faults() => {
+                            // The store quarantined the partition: serve
+                            // the rest of the selection and account for
+                            // the gap instead of failing the query.
+                            degraded += 1;
+                            continue;
+                        }
+                        Err(e) => return Err(e),
+                    };
+                for (part, refined) in resolved {
                     visit(refined, PlanSource::Scan(part));
                 }
             }
@@ -667,22 +709,24 @@ impl Coordinator {
         self.ctx.note_agg_answered(answered);
         self.ctx.note_targeted(block_answered);
         self.ctx.note_blocks(covered_blocks, pruned_blocks);
-        Ok(())
+        self.ctx.note_degraded(degraded);
+        Ok(degraded)
     }
 
-    /// Collect [`Self::for_each_plan_slice`] into the stats work list.
+    /// Collect [`Self::for_each_plan_slice`] into the stats work list,
+    /// plus the count of slices skipped as degraded.
     fn stats_items(
         &self,
         ds: &Dataset,
         ranges: &[PrunedRange],
         column: usize,
         block_preds: Option<&[ColumnPredicate]>,
-    ) -> Result<Vec<(crate::index::PartitionSlice, PlanSource)>> {
+    ) -> Result<(Vec<(crate::index::PartitionSlice, PlanSource)>, usize)> {
         let mut items = Vec::new();
-        self.for_each_plan_slice(ds, ranges, column, block_preds, |s, src| {
+        let degraded = self.for_each_plan_slice(ds, ranges, column, block_preds, |s, src| {
             items.push((s, src))
         })?;
-        Ok(items)
+        Ok((items, degraded))
     }
 
     /// Pin + gather the (predicate-filtered) series of `column` across a
@@ -821,6 +865,7 @@ impl Coordinator {
         let mut rows_avoided = 0usize;
         let mut blocks_covered = 0usize;
         let mut blocks_pruned = 0usize;
+        let mut degraded = 0usize;
 
         for pq in &plan {
             let mut slices = index.lookup(pq.range);
@@ -895,9 +940,25 @@ impl Coordinator {
                         ));
                     }
                     None => {
-                        for (part, slice) in
-                            self.ctx.resolve_slices(ds, std::slice::from_ref(s), pq.range)?
-                        {
+                        // A verification failure quarantines the partition
+                        // inside the store; unless strict mode demands a
+                        // hard error, skip its slice and keep serving the
+                        // remainder of the batch. (Touched implies
+                        // resolved, so back the count out.)
+                        let resolved = match self.ctx.resolve_slices(
+                            ds,
+                            std::slice::from_ref(s),
+                            pq.range,
+                        ) {
+                            Ok(r) => r,
+                            Err(OsebaError::Store(_)) if !ds.strict_faults() => {
+                                degraded += 1;
+                                partitions_touched -= 1;
+                                continue;
+                            }
+                            Err(e) => return Err(e),
+                        };
+                        for (part, slice) in resolved {
                             for (si, seg) in segs_here.iter().enumerate() {
                                 let rs = part.lower_bound(seg.lo).max(slice.row_start);
                                 let re = part.upper_bound(seg.hi).min(slice.row_end);
@@ -945,6 +1006,7 @@ impl Coordinator {
         }
         self.ctx.note_agg_answered(agg_answered);
         self.ctx.note_blocks(blocks_covered, blocks_pruned);
+        self.ctx.note_degraded(degraded);
 
         let batch = self.batch_kernel_calls;
         let net = self.cluster.net;
@@ -1019,6 +1081,12 @@ impl Coordinator {
             .store()
             .map(|s| s.counters().since(&store_before))
             .unwrap_or_default();
+        if store_delta.recovery_nanos > 0 {
+            self.ctx.metrics().record_phase(
+                PlanPhase::FaultRecovery,
+                Duration::from_nanos(store_delta.recovery_nanos),
+            );
+        }
         let report = BatchReport {
             queries: queries.len(),
             merged_ranges: plan.len(),
@@ -1035,6 +1103,7 @@ impl Coordinator {
             faults: store_delta.faults,
             evictions: store_delta.evictions,
             segment_bytes_read: store_delta.segment_bytes_read,
+            degraded,
             secs: timer.secs(),
         };
         Ok((stats, report))

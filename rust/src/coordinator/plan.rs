@@ -245,6 +245,13 @@ pub struct Explain {
     /// Classified blocks execution must still fold row-by-row (remainder
     /// blocks of an edge, predicate-satisfiable blocks).
     pub blocks_scanned: usize,
+    /// Proposed pairs the plan dropped because their partition is
+    /// quarantined (its segment failed verification after retries) and no
+    /// retained sketch covers it for this query. The answer is computed
+    /// over the remaining selection — exact on what survives, silent on
+    /// the quarantined rows. Always zero when the store is in strict mode
+    /// (lowering fails with [`OsebaError::Store`] instead).
+    pub degraded: usize,
 }
 
 impl Explain {
@@ -282,6 +289,12 @@ impl Explain {
                 self.blocks_considered,
             ));
         }
+        if self.degraded > 0 {
+            line.push_str(&format!(
+                " | DEGRADED: {} quarantined partition(s) skipped",
+                self.degraded
+            ));
+        }
         line
     }
 
@@ -305,6 +318,7 @@ impl Explain {
             ("blocks_covered", Json::num(self.blocks_covered as f64)),
             ("blocks_pruned", Json::num(self.blocks_pruned as f64)),
             ("blocks_scanned", Json::num(self.blocks_scanned as f64)),
+            ("degraded", Json::num(self.degraded as f64)),
         ])
     }
 }
@@ -377,8 +391,8 @@ impl PhysicalPlan {
     /// Plus the [`Explain`] arithmetic: `merged_ranges`, `targeted`,
     /// `agg_answered`, `estimated_rows` and `rows_avoided` are recomputed
     /// from the plan itself; `considered = targeted + zone_pruned +
-    /// filter_pruned`; the byte figures are the row figures times the
-    /// schema row width. When [`Self::block_assist`] is set the kernel-
+    /// filter_pruned + degraded`; the byte figures are the row figures
+    /// times the schema row width. When [`Self::block_assist`] is set the kernel-
     /// block classification is replayed slice by slice and the block
     /// counts must match, including `blocks_covered + blocks_pruned +
     /// blocks_scanned = blocks_considered`.
@@ -495,7 +509,11 @@ impl PhysicalPlan {
             ("merged_ranges", ex.merged_ranges, self.ranges.len() + self.baseline.len()),
             ("targeted", ex.targeted, targeted),
             ("agg_answered", ex.agg_answered, agg_answered),
-            ("considered", ex.considered, ex.targeted + ex.zone_pruned + ex.filter_pruned),
+            (
+                "considered",
+                ex.considered,
+                ex.targeted + ex.zone_pruned + ex.filter_pruned + ex.degraded,
+            ),
             ("estimated_rows", ex.estimated_rows, est_rows),
             ("rows_avoided", ex.rows_avoided, rows_avoided),
             ("estimated_bytes", ex.estimated_bytes, ex.estimated_rows * row_bytes),
@@ -708,23 +726,44 @@ fn prune_ranges(
         let survivors = kept;
         let mark = phase_mark(&mut timings.filter_pruning, mark);
         // Phase 4 — sketch classification: covered survivors are answered
-        // from their aggregate sketches, the rest go to the scan path.
+        // from their aggregate sketches, the rest go to the scan path. A
+        // quarantined partition (its segment failed verification after
+        // retries) can still be *covered* — the sketch is retained planner
+        // metadata, so the answer stays exact with zero fault-in — but it
+        // cannot be scanned: in strict mode the lowering fails, otherwise
+        // the slice is dropped and booked as `degraded`.
         let mut covered = Vec::new();
+        let mut kept = Vec::with_capacity(survivors.len());
         let mut edges = Vec::new();
-        for s in &survivors {
-            ex.targeted += 1;
+        for s in survivors {
             match agg_column
                 .and_then(|c| covered_in(ds, s.partition, c, std::slice::from_ref(&pq.range)))
             {
                 Some(_) => {
                     // Answered from the sketch: no rows will be read.
+                    ex.targeted += 1;
                     ex.agg_answered += 1;
                     ex.rows_avoided += s.rows();
                     covered.push(s.partition);
+                    kept.push(s);
                 }
-                None => edges.push(*s),
+                None if ds.quarantined(s.partition) => {
+                    if ds.strict_faults() {
+                        return Err(OsebaError::Store(format!(
+                            "partition {} is quarantined and the store is strict",
+                            s.partition
+                        )));
+                    }
+                    ex.degraded += 1;
+                }
+                None => {
+                    ex.targeted += 1;
+                    edges.push(s);
+                    kept.push(s);
+                }
             }
         }
+        let survivors = kept;
         let mark = phase_mark(&mut timings.sketch_classify, mark);
         // Phase 5 — block classification: slices the sketch stage left on
         // the scan path drop to kernel-block granularity. Interior blocks
@@ -1288,6 +1327,11 @@ mod tests {
         assert!(j.contains("\"filter_bytes\":"), "{j}");
         assert!(j.contains("\"blocks_considered\":0"), "{j}");
         assert!(j.contains("\"blocks_pruned\":0"), "{j}");
+        assert!(j.contains("\"degraded\":0"), "{j}");
+        assert!(!line.contains("DEGRADED"), "{line}");
+        let mut degraded = ex;
+        degraded.degraded = 2;
+        assert!(degraded.line().contains("DEGRADED: 2"), "{}", degraded.line());
     }
 
     #[test]

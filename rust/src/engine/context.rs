@@ -53,6 +53,10 @@ pub struct EngineCounters {
     /// Server request handlers that died by panic and were caught at the
     /// session boundary (the connection survives; the request errors).
     pub sessions_failed: AtomicUsize,
+    /// Selection slices served degraded: their partition was quarantined
+    /// (or failed verification mid-query) and was dropped from the answer
+    /// instead of failing it (DESIGN.md §16).
+    pub degraded_answers: AtomicUsize,
 }
 
 impl EngineCounters {
@@ -67,6 +71,7 @@ impl EngineCounters {
             blocks_covered: self.blocks_covered.load(Ordering::Relaxed),
             blocks_pruned: self.blocks_pruned.load(Ordering::Relaxed),
             sessions_failed: self.sessions_failed.load(Ordering::Relaxed),
+            degraded_answers: self.degraded_answers.load(Ordering::Relaxed),
         }
     }
 }
@@ -91,6 +96,8 @@ pub struct CounterSnapshot {
     pub blocks_pruned: usize,
     /// Server request handlers caught panicking at the session boundary.
     pub sessions_failed: usize,
+    /// Selection slices served degraded around quarantined partitions.
+    pub degraded_answers: usize,
 }
 
 /// The engine context.
@@ -537,6 +544,14 @@ impl OsebaContext {
     pub(crate) fn note_targeted(&self, n: usize) {
         if n > 0 {
             self.counters.partitions_targeted.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Record `n` selection slices served degraded: their quarantined
+    /// partitions were dropped from the answer instead of failing it.
+    pub(crate) fn note_degraded(&self, n: usize) {
+        if n > 0 {
+            self.counters.degraded_answers.fetch_add(n, Ordering::Relaxed);
         }
     }
 

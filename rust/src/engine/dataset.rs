@@ -246,6 +246,28 @@ impl Dataset {
             .sum()
     }
 
+    /// Whether `partition` is quarantined in the tiered backing (its
+    /// segment failed verification after retries, DESIGN.md §16). Always
+    /// `false` for resident datasets and hidden partitions — both can
+    /// never serve corrupt bytes.
+    pub fn quarantined(&self, partition: usize) -> bool {
+        if self.hidden(partition) {
+            return false;
+        }
+        match &self.store {
+            Some(st) => st.is_quarantined(partition),
+            None => false,
+        }
+    }
+
+    /// Whether the tiered backing demands strict fault handling: `true`
+    /// makes a query over a quarantined partition a hard error instead of
+    /// a degraded answer. Resident datasets have nothing to degrade over;
+    /// they report `false`.
+    pub fn strict_faults(&self) -> bool {
+        self.store.as_ref().map(|st| st.strict()).unwrap_or(false)
+    }
+
     /// Key bounds and row count of one visible partition —
     /// `(key_min, key_max, rows)`, O(1) metadata on every backing (no
     /// fault-in). This is what the planner's covered/edge classification

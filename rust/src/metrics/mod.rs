@@ -199,6 +199,11 @@ pub struct BatchReport {
     pub evictions: usize,
     /// Segment bytes read from disk by the batch's faults.
     pub segment_bytes_read: usize,
+    /// Slices skipped because their partition is quarantined (its segment
+    /// failed verification after retries) and no retained sketch covers
+    /// it. The batch's results are exact over the remaining selection;
+    /// non-zero only when the store allows degraded serving.
+    pub degraded: usize,
     /// Wall-clock seconds for planning + execution + demux.
     pub secs: f64,
 }
@@ -243,6 +248,12 @@ impl BatchReport {
                 humansize::bytes(self.segment_bytes_read),
             ));
         }
+        if self.degraded > 0 {
+            line.push_str(&format!(
+                " | DEGRADED: {} quarantined slice(s) skipped",
+                self.degraded
+            ));
+        }
         line
     }
 
@@ -264,6 +275,7 @@ impl BatchReport {
             ("faults", Json::num(self.faults as f64)),
             ("evictions", Json::num(self.evictions as f64)),
             ("segment_bytes_read", Json::num(self.segment_bytes_read as f64)),
+            ("degraded", Json::num(self.degraded as f64)),
             ("secs", Json::num(self.secs)),
         ])
     }
@@ -379,6 +391,11 @@ mod tests {
         let blocks = BatchReport { blocks_covered: 7, blocks_pruned: 2, ..r };
         assert!(blocks.line().contains("blocks: 7 covered, 2 pruned"), "{}", blocks.line());
         assert!(blocks.to_json().to_string().contains("\"blocks_pruned\":2"));
+        assert!(!r.line().contains("DEGRADED"), "healthy batches stay terse");
+        assert!(r.to_json().to_string().contains("\"degraded\":0"));
+        let degraded = BatchReport { degraded: 1, ..r };
+        assert!(degraded.line().contains("DEGRADED: 1"), "{}", degraded.line());
+        assert!(degraded.to_json().to_string().contains("\"degraded\":1"));
     }
 
     #[test]

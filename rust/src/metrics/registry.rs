@@ -29,7 +29,7 @@ pub const OP_METRICS: [&str; 6] =
 /// Registered per-plan-phase histogram names, index-aligned with
 /// [`PlanPhase`]. Every name must appear in the server's `metrics` op
 /// output (enforced by `oseba-lint`).
-pub const PHASE_METRICS: [&str; 8] = [
+pub const PHASE_METRICS: [&str; 9] = [
     "phase_targeting",
     "phase_zone_pruning",
     "phase_filter_pruning",
@@ -38,6 +38,7 @@ pub const PHASE_METRICS: [&str; 8] = [
     "phase_fault_in",
     "phase_scan_merge",
     "phase_demux",
+    "phase_fault_recovery",
 ];
 
 /// Instrumented server ops (everything except `shutdown`).
@@ -108,11 +109,15 @@ pub enum PlanPhase {
     ScanMerge,
     /// Distributing merged segment results back to batch queries.
     Demux,
+    /// Time the tiered store spent inside fault handling while resolving
+    /// this query's slices: retry backoff sleeps, re-reads after an I/O
+    /// error, and quarantine bookkeeping. Zero on a healthy store.
+    FaultRecovery,
 }
 
 impl PlanPhase {
     /// All phases, index-aligned with [`PHASE_METRICS`].
-    pub const ALL: [PlanPhase; 8] = [
+    pub const ALL: [PlanPhase; 9] = [
         PlanPhase::Targeting,
         PlanPhase::ZonePruning,
         PlanPhase::FilterPruning,
@@ -121,6 +126,7 @@ impl PlanPhase {
         PlanPhase::FaultIn,
         PlanPhase::ScanMerge,
         PlanPhase::Demux,
+        PlanPhase::FaultRecovery,
     ];
 
     /// Registered histogram name for this phase.
@@ -139,6 +145,7 @@ impl PlanPhase {
             PlanPhase::FaultIn => "fault_in",
             PlanPhase::ScanMerge => "scan_merge",
             PlanPhase::Demux => "demux",
+            PlanPhase::FaultRecovery => "fault_recovery",
         }
     }
 }

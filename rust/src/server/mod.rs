@@ -263,6 +263,7 @@ fn info_fields(ds: &Dataset, coord: &Coordinator, fields: &mut Vec<(&'static str
             ("blocks_covered", Json::num(ec.blocks_covered as f64)),
             ("blocks_pruned", Json::num(ec.blocks_pruned as f64)),
             ("sessions_failed", Json::num(ec.sessions_failed as f64)),
+            ("degraded_answers", Json::num(ec.degraded_answers as f64)),
         ]),
     ));
     // Resident metadata cost of the per-partition membership filters
@@ -461,6 +462,7 @@ fn handle_stats(req: &Json, coord: &Coordinator, source: &ServerSource) -> Resul
         fields.push(("rows_avoided", Json::num(ex.rows_avoided as f64)));
         fields.push(("blocks_covered", Json::num(ex.blocks_covered as f64)));
         fields.push(("blocks_pruned", Json::num(ex.blocks_pruned as f64)));
+        fields.push(("degraded", Json::num(ex.degraded as f64)));
     }
     if let Some(e) = epoch {
         fields.push(("epoch", Json::num(e as f64)));
@@ -524,6 +526,7 @@ fn handle_metrics(req: &Json, coord: &Coordinator, source: &ServerSource) -> Res
         ("blocks_covered", ec.blocks_covered as f64),
         ("blocks_pruned", ec.blocks_pruned as f64),
         ("sessions_failed", ec.sessions_failed as f64),
+        ("degraded_answers", ec.degraded_answers as f64),
     ];
     let mut live_fields: Vec<(&'static str, f64)> = Vec::new();
     let mut store_fields: Vec<(&'static str, f64)> = Vec::new();
@@ -535,6 +538,9 @@ fn handle_metrics(req: &Json, coord: &Coordinator, source: &ServerSource) -> Res
                 store_fields.push(("evictions", c.evictions as f64));
                 store_fields.push(("segment_bytes_read", c.segment_bytes_read as f64));
                 store_fields.push(("segment_bytes_written", c.segment_bytes_written as f64));
+                store_fields.push(("io_retries", c.io_retries as f64));
+                store_fields.push(("io_retry_successes", c.io_retry_successes as f64));
+                store_fields.push(("partitions_quarantined", c.quarantined as f64));
             }
         }
         ServerSource::Live(live) => {
@@ -603,6 +609,7 @@ fn handle_metrics(req: &Json, coord: &Coordinator, source: &ServerSource) -> Res
             ("phase_fault_in", m.phase(PlanPhase::FaultIn).to_json()),
             ("phase_scan_merge", m.phase(PlanPhase::ScanMerge).to_json()),
             ("phase_demux", m.phase(PlanPhase::Demux).to_json()),
+            ("phase_fault_recovery", m.phase(PlanPhase::FaultRecovery).to_json()),
         ]),
     ));
     fields.push(("slow_queries", m.slow_log().to_json()));
@@ -1211,6 +1218,7 @@ mod tests {
                 "blocks_covered",
                 "blocks_pruned",
                 "bytes_materialized",
+                "degraded_answers",
                 "partitions_agg_answered",
                 "partitions_scanned",
                 "partitions_targeted",
@@ -1286,6 +1294,7 @@ mod tests {
                 "blocks_covered",
                 "blocks_pruned",
                 "bytes_materialized",
+                "degraded_answers",
                 "partitions_agg_answered",
                 "partitions_scanned",
                 "partitions_targeted",
@@ -1318,6 +1327,7 @@ mod tests {
                 "phase_block_classify",
                 "phase_demux",
                 "phase_fault_in",
+                "phase_fault_recovery",
                 "phase_filter_pruning",
                 "phase_scan_merge",
                 "phase_sketch_classify",

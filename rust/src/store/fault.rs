@@ -1,0 +1,727 @@
+//! Failpoint layer and the [`StoreIo`] filesystem wrapper.
+//!
+//! Every filesystem touch in `store/` goes through [`StoreIo`] (enforced by
+//! the `store-io-wrapped` lint rule), so one seeded [`FaultInjector`] can
+//! deterministically inject I/O errors, torn writes, bit-flips and latency
+//! at named **sites** — and simulate a whole-process crash at the Nth
+//! mutating operation. When no injector is attached every primitive
+//! compiles down to the plain `std::fs` call plus one `Option` check:
+//! zero-cost in production.
+//!
+//! The injector is configured programmatically (tests, benches) or from the
+//! environment: `OSEBA_FAULTS="site=kind[:budget][@prob],…"` with kinds
+//! `error`, `torn`, `bitflip` and `delay<ms>`, seeded by `OSEBA_FAULT_SEED`.
+//! `site` may be `*` to match every site.
+//!
+//! Crash simulation: [`FaultInjector::arm_crash_after`]`(n)` makes the
+//! n-th subsequent *mutating* primitive (write, rename, remove, dir sync)
+//! fail — a data write tears, leaving a half-written file, exactly like a
+//! real power cut — and every later mutating primitive fails too. Reads
+//! keep working, so a test can inspect the "disk" the crash left behind
+//! before re-opening it with a clean [`StoreIo`].
+//!
+//! [`RetryPolicy`] (bounded exponential backoff) lives here too: it is the
+//! knob [`TieredStore`](crate::store::TieredStore) uses to retry transient
+//! fault-in I/O before quarantining a partition (DESIGN.md §16).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::{OsebaError, Result};
+use crate::util::rng::Xoshiro256;
+use crate::util::sync::MutexExt;
+
+/// Named failpoint sites — the vocabulary `OSEBA_FAULTS` rules target.
+pub mod site {
+    /// Segment commit: tmp write + rename + directory sync.
+    pub const SEGMENT_WRITE: &str = "segment.write";
+    /// Segment fault-in read.
+    pub const SEGMENT_READ: &str = "segment.read";
+    /// Manifest commit: `.prev` copy + tmp write + rename + directory sync.
+    pub const MANIFEST_WRITE: &str = "manifest.write";
+    /// Manifest load.
+    pub const MANIFEST_READ: &str = "manifest.read";
+    /// Store-directory maintenance: create, stale-file removal, the
+    /// open-time recovery scan.
+    pub const DIR_MAINTENANCE: &str = "dir.maintenance";
+}
+
+/// What an armed failpoint does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The primitive fails with an injected `io::Error` (transient class —
+    /// the retry layer may recover it).
+    Error,
+    /// A write persists only a prefix of its bytes, then errors — a torn
+    /// write. On non-data mutations (rename, sync) this degrades to
+    /// [`FaultKind::Error`].
+    Torn,
+    /// A read returns its bytes with exactly one bit flipped at a seeded
+    /// position — the CRC layer must catch it. No error is reported.
+    BitFlip,
+    /// The primitive sleeps this many milliseconds, then proceeds.
+    Delay(u64),
+}
+
+/// One armed failpoint: `kind` fires at `site` while `budget` lasts, each
+/// opportunity gated by `prob`.
+#[derive(Clone, Debug)]
+pub struct FaultRule {
+    /// Site the rule matches ([`site`] constant, or `*` for every site).
+    pub site: String,
+    /// Behavior when the rule fires.
+    pub kind: FaultKind,
+    /// Remaining firings (`usize::MAX` = unlimited).
+    pub budget: usize,
+    /// Probability in `[0, 1]` that a matching opportunity fires.
+    pub prob: f64,
+}
+
+impl FaultRule {
+    /// An unlimited, always-firing rule for `kind` at `site`.
+    pub fn new(site: &str, kind: FaultKind) -> FaultRule {
+        FaultRule { site: site.to_string(), kind, budget: usize::MAX, prob: 1.0 }
+    }
+
+    /// Cap the rule to fire at most `n` times.
+    pub fn budget(mut self, n: usize) -> FaultRule {
+        self.budget = n;
+        self
+    }
+
+    /// Gate each opportunity on probability `p`.
+    pub fn prob(mut self, p: f64) -> FaultRule {
+        self.prob = p;
+        self
+    }
+}
+
+/// Deterministic fault source shared by every [`StoreIo`] clone of a store.
+///
+/// See the [module docs](self) for the rule grammar and crash semantics.
+#[derive(Debug)]
+pub struct FaultInjector {
+    rules: Mutex<Vec<FaultRule>>,
+    rng: Mutex<Xoshiro256>,
+    /// Mutating-primitive counter (monotonic across the injector's life).
+    ops: AtomicUsize,
+    /// Absolute op index that triggers the simulated crash
+    /// (`usize::MAX` = disarmed).
+    crash_at: AtomicUsize,
+    crashed: AtomicBool,
+}
+
+impl FaultInjector {
+    /// An injector with no rules and no crash point, seeded for any
+    /// probabilistic rules added later.
+    pub fn new(seed: u64) -> FaultInjector {
+        FaultInjector {
+            rules: Mutex::new(Vec::new()),
+            rng: Mutex::new(Xoshiro256::seeded(seed)),
+            ops: AtomicUsize::new(0),
+            crash_at: AtomicUsize::new(usize::MAX),
+            crashed: AtomicBool::new(false),
+        }
+    }
+
+    /// Parse a comma-separated `site=kind[:budget][@prob]` spec (the
+    /// `OSEBA_FAULTS` grammar) into an injector seeded with `seed`.
+    pub fn from_spec(spec: &str, seed: u64) -> Result<FaultInjector> {
+        let inj = FaultInjector::new(seed);
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            inj.add_rule(parse_rule(part)?);
+        }
+        Ok(inj)
+    }
+
+    /// Arm another failpoint rule.
+    pub fn add_rule(&self, rule: FaultRule) {
+        self.rules.lock_recover().push(rule);
+    }
+
+    /// Drop every armed rule (the crash point is untouched).
+    pub fn clear_rules(&self) {
+        self.rules.lock_recover().clear();
+    }
+
+    /// Simulate a crash at the `n`-th mutating primitive from now
+    /// (0 = the very next one). The crashing write tears; everything
+    /// mutating after it fails until [`FaultInjector::disarm_crash`].
+    pub fn arm_crash_after(&self, n: usize) {
+        self.crashed.store(false, Ordering::SeqCst);
+        let now = self.ops.load(Ordering::SeqCst);
+        self.crash_at.store(now.saturating_add(n), Ordering::SeqCst);
+    }
+
+    /// Disarm the crash point and clear the crashed latch.
+    pub fn disarm_crash(&self) {
+        self.crash_at.store(usize::MAX, Ordering::SeqCst);
+        self.crashed.store(false, Ordering::SeqCst);
+    }
+
+    /// Whether the simulated crash has triggered.
+    pub fn crashed(&self) -> bool {
+        self.crashed.load(Ordering::SeqCst)
+    }
+
+    /// Mutating primitives observed so far.
+    pub fn mutations(&self) -> usize {
+        self.ops.load(Ordering::SeqCst)
+    }
+
+    /// Pop the first matching armed rule's kind, honoring budget and
+    /// probability.
+    fn fire(&self, at: &str) -> Option<FaultKind> {
+        let mut rules = self.rules.lock_recover();
+        let rule = rules
+            .iter_mut()
+            .find(|r| r.budget > 0 && (r.site == "*" || r.site == at))?;
+        if rule.prob < 1.0 && self.rng.lock_recover().next_f64() >= rule.prob {
+            return None;
+        }
+        if rule.budget != usize::MAX {
+            rule.budget -= 1;
+        }
+        Some(rule.kind)
+    }
+
+    /// Decision for a mutating primitive at `at` — counts the op, applies
+    /// the crash point, then the rules.
+    fn mutation_fault(&self, at: &str) -> WriteFault {
+        if self.crashed.load(Ordering::SeqCst) {
+            return WriteFault::Error;
+        }
+        let op = self.ops.fetch_add(1, Ordering::SeqCst);
+        if op == self.crash_at.load(Ordering::SeqCst) {
+            self.crashed.store(true, Ordering::SeqCst);
+            return WriteFault::Torn;
+        }
+        match self.fire(at) {
+            Some(FaultKind::Error) => WriteFault::Error,
+            Some(FaultKind::Torn) => WriteFault::Torn,
+            Some(FaultKind::Delay(ms)) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                WriteFault::None
+            }
+            Some(FaultKind::BitFlip) | None => WriteFault::None,
+        }
+    }
+
+    /// Decision for a read primitive at `at`. Reads are not mutations:
+    /// they neither count toward nor suffer the crash point, so a test can
+    /// inspect the post-crash "disk".
+    fn read_fault(&self, at: &str) -> ReadFault {
+        match self.fire(at) {
+            Some(FaultKind::Error) => ReadFault::Error,
+            Some(FaultKind::BitFlip) => {
+                ReadFault::Flip(self.rng.lock_recover().next_u64())
+            }
+            Some(FaultKind::Delay(ms)) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                ReadFault::None
+            }
+            Some(FaultKind::Torn) | None => ReadFault::None,
+        }
+    }
+}
+
+enum WriteFault {
+    None,
+    Error,
+    Torn,
+}
+
+enum ReadFault {
+    None,
+    Error,
+    /// Raw entropy the flip position is derived from.
+    Flip(u64),
+}
+
+/// The injected-error payload — recognizable in messages and, as an
+/// `io::Error`, classified transient by the retry layer.
+fn injected(at: &str) -> std::io::Error {
+    std::io::Error::other(format!("injected fault at {at}"))
+}
+
+/// fsync a directory so a rename within it is durable. Under Miri the
+/// directory open is a no-op (Miri has no dirfd fsync shim); the commit
+/// protocol around it is exercised natively and under the fault battery.
+fn fsync_dir(dir: &Path) -> std::io::Result<()> {
+    #[cfg(not(miri))]
+    {
+        std::fs::File::open(dir)?.sync_all()
+    }
+    #[cfg(miri)]
+    {
+        let _ = dir;
+        Ok(())
+    }
+}
+
+/// The only doorway from `store/` to the filesystem.
+///
+/// Cloning is cheap; clones share the same injector (or share "disabled").
+/// Primitives return [`OsebaError::Io`] naming the path, like the raw
+/// `std::fs` calls they replace.
+#[derive(Clone, Debug, Default)]
+pub struct StoreIo {
+    injector: Option<Arc<FaultInjector>>,
+}
+
+impl StoreIo {
+    /// Plain passthrough I/O — the production configuration.
+    pub fn disabled() -> StoreIo {
+        StoreIo { injector: None }
+    }
+
+    /// I/O filtered through `injector`.
+    pub fn with(injector: Arc<FaultInjector>) -> StoreIo {
+        StoreIo { injector: Some(injector) }
+    }
+
+    /// Build from `OSEBA_FAULTS` / `OSEBA_FAULT_SEED` (disabled when
+    /// `OSEBA_FAULTS` is unset or empty). A malformed spec is a
+    /// [`OsebaError::Config`] — better a loud failure than silently
+    /// running a resilience experiment with no faults armed.
+    pub fn from_env() -> Result<StoreIo> {
+        let spec = match std::env::var("OSEBA_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => s,
+            _ => return Ok(StoreIo::disabled()),
+        };
+        let seed = match std::env::var("OSEBA_FAULT_SEED") {
+            Ok(s) => s.trim().parse::<u64>().map_err(|_| {
+                OsebaError::Config(format!("OSEBA_FAULT_SEED '{s}' is not a u64"))
+            })?,
+            Err(_) => 0,
+        };
+        Ok(StoreIo::with(Arc::new(FaultInjector::from_spec(&spec, seed)?)))
+    }
+
+    /// The attached injector, if any (tests and benches reach through to
+    /// arm crash points mid-scenario).
+    pub fn injector(&self) -> Option<&Arc<FaultInjector>> {
+        self.injector.as_ref()
+    }
+
+    /// Read a whole file.
+    pub fn read(&self, at: &str, path: impl AsRef<Path>) -> Result<Vec<u8>> {
+        let path = path.as_ref();
+        let fault = match &self.injector {
+            Some(inj) => inj.read_fault(at),
+            None => ReadFault::None,
+        };
+        if let ReadFault::Error = fault {
+            return Err(OsebaError::io(path, injected(at)));
+        }
+        let mut bytes = std::fs::read(path).map_err(|e| OsebaError::io(path, e))?;
+        if let ReadFault::Flip(entropy) = fault {
+            if !bytes.is_empty() {
+                let bit = entropy as usize % (bytes.len() * 8);
+                bytes[bit / 8] ^= 1 << (bit % 8);
+            }
+        }
+        Ok(bytes)
+    }
+
+    /// Read a whole file as UTF-8.
+    pub fn read_to_string(&self, at: &str, path: impl AsRef<Path>) -> Result<String> {
+        let bytes = self.read(at, &path)?;
+        String::from_utf8(bytes).map_err(|e| {
+            OsebaError::Store(format!(
+                "file '{}' is not UTF-8: {e}",
+                path.as_ref().display()
+            ))
+        })
+    }
+
+    /// Create/truncate `path`, write `bytes`, and fsync the file. A torn
+    /// fault (or the crash point) persists only a prefix — exactly the
+    /// state a real crash mid-write leaves behind.
+    pub fn write_durable(&self, at: &str, path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(inj) = &self.injector {
+            match inj.mutation_fault(at) {
+                WriteFault::None => {}
+                WriteFault::Error => return Err(OsebaError::io(path, injected(at))),
+                WriteFault::Torn => {
+                    let _ = std::fs::write(path, &bytes[..bytes.len() / 2]);
+                    return Err(OsebaError::io(path, injected(at)));
+                }
+            }
+        }
+        let mut f = std::fs::File::create(path).map_err(|e| OsebaError::io(path, e))?;
+        f.write_all(bytes).map_err(|e| OsebaError::io(path, e))?;
+        f.sync_all().map_err(|e| OsebaError::io(path, e))?;
+        Ok(())
+    }
+
+    /// Atomically rename `from` to `to` (same directory).
+    pub fn rename(&self, at: &str, from: impl AsRef<Path>, to: impl AsRef<Path>) -> Result<()> {
+        let (from, to) = (from.as_ref(), to.as_ref());
+        if let Some(inj) = &self.injector {
+            match inj.mutation_fault(at) {
+                WriteFault::None => {}
+                // Renames are atomic: torn degrades to not-performed.
+                WriteFault::Error | WriteFault::Torn => {
+                    return Err(OsebaError::io(to, injected(at)))
+                }
+            }
+        }
+        std::fs::rename(from, to).map_err(|e| OsebaError::io(to, e))
+    }
+
+    /// fsync `dir`, making renames/creates within it durable.
+    pub fn sync_dir(&self, at: &str, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        if let Some(inj) = &self.injector {
+            match inj.mutation_fault(at) {
+                WriteFault::None => {}
+                WriteFault::Error | WriteFault::Torn => {
+                    return Err(OsebaError::io(dir, injected(at)))
+                }
+            }
+        }
+        fsync_dir(dir).map_err(|e| OsebaError::io(dir, e))
+    }
+
+    /// Remove a file.
+    pub fn remove_file(&self, at: &str, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(inj) = &self.injector {
+            match inj.mutation_fault(at) {
+                WriteFault::None => {}
+                WriteFault::Error | WriteFault::Torn => {
+                    return Err(OsebaError::io(path, injected(at)))
+                }
+            }
+        }
+        std::fs::remove_file(path).map_err(|e| OsebaError::io(path, e))
+    }
+
+    /// Create `dir` and any missing parents.
+    pub fn create_dir_all(&self, at: &str, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        if let Some(inj) = &self.injector {
+            match inj.mutation_fault(at) {
+                WriteFault::None => {}
+                WriteFault::Error | WriteFault::Torn => {
+                    return Err(OsebaError::io(dir, injected(at)))
+                }
+            }
+        }
+        std::fs::create_dir_all(dir).map_err(|e| OsebaError::io(dir, e))
+    }
+
+    /// List the plain file names in `dir` (lossy UTF-8, unsorted).
+    pub fn read_dir(&self, at: &str, dir: impl AsRef<Path>) -> Result<Vec<String>> {
+        let dir = dir.as_ref();
+        if let Some(inj) = &self.injector {
+            if let ReadFault::Error = inj.read_fault(at) {
+                return Err(OsebaError::io(dir, injected(at)));
+            }
+        }
+        let entries = std::fs::read_dir(dir).map_err(|e| OsebaError::io(dir, e))?;
+        let mut names = Vec::new();
+        for entry in entries {
+            let entry = entry.map_err(|e| OsebaError::io(dir, e))?;
+            if entry.file_type().map(|t| t.is_file()).unwrap_or(false) {
+                names.push(entry.file_name().to_string_lossy().into_owned());
+            }
+        }
+        Ok(names)
+    }
+
+    /// Whether `path` exists — pure inspection, never injected.
+    pub fn exists(&self, path: impl AsRef<Path>) -> bool {
+        path.as_ref().exists()
+    }
+
+    /// The crash-safe commit protocol for one file: durably write
+    /// `<path>.tmp`, rename it over `path`, then fsync the directory. A
+    /// crash at any point leaves either the old `path` (plus at most an
+    /// orphaned `.tmp` for the recovery scan) or the fully-committed new
+    /// one — never a torn `path`.
+    pub fn commit(&self, at: &str, path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+        let path = path.as_ref();
+        let tmp = tmp_path(path);
+        self.write_durable(at, &tmp, bytes)?;
+        self.rename(at, &tmp, path)?;
+        match path.parent() {
+            Some(dir) if !dir.as_os_str().is_empty() => self.sync_dir(at, dir),
+            _ => Ok(()),
+        }
+    }
+}
+
+/// `<path>.tmp` — the commit protocol's staging name.
+pub(crate) fn tmp_path(path: &Path) -> PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(".tmp");
+    PathBuf::from(s)
+}
+
+/// Bounded exponential backoff for transient fault-in I/O.
+///
+/// Attempt `k` (0-based) sleeps `min(base_delay << k, max_delay)` before
+/// retrying; after `max_attempts` total attempts the last error stands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first (`1` = no retries).
+    pub max_attempts: usize,
+    /// Backoff before the first retry.
+    pub base_delay: Duration,
+    /// Backoff ceiling.
+    pub max_delay: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 3,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(50),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Fail-fast policy: one attempt, no backoff.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 1,
+            base_delay: Duration::ZERO,
+            max_delay: Duration::ZERO,
+        }
+    }
+
+    /// Backoff before retry number `retry` (0-based): exponential from
+    /// `base_delay`, capped at `max_delay`.
+    pub fn backoff(&self, retry: usize) -> Duration {
+        let factor = 1u32 << retry.min(31) as u32;
+        self.base_delay.saturating_mul(factor).min(self.max_delay)
+    }
+}
+
+/// Parse one `site=kind[:budget][@prob]` rule.
+fn parse_rule(part: &str) -> Result<FaultRule> {
+    let bad = |why: &str| OsebaError::Config(format!("fault rule '{part}': {why}"));
+    let (at, mut spec) = part
+        .split_once('=')
+        .ok_or_else(|| bad("expected site=kind[:budget][@prob]"))?;
+    let mut prob = 1.0;
+    if let Some((head, p)) = spec.split_once('@') {
+        prob = p
+            .parse::<f64>()
+            .ok()
+            .filter(|p| (0.0..=1.0).contains(p))
+            .ok_or_else(|| bad("probability must be a float in [0, 1]"))?;
+        spec = head;
+    }
+    let mut budget = usize::MAX;
+    if let Some((head, b)) = spec.split_once(':') {
+        budget = b.parse::<usize>().map_err(|_| bad("budget must be a usize"))?;
+        spec = head;
+    }
+    let kind = match spec {
+        "error" => FaultKind::Error,
+        "torn" => FaultKind::Torn,
+        "bitflip" => FaultKind::BitFlip,
+        d if d.starts_with("delay") => {
+            let ms = d["delay".len()..]
+                .parse::<u64>()
+                .map_err(|_| bad("delay needs milliseconds, e.g. delay10"))?;
+            FaultKind::Delay(ms)
+        }
+        _ => return Err(bad("kind must be error|torn|bitflip|delay<ms>")),
+    };
+    Ok(FaultRule { site: at.trim().to_string(), kind, budget, prob })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::temp_dir;
+
+    #[test]
+    fn disabled_io_round_trips_bytes() {
+        let dir = temp_dir("fault-off");
+        let io = StoreIo::disabled();
+        let path = dir.join("blob");
+        io.write_durable(site::SEGMENT_WRITE, &path, b"hello").unwrap();
+        assert_eq!(io.read(site::SEGMENT_READ, &path).unwrap(), b"hello");
+        assert!(io.exists(&path));
+        io.remove_file(site::DIR_MAINTENANCE, &path).unwrap();
+        assert!(!io.exists(&path));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn spec_parses_budget_and_prob() {
+        let inj =
+            FaultInjector::from_spec("segment.read=error:2, manifest.write=torn@0.5", 1).unwrap();
+        let rules = inj.rules.lock_recover();
+        assert_eq!(rules.len(), 2);
+        assert_eq!(rules[0].kind, FaultKind::Error);
+        assert_eq!(rules[0].budget, 2);
+        assert_eq!(rules[1].kind, FaultKind::Torn);
+        assert!((rules[1].prob - 0.5).abs() < 1e-12);
+        drop(rules);
+        let inj = FaultInjector::from_spec("*=delay7:1@0.25", 1).unwrap();
+        let rules = inj.rules.lock_recover();
+        assert_eq!(rules[0].site, "*");
+        assert_eq!(rules[0].kind, FaultKind::Delay(7));
+        assert_eq!(rules[0].budget, 1);
+    }
+
+    #[test]
+    fn spec_rejects_garbage() {
+        for bad in [
+            "segment.read",             // no kind
+            "segment.read=explode",     // unknown kind
+            "segment.read=error:x",     // bad budget
+            "segment.read=error@1.5",   // prob out of range
+            "segment.read=delayfast",   // bad delay
+        ] {
+            assert!(
+                matches!(FaultInjector::from_spec(bad, 0), Err(OsebaError::Config(_))),
+                "spec '{bad}' should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn error_rule_budget_exhausts() {
+        let dir = temp_dir("fault-budget");
+        let path = dir.join("blob");
+        std::fs::write(&path, b"data").unwrap();
+        let inj = Arc::new(FaultInjector::new(0));
+        inj.add_rule(FaultRule::new(site::SEGMENT_READ, FaultKind::Error).budget(2));
+        let io = StoreIo::with(Arc::clone(&inj));
+        assert!(io.read(site::SEGMENT_READ, &path).is_err());
+        assert!(io.read(site::SEGMENT_READ, &path).is_err());
+        assert_eq!(io.read(site::SEGMENT_READ, &path).unwrap(), b"data");
+        // Rules are site-scoped: another site never fires this rule.
+        inj.add_rule(FaultRule::new(site::SEGMENT_READ, FaultKind::Error).budget(1));
+        assert_eq!(io.read(site::MANIFEST_READ, &path).unwrap(), b"data");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bitflip_corrupts_exactly_one_bit() {
+        let dir = temp_dir("fault-flip");
+        let path = dir.join("blob");
+        let bytes: Vec<u8> = (0..64u8).collect();
+        std::fs::write(&path, &bytes).unwrap();
+        let inj = Arc::new(FaultInjector::new(42));
+        inj.add_rule(FaultRule::new(site::SEGMENT_READ, FaultKind::BitFlip).budget(1));
+        let io = StoreIo::with(inj);
+        let got = io.read(site::SEGMENT_READ, &path).unwrap();
+        let diff: u32 = got
+            .iter()
+            .zip(&bytes)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert_eq!(diff, 1, "exactly one bit must differ");
+        // Budget spent: the next read is clean.
+        assert_eq!(io.read(site::SEGMENT_READ, &path).unwrap(), bytes);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn probability_is_seed_deterministic() {
+        let decide = |seed: u64| -> Vec<bool> {
+            let inj = FaultInjector::new(seed);
+            inj.add_rule(FaultRule::new("*", FaultKind::Error).prob(0.5));
+            (0..32).map(|_| inj.fire("x").is_some()).collect()
+        };
+        assert_eq!(decide(7), decide(7), "same seed, same firings");
+        assert_ne!(decide(7), decide(8), "different seed, different firings");
+        let fired = decide(7).iter().filter(|&&f| f).count();
+        assert!((4..=28).contains(&fired), "p=0.5 fired {fired}/32");
+    }
+
+    #[test]
+    fn crash_point_tears_then_halts_mutations() {
+        let dir = temp_dir("fault-crash");
+        let inj = Arc::new(FaultInjector::new(0));
+        let io = StoreIo::with(Arc::clone(&inj));
+        let a = dir.join("a");
+        let b = dir.join("b");
+        inj.arm_crash_after(1);
+        io.write_durable(site::SEGMENT_WRITE, &a, b"aaaaaaaa").unwrap();
+        // Second mutation is the crash: the write tears.
+        assert!(io.write_durable(site::SEGMENT_WRITE, &b, b"bbbbbbbb").is_err());
+        assert!(inj.crashed());
+        assert_eq!(std::fs::read(&b).unwrap(), b"bbbb", "torn prefix persisted");
+        // Every later mutation fails; reads still work.
+        assert!(io.write_durable(site::SEGMENT_WRITE, &a, b"x").is_err());
+        assert!(io.rename(site::SEGMENT_WRITE, &a, &b).is_err());
+        assert_eq!(io.read(site::SEGMENT_READ, &a).unwrap(), b"aaaaaaaa");
+        inj.disarm_crash();
+        io.write_durable(site::SEGMENT_WRITE, &a, b"again").unwrap();
+        assert!(!inj.crashed());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn commit_never_tears_the_final_path() {
+        let dir = temp_dir("fault-commit");
+        let path = dir.join("manifest.json");
+        let io = StoreIo::disabled();
+        io.commit(site::MANIFEST_WRITE, &path, b"v1").unwrap();
+        assert_eq!(io.read(site::MANIFEST_READ, &path).unwrap(), b"v1");
+        assert!(!io.exists(tmp_path(&path)), "commit cleans its tmp");
+
+        let inj = Arc::new(FaultInjector::new(0));
+        inj.add_rule(FaultRule::new(site::MANIFEST_WRITE, FaultKind::Torn).budget(1));
+        let faulty = StoreIo::with(inj);
+        assert!(faulty.commit(site::MANIFEST_WRITE, &path, b"v2-longer").is_err());
+        // The torn write hit the tmp file; the committed path is intact.
+        assert_eq!(io.read(site::MANIFEST_READ, &path).unwrap(), b"v1");
+        assert!(io.exists(tmp_path(&path)), "torn tmp left for the recovery scan");
+        // With the budget spent the same commit goes through.
+        faulty.commit(site::MANIFEST_WRITE, &path, b"v2-longer").unwrap();
+        assert_eq!(io.read(site::MANIFEST_READ, &path).unwrap(), b"v2-longer");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn read_dir_lists_plain_files() {
+        let dir = temp_dir("fault-ls");
+        let io = StoreIo::disabled();
+        io.write_durable(site::SEGMENT_WRITE, dir.join("x.oseg"), b"x").unwrap();
+        io.write_durable(site::SEGMENT_WRITE, dir.join("y.tmp"), b"y").unwrap();
+        io.create_dir_all(site::DIR_MAINTENANCE, dir.join("sub")).unwrap();
+        let mut names = io.read_dir(site::DIR_MAINTENANCE, &dir).unwrap();
+        names.sort();
+        assert_eq!(names, ["x.oseg", "y.tmp"], "directories are not files");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn retry_backoff_is_exponential_and_capped() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.max_attempts, 3);
+        assert_eq!(p.backoff(0), Duration::from_millis(1));
+        assert_eq!(p.backoff(1), Duration::from_millis(2));
+        assert_eq!(p.backoff(5), Duration::from_millis(32));
+        assert_eq!(p.backoff(6), Duration::from_millis(50), "capped");
+        assert_eq!(p.backoff(500), Duration::from_millis(50), "shift saturates");
+        let none = RetryPolicy::none();
+        assert_eq!(none.max_attempts, 1);
+        assert_eq!(none.backoff(0), Duration::ZERO);
+    }
+
+    #[test]
+    fn from_env_requires_well_formed_spec() {
+        // No env manipulation here (tests run in parallel): exercise the
+        // parser the env path delegates to.
+        assert!(FaultInjector::from_spec("", 0).unwrap().rules.lock_recover().is_empty());
+        assert!(FaultInjector::from_spec("segment.read=error", 0).is_ok());
+        assert!(FaultInjector::from_spec("segment.read=?", 0).is_err());
+    }
+}

@@ -20,11 +20,16 @@ use crate::index::{
 };
 use crate::storage::Schema;
 use crate::store::crc32::crc32;
+use crate::store::fault::{site, StoreIo};
 use crate::util::json::Json;
 use crate::util::stats::{Moments, TrendPartial};
 
 /// Manifest file name inside a store directory.
 pub const MANIFEST_FILE: &str = "manifest.json";
+/// Durable copy of the previous manifest, written by `save` before each
+/// commit — the rollback snapshot open-time recovery restores when
+/// `manifest.json` itself is torn or corrupt.
+pub const PREV_MANIFEST_FILE: &str = "manifest.json.prev";
 /// `format` field value identifying a store manifest.
 pub const FORMAT: &str = "oseba-store";
 /// Current manifest version. Version 2 added per-segment `zones` (the
@@ -698,22 +703,46 @@ impl StoreManifest {
         Ok(StoreManifest { schema, segments, index })
     }
 
-    /// Write to `<dir>/manifest.json` atomically (temp file + rename), so
-    /// a crash mid-save never clobbers a previously valid manifest.
+    /// Write to `<dir>/manifest.json` atomically and durably.
     pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        self.save_with(dir, &StoreIo::disabled())
+    }
+
+    /// [`StoreManifest::save`] through an explicit [`StoreIo`]. The commit
+    /// protocol (DESIGN.md §16): fsync a copy of the previous manifest to
+    /// `manifest.json.prev` (the rollback snapshot torn-manifest recovery
+    /// restores), then durably write `manifest.json.tmp`, fsync it, rename
+    /// it over `manifest.json`, and fsync the directory — a rename without
+    /// those fsyncs can lose or tear the committed manifest on power loss.
+    pub fn save_with(&self, dir: impl AsRef<Path>, io: &StoreIo) -> Result<()> {
         let path = dir.as_ref().join(MANIFEST_FILE);
-        let tmp = dir.as_ref().join(format!("{MANIFEST_FILE}.tmp"));
-        std::fs::write(&tmp, self.to_json()?.to_string())
-            .map_err(|e| OsebaError::io(&tmp, e))?;
-        std::fs::rename(&tmp, &path).map_err(|e| OsebaError::io(&path, e))
+        if io.exists(&path) {
+            let prev_bytes = io.read(site::MANIFEST_WRITE, &path)?;
+            let prev = dir.as_ref().join(PREV_MANIFEST_FILE);
+            io.write_durable(site::MANIFEST_WRITE, &prev, &prev_bytes)?;
+            io.sync_dir(site::MANIFEST_WRITE, dir.as_ref())?;
+        }
+        let bytes = self.to_json()?.to_string().into_bytes();
+        io.commit(site::MANIFEST_WRITE, &path, &bytes)
     }
 
     /// Load and validate `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<StoreManifest> {
+        Self::load_with(dir, &StoreIo::disabled())
+    }
+
+    /// [`StoreManifest::load`] through an explicit [`StoreIo`].
+    pub fn load_with(dir: impl AsRef<Path>, io: &StoreIo) -> Result<StoreManifest> {
         let path = dir.as_ref().join(MANIFEST_FILE);
-        let text =
-            std::fs::read_to_string(&path).map_err(|e| OsebaError::io(&path, e))?;
-        let v = Json::parse(&text)
+        let text = io.read_to_string(site::MANIFEST_READ, &path)?;
+        Self::parse_named(&text, &path)
+    }
+
+    /// Parse + validate manifest `text`, naming `path` in errors — shared
+    /// by [`StoreManifest::load_with`] and the open-time rollback path
+    /// (which parses `manifest.json.prev` before trusting it).
+    pub(crate) fn parse_named(text: &str, path: &Path) -> Result<StoreManifest> {
+        let v = Json::parse(text)
             .map_err(|e| OsebaError::Store(format!("manifest '{}': {e}", path.display())))?;
         StoreManifest::from_json(&v)
             .map_err(|e| OsebaError::Store(format!("manifest '{}': {e}", path.display())))
@@ -724,6 +753,7 @@ impl StoreManifest {
 mod tests {
     use super::*;
     use crate::index::{ContentIndex, RangeQuery};
+    use crate::store::fault::FaultInjector;
     use crate::testing::temp_dir;
 
     /// A sketch with awkward (non-round) floats, to exercise exact JSON
@@ -814,6 +844,65 @@ mod tests {
         assert_eq!(back.segments, m.segments);
         let q = RangeQuery { lo: 150, hi: 3500 };
         assert_eq!(back.index.lookup(q), m.index.lookup(q));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn save_commits_durably_and_never_tears_the_manifest() {
+        // Regression: `save` used to rename the staging file into place
+        // without fsyncing it (or the directory), so a crash could leave
+        // a torn `manifest.json`. The commit protocol now stages + fsyncs
+        // + renames + syncs the directory, and copies the old manifest
+        // durably to `.prev` first. Crash at every mutating op of the
+        // commit: the loadable manifest on disk is always exactly the
+        // old document or the new one.
+        let dir = temp_dir("manifest-commit");
+        let m = sample(3);
+        m.save(&dir).unwrap();
+        assert!(!dir.join(PREV_MANIFEST_FILE).exists(), "first save has no previous");
+        let v1 = std::fs::read(dir.join(MANIFEST_FILE)).unwrap();
+
+        // The second save copies the committed manifest to `.prev`.
+        let m2 = sample(4);
+        m2.save(&dir).unwrap();
+        let v2 = std::fs::read(dir.join(MANIFEST_FILE)).unwrap();
+        assert_ne!(v1, v2);
+        assert_eq!(std::fs::read(dir.join(PREV_MANIFEST_FILE)).unwrap(), v1);
+
+        let m3 = sample(5);
+        let v3 = m3.to_json().unwrap().to_string().into_bytes();
+        let inj = Arc::new(FaultInjector::new(11));
+        let io = StoreIo::with(Arc::clone(&inj));
+        let mut k = 0usize;
+        loop {
+            inj.arm_crash_after(k);
+            match m3.save_with(&dir, &io) {
+                Ok(()) => break,
+                Err(e) => {
+                    assert!(
+                        matches!(e, OsebaError::Io { .. }),
+                        "crash at op {k}: {e:?}"
+                    );
+                    let now = std::fs::read(dir.join(MANIFEST_FILE)).unwrap();
+                    assert!(
+                        now == v2 || now == v3,
+                        "crash at op {k}: manifest is neither snapshot"
+                    );
+                    StoreManifest::load(&dir)
+                        .unwrap_or_else(|e| panic!("crash at op {k}: torn manifest: {e}"));
+                }
+            }
+            inj.disarm_crash();
+            k += 1;
+            assert!(k < 16, "commit battery did not converge");
+        }
+        assert!(k >= 4, "the commit must expose several crash points, saw {k}");
+        assert_eq!(std::fs::read(dir.join(MANIFEST_FILE)).unwrap(), v3);
+        // `.prev` holds whatever was committed when the successful
+        // attempt began — v2, or v3 if a late crash already renamed the
+        // new manifest into place.
+        let prev = std::fs::read(dir.join(PREV_MANIFEST_FILE)).unwrap();
+        assert!(prev == v2 || prev == v3, "`.prev` must be a committed snapshot");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -6,15 +6,21 @@
 //! * [`manifest`] — the JSON manifest snapshotting schema, segment
 //!   metadata and the super index, so `open` restores lookup in O(index)
 //!   without reading data;
+//! * [`fault`] — [`StoreIo`], the only doorway from this module to the
+//!   filesystem, plus the seeded failpoint injector behind the
+//!   crash/corruption batteries and [`RetryPolicy`] (DESIGN.md §16);
 //! * [`tiered`] — [`TieredStore`]: Hot/Cold partition residency over a
 //!   segment directory, spilling under memory pressure and faulting in
-//!   only the partitions the index targets.
+//!   only the partitions the index targets, with crash-safe commits,
+//!   bounded retry and corruption quarantine.
 
 pub mod crc32;
+pub mod fault;
 pub mod manifest;
 pub mod segment;
 pub mod tiered;
 
+pub use fault::{FaultInjector, FaultKind, FaultRule, RetryPolicy, StoreIo};
 pub use manifest::{SegmentEntry, StoreManifest, MANIFEST_FILE};
 pub use segment::{read_segment, write_segment};
-pub use tiered::{Residency, StoreCounters, TieredStore};
+pub use tiered::{RecoveryReport, Residency, StoreCounters, TieredStore};

@@ -17,7 +17,6 @@
 //! hand-rolled CRC-32 ([`crate::store::crc32`]): a flipped byte anywhere is
 //! rejected at read time with an error naming the file.
 
-use std::io::Write;
 use std::path::Path;
 use std::sync::Arc;
 
@@ -26,6 +25,7 @@ use crate::index::filter::{filters_of, MembershipFilter};
 use crate::index::types::{sketches_with_blocks, BlockSketches, ColumnSketch};
 use crate::storage::{Partition, BLOCK_ROWS};
 use crate::store::crc32::{crc32, Crc32};
+use crate::store::fault::{site, StoreIo};
 
 /// File magic: the first four bytes of every segment.
 pub const MAGIC: [u8; 4] = *b"OSEG";
@@ -87,12 +87,22 @@ pub fn encode_segment(part: &Partition) -> Vec<u8> {
 
 /// Write a partition to `path`, returning the bytes written.
 pub fn write_segment(path: impl AsRef<Path>, part: &Partition) -> Result<usize> {
+    write_segment_with(path, part, &StoreIo::disabled())
+}
+
+/// [`write_segment`] through an explicit [`StoreIo`] — the tiered store's
+/// spill/save entry point. Follows the crash-safe commit protocol (durable
+/// tmp write + rename + directory sync), so a crash mid-spill can leave at
+/// most an orphaned `.tmp` for the open-time recovery scan, never a torn
+/// `.oseg`.
+pub(crate) fn write_segment_with(
+    path: impl AsRef<Path>,
+    part: &Partition,
+    io: &StoreIo,
+) -> Result<usize> {
     let path = path.as_ref();
     let bytes = encode_segment(part);
-    let mut f =
-        std::fs::File::create(path).map_err(|e| OsebaError::io(path, e))?;
-    f.write_all(&bytes).map_err(|e| OsebaError::io(path, e))?;
-    f.flush().map_err(|e| OsebaError::io(path, e))?;
+    io.commit(site::SEGMENT_WRITE, path, &bytes)?;
     Ok(bytes.len())
 }
 
@@ -270,20 +280,21 @@ pub(crate) fn decode_segment_with(
 
 /// Read a partition back from `path`, verifying every section CRC.
 pub fn read_segment(path: impl AsRef<Path>) -> Result<Partition> {
-    read_segment_with(path, None, None, None)
+    read_segment_with(path, &StoreIo::disabled(), None, None, None)
 }
 
-/// [`read_segment`] with optional known sketches, filters, and block
-/// sketches (see [`decode_segment_with`]) — the tiered store's fault-in
-/// entry point.
+/// [`read_segment`] through an explicit [`StoreIo`], with optional known
+/// sketches, filters, and block sketches (see [`decode_segment_with`]) —
+/// the tiered store's fault-in entry point.
 pub(crate) fn read_segment_with(
     path: impl AsRef<Path>,
+    io: &StoreIo,
     known_sketches: Option<Vec<ColumnSketch>>,
     known_filters: Option<Arc<Vec<MembershipFilter>>>,
     known_blocks: Option<Arc<BlockSketches>>,
 ) -> Result<Partition> {
     let path = path.as_ref();
-    let buf = std::fs::read(path).map_err(|e| OsebaError::io(path, e))?;
+    let buf = io.read(site::SEGMENT_READ, path)?;
     decode_segment_with(path, &buf, known_sketches, known_filters, known_blocks)
 }
 

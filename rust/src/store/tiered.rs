@@ -18,8 +18,9 @@
 //! the simple lock is the right trade for this engine.
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::engine::memory::MemoryTracker;
 use crate::error::{OsebaError, Result};
@@ -28,8 +29,11 @@ use crate::index::{
     BlockSketches, Cias, ColumnSketch, MembershipFilter, PartitionMeta, ZoneMap,
 };
 use crate::storage::{Partition, Schema, BLOCK_ROWS};
-use crate::store::manifest::{SegmentEntry, StoreManifest};
-use crate::store::segment::{read_segment_with, segment_len, write_segment};
+use crate::store::fault::{site, RetryPolicy, StoreIo};
+use crate::store::manifest::{
+    SegmentEntry, StoreManifest, MANIFEST_FILE, PREV_MANIFEST_FILE,
+};
+use crate::store::segment::{read_segment_with, segment_len, write_segment_with};
 use crate::util::sync::MutexExt;
 
 /// Where a partition currently lives.
@@ -52,6 +56,14 @@ pub struct StoreCounters {
     pub segment_bytes_read: usize,
     /// Segment bytes written by spills and saves.
     pub segment_bytes_written: usize,
+    /// Fault-in read attempts retried after a transient failure.
+    pub io_retries: usize,
+    /// Fault-ins that succeeded only after at least one retry.
+    pub io_retry_successes: usize,
+    /// Partitions quarantined after exhausting retries on corruption.
+    pub quarantined: usize,
+    /// Nanoseconds spent inside fault-recovery (retry backoff + re-reads).
+    pub recovery_nanos: u64,
 }
 
 impl StoreCounters {
@@ -62,8 +74,28 @@ impl StoreCounters {
             evictions: self.evictions - earlier.evictions,
             segment_bytes_read: self.segment_bytes_read - earlier.segment_bytes_read,
             segment_bytes_written: self.segment_bytes_written - earlier.segment_bytes_written,
+            io_retries: self.io_retries - earlier.io_retries,
+            io_retry_successes: self.io_retry_successes - earlier.io_retry_successes,
+            quarantined: self.quarantined - earlier.quarantined,
+            recovery_nanos: self.recovery_nanos - earlier.recovery_nanos,
         }
     }
+}
+
+/// What the open-time recovery scan found and fixed
+/// (see [`TieredStore::recovery_report`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Orphaned `*.tmp` files deleted (commits interrupted before their
+    /// rename).
+    pub removed_tmp: Vec<String>,
+    /// `*.oseg` files present on disk but absent from the manifest —
+    /// reported, never loaded (they are not part of the committed
+    /// snapshot; a later save will overwrite them).
+    pub unreferenced: Vec<String>,
+    /// Whether `manifest.json` was corrupt and the previous snapshot
+    /// (`manifest.json.prev`) was restored over it.
+    pub restored_previous: bool,
 }
 
 #[derive(Debug)]
@@ -94,6 +126,11 @@ struct Slot {
     file: String,
     /// Whether a current segment for this partition exists on disk.
     on_disk: bool,
+    /// Whether the segment failed CRC verification after exhausting
+    /// retries — a quarantined partition fails fast on fetch and is
+    /// served degraded (from retained sketches, or dropped with
+    /// `degraded` accounting) by the planner (DESIGN.md §16).
+    quarantined: bool,
     resident: Option<Arc<Partition>>,
     last_touch: u64,
 }
@@ -111,10 +148,21 @@ pub struct TieredStore {
     schema: Schema,
     tracker: Arc<MemoryTracker>,
     inner: Mutex<Inner>,
+    io: StoreIo,
+    retry: Mutex<RetryPolicy>,
+    /// Strict mode: `true` keeps the historic hard-error behavior on
+    /// corruption; `false` (the default) lets the planner serve around
+    /// quarantined partitions with `degraded` accounting.
+    strict: AtomicBool,
+    recovery: RecoveryReport,
     faults: AtomicUsize,
     evictions: AtomicUsize,
     bytes_read: AtomicUsize,
     bytes_written: AtomicUsize,
+    io_retries: AtomicUsize,
+    io_retry_successes: AtomicUsize,
+    quarantined: AtomicUsize,
+    recovery_nanos: AtomicU64,
 }
 
 fn segment_file(id: usize) -> String {
@@ -145,33 +193,56 @@ impl TieredStore {
         schema: Schema,
         tracker: Arc<MemoryTracker>,
     ) -> Result<TieredStore> {
+        Self::create_with(dir, schema, tracker, StoreIo::from_env()?)
+    }
+
+    /// [`TieredStore::create`] with an explicit [`StoreIo`] (tests and
+    /// benches inject faults; `create` itself wires `OSEBA_FAULTS`).
+    pub fn create_with(
+        dir: impl AsRef<Path>,
+        schema: Schema,
+        tracker: Arc<MemoryTracker>,
+        io: StoreIo,
+    ) -> Result<TieredStore> {
         let dir = dir.as_ref().to_path_buf();
-        std::fs::create_dir_all(&dir).map_err(|e| OsebaError::io(&dir, e))?;
-        let stale = dir.join(crate::store::manifest::MANIFEST_FILE);
-        if stale.exists() {
-            std::fs::remove_file(&stale).map_err(|e| OsebaError::io(&stale, e))?;
+        io.create_dir_all(site::DIR_MAINTENANCE, &dir)?;
+        // Remove the rollback copy too: a later open must not "recover"
+        // the old dataset's manifest over this store's segments.
+        for stale in [MANIFEST_FILE, PREV_MANIFEST_FILE] {
+            let path = dir.join(stale);
+            if io.exists(&path) {
+                io.remove_file(site::DIR_MAINTENANCE, &path)?;
+            }
         }
-        Ok(TieredStore {
-            dir,
-            schema,
-            tracker,
-            inner: Mutex::new(Inner::default()),
-            faults: AtomicUsize::new(0),
-            evictions: AtomicUsize::new(0),
-            bytes_read: AtomicUsize::new(0),
-            bytes_written: AtomicUsize::new(0),
-        })
+        Ok(Self::assemble(dir, schema, tracker, io, Inner::default(), RecoveryReport::default()))
     }
 
     /// Open a saved store: parse + validate the manifest and restore the
     /// super index from its snapshot. **O(index size)** — no segment is
     /// read; every partition starts Cold and is faulted in on demand.
+    ///
+    /// Opening runs the recovery scan (DESIGN.md §16): a corrupt or torn
+    /// `manifest.json` is rolled back to the durable `manifest.json.prev`
+    /// snapshot when one validates, orphaned `*.tmp` files (commits that
+    /// crashed before their rename) are deleted, and `*.oseg` files the
+    /// manifest does not reference are reported — not loaded — in the
+    /// [`RecoveryReport`].
     pub fn open(
         dir: impl AsRef<Path>,
         tracker: Arc<MemoryTracker>,
     ) -> Result<(TieredStore, Cias)> {
+        Self::open_with(dir, tracker, StoreIo::from_env()?)
+    }
+
+    /// [`TieredStore::open`] with an explicit [`StoreIo`].
+    pub fn open_with(
+        dir: impl AsRef<Path>,
+        tracker: Arc<MemoryTracker>,
+        io: StoreIo,
+    ) -> Result<(TieredStore, Cias)> {
         let dir = dir.as_ref().to_path_buf();
-        let manifest = StoreManifest::load(&dir)?;
+        let (manifest, mut recovery) = Self::load_or_rollback(&dir, &io)?;
+        Self::recovery_scan(&dir, &io, &manifest, &mut recovery)?;
         let width = manifest.schema.width();
         let slots = manifest
             .segments
@@ -185,21 +256,106 @@ impl TieredStore {
                 bytes: partition_bytes(e.meta.rows, width),
                 file: e.file.clone(),
                 on_disk: true,
+                quarantined: false,
                 resident: None,
                 last_touch: 0,
             })
             .collect();
-        let store = TieredStore {
+        let store = Self::assemble(
             dir,
-            schema: manifest.schema,
+            manifest.schema,
             tracker,
-            inner: Mutex::new(Inner { slots, clock: 0 }),
+            io,
+            Inner { slots, clock: 0 },
+            recovery,
+        );
+        Ok((store, manifest.index))
+    }
+
+    fn assemble(
+        dir: PathBuf,
+        schema: Schema,
+        tracker: Arc<MemoryTracker>,
+        io: StoreIo,
+        inner: Inner,
+        recovery: RecoveryReport,
+    ) -> TieredStore {
+        TieredStore {
+            dir,
+            schema,
+            tracker,
+            inner: Mutex::new(inner),
+            io,
+            retry: Mutex::new(RetryPolicy::default()),
+            strict: AtomicBool::new(false),
+            recovery,
             faults: AtomicUsize::new(0),
             evictions: AtomicUsize::new(0),
             bytes_read: AtomicUsize::new(0),
             bytes_written: AtomicUsize::new(0),
+            io_retries: AtomicUsize::new(0),
+            io_retry_successes: AtomicUsize::new(0),
+            quarantined: AtomicUsize::new(0),
+            recovery_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Load the manifest, rolling back to `manifest.json.prev` when the
+    /// committed one is corrupt (`OsebaError::Store`) and the previous
+    /// snapshot validates. I/O failures (`OsebaError::Io`, e.g. a missing
+    /// manifest) propagate unchanged — rollback is for torn documents,
+    /// not for directories that were never a store.
+    fn load_or_rollback(dir: &Path, io: &StoreIo) -> Result<(StoreManifest, RecoveryReport)> {
+        let mut recovery = RecoveryReport::default();
+        let manifest = match StoreManifest::load_with(dir, io) {
+            Ok(m) => m,
+            Err(corrupt @ OsebaError::Store(_)) => {
+                let prev = dir.join(PREV_MANIFEST_FILE);
+                if !io.exists(&prev) {
+                    return Err(corrupt);
+                }
+                let bytes = io.read(site::MANIFEST_READ, &prev)?;
+                let Ok(text) = String::from_utf8(bytes.clone()) else {
+                    return Err(corrupt);
+                };
+                let Ok(m) = StoreManifest::parse_named(&text, &prev) else {
+                    return Err(corrupt);
+                };
+                // Durably promote the snapshot so the next open (and any
+                // reader of the directory) sees a valid manifest again.
+                io.commit(site::MANIFEST_WRITE, dir.join(MANIFEST_FILE), &bytes)?;
+                recovery.restored_previous = true;
+                m
+            }
+            Err(e) => return Err(e),
         };
-        Ok((store, manifest.index))
+        Ok((manifest, recovery))
+    }
+
+    /// Delete orphaned `*.tmp` files and report unreferenced `*.oseg`
+    /// files (see [`RecoveryReport`]).
+    fn recovery_scan(
+        dir: &Path,
+        io: &StoreIo,
+        manifest: &StoreManifest,
+        recovery: &mut RecoveryReport,
+    ) -> Result<()> {
+        let referenced: std::collections::HashSet<&str> =
+            manifest.segments.iter().map(|e| e.file.as_str()).collect();
+        for name in io.read_dir(site::DIR_MAINTENANCE, dir)? {
+            if name.ends_with(".tmp") {
+                io.remove_file(site::DIR_MAINTENANCE, dir.join(&name))?;
+                recovery.removed_tmp.push(name);
+            } else if name.ends_with(".oseg") && !referenced.contains(name.as_str()) {
+                recovery.unreferenced.push(name);
+            }
+        }
+        recovery.removed_tmp.sort();
+        recovery.unreferenced.sort();
+        if !recovery.removed_tmp.is_empty() {
+            io.sync_dir(site::DIR_MAINTENANCE, dir)?;
+        }
+        Ok(())
     }
 
     /// Append the next partition. Ids must be contiguous and key ranges
@@ -257,6 +413,7 @@ impl TieredStore {
             bytes,
             file,
             on_disk: false,
+            quarantined: false,
             resident: None,
             last_touch: 0,
         };
@@ -271,7 +428,7 @@ impl TieredStore {
                 // remaining budget. Spill it directly — ingestion proceeds
                 // instead of erroring.
                 let path = self.dir.join(&slot.file);
-                let written = write_segment(&path, &part)?;
+                let written = write_segment_with(&path, &part, &self.io)?;
                 self.bytes_written.fetch_add(written, Ordering::Relaxed);
                 self.evictions.fetch_add(1, Ordering::Relaxed);
                 slot.on_disk = true;
@@ -285,6 +442,12 @@ impl TieredStore {
     /// Fetch partition `id`, faulting it in from its segment if Cold.
     /// The returned handle pins the data for the caller regardless of
     /// later evictions (evicting only drops the store's reference).
+    ///
+    /// Transient read failures are retried per the store's
+    /// [`RetryPolicy`]; a segment still failing CRC verification after
+    /// the retries **quarantines** the partition — this fetch and every
+    /// later one fail fast with a typed [`OsebaError::Store`], and the
+    /// planner serves around it (DESIGN.md §16).
     pub fn fetch(&self, id: usize) -> Result<Arc<Partition>> {
         let mut inner = self.inner.lock_recover();
         inner.clock += 1;
@@ -294,6 +457,12 @@ impl TieredStore {
             let slot = inner.slots.get_mut(id).ok_or_else(|| {
                 OsebaError::Store(format!("unknown partition {id} (store has {nslots})"))
             })?;
+            if slot.quarantined {
+                return Err(OsebaError::Store(format!(
+                    "partition {id} is quarantined (segment '{}' failed verification)",
+                    slot.file
+                )));
+            }
             if let Some(p) = &slot.resident {
                 slot.last_touch = now;
                 return Ok(Arc::clone(p));
@@ -305,12 +474,7 @@ impl TieredStore {
         // partition (skipping the recompute pass); a pre-v3-manifest slot
         // without sketches falls back to recomputing them from the data.
         let path = self.dir.join(&inner.slots[id].file);
-        let part = read_segment_with(
-            &path,
-            inner.slots[id].sketches.clone(),
-            inner.slots[id].filters.clone(),
-            inner.slots[id].block_sketches.clone(),
-        )?;
+        let part = self.read_with_retry(&mut inner, id, &path)?;
         let expect = inner.slots[id].meta;
         if part.id != id
             || part.rows != expect.rows
@@ -340,6 +504,64 @@ impl TieredStore {
             Ordering::Relaxed,
         );
         Ok(arc)
+    }
+
+    /// Read slot `id`'s segment with bounded-backoff retries. After the
+    /// policy is exhausted a corruption failure ([`OsebaError::Store`] —
+    /// CRC mismatch, truncation, bad magic) quarantines the partition;
+    /// plain I/O failures propagate unquarantined (the segment bytes may
+    /// be fine — the path to them isn't).
+    fn read_with_retry(
+        &self,
+        inner: &mut Inner,
+        id: usize,
+        path: &Path,
+    ) -> Result<Partition> {
+        let policy = *self.retry.lock_recover();
+        let started = Instant::now();
+        let mut attempt = 0usize;
+        loop {
+            match read_segment_with(
+                path,
+                &self.io,
+                inner.slots[id].sketches.clone(),
+                inner.slots[id].filters.clone(),
+                inner.slots[id].block_sketches.clone(),
+            ) {
+                Ok(part) => {
+                    if attempt > 0 {
+                        self.io_retry_successes.fetch_add(1, Ordering::Relaxed);
+                        self.note_recovery(started);
+                    }
+                    return Ok(part);
+                }
+                Err(e) => {
+                    attempt += 1;
+                    if attempt >= policy.max_attempts.max(1) {
+                        if attempt > 1 {
+                            self.note_recovery(started);
+                        }
+                        return match e {
+                            OsebaError::Store(msg) => {
+                                inner.slots[id].quarantined = true;
+                                self.quarantined.fetch_add(1, Ordering::Relaxed);
+                                Err(OsebaError::Store(format!(
+                                    "partition {id} quarantined after {attempt} attempt(s): {msg}"
+                                )))
+                            }
+                            other => Err(other),
+                        };
+                    }
+                    self.io_retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(policy.backoff(attempt - 1));
+                }
+            }
+        }
+    }
+
+    fn note_recovery(&self, started: Instant) {
+        let nanos = u64::try_from(started.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        self.recovery_nanos.fetch_add(nanos, Ordering::Relaxed);
     }
 
     /// Charge `bytes` to the tracker, spilling LRU hot partitions (never
@@ -404,7 +626,7 @@ impl TieredStore {
                 )))
             }
         };
-        let written = write_segment(&path, &part)?;
+        let written = write_segment_with(&path, &part, &self.io)?;
         self.bytes_written.fetch_add(written, Ordering::Relaxed);
         inner.slots[vi].on_disk = true;
         Ok(())
@@ -440,6 +662,12 @@ impl TieredStore {
     /// write the manifest (schema + segment metadata + super-index
     /// snapshot). Hot partitions stay hot — `save` is a checkpoint, not an
     /// eviction.
+    ///
+    /// The commit order is segments-then-manifest, each durably committed
+    /// (fsync'd tmp + rename + directory sync): a crash at any point
+    /// leaves either the last committed snapshot or the new one — never a
+    /// manifest referencing a segment that isn't fully on disk
+    /// (DESIGN.md §16).
     pub fn save(&self) -> Result<()> {
         let mut inner = self.inner.lock_recover();
         if inner.slots.is_empty() {
@@ -463,7 +691,8 @@ impl TieredStore {
                 blocks: s.block_sketches.clone(),
             })
             .collect();
-        StoreManifest::for_segments(self.schema.clone(), segments)?.save(&self.dir)
+        StoreManifest::for_segments(self.schema.clone(), segments)?
+            .save_with(&self.dir, &self.io)
     }
 
     /// Drop every resident partition and credit the tracker — the
@@ -614,7 +843,66 @@ impl TieredStore {
             evictions: self.evictions.load(Ordering::Relaxed),
             segment_bytes_read: self.bytes_read.load(Ordering::Relaxed),
             segment_bytes_written: self.bytes_written.load(Ordering::Relaxed),
+            io_retries: self.io_retries.load(Ordering::Relaxed),
+            io_retry_successes: self.io_retry_successes.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+            recovery_nanos: self.recovery_nanos.load(Ordering::Relaxed),
         }
+    }
+
+    /// What the open-time recovery scan found (empty for created stores).
+    pub fn recovery_report(&self) -> &RecoveryReport {
+        &self.recovery
+    }
+
+    /// The retry policy applied to fault-in reads.
+    pub fn retry_policy(&self) -> RetryPolicy {
+        *self.retry.lock_recover()
+    }
+
+    /// Replace the fault-in retry policy.
+    pub fn set_retry_policy(&self, policy: RetryPolicy) {
+        *self.retry.lock_recover() = policy;
+    }
+
+    /// Whether strict mode is on (hard errors instead of degraded
+    /// serving; off by default).
+    pub fn strict(&self) -> bool {
+        self.strict.load(Ordering::Relaxed)
+    }
+
+    /// Toggle strict mode: `true` restores the historic behavior where a
+    /// quarantined partition fails the query instead of being served
+    /// around with `degraded` accounting.
+    pub fn set_strict(&self, strict: bool) {
+        self.strict.store(strict, Ordering::Relaxed);
+    }
+
+    /// Whether partition `id` is quarantined (`false` for unknown ids).
+    pub fn is_quarantined(&self, id: usize) -> bool {
+        self.inner
+            .lock_recover()
+            .slots
+            .get(id)
+            .map(|s| s.quarantined)
+            .unwrap_or(false)
+    }
+
+    /// Ids of every quarantined partition, ascending.
+    pub fn quarantined_ids(&self) -> Vec<usize> {
+        self.inner
+            .lock_recover()
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.quarantined)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// The `StoreIo` this store routes every filesystem touch through.
+    pub fn store_io(&self) -> &StoreIo {
+        &self.io
     }
 }
 
@@ -622,7 +910,9 @@ impl TieredStore {
 mod tests {
     use super::*;
     use crate::storage::{partition_batch_uniform, BatchBuilder};
+    use crate::store::fault::{FaultInjector, FaultKind, FaultRule};
     use crate::testing::temp_dir;
+    use std::time::Duration;
 
     fn parts(rows: usize, per: usize) -> Vec<Arc<Partition>> {
         let mut b = BatchBuilder::new(Schema::stock());
@@ -915,6 +1205,360 @@ mod tests {
         let rest = store.resident_bytes();
         assert_eq!(store.shrink(usize::MAX).unwrap(), rest);
         assert_eq!(store.resident_bytes(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// A retry policy with no sleeps, so fault batteries run fast.
+    fn instant_retries(attempts: usize) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: attempts,
+            base_delay: Duration::ZERO,
+            max_delay: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn kill_at_every_write_point_battery() {
+        // Commit snapshot A (2 partitions), then extend to B (3) with a
+        // simulated crash at the k-th mutating filesystem op — for every
+        // k until the commit completes crash-free. Whatever op the crash
+        // hits, a clean reopen must serve A or B in full, with every
+        // referenced segment readable — never a torn hybrid.
+        let ps = parts(12_288, 4096);
+        let mut k = 0usize;
+        loop {
+            let dir = temp_dir(&format!("ts-kill-{k}"));
+            let inj = Arc::new(FaultInjector::new(9));
+            let store = TieredStore::create_with(
+                &dir,
+                Schema::stock(),
+                MemoryTracker::unbounded(),
+                StoreIo::with(Arc::clone(&inj)),
+            )
+            .unwrap();
+            store.insert(Arc::clone(&ps[0])).unwrap();
+            store.insert(Arc::clone(&ps[1])).unwrap();
+            store.save().unwrap(); // snapshot A durably committed
+            inj.arm_crash_after(k);
+            let extended =
+                store.insert(Arc::clone(&ps[2])).and_then(|_| store.save()).is_ok();
+            if extended {
+                assert!(!inj.crashed(), "crash at op {k} cannot also commit B");
+            }
+            drop(store);
+
+            // Reopen with clean I/O — a restart after the power loss.
+            let (back, index) = TieredStore::open(&dir, MemoryTracker::unbounded())
+                .unwrap_or_else(|e| panic!("crash at op {k}: reopen failed: {e}"));
+            let n = back.num_partitions();
+            assert!(n == 2 || n == 3, "crash at op {k}: {n} partitions");
+            if extended {
+                assert_eq!(n, 3, "crash-free save must commit B");
+            }
+            assert_eq!(index.num_partitions(), n, "index matches the snapshot");
+            for id in 0..n {
+                let p = back.fetch(id).unwrap_or_else(|e| {
+                    panic!("crash at op {k}: referenced partition {id} unreadable: {e}")
+                });
+                assert_eq!(p.keys, ps[id].keys, "crash at op {k}: partition {id}");
+                assert_eq!(p.columns, ps[id].columns, "crash at op {k}: partition {id}");
+            }
+            // The scan scrubbed any orphaned tmp and only *reported*
+            // segments outside the committed snapshot.
+            let r = back.recovery_report();
+            assert!(r.removed_tmp.iter().all(|f| f.ends_with(".tmp")), "{r:?}");
+            assert!(r.unreferenced.iter().all(|f| f.ends_with(".oseg")), "{r:?}");
+            if n == 2 {
+                assert!(
+                    r.unreferenced.iter().all(|f| f == "part-00002.oseg"),
+                    "crash at op {k}: {r:?}"
+                );
+            }
+            std::fs::remove_dir_all(&dir).unwrap();
+            if extended {
+                break;
+            }
+            k += 1;
+            assert!(k < 64, "battery did not converge");
+        }
+        assert!(k >= 4, "the commit path must expose several crash points, saw {k}");
+    }
+
+    /// First index of `needle` in `hay`.
+    fn find(hay: &[u8], needle: &str) -> Option<usize> {
+        hay.windows(needle.len()).position(|w| w == needle.as_bytes())
+    }
+
+    #[test]
+    fn torn_manifest_battery_rolls_back_to_previous_snapshot() {
+        // Commit snapshot A (2 partitions) then B (3) so the durable
+        // rollback copy holds A. Tear `manifest.json` at every section
+        // boundary and a sweep of byte offsets: open must restore the A
+        // snapshot from `.prev` — typed errors only, never a panic.
+        let ps = parts(12_288, 4096);
+        let dir = temp_dir("ts-torn");
+        let store =
+            TieredStore::create(&dir, Schema::stock(), MemoryTracker::unbounded()).unwrap();
+        store.insert(Arc::clone(&ps[0])).unwrap();
+        store.insert(Arc::clone(&ps[1])).unwrap();
+        store.save().unwrap();
+        store.insert(Arc::clone(&ps[2])).unwrap();
+        store.save().unwrap(); // `.prev` now holds the first snapshot
+        drop(store);
+        let manifest_path = dir.join(MANIFEST_FILE);
+        let good = std::fs::read(&manifest_path).unwrap();
+
+        let mut cuts: Vec<usize> = (0..good.len()).step_by(97).collect();
+        for marker in
+            ["\"format\"", "\"schema\"", "\"segments\"", "\"sketch\"", "\"filter\"", "\"blocks\"", "\"index\"", "\"asl\""]
+        {
+            if let Some(pos) = find(&good, marker) {
+                cuts.push(pos);
+                cuts.push(pos + marker.len());
+            }
+        }
+        cuts.push(good.len() - 1);
+        for cut in cuts {
+            std::fs::write(&manifest_path, &good[..cut]).unwrap();
+            let (back, _index) = TieredStore::open(&dir, MemoryTracker::unbounded())
+                .unwrap_or_else(|e| panic!("cut at {cut}: rollback failed: {e}"));
+            assert!(
+                back.recovery_report().restored_previous,
+                "cut at {cut}: must report the rollback"
+            );
+            // `.prev` holds the 2-partition snapshot; the stray third
+            // segment is reported, not loaded.
+            assert_eq!(back.num_partitions(), 2, "cut at {cut}");
+            assert_eq!(
+                back.recovery_report().unreferenced,
+                ["part-00002.oseg"],
+                "cut at {cut}"
+            );
+            let p = back.fetch(1).unwrap_or_else(|e| panic!("cut at {cut}: {e}"));
+            assert_eq!(p.keys, ps[1].keys, "cut at {cut}");
+            drop(back);
+            // Rollback durably promoted `.prev` over the torn manifest:
+            // a second open sees a clean store without recovering.
+            let (again, _index) =
+                TieredStore::open(&dir, MemoryTracker::unbounded()).unwrap();
+            assert!(!again.recovery_report().restored_previous, "cut at {cut}");
+        }
+
+        // Without the rollback copy a torn manifest is a typed store
+        // error — not a panic, and not an accidental empty store.
+        std::fs::write(&manifest_path, &good[..good.len() / 2]).unwrap();
+        std::fs::remove_file(dir.join(PREV_MANIFEST_FILE)).unwrap();
+        let err = TieredStore::open(&dir, MemoryTracker::unbounded()).unwrap_err();
+        assert!(matches!(err, OsebaError::Store(_)), "got: {err:?}");
+        // A missing manifest stays an I/O error (never a store that was
+        // a directory full of segments gets "recovered" into something).
+        std::fs::remove_file(&manifest_path).unwrap();
+        let err = TieredStore::open(&dir, MemoryTracker::unbounded()).unwrap_err();
+        assert!(matches!(err, OsebaError::Io { .. }), "got: {err:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn transient_read_errors_retry_then_succeed() {
+        let dir = temp_dir("ts-retry");
+        let ps = parts(12_288, 4096);
+        let inj = Arc::new(FaultInjector::new(3));
+        let store = TieredStore::create_with(
+            &dir,
+            Schema::stock(),
+            MemoryTracker::unbounded(),
+            StoreIo::with(Arc::clone(&inj)),
+        )
+        .unwrap();
+        fill(&store, &ps);
+        store.save().unwrap();
+        store.release_resident();
+        assert_eq!(store.retry_policy(), RetryPolicy::default());
+        store.set_retry_policy(instant_retries(3));
+        // Two transient errors, then clean: attempt 3 succeeds.
+        inj.add_rule(FaultRule::new(site::SEGMENT_READ, FaultKind::Error).budget(2));
+        let before = store.counters();
+        let p = store.fetch(0).unwrap();
+        assert_eq!(p.keys, ps[0].keys);
+        let d = store.counters().since(&before);
+        assert_eq!(d.io_retries, 2);
+        assert_eq!(d.io_retry_successes, 1);
+        assert_eq!(d.quarantined, 0);
+        assert_eq!(d.faults, 1);
+        assert!(d.recovery_nanos > 0, "retries must account recovery time");
+        assert!(!store.is_quarantined(0));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corruption_after_retries_quarantines_the_partition() {
+        let dir = temp_dir("ts-quarantine");
+        let ps = parts(12_288, 4096);
+        let inj = Arc::new(FaultInjector::new(5));
+        let store = TieredStore::create_with(
+            &dir,
+            Schema::stock(),
+            MemoryTracker::unbounded(),
+            StoreIo::with(Arc::clone(&inj)),
+        )
+        .unwrap();
+        fill(&store, &ps);
+        store.save().unwrap();
+        store.release_resident();
+        store.set_retry_policy(instant_retries(2));
+        // Every read of the segment comes back with one bit flipped: CRC
+        // verification fails on both attempts → quarantine.
+        inj.add_rule(FaultRule::new(site::SEGMENT_READ, FaultKind::BitFlip));
+        let err = store.fetch(1).unwrap_err();
+        assert!(matches!(err, OsebaError::Store(_)), "got: {err:?}");
+        assert!(
+            err.to_string().contains("quarantined after 2 attempt(s)"),
+            "got: {err}"
+        );
+        assert_eq!(store.counters().quarantined, 1);
+        assert!(store.is_quarantined(1));
+        assert_eq!(store.quarantined_ids(), [1]);
+        // Later fetches fail fast — no further reads, no second count.
+        inj.clear_rules();
+        let before = store.counters();
+        let err = store.fetch(1).unwrap_err();
+        assert!(err.to_string().contains("is quarantined"), "got: {err}");
+        assert_eq!(store.counters().since(&before), StoreCounters::default());
+        // Resident metadata keeps serving; other partitions are fine.
+        assert!(store.sketch(1, 0).is_some());
+        assert!(store.zone_maps(1).is_some());
+        assert_eq!(store.fetch(0).unwrap().keys, ps[0].keys);
+        assert!(!store.is_quarantined(0));
+        // Strict mode is a store-level toggle the planner consults; the
+        // store itself errors either way.
+        assert!(!store.strict());
+        store.set_strict(true);
+        assert!(store.strict());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn plain_io_errors_propagate_without_quarantine() {
+        let dir = temp_dir("ts-ioerr");
+        let ps = parts(12_288, 4096);
+        let inj = Arc::new(FaultInjector::new(7));
+        let store = TieredStore::create_with(
+            &dir,
+            Schema::stock(),
+            MemoryTracker::unbounded(),
+            StoreIo::with(Arc::clone(&inj)),
+        )
+        .unwrap();
+        fill(&store, &ps);
+        store.save().unwrap();
+        store.release_resident();
+        store.set_retry_policy(instant_retries(2));
+        // Errors on every attempt: the segment bytes may be fine — the
+        // path to them isn't — so the partition is NOT quarantined.
+        inj.add_rule(FaultRule::new(site::SEGMENT_READ, FaultKind::Error));
+        let err = store.fetch(0).unwrap_err();
+        assert!(matches!(err, OsebaError::Io { .. }), "got: {err:?}");
+        assert!(!store.is_quarantined(0));
+        assert_eq!(store.counters().quarantined, 0);
+        // The path heals → the same fetch succeeds.
+        inj.clear_rules();
+        assert_eq!(store.fetch(0).unwrap().keys, ps[0].keys);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn open_scrubs_orphaned_tmp_and_reports_unreferenced_segments() {
+        let dir = temp_dir("ts-scrub");
+        let ps = parts(8_192, 4096);
+        let store =
+            TieredStore::create(&dir, Schema::stock(), MemoryTracker::unbounded()).unwrap();
+        fill(&store, &ps);
+        store.save().unwrap();
+        drop(store);
+        // A crashed commit's staging file, a segment no manifest
+        // references, and an unrelated file.
+        std::fs::write(dir.join("part-00000.oseg.tmp"), b"half-written").unwrap();
+        std::fs::write(dir.join("part-00099.oseg"), b"stray segment").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"out of scope").unwrap();
+
+        let (back, _index) = TieredStore::open(&dir, MemoryTracker::unbounded()).unwrap();
+        let r = back.recovery_report();
+        assert_eq!(r.removed_tmp, ["part-00000.oseg.tmp"]);
+        assert_eq!(r.unreferenced, ["part-00099.oseg"]);
+        assert!(!r.restored_previous);
+        assert!(!dir.join("part-00000.oseg.tmp").exists(), "orphan deleted");
+        assert!(dir.join("part-00099.oseg").exists(), "reported, never deleted");
+        assert!(dir.join("notes.txt").exists(), "unrelated files untouched");
+        // The committed snapshot is untouched by the scrub.
+        assert_eq!(back.num_partitions(), 2);
+        assert_eq!(back.fetch(0).unwrap().keys, ps[0].keys);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn seeded_fault_storm_recovers_with_typed_errors_only() {
+        // CI sweeps OSEBA_FAULT_SEED over fixed values; locally any run
+        // uses the default. Under a 20% everything-errors storm every
+        // failure must be typed, progress must be monotone, and the data
+        // that finally lands must be bit-identical to the input.
+        let seed = std::env::var("OSEBA_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+            .unwrap_or(0xA11CE);
+        let assert_typed = |e: &OsebaError| {
+            assert!(
+                matches!(e, OsebaError::Io { .. } | OsebaError::Store(_)),
+                "storm produced a non-store error: {e:?}"
+            );
+        };
+        let ps = parts(12_288, 4096);
+        let dir = temp_dir(&format!("ts-storm-{seed}"));
+        let inj = Arc::new(FaultInjector::new(seed));
+        inj.add_rule(FaultRule::new("*", FaultKind::Error).prob(0.2));
+        let mut creates = 0usize;
+        let store = loop {
+            match TieredStore::create_with(
+                &dir,
+                Schema::stock(),
+                MemoryTracker::unbounded(),
+                StoreIo::with(Arc::clone(&inj)),
+            ) {
+                Ok(s) => break s,
+                Err(e) => {
+                    assert_typed(&e);
+                    creates += 1;
+                    assert!(creates < 1_000, "seed {seed}: create never converged");
+                }
+            }
+        };
+        fill(&store, &ps);
+        let mut attempts = 0usize;
+        while let Err(e) = store.save() {
+            assert_typed(&e);
+            attempts += 1;
+            assert!(attempts < 1_000, "seed {seed}: save never converged");
+        }
+        store.release_resident();
+        store.set_retry_policy(instant_retries(4));
+        for (id, want) in ps.iter().enumerate() {
+            let mut tries = 0usize;
+            let got = loop {
+                match store.fetch(id) {
+                    Ok(p) => break p,
+                    Err(e) => {
+                        assert_typed(&e);
+                        tries += 1;
+                        assert!(tries < 1_000, "seed {seed}: fetch {id} never converged");
+                    }
+                }
+            };
+            assert_eq!(got.keys, want.keys, "seed {seed}: partition {id}");
+            assert_eq!(got.columns, want.columns, "seed {seed}: partition {id}");
+        }
+        assert!(
+            store.quarantined_ids().is_empty(),
+            "seed {seed}: transient error storms must not quarantine"
+        );
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,0 +1,195 @@
+//! Degraded-mode serving end to end (DESIGN.md §16): a query over a
+//! store whose segment fails verification must still answer — exact on
+//! the non-quarantined remainder, with the gap surfaced through
+//! `Explain::degraded` / `BatchReport::degraded` — while strict mode
+//! restores the hard error. The oracle is the identical query run over
+//! a fully resident copy of the surviving selection.
+
+use std::sync::Arc;
+
+use oseba::analysis::PeriodStats;
+use oseba::config::{AppConfig, ContextConfig};
+use oseba::coordinator::{Coordinator, IndexKind, Query, QueryOutput};
+use oseba::datagen::ClimateGen;
+use oseba::error::OsebaError;
+use oseba::index::RangeQuery;
+use oseba::metrics::PlanPhase;
+use oseba::runtime::NativeBackend;
+use oseba::storage::partition_batch_uniform;
+use oseba::store::{StoreManifest, TieredStore};
+use oseba::testing::temp_dir;
+
+const H: i64 = 3_600;
+
+fn coordinator() -> Coordinator {
+    let cfg = AppConfig {
+        ctx: ContextConfig { num_workers: 4, memory_budget: None },
+        cluster_workers: 3,
+        ..Default::default()
+    };
+    Coordinator::new(&cfg, Arc::new(NativeBackend)).unwrap()
+}
+
+fn assert_bit_equal(a: &PeriodStats, b: &PeriodStats, ctx: &str) {
+    assert_eq!(a.count, b.count, "{ctx}: count");
+    assert_eq!(a.max.to_bits(), b.max.to_bits(), "{ctx}: max");
+    assert_eq!(a.min.to_bits(), b.min.to_bits(), "{ctx}: min");
+    assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "{ctx}: mean");
+    assert_eq!(a.std.to_bits(), b.std.to_bits(), "{ctx}: std");
+}
+
+/// Save a generated dataset as a segment store under `dir`, then flip
+/// one byte in the middle of partition `victim`'s segment so its first
+/// scan fails CRC verification and quarantines it.
+fn save_corrupted_store(
+    dir: &std::path::Path,
+    rows: usize,
+    nparts: usize,
+    seed: u64,
+    victim: usize,
+) {
+    let batch = ClimateGen { seed, ..Default::default() }.generate(rows);
+    let store = TieredStore::create(
+        dir,
+        batch.schema.clone(),
+        oseba::engine::MemoryTracker::unbounded(),
+    )
+    .unwrap();
+    for part in partition_batch_uniform(&batch, rows.div_ceil(nparts)).unwrap() {
+        store.insert(part).unwrap();
+    }
+    store.save().unwrap();
+
+    let manifest = StoreManifest::load(dir).unwrap();
+    let path = dir.join(&manifest.segments[victim].file);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let off = bytes.len() * 3 / 5;
+    bytes[off] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+}
+
+#[test]
+fn quarantined_partition_degrades_query_and_matches_remainder_oracle() {
+    // 12 000 rows over 6 partitions of 2 000 rows: partition 2 holds rows
+    // 4 000..6 000 → keys 4 000h..5 999h. Its segment is corrupted on
+    // disk before open.
+    let rows = 12_000;
+    let dir = temp_dir("faults-degraded");
+    save_corrupted_store(&dir, rows, 6, 0xFA17, 2);
+
+    let c = coordinator();
+    let (ds, index) = c.open_store(&dir).unwrap();
+    let store = ds.store().unwrap().clone();
+
+    // [3 000h, 4 500h] needs scans of partition 1 (rows 3 000..4 000) and
+    // corrupt partition 2 (rows 4 000..4 501). The first execution hits
+    // the CRC failure mid-query, retries, quarantines, and answers from
+    // the remainder.
+    let q = Query::stats(RangeQuery { lo: 3_000 * H, hi: 4_500 * H }, 0);
+    let before = store.counters();
+    let (out, explain) = c.execute_plan(&ds, index.as_ref(), &q).unwrap();
+    let QueryOutput::Stats(got) = out else { panic!("stats output") };
+    assert_eq!(explain.degraded, 1, "one slice served degraded");
+    let d = store.counters().since(&before);
+    assert_eq!(d.quarantined, 1, "the corrupt partition was quarantined");
+    assert!(d.io_retries >= 1, "verification failure was retried first");
+    assert!(d.recovery_nanos > 0, "recovery time was accounted");
+    assert_eq!(store.quarantined_ids(), vec![2]);
+    assert!(ds.quarantined(2) && !ds.quarantined(1));
+    assert!(c.context().counters().degraded_answers >= 1);
+    assert!(
+        c.context().metrics().phase(PlanPhase::FaultRecovery).count() >= 1,
+        "fault-recovery phase histogram saw the affected query"
+    );
+
+    // Oracle: the same selection minus the quarantined partition, on a
+    // fully resident dataset — keys 3 000h..3 999h survive.
+    let cr = coordinator();
+    let rds = cr
+        .load(ClimateGen { seed: 0xFA17, ..Default::default() }.generate(rows), 6)
+        .unwrap();
+    let rindex = cr.build_index(&rds, IndexKind::Cias).unwrap();
+    let want = cr
+        .analyze_period_oseba(
+            &rds,
+            rindex.as_ref(),
+            RangeQuery { lo: 3_000 * H, hi: 3_999 * H },
+            0,
+        )
+        .unwrap();
+    assert_bit_equal(&got, &want, "degraded vs remainder oracle");
+
+    // Re-running the same query now degrades at *plan* time: the lowering
+    // drops the known-quarantined slice, execution never touches it, and
+    // the answer is unchanged.
+    let (out, explain) = c.execute_plan(&ds, index.as_ref(), &q).unwrap();
+    let QueryOutput::Stats(again) = out else { panic!("stats output") };
+    assert_eq!(explain.degraded, 1, "plan-time degraded accounting");
+    assert_bit_equal(&again, &got, "plan-time vs execution-time degraded");
+
+    // A fully-covered query is still answered *exactly*: the manifest
+    // sketches were retained through quarantine, so the quarantined
+    // partition contributes its aggregate with zero data touch.
+    let full = Query::stats(RangeQuery { lo: 0, hi: i64::MAX }, 0);
+    let (out, explain) = c.execute_plan(&ds, index.as_ref(), &full).unwrap();
+    let QueryOutput::Stats(covered) = out else { panic!("stats output") };
+    assert_eq!(explain.degraded, 0, "sketch coverage avoids degradation");
+    assert_eq!(covered.count, rows as u64);
+    let wantf = cr
+        .analyze_period_oseba(&rds, rindex.as_ref(), RangeQuery { lo: 0, hi: i64::MAX }, 0)
+        .unwrap();
+    assert_bit_equal(&covered, &wantf, "covered query over quarantined store");
+
+    // A selection entirely inside the quarantined partition has no
+    // remainder to serve — that stays an error, not a silent zero.
+    let inside = Query::stats(RangeQuery { lo: 4_100 * H, hi: 4_200 * H }, 0);
+    assert!(c.execute_plan(&ds, index.as_ref(), &inside).is_err());
+
+    // Strict mode restores the hard error for the partially-covering
+    // query; lifting it restores the degraded answer.
+    store.set_strict(true);
+    let err = c.execute_plan(&ds, index.as_ref(), &q).unwrap_err();
+    assert!(matches!(err, OsebaError::Store(_)), "got: {err:?}");
+    assert!(err.to_string().contains("quarantined"), "got: {err}");
+    store.set_strict(false);
+    let (out, _) = c.execute_plan(&ds, index.as_ref(), &q).unwrap();
+    let QueryOutput::Stats(relaxed) = out else { panic!("stats output") };
+    assert_bit_equal(&relaxed, &got, "strict off again");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn batch_report_carries_degraded_count() {
+    // Partition 3 of 5 (rows 6 000..8 000) is corrupt. A batch mixing a
+    // clean query with one that needs the corrupt partition's data must
+    // answer both — the clean one bit-identical to the resident oracle,
+    // the other degraded — and report the gap.
+    let rows = 10_000;
+    let dir = temp_dir("faults-batch");
+    save_corrupted_store(&dir, rows, 5, 0xBA7C4, 3);
+
+    let c = coordinator();
+    let (ds, index) = c.open_store(&dir).unwrap();
+    let qs = vec![
+        RangeQuery { lo: 500 * H, hi: 1_500 * H },
+        RangeQuery { lo: 5_500 * H, hi: 6_500 * H },
+    ];
+    let (got, report) =
+        c.analyze_batch_with_report(&ds, index.as_ref(), &qs, 0).unwrap();
+    assert_eq!(report.degraded, 1, "one selection degraded in the batch");
+    assert_eq!(ds.store().unwrap().quarantined_ids(), vec![3]);
+
+    // Oracle: the same batch on a fully resident dataset, with the
+    // degraded selection trimmed to its surviving keys 5 500h..5 999h
+    // (partition 2's half) — the same elementary-segment merge shape.
+    let cr = coordinator();
+    let rds = cr
+        .load(ClimateGen { seed: 0xBA7C4, ..Default::default() }.generate(rows), 5)
+        .unwrap();
+    let rindex = cr.build_index(&rds, IndexKind::Cias).unwrap();
+    let oracle_qs = vec![qs[0], RangeQuery { lo: 5_500 * H, hi: 5_999 * H }];
+    let want = cr.analyze_batch(&rds, rindex.as_ref(), &oracle_qs, 0).unwrap();
+    assert_bit_equal(&got[0], &want[0], "clean batch entry");
+    assert_bit_equal(&got[1], &want[1], "degraded batch entry");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,17 @@
+//! Seeded violation: raw filesystem calls inside `store/` that bypass
+//! the failpoint-instrumented `StoreIo` wrapper in `store/fault.rs`.
+
+use std::fs::File;
+
+pub fn read_segment(path: &std::path::Path) -> std::io::Result<Vec<u8>> {
+    std::fs::read(path)
+}
+
+pub fn open_segment(path: &std::path::Path) -> std::io::Result<File> {
+    File::open(path)
+}
+
+pub fn truncate_segment(path: &std::path::Path) -> std::io::Result<File> {
+    // lint: allow(store-io-wrapped)
+    File::create(path)
+}

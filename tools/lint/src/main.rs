@@ -20,6 +20,8 @@
 //! |                   | surfaces (or that nothing updates)                            |
 //! | `manifest-versions` | a manifest version the reader or writer does not handle     |
 //! | `bench-json`      | a bench target that never emits its `BENCH_*.json` artifact   |
+//! | `store-io-wrapped` | raw `std::fs` / `File` / `OpenOptions` in `store/` outside   |
+//! |                   | `fault.rs` (bypassing the failpoint-instrumented `StoreIo`)   |
 //!
 //! Scope: site rules (`no-unwrap`, `no-panic`, `no-lock-unwrap`) skip
 //! `#[cfg(test)]` regions and the `testing/` + `datagen/` modules; benches
@@ -135,6 +137,7 @@ enum Rule {
     CountersSurfaced,
     ManifestVersions,
     BenchJson,
+    StoreIoWrapped,
 }
 
 impl Rule {
@@ -146,6 +149,7 @@ impl Rule {
         Rule::CountersSurfaced,
         Rule::ManifestVersions,
         Rule::BenchJson,
+        Rule::StoreIoWrapped,
     ];
 
     fn name(&self) -> &'static str {
@@ -157,6 +161,7 @@ impl Rule {
             Rule::CountersSurfaced => "counters-surfaced",
             Rule::ManifestVersions => "manifest-versions",
             Rule::BenchJson => "bench-json",
+            Rule::StoreIoWrapped => "store-io-wrapped",
         }
     }
 
@@ -220,6 +225,7 @@ fn lint_tree(root: &Path) -> Result<Vec<Finding>, String> {
     let mut findings = Vec::new();
     for sf in &parsed {
         findings.extend(site_rules(sf));
+        findings.extend(rule_store_io(sf));
     }
     findings.extend(rule_error_variants(&parsed));
     findings.extend(rule_counters_surfaced(&parsed));
@@ -1097,6 +1103,67 @@ fn fn_span(code: &str, name: &str) -> Option<(usize, usize)> {
 }
 
 // ---------------------------------------------------------------------------
+// Site rule: store-io-wrapped
+// ---------------------------------------------------------------------------
+
+/// Every filesystem touch in `store/` must go through the failpoint-
+/// instrumented [`StoreIo`] wrapper in `store/fault.rs` — a raw
+/// `std::fs` call is a write point the crash battery cannot reach and a
+/// read the fault storm cannot perturb. Test regions are exempt (they
+/// corrupt files *on purpose*, outside the store's own I/O), as is
+/// `fault.rs` itself, which owns the real calls.
+fn rule_store_io(sf: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !sf.rel.starts_with("store") || sf.rel.file_name().is_some_and(|f| f == "fault.rs") {
+        return out;
+    }
+    let code = &sf.masked.code;
+    let b = code.as_bytes();
+    let line_of = line_index(code);
+    let mut flagged_lines = Vec::new();
+    for needle in ["std::fs::", "File::open", "File::create", "OpenOptions"] {
+        for (pos, _) in code.match_indices(needle) {
+            // Word boundary on the left so `SegmentFile::open` or a
+            // hypothetical `MyOpenOptions` cannot trip the rule; `::`
+            // on the left means a longer path already matched.
+            if pos > 0 && (is_ident_byte(b[pos - 1]) || b[pos - 1] == b':') {
+                continue;
+            }
+            let line = line_of(pos);
+            if sf.in_test.get(line).copied().unwrap_or(false) || flagged_lines.contains(&line) {
+                continue;
+            }
+            match allow_status(&sf.masked.comments, line, Rule::StoreIoWrapped) {
+                Allow::Granted => {}
+                Allow::None => {
+                    flagged_lines.push(line);
+                    out.push(Finding {
+                        rule: Rule::StoreIoWrapped,
+                        file: sf.rel.clone(),
+                        line: line + 1,
+                        msg: format!(
+                            "raw `{needle}` bypasses the StoreIo failpoint wrapper \
+                             (route through `store/fault.rs`, or allow with \
+                             `// lint: allow(store-io-wrapped) -- <reason>`)"
+                        ),
+                    });
+                }
+                Allow::MissingReason => {
+                    flagged_lines.push(line);
+                    out.push(Finding {
+                        rule: Rule::StoreIoWrapped,
+                        file: sf.rel.clone(),
+                        line: line + 1,
+                        msg: "allow comment must carry `-- <reason>`".into(),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
 // Tree rule: bench-json
 // ---------------------------------------------------------------------------
 
@@ -1233,6 +1300,28 @@ mod tests {
         assert_eq!(vs, ["A", "B", "CLong"]);
         let fs = struct_fields("{ pub a: AtomicUsize, b: Vec<(usize, u64)>, }");
         assert_eq!(fs, ["a", "b"]);
+    }
+
+    #[test]
+    fn store_io_rule_scopes_to_store_and_respects_boundaries() {
+        let src = "fn f() { let _ = std::fs::read(\"x\"); }\n\
+                   fn g() { SegmentFile::open(1); }\n\
+                   // lint: allow(store-io-wrapped) -- recovery scan needs dirfd\n\
+                   fn h() { let _ = std::fs::read_dir(\".\"); }\n";
+        let mk = |rel: &str| SourceFile {
+            rel: PathBuf::from(rel),
+            raw: src.into(),
+            masked: mask_source(src),
+            in_test: vec![false; 6],
+        };
+        // In store/: the raw call fires once; the qualified non-`std::fs`
+        // call and the justified allow do not.
+        let f = rule_store_io(&mk("store/tiered.rs"));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 1);
+        // fault.rs owns the real calls; other modules are out of scope.
+        assert!(rule_store_io(&mk("store/fault.rs")).is_empty());
+        assert!(rule_store_io(&mk("engine/context.rs")).is_empty());
     }
 
     #[test]
